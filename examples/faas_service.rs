@@ -1,0 +1,203 @@
+//! Fitting-as-a-service over a real socket: the "FaaS analysis facility"
+//! blueprint of the paper's §2.3 as a runnable system.
+//!
+//! One process hosts the service (registry + endpoint + PJRT workers) behind
+//! a TCP protocol using the coordinator's framed JSON codec; a client
+//! process submits fit tasks and polls for results — the same
+//! register/run/get_result flow as Listing 1, but across a process boundary.
+//!
+//! Run (single process, spawns its own client thread):
+//!     cargo run --release --example faas_service
+//! Or split:
+//!     cargo run --release --example faas_service -- serve 127.0.0.1:9123
+//!     cargo run --release --example faas_service -- client 127.0.0.1:9123
+//!
+//! Protocol (one frame per message, see coordinator::serialize):
+//!     -> {"action": "submit", "payload": {...fit task...}}   <- {"task": id}
+//!     -> {"action": "result", "task": id}                    <- {"state": .., "result"?: ..}
+//!     -> {"action": "shutdown"}                              <- {"ok": true}
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+use pyhf_faas::coordinator::serialize::{decode, encode, frame_len};
+use pyhf_faas::coordinator::{
+    fitops, Endpoint, EndpointConfig, ExecutorConfig, FaasClient, Service,
+};
+use pyhf_faas::infer::results::PointResult;
+use pyhf_faas::pallet::{self, library};
+use pyhf_faas::runtime::default_artifact_dir;
+use pyhf_faas::util::json::Json;
+
+fn read_frame(stream: &mut TcpStream) -> std::io::Result<Option<Json>> {
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 4096];
+    loop {
+        if let Some(total) = frame_len(&buf) {
+            if buf.len() >= total {
+                return Ok(decode(&buf[..total]).ok());
+            }
+        } else if buf.len() >= 8 {
+            return Ok(None); // bad magic
+        }
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            return Ok(None);
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    }
+}
+
+fn write_frame(stream: &mut TcpStream, v: &Json) -> std::io::Result<()> {
+    stream.write_all(&encode(v))
+}
+
+fn serve(addr: &str) -> Result<(), String> {
+    let svc = Service::new();
+    let ep = Endpoint::start(
+        svc.clone(),
+        EndpointConfig::new("tcp-facility")
+            .with_executor(ExecutorConfig {
+                max_blocks: 1,
+                nodes_per_block: 1,
+                workers_per_node: 2,
+                parallelism: 1.0,
+                poll: Duration::from_millis(2),
+            })
+            .with_worker_init(fitops::pjrt_worker_init(default_artifact_dir())),
+    );
+    let client = FaasClient::new(svc.clone());
+    let fit_fn = client.register_function("fit_patch", fitops::fit_patch_handler());
+
+    let listener = TcpListener::bind(addr).map_err(|e| e.to_string())?;
+    println!("[service] fitting facility listening on {addr}");
+
+    let mut shutdown = false;
+    while !shutdown {
+        let (mut stream, peer) = listener.accept().map_err(|e| e.to_string())?;
+        println!("[service] connection from {peer}");
+        loop {
+            let msg = match read_frame(&mut stream) {
+                Ok(Some(m)) => m,
+                _ => break,
+            };
+            let action = msg.get("action").and_then(|a| a.as_str()).unwrap_or("");
+            let reply = match action {
+                "submit" => match msg.get("payload") {
+                    Some(p) => match client.run(p.clone(), ep.id, fit_fn) {
+                        Ok(id) => Json::obj(vec![("task", Json::num(id as f64))]),
+                        Err(e) => Json::obj(vec![("error", Json::str(e))]),
+                    },
+                    None => Json::obj(vec![("error", Json::str("missing payload"))]),
+                },
+                "result" => {
+                    let id = msg.get("task").and_then(|t| t.as_f64()).unwrap_or(-1.0) as u64;
+                    match client.get_result(id) {
+                        Some(Ok(v)) => Json::obj(vec![
+                            ("state", Json::str("success")),
+                            ("result", v),
+                        ]),
+                        Some(Err(e)) => Json::obj(vec![
+                            ("state", Json::str("failed")),
+                            ("error", Json::str(e)),
+                        ]),
+                        None => Json::obj(vec![(
+                            "state",
+                            Json::str(
+                                client.status(id).map(|s| s.as_str()).unwrap_or("unknown"),
+                            ),
+                        )]),
+                    }
+                }
+                "shutdown" => {
+                    shutdown = true;
+                    let _ = write_frame(&mut stream, &Json::obj(vec![("ok", Json::Bool(true))]));
+                    break;
+                }
+                other => Json::obj(vec![("error", Json::str(format!("bad action '{other}'")))]),
+            };
+            if write_frame(&mut stream, &reply).is_err() {
+                break;
+            }
+        }
+        println!("[service] connection closed");
+    }
+    ep.shutdown();
+    println!("[service] shut down");
+    Ok(())
+}
+
+fn rpc(stream: &mut TcpStream, msg: &Json) -> Result<Json, String> {
+    write_frame(stream, msg).map_err(|e| e.to_string())?;
+    read_frame(stream).map_err(|e| e.to_string())?.ok_or_else(|| "connection closed".into())
+}
+
+fn run_client(addr: &str) -> Result<(), String> {
+    let mut stream = TcpStream::connect(addr).map_err(|e| e.to_string())?;
+    println!("[client] connected to {addr}");
+
+    // submit the quickstart pallet's patches
+    let pallet = pallet::generate(&library::config_quickstart());
+    let mut tasks = Vec::new();
+    for patch in &pallet.patchset.patches {
+        let payload = fitops::patch_payload(&pallet.bkg_workspace, patch, None)?;
+        let reply = rpc(&mut stream, &Json::obj(vec![
+            ("action", Json::str("submit")),
+            ("payload", payload),
+        ]))?;
+        let id = reply.get("task").and_then(|t| t.as_f64()).ok_or("submit failed")? as u64;
+        tasks.push((patch.name.clone(), id));
+    }
+    println!("[client] submitted {} fit tasks", tasks.len());
+
+    // poll (Listing-1 style)
+    let mut done = 0;
+    let mut pending: Vec<(String, u64)> = tasks;
+    while !pending.is_empty() {
+        let mut still = Vec::new();
+        for (name, id) in pending {
+            let reply = rpc(&mut stream, &Json::obj(vec![
+                ("action", Json::str("result")),
+                ("task", Json::num(id as f64)),
+            ]))?;
+            match reply.get("state").and_then(|s| s.as_str()) {
+                Some("success") => {
+                    done += 1;
+                    let point = PointResult::from_json(reply.get("result").unwrap())
+                        .ok_or("malformed result")?;
+                    println!(
+                        "Task {name} complete, there are {done} results now (CLs = {:.4})",
+                        point.cls_obs
+                    );
+                }
+                Some("failed") => return Err(format!("task {name} failed")),
+                _ => still.push((name, id)),
+            }
+        }
+        pending = still;
+        if !pending.is_empty() {
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+    let _ = rpc(&mut stream, &Json::obj(vec![("action", Json::str("shutdown"))]));
+    println!("[client] all results in; asked service to shut down");
+    Ok(())
+}
+
+fn main() -> Result<(), String> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("serve") => serve(args.get(1).map(|s| s.as_str()).unwrap_or("127.0.0.1:9123")),
+        Some("client") => run_client(args.get(1).map(|s| s.as_str()).unwrap_or("127.0.0.1:9123")),
+        _ => {
+            // demo mode: service in a thread + client in main
+            let addr = "127.0.0.1:9217";
+            let server = std::thread::spawn(move || serve(addr));
+            std::thread::sleep(Duration::from_millis(300));
+            run_client(addr)?;
+            server.join().map_err(|_| "server panicked".to_string())??;
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! Quickstart: one hypothesis test, three ways.
+//!
+//! 1. direct PJRT execution of the AOT artifact (the production hot path);
+//! 2. the native-Rust baseline fitter (cross-check);
+//! 3. a fit served through the funcX-style coordinator.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use std::time::{Duration, Instant};
+
+use pyhf_faas::coordinator::{
+    fitops, Endpoint, EndpointConfig, ExecutorConfig, FaasClient, Service,
+};
+use pyhf_faas::fitter::NativeFitter;
+use pyhf_faas::histfactory::{dense, Workspace};
+use pyhf_faas::infer::results::PointResult;
+use pyhf_faas::pallet::{self, library};
+use pyhf_faas::runtime::{default_artifact_dir, Engine, Manifest};
+
+fn main() -> Result<(), String> {
+    let dir = default_artifact_dir();
+    let manifest = Manifest::load(&dir)?;
+
+    // --- build a tiny analysis: background workspace + one signal patch ----
+    let pallet = pallet::generate(&library::config_quickstart());
+    let patch = &pallet.patchset.patches[0];
+    println!(
+        "pallet '{}': {} patches; testing '{}' (m1={}, m2={})\n",
+        pallet.config.name,
+        pallet.patchset.len(),
+        patch.name,
+        patch.values[0],
+        patch.values[1]
+    );
+
+    let ws =
+        Workspace::from_json(&patch.apply_to(&pallet.bkg_workspace).map_err(|e| e.to_string())?)
+            .map_err(|e| e.to_string())?;
+    let classes = manifest.classes();
+    let class = dense::pick_class(&ws, &classes).map_err(|e| e.to_string())?;
+    let model = dense::compile(&ws, class).map_err(|e| e.to_string())?;
+    println!(
+        "dense model: class '{}' (B={}, S={}, A={}, P={})\n",
+        class.name,
+        class.n_bins,
+        class.n_samples,
+        class.n_alpha,
+        class.n_params()
+    );
+
+    // --- 1. PJRT artifact (the request-path implementation) ---------------
+    let engine = Engine::cpu().map_err(|e| e.to_string())?;
+    let entry = manifest.hypotest(&class.name).ok_or("missing artifact")?;
+    let t0 = Instant::now();
+    let compiled = engine.load(entry, &dir).map_err(|e| e.to_string())?;
+    let compile_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let pjrt = compiled.hypotest(&model).map_err(|e| e.to_string())?;
+    let fit_s = t0.elapsed().as_secs_f64();
+    println!(
+        "[pjrt]   CLs_obs = {:.5}  mu_hat = {:.3}  qmu = {:.3}  (compile {:.2} s, fit {:.3} s)",
+        pjrt.cls_obs, pjrt.mu_hat, pjrt.qmu, compile_s, fit_s
+    );
+
+    // --- 2. native baseline ------------------------------------------------
+    let t0 = Instant::now();
+    let native = NativeFitter::new(&model).hypotest(1.0);
+    println!(
+        "[native] CLs_obs = {:.5}  mu_hat = {:.3}  qmu = {:.3}  (fit {:.3} s)",
+        native.cls_obs,
+        native.mu_hat,
+        native.qmu,
+        t0.elapsed().as_secs_f64()
+    );
+    assert!((pjrt.cls_obs - native.cls_obs).abs() < 0.02, "cross-check failed");
+
+    // --- 3. through the FaaS coordinator -----------------------------------
+    let svc = Service::new();
+    let ep = Endpoint::start(
+        svc.clone(),
+        EndpointConfig::new("quickstart-endpoint")
+            .with_executor(ExecutorConfig {
+                max_blocks: 1,
+                nodes_per_block: 1,
+                workers_per_node: 1,
+                parallelism: 1.0,
+                poll: Duration::from_millis(2),
+            })
+            .with_worker_init(fitops::pjrt_worker_init(dir)),
+    );
+    let fxc = FaasClient::new(svc.clone());
+    let fit_fn = fxc.register_function("fit_patch", fitops::fit_patch_handler());
+    let payload = fitops::patch_payload(&pallet.bkg_workspace, patch, None)?;
+    let task = fxc.run(payload, ep.id, fit_fn)?;
+    let result = fxc.wait(task, Duration::from_secs(600))?;
+    let point = PointResult::from_json(&result).ok_or("malformed result")?;
+    println!(
+        "[faas]   CLs_obs = {:.5}  mu_hat = {:.3}  ({})",
+        point.cls_obs,
+        point.mu_hat,
+        if point.excluded() { "EXCLUDED at 95% CL" } else { "allowed" }
+    );
+    println!("\nexpected CLs band (-2..+2 sigma): {:?}", point.cls_exp);
+    ep.shutdown();
+    println!("\nquickstart OK: all three paths agree.");
+    Ok(())
+}

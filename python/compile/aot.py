@@ -1,0 +1,131 @@
+"""AOT compiler: lower the hypotest / MLE graphs to HLO text artifacts.
+
+Run once at build time (``make artifacts``); the Rust coordinator loads the
+results via the PJRT C API and Python never appears on the request path.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the published
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Emitted files (per shape class ``<name>`` in ``shapes.SHAPE_CLASSES``)::
+
+    artifacts/hypotest_<name>.hlo.txt   4-fit asymptotic CLs program
+    artifacts/mle_<name>.hlo.txt        single free-fit program
+    artifacts/manifest.json             shapes/ordering contract for Rust
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+from .shapes import INPUT_ORDER, OUTPUT_ORDER, SHAPE_CLASSES, input_shapes  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange).
+
+    ``print_large_constants=True`` is load-bearing: the default printer
+    elides big literals as ``constant({...})`` and xla_extension 0.5.1's
+    parser silently materializes garbage for them (denormal soup, found the
+    hard way — see DESIGN.md §5).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(print_large_constants=True)
+    if "{...}" in text:
+        raise RuntimeError("HLO text contains elided constants; artifact would be corrupt")
+    return text
+
+
+def lower_entry(fn, cfg):
+    """jit + lower ``fn`` for shape class ``cfg`` and return HLO text."""
+    shapes = input_shapes(cfg)
+    specs = [jax.ShapeDtypeStruct(shapes[k], jnp.float64) for k in INPUT_ORDER]
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def build_all(out_dir: str, classes=None, use_pallas: bool = True,
+              mu_test: float = 1.0, verbose: bool = True) -> dict:
+    """Compile every artifact; returns the manifest dict."""
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "format": "hlo-text",
+        "dtype": "f64",
+        "mu_test": mu_test,
+        "use_pallas": use_pallas,
+        "input_order": INPUT_ORDER,
+        "output_order": OUTPUT_ORDER,
+        "entries": {},
+    }
+    for name, cfg in (classes or SHAPE_CLASSES).items():
+        cfg.validate()
+        shapes = input_shapes(cfg)
+
+        def hypo(*args, _cfg=cfg):
+            return model.hypotest_graph(*args, cfg=_cfg, mu_test=mu_test,
+                                        use_pallas=use_pallas)
+
+        def mle(*args, _cfg=cfg):
+            return model.mle_graph(*args, cfg=_cfg, use_pallas=use_pallas)
+
+        for kind, fn in (("hypotest", hypo), ("mle", mle)):
+            text = lower_entry(fn, cfg)
+            fname = f"{kind}_{name}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            if verbose:
+                print(f"  wrote {fname} ({len(text)} chars)")
+            manifest["entries"][f"{kind}_{name}"] = {
+                "file": fname,
+                "kind": kind,
+                "shape_class": cfg.to_dict(),
+                "inputs": [
+                    {"name": k, "shape": list(shapes[k]), "dtype": "f64"}
+                    for k in INPUT_ORDER
+                ],
+            }
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    if verbose:
+        print(f"  wrote manifest.json ({len(manifest['entries'])} entries)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="output directory (or a single .hlo.txt path whose "
+                         "parent directory is used)")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower the pure-jnp reference graph instead of the "
+                         "Pallas-kernel graph (ablation artifact)")
+    ap.add_argument("--classes", default="",
+                    help="comma-separated subset of shape classes")
+    ap.add_argument("--mu-test", type=float, default=1.0)
+    args = ap.parse_args()
+
+    out_dir = args.out
+    if out_dir.endswith(".txt"):
+        out_dir = os.path.dirname(out_dir) or "."
+    classes = None
+    if args.classes:
+        classes = {n: SHAPE_CLASSES[n] for n in args.classes.split(",")}
+    build_all(out_dir, classes=classes, use_pallas=not args.no_pallas,
+              mu_test=args.mu_test)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,204 @@
+"""Pallas kernel: dense HistFactory expected rates + analytic Jacobian.
+
+This is the compute hot-spot of the fit: it is evaluated once per Fisher-
+scoring iteration per fit (4 fits per hypotest), and its outputs feed the
+gradient (J @ r) and the expected-information matrix (J W J^T) assembled as
+MXU-friendly matmuls in the L2 graph.
+
+TPU schedule (expressed via BlockSpec; see DESIGN.md section 5):
+
+* the grid runs over **bin blocks** (``cfg.bin_block`` bins per step) — bins
+  are the vectorizable lane axis;
+* per-block HBM->VMEM traffic is the bin-sliced tensors (``nominal``,
+  ``histo_up/dn``, ``gamma_mask``, ``ctype``); the parameter-sized tensors
+  (``theta``, ``norm_lnup/dn``, ``free_map``, masks) are broadcast to every
+  block and stay VMEM-resident;
+* outputs are the bin-sliced ``nu[B]`` and ``jac[P, B]``.
+
+Computing the Jacobian **analytically inside the kernel** (instead of
+autodiffing the model) is the key adaptation that lets the whole optimizer
+live in one AOT-compiled XLA program with no Python on the request path.
+
+Kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so the interpret path is both the correctness oracle
+target and what is shipped in the HLO artifact (see DESIGN.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import EPS_FREE, EPS_RATE
+
+
+def _kernel(theta_ref, nominal_ref, histo_up_ref, histo_dn_ref,
+            norm_lnup_ref, norm_lndn_ref, free_map_ref, free_mask_ref,
+            alpha_mask_ref, gamma_mask_ref, ctype_ref,
+            nu_ref, jac_ref, *, n_free, n_alpha):
+    """One grid step: expected rates + Jacobian for a block of bins."""
+    theta = theta_ref[...]
+    f, a = n_free, n_alpha
+
+    phi = jnp.where(free_mask_ref[...] > 0, theta[:f], 1.0)
+    alpha = theta[f:f + a] * alpha_mask_ref[...]
+    ctype = ctype_ref[...]
+    bb = ctype.shape[0]
+    gamma_blk = jax.lax.dynamic_slice(theta, (f + a + pl.program_id(0) * bb,), (bb,))
+    gamma = jnp.where(ctype > 0, gamma_blk, 1.0)
+
+    pos = alpha >= 0.0
+
+    # --- bin-block tensors ---------------------------------------------
+    nominal = nominal_ref[...]            # [S, bb]
+    dside = jnp.where(pos[None, :, None], histo_up_ref[...], histo_dn_ref[...])
+    delta = jnp.einsum("a,sab->sb", alpha, dside)
+    raw = nominal + delta
+    base = jnp.maximum(raw, EPS_RATE)
+    unclipped = (raw > EPS_RATE).astype(base.dtype)
+
+    # --- parameter-resident (broadcast) tensors ------------------------
+    lnfac = jnp.where(pos[None, :], alpha[None, :] * norm_lnup_ref[...],
+                      -alpha[None, :] * norm_lndn_ref[...])
+    dlnfac = jnp.where(pos[None, :], norm_lnup_ref[...], -norm_lndn_ref[...])
+    phis = jnp.maximum(phi, EPS_FREE)
+    free_map = free_map_ref[...]
+    lnmult = lnfac.sum(axis=1) + free_map @ jnp.log(phis)
+    mult = jnp.exp(lnmult)                # [S]
+
+    gmask = gamma_mask_ref[...]           # [S, bb]
+    gam = 1.0 + gmask * (gamma[None, :] - 1.0)
+    nu_sb = base * mult[:, None] * gam
+    nu_ref[...] = nu_sb.sum(axis=0)
+
+    # --- Jacobian block [P, bb] ----------------------------------------
+    j_free = (jnp.einsum("sb,sf->fb", nu_sb, free_map) / phis[:, None])
+    j_free = j_free * free_mask_ref[...][:, None]
+
+    add_term = jnp.einsum("sab,sb->ab", dside, mult[:, None] * gam * unclipped)
+    norm_term = jnp.einsum("sb,sa->ab", nu_sb, dlnfac)
+    j_alpha = (add_term + norm_term) * alpha_mask_ref[...][:, None]
+
+    jac_ref[pl.dslice(0, f), :] = j_free
+    jac_ref[pl.dslice(f, a), :] = j_alpha
+
+    # gamma rows: globally diagonal over bins. Zero the full gamma row-block
+    # then scatter the in-block diagonal.
+    j_gamma_diag = (nu_sb * gmask / gam).sum(axis=0) * (ctype > 0).astype(base.dtype)
+    blk = pl.program_id(0)
+    # rows [f+a .. f+a+B) : only rows belonging to this block's bins are nonzero
+    n_bins_total = jac_ref.shape[0] - f - a
+    rows = jax.lax.broadcasted_iota(jnp.int32, (n_bins_total, bb), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (n_bins_total, bb), 1)
+    diag = jnp.where(rows == blk * bb + cols, j_gamma_diag[None, :], 0.0)
+    jac_ref[pl.dslice(f + a, n_bins_total), :] = diag
+
+
+def _kernel_nu_only(theta_ref, nominal_ref, histo_up_ref, histo_dn_ref,
+                    norm_lnup_ref, norm_lndn_ref, free_map_ref, free_mask_ref,
+                    alpha_mask_ref, gamma_mask_ref, ctype_ref,
+                    nu_ref, *, n_free, n_alpha):
+    """Forward-only variant: expected rates without the Jacobian.
+
+    Used on the NLL-evaluation path of the optimizer (accept/reject tests),
+    which needs nu but not J — skipping the Jacobian there roughly halves
+    the per-iteration kernel cost (EXPERIMENTS.md §Perf, L2 iteration 1).
+    """
+    theta = theta_ref[...]
+    f, a = n_free, n_alpha
+
+    phi = jnp.where(free_mask_ref[...] > 0, theta[:f], 1.0)
+    alpha = theta[f:f + a] * alpha_mask_ref[...]
+    ctype = ctype_ref[...]
+    bb = ctype.shape[0]
+    gamma_blk = jax.lax.dynamic_slice(theta, (f + a + pl.program_id(0) * bb,), (bb,))
+    gamma = jnp.where(ctype > 0, gamma_blk, 1.0)
+
+    pos = alpha >= 0.0
+    dside = jnp.where(pos[None, :, None], histo_up_ref[...], histo_dn_ref[...])
+    delta = jnp.einsum("a,sab->sb", alpha, dside)
+    base = jnp.maximum(nominal_ref[...] + delta, EPS_RATE)
+
+    lnfac = jnp.where(pos[None, :], alpha[None, :] * norm_lnup_ref[...],
+                      -alpha[None, :] * norm_lndn_ref[...])
+    phis = jnp.maximum(phi, EPS_FREE)
+    lnmult = lnfac.sum(axis=1) + free_map_ref[...] @ jnp.log(phis)
+    mult = jnp.exp(lnmult)
+
+    gam = 1.0 + gamma_mask_ref[...] * (gamma[None, :] - 1.0)
+    nu_ref[...] = (base * mult[:, None] * gam).sum(axis=0)
+
+
+def expected_pallas(theta, t, cfg):
+    """Pallas forward-only expected rates nu_b[B] (no Jacobian)."""
+    s, a, b, f = cfg.n_samples, cfg.n_alpha, cfg.n_bins, cfg.n_free
+    bb = cfg.bin_block
+    p = cfg.n_params
+    grid = (b // bb,)
+
+    kernel = functools.partial(_kernel_nu_only, n_free=f, n_alpha=a)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((p,), lambda i: (0,)),
+            pl.BlockSpec((s, bb), lambda i: (0, i)),
+            pl.BlockSpec((s, a, bb), lambda i: (0, 0, i)),
+            pl.BlockSpec((s, a, bb), lambda i: (0, 0, i)),
+            pl.BlockSpec((s, a), lambda i: (0, 0)),
+            pl.BlockSpec((s, a), lambda i: (0, 0)),
+            pl.BlockSpec((s, f), lambda i: (0, 0)),
+            pl.BlockSpec((f,), lambda i: (0,)),
+            pl.BlockSpec((a,), lambda i: (0,)),
+            pl.BlockSpec((s, bb), lambda i: (0, i)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), theta.dtype),
+        interpret=True,
+    )(theta, t["nominal"], t["histo_up"], t["histo_dn"], t["norm_lnup"],
+      t["norm_lndn"], t["free_map"], t["free_mask"], t["alpha_mask"],
+      t["gamma_mask"], t["ctype"])
+
+
+def expected_and_jacobian_pallas(theta, t, cfg):
+    """Pallas implementation of ``ref.expected_and_jacobian_ref``.
+
+    Returns ``(nu_b[B], jac[P, B])``.
+    """
+    s, a, b, f = cfg.n_samples, cfg.n_alpha, cfg.n_bins, cfg.n_free
+    bb = cfg.bin_block
+    p = cfg.n_params
+    grid = (b // bb,)
+
+    kernel = functools.partial(_kernel, n_free=f, n_alpha=a)
+    nu, jac = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((p,), lambda i: (0,)),            # theta (broadcast)
+            pl.BlockSpec((s, bb), lambda i: (0, i)),       # nominal
+            pl.BlockSpec((s, a, bb), lambda i: (0, 0, i)),  # histo_up
+            pl.BlockSpec((s, a, bb), lambda i: (0, 0, i)),  # histo_dn
+            pl.BlockSpec((s, a), lambda i: (0, 0)),        # norm_lnup
+            pl.BlockSpec((s, a), lambda i: (0, 0)),        # norm_lndn
+            pl.BlockSpec((s, f), lambda i: (0, 0)),        # free_map
+            pl.BlockSpec((f,), lambda i: (0,)),            # free_mask
+            pl.BlockSpec((a,), lambda i: (0,)),            # alpha_mask
+            pl.BlockSpec((s, bb), lambda i: (0, i)),       # gamma_mask
+            pl.BlockSpec((bb,), lambda i: (i,)),           # ctype
+        ],
+        out_specs=[
+            pl.BlockSpec((bb,), lambda i: (i,)),           # nu
+            pl.BlockSpec((p, bb), lambda i: (0, i)),       # jac
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), theta.dtype),
+            jax.ShapeDtypeStruct((p, b), theta.dtype),
+        ],
+        interpret=True,
+    )(theta, t["nominal"], t["histo_up"], t["histo_dn"], t["norm_lnup"],
+      t["norm_lndn"], t["free_map"], t["free_mask"], t["alpha_mask"],
+      t["gamma_mask"], t["ctype"])
+    return nu, jac

@@ -1,0 +1,43 @@
+"""Pallas kernel: main-measurement Poisson NLL reduction.
+
+Accumulates ``sum_b mask_b * (nu_b - n_b ln nu_b)`` over bin blocks into a
+single scalar, the classic grid-accumulation pattern: block 0 initializes the
+(1, 1) output, subsequent blocks add their partial sums. Constraint terms are
+parameter-sized and stay in the L2 graph (see ``model.py``).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import EPS_RATE
+
+
+def _kernel(nu_ref, data_ref, mask_ref, out_ref):
+    nu = jnp.maximum(nu_ref[...], EPS_RATE)
+    partial = jnp.sum(mask_ref[...] * (nu - data_ref[...] * jnp.log(nu)))
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[0, 0] = 0.0
+
+    out_ref[0, 0] += partial
+
+
+def poisson_nll_pallas(nu_b, data, bin_mask, cfg):
+    """Pallas implementation of ``ref.poisson_nll_ref`` -> scalar."""
+    bb = cfg.bin_block
+    grid = (cfg.n_bins // bb,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb,), lambda i: (i,)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), nu_b.dtype),
+        interpret=True,
+    )(nu_b, data, bin_mask)
+    return out[0, 0]

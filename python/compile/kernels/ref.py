@@ -1,0 +1,113 @@
+"""Pure-jnp reference oracle for the Pallas kernels.
+
+Implements the dense HistFactory expected-rate computation, its analytic
+parameter Jacobian, and the main Poisson NLL reduction with plain ``jnp``
+operations. The Pallas kernels in ``expected.py`` / ``nll.py`` must agree with
+these to ~1e-12 (checked by ``python/tests/test_kernel.py``); the Jacobian is
+additionally cross-checked against ``jax.jacfwd`` of :func:`expected_ref`.
+
+Model (see ``shapes.py`` for the tensor layout)::
+
+    nu_sb(theta) = max(nominal_sb + sum_a delta_code0(alpha_a), eps)
+                   * exp( sum_a lnfac_code1(alpha_a)_sa + sum_f M_sf ln phi_f )
+                   * (1 + gamma_mask_sb * (gamma_b - 1))
+
+with code0 (piecewise-linear) histosys interpolation and code1 (exponential)
+normsys interpolation — pyhf's defaults.
+"""
+
+import jax.numpy as jnp
+
+#: Rate floor: protects ln(nu) and marks where the additive interpolation has
+#: been clipped (Jacobian contribution of clipped bins is zero).
+EPS_RATE = 1e-9
+#: Floor for free parameters entering logarithms / divisions.
+EPS_FREE = 1e-10
+
+
+def split_theta(theta, cfg):
+    """Split the flat parameter vector into (phi[F], alpha[A], gamma[B])."""
+    f, a = cfg.n_free, cfg.n_alpha
+    return theta[:f], theta[f:f + a], theta[f + a:]
+
+
+def effective_params(theta, t, cfg):
+    """Apply masks: pinned free -> 1, pinned alpha -> 0, unconstrained gamma -> 1."""
+    phi, alpha, gamma = split_theta(theta, cfg)
+    phi = jnp.where(t["free_mask"] > 0, phi, 1.0)
+    alpha = alpha * t["alpha_mask"]
+    gamma = jnp.where(t["ctype"] > 0, gamma, 1.0)
+    return phi, alpha, gamma
+
+
+def expected_ref(theta, t, cfg):
+    """Expected per-sample rates nu_sb -> [S, B]."""
+    phi, alpha, gamma = effective_params(theta, t, cfg)
+
+    # histosys, code0: delta_sb = sum_a alpha_a * (up if alpha_a >= 0 else dn)
+    pos = alpha >= 0.0
+    dside = jnp.where(pos[None, :, None], t["histo_up"], t["histo_dn"])
+    delta = jnp.einsum("a,sab->sb", alpha, dside)
+    base = jnp.maximum(t["nominal"] + delta, EPS_RATE)
+
+    # normsys, code1: lnfac_sa = alpha*lnk+ (alpha >= 0) else -alpha*lnk-
+    lnfac = jnp.where(pos[None, :], alpha[None, :] * t["norm_lnup"],
+                      -alpha[None, :] * t["norm_lndn"])
+    lnphi = jnp.log(jnp.maximum(phi, EPS_FREE))
+    lnmult = lnfac.sum(axis=1) + t["free_map"] @ lnphi  # [S]
+    mult = jnp.exp(lnmult)
+
+    gam = 1.0 + t["gamma_mask"] * (gamma[None, :] - 1.0)  # [S, B]
+    return base * mult[:, None] * gam
+
+
+def expected_and_jacobian_ref(theta, t, cfg):
+    """Return (nu_b[B], J[P, B]) with J_pb = d nu_b / d theta_p, analytically.
+
+    The Jacobian rows of masked / pinned parameters are zero by construction.
+    """
+    phi, alpha, gamma = effective_params(theta, t, cfg)
+    pos = alpha >= 0.0
+
+    dside = jnp.where(pos[None, :, None], t["histo_up"], t["histo_dn"])  # [S,A,B]
+    delta = jnp.einsum("a,sab->sb", alpha, dside)
+    raw = t["nominal"] + delta
+    base = jnp.maximum(raw, EPS_RATE)
+    unclipped = (raw > EPS_RATE).astype(theta.dtype)  # [S, B]
+
+    lnfac = jnp.where(pos[None, :], alpha[None, :] * t["norm_lnup"],
+                      -alpha[None, :] * t["norm_lndn"])
+    dlnfac = jnp.where(pos[None, :], t["norm_lnup"], -t["norm_lndn"])  # [S, A]
+    phis = jnp.maximum(phi, EPS_FREE)
+    lnmult = lnfac.sum(axis=1) + t["free_map"] @ jnp.log(phis)
+    mult = jnp.exp(lnmult)  # [S]
+
+    gam = 1.0 + t["gamma_mask"] * (gamma[None, :] - 1.0)  # [S, B]
+    nu_sb = base * mult[:, None] * gam
+    nu_b = nu_sb.sum(axis=0)
+
+    # d/d phi_f: sum_s nu_sb * M_sf / phi_f   (pinned rows -> 0)
+    j_free = jnp.einsum("sb,sf->fb", nu_sb, t["free_map"]) / phis[:, None]
+    j_free = j_free * t["free_mask"][:, None]
+
+    # d/d alpha_a: sum_s [ dside_sab * mult_s * gam_sb * unclipped + nu_sb * dlnfac_sa ]
+    add_term = jnp.einsum("sab,sb->ab", dside, mult[:, None] * gam * unclipped)
+    norm_term = jnp.einsum("sb,sa->ab", nu_sb, dlnfac)
+    j_alpha = (add_term + norm_term) * t["alpha_mask"][:, None]
+
+    # d/d gamma_b (diagonal over bins): sum_s nu_sb * mask_sb / gam_sb
+    j_gamma_diag = (nu_sb * t["gamma_mask"] / gam).sum(axis=0)
+    j_gamma_diag = j_gamma_diag * (t["ctype"] > 0).astype(theta.dtype)
+    j_gamma = jnp.diag(j_gamma_diag)
+
+    jac = jnp.concatenate([j_free, j_alpha, j_gamma], axis=0)  # [P, B]
+    return nu_b, jac
+
+
+def poisson_nll_ref(nu_b, data, bin_mask):
+    """Main-measurement Poisson NLL (theta-constant terms dropped)::
+
+        sum_b mask_b * (nu_b - n_b * ln nu_b)
+    """
+    nu = jnp.maximum(nu_b, EPS_RATE)
+    return jnp.sum(bin_mask * (nu - data * jnp.log(nu)))

@@ -1,0 +1,147 @@
+"""Shape-class configurations for AOT-compiled HistFactory hypotest artifacts.
+
+Every artifact is compiled for a fixed *shape class*: padded tensor dimensions
+plus optimizer budgets. The Rust coordinator pads any concrete workspace into
+the smallest class that fits (see ``rust/src/histfactory/dense.rs``, which
+mirrors this layout exactly; the contract is serialized into
+``artifacts/manifest.json`` by ``aot.py``).
+
+Parameter-vector layout (length ``n_params``)::
+
+    theta = [ free norm-factors (POI = index 0) | alphas | gammas ]
+              F entries                           A         B
+
+Dense tensor inputs, in artifact argument order (all float64):
+
+====================  ==========  ====================================
+name                  shape       meaning
+====================  ==========  ====================================
+data                  [B]         observed main-measurement counts
+nominal               [S, B]      per-sample nominal rates
+histo_up              [S, A, B]   histosys delta (up - nominal)
+histo_dn              [S, A, B]   histosys delta (nominal - down)
+norm_lnup             [S, A]      ln(kappa+) normsys factors
+norm_lndn             [S, A]      ln(kappa-) normsys factors
+free_map              [S, F]      exponent of free norm f on sample s
+free_mask             [F]         1 = parameter active, 0 = pinned at 1
+alpha_mask            [A]         1 = alpha active, 0 = pinned at 0
+gamma_mask            [S, B]      1 = gamma_b multiplies sample s bin b
+ctype                 [B]         gamma constraint: 0 none, 1 gauss, 2 poisson
+cscale                [B]         gauss: precision 1/delta^2; poisson: tau
+bin_mask              [B]         1 = real bin, 0 = padding
+====================  ==========  ====================================
+
+Constraint centers default to nominal (alpha = 0, gamma = 1); the Asimov
+branch of the hypotest graph re-centers them at the background-only fit
+internally, so they are not runtime inputs.
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """A fixed shape class for one AOT artifact."""
+
+    name: str
+    n_bins: int  # B, padded to a multiple of bin_block
+    n_samples: int  # S (signal is sample 0)
+    n_alpha: int  # A: constrained interpolation parameters
+    n_free: int  # F: free norm factors, POI first
+    max_newton: int = 48  # damped Fisher-scoring iteration budget
+    cg_iters: int = 64  # conjugate-gradient solve budget per step
+    bin_block: int = 16  # Pallas block size along the bin axis (Perf L1-2:
+    #   whole-row blocks — VMEM comfortably holds a full shape-class row,
+    #   so one grid step minimizes interpret-loop overhead on CPU and
+    #   HBM->VMEM round trips on TPU)
+    mu_max: float = 10.0  # POI upper bound (lower bound 0 => qmu-tilde)
+
+    @property
+    def n_params(self) -> int:
+        return self.n_free + self.n_alpha + self.n_bins
+
+    def validate(self) -> None:
+        assert self.n_bins % self.bin_block == 0, "bins must tile evenly"
+        assert self.n_free >= 1, "need at least the POI"
+        assert self.n_samples >= 2, "need signal + >=1 background"
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["n_params"] = self.n_params
+        return d
+
+
+#: Shape classes mirroring the three published analyses of the paper's
+#: Table 1 plus a small quickstart class. Complexity tiers are calibrated so
+#: the per-patch fit cost *ordering* matches the paper (1Lbb heavy, 2L0J
+#: light, stau medium); see DESIGN.md section 4 (substitutions).
+#:
+#: ``n_samples`` counts dense **(channel, sample) rows** — normsys /
+#: normfactor / gamma application is per channel in pyhf, so each channel's
+#: samples get their own rows (padded rows have nominal = 0 and are inert).
+SHAPE_CLASSES = {
+    # Eur. Phys. J. C 80 (2020) 691 - electroweakino 1Lbb, 125 patches
+    # (8 channels x up to 6 samples)
+    "1Lbb": ShapeConfig(
+        name="1Lbb", n_bins=80, n_samples=48, n_alpha=48, n_free=2,
+        max_newton=48, cg_iters=64, bin_block=80,
+    ),
+    # JHEP 06 (2020) 46 - squarks/gluinos same-sign leptons, 76 patches
+    # (4 channels x up to 4 samples)
+    "2L0J": ShapeConfig(
+        name="2L0J", n_bins=32, n_samples=16, n_alpha=16, n_free=2,
+        max_newton=40, cg_iters=48, bin_block=32,
+    ),
+    # Phys. Rev. D 101 (2020) 032009 - direct stau, 57 patches
+    # (5 channels x up to 4 samples)
+    "stau": ShapeConfig(
+        name="stau", n_bins=48, n_samples=20, n_alpha=28, n_free=2,
+        max_newton=44, cg_iters=56, bin_block=48,
+    ),
+    # Tiny class for the quickstart example and fast tests
+    # (2 channels x up to 3 samples)
+    "quickstart": ShapeConfig(
+        name="quickstart", n_bins=16, n_samples=6, n_alpha=6, n_free=2,
+        max_newton=32, cg_iters=24,
+    ),
+}
+
+#: Artifact input order; must match model.hypotest_graph's signature and the
+#: Rust marshaller.
+INPUT_ORDER = [
+    "data", "nominal", "histo_up", "histo_dn", "norm_lnup", "norm_lndn",
+    "free_map", "free_mask", "alpha_mask", "gamma_mask", "ctype", "cscale",
+    "bin_mask",
+]
+
+#: Artifact output order (flat tuple).
+OUTPUT_ORDER = [
+    "cls_obs",      # scalar
+    "cls_exp",      # [5] expected band, N sigma in (-2,-1,0,1,2)
+    "qmu",          # scalar observed test statistic (tilde)
+    "qmu_A",        # scalar Asimov test statistic
+    "mu_hat",       # scalar best-fit POI (bounded >= 0)
+    "nll_free",     # scalar NLL at free fit
+    "nll_fixed",    # scalar NLL at mu = mu_test
+    "diag",         # [8] fit diagnostics (accepted steps / |grad| per fit)
+]
+
+
+def input_shapes(cfg: ShapeConfig) -> dict:
+    """Map input name -> shape tuple for a shape class."""
+    b, s, a, f = cfg.n_bins, cfg.n_samples, cfg.n_alpha, cfg.n_free
+    return {
+        "data": (b,),
+        "nominal": (s, b),
+        "histo_up": (s, a, b),
+        "histo_dn": (s, a, b),
+        "norm_lnup": (s, a),
+        "norm_lndn": (s, a),
+        "free_map": (s, f),
+        "free_mask": (f,),
+        "alpha_mask": (a,),
+        "gamma_mask": (s, b),
+        "ctype": (b,),
+        "cscale": (b,),
+        "bin_mask": (b,),
+    }

@@ -1,0 +1,103 @@
+"""Synthetic dense-tensor workspace generator (test + calibration fixtures).
+
+Generates physically plausible dense HistFactory tensors for a shape class:
+falling background spectra, a signal bump (sample 0), per-sample normsys and
+histosys variations, staterror gammas. Deterministic per seed.
+
+The Rust pallet generator (``rust/src/pallet``) produces full HistFactory
+*JSON* workspaces whose dense compilation must match this layout; this module
+is the light-weight python-side equivalent used by the pytest suite.
+"""
+
+import numpy as np
+
+
+def make_tensors(cfg, seed=0, signal_scale=1.0, active_bins=None,
+                 active_alpha=None, data_mu=0.0):
+    """Build a dense tensor dict for ``cfg``.
+
+    ``data_mu`` injects signal at that strength into the observed data
+    (Asimov-style, rounded to integers to emulate counts).
+    """
+    rng = np.random.default_rng(seed)
+    s_, a_, b_, f_ = cfg.n_samples, cfg.n_alpha, cfg.n_bins, cfg.n_free
+    nb = b_ if active_bins is None else active_bins
+    na = a_ if active_alpha is None else active_alpha
+    assert nb <= b_ and na <= a_
+
+    bin_mask = np.zeros(b_)
+    bin_mask[:nb] = 1.0
+    alpha_mask = np.zeros(a_)
+    alpha_mask[:na] = 1.0
+
+    # backgrounds: falling exponentials with different slopes; signal: bump
+    nominal = np.zeros((s_, b_))
+    x = np.linspace(0.0, 1.0, nb)
+    center = rng.uniform(0.3, 0.7)
+    width = rng.uniform(0.08, 0.2)
+    nominal[0, :nb] = signal_scale * 8.0 * np.exp(-0.5 * ((x - center) / width) ** 2)
+    for s in range(1, s_):
+        norm = rng.uniform(30.0, 120.0) / s
+        slope = rng.uniform(1.0, 4.0)
+        nominal[s, :nb] = norm * np.exp(-slope * x) + rng.uniform(0.5, 2.0)
+
+    # normsys: each alpha touches a random subset of background samples
+    norm_lnup = np.zeros((s_, a_))
+    norm_lndn = np.zeros((s_, a_))
+    histo_up = np.zeros((s_, a_, b_))
+    histo_dn = np.zeros((s_, a_, b_))
+    for a in range(na):
+        if a % 2 == 0:  # normsys
+            for s in range(1, s_):
+                if rng.random() < 0.6:
+                    kap = 1.0 + rng.uniform(0.02, 0.25)
+                    norm_lnup[s, a] = np.log(kap)
+                    norm_lndn[s, a] = np.log(1.0 / kap)
+        else:  # histosys: smooth shape tilt, small vs nominal
+            for s in range(1, s_):
+                if rng.random() < 0.5:
+                    tilt = rng.uniform(-0.15, 0.15)
+                    shape = tilt * (x - 0.5) * nominal[s, :nb]
+                    histo_up[s, a, :nb] = shape
+                    histo_dn[s, a, :nb] = -shape * rng.uniform(0.7, 1.1)
+
+    # free norms: POI on signal; one floating background norm if f_ > 1
+    free_map = np.zeros((s_, f_))
+    free_mask = np.zeros(f_)
+    free_map[0, 0] = 1.0
+    free_mask[0] = 1.0
+    if f_ > 1 and s_ > 1:
+        free_map[1, 1] = 1.0
+        free_mask[1] = 1.0
+
+    # staterror gammas (gauss) on every active bin, applied to backgrounds
+    gamma_mask = np.zeros((s_, b_))
+    gamma_mask[1:, :nb] = 1.0
+    ctype = np.zeros(b_)
+    cscale = np.ones(b_)
+    ctype[:nb] = 1.0
+    rel = rng.uniform(0.01, 0.08, size=nb)  # relative MC stat uncertainty
+    cscale[:nb] = 1.0 / rel**2
+
+    bkg = nominal[1:, :].sum(axis=0)
+    lam = bkg + data_mu * nominal[0, :]
+    data = np.round(lam * bin_mask).astype(float)
+
+    t = {
+        "data": data, "nominal": nominal, "histo_up": histo_up,
+        "histo_dn": histo_dn, "norm_lnup": norm_lnup, "norm_lndn": norm_lndn,
+        "free_map": free_map, "free_mask": free_mask,
+        "alpha_mask": alpha_mask, "gamma_mask": gamma_mask,
+        "ctype": ctype, "cscale": cscale, "bin_mask": bin_mask,
+    }
+    return {k: np.asarray(v, dtype=np.float64) for k, v in t.items()}
+
+
+def random_theta(cfg, t, seed=1, spread=0.3):
+    """A random parameter point inside the bounds (for kernel sweeps)."""
+    rng = np.random.default_rng(seed)
+    f_, a_, b_ = cfg.n_free, cfg.n_alpha, cfg.n_bins
+    phi = rng.uniform(0.2, 2.0, size=f_)
+    alpha = rng.normal(0.0, spread, size=a_)
+    gamma = rng.uniform(0.8, 1.2, size=b_)
+    return np.concatenate([phi, alpha, gamma]).astype(np.float64)

@@ -1,0 +1,63 @@
+"""AOT artifact emission: manifest contract + HLO text sanity."""
+
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import pytest
+
+from compile import aot
+from compile.shapes import INPUT_ORDER, OUTPUT_ORDER, SHAPE_CLASSES, input_shapes
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    classes = {"quickstart": SHAPE_CLASSES["quickstart"]}
+    manifest = aot.build_all(out, classes=classes, verbose=False)
+    return out, manifest
+
+
+def test_manifest_contract(built):
+    out, manifest = built
+    assert manifest["format"] == "hlo-text"
+    assert manifest["dtype"] == "f64"
+    assert manifest["input_order"] == INPUT_ORDER
+    assert manifest["output_order"] == OUTPUT_ORDER
+    assert set(manifest["entries"]) == {"hypotest_quickstart", "mle_quickstart"}
+
+
+def test_manifest_shapes_match_shape_class(built):
+    _, manifest = built
+    cfg = SHAPE_CLASSES["quickstart"]
+    shapes = input_shapes(cfg)
+    entry = manifest["entries"]["hypotest_quickstart"]
+    assert entry["shape_class"]["n_params"] == cfg.n_params
+    for spec in entry["inputs"]:
+        assert tuple(spec["shape"]) == shapes[spec["name"]]
+        assert spec["dtype"] == "f64"
+    assert [s["name"] for s in entry["inputs"]] == INPUT_ORDER
+
+
+def test_hlo_text_files_exist_and_parse_shape(built):
+    out, manifest = built
+    for entry in manifest["entries"].values():
+        path = os.path.join(out, entry["file"])
+        assert os.path.exists(path)
+        text = open(path).read()
+        assert "ENTRY" in text and "HloModule" in text
+        # all inputs appear as f64 parameters
+        assert text.count("parameter(") >= len(INPUT_ORDER)
+        # interchange must not contain opcodes newer than xla_extension 0.5.1
+        for banned in (" erf(", " erf-inv(", "custom-call"):
+            assert banned not in text, f"banned opcode {banned!r} in {path}"
+
+
+def test_manifest_json_round_trips(built):
+    out, manifest = built
+    on_disk = json.load(open(os.path.join(out, "manifest.json")))
+    assert on_disk["entries"].keys() == manifest["entries"].keys()
+    assert on_disk["input_order"] == manifest["input_order"]

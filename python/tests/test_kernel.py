@@ -1,0 +1,164 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This is the core numeric signal for the whole stack: the AOT artifact embeds
+the Pallas graph, Rust executes it blindly, so kernel==oracle here is what
+makes the Rust-side answers trustworthy.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref as kref
+from compile.kernels.expected import expected_and_jacobian_pallas
+from compile.kernels.nll import poisson_nll_pallas
+from compile.shapes import SHAPE_CLASSES
+from compile.synth import make_tensors, random_theta
+
+CLASSES = list(SHAPE_CLASSES)
+
+
+@pytest.mark.parametrize("name", CLASSES)
+def test_expected_kernel_matches_ref(name):
+    cfg = SHAPE_CLASSES[name]
+    t = make_tensors(cfg, seed=11)
+    th = random_theta(cfg, t, seed=12)
+    nu_r, j_r = kref.expected_and_jacobian_ref(th, t, cfg)
+    nu_p, j_p = expected_and_jacobian_pallas(th, t, cfg)
+    np.testing.assert_allclose(nu_p, nu_r, rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(j_p, j_r, rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("name", CLASSES)
+def test_nll_kernel_matches_ref(name):
+    cfg = SHAPE_CLASSES[name]
+    t = make_tensors(cfg, seed=21)
+    th = random_theta(cfg, t, seed=22)
+    nu, _ = kref.expected_and_jacobian_ref(th, t, cfg)
+    r = kref.poisson_nll_ref(nu, t["data"], t["bin_mask"])
+    p = poisson_nll_pallas(jnp.asarray(nu), t["data"], t["bin_mask"], cfg)
+    np.testing.assert_allclose(float(p), float(r), rtol=1e-13)
+
+
+def test_jacobian_matches_jacfwd():
+    """Analytic kernel Jacobian == forward-mode autodiff of the oracle."""
+    cfg = SHAPE_CLASSES["quickstart"]
+    t = make_tensors(cfg, seed=5, active_bins=12, active_alpha=5)
+    th = random_theta(cfg, t, seed=6)
+    _, j_ana = expected_and_jacobian_pallas(th, t, cfg)
+    jf = jax.jacfwd(
+        lambda x: kref.expected_and_jacobian_ref(x, t, cfg)[0])(jnp.asarray(th))
+    np.testing.assert_allclose(np.asarray(jf).T, j_ana, rtol=1e-9, atol=1e-9)
+
+
+def test_jacobian_matches_jacfwd_at_negative_alpha():
+    """The code0/code1 sign branches must differentiate correctly on both sides."""
+    cfg = SHAPE_CLASSES["quickstart"]
+    t = make_tensors(cfg, seed=5, active_bins=12, active_alpha=5)
+    th = random_theta(cfg, t, seed=6)
+    f = cfg.n_free
+    th[f:f + cfg.n_alpha] = -np.abs(th[f:f + cfg.n_alpha]) - 0.05
+    _, j_ana = expected_and_jacobian_pallas(th, t, cfg)
+    jf = jax.jacfwd(
+        lambda x: kref.expected_and_jacobian_ref(x, t, cfg)[0])(jnp.asarray(th))
+    np.testing.assert_allclose(np.asarray(jf).T, j_ana, rtol=1e-9, atol=1e-9)
+
+
+def test_masked_parameters_have_zero_jacobian():
+    cfg = SHAPE_CLASSES["quickstart"]
+    t = make_tensors(cfg, seed=9, active_bins=10, active_alpha=3)
+    th = random_theta(cfg, t, seed=10)
+    _, jac = expected_and_jacobian_pallas(th, t, cfg)
+    f, a = cfg.n_free, cfg.n_alpha
+    # inactive alphas
+    assert np.all(jac[f + 3:f + a, :] == 0.0)
+    # gammas of padded bins (ctype == 0)
+    pad = np.where(t["ctype"] == 0.0)[0]
+    assert np.all(jac[f + a + pad, :] == 0.0)
+
+
+def test_pinned_parameters_do_not_change_expectation():
+    cfg = SHAPE_CLASSES["quickstart"]
+    t = make_tensors(cfg, seed=13, active_bins=10, active_alpha=3)
+    th1 = random_theta(cfg, t, seed=14)
+    th2 = th1.copy()
+    f, a = cfg.n_free, cfg.n_alpha
+    th2[f + 4] = 3.0          # masked alpha
+    th2[f + a + 11] = 0.123   # padded-bin gamma
+    nu1, _ = expected_and_jacobian_pallas(th1, t, cfg)
+    nu2, _ = expected_and_jacobian_pallas(th2, t, cfg)
+    np.testing.assert_array_equal(np.asarray(nu1), np.asarray(nu2))
+
+
+def test_gamma_jacobian_is_bin_diagonal():
+    cfg = SHAPE_CLASSES["quickstart"]
+    t = make_tensors(cfg, seed=15)
+    th = random_theta(cfg, t, seed=16)
+    _, jac = expected_and_jacobian_pallas(th, t, cfg)
+    f, a, b = cfg.n_free, cfg.n_alpha, cfg.n_bins
+    g = np.asarray(jac[f + a:, :])
+    off = g - np.diag(np.diag(g))
+    assert np.abs(off).max() == 0.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    tseed=st.integers(0, 10_000),
+    nb=st.integers(2, 16),
+    na=st.integers(0, 6),
+    mu=st.floats(0.0, 5.0),
+)
+def test_kernel_matches_ref_hypothesis(seed, tseed, nb, na, mu):
+    """Property sweep over workspace shapes, activity masks and theta points."""
+    cfg = SHAPE_CLASSES["quickstart"]
+    t = make_tensors(cfg, seed=seed, active_bins=nb, active_alpha=na, data_mu=mu)
+    th = random_theta(cfg, t, seed=tseed)
+    nu_r, j_r = kref.expected_and_jacobian_ref(th, t, cfg)
+    nu_p, j_p = expected_and_jacobian_pallas(th, t, cfg)
+    np.testing.assert_allclose(nu_p, nu_r, rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(j_p, j_r, rtol=1e-12, atol=1e-12)
+    r = kref.poisson_nll_ref(nu_r, t["data"], t["bin_mask"])
+    p = poisson_nll_pallas(jnp.asarray(nu_r), t["data"], t["bin_mask"], cfg)
+    np.testing.assert_allclose(float(p), float(r), rtol=1e-12)
+
+
+@settings(max_examples=15, deadline=None)
+@given(scale=st.floats(0.1, 1e3), seed=st.integers(0, 1000))
+def test_kernel_scale_invariance(scale, seed):
+    """nu is linear in the nominal rates when interpolations are multiplicative
+    around them (histo deltas scale too).
+
+    Scale is bounded away from zero: below ~1e-2 the additive interpolation
+    can cross the EPS_RATE clip floor, where linearity intentionally breaks
+    (rates are floored to keep ln(nu) finite) — found by hypothesis.
+    """
+    cfg = SHAPE_CLASSES["quickstart"]
+    t = make_tensors(cfg, seed=seed)
+    th = random_theta(cfg, t, seed=seed + 1)
+    nu1, _ = expected_and_jacobian_pallas(th, t, cfg)
+    t2 = dict(t)
+    for k in ("nominal", "histo_up", "histo_dn"):
+        t2[k] = t[k] * scale
+    nu2, _ = expected_and_jacobian_pallas(th, t2, cfg)
+    np.testing.assert_allclose(np.asarray(nu2), np.asarray(nu1) * scale,
+                               rtol=1e-9)
+
+
+@pytest.mark.parametrize("name", CLASSES)
+def test_forward_only_kernel_matches_full(name):
+    """The nu-only kernel (NLL path, Perf L2-1) must equal the full kernel."""
+    from compile.kernels.expected import expected_pallas
+
+    cfg = SHAPE_CLASSES[name]
+    t = make_tensors(cfg, seed=31)
+    th = random_theta(cfg, t, seed=32)
+    nu_full, _ = expected_and_jacobian_pallas(th, t, cfg)
+    nu_only = expected_pallas(th, t, cfg)
+    np.testing.assert_allclose(np.asarray(nu_only), np.asarray(nu_full),
+                               rtol=1e-13, atol=0)

@@ -1,0 +1,208 @@
+"""L2 correctness: fit convergence, statistical behavior, asymptotic formulas."""
+
+import math
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.shapes import INPUT_ORDER, SHAPE_CLASSES
+from compile.synth import make_tensors, random_theta
+
+CFG = SHAPE_CLASSES["quickstart"]
+
+
+def tensors(seed=3, data_mu=0.0, signal_scale=1.0):
+    return make_tensors(CFG, seed=seed, active_bins=12, active_alpha=5,
+                        data_mu=data_mu, signal_scale=signal_scale)
+
+
+def centers(t):
+    return (jnp.zeros((CFG.n_alpha,)), jnp.ones((CFG.n_bins,)))
+
+
+def hypotest(t, mu_test=1.0, use_pallas=False):
+    args = [jnp.asarray(t[k]) for k in INPUT_ORDER]
+    fn = jax.jit(lambda *a: model.hypotest_graph(
+        *a, cfg=CFG, mu_test=mu_test, use_pallas=use_pallas))
+    return [np.asarray(o) for o in fn(*args)]
+
+
+# ---------------------------------------------------------------------------
+# numerics building blocks
+# ---------------------------------------------------------------------------
+
+def test_erf_approx_accuracy():
+    xs = np.linspace(-5, 5, 201)
+    ours = np.asarray(model.erf_approx(jnp.asarray(xs)))
+    exact = np.array([math.erf(x) for x in xs])
+    assert np.abs(ours - exact).max() < 1.6e-7
+
+
+def test_norm_cdf_tails_and_center():
+    assert abs(float(model.norm_cdf(jnp.asarray(0.0))) - 0.5) < 1e-7
+    assert float(model.norm_cdf(jnp.asarray(5.0))) > 0.999999
+    assert float(model.norm_cdf(jnp.asarray(-5.0))) < 1e-6
+
+
+def test_cg_solve_matches_dense_solve():
+    rng = np.random.default_rng(0)
+    for n in (4, 16, 40):
+        a = rng.normal(size=(n, n))
+        h = a @ a.T + n * np.eye(n)
+        g = rng.normal(size=n)
+        x = np.asarray(model.cg_solve(jnp.asarray(h), jnp.asarray(g), n + 5))
+        np.testing.assert_allclose(h @ x, g, rtol=1e-8, atol=1e-8)
+
+
+def test_grad_matches_autodiff():
+    """Analytic gradient (kernel Jacobian + constraint terms) == jax.grad."""
+    t = tensors(seed=7)
+    c = centers(t)
+    th = jnp.asarray(random_theta(CFG, t, seed=8))
+    fixed = model.base_fixed_mask(t, CFG)
+    g_ana, _ = model.grad_and_fisher(th, t, CFG, c, fixed, use_pallas=False)
+    g_ad = jax.grad(
+        lambda x: model.full_nll(x, t, CFG, c, use_pallas=False))(th)
+    live = np.asarray(1.0 - fixed)
+    np.testing.assert_allclose(np.asarray(g_ana), np.asarray(g_ad) * live,
+                               rtol=1e-8, atol=1e-8)
+
+
+# ---------------------------------------------------------------------------
+# fitting
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mu_true", [0.0, 1.0, 2.5])
+def test_fit_recovers_injected_mu(mu_true):
+    t = tensors(seed=4, data_mu=mu_true, signal_scale=6.0)
+    th, nll, diag = model.fit(t, CFG, centers(t), model.base_fixed_mask(t, CFG),
+                              model.init_theta(t, CFG), use_pallas=False)
+    assert abs(float(th[0]) - mu_true) < 0.25
+    # projected-gradient norm at the optimum: the early-exit policy stops on
+    # NLL stagnation, so allow a small residual (nll error ~ g^2/2h < 1e-6)
+    assert float(diag[1]) < 0.05
+
+
+def test_fit_decreases_nll():
+    t = tensors(seed=5)
+    c = centers(t)
+    th0 = model.init_theta(t, CFG, mu_init=3.0)
+    nll0 = float(model.full_nll(th0, t, CFG, c, use_pallas=False))
+    th, nll, _ = model.fit(t, CFG, c, model.base_fixed_mask(t, CFG), th0,
+                           use_pallas=False)
+    assert float(nll) < nll0
+
+
+def test_fixed_mu_fit_pins_poi():
+    t = tensors(seed=6)
+    th, _, _ = model.fit_mu_fixed(t, CFG, centers(t), 1.7, use_pallas=False)
+    assert float(th[0]) == pytest.approx(1.7)
+
+
+def test_fit_respects_bounds():
+    # strong downward fluctuation would pull mu negative; bound keeps it >= 0
+    t = tensors(seed=8, data_mu=0.0, signal_scale=10.0)
+    t["data"] = np.maximum(t["data"] - 2.0 * t["nominal"][0], 0.0) * t["bin_mask"]
+    th, _, _ = model.fit(t, CFG, centers(t), model.base_fixed_mask(t, CFG),
+                         model.init_theta(t, CFG), use_pallas=False)
+    assert float(th[0]) >= 0.0
+    assert float(th[0]) <= model.FREE_LO * 10  # pushed to the boundary
+
+
+def test_fixed_params_do_not_move():
+    t = tensors(seed=9)
+    th, _, _ = model.fit_mu_fixed(t, CFG, centers(t), 1.0, use_pallas=False)
+    f, a = CFG.n_free, CFG.n_alpha
+    # masked alphas stay at init 0; padded-bin gammas stay at 1
+    assert np.all(np.asarray(th[f + 5:f + a]) == 0.0)
+    pad = np.where(t["ctype"] == 0.0)[0]
+    assert np.all(np.asarray(th)[f + a + pad] == 1.0)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis test statistics
+# ---------------------------------------------------------------------------
+
+def test_hypotest_bkg_only_matches_expected_band():
+    out = hypotest(tensors(seed=3, data_mu=0.0))
+    cls_obs, cls_exp = out[0], out[1]
+    assert 0.0 <= cls_obs <= 1.0
+    # observed on background-like data should sit inside the +-2 sigma band
+    assert cls_exp[0] <= cls_obs <= cls_exp[4]
+
+
+def test_hypotest_expected_band_is_monotonic():
+    out = hypotest(tensors(seed=3))
+    cls_exp = out[1]
+    assert np.all(np.diff(cls_exp) > 0)
+
+
+def test_hypotest_signal_injection_raises_cls():
+    bkg = hypotest(tensors(seed=3, data_mu=0.0, signal_scale=4.0))
+    sig = hypotest(tensors(seed=3, data_mu=1.0, signal_scale=4.0))
+    assert sig[0] > bkg[0]
+    assert sig[4] > 0.5  # mu_hat near 1
+
+
+def test_hypotest_more_signal_more_power():
+    weak = hypotest(tensors(seed=3, signal_scale=1.0))
+    strong = hypotest(tensors(seed=3, signal_scale=5.0))
+    # median expected CLs must drop with signal cross-section
+    assert strong[1][2] < weak[1][2]
+    assert strong[3] > weak[3]  # qmu_A grows
+
+
+def test_hypotest_qmu_nonnegative_and_mu_hat_bounded():
+    for seed in (1, 2, 3, 4):
+        out = hypotest(tensors(seed=seed, data_mu=float(seed % 3)))
+        assert out[2] >= 0.0 and out[3] >= 0.0
+        assert 0.0 <= out[4] <= CFG.mu_max
+
+
+def test_hypotest_pallas_equals_jnp_graph():
+    t = tensors(seed=3)
+    a = hypotest(t, use_pallas=False)
+    b = hypotest(t, use_pallas=True)
+    np.testing.assert_allclose(a[0], b[0], rtol=1e-9, atol=1e-12)
+    np.testing.assert_allclose(a[1], b[1], rtol=1e-9, atol=1e-12)
+    np.testing.assert_allclose(a[4], b[4], rtol=1e-9, atol=1e-12)
+
+
+def test_asimov_free_nll_is_minimum():
+    """The background-only fit point must minimize the Asimov NLL (the
+    justification for skipping the 5th fit in hypotest_graph)."""
+    t = tensors(seed=3)
+    c = centers(t)
+    th_bkg, _, _ = model.fit_mu_fixed(t, CFG, c, model.FREE_LO, use_pallas=False)
+    nu_bkg, _ = model.expected_and_jacobian(th_bkg, t, CFG, use_pallas=False)
+    from compile.kernels import ref as kref
+    _, a_bkg, g_bkg = kref.effective_params(th_bkg, t, CFG)
+    ta = dict(t, data=np.asarray(nu_bkg))
+    ca = (a_bkg, g_bkg)
+    nll0 = float(model.full_nll(th_bkg, ta, CFG, ca, use_pallas=False))
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        pert = np.asarray(th_bkg) + rng.normal(0, 0.05, size=CFG.n_params)
+        pert[0] = np.asarray(th_bkg)[0]
+        pert = np.clip(pert, 1e-6, None)
+        nll_p = float(model.full_nll(jnp.asarray(pert), ta, CFG, ca,
+                                     use_pallas=False))
+        assert nll_p >= nll0 - 1e-9
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 500), mu=st.floats(0.0, 2.0))
+def test_hypotest_outputs_sane_hypothesis(seed, mu):
+    out = hypotest(tensors(seed=seed, data_mu=mu))
+    cls_obs, cls_exp, qmu, qmu_a, mu_hat = out[0], out[1], out[2], out[3], out[4]
+    assert 0.0 <= cls_obs <= 1.0 + 1e-12
+    assert np.all((cls_exp >= 0.0) & (cls_exp <= 1.0 + 1e-12))
+    assert qmu >= 0.0 and qmu_a >= 0.0
+    assert 0.0 <= mu_hat <= CFG.mu_max

@@ -1,0 +1,127 @@
+//! Micro/e2e benchmark harness: warmup + timed trials, mean ± std reporting,
+//! optional JSON output. Used by every `cargo bench` target (the offline
+//! crate set has no criterion).
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// One benchmark's aggregated timing.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub trials: usize,
+    /// per-trial wall times in seconds
+    pub times: Vec<f64>,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} {:>10.4} s ± {:>8.4} (n={}, min {:.4}, max {:.4})",
+            self.name, self.summary.mean, self.summary.std, self.trials,
+            self.summary.min, self.summary.max
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("trials", Json::num(self.trials as f64)),
+            ("mean_s", Json::num(self.summary.mean)),
+            ("std_s", Json::num(self.summary.std)),
+            ("min_s", Json::num(self.summary.min)),
+            ("max_s", Json::num(self.summary.max)),
+            ("times_s", Json::arr_f64(&self.times)),
+        ])
+    }
+}
+
+/// Bench runner configuration.
+#[derive(Debug, Clone)]
+pub struct Bencher {
+    pub warmup: usize,
+    pub trials: usize,
+    pub quiet: bool,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: 1, trials: 10, quiet: false }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: usize, trials: usize) -> Self {
+        Bencher { warmup, trials, quiet: false }
+    }
+
+    /// Time `f` over the configured trials; `f` returns an opaque value to
+    /// keep the optimizer honest.
+    pub fn run<R, F: FnMut() -> R>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.trials);
+        for _ in 0..self.trials {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            trials: self.trials,
+            summary: Summary::of(&times),
+            times,
+        };
+        if !self.quiet {
+            println!("{}", res.report_line());
+        }
+        res
+    }
+}
+
+/// One-shot convenience.
+pub fn bench<R, F: FnMut() -> R>(name: &str, trials: usize, f: F) -> BenchResult {
+    Bencher { warmup: 1, trials, quiet: false }.run(name, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_trials_and_summarizes() {
+        let b = Bencher { warmup: 0, trials: 5, quiet: true };
+        let mut calls = 0;
+        let r = b.run("noop", || {
+            calls += 1;
+            calls
+        });
+        assert_eq!(calls, 5);
+        assert_eq!(r.times.len(), 5);
+        assert!(r.summary.mean >= 0.0);
+    }
+
+    #[test]
+    fn warmup_not_counted() {
+        let b = Bencher { warmup: 3, trials: 2, quiet: true };
+        let mut calls = 0;
+        let r = b.run("noop", || {
+            calls += 1;
+        });
+        assert_eq!(calls, 5);
+        assert_eq!(r.trials, 2);
+    }
+
+    #[test]
+    fn json_shape() {
+        let b = Bencher { warmup: 0, trials: 2, quiet: true };
+        let r = b.run("x", || 1);
+        let j = r.to_json();
+        assert!(j.get("mean_s").is_some());
+        assert_eq!(j.get("trials").unwrap().as_f64(), Some(2.0));
+    }
+}

@@ -1,0 +1,91 @@
+//! Shared measurement helpers for the bench targets: run real PJRT/native
+//! fits over a pallet and collect per-patch service times + physics outputs.
+
+use anyhow::{anyhow, Result};
+
+use crate::fitter::native::NativeFitter;
+use crate::histfactory::dense;
+use crate::histfactory::spec::Workspace;
+use crate::infer::results::PointResult;
+use crate::pallet::generator::{generate, AnalysisConfig};
+use crate::runtime::{default_artifact_dir, Engine, Manifest};
+
+/// Measured fit campaign over one analysis pallet.
+pub struct Campaign {
+    pub analysis: String,
+    /// per-patch service time (seconds), patch order
+    pub service_s: Vec<f64>,
+    pub points: Vec<PointResult>,
+    /// one-off artifact compile time (PJRT backend only)
+    pub compile_s: f64,
+}
+
+/// Fit `limit` patches (None = all) of `cfg`'s pallet with the PJRT artifact.
+pub fn measure_pjrt(cfg: &AnalysisConfig, limit: Option<usize>) -> Result<Campaign> {
+    let dir = default_artifact_dir();
+    let manifest = Manifest::load(&dir).map_err(|e| anyhow!(e))?;
+    let entry = manifest
+        .hypotest(&cfg.name)
+        .ok_or_else(|| anyhow!("no hypotest artifact for '{}'", cfg.name))?;
+    let engine = Engine::cpu()?;
+    let t0 = std::time::Instant::now();
+    let compiled = engine.load(entry, &dir)?;
+    let compile_s = t0.elapsed().as_secs_f64();
+
+    let pallet = generate(cfg);
+    let n = limit.unwrap_or(pallet.patchset.len()).min(pallet.patchset.len());
+    let mut service = Vec::with_capacity(n);
+    let mut points = Vec::with_capacity(n);
+    for patch in pallet.patchset.patches.iter().take(n) {
+        let ws = Workspace::from_json(&patch.apply_to(&pallet.bkg_workspace).map_err(|e| anyhow!(e.to_string()))?)
+            .map_err(|e| anyhow!(e.to_string()))?;
+        let model = dense::compile(&ws, &entry.class).map_err(|e| anyhow!(e.to_string()))?;
+        let t0 = std::time::Instant::now();
+        let out = compiled.hypotest(&model)?;
+        let dt = t0.elapsed().as_secs_f64();
+        service.push(dt);
+        points.push(out.to_point(&patch.name, patch.values.clone(), dt));
+    }
+    Ok(Campaign { analysis: cfg.name.clone(), service_s: service, points, compile_s })
+}
+
+/// Same campaign through the native-Rust scalar fitter (the "traditional
+/// single-node implementation" baseline).
+pub fn measure_native(cfg: &AnalysisConfig, limit: Option<usize>) -> Result<Campaign> {
+    let dir = default_artifact_dir();
+    let manifest = Manifest::load(&dir).map_err(|e| anyhow!(e))?;
+    let entry = manifest
+        .hypotest(&cfg.name)
+        .ok_or_else(|| anyhow!("no hypotest artifact for '{}'", cfg.name))?;
+
+    let pallet = generate(cfg);
+    let n = limit.unwrap_or(pallet.patchset.len()).min(pallet.patchset.len());
+    let mut service = Vec::with_capacity(n);
+    let mut points = Vec::with_capacity(n);
+    for patch in pallet.patchset.patches.iter().take(n) {
+        let ws = Workspace::from_json(&patch.apply_to(&pallet.bkg_workspace).map_err(|e| anyhow!(e.to_string()))?)
+            .map_err(|e| anyhow!(e.to_string()))?;
+        let model = dense::compile(&ws, &entry.class).map_err(|e| anyhow!(e.to_string()))?;
+        let t0 = std::time::Instant::now();
+        let h = NativeFitter::new(&model).hypotest(1.0);
+        let dt = t0.elapsed().as_secs_f64();
+        service.push(dt);
+        points.push(PointResult {
+            patch: patch.name.clone(),
+            values: patch.values.clone(),
+            cls_obs: h.cls_obs,
+            cls_exp: h.cls_exp,
+            qmu: h.qmu,
+            qmu_a: h.qmu_a,
+            mu_hat: h.mu_hat,
+            fit_seconds: dt,
+        });
+    }
+    Ok(Campaign { analysis: cfg.name.clone(), service_s: service, points, compile_s: 0.0 })
+}
+
+/// Tile a sampled service-time vector up to `n` entries (for replays that
+/// need the full patch count from a measured subset).
+pub fn tile(service: &[f64], n: usize) -> Vec<f64> {
+    (0..n).map(|i| service[i % service.len()]).collect()
+}

@@ -1,0 +1,6 @@
+//! Bench harness substrate (no criterion offline).
+
+pub mod harness;
+pub mod measure;
+
+pub use harness::{bench, BenchResult, Bencher};

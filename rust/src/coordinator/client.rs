@@ -1,0 +1,184 @@
+//! FaaS client SDK: the Rust analog of funcX's `FuncXClient` (Listing 1 of
+//! the paper): `register_function`, `run`, `get_result`, plus batch helpers
+//! for the scan driver.
+
+use std::time::{Duration, Instant};
+
+use crate::coordinator::service::{Handler, ServiceHandle};
+use crate::coordinator::task::{EndpointId, FunctionId, TaskId, TaskState};
+use crate::util::json::Json;
+
+/// Client handle onto a service.
+#[derive(Clone)]
+pub struct FaasClient {
+    service: ServiceHandle,
+}
+
+impl FaasClient {
+    pub fn new(service: ServiceHandle) -> Self {
+        FaasClient { service }
+    }
+
+    /// Register a servable function; returns its id (Listing 1:
+    /// `fxc.register_function(prepare_workspace)`).
+    pub fn register_function(&self, name: &str, handler: Handler) -> FunctionId {
+        self.service.register_function(name, handler)
+    }
+
+    /// Submit a task (Listing 1: `fxc.run(args, endpoint_id=…, function_id=…)`).
+    pub fn run(
+        &self,
+        payload: Json,
+        endpoint_id: EndpointId,
+        function_id: FunctionId,
+    ) -> Result<TaskId, String> {
+        self.service.submit(endpoint_id, function_id, payload)
+    }
+
+    /// Non-blocking result poll; `None` while the task is still in flight
+    /// (funcX raises while pending — callers loop with a sleep, like the
+    /// paper's Listing 1).
+    pub fn get_result(&self, task: TaskId) -> Option<Result<Json, String>> {
+        self.service.try_result(task)
+    }
+
+    pub fn status(&self, task: TaskId) -> Option<TaskState> {
+        self.service.task_state(task)
+    }
+
+    /// Blocking wait with timeout.
+    pub fn wait(&self, task: TaskId, timeout: Duration) -> Result<Json, String> {
+        self.service.wait_result(task, timeout)
+    }
+
+    /// Submit many payloads and return task ids (scan fan-out).
+    pub fn run_batch(
+        &self,
+        payloads: Vec<Json>,
+        endpoint_id: EndpointId,
+        function_id: FunctionId,
+    ) -> Result<Vec<TaskId>, String> {
+        payloads
+            .into_iter()
+            .map(|p| self.run(p, endpoint_id, function_id))
+            .collect()
+    }
+
+    /// Gather all results, invoking `on_complete(index, result)` as each
+    /// arrives (drives the Listing-2-style completion stream). Polling
+    /// mirrors the paper's client loop. `stall_timeout` (if set) aborts when
+    /// *nothing* completes for that long — the fail-fast path when every
+    /// worker died at init (missing artifacts, broken endpoint).
+    pub fn gather<F: FnMut(usize, &Result<Json, String>)>(
+        &self,
+        tasks: &[TaskId],
+        timeout: Duration,
+        poll: Duration,
+        stall_timeout: Option<Duration>,
+        mut on_complete: F,
+    ) -> Result<Vec<Result<Json, String>>, String> {
+        let deadline = Instant::now() + timeout;
+        let mut last_progress = Instant::now();
+        let mut results: Vec<Option<Result<Json, String>>> = vec![None; tasks.len()];
+        let mut remaining = tasks.len();
+        while remaining > 0 {
+            if Instant::now() > deadline {
+                return Err(format!("timeout with {remaining} tasks outstanding"));
+            }
+            if let Some(stall) = stall_timeout {
+                if Instant::now() - last_progress > stall {
+                    return Err(format!(
+                        "no task completed for {:.0} s with {remaining} outstanding — \
+                         endpoint unhealthy? (check worker init: artifacts present?)",
+                        stall.as_secs_f64()
+                    ));
+                }
+            }
+            for (i, &t) in tasks.iter().enumerate() {
+                if results[i].is_some() {
+                    continue;
+                }
+                if let Some(r) = self.get_result(t) {
+                    on_complete(i, &r);
+                    results[i] = Some(r);
+                    remaining -= 1;
+                    last_progress = Instant::now();
+                }
+            }
+            if remaining > 0 {
+                std::thread::sleep(poll);
+            }
+        }
+        Ok(results.into_iter().map(|r| r.unwrap()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::endpoint::{Endpoint, EndpointConfig};
+    use crate::coordinator::executor::ExecutorConfig;
+    use crate::coordinator::service::Service;
+    use std::sync::Arc;
+
+    fn quick_endpoint(svc: &ServiceHandle) -> Endpoint {
+        Endpoint::start(
+            svc.clone(),
+            EndpointConfig::new("t").with_executor(ExecutorConfig {
+                max_blocks: 2,
+                nodes_per_block: 1,
+                workers_per_node: 2,
+                parallelism: 1.0,
+                poll: Duration::from_millis(1),
+            }),
+        )
+    }
+
+    #[test]
+    fn listing1_flow() {
+        let svc = Service::new();
+        let ep = quick_endpoint(&svc);
+        let fxc = FaasClient::new(svc.clone());
+        let f = fxc.register_function(
+            "prepare_workspace",
+            Arc::new(|p: &Json, _| Ok(Json::obj(vec![("n_channels", p.clone())]))),
+        );
+        let task = fxc.run(Json::num(8.0), ep.id, f).unwrap();
+        // poll like Listing 1
+        let mut result = None;
+        for _ in 0..500 {
+            if let Some(r) = fxc.get_result(task) {
+                result = Some(r);
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let v = result.unwrap().unwrap();
+        assert_eq!(v.get("n_channels").unwrap().as_f64(), Some(8.0));
+        ep.shutdown();
+    }
+
+    #[test]
+    fn gather_streams_completions() {
+        let svc = Service::new();
+        let ep = quick_endpoint(&svc);
+        let fxc = FaasClient::new(svc.clone());
+        let f = fxc.register_function("id", Arc::new(|p: &Json, _| Ok(p.clone())));
+        let tasks = fxc
+            .run_batch((0..10).map(|i| Json::num(i as f64)).collect(), ep.id, f)
+            .unwrap();
+        let mut seen = 0;
+        let results = fxc
+            .gather(&tasks, Duration::from_secs(10), Duration::from_millis(1), None, |_, r| {
+                assert!(r.is_ok());
+                seen += 1;
+            })
+            .unwrap();
+        assert_eq!(seen, 10);
+        assert_eq!(results.len(), 10);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.as_ref().unwrap().as_f64(), Some(i as f64));
+        }
+        ep.shutdown();
+    }
+}

@@ -1,0 +1,154 @@
+//! Scan driver: the Rust analog of the paper's `fit_analysis.py` — fan a
+//! pallet's signal patches out over an endpoint, stream completions in
+//! Listing-2 style, and aggregate a `ScanResult`.
+
+use std::time::{Duration, Instant};
+
+use crate::coordinator::client::FaasClient;
+use crate::coordinator::fitops;
+use crate::coordinator::task::{EndpointId, FunctionId};
+use crate::infer::results::{PointResult, ScanResult};
+use crate::pallet::generator::Pallet;
+
+/// Options for a scan run.
+#[derive(Debug, Clone)]
+pub struct ScanOptions {
+    /// shape-class override (None = auto-pick per workspace)
+    pub class: Option<String>,
+    /// print per-task completion lines (Listing 2)
+    pub verbose: bool,
+    /// cap on patches (None = all)
+    pub limit: Option<usize>,
+    pub timeout: Duration,
+    pub poll: Duration,
+    /// fail fast if nothing completes within this window (e.g. every worker
+    /// failed init because the artifacts are missing)
+    pub stall_timeout: Duration,
+}
+
+impl Default for ScanOptions {
+    fn default() -> Self {
+        ScanOptions {
+            class: None,
+            verbose: false,
+            limit: None,
+            timeout: Duration::from_secs(3600),
+            poll: Duration::from_millis(5),
+            stall_timeout: Duration::from_secs(120),
+        }
+    }
+}
+
+/// Run a full signal-grid scan of `pallet` through the FaaS fabric.
+///
+/// Submits one fit task per patch (payload = patched workspace JSON, the
+/// same data motion as the paper's funcX deployment), then gathers results,
+/// invoking the Listing-2 completion stream when verbose.
+pub fn run_scan(
+    client: &FaasClient,
+    endpoint: EndpointId,
+    function: FunctionId,
+    pallet: &Pallet,
+    opts: &ScanOptions,
+) -> Result<ScanResult, String> {
+    let n = opts.limit.unwrap_or(pallet.patchset.len()).min(pallet.patchset.len());
+    let t0 = Instant::now();
+
+    // fan-out: build + submit payloads (patch application happens client-side,
+    // like pyhf pallets: the worker receives a complete workspace)
+    let mut tasks = Vec::with_capacity(n);
+    let mut names = Vec::with_capacity(n);
+    for patch in pallet.patchset.patches.iter().take(n) {
+        let payload =
+            fitops::patch_payload(&pallet.bkg_workspace, patch, opts.class.as_deref())?;
+        names.push(patch.name.clone());
+        tasks.push(client.run(payload, endpoint, function)?);
+    }
+
+    // gather with completion stream
+    let mut done = 0usize;
+    let results = client.gather(&tasks, opts.timeout, opts.poll, Some(opts.stall_timeout), |i, r| {
+        done += 1;
+        if opts.verbose {
+            match r {
+                Ok(_) => println!("Task {} complete, there are {} results now", names[i], done),
+                Err(e) => println!("Task {} FAILED: {e}", names[i]),
+            }
+        }
+    })?;
+
+    let mut scan = ScanResult::new(pallet.config.name.clone());
+    for (i, r) in results.into_iter().enumerate() {
+        let v = r.map_err(|e| format!("task '{}' failed: {e}", names[i]))?;
+        let point = PointResult::from_json(&v)
+            .ok_or_else(|| format!("task '{}' returned malformed result", names[i]))?;
+        scan.points.push(point);
+    }
+    scan.wall_seconds = t0.elapsed().as_secs_f64();
+    Ok(scan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::endpoint::{Endpoint, EndpointConfig};
+    use crate::coordinator::executor::ExecutorConfig;
+    use crate::coordinator::service::Service;
+    use crate::pallet::library::config_quickstart;
+    use std::sync::Arc;
+
+    /// Scan through the native fitter backend (no artifacts needed), proving
+    /// the full fabric end-to-end: payload -> worker -> dense compile -> fit
+    /// -> result JSON -> aggregation.
+    #[test]
+    fn native_backend_scan_end_to_end() {
+        let svc = Service::new();
+        // native handler needs a manifest for class selection; synthesize one
+        let dir = std::env::temp_dir().join(format!("scan-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), TEST_MANIFEST).unwrap();
+
+        let ep = Endpoint::start(
+            svc.clone(),
+            EndpointConfig::new("native")
+                .with_executor(ExecutorConfig {
+                    max_blocks: 2,
+                    nodes_per_block: 1,
+                    workers_per_node: 2,
+                    parallelism: 1.0,
+                    poll: Duration::from_millis(1),
+                })
+                .with_worker_init(crate::coordinator::fitops::native_worker_init(dir.clone())),
+        );
+        let client = FaasClient::new(svc.clone());
+        let f = client.register_function("fit_patch_native", crate::coordinator::fitops::native_fit_handler());
+
+        let pallet = crate::pallet::generate(&config_quickstart());
+        let opts = ScanOptions { limit: Some(4), ..Default::default() };
+        let scan = run_scan(&client, ep.id, f, &pallet, &opts).unwrap();
+
+        assert_eq!(scan.points.len(), 4);
+        for p in &scan.points {
+            assert!(p.cls_obs >= 0.0 && p.cls_obs <= 1.0 + 1e-12, "{}", p.cls_obs);
+            assert!(p.fit_seconds > 0.0);
+            assert!(p.values.len() == 2);
+        }
+        assert!(scan.wall_seconds > 0.0);
+        ep.shutdown();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    const TEST_MANIFEST: &str = r#"{
+        "format": "hlo-text", "dtype": "f64", "mu_test": 1.0, "use_pallas": true,
+        "input_order": [], "output_order": [],
+        "entries": {
+            "hypotest_quickstart": {
+                "file": "hypotest_quickstart.hlo.txt", "kind": "hypotest",
+                "shape_class": {"name": "quickstart", "n_bins": 16, "n_samples": 6,
+                                "n_alpha": 6, "n_free": 2, "bin_block": 16,
+                                "mu_max": 10.0, "max_newton": 32, "cg_iters": 24},
+                "inputs": []
+            }
+        }
+    }"#;
+}

@@ -1,0 +1,171 @@
+//! Endpoint: the agent representing one compute resource (funcX §2.2).
+//!
+//! Binds a provider + executor config + worker initializer, registers with
+//! the service, and manages the interchange queue lifecycle. Endpoints are
+//! identified by an id the client passes to `run` — "resources on different
+//! HPCs can be accessed by simply changing the endpoint identifier".
+
+use std::sync::Arc;
+
+use crate::coordinator::executor::{ExecutorConfig, HighThroughputExecutor};
+use crate::coordinator::metrics::{Metrics, Snapshot};
+use crate::coordinator::provider::Provider;
+use crate::coordinator::service::{ServiceHandle, TaskQueue, WorkerInit};
+use crate::coordinator::task::EndpointId;
+
+/// Endpoint configuration (descriptive metadata + execution setup).
+pub struct EndpointConfig {
+    pub name: String,
+    pub executor: ExecutorConfig,
+    pub provider: Box<dyn Provider>,
+    pub worker_init: WorkerInit,
+}
+
+impl EndpointConfig {
+    pub fn new(name: impl Into<String>) -> Self {
+        EndpointConfig {
+            name: name.into(),
+            executor: ExecutorConfig::default(),
+            provider: Box::new(crate::coordinator::provider::LocalProvider::default()),
+            worker_init: Arc::new(|_| Ok(())),
+        }
+    }
+
+    pub fn with_executor(mut self, executor: ExecutorConfig) -> Self {
+        self.executor = executor;
+        self
+    }
+
+    pub fn with_provider(mut self, provider: Box<dyn Provider>) -> Self {
+        self.provider = provider;
+        self
+    }
+
+    pub fn with_worker_init(mut self, init: WorkerInit) -> Self {
+        self.worker_init = init;
+        self
+    }
+}
+
+/// A started endpoint.
+pub struct Endpoint {
+    pub id: EndpointId,
+    pub name: String,
+    queue: Arc<TaskQueue>,
+    executor: Option<HighThroughputExecutor>,
+    service: ServiceHandle,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Endpoint {
+    /// Register with the service and start the executor.
+    pub fn start(service: ServiceHandle, config: EndpointConfig) -> Endpoint {
+        let queue = TaskQueue::new();
+        let id = service.register_endpoint(&config.name, queue.clone());
+        let metrics = Arc::new(Metrics::new());
+        let executor = HighThroughputExecutor::start(
+            service.clone(),
+            id,
+            queue.clone(),
+            config.provider,
+            config.worker_init,
+            config.executor,
+            metrics.clone(),
+        );
+        Endpoint { id, name: config.name, queue, executor: Some(executor), service, metrics }
+    }
+
+    pub fn active_workers(&self) -> usize {
+        self.executor.as_ref().map(|e| e.active_workers()).unwrap_or(0)
+    }
+
+    pub fn blocks(&self) -> usize {
+        self.executor.as_ref().map(|e| e.blocks()).unwrap_or(0)
+    }
+
+    pub fn metrics_snapshot(&self) -> Snapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Drain and stop: closes the interchange (workers finish queued tasks
+    /// first), joins threads, deregisters.
+    pub fn shutdown(mut self) {
+        if let Some(exec) = self.executor.take() {
+            exec.shutdown(&self.queue);
+        }
+        self.service.deregister_endpoint(self.id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::service::Service;
+    use crate::util::json::Json;
+    use std::time::Duration;
+
+    #[test]
+    fn endpoint_roundtrip() {
+        let svc = Service::new();
+        let ep = Endpoint::start(
+            svc.clone(),
+            EndpointConfig::new("river-like").with_executor(ExecutorConfig {
+                max_blocks: 2,
+                nodes_per_block: 1,
+                workers_per_node: 2,
+                parallelism: 1.0,
+                poll: Duration::from_millis(1),
+            }),
+        );
+        let f = svc.register_function(
+            "double",
+            Arc::new(|p: &Json, _ctx: &mut _| Ok(Json::num(p.as_f64().unwrap_or(0.0) * 2.0))),
+        );
+        let ids: Vec<_> = (0..8).map(|i| svc.submit(ep.id, f, Json::num(i as f64)).unwrap()).collect();
+        for (i, id) in ids.iter().enumerate() {
+            let r = svc.wait_result(*id, Duration::from_secs(5)).unwrap();
+            assert_eq!(r.as_f64(), Some(2.0 * i as f64));
+        }
+        assert!(ep.blocks() >= 1);
+        let snap = ep.metrics_snapshot();
+        assert!(snap.blocks_provisioned >= 1);
+        ep.shutdown();
+    }
+
+    #[test]
+    fn worker_context_persists_across_tasks() {
+        // worker-local state must survive between tasks (that is where fit
+        // workers cache compiled PJRT executables)
+        let svc = Service::new();
+        let ep = Endpoint::start(
+            svc.clone(),
+            EndpointConfig::new("stateful")
+                .with_executor(ExecutorConfig {
+                    max_blocks: 1,
+                    nodes_per_block: 1,
+                    workers_per_node: 1,
+                    parallelism: 1.0,
+                    poll: Duration::from_millis(1),
+                })
+                .with_worker_init(Arc::new(|ctx| {
+                    ctx.insert("counter", 0u64);
+                    Ok(())
+                })),
+        );
+        let f = svc.register_function(
+            "count",
+            Arc::new(|_p: &Json, ctx: &mut _| {
+                let c: &mut u64 = ctx.get_mut("counter").ok_or("no counter")?;
+                *c += 1;
+                Ok(Json::num(*c as f64))
+            }),
+        );
+        let mut last = 0.0;
+        for _ in 0..5 {
+            let id = svc.submit(ep.id, f, Json::Null).unwrap();
+            last = svc.wait_result(id, Duration::from_secs(5)).unwrap().as_f64().unwrap();
+        }
+        assert_eq!(last, 5.0);
+        ep.shutdown();
+    }
+}

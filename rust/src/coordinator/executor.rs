@@ -1,0 +1,400 @@
+//! HighThroughputExecutor: the Parsl-style block/node/worker engine behind
+//! an endpoint.
+//!
+//! A *block* is the unit of resources acquired from the provider
+//! (`nodes_per_block` nodes, `workers_per_node` workers each). The scaling
+//! loop provisions blocks while
+//!
+//! ```text
+//! outstanding_tasks > parallelism * active_workers   and   blocks < max_blocks
+//! ```
+//!
+//! which is exactly Parsl's simple-scaling condition with the parallelism
+//! ratio the paper describes in §3. Workers are OS threads; each runs the
+//! endpoint's `WorkerInit` once (compiling PJRT artifacts — the analog of a
+//! funcX worker's container pull + `pip install`) and then drains the
+//! interchange queue.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::provider::Provider;
+use crate::coordinator::service::{ServiceHandle, TaskQueue, WorkerContext, WorkerInit};
+use crate::coordinator::task::EndpointId;
+
+/// Executor tuning knobs (funcX endpoint config).
+#[derive(Debug, Clone)]
+pub struct ExecutorConfig {
+    pub max_blocks: usize,
+    pub nodes_per_block: usize,
+    pub workers_per_node: usize,
+    /// task-to-capacity ratio that triggers scaling (Parsl default 1.0)
+    pub parallelism: f64,
+    /// scaling-loop poll period
+    pub poll: Duration,
+}
+
+impl Default for ExecutorConfig {
+    fn default() -> Self {
+        ExecutorConfig {
+            max_blocks: 4,
+            nodes_per_block: 1,
+            workers_per_node: 2,
+            parallelism: 1.0,
+            poll: Duration::from_millis(5),
+        }
+    }
+}
+
+impl ExecutorConfig {
+    /// The paper's Table-1 endpoint configuration (max_blocks = 4,
+    /// nodes_per_block = 1; RIVER nodes run 24 hardware threads, scaled by
+    /// `workers_per_node` for this host).
+    pub fn paper_table1(workers_per_node: usize) -> Self {
+        ExecutorConfig {
+            max_blocks: 4,
+            nodes_per_block: 1,
+            workers_per_node,
+            ..Default::default()
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.max_blocks * self.nodes_per_block * self.workers_per_node
+    }
+}
+
+/// Running executor; owns the scaling thread and all worker threads.
+pub struct HighThroughputExecutor {
+    shutdown: Arc<AtomicBool>,
+    scaler: Option<JoinHandle<()>>,
+    workers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    active_workers: Arc<AtomicUsize>,
+    blocks: Arc<AtomicUsize>,
+}
+
+impl HighThroughputExecutor {
+    /// Start the executor for an endpoint.
+    pub fn start(
+        service: ServiceHandle,
+        endpoint: EndpointId,
+        queue: Arc<TaskQueue>,
+        mut provider: Box<dyn Provider>,
+        worker_init: WorkerInit,
+        config: ExecutorConfig,
+        metrics: Arc<Metrics>,
+    ) -> HighThroughputExecutor {
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let active_workers = Arc::new(AtomicUsize::new(0));
+        let blocks = Arc::new(AtomicUsize::new(0));
+        let workers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+
+        let scaler = {
+            let shutdown = shutdown.clone();
+            let active_workers = active_workers.clone();
+            let blocks = blocks.clone();
+            let workers = workers.clone();
+            std::thread::Builder::new()
+                .name(format!("ep{endpoint}-scaler"))
+                .spawn(move || {
+                    while !shutdown.load(Ordering::SeqCst) {
+                        let outstanding = service.outstanding(endpoint);
+                        let capacity = active_workers.load(Ordering::SeqCst);
+                        let nblocks = blocks.load(Ordering::SeqCst);
+                        let need_scale = nblocks < config.max_blocks
+                            && outstanding as f64 > config.parallelism * capacity as f64;
+                        if need_scale {
+                            match provider.request_block(nblocks, config.nodes_per_block) {
+                                Ok(grant) => {
+                                    // block acquisition latency (batch queue)
+                                    std::thread::sleep(grant.latency);
+                                    metrics.block_provisioned();
+                                    blocks.fetch_add(1, Ordering::SeqCst);
+                                    let mut guard = workers.lock().unwrap();
+                                    for node in 0..grant.nodes {
+                                        for w in 0..config.workers_per_node {
+                                            let name = format!(
+                                                "block-{}/node-{node}/worker-{w}",
+                                                grant.block_index
+                                            );
+                                            guard.push(spawn_worker(
+                                                name,
+                                                service.clone(),
+                                                queue.clone(),
+                                                worker_init.clone(),
+                                                shutdown.clone(),
+                                                active_workers.clone(),
+                                                metrics.clone(),
+                                            ));
+                                        }
+                                    }
+                                }
+                                Err(_) => {
+                                    // provider exhausted: stop trying
+                                    std::thread::sleep(config.poll.max(Duration::from_millis(20)));
+                                }
+                            }
+                        } else {
+                            std::thread::sleep(config.poll);
+                        }
+                    }
+                })
+                .expect("spawn scaler")
+        };
+
+        HighThroughputExecutor {
+            shutdown,
+            scaler: Some(scaler),
+            workers,
+            active_workers,
+            blocks,
+        }
+    }
+
+    pub fn active_workers(&self) -> usize {
+        self.active_workers.load(Ordering::SeqCst)
+    }
+
+    pub fn blocks(&self) -> usize {
+        self.blocks.load(Ordering::SeqCst)
+    }
+
+    /// Stop scaling, close the queue semantics are the endpoint's concern;
+    /// here we signal shutdown and join everything.
+    pub fn shutdown(mut self, queue: &TaskQueue) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        queue.close();
+        if let Some(s) = self.scaler.take() {
+            let _ = s.join();
+        }
+        let handles: Vec<_> = self.workers.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+fn spawn_worker(
+    name: String,
+    service: ServiceHandle,
+    queue: Arc<TaskQueue>,
+    worker_init: WorkerInit,
+    shutdown: Arc<AtomicBool>,
+    active_workers: Arc<AtomicUsize>,
+    metrics: Arc<Metrics>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(name.clone())
+        .spawn(move || {
+            let mut ctx = WorkerContext::new(name.clone());
+            let t0 = Instant::now();
+            if let Err(e) = worker_init(&mut ctx) {
+                crate::log_error!("worker", "{name}: init failed: {e}");
+                return;
+            }
+            metrics.worker_started(t0.elapsed().as_secs_f64());
+            active_workers.fetch_add(1, Ordering::SeqCst);
+
+            loop {
+                match queue.pop(Duration::from_millis(50)) {
+                    Some(task_id) => {
+                        if let Some((handler, payload)) = service.claim(task_id, &name) {
+                            // a panicking handler must fail the task, not
+                            // wedge it in Running and kill the worker
+                            let outcome = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(|| handler(&payload, &mut ctx)),
+                            )
+                            .unwrap_or_else(|p| {
+                                let msg = p
+                                    .downcast_ref::<&str>()
+                                    .map(|s| s.to_string())
+                                    .or_else(|| p.downcast_ref::<String>().cloned())
+                                    .unwrap_or_else(|| "handler panicked".into());
+                                Err(format!("handler panicked: {msg}"))
+                            });
+                            service.complete(task_id, outcome);
+                        }
+                    }
+                    None => {
+                        if shutdown.load(Ordering::SeqCst)
+                            || (queue.is_closed() && queue.is_empty())
+                        {
+                            break;
+                        }
+                    }
+                }
+            }
+            active_workers.fetch_sub(1, Ordering::SeqCst);
+        })
+        .expect("spawn worker")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::provider::LocalProvider;
+    use crate::coordinator::service::Service;
+    use crate::util::json::Json;
+    use std::sync::Arc;
+
+    fn sleepy_handler(ms: u64) -> crate::coordinator::service::Handler {
+        Arc::new(move |payload, _ctx| {
+            std::thread::sleep(Duration::from_millis(ms));
+            Ok(payload.clone())
+        })
+    }
+
+    #[test]
+    fn executes_tasks_and_scales_blocks() {
+        let svc = Service::new();
+        let q = TaskQueue::new();
+        let ep = svc.register_endpoint("e", q.clone());
+        let f = svc.register_function("sleepy", sleepy_handler(5));
+        let metrics = Arc::new(Metrics::new());
+
+        let config = ExecutorConfig {
+            max_blocks: 3,
+            nodes_per_block: 1,
+            workers_per_node: 2,
+            parallelism: 1.0,
+            poll: Duration::from_millis(1),
+        };
+        let exec = HighThroughputExecutor::start(
+            svc.clone(),
+            ep,
+            q.clone(),
+            Box::new(LocalProvider::default()),
+            Arc::new(|_| Ok(())),
+            config,
+            metrics.clone(),
+        );
+
+        let ids: Vec<_> = (0..20)
+            .map(|i| svc.submit(ep, f, Json::num(i as f64)).unwrap())
+            .collect();
+        for id in &ids {
+            let r = svc.wait_result(*id, Duration::from_secs(10)).unwrap();
+            assert!(r.as_f64().is_some());
+        }
+        // queue drained, blocks scaled beyond one
+        assert!(exec.blocks() >= 2, "blocks = {}", exec.blocks());
+        assert!(exec.active_workers() >= 4);
+        exec.shutdown(&q);
+        let snap = metrics.snapshot();
+        assert!(snap.blocks_provisioned >= 2);
+        assert_eq!(snap.workers_started as usize, snap.blocks_provisioned as usize * 2);
+    }
+
+    #[test]
+    fn respects_max_blocks() {
+        let svc = Service::new();
+        let q = TaskQueue::new();
+        let ep = svc.register_endpoint("e", q.clone());
+        let f = svc.register_function("sleepy", sleepy_handler(2));
+        let metrics = Arc::new(Metrics::new());
+        let config = ExecutorConfig {
+            max_blocks: 1,
+            nodes_per_block: 1,
+            workers_per_node: 1,
+            parallelism: 1.0,
+            poll: Duration::from_millis(1),
+        };
+        let exec = HighThroughputExecutor::start(
+            svc.clone(),
+            ep,
+            q.clone(),
+            Box::new(LocalProvider::default()),
+            Arc::new(|_| Ok(())),
+            config,
+            metrics,
+        );
+        let ids: Vec<_> = (0..10)
+            .map(|i| svc.submit(ep, f, Json::num(i as f64)).unwrap())
+            .collect();
+        for id in ids {
+            svc.wait_result(id, Duration::from_secs(10)).unwrap();
+        }
+        assert_eq!(exec.blocks(), 1);
+        exec.shutdown(&q);
+    }
+
+    #[test]
+    fn panicking_handler_fails_task_and_keeps_worker_alive() {
+        let svc = Service::new();
+        let q = TaskQueue::new();
+        let ep = svc.register_endpoint("e", q.clone());
+        let boom = svc.register_function(
+            "boom",
+            Arc::new(|p: &Json, _ctx: &mut _| {
+                if p.as_f64() == Some(13.0) {
+                    panic!("unlucky payload");
+                }
+                Ok(p.clone())
+            }),
+        );
+        let metrics = Arc::new(Metrics::new());
+        let config = ExecutorConfig {
+            max_blocks: 1,
+            nodes_per_block: 1,
+            workers_per_node: 1,
+            parallelism: 1.0,
+            poll: Duration::from_millis(1),
+        };
+        let exec = HighThroughputExecutor::start(
+            svc.clone(),
+            ep,
+            q.clone(),
+            Box::new(LocalProvider::default()),
+            Arc::new(|_| Ok(())),
+            config,
+            metrics,
+        );
+        let bad = svc.submit(ep, boom, Json::num(13.0)).unwrap();
+        let good = svc.submit(ep, boom, Json::num(1.0)).unwrap();
+        let err = svc.wait_result(bad, Duration::from_secs(10)).unwrap_err();
+        assert!(err.contains("panicked"), "{err}");
+        // the same worker must survive and run the next task
+        assert_eq!(
+            svc.wait_result(good, Duration::from_secs(10)).unwrap(),
+            Json::num(1.0)
+        );
+        exec.shutdown(&q);
+    }
+
+    #[test]
+    fn worker_init_failure_keeps_worker_out() {
+        let svc = Service::new();
+        let q = TaskQueue::new();
+        let ep = svc.register_endpoint("e", q.clone());
+        let _f = svc.register_function("sleepy", sleepy_handler(1));
+        let metrics = Arc::new(Metrics::new());
+        let config = ExecutorConfig {
+            max_blocks: 1,
+            nodes_per_block: 1,
+            workers_per_node: 1,
+            parallelism: 1.0,
+            poll: Duration::from_millis(1),
+        };
+        let exec = HighThroughputExecutor::start(
+            svc.clone(),
+            ep,
+            q.clone(),
+            Box::new(LocalProvider::default()),
+            Arc::new(|_| Err("no artifacts".into())),
+            config,
+            metrics,
+        );
+        // a pending task triggers scaling; the worker then fails init
+        let id = svc.submit(ep, _f, Json::Null).unwrap();
+        std::thread::sleep(Duration::from_millis(80));
+        assert_eq!(exec.active_workers(), 0);
+        assert_eq!(
+            svc.task_state(id),
+            Some(crate::coordinator::task::TaskState::Pending)
+        );
+        exec.shutdown(&q);
+    }
+}

@@ -1,0 +1,194 @@
+//! The servable fitting functions — the paper's `prepare_workspace` /
+//! fit-patch functions (Listing 1), as coordinator handlers.
+//!
+//! Task payload (JSON, mirrors what funcX ships to a worker):
+//!
+//! ```text
+//! { "patch": "C1N2_Wh_hbb_300_150",
+//!   "values": [300, 150],
+//!   "workspace": { ...patched HistFactory workspace... },
+//!   "class": "1Lbb" (optional override; auto-picked otherwise) }
+//! ```
+//!
+//! Result: the `PointResult` JSON of `infer::results`. The backend (PJRT
+//! vs native) is selected by which registered function the client targets.
+//!
+//! Worker initialization creates the worker's PJRT engine and lazily
+//! compiles one executable per shape class (cached in the worker context —
+//! the analog of a funcX worker's container with pyhf pre-installed).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::service::{Handler, WorkerContext, WorkerInit};
+use crate::fitter::native::NativeFitter;
+use crate::histfactory::dense::{self, DenseModel};
+use crate::histfactory::spec::Workspace;
+use crate::infer::results::PointResult;
+use crate::runtime::engine::{Compiled, Engine};
+use crate::runtime::manifest::Manifest;
+use crate::util::json::Json;
+
+const ENGINE_KEY: &str = "fitops.engine";
+const MANIFEST_KEY: &str = "fitops.manifest";
+const CACHE_KEY: &str = "fitops.compiled";
+
+struct EngineBox {
+    engine: Engine,
+}
+// SAFETY: the engine lives in a single worker's context and is only touched
+// by that worker thread; WorkerContext requires Send for slot types because
+// the context itself moves into the worker thread at spawn time.
+unsafe impl Send for EngineBox {}
+
+struct CompiledCache {
+    map: HashMap<String, Arc<Compiled>>,
+}
+unsafe impl Send for CompiledCache {}
+
+/// Worker initializer: PJRT engine + manifest + empty executable cache.
+pub fn pjrt_worker_init(artifact_dir: PathBuf) -> WorkerInit {
+    Arc::new(move |ctx: &mut WorkerContext| {
+        let manifest = Manifest::load(&artifact_dir).map_err(|e| e.to_string())?;
+        let engine = Engine::cpu().map_err(|e| e.to_string())?;
+        ctx.insert(ENGINE_KEY, EngineBox { engine });
+        ctx.insert(MANIFEST_KEY, manifest);
+        ctx.insert(CACHE_KEY, CompiledCache { map: HashMap::new() });
+        Ok(())
+    })
+}
+
+/// Build (or fetch) the compiled hypotest executable for a shape class.
+fn compiled_for(ctx: &mut WorkerContext, class_name: &str) -> Result<Arc<Compiled>, String> {
+    if let Some(cache) = ctx.get::<CompiledCache>(CACHE_KEY) {
+        if let Some(c) = cache.map.get(class_name) {
+            return Ok(c.clone());
+        }
+    }
+    let manifest = ctx.get::<Manifest>(MANIFEST_KEY).ok_or("worker missing manifest")?;
+    let entry = manifest
+        .hypotest(class_name)
+        .ok_or_else(|| format!("no hypotest artifact for class '{class_name}'"))?
+        .clone();
+    let dir = manifest.dir.clone();
+    let engine_box = ctx.get::<EngineBox>(ENGINE_KEY).ok_or("worker missing engine")?;
+    let compiled = engine_box.engine.load(&entry, &dir).map_err(|e| e.to_string())?;
+    let compiled = Arc::new(compiled);
+    let cache = ctx.get_mut::<CompiledCache>(CACHE_KEY).ok_or("worker missing cache")?;
+    cache.map.insert(class_name.to_string(), compiled.clone());
+    Ok(compiled)
+}
+
+/// Parse the common payload fields -> (patch name, values, dense model).
+fn parse_payload(payload: &Json, ctx: &WorkerContext) -> Result<(String, Vec<f64>, DenseModel), String> {
+    let patch = payload
+        .get("patch")
+        .and_then(|v| v.as_str())
+        .unwrap_or("unnamed")
+        .to_string();
+    let values: Vec<f64> = payload
+        .get("values")
+        .and_then(|v| v.as_arr())
+        .map(|a| a.iter().filter_map(|x| x.as_f64()).collect())
+        .unwrap_or_default();
+    let ws_json = payload.get("workspace").ok_or("payload missing 'workspace'")?;
+    let ws = Workspace::from_json(ws_json).map_err(|e| e.to_string())?;
+
+    let class = if let Some(name) = payload.get("class").and_then(|v| v.as_str()) {
+        let manifest = ctx.get::<Manifest>(MANIFEST_KEY).ok_or("worker missing manifest")?;
+        manifest
+            .hypotest(name)
+            .ok_or_else(|| format!("unknown shape class '{name}'"))?
+            .class
+            .clone()
+    } else {
+        let manifest = ctx.get::<Manifest>(MANIFEST_KEY).ok_or("worker missing manifest")?;
+        let classes = manifest.classes();
+        dense::pick_class(&ws, &classes).map_err(|e| e.to_string())?.clone()
+    };
+    let model = dense::compile(&ws, &class).map_err(|e| e.to_string())?;
+    Ok((patch, values, model))
+}
+
+/// The PJRT fit handler: patched workspace -> asymptotic CLs via the AOT
+/// artifact. This is the hot path: Python never runs here.
+pub fn fit_patch_handler() -> Handler {
+    Arc::new(|payload: &Json, ctx: &mut WorkerContext| {
+        let (patch, values, model) = parse_payload(payload, ctx)?;
+        let compiled = compiled_for(ctx, &model.class.name)?;
+        let t0 = Instant::now();
+        let out = compiled.hypotest(&model).map_err(|e| e.to_string())?;
+        let fit_seconds = t0.elapsed().as_secs_f64();
+        Ok(out.to_point(&patch, values, fit_seconds).to_json())
+    })
+}
+
+/// The native-Rust fit handler: same statistics via the scalar baseline
+/// fitter (the "traditional single-node implementation" comparator).
+pub fn native_fit_handler() -> Handler {
+    Arc::new(|payload: &Json, ctx: &mut WorkerContext| {
+        let (patch, values, model) = parse_payload(payload, ctx)?;
+        let t0 = Instant::now();
+        let h = NativeFitter::new(&model).hypotest(1.0);
+        let fit_seconds = t0.elapsed().as_secs_f64();
+        Ok(PointResult {
+            patch,
+            values,
+            cls_obs: h.cls_obs,
+            cls_exp: h.cls_exp,
+            qmu: h.qmu,
+            qmu_a: h.qmu_a,
+            mu_hat: h.mu_hat,
+            fit_seconds,
+        }
+        .to_json())
+    })
+}
+
+/// Worker init for the native handler (manifest only, for class selection —
+/// no PJRT engine needed).
+pub fn native_worker_init(artifact_dir: PathBuf) -> WorkerInit {
+    Arc::new(move |ctx: &mut WorkerContext| {
+        let manifest = Manifest::load(&artifact_dir).map_err(|e| e.to_string())?;
+        ctx.insert(MANIFEST_KEY, manifest);
+        Ok(())
+    })
+}
+
+/// Build the task payload for one patch of a pallet.
+pub fn patch_payload(
+    bkg_workspace: &Json,
+    patch: &crate::histfactory::patchset::Patch,
+    class: Option<&str>,
+) -> Result<Json, String> {
+    let patched = patch.apply_to(bkg_workspace).map_err(|e| e.to_string())?;
+    let mut fields = vec![
+        ("patch", Json::str(patch.name.clone())),
+        ("values", Json::arr_f64(&patch.values)),
+        ("workspace", patched),
+    ];
+    if let Some(c) = class {
+        fields.push(("class", Json::str(c)));
+    }
+    Ok(Json::obj(fields))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pallet::library::config_quickstart;
+
+    #[test]
+    fn patch_payload_contains_patched_workspace() {
+        let pallet = crate::pallet::generate(&config_quickstart());
+        let p = &pallet.patchset.patches[0];
+        let payload = patch_payload(&pallet.bkg_workspace, p, Some("quickstart")).unwrap();
+        assert_eq!(payload.get("patch").unwrap().as_str(), Some(p.name.as_str()));
+        assert_eq!(payload.get("class").unwrap().as_str(), Some("quickstart"));
+        let ws = Workspace::from_json(payload.get("workspace").unwrap()).unwrap();
+        // signal added on top of the two background samples
+        assert_eq!(ws.channels[0].samples.len(), 3);
+    }
+}

@@ -1,0 +1,127 @@
+//! Coordinator metrics: counters + latency accumulators, snapshot-able for
+//! the CLI/benches (the paper's §4 calls out separating orchestration
+//! overhead from pure inference time — these counters are that split).
+
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+use crate::util::stats::Accumulator;
+
+#[derive(Debug, Default)]
+struct Inner {
+    submitted: u64,
+    completed: u64,
+    failed: u64,
+    blocks_provisioned: u64,
+    workers_started: u64,
+    wait: Accumulator,
+    service: Accumulator,
+    startup: Accumulator,
+}
+
+/// Thread-safe metrics hub (one per endpoint + one per service).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+/// Point-in-time copy.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub blocks_provisioned: u64,
+    pub workers_started: u64,
+    pub mean_wait_s: f64,
+    pub mean_service_s: f64,
+    pub total_service_s: f64,
+    pub mean_worker_startup_s: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    pub fn task_submitted(&self) {
+        self.inner.lock().unwrap().submitted += 1;
+    }
+
+    pub fn task_finished(&self, ok: bool, wait_s: f64, service_s: f64) {
+        let mut g = self.inner.lock().unwrap();
+        if ok {
+            g.completed += 1;
+        } else {
+            g.failed += 1;
+        }
+        g.wait.push(wait_s);
+        g.service.push(service_s);
+    }
+
+    pub fn block_provisioned(&self) {
+        self.inner.lock().unwrap().blocks_provisioned += 1;
+    }
+
+    pub fn worker_started(&self, startup_s: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.workers_started += 1;
+        g.startup.push(startup_s);
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let g = self.inner.lock().unwrap();
+        Snapshot {
+            submitted: g.submitted,
+            completed: g.completed,
+            failed: g.failed,
+            blocks_provisioned: g.blocks_provisioned,
+            workers_started: g.workers_started,
+            mean_wait_s: if g.wait.count() > 0 { g.wait.mean() } else { 0.0 },
+            mean_service_s: if g.service.count() > 0 { g.service.mean() } else { 0.0 },
+            total_service_s: g.service.mean() * g.service.count() as f64,
+            mean_worker_startup_s: if g.startup.count() > 0 { g.startup.mean() } else { 0.0 },
+        }
+    }
+}
+
+impl Snapshot {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("submitted", Json::num(self.submitted as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("failed", Json::num(self.failed as f64)),
+            ("blocks_provisioned", Json::num(self.blocks_provisioned as f64)),
+            ("workers_started", Json::num(self.workers_started as f64)),
+            ("mean_wait_s", Json::num(self.mean_wait_s)),
+            ("mean_service_s", Json::num(self.mean_service_s)),
+            ("total_service_s", Json::num(self.total_service_s)),
+            ("mean_worker_startup_s", Json::num(self.mean_worker_startup_s)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.task_submitted();
+        m.task_submitted();
+        m.task_finished(true, 0.1, 1.0);
+        m.task_finished(false, 0.3, 2.0);
+        m.block_provisioned();
+        m.worker_started(0.5);
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 2);
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.failed, 1);
+        assert_eq!(s.blocks_provisioned, 1);
+        assert!((s.mean_wait_s - 0.2).abs() < 1e-12);
+        assert!((s.mean_service_s - 1.5).abs() < 1e-12);
+        assert!((s.total_service_s - 3.0).abs() < 1e-12);
+        assert!((s.mean_worker_startup_s - 0.5).abs() < 1e-12);
+    }
+}

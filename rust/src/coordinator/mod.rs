@@ -1,0 +1,28 @@
+//! L3 coordinator — the paper's funcX-analog function-serving fabric.
+//!
+//! * [`service`] — the "cloud": function registry, task store, results;
+//! * [`client`] — the `FuncXClient` SDK (`register_function`/`run`/`get_result`);
+//! * [`endpoint`] + [`executor`] — agent + Parsl-style block/node/worker engine;
+//! * [`provider`] — block acquisition (local, simulated Slurm);
+//! * [`fitops`] — the servable pyhf fit functions (PJRT + native backends);
+//! * [`driver`] — the `fit_analysis.py` scan driver;
+//! * [`serialize`], [`task`], [`metrics`] — wire format, lifecycle, accounting.
+
+pub mod client;
+pub mod driver;
+pub mod endpoint;
+pub mod executor;
+pub mod fitops;
+pub mod metrics;
+pub mod provider;
+pub mod serialize;
+pub mod service;
+pub mod task;
+
+pub use client::FaasClient;
+pub use driver::{run_scan, ScanOptions};
+pub use endpoint::{Endpoint, EndpointConfig};
+pub use executor::ExecutorConfig;
+pub use provider::{LocalProvider, Provider, SimSlurmProvider};
+pub use service::{Service, ServiceHandle, WorkerContext};
+pub use task::{EndpointId, FunctionId, TaskId, TaskState};

@@ -1,0 +1,132 @@
+//! Execution providers: how an endpoint acquires compute blocks.
+//!
+//! funcX (via Parsl) supports Slurm/HTCondor/Torque/Kubernetes providers;
+//! the *block* — `nodes_per_block` nodes obtained in one scheduler request —
+//! is the unit of acquisition. We model the provider as the source of block
+//! grants with realistic acquisition latency:
+//!
+//! * [`LocalProvider`] — immediate grants (laptop / CI runs);
+//! * [`SimSlurmProvider`] — batch-queue latency sampled from a configurable
+//!   distribution (RIVER replay; DESIGN.md §4).
+
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// A block grant: the endpoint may start `nodes` nodes after `latency`.
+#[derive(Debug, Clone)]
+pub struct BlockGrant {
+    pub block_index: usize,
+    pub nodes: usize,
+    /// queue + boot latency before workers may start
+    pub latency: Duration,
+}
+
+/// Source of compute blocks.
+pub trait Provider: Send {
+    fn name(&self) -> &'static str;
+
+    /// Request one block of `nodes` nodes. Returns the grant (with its
+    /// acquisition latency) or an error when the resource is exhausted.
+    fn request_block(&mut self, block_index: usize, nodes: usize) -> Result<BlockGrant, String>;
+}
+
+/// Immediate local execution (funcX's LocalProvider).
+#[derive(Debug, Default)]
+pub struct LocalProvider {
+    /// optional fixed startup latency (e.g. to emulate container pull)
+    pub startup: Duration,
+}
+
+impl Provider for LocalProvider {
+    fn name(&self) -> &'static str {
+        "local"
+    }
+
+    fn request_block(&mut self, block_index: usize, nodes: usize) -> Result<BlockGrant, String> {
+        Ok(BlockGrant { block_index, nodes, latency: self.startup })
+    }
+}
+
+/// Simulated Slurm batch provider: block acquisition latency is
+/// `base + Exp(1/mean_jitter)`, truncated at `max_latency`, with an optional
+/// hard cap on grantable blocks (cluster allocation limit).
+pub struct SimSlurmProvider {
+    pub base: Duration,
+    pub mean_jitter: Duration,
+    pub max_latency: Duration,
+    pub max_blocks: Option<usize>,
+    granted: usize,
+    rng: Rng,
+}
+
+impl SimSlurmProvider {
+    pub fn new(base: Duration, mean_jitter: Duration, seed: u64) -> Self {
+        SimSlurmProvider {
+            base,
+            mean_jitter,
+            max_latency: Duration::from_secs(600),
+            max_blocks: None,
+            granted: 0,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// RIVER-like queue behavior scaled for laptop runs: tens of ms.
+    pub fn laptop_scale(seed: u64) -> Self {
+        SimSlurmProvider::new(Duration::from_millis(30), Duration::from_millis(15), seed)
+    }
+}
+
+impl Provider for SimSlurmProvider {
+    fn name(&self) -> &'static str {
+        "sim-slurm"
+    }
+
+    fn request_block(&mut self, block_index: usize, nodes: usize) -> Result<BlockGrant, String> {
+        if let Some(max) = self.max_blocks {
+            if self.granted >= max {
+                return Err(format!("slurm allocation exhausted ({max} blocks)"));
+            }
+        }
+        self.granted += 1;
+        let jitter = self.rng.exponential(1.0 / self.mean_jitter.as_secs_f64().max(1e-9));
+        let latency = (self.base.as_secs_f64() + jitter).min(self.max_latency.as_secs_f64());
+        Ok(BlockGrant { block_index, nodes, latency: Duration::from_secs_f64(latency) })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_grants_are_immediate() {
+        let mut p = LocalProvider::default();
+        let g = p.request_block(0, 2).unwrap();
+        assert_eq!(g.nodes, 2);
+        assert_eq!(g.latency, Duration::ZERO);
+    }
+
+    #[test]
+    fn sim_slurm_latency_in_range_and_deterministic() {
+        let mut a = SimSlurmProvider::laptop_scale(1);
+        let mut b = SimSlurmProvider::laptop_scale(1);
+        for i in 0..10 {
+            let ga = a.request_block(i, 1).unwrap();
+            let gb = b.request_block(i, 1).unwrap();
+            assert_eq!(ga.latency, gb.latency);
+            assert!(ga.latency >= Duration::from_millis(30));
+            assert!(ga.latency <= Duration::from_secs(600));
+        }
+    }
+
+    #[test]
+    fn sim_slurm_respects_block_cap() {
+        let mut p = SimSlurmProvider::laptop_scale(2);
+        p.max_blocks = Some(2);
+        assert!(p.request_block(0, 1).is_ok());
+        assert!(p.request_block(1, 1).is_ok());
+        assert!(p.request_block(2, 1).is_err());
+    }
+}

@@ -1,0 +1,100 @@
+//! Payload codec: the wire format between client, service and workers.
+//!
+//! funcX serializes python callables/arguments and ships them through its
+//! cloud service; our analog frames JSON documents with a magic tag,
+//! format version and FNV-1a checksum (cheap corruption detection on the
+//! socket path of the faas_service example).
+
+use crate::util::json::{self, Json};
+
+const MAGIC: &[u8; 4] = b"FXP1";
+
+/// FNV-1a 64-bit digest.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Encode a JSON payload into a framed buffer.
+pub fn encode(payload: &Json) -> Vec<u8> {
+    let body = json::to_string(payload).into_bytes();
+    let digest = fnv1a(&body);
+    let mut out = Vec::with_capacity(body.len() + 20);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(&digest.to_le_bytes());
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Decode a framed buffer back to JSON, verifying magic, length and digest.
+pub fn decode(buf: &[u8]) -> Result<Json, String> {
+    if buf.len() < 16 {
+        return Err("frame too short".into());
+    }
+    if &buf[..4] != MAGIC {
+        return Err(format!("bad magic {:?}", &buf[..4]));
+    }
+    let len = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
+    let digest = u64::from_le_bytes(buf[8..16].try_into().unwrap());
+    let body = buf.get(16..16 + len).ok_or("truncated frame")?;
+    if fnv1a(body) != digest {
+        return Err("checksum mismatch".into());
+    }
+    let text = std::str::from_utf8(body).map_err(|e| format!("bad utf8: {e}"))?;
+    json::parse(text).map_err(|e| e.to_string())
+}
+
+/// Total frame length for a buffer beginning with a frame header, if enough
+/// bytes are present to know it.
+pub fn frame_len(buf: &[u8]) -> Option<usize> {
+    if buf.len() < 8 || &buf[..4] != MAGIC {
+        return None;
+    }
+    let len = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
+    Some(16 + len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let v = json::parse(r#"{"task": "fit", "patch": "C1N2_Wh_hbb_300_150", "n": [1, 2.5]}"#)
+            .unwrap();
+        let enc = encode(&v);
+        assert_eq!(frame_len(&enc), Some(enc.len()));
+        let dec = decode(&enc).unwrap();
+        assert_eq!(dec, v);
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let mut enc = encode(&Json::str("hello"));
+        let n = enc.len();
+        enc[n - 2] ^= 0xFF;
+        assert!(decode(&enc).unwrap_err().contains("checksum"));
+    }
+
+    #[test]
+    fn detects_bad_magic_and_truncation() {
+        let enc = encode(&Json::num(1.0));
+        assert!(decode(&enc[..8]).is_err());
+        let mut bad = enc.clone();
+        bad[0] = b'X';
+        assert!(decode(&bad).unwrap_err().contains("magic"));
+        assert!(decode(&enc[..enc.len() - 1]).unwrap_err().contains("truncated"));
+    }
+
+    #[test]
+    fn fnv_known_vector() {
+        // FNV-1a("") = offset basis
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+        assert_ne!(fnv1a(b"a"), fnv1a(b"b"));
+    }
+}

@@ -1,0 +1,391 @@
+//! The funcX "cloud" service: function registry, task store, endpoint
+//! registry and result delivery.
+//!
+//! Mirrors the funcX web-service API surface the paper's Listing 1 exercises
+//! (`register_function` / `run` / `get_result`) as an in-process,
+//! thread-safe hub. Handlers are JSON -> JSON functions with access to a
+//! worker-local context (where fit workers keep their compiled PJRT
+//! executables between tasks).
+
+use std::any::Any;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::task::{EndpointId, FunctionId, TaskId, TaskOutcome, TaskRecord, TaskState};
+use crate::util::json::Json;
+
+/// Worker-local state: initialized once per worker by the endpoint's
+/// `WorkerInit`, then handed to every handler invocation on that worker.
+pub struct WorkerContext {
+    pub worker_name: String,
+    slots: HashMap<String, Box<dyn Any + Send>>,
+}
+
+impl WorkerContext {
+    pub fn new(worker_name: impl Into<String>) -> Self {
+        WorkerContext { worker_name: worker_name.into(), slots: HashMap::new() }
+    }
+
+    pub fn insert<T: Any + Send>(&mut self, key: &str, value: T) {
+        self.slots.insert(key.to_string(), Box::new(value));
+    }
+
+    pub fn get<T: Any + Send>(&self, key: &str) -> Option<&T> {
+        self.slots.get(key).and_then(|b| b.downcast_ref::<T>())
+    }
+
+    pub fn get_mut<T: Any + Send>(&mut self, key: &str) -> Option<&mut T> {
+        self.slots.get_mut(key).and_then(|b| b.downcast_mut::<T>())
+    }
+}
+
+/// A servable function.
+pub type Handler = Arc<dyn Fn(&Json, &mut WorkerContext) -> Result<Json, String> + Send + Sync>;
+/// Per-worker initialization (compile artifacts, load pallets, ...).
+pub type WorkerInit = Arc<dyn Fn(&mut WorkerContext) -> Result<(), String> + Send + Sync>;
+
+/// FIFO task queue shared between the service and one endpoint's workers
+/// (the funcX "interchange").
+pub struct TaskQueue {
+    q: Mutex<VecDeque<TaskId>>,
+    cvar: Condvar,
+    closed: AtomicBool,
+}
+
+impl TaskQueue {
+    pub fn new() -> Arc<TaskQueue> {
+        Arc::new(TaskQueue { q: Mutex::new(VecDeque::new()), cvar: Condvar::new(), closed: AtomicBool::new(false) })
+    }
+
+    pub fn push(&self, id: TaskId) {
+        self.q.lock().unwrap().push_back(id);
+        self.cvar.notify_one();
+    }
+
+    /// Blocking pop with timeout; None on timeout or closed-and-empty.
+    pub fn pop(&self, timeout: Duration) -> Option<TaskId> {
+        let mut g = self.q.lock().unwrap();
+        let deadline = Instant::now() + timeout;
+        loop {
+            if let Some(id) = g.pop_front() {
+                return Some(id);
+            }
+            if self.closed.load(Ordering::SeqCst) {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (gg, _) = self.cvar.wait_timeout(g, deadline - now).unwrap();
+            g = gg;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::SeqCst);
+        self.cvar.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::SeqCst)
+    }
+}
+
+struct FunctionEntry {
+    name: String,
+    handler: Handler,
+}
+
+#[derive(Default)]
+struct State {
+    functions: HashMap<FunctionId, FunctionEntry>,
+    tasks: HashMap<TaskId, TaskRecord>,
+    endpoints: HashMap<EndpointId, Arc<TaskQueue>>,
+    endpoint_names: HashMap<EndpointId, String>,
+    running: HashMap<EndpointId, usize>,
+    next_function: FunctionId,
+    next_task: TaskId,
+    next_endpoint: EndpointId,
+}
+
+/// The service hub. Clone the `Arc` freely; everything inside is locked.
+pub struct Service {
+    state: Mutex<State>,
+    results: Condvar,
+    pub metrics: Metrics,
+}
+
+pub type ServiceHandle = Arc<Service>;
+
+impl Service {
+    pub fn new() -> ServiceHandle {
+        Arc::new(Service { state: Mutex::new(State::default()), results: Condvar::new(), metrics: Metrics::new() })
+    }
+
+    // -- registry ---------------------------------------------------------
+
+    pub fn register_function(&self, name: &str, handler: Handler) -> FunctionId {
+        let mut g = self.state.lock().unwrap();
+        let id = g.next_function;
+        g.next_function += 1;
+        g.functions.insert(id, FunctionEntry { name: name.to_string(), handler });
+        id
+    }
+
+    pub fn function_name(&self, id: FunctionId) -> Option<String> {
+        self.state.lock().unwrap().functions.get(&id).map(|f| f.name.clone())
+    }
+
+    pub fn register_endpoint(&self, name: &str, queue: Arc<TaskQueue>) -> EndpointId {
+        let mut g = self.state.lock().unwrap();
+        let id = g.next_endpoint;
+        g.next_endpoint += 1;
+        g.endpoints.insert(id, queue);
+        g.endpoint_names.insert(id, name.to_string());
+        g.running.insert(id, 0);
+        id
+    }
+
+    pub fn deregister_endpoint(&self, id: EndpointId) {
+        let mut g = self.state.lock().unwrap();
+        if let Some(q) = g.endpoints.remove(&id) {
+            q.close();
+        }
+    }
+
+    // -- client side ------------------------------------------------------
+
+    /// Submit a task; queues it on the endpoint's interchange.
+    pub fn submit(
+        &self,
+        endpoint: EndpointId,
+        function: FunctionId,
+        payload: Json,
+    ) -> Result<TaskId, String> {
+        let mut g = self.state.lock().unwrap();
+        if !g.functions.contains_key(&function) {
+            return Err(format!("unknown function id {function}"));
+        }
+        let queue = g
+            .endpoints
+            .get(&endpoint)
+            .ok_or_else(|| format!("unknown endpoint id {endpoint}"))?
+            .clone();
+        let id = g.next_task;
+        g.next_task += 1;
+        let mut rec = TaskRecord::new(id, function, endpoint, payload);
+        rec.state = TaskState::Pending;
+        g.tasks.insert(id, rec);
+        drop(g);
+        self.metrics.task_submitted();
+        queue.push(id);
+        Ok(id)
+    }
+
+    pub fn task_state(&self, id: TaskId) -> Option<TaskState> {
+        self.state.lock().unwrap().tasks.get(&id).map(|t| t.state)
+    }
+
+    /// Non-blocking result fetch: None while the task is not terminal
+    /// (funcX's `get_result` raises while pending; we return None).
+    pub fn try_result(&self, id: TaskId) -> Option<Result<Json, String>> {
+        let g = self.state.lock().unwrap();
+        let t = g.tasks.get(&id)?;
+        match (&t.state, &t.outcome) {
+            (TaskState::Success, Some(TaskOutcome::Ok(v))) => Some(Ok(v.clone())),
+            (TaskState::Failed, Some(TaskOutcome::Err(e))) => Some(Err(e.clone())),
+            (TaskState::Failed, None) => Some(Err("task failed".into())),
+            _ => None,
+        }
+    }
+
+    /// Blocking result fetch with timeout.
+    pub fn wait_result(&self, id: TaskId, timeout: Duration) -> Result<Json, String> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.state.lock().unwrap();
+        loop {
+            match g.tasks.get(&id) {
+                None => return Err(format!("unknown task id {id}")),
+                Some(t) if t.state.is_terminal() => {
+                    return match &t.outcome {
+                        Some(TaskOutcome::Ok(v)) => Ok(v.clone()),
+                        Some(TaskOutcome::Err(e)) => Err(e.clone()),
+                        None => Err("task failed".into()),
+                    };
+                }
+                _ => {}
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(format!("timeout waiting for task {id}"));
+            }
+            let (gg, _) = self.results.wait_timeout(g, deadline - now).unwrap();
+            g = gg;
+        }
+    }
+
+    /// Tasks not yet finished on an endpoint (queued + running).
+    pub fn outstanding(&self, endpoint: EndpointId) -> usize {
+        let g = self.state.lock().unwrap();
+        let queued = g.endpoints.get(&endpoint).map(|q| q.len()).unwrap_or(0);
+        let running = g.running.get(&endpoint).copied().unwrap_or(0);
+        queued + running
+    }
+
+    // -- worker side ------------------------------------------------------
+
+    /// Claim a queued task for execution: marks Running, returns the handler
+    /// and payload.
+    pub fn claim(&self, id: TaskId, worker: &str) -> Option<(Handler, Json)> {
+        let mut g = self.state.lock().unwrap();
+        let (handler, payload, endpoint) = {
+            let function = {
+                let t = g.tasks.get_mut(&id)?;
+                if t.state != TaskState::Pending {
+                    return None;
+                }
+                t.state = TaskState::Running;
+                t.started_at = Some(Instant::now());
+                t.worker = Some(worker.to_string());
+                t.function
+            };
+            let handler = g.functions.get(&function)?.handler.clone();
+            let t = g.tasks.get(&id).unwrap();
+            (handler, t.payload.clone(), t.endpoint)
+        };
+        *g.running.entry(endpoint).or_insert(0) += 1;
+        Some((handler, payload))
+    }
+
+    /// Record a task outcome and wake waiters.
+    pub fn complete(&self, id: TaskId, outcome: Result<Json, String>) {
+        let mut g = self.state.lock().unwrap();
+        let (ok, wait_s, service_s) = {
+            let Some(t) = g.tasks.get_mut(&id) else { return };
+            t.finished_at = Some(Instant::now());
+            let ok = outcome.is_ok();
+            t.state = if ok { TaskState::Success } else { TaskState::Failed };
+            t.outcome = Some(match outcome {
+                Ok(v) => TaskOutcome::Ok(v),
+                Err(e) => TaskOutcome::Err(e),
+            });
+            (ok, t.wait_seconds().unwrap_or(0.0), t.service_seconds().unwrap_or(0.0))
+        };
+        let endpoint = g.tasks.get(&id).map(|t| t.endpoint);
+        if let Some(ep) = endpoint {
+            if let Some(r) = g.running.get_mut(&ep) {
+                *r = r.saturating_sub(1);
+            }
+        }
+        drop(g);
+        self.metrics.task_finished(ok, wait_s, service_s);
+        self.results.notify_all();
+    }
+
+    /// Per-task timing export (patch name lookups for Listing-2-style logs).
+    pub fn task_timing(&self, id: TaskId) -> Option<(f64, f64)> {
+        let g = self.state.lock().unwrap();
+        let t = g.tasks.get(&id)?;
+        Some((t.wait_seconds()?, t.service_seconds()?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo_handler() -> Handler {
+        Arc::new(|payload, _ctx| Ok(payload.clone()))
+    }
+
+    #[test]
+    fn register_and_submit_flow() {
+        let svc = Service::new();
+        let q = TaskQueue::new();
+        let ep = svc.register_endpoint("test-ep", q.clone());
+        let f = svc.register_function("echo", echo_handler());
+        let id = svc.submit(ep, f, Json::num(7.0)).unwrap();
+        assert_eq!(svc.task_state(id), Some(TaskState::Pending));
+        assert!(svc.try_result(id).is_none());
+        assert_eq!(svc.outstanding(ep), 1);
+
+        // worker loop, manually
+        let tid = q.pop(Duration::from_millis(10)).unwrap();
+        let (h, p) = svc.claim(tid, "w0").unwrap();
+        assert_eq!(svc.task_state(id), Some(TaskState::Running));
+        let mut ctx = WorkerContext::new("w0");
+        let out = h(&p, &mut ctx);
+        svc.complete(tid, out);
+
+        assert_eq!(svc.task_state(id), Some(TaskState::Success));
+        assert_eq!(svc.try_result(id).unwrap().unwrap(), Json::num(7.0));
+        assert_eq!(svc.outstanding(ep), 0);
+    }
+
+    #[test]
+    fn submit_unknown_ids_fail() {
+        let svc = Service::new();
+        let q = TaskQueue::new();
+        let ep = svc.register_endpoint("e", q);
+        assert!(svc.submit(ep, 999, Json::Null).is_err());
+        assert!(svc.submit(999, 0, Json::Null).is_err());
+    }
+
+    #[test]
+    fn failed_task_reports_error() {
+        let svc = Service::new();
+        let q = TaskQueue::new();
+        let ep = svc.register_endpoint("e", q.clone());
+        let f = svc.register_function("boom", Arc::new(|_, _| Err("kaput".into())));
+        let id = svc.submit(ep, f, Json::Null).unwrap();
+        let tid = q.pop(Duration::from_millis(10)).unwrap();
+        let (h, p) = svc.claim(tid, "w0").unwrap();
+        let mut ctx = WorkerContext::new("w0");
+        svc.complete(tid, h(&p, &mut ctx));
+        assert_eq!(svc.task_state(id), Some(TaskState::Failed));
+        assert_eq!(svc.try_result(id).unwrap().unwrap_err(), "kaput");
+    }
+
+    #[test]
+    fn wait_result_times_out() {
+        let svc = Service::new();
+        let q = TaskQueue::new();
+        let ep = svc.register_endpoint("e", q);
+        let f = svc.register_function("echo", echo_handler());
+        let id = svc.submit(ep, f, Json::Null).unwrap();
+        let err = svc.wait_result(id, Duration::from_millis(20)).unwrap_err();
+        assert!(err.contains("timeout"));
+    }
+
+    #[test]
+    fn queue_close_unblocks_pop() {
+        let q = TaskQueue::new();
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || q2.pop(Duration::from_secs(10)));
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert_eq!(t.join().unwrap(), None);
+    }
+
+    #[test]
+    fn worker_context_typed_slots() {
+        let mut ctx = WorkerContext::new("w");
+        ctx.insert("counter", 41u64);
+        *ctx.get_mut::<u64>("counter").unwrap() += 1;
+        assert_eq!(ctx.get::<u64>("counter"), Some(&42));
+        assert!(ctx.get::<String>("counter").is_none());
+        assert!(ctx.get::<u64>("missing").is_none());
+    }
+}

@@ -1,0 +1,118 @@
+//! Task model: the unit of work a funcX client submits and a worker runs.
+//!
+//! Payloads and results are JSON documents — the Rust analog of funcX's
+//! serialized python arguments — so tasks cross threads and (in the
+//! service example) sockets uniformly.
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+pub type TaskId = u64;
+pub type FunctionId = u64;
+pub type EndpointId = u64;
+
+/// funcX task lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskState {
+    /// accepted by the service, waiting for endpoint capacity
+    WaitingForNodes,
+    /// handed to an endpoint's interchange queue
+    Pending,
+    /// executing on a worker
+    Running,
+    Success,
+    Failed,
+}
+
+impl TaskState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TaskState::WaitingForNodes => "waiting-for-nodes",
+            TaskState::Pending => "pending",
+            TaskState::Running => "running",
+            TaskState::Success => "success",
+            TaskState::Failed => "failed",
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, TaskState::Success | TaskState::Failed)
+    }
+}
+
+/// Execution outcome stored by the service.
+#[derive(Debug, Clone)]
+pub enum TaskOutcome {
+    Ok(Json),
+    Err(String),
+}
+
+/// One task record in the service store.
+#[derive(Debug)]
+pub struct TaskRecord {
+    pub id: TaskId,
+    pub function: FunctionId,
+    pub endpoint: EndpointId,
+    pub payload: Json,
+    pub state: TaskState,
+    pub submitted_at: Instant,
+    pub started_at: Option<Instant>,
+    pub finished_at: Option<Instant>,
+    pub outcome: Option<TaskOutcome>,
+    /// which worker ran it, for metrics ("block-b/node-n/worker-w")
+    pub worker: Option<String>,
+}
+
+impl TaskRecord {
+    pub fn new(id: TaskId, function: FunctionId, endpoint: EndpointId, payload: Json) -> Self {
+        TaskRecord {
+            id,
+            function,
+            endpoint,
+            payload,
+            state: TaskState::WaitingForNodes,
+            submitted_at: Instant::now(),
+            started_at: None,
+            finished_at: None,
+            outcome: None,
+            worker: None,
+        }
+    }
+
+    /// Queue wait: submission -> execution start.
+    pub fn wait_seconds(&self) -> Option<f64> {
+        self.started_at.map(|s| (s - self.submitted_at).as_secs_f64())
+    }
+
+    /// Service time: execution start -> finish.
+    pub fn service_seconds(&self) -> Option<f64> {
+        match (self.started_at, self.finished_at) {
+            (Some(s), Some(f)) => Some((f - s).as_secs_f64()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_strings() {
+        assert_eq!(TaskState::WaitingForNodes.as_str(), "waiting-for-nodes");
+        assert!(!TaskState::Running.is_terminal());
+        assert!(TaskState::Success.is_terminal());
+        assert!(TaskState::Failed.is_terminal());
+    }
+
+    #[test]
+    fn timings() {
+        let mut t = TaskRecord::new(1, 2, 3, Json::Null);
+        assert!(t.wait_seconds().is_none());
+        t.started_at = Some(t.submitted_at + std::time::Duration::from_millis(100));
+        t.finished_at = Some(t.submitted_at + std::time::Duration::from_millis(350));
+        assert!((t.wait_seconds().unwrap() - 0.1).abs() < 1e-9);
+        assert!((t.service_seconds().unwrap() - 0.25).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,8 @@
+//! Fitters over the dense model: the native-Rust scalar baseline (also the
+//! numerics cross-check) and the PJRT-artifact fitter (see `runtime`).
+
+pub mod native;
+pub mod toys;
+
+pub use native::{Centers, FitResult, Hypotest, NativeFitter};
+pub use toys::{hypotest_toys, ToyResult};

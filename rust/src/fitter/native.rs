@@ -1,0 +1,675 @@
+//! Native-Rust reference fitter over the dense model.
+//!
+//! Scalar f64 implementation of exactly the math in
+//! ``python/compile/kernels/ref.py`` + ``model.py``: expected rates with
+//! analytic Jacobian, Poisson+constraint NLL, damped Fisher scoring with a
+//! Cholesky solve, and the qmu-tilde asymptotic hypotest.
+//!
+//! Two roles (DESIGN.md K1/S2):
+//! * the **"traditional single-node" baseline** the paper contrasts pyhf's
+//!   tensorized backends against;
+//! * an independent numerics **cross-check** of the AOT/PJRT path (both must
+//!   find the same optima for the same tensors).
+
+use crate::histfactory::dense::DenseModel;
+
+pub const EPS_RATE: f64 = 1e-9;
+pub const FREE_LO: f64 = 1e-10;
+pub const GAMMA_LO: f64 = 1e-6;
+pub const GAMMA_HI: f64 = 10.0;
+pub const ALPHA_BOUND: f64 = 8.0;
+
+/// Constraint centers (shifted for Asimov fits).
+#[derive(Debug, Clone)]
+pub struct Centers {
+    pub alpha: Vec<f64>,
+    pub gamma: Vec<f64>,
+}
+
+impl Centers {
+    pub fn nominal(m: &DenseModel) -> Centers {
+        Centers { alpha: vec![0.0; m.class.n_alpha], gamma: vec![1.0; m.class.n_bins] }
+    }
+}
+
+/// Result of one minimization.
+#[derive(Debug, Clone)]
+pub struct FitResult {
+    pub theta: Vec<f64>,
+    pub nll: f64,
+    pub accepted_steps: usize,
+    pub grad_norm: f64,
+}
+
+/// Result of a full asymptotic hypotest.
+#[derive(Debug, Clone)]
+pub struct Hypotest {
+    pub cls_obs: f64,
+    /// N sigma in (-2, -1, 0, 1, 2)
+    pub cls_exp: [f64; 5],
+    pub qmu: f64,
+    pub qmu_a: f64,
+    pub mu_hat: f64,
+    pub nll_free: f64,
+    pub nll_fixed: f64,
+}
+
+/// Abramowitz & Stegun 7.1.26 erf — identical polynomial to the one baked
+/// into the HLO artifacts, so both paths share CLs rounding behavior.
+pub fn erf_approx(x: f64) -> f64 {
+    let t = 1.0 / (1.0 + 0.3275911 * x.abs());
+    let poly = t
+        * (0.254829592
+            + t * (-0.284496736 + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429))));
+    x.signum() * (1.0 - poly * (-x * x).exp())
+}
+
+pub fn norm_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf_approx(x / std::f64::consts::SQRT_2))
+}
+
+/// The fitter: borrows a dense model and the observed data vector.
+pub struct NativeFitter<'a> {
+    pub m: &'a DenseModel,
+    pub max_newton: usize,
+}
+
+impl<'a> NativeFitter<'a> {
+    pub fn new(m: &'a DenseModel) -> Self {
+        NativeFitter { m, max_newton: m.class.max_newton.max(32) }
+    }
+
+    fn dims(&self) -> (usize, usize, usize, usize, usize) {
+        let c = &self.m.class;
+        (c.n_samples, c.n_alpha, c.n_bins, c.n_free, c.n_params())
+    }
+
+    /// Effective parameters after masking (phi, alpha, gamma).
+    fn effective(&self, theta: &[f64]) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+        let (_, a_, b_, f_, _) = self.dims();
+        let m = self.m;
+        let phi: Vec<f64> = (0..f_)
+            .map(|f| if m.free_mask[f] > 0.0 { theta[f] } else { 1.0 })
+            .collect();
+        let alpha: Vec<f64> = (0..a_).map(|a| theta[f_ + a] * m.alpha_mask[a]).collect();
+        let gamma: Vec<f64> = (0..b_)
+            .map(|b| if m.ctype[b] > 0.0 { theta[f_ + a_ + b] } else { 1.0 })
+            .collect();
+        (phi, alpha, gamma)
+    }
+
+    /// Expected rates nu[B] and Jacobian jac[P*B] (row-major [p][b]).
+    pub fn expected_jac(&self, theta: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        let (s_, a_, b_, f_, p_) = self.dims();
+        let m = self.m;
+        let (phi, alpha, gamma) = self.effective(theta);
+
+        let mut nu = vec![0.0; b_];
+        let mut jac = vec![0.0; p_ * b_];
+
+        // per-row multiplicative norm factor and its phi-derivative pieces
+        for s in 0..s_ {
+            let mut lnmult = 0.0;
+            for a in 0..a_ {
+                let al = alpha[a];
+                lnmult += if al >= 0.0 {
+                    al * m.norm_lnup[s * a_ + a]
+                } else {
+                    -al * m.norm_lndn[s * a_ + a]
+                };
+            }
+            for f in 0..f_ {
+                let e = m.free_map[s * f_ + f];
+                if e != 0.0 {
+                    lnmult += e * phi[f].max(FREE_LO).ln();
+                }
+            }
+            let mult = lnmult.exp();
+
+            for b in 0..b_ {
+                // additive interpolation
+                let mut delta = 0.0;
+                for a in 0..a_ {
+                    let al = alpha[a];
+                    if al == 0.0 {
+                        continue;
+                    }
+                    let d = if al >= 0.0 {
+                        m.histo_up[(s * a_ + a) * b_ + b]
+                    } else {
+                        m.histo_dn[(s * a_ + a) * b_ + b]
+                    };
+                    delta += al * d;
+                }
+                let raw = m.nominal[s * b_ + b] + delta;
+                let base = raw.max(EPS_RATE);
+                let unclipped = raw > EPS_RATE;
+
+                let gmask = m.gamma_mask[s * b_ + b];
+                let gam = 1.0 + gmask * (gamma[b] - 1.0);
+                let nu_sb = base * mult * gam;
+                nu[b] += nu_sb;
+
+                // free rows
+                for f in 0..f_ {
+                    let e = m.free_map[s * f_ + f];
+                    if e != 0.0 && m.free_mask[f] > 0.0 {
+                        jac[f * b_ + b] += nu_sb * e / phi[f].max(FREE_LO);
+                    }
+                }
+                // alpha rows
+                for a in 0..a_ {
+                    if m.alpha_mask[a] == 0.0 {
+                        continue;
+                    }
+                    let al = alpha[a];
+                    let dside = if al >= 0.0 {
+                        m.histo_up[(s * a_ + a) * b_ + b]
+                    } else {
+                        m.histo_dn[(s * a_ + a) * b_ + b]
+                    };
+                    let dlnf = if al >= 0.0 {
+                        m.norm_lnup[s * a_ + a]
+                    } else {
+                        -m.norm_lndn[s * a_ + a]
+                    };
+                    let add = if unclipped { dside * mult * gam } else { 0.0 };
+                    jac[(f_ + a) * b_ + b] += add + nu_sb * dlnf;
+                }
+                // gamma row (diagonal in b)
+                if m.ctype[b] > 0.0 && gmask > 0.0 {
+                    jac[(f_ + a_ + b) * b_ + b] += nu_sb * gmask / gam;
+                }
+            }
+        }
+        (nu, jac)
+    }
+
+    /// Full NLL for `data` at `theta` with constraint `centers`.
+    pub fn nll(&self, theta: &[f64], data: &[f64], centers: &Centers) -> f64 {
+        let (_, a_, b_, f_, _) = self.dims();
+        let m = self.m;
+        let (nu, _) = self.expected_jac(theta);
+        let (_, alpha, gamma) = self.effective(theta);
+
+        let mut out = 0.0;
+        for b in 0..b_ {
+            if m.bin_mask[b] == 0.0 {
+                continue;
+            }
+            let v = nu[b].max(EPS_RATE);
+            out += v - data[b] * v.ln();
+        }
+        for a in 0..a_ {
+            out += 0.5 * m.alpha_mask[a] * (alpha[a] - centers.alpha[a]).powi(2);
+        }
+        for b in 0..b_ {
+            match m.ctype[b] as i64 {
+                1 => out += 0.5 * m.cscale[b] * (gamma[b] - centers.gamma[b]).powi(2),
+                2 => {
+                    let taug = (m.cscale[b] * gamma[b]).max(1e-300);
+                    let aux = m.cscale[b] * centers.gamma[b];
+                    out += taug - aux * taug.ln();
+                }
+                _ => {}
+            }
+        }
+        let _ = f_;
+        out
+    }
+
+    /// Gradient + expected-information (Fisher) matrix with fixed-parameter
+    /// pinning (zero grad row, identity Hessian row).
+    pub fn grad_fisher(
+        &self,
+        theta: &[f64],
+        data: &[f64],
+        centers: &Centers,
+        fixed: &[bool],
+    ) -> (Vec<f64>, Vec<f64>) {
+        let (_, a_, b_, f_, p_) = self.dims();
+        let m = self.m;
+        let (nu, jac) = self.expected_jac(theta);
+        let (_, alpha, gamma) = self.effective(theta);
+
+        let mut grad = vec![0.0; p_];
+        let mut fisher = vec![0.0; p_ * p_];
+
+        let mut resid = vec![0.0; b_];
+        let mut w = vec![0.0; b_];
+        for b in 0..b_ {
+            if m.bin_mask[b] == 0.0 {
+                continue;
+            }
+            let v = nu[b].max(EPS_RATE);
+            resid[b] = 1.0 - data[b] / v;
+            w[b] = 1.0 / v;
+        }
+
+        for p in 0..p_ {
+            let rowp = &jac[p * b_..(p + 1) * b_];
+            let mut g = 0.0;
+            for b in 0..b_ {
+                g += rowp[b] * resid[b];
+            }
+            grad[p] = g;
+            for q in p..p_ {
+                let rowq = &jac[q * b_..(q + 1) * b_];
+                let mut h = 0.0;
+                for b in 0..b_ {
+                    h += rowp[b] * w[b] * rowq[b];
+                }
+                fisher[p * p_ + q] = h;
+                fisher[q * p_ + p] = h;
+            }
+        }
+
+        // constraints
+        for a in 0..a_ {
+            grad[f_ + a] += m.alpha_mask[a] * (alpha[a] - centers.alpha[a]);
+            fisher[(f_ + a) * p_ + f_ + a] += m.alpha_mask[a];
+        }
+        for b in 0..b_ {
+            let i = f_ + a_ + b;
+            match m.ctype[b] as i64 {
+                1 => {
+                    grad[i] += m.cscale[b] * (gamma[b] - centers.gamma[b]);
+                    fisher[i * p_ + i] += m.cscale[b];
+                }
+                2 => {
+                    let aux = m.cscale[b] * centers.gamma[b];
+                    let gs = gamma[b].max(GAMMA_LO);
+                    grad[i] += m.cscale[b] - aux / gs;
+                    fisher[i * p_ + i] += aux / (gs * gs);
+                }
+                _ => {}
+            }
+        }
+
+        // pin fixed parameters
+        for p in 0..p_ {
+            if fixed[p] {
+                grad[p] = 0.0;
+                for q in 0..p_ {
+                    fisher[p * p_ + q] = 0.0;
+                    fisher[q * p_ + p] = 0.0;
+                }
+                fisher[p * p_ + p] = 1.0;
+            }
+        }
+        (grad, fisher)
+    }
+
+    /// Parameter box (lo, hi).
+    pub fn bounds(&self) -> (Vec<f64>, Vec<f64>) {
+        let (_, a_, b_, f_, _) = self.dims();
+        let mut lo = Vec::with_capacity(f_ + a_ + b_);
+        let mut hi = Vec::with_capacity(f_ + a_ + b_);
+        lo.extend(std::iter::repeat(FREE_LO).take(f_));
+        hi.extend(std::iter::repeat(self.m.class.mu_max).take(f_));
+        lo.extend(std::iter::repeat(-ALPHA_BOUND).take(a_));
+        hi.extend(std::iter::repeat(ALPHA_BOUND).take(a_));
+        lo.extend(std::iter::repeat(GAMMA_LO).take(b_));
+        hi.extend(std::iter::repeat(GAMMA_HI).take(b_));
+        (lo, hi)
+    }
+
+    pub fn init_theta(&self, mu_init: f64) -> Vec<f64> {
+        let (_, a_, b_, f_, _) = self.dims();
+        let mut th = Vec::with_capacity(f_ + a_ + b_);
+        th.extend(std::iter::repeat(1.0).take(f_));
+        th.extend(std::iter::repeat(0.0).take(a_));
+        th.extend(std::iter::repeat(1.0).take(b_));
+        th[0] = mu_init;
+        th
+    }
+
+    /// Structurally fixed params (+ optionally the POI).
+    pub fn fixed_mask(&self, fix_poi: bool) -> Vec<bool> {
+        let (_, a_, b_, f_, _) = self.dims();
+        let m = self.m;
+        let mut fixed = Vec::with_capacity(f_ + a_ + b_);
+        for f in 0..f_ {
+            fixed.push(m.free_mask[f] == 0.0);
+        }
+        for a in 0..a_ {
+            fixed.push(m.alpha_mask[a] == 0.0);
+        }
+        for b in 0..b_ {
+            fixed.push(m.ctype[b] == 0.0);
+        }
+        if fix_poi {
+            fixed[0] = true;
+        }
+        fixed
+    }
+
+    /// Damped Fisher scoring (same schedule as the AOT graph).
+    pub fn minimize(
+        &self,
+        data: &[f64],
+        centers: &Centers,
+        fixed: &[bool],
+        theta0: Vec<f64>,
+    ) -> FitResult {
+        let p_ = self.dims().4;
+        let (lo, hi) = self.bounds();
+        let mut theta = theta0;
+        let mut nll = self.nll(&theta, data, centers);
+        let mut lam = 1e-3;
+        let mut accepted = 0usize;
+        let mut stall = 0usize;
+
+        for _ in 0..self.max_newton {
+            if stall >= 5 {
+                break; // same early-exit policy as the AOT graph
+            }
+            let (grad, mut h) = self.grad_fisher(&theta, data, centers, fixed);
+            for p in 0..p_ {
+                let d = h[p * p_ + p].max(1e-8);
+                h[p * p_ + p] += lam * d;
+            }
+            let step = match cholesky_solve(&h, &grad, p_) {
+                Some(s) => s,
+                None => {
+                    lam = (lam * 8.0).min(1e10);
+                    stall += 1;
+                    continue;
+                }
+            };
+            let mut theta_try = theta.clone();
+            for p in 0..p_ {
+                theta_try[p] = (theta[p] - step[p]).clamp(lo[p], hi[p]);
+            }
+            let nll_try = self.nll(&theta_try, data, centers);
+            if nll_try <= nll - 1e-12 {
+                stall = if nll - nll_try > 1e-9 { 0 } else { stall + 1 };
+                theta = theta_try;
+                nll = nll_try;
+                lam = (lam / 3.0).max(1e-10);
+                accepted += 1;
+            } else {
+                lam = (lam * 8.0).min(1e10);
+                stall += 1;
+            }
+        }
+        let (grad, _) = self.grad_fisher(&theta, data, centers, fixed);
+        // projected gradient norm: components pushing out of the feasible
+        // box at an active bound do not count against convergence
+        let gn = grad
+            .iter()
+            .enumerate()
+            .map(|(p, &g)| {
+                let at_lo = theta[p] <= lo[p] + 1e-12 && g > 0.0;
+                let at_hi = theta[p] >= hi[p] - 1e-12 && g < 0.0;
+                if at_lo || at_hi {
+                    0.0
+                } else {
+                    g * g
+                }
+            })
+            .sum::<f64>()
+            .sqrt();
+        FitResult { theta, nll, accepted_steps: accepted, grad_norm: gn }
+    }
+
+    /// Fit with the POI fixed at `mu`.
+    pub fn fit_mu_fixed(&self, data: &[f64], centers: &Centers, mu: f64) -> FitResult {
+        let fixed = self.fixed_mask(true);
+        self.minimize(data, centers, &fixed, self.init_theta(mu))
+    }
+
+    /// Free fit (POI bounded >= 0).
+    pub fn fit_free(&self, data: &[f64], centers: &Centers) -> FitResult {
+        let fixed = self.fixed_mask(false);
+        self.minimize(data, centers, &fixed, self.init_theta(1.0))
+    }
+
+    /// Full asymptotic qmu-tilde hypotest — same 4-fit recipe as the AOT
+    /// graph (see model.hypotest_graph).
+    pub fn hypotest(&self, mu_test: f64) -> Hypotest {
+        let m = self.m;
+        let data = m.data.clone();
+        let nominal_centers = Centers::nominal(m);
+
+        let free = self.fit_free(&data, &nominal_centers);
+        let fixed = self.fit_mu_fixed(&data, &nominal_centers, mu_test);
+        let bkg = self.fit_mu_fixed(&data, &nominal_centers, FREE_LO);
+
+        let (nu_bkg, _) = self.expected_jac(&bkg.theta);
+        let (_, alpha_bkg, gamma_bkg) = self.effective(&bkg.theta);
+        let asimov_centers = Centers { alpha: alpha_bkg, gamma: gamma_bkg };
+
+        let afix = self.fit_mu_fixed(&nu_bkg, &asimov_centers, mu_test);
+        let a_free_nll = self.nll(&bkg.theta, &nu_bkg, &asimov_centers);
+
+        let mu_hat = free.theta[0];
+        let qmu = if mu_hat <= mu_test {
+            (2.0 * (fixed.nll - free.nll)).max(0.0)
+        } else {
+            0.0
+        };
+        let qmu_a = (2.0 * (afix.nll - a_free_nll)).max(0.0);
+
+        let (cls_obs, cls_exp) = asymptotic_cls(qmu, qmu_a);
+        Hypotest {
+            cls_obs,
+            cls_exp,
+            qmu,
+            qmu_a,
+            mu_hat,
+            nll_free: free.nll,
+            nll_fixed: fixed.nll,
+        }
+    }
+}
+
+/// qmu-tilde asymptotic CLs (observed, 5-point expected band), shared with
+/// `infer::asymptotics`.
+pub fn asymptotic_cls(qmu: f64, qmu_a: f64) -> (f64, [f64; 5]) {
+    let sq = qmu.max(0.0).sqrt();
+    let sqa = qmu_a.max(1e-300).sqrt();
+    let (clsb, clb) = if qmu <= qmu_a {
+        (1.0 - norm_cdf(sq), 1.0 - norm_cdf(sq - sqa))
+    } else {
+        (
+            1.0 - norm_cdf((qmu + qmu_a) / (2.0 * sqa)),
+            1.0 - norm_cdf((qmu - qmu_a) / (2.0 * sqa)),
+        )
+    };
+    let cls_obs = clsb / clb.max(1e-300);
+    let mut cls_exp = [0.0; 5];
+    for (i, n) in [-2.0f64, -1.0, 0.0, 1.0, 2.0].iter().enumerate() {
+        cls_exp[i] = (1.0 - norm_cdf(sqa - n)) / norm_cdf(*n).max(1e-300);
+    }
+    (cls_obs, cls_exp)
+}
+
+/// Dense Cholesky solve of (SPD) `h x = g`; returns None if not PD.
+pub fn cholesky_solve(h: &[f64], g: &[f64], n: usize) -> Option<Vec<f64>> {
+    let mut l = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = h[i * n + j];
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l[i * n + i] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    // forward: L y = g
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut sum = g[i];
+        for k in 0..i {
+            sum -= l[i * n + k] * y[k];
+        }
+        y[i] = sum / l[i * n + i];
+    }
+    // backward: L^T x = y
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i];
+        for k in i + 1..n {
+            sum -= l[k * n + i] * x[k];
+        }
+        x[i] = sum / l[i * n + i];
+    }
+    Some(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::histfactory::dense::{compile, ShapeClass};
+    use crate::histfactory::spec::Workspace;
+
+    fn class() -> ShapeClass {
+        ShapeClass {
+            name: "quickstart".into(),
+            n_bins: 16,
+            n_samples: 6,
+            n_alpha: 6,
+            n_free: 2,
+            bin_block: 16,
+            mu_max: 10.0,
+            max_newton: 48,
+            cg_iters: 24,
+        }
+    }
+
+    fn ws(sig: [f64; 3], obs: [f64; 3]) -> Workspace {
+        let doc = format!(
+            r#"{{
+            "channels": [{{"name": "SR", "samples": [
+                {{"name": "signal", "data": [{}, {}, {}],
+                 "modifiers": [{{"name": "mu", "type": "normfactor", "data": null}}]}},
+                {{"name": "bkg", "data": [60.0, 50.0, 40.0],
+                 "modifiers": [
+                    {{"name": "bn", "type": "normsys", "data": {{"hi": 1.08, "lo": 0.93}}}},
+                    {{"name": "st", "type": "staterror", "data": [2.0, 1.8, 1.5]}}
+                 ]}}
+            ]}}],
+            "observations": [{{"name": "SR", "data": [{}, {}, {}]}}],
+            "measurements": [{{"name": "m", "config": {{"poi": "mu", "parameters": []}}}}],
+            "version": "1.0.0"
+        }}"#,
+            sig[0], sig[1], sig[2], obs[0], obs[1], obs[2]
+        );
+        Workspace::from_str(&doc).unwrap()
+    }
+
+    #[test]
+    fn cholesky_solves_spd() {
+        // h = a a^T + 3 I
+        let n = 5;
+        let mut h = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                h[i * n + j] = ((i * j) as f64).sin();
+            }
+        }
+        let mut spd = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = if i == j { 3.0 } else { 0.0 };
+                for k in 0..n {
+                    s += h[i * n + k] * h[j * n + k];
+                }
+                spd[i * n + j] = s;
+            }
+        }
+        let g: Vec<f64> = (0..n).map(|i| i as f64 + 1.0).collect();
+        let x = cholesky_solve(&spd, &g, n).unwrap();
+        for i in 0..n {
+            let mut r = 0.0;
+            for j in 0..n {
+                r += spd[i * n + j] * x[j];
+            }
+            assert!((r - g[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let h = vec![1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        assert!(cholesky_solve(&h, &[1.0, 1.0], 2).is_none());
+    }
+
+    #[test]
+    fn jacobian_matches_finite_differences() {
+        let m = compile(&ws([3.0, 5.0, 2.0], [62.0, 55.0, 41.0]), &class()).unwrap();
+        let fitter = NativeFitter::new(&m);
+        let p_ = m.class.n_params();
+        let mut theta = fitter.init_theta(1.3);
+        theta[2] = 0.4; // active alpha
+        theta[m.class.n_free + m.class.n_alpha] = 1.05; // gamma bin 0
+        let (nu0, jac) = fitter.expected_jac(&theta);
+        let eps = 1e-7;
+        for p in 0..p_ {
+            let mut tp = theta.clone();
+            tp[p] += eps;
+            let (nup, _) = fitter.expected_jac(&tp);
+            for b in 0..m.class.n_bins {
+                let fd = (nup[b] - nu0[b]) / eps;
+                let an = jac[p * m.class.n_bins + b];
+                assert!(
+                    (fd - an).abs() < 1e-4 * (1.0 + an.abs()),
+                    "p={p} b={b} fd={fd} an={an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fit_recovers_injected_signal() {
+        // data = bkg + 2 * signal exactly
+        let m = compile(&ws([4.0, 6.0, 3.0], [68.0, 62.0, 46.0]), &class()).unwrap();
+        let fitter = NativeFitter::new(&m);
+        let r = fitter.fit_free(&m.data, &Centers::nominal(&m));
+        assert!((r.theta[0] - 2.0).abs() < 0.35, "mu_hat = {}", r.theta[0]);
+        assert!(r.grad_norm < 1e-2, "grad norm {}", r.grad_norm);
+    }
+
+    #[test]
+    fn fixed_poi_stays_fixed() {
+        let m = compile(&ws([4.0, 6.0, 3.0], [60.0, 50.0, 40.0]), &class()).unwrap();
+        let fitter = NativeFitter::new(&m);
+        let r = fitter.fit_mu_fixed(&m.data, &Centers::nominal(&m), 1.5);
+        assert_eq!(r.theta[0], 1.5);
+    }
+
+    #[test]
+    fn hypotest_sane_and_monotone_in_signal() {
+        let m_small = compile(&ws([1.0, 1.5, 0.8], [60.0, 50.0, 40.0]), &class()).unwrap();
+        let m_big = compile(&ws([8.0, 12.0, 6.0], [60.0, 50.0, 40.0]), &class()).unwrap();
+        let h_small = NativeFitter::new(&m_small).hypotest(1.0);
+        let h_big = NativeFitter::new(&m_big).hypotest(1.0);
+        for h in [&h_small, &h_big] {
+            assert!(h.cls_obs >= 0.0 && h.cls_obs <= 1.0 + 1e-12);
+            assert!(h.qmu >= 0.0 && h.qmu_a >= 0.0);
+            for w in h.cls_exp.windows(2) {
+                assert!(w[0] <= w[1] + 1e-12);
+            }
+        }
+        // bigger signal hypothesis is more excluded on bkg-like data
+        assert!(h_big.cls_exp[2] < h_small.cls_exp[2]);
+        assert!(h_big.qmu_a > h_small.qmu_a);
+    }
+
+    #[test]
+    fn erf_matches_known_values() {
+        // A&S polynomial sums to 0.999999999 at t=1, so erf(0) ~ 1e-9
+        assert!((erf_approx(0.0)).abs() < 2e-9);
+        assert!((erf_approx(1.0) - 0.8427007929497149).abs() < 2e-7);
+        assert!((erf_approx(-1.0) + 0.8427007929497149).abs() < 2e-7);
+        assert!((norm_cdf(1.959963984540054) - 0.975).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,206 @@
+//! Toy-based (pseudoexperiment) hypothesis testing — the paper's §2.1:
+//! "pyhf's interval estimation is computed through either the use of the
+//! asymptotic formulas ... or empirically through pseudoexperiments
+//! ('toys' in HEP parlance)".
+//!
+//! For each hypothesis (signal+background at mu_test, background-only) we
+//! sample toy datasets — Poisson main measurements plus fluctuated
+//! auxiliary measurements (constraint centers) — fit qmu-tilde on each, and
+//! compute CLs from the empirical tail fractions. Asymptotics and toys must
+//! agree in the large-count limit (tested).
+
+use crate::fitter::native::{Centers, NativeFitter, FREE_LO};
+use crate::histfactory::dense::DenseModel;
+use crate::util::rng::Rng;
+
+/// Toy-based CLs result.
+#[derive(Debug, Clone)]
+pub struct ToyResult {
+    pub cls_obs: f64,
+    pub clsb: f64,
+    pub clb: f64,
+    pub qmu_obs: f64,
+    pub n_toys: usize,
+    /// qmu distribution under signal+background
+    pub q_sb: Vec<f64>,
+    /// qmu distribution under background-only
+    pub q_b: Vec<f64>,
+}
+
+/// qmu-tilde for a given dataset/centers.
+fn qmu_tilde(fitter: &NativeFitter, data: &[f64], centers: &Centers, mu_test: f64) -> f64 {
+    let free = fitter.fit_free(data, centers);
+    let fixed = fitter.fit_mu_fixed(data, centers, mu_test);
+    if free.theta[0] <= mu_test {
+        (2.0 * (fixed.nll - free.nll)).max(0.0)
+    } else {
+        0.0
+    }
+}
+
+/// Sample a toy: Poisson main data around `nu`, Gaussian/Poisson-fluctuated
+/// constraint centers around the generating nuisance values.
+fn sample_toy(
+    model: &DenseModel,
+    nu: &[f64],
+    gen_alpha: &[f64],
+    gen_gamma: &[f64],
+    rng: &mut Rng,
+) -> (Vec<f64>, Centers) {
+    let b_ = model.class.n_bins;
+    let mut data = vec![0.0; b_];
+    for b in 0..b_ {
+        if model.bin_mask[b] > 0.0 {
+            data[b] = rng.poisson(nu[b].max(0.0)) as f64;
+        }
+    }
+    // auxiliary measurements: alpha_c ~ N(alpha_gen, 1); gamma aux per type
+    let alpha_c: Vec<f64> = gen_alpha
+        .iter()
+        .enumerate()
+        .map(|(a, &v)| {
+            if model.alpha_mask[a] > 0.0 {
+                rng.normal_scaled(v, 1.0)
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let gamma_c: Vec<f64> = (0..b_)
+        .map(|b| match model.ctype[b] as i64 {
+            // gauss: center ~ N(gamma_gen, delta) with delta = 1/sqrt(w)
+            1 => rng.normal_scaled(gen_gamma[b], 1.0 / model.cscale[b].sqrt()).max(1e-6),
+            // poisson: aux count m ~ Pois(tau * gamma_gen), center = m / tau
+            2 => rng.poisson(model.cscale[b] * gen_gamma[b]) as f64 / model.cscale[b],
+            _ => 1.0,
+        })
+        .collect();
+    (data, Centers { alpha: alpha_c, gamma: gamma_c })
+}
+
+/// Toy-based CLs at `mu_test` with `n_toys` pseudoexperiments per hypothesis.
+pub fn hypotest_toys(model: &DenseModel, mu_test: f64, n_toys: usize, seed: u64) -> ToyResult {
+    let fitter = NativeFitter::new(model);
+    let nominal = Centers::nominal(model);
+    let mut rng = Rng::new(seed);
+
+    // observed test statistic
+    let qmu_obs = qmu_tilde(&fitter, &model.data, &nominal, mu_test);
+
+    // generating points: conditional fits to the observed data
+    let sb_fit = fitter.fit_mu_fixed(&model.data, &nominal, mu_test);
+    let b_fit = fitter.fit_mu_fixed(&model.data, &nominal, FREE_LO);
+
+    let (nu_sb, _) = fitter.expected_jac(&sb_fit.theta);
+    let (nu_b, _) = fitter.expected_jac(&b_fit.theta);
+    let split = |th: &[f64]| -> (Vec<f64>, Vec<f64>) {
+        let f = model.class.n_free;
+        let a = model.class.n_alpha;
+        (th[f..f + a].to_vec(), th[f + a..].to_vec())
+    };
+    let (a_sb, g_sb) = split(&sb_fit.theta);
+    let (a_b, g_b) = split(&b_fit.theta);
+
+    let mut q_sb = Vec::with_capacity(n_toys);
+    let mut q_b = Vec::with_capacity(n_toys);
+    for _ in 0..n_toys {
+        let (d, c) = sample_toy(model, &nu_sb, &a_sb, &g_sb, &mut rng);
+        q_sb.push(qmu_tilde(&fitter, &d, &c, mu_test));
+        let (d, c) = sample_toy(model, &nu_b, &a_b, &g_b, &mut rng);
+        q_b.push(qmu_tilde(&fitter, &d, &c, mu_test));
+    }
+
+    // tail fractions (with the +1 continuity convention)
+    let tail = |qs: &[f64]| -> f64 {
+        let k = qs.iter().filter(|&&q| q >= qmu_obs).count();
+        (k as f64 + 1.0) / (qs.len() as f64 + 1.0)
+    };
+    let clsb = tail(&q_sb);
+    let clb = tail(&q_b);
+    ToyResult {
+        cls_obs: clsb / clb.max(1e-12),
+        clsb,
+        clb,
+        qmu_obs,
+        n_toys,
+        q_sb,
+        q_b,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::histfactory::dense::{compile, ShapeClass};
+    use crate::histfactory::spec::Workspace;
+
+    fn model(obs: [f64; 3]) -> DenseModel {
+        let class = ShapeClass {
+            name: "quickstart".into(),
+            n_bins: 16,
+            n_samples: 6,
+            n_alpha: 6,
+            n_free: 2,
+            bin_block: 16,
+            mu_max: 10.0,
+            max_newton: 48,
+            cg_iters: 24,
+        };
+        let doc = format!(
+            r#"{{
+            "channels": [{{"name": "SR", "samples": [
+                {{"name": "signal", "data": [15.0, 20.0, 10.0],
+                 "modifiers": [{{"name": "mu", "type": "normfactor", "data": null}}]}},
+                {{"name": "bkg", "data": [100.0, 90.0, 80.0],
+                 "modifiers": [{{"name": "st", "type": "staterror", "data": [2.0, 1.9, 1.8]}}]}}
+            ]}}],
+            "observations": [{{"name": "SR", "data": [{}, {}, {}]}}],
+            "measurements": [{{"name": "m", "config": {{"poi": "mu", "parameters": []}}}}],
+            "version": "1.0.0"
+        }}"#,
+            obs[0], obs[1], obs[2]
+        );
+        compile(&Workspace::from_str(&doc).unwrap(), &class).unwrap()
+    }
+
+    #[test]
+    fn toys_match_asymptotics_at_large_counts() {
+        // large yields => the asymptotic regime; 400 toys give ~5% precision
+        let m = model([100.0, 90.0, 80.0]);
+        let asym = NativeFitter::new(&m).hypotest(1.0);
+        let toys = hypotest_toys(&m, 1.0, 400, 42);
+        assert!(
+            (toys.cls_obs - asym.cls_obs).abs() < 0.12,
+            "toys {} vs asymptotics {}",
+            toys.cls_obs,
+            asym.cls_obs
+        );
+    }
+
+    #[test]
+    fn signal_like_data_gives_larger_cls() {
+        let bkg_like = hypotest_toys(&model([100.0, 90.0, 80.0]), 1.0, 150, 7);
+        let sig_like = hypotest_toys(&model([115.0, 110.0, 90.0]), 1.0, 150, 7);
+        assert!(sig_like.cls_obs > bkg_like.cls_obs);
+    }
+
+    #[test]
+    fn qmu_distributions_are_sane() {
+        let r = hypotest_toys(&model([100.0, 90.0, 80.0]), 1.0, 100, 3);
+        assert_eq!(r.q_sb.len(), 100);
+        assert!(r.q_sb.iter().all(|&q| q >= 0.0));
+        assert!(r.q_b.iter().all(|&q| q >= 0.0));
+        // background-only toys fluctuate to larger qmu than s+b toys on average
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        assert!(mean(&r.q_b) > mean(&r.q_sb));
+        assert!(r.clsb <= r.clb + 1e-12);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = hypotest_toys(&model([100.0, 90.0, 80.0]), 1.0, 50, 9);
+        let b = hypotest_toys(&model([100.0, 90.0, 80.0]), 1.0, 50, 9);
+        assert_eq!(a.cls_obs, b.cls_obs);
+        assert_eq!(a.q_sb, b.q_sb);
+    }
+}

@@ -1,0 +1,154 @@
+//! Workspace combination — `pyhf.Workspace.combine` for this stack.
+//!
+//! The paper's conclusion motivates "large scale ensemble fits in the case
+//! of statistical combinations of analyses": a combination concatenates the
+//! channels and observations of two workspaces into one joint likelihood,
+//! sharing the POI (and any same-named modifiers, which become correlated
+//! across the inputs — the standard HEP convention).
+
+use crate::histfactory::spec::Workspace;
+use crate::util::json::JsonError;
+
+fn err(msg: impl Into<String>) -> JsonError {
+    JsonError { msg: msg.into(), at: None }
+}
+
+/// Combine two workspaces into a joint one.
+///
+/// Rules (matching pyhf semantics where representable):
+/// * channel names must be disjoint (use `prefix_channels` first otherwise);
+/// * observations are carried over per channel;
+/// * measurements: the first workspace's POI wins; both must agree on it
+///   (a combination with two different POIs is not a single joint test);
+/// * same-named modifiers on different inputs share parameters (correlated).
+pub fn combine(a: &Workspace, b: &Workspace) -> Result<Workspace, JsonError> {
+    for ca in &a.channels {
+        if b.channels.iter().any(|cb| cb.name == ca.name) {
+            return Err(err(format!(
+                "channel '{}' exists in both workspaces; rename channels first",
+                ca.name
+            )));
+        }
+    }
+    if a.poi() != b.poi() {
+        return Err(err(format!(
+            "POI mismatch: '{}' vs '{}'",
+            a.poi(),
+            b.poi()
+        )));
+    }
+    let mut out = a.clone();
+    out.channels.extend(b.channels.iter().cloned());
+    out.observations.extend(b.observations.iter().cloned());
+    // keep a's measurements (same POI); b's extra measurements are dropped
+    Ok(out)
+}
+
+/// Rename every channel (and its observation) with a prefix, enabling
+/// self-combination and clash resolution.
+pub fn prefix_channels(ws: &Workspace, prefix: &str) -> Workspace {
+    let mut out = ws.clone();
+    for c in &mut out.channels {
+        c.name = format!("{prefix}{}", c.name);
+    }
+    for o in &mut out.observations {
+        o.name = format!("{prefix}{}", o.name);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fitter::native::NativeFitter;
+    use crate::histfactory::dense::{compile, ShapeClass};
+
+    fn ws(channel: &str, sig: f64, obs: f64) -> Workspace {
+        let doc = format!(
+            r#"{{
+            "channels": [{{"name": "{channel}", "samples": [
+                {{"name": "signal", "data": [{sig}, {sig}],
+                 "modifiers": [{{"name": "mu", "type": "normfactor", "data": null}}]}},
+                {{"name": "bkg", "data": [50.0, 40.0],
+                 "modifiers": [
+                   {{"name": "corr_norm", "type": "normsys", "data": {{"hi": 1.1, "lo": 0.9}}}},
+                   {{"name": "st_{channel}", "type": "staterror", "data": [1.5, 1.2]}}
+                 ]}}
+            ]}}],
+            "observations": [{{"name": "{channel}", "data": [{obs}, {obs}]}}],
+            "measurements": [{{"name": "m", "config": {{"poi": "mu", "parameters": []}}}}],
+            "version": "1.0.0"
+        }}"#
+        );
+        Workspace::from_str(&doc).unwrap()
+    }
+
+    fn class() -> ShapeClass {
+        ShapeClass {
+            name: "quickstart".into(),
+            n_bins: 16,
+            n_samples: 6,
+            n_alpha: 6,
+            n_free: 2,
+            bin_block: 16,
+            mu_max: 10.0,
+            max_newton: 48,
+            cg_iters: 24,
+        }
+    }
+
+    #[test]
+    fn combines_channels_and_observations() {
+        let j = combine(&ws("SRa", 4.0, 52.0), &ws("SRb", 3.0, 45.0)).unwrap();
+        assert_eq!(j.channels.len(), 2);
+        assert_eq!(j.observations.len(), 2);
+        assert_eq!(j.n_bins(), 4);
+        assert_eq!(j.poi(), "mu");
+        assert_eq!(j.flat_observations().unwrap(), vec![52.0, 52.0, 45.0, 45.0]);
+    }
+
+    #[test]
+    fn rejects_clashing_channels_and_poi_mismatch() {
+        assert!(combine(&ws("SR", 4.0, 52.0), &ws("SR", 3.0, 45.0)).is_err());
+        let mut b = ws("SRb", 3.0, 45.0);
+        b.measurements[0].poi = "mu_other".into();
+        assert!(combine(&ws("SRa", 4.0, 52.0), &b).is_err());
+    }
+
+    #[test]
+    fn prefix_resolves_clashes() {
+        let a = ws("SR", 4.0, 52.0);
+        let b = prefix_channels(&ws("SR", 3.0, 45.0), "ana2_");
+        let j = combine(&a, &b).unwrap();
+        assert_eq!(j.channels[1].name, "ana2_SR");
+        assert!(j.flat_observations().is_ok());
+    }
+
+    #[test]
+    fn combination_is_more_sensitive_than_parts() {
+        // joint exclusion power (qmu_A) must exceed each input's
+        let wa = ws("SRa", 4.0, 52.0);
+        let wb = ws("SRb", 4.0, 45.0);
+        let joint = combine(&wa, &wb).unwrap();
+        let q = |w: &Workspace| {
+            let m = compile(w, &class()).unwrap();
+            NativeFitter::new(&m).hypotest(1.0).qmu_a
+        };
+        let (qa, qb, qj) = (q(&wa), q(&wb), q(&joint));
+        assert!(qj > qa && qj > qb, "joint {qj} vs parts {qa}, {qb}");
+        // and roughly additive in the asymptotic regime
+        assert!((qj - (qa + qb)).abs() < 0.5 * (qa + qb), "qj={qj} qa+qb={}", qa + qb);
+    }
+
+    #[test]
+    fn shared_modifier_is_correlated_in_dense_model() {
+        // 'corr_norm' appears in both inputs -> single alpha slot in the
+        // combined dense model; staterrors stay per-channel
+        let j = combine(&ws("SRa", 4.0, 52.0), &ws("SRb", 3.0, 45.0)).unwrap();
+        let m = compile(&j, &class()).unwrap();
+        assert_eq!(
+            m.alpha_names.iter().filter(|n| n.as_str() == "corr_norm").count(),
+            1
+        );
+    }
+}

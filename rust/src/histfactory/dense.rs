@@ -1,0 +1,504 @@
+//! Dense model compiler: HistFactory workspace -> padded AOT tensor layout.
+//!
+//! Mirrors ``python/compile/shapes.py`` exactly; the contract is carried by
+//! ``artifacts/manifest.json``. Dense *sample rows* are (channel, sample)
+//! pairs — pyhf modifiers act per channel — ordered channel-major. Bins are
+//! channels flattened in order. Parameters:
+//!
+//! ``theta = [ free norms (POI first) | alphas | gammas(one per bin) ]``
+
+use std::collections::HashMap;
+
+use crate::histfactory::spec::{Modifier, Workspace};
+
+/// A fixed artifact shape class (rust mirror of python's ShapeConfig).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShapeClass {
+    pub name: String,
+    pub n_bins: usize,
+    pub n_samples: usize,
+    pub n_alpha: usize,
+    pub n_free: usize,
+    pub bin_block: usize,
+    pub mu_max: f64,
+    pub max_newton: usize,
+    pub cg_iters: usize,
+}
+
+impl ShapeClass {
+    pub fn n_params(&self) -> usize {
+        self.n_free + self.n_alpha + self.n_bins
+    }
+}
+
+/// Errors from dense compilation.
+#[derive(Debug, Clone)]
+pub struct DenseError(pub String);
+
+impl std::fmt::Display for DenseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "dense model error: {}", self.0)
+    }
+}
+
+impl std::error::Error for DenseError {}
+
+fn derr<T>(msg: impl Into<String>) -> Result<T, DenseError> {
+    Err(DenseError(msg.into()))
+}
+
+/// The dense tensors for one workspace, padded to a shape class.
+/// Row-major layouts: `nominal[s*B + b]`, `histo_up[(s*A + a)*B + b]`, etc.
+#[derive(Debug, Clone)]
+pub struct DenseModel {
+    pub class: ShapeClass,
+    pub data: Vec<f64>,
+    pub nominal: Vec<f64>,
+    pub histo_up: Vec<f64>,
+    pub histo_dn: Vec<f64>,
+    pub norm_lnup: Vec<f64>,
+    pub norm_lndn: Vec<f64>,
+    pub free_map: Vec<f64>,
+    pub free_mask: Vec<f64>,
+    pub alpha_mask: Vec<f64>,
+    pub gamma_mask: Vec<f64>,
+    pub ctype: Vec<f64>,
+    pub cscale: Vec<f64>,
+    pub bin_mask: Vec<f64>,
+    /// free-parameter names, POI first
+    pub free_names: Vec<String>,
+    /// constrained-parameter (alpha) names in slot order
+    pub alpha_names: Vec<String>,
+    pub n_active_bins: usize,
+    pub n_active_rows: usize,
+}
+
+impl DenseModel {
+    /// Input tensors in artifact argument order (`manifest.input_order`).
+    pub fn input_views(&self) -> Vec<(&'static str, &[f64])> {
+        vec![
+            ("data", &self.data),
+            ("nominal", &self.nominal),
+            ("histo_up", &self.histo_up),
+            ("histo_dn", &self.histo_dn),
+            ("norm_lnup", &self.norm_lnup),
+            ("norm_lndn", &self.norm_lndn),
+            ("free_map", &self.free_map),
+            ("free_mask", &self.free_mask),
+            ("alpha_mask", &self.alpha_mask),
+            ("gamma_mask", &self.gamma_mask),
+            ("ctype", &self.ctype),
+            ("cscale", &self.cscale),
+            ("bin_mask", &self.bin_mask),
+        ]
+    }
+}
+
+/// Compile a workspace into the dense layout of `class`.
+///
+/// Fails with a descriptive error if the workspace exceeds the class
+/// dimensions or uses conflicting constraints on a bin.
+pub fn compile(ws: &Workspace, class: &ShapeClass) -> Result<DenseModel, DenseError> {
+    let (b_, s_, a_, f_) = (class.n_bins, class.n_samples, class.n_alpha, class.n_free);
+    let n_bins: usize = ws.n_bins();
+    if n_bins > b_ {
+        return derr(format!("workspace has {n_bins} bins, class '{}' holds {b_}", class.name));
+    }
+    let n_rows: usize = ws.channels.iter().map(|c| c.samples.len()).sum();
+    if n_rows > s_ {
+        return derr(format!(
+            "workspace has {n_rows} (channel,sample) rows, class '{}' holds {s_}",
+            class.name
+        ));
+    }
+
+    let poi = ws.poi().to_string();
+
+    let mut m = DenseModel {
+        class: class.clone(),
+        data: vec![0.0; b_],
+        nominal: vec![0.0; s_ * b_],
+        histo_up: vec![0.0; s_ * a_ * b_],
+        histo_dn: vec![0.0; s_ * a_ * b_],
+        norm_lnup: vec![0.0; s_ * a_],
+        norm_lndn: vec![0.0; s_ * a_],
+        free_map: vec![0.0; s_ * f_],
+        free_mask: vec![0.0; f_],
+        alpha_mask: vec![0.0; a_],
+        gamma_mask: vec![0.0; s_ * b_],
+        ctype: vec![0.0; b_],
+        cscale: vec![1.0; b_],
+        bin_mask: vec![0.0; b_],
+        free_names: vec![poi.clone()],
+        alpha_names: Vec::new(),
+        n_active_bins: n_bins,
+        n_active_rows: n_rows,
+    };
+    m.free_mask[0] = 1.0; // POI always active
+
+    let mut free_index: HashMap<String, usize> = HashMap::new();
+    free_index.insert(poi.clone(), 0);
+    let mut alpha_index: HashMap<String, usize> = HashMap::new();
+
+    let mut alloc_free = |name: &str, m: &mut DenseModel| -> Result<usize, DenseError> {
+        if let Some(&i) = free_index.get(name) {
+            return Ok(i);
+        }
+        let i = free_index.len();
+        if i >= f_ {
+            return derr(format!("too many free parameters for class (limit {f_})"));
+        }
+        free_index.insert(name.to_string(), i);
+        m.free_names.push(name.to_string());
+        m.free_mask[i] = 1.0;
+        Ok(i)
+    };
+    let mut alloc_alpha = |name: &str, m: &mut DenseModel| -> Result<usize, DenseError> {
+        if let Some(&i) = alpha_index.get(name) {
+            return Ok(i);
+        }
+        let i = alpha_index.len();
+        if i >= a_ {
+            return derr(format!("too many constrained parameters for class (limit {a_})"));
+        }
+        alpha_index.insert(name.to_string(), i);
+        m.alpha_names.push(name.to_string());
+        m.alpha_mask[i] = 1.0;
+        Ok(i)
+    };
+
+    // staterror accumulation per (channel-bin): sum delta^2 and nominal over
+    // participating rows; resolved into gauss gammas after the main pass.
+    let mut stat_delta2: Vec<f64> = vec![0.0; b_];
+    let mut stat_nominal: Vec<f64> = vec![0.0; b_];
+    let mut stat_rows: Vec<Vec<usize>> = vec![Vec::new(); b_];
+
+    let mut row = 0usize;
+    let mut bin_off = 0usize;
+    for ch in &ws.channels {
+        let nb = ch.n_bins();
+        for sample in &ch.samples {
+            if sample.data.len() != nb {
+                return derr(format!(
+                    "sample '{}' in channel '{}' has {} bins, channel has {nb}",
+                    sample.name, ch.name, sample.data.len()
+                ));
+            }
+            for (i, &v) in sample.data.iter().enumerate() {
+                m.nominal[row * b_ + bin_off + i] = v;
+            }
+
+            for modif in &sample.modifiers {
+                match modif {
+                    Modifier::NormFactor { name } => {
+                        let f = alloc_free(name, &mut m)?;
+                        m.free_map[row * f_ + f] = 1.0;
+                    }
+                    Modifier::NormSys { name, hi, lo } => {
+                        let a = alloc_alpha(name, &mut m)?;
+                        m.norm_lnup[row * a_ + a] = hi.ln();
+                        m.norm_lndn[row * a_ + a] = lo.ln();
+                    }
+                    Modifier::Lumi { name, sigma } => {
+                        if *sigma >= 1.0 {
+                            return derr(format!("lumi '{name}' sigma {sigma} >= 1"));
+                        }
+                        let a = alloc_alpha(name, &mut m)?;
+                        m.norm_lnup[row * a_ + a] = (1.0 + sigma).ln();
+                        m.norm_lndn[row * a_ + a] = (1.0 - sigma).ln();
+                    }
+                    Modifier::HistoSys { name, hi_data, lo_data } => {
+                        if hi_data.len() != nb || lo_data.len() != nb {
+                            return derr(format!(
+                                "histosys '{name}' data length mismatch in channel '{}'",
+                                ch.name
+                            ));
+                        }
+                        let a = alloc_alpha(name, &mut m)?;
+                        for i in 0..nb {
+                            let idx = (row * a_ + a) * b_ + bin_off + i;
+                            // code0 convention: up delta = hi - nominal,
+                            // down delta = nominal - lo (see ref.py)
+                            m.histo_up[idx] = hi_data[i] - sample.data[i];
+                            m.histo_dn[idx] = sample.data[i] - lo_data[i];
+                        }
+                    }
+                    Modifier::StatError { name, data } => {
+                        if data.len() != nb {
+                            return derr(format!(
+                                "staterror '{name}' data length mismatch in channel '{}'",
+                                ch.name
+                            ));
+                        }
+                        for i in 0..nb {
+                            let gb = bin_off + i;
+                            stat_delta2[gb] += data[i] * data[i];
+                            stat_nominal[gb] += sample.data[i];
+                            stat_rows[gb].push(row);
+                        }
+                    }
+                    Modifier::ShapeSys { name, data } => {
+                        if data.len() != nb {
+                            return derr(format!(
+                                "shapesys '{name}' data length mismatch in channel '{}'",
+                                ch.name
+                            ));
+                        }
+                        for i in 0..nb {
+                            let gb = bin_off + i;
+                            if data[i] <= 0.0 || sample.data[i] <= 0.0 {
+                                continue; // pyhf: bins with no uncertainty stay fixed
+                            }
+                            if m.ctype[gb] != 0.0 {
+                                return derr(format!(
+                                    "bin {gb}: shapesys '{name}' conflicts with an existing \
+                                     gamma constraint (one gamma per bin in the dense layout)"
+                                ));
+                            }
+                            let tau = (sample.data[i] / data[i]).powi(2);
+                            m.ctype[gb] = 2.0;
+                            m.cscale[gb] = tau;
+                            m.gamma_mask[row * b_ + gb] = 1.0;
+                        }
+                    }
+                }
+            }
+            row += 1;
+        }
+        bin_off += nb;
+    }
+
+    // resolve staterror gammas (gauss), one per bin shared by participants
+    for gb in 0..b_ {
+        if stat_rows[gb].is_empty() {
+            continue;
+        }
+        if m.ctype[gb] == 2.0 {
+            return derr(format!(
+                "bin {gb}: staterror conflicts with shapesys (one gamma per bin)"
+            ));
+        }
+        if stat_nominal[gb] <= 0.0 {
+            continue;
+        }
+        let rel2 = stat_delta2[gb] / (stat_nominal[gb] * stat_nominal[gb]);
+        if rel2 <= 0.0 {
+            continue;
+        }
+        m.ctype[gb] = 1.0;
+        m.cscale[gb] = 1.0 / rel2;
+        for &r in &stat_rows[gb] {
+            m.gamma_mask[r * b_ + gb] = 1.0;
+        }
+    }
+
+    // observations + bin mask
+    let obs = ws.flat_observations().map_err(|e| DenseError(e.msg))?;
+    for (i, &v) in obs.iter().enumerate() {
+        m.data[i] = v;
+        m.bin_mask[i] = 1.0;
+    }
+
+    Ok(m)
+}
+
+/// Pick the smallest class (by parameter count) that fits the workspace.
+pub fn pick_class<'a>(
+    ws: &Workspace,
+    classes: &'a [ShapeClass],
+) -> Result<&'a ShapeClass, DenseError> {
+    let mut best: Option<&ShapeClass> = None;
+    for class in classes {
+        if compile_dims_fit(ws, class) {
+            match best {
+                Some(b) if b.n_params() <= class.n_params() => {}
+                _ => best = Some(class),
+            }
+        }
+    }
+    best.ok_or_else(|| {
+        DenseError(format!(
+            "no shape class fits workspace ({} bins, {} rows)",
+            ws.n_bins(),
+            ws.channels.iter().map(|c| c.samples.len()).sum::<usize>()
+        ))
+    })
+}
+
+fn compile_dims_fit(ws: &Workspace, class: &ShapeClass) -> bool {
+    // cheap structural check; full compile still validates
+    let rows: usize = ws.channels.iter().map(|c| c.samples.len()).sum();
+    if ws.n_bins() > class.n_bins || rows > class.n_samples {
+        return false;
+    }
+    let mut frees = std::collections::HashSet::new();
+    frees.insert(ws.poi().to_string());
+    let mut alphas = std::collections::HashSet::new();
+    for ch in &ws.channels {
+        for s in &ch.samples {
+            for md in &s.modifiers {
+                match md {
+                    Modifier::NormFactor { name } => {
+                        frees.insert(name.clone());
+                    }
+                    Modifier::NormSys { name, .. }
+                    | Modifier::HistoSys { name, .. }
+                    | Modifier::Lumi { name, .. } => {
+                        alphas.insert(name.clone());
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+    frees.len() <= class.n_free && alphas.len() <= class.n_alpha
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_class() -> ShapeClass {
+        ShapeClass {
+            name: "quickstart".into(),
+            n_bins: 16,
+            n_samples: 6,
+            n_alpha: 6,
+            n_free: 2,
+            bin_block: 16,
+            mu_max: 10.0,
+            max_newton: 32,
+            cg_iters: 24,
+        }
+    }
+
+    fn ws() -> Workspace {
+        Workspace::from_str(
+            r#"{
+            "channels": [
+                {"name": "SR", "samples": [
+                    {"name": "signal", "data": [1.0, 2.0],
+                     "modifiers": [{"name": "mu", "type": "normfactor", "data": null}]},
+                    {"name": "bkg", "data": [50.0, 40.0],
+                     "modifiers": [
+                        {"name": "bkg_norm", "type": "normsys", "data": {"hi": 1.2, "lo": 0.8}},
+                        {"name": "tilt", "type": "histosys",
+                         "data": {"hi_data": [52.0, 39.0], "lo_data": [48.0, 41.0]}},
+                        {"name": "staterror_SR", "type": "staterror", "data": [2.0, 1.0]}
+                     ]}
+                ]},
+                {"name": "CR", "samples": [
+                    {"name": "bkg", "data": [100.0, 90.0, 80.0],
+                     "modifiers": [
+                        {"name": "bkg_norm", "type": "normsys", "data": {"hi": 1.1, "lo": 0.9}},
+                        {"name": "dd", "type": "shapesys", "data": [10.0, 9.0, 8.0]}
+                     ]}
+                ]}
+            ],
+            "observations": [
+                {"name": "SR", "data": [55, 38]},
+                {"name": "CR", "data": [101, 88, 83]}
+            ],
+            "measurements": [{"name": "m", "config": {"poi": "mu", "parameters": []}}],
+            "version": "1.0.0"
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn compiles_shapes_and_masks() {
+        let m = compile(&ws(), &tiny_class()).unwrap();
+        assert_eq!(m.n_active_bins, 5);
+        assert_eq!(m.n_active_rows, 3);
+        assert_eq!(m.free_names, vec!["mu"]);
+        assert_eq!(m.alpha_names, vec!["bkg_norm", "tilt"]);
+        // bin mask: first 5 active
+        assert_eq!(&m.bin_mask[..6], &[1.0, 1.0, 1.0, 1.0, 1.0, 0.0]);
+        // data flattened channel-major
+        assert_eq!(&m.data[..5], &[55.0, 38.0, 101.0, 88.0, 83.0]);
+        // POI on row 0 only
+        assert_eq!(m.free_map[0], 1.0);
+        assert_eq!(m.free_map[2], 0.0);
+    }
+
+    #[test]
+    fn normsys_is_per_channel_row() {
+        let m = compile(&ws(), &tiny_class()).unwrap();
+        let a_ = m.class.n_alpha;
+        // row 1 = SR/bkg has kappa_hi = 1.2; row 2 = CR/bkg has 1.1
+        assert!((m.norm_lnup[a_] - 1.2f64.ln()).abs() < 1e-12);
+        assert!((m.norm_lnup[2 * a_] - 1.1f64.ln()).abs() < 1e-12);
+        // same alpha slot (correlated across channels)
+        assert_eq!(m.alpha_names[0], "bkg_norm");
+    }
+
+    #[test]
+    fn histosys_deltas_signed_correctly() {
+        let m = compile(&ws(), &tiny_class()).unwrap();
+        let (a_, b_) = (m.class.n_alpha, m.class.n_bins);
+        // row 1 (SR/bkg), alpha 1 (tilt), bin 0: up = 52-50 = 2, dn = 50-48 = 2
+        assert_eq!(m.histo_up[(1 * a_ + 1) * b_ + 0], 2.0);
+        assert_eq!(m.histo_dn[(1 * a_ + 1) * b_ + 0], 2.0);
+        // bin 1: up = 39-40 = -1, dn = 40-41 = -1
+        assert_eq!(m.histo_up[(1 * a_ + 1) * b_ + 1], -1.0);
+        assert_eq!(m.histo_dn[(1 * a_ + 1) * b_ + 1], -1.0);
+    }
+
+    #[test]
+    fn staterror_and_shapesys_constraints() {
+        let m = compile(&ws(), &tiny_class()).unwrap();
+        // SR bins 0,1: gauss from staterror over the bkg row only
+        assert_eq!(m.ctype[0], 1.0);
+        let rel2 = (2.0f64 * 2.0) / (50.0f64 * 50.0);
+        assert!((m.cscale[0] - 1.0 / rel2).abs() < 1e-9);
+        // CR bins 2..5: poisson with tau = (nominal/delta)^2 = 100
+        assert_eq!(m.ctype[2], 2.0);
+        assert!((m.cscale[2] - 100.0).abs() < 1e-9);
+        // gamma applies to the right rows
+        let b_ = m.class.n_bins;
+        assert_eq!(m.gamma_mask[1 * b_ + 0], 1.0); // SR bkg row, bin 0
+        assert_eq!(m.gamma_mask[0 * b_ + 0], 0.0); // signal row untouched
+        assert_eq!(m.gamma_mask[2 * b_ + 2], 1.0); // CR bkg row, bin 2
+    }
+
+    #[test]
+    fn rejects_oversized_workspace() {
+        let mut class = tiny_class();
+        class.n_bins = 4;
+        let err = compile(&ws(), &class).unwrap_err();
+        assert!(err.0.contains("bins"));
+    }
+
+    #[test]
+    fn rejects_conflicting_gammas() {
+        let mut w = ws();
+        // add a staterror on the CR bkg sample -> conflicts with shapesys
+        w.channels[1].samples[0].modifiers.push(Modifier::StatError {
+            name: "staterror_CR".into(),
+            data: vec![5.0, 5.0, 5.0],
+        });
+        let err = compile(&w, &tiny_class()).unwrap_err();
+        assert!(err.0.contains("conflict"), "{}", err.0);
+    }
+
+    #[test]
+    fn pick_class_prefers_smallest() {
+        let small = tiny_class();
+        let mut big = tiny_class();
+        big.name = "big".into();
+        big.n_bins = 80;
+        big.n_samples = 48;
+        big.n_alpha = 48;
+        let classes = vec![big.clone(), small.clone()];
+        let picked = pick_class(&ws(), &classes).unwrap();
+        assert_eq!(picked.name, "quickstart");
+    }
+
+    #[test]
+    fn pick_class_fails_when_nothing_fits() {
+        let mut small = tiny_class();
+        small.n_samples = 1;
+        assert!(pick_class(&ws(), &[small]).is_err());
+    }
+}

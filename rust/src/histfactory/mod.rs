@@ -1,0 +1,12 @@
+//! HistFactory substrate: workspace spec, patchsets and the dense-tensor
+//! compiler that feeds the AOT artifacts (pyhf's role in the paper).
+
+pub mod combine;
+pub mod dense;
+pub mod patchset;
+pub mod spec;
+
+pub use combine::{combine, prefix_channels};
+pub use dense::{compile, pick_class, DenseModel, ShapeClass};
+pub use patchset::{Patch, Patchset};
+pub use spec::{Channel, Measurement, Modifier, Observation, Sample, Workspace};

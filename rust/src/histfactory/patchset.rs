@@ -1,0 +1,211 @@
+//! pyhf patchset container: a background-only workspace plus N signal-
+//! hypothesis patches (RFC 6902 documents with metadata), as published on
+//! HEPData. Applying patch `k` to the background workspace yields the k-th
+//! signal workspace — exactly the object the paper's funcX workers fit.
+
+use crate::util::json::{self, Json, JsonError};
+
+/// One signal-hypothesis patch.
+#[derive(Debug, Clone)]
+pub struct Patch {
+    /// e.g. "C1N2_Wh_hbb_1000_0"
+    pub name: String,
+    /// grid point values, e.g. [1000.0, 0.0] (masses in GeV)
+    pub values: Vec<f64>,
+    /// RFC 6902 operations
+    pub ops: Json,
+}
+
+/// A full patchset document.
+#[derive(Debug, Clone)]
+pub struct Patchset {
+    pub name: String,
+    pub description: String,
+    pub labels: Vec<String>,
+    pub patches: Vec<Patch>,
+}
+
+impl Patchset {
+    pub fn from_json(doc: &Json) -> Result<Patchset, JsonError> {
+        let err = |msg: &str| JsonError { msg: msg.into(), at: None };
+        let meta = doc.get("metadata").ok_or_else(|| err("patchset: missing metadata"))?;
+        let name = meta.get("name").and_then(|v| v.as_str()).unwrap_or("patchset").to_string();
+        let description = meta
+            .get("description")
+            .and_then(|v| v.as_str())
+            .unwrap_or("")
+            .to_string();
+        let labels = meta
+            .get("labels")
+            .and_then(|v| v.as_arr())
+            .map(|ls| ls.iter().filter_map(|l| l.as_str().map(String::from)).collect())
+            .unwrap_or_default();
+
+        let patches_json = doc
+            .get("patches")
+            .and_then(|p| p.as_arr())
+            .ok_or_else(|| err("patchset: missing patches array"))?;
+        let mut patches = Vec::with_capacity(patches_json.len());
+        for pj in patches_json {
+            let pmeta = pj.get("metadata").ok_or_else(|| err("patch: missing metadata"))?;
+            let pname = pmeta
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| err("patch: missing name"))?
+                .to_string();
+            let values = pmeta
+                .get("values")
+                .and_then(|v| v.as_arr())
+                .map(|vs| vs.iter().filter_map(|x| x.as_f64()).collect())
+                .unwrap_or_default();
+            let ops = pj.get("patch").cloned().ok_or_else(|| err("patch: missing ops"))?;
+            patches.push(Patch { name: pname, values, ops });
+        }
+
+        Ok(Patchset { name, description, labels, patches })
+    }
+
+    pub fn from_str(s: &str) -> Result<Patchset, JsonError> {
+        Patchset::from_json(&json::parse(s)?)
+    }
+
+    pub fn len(&self) -> usize {
+        self.patches.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.patches.is_empty()
+    }
+
+    pub fn find(&self, name: &str) -> Option<&Patch> {
+        self.patches.iter().find(|p| p.name == name)
+    }
+
+    /// Apply patch `name` to a workspace document (clone-and-patch).
+    pub fn apply(&self, bkg_workspace: &Json, name: &str) -> Result<Json, JsonError> {
+        let patch = self
+            .find(name)
+            .ok_or_else(|| JsonError { msg: format!("no patch named '{name}'"), at: None })?;
+        patch.apply_to(bkg_workspace)
+    }
+
+    /// Serialize back to the pyhf patchset JSON shape.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "metadata",
+                Json::obj(vec![
+                    ("name", Json::str(self.name.clone())),
+                    ("description", Json::str(self.description.clone())),
+                    (
+                        "labels",
+                        Json::Arr(self.labels.iter().map(|l| Json::str(l.clone())).collect()),
+                    ),
+                ]),
+            ),
+            ("version", Json::str("1.0.0")),
+            (
+                "patches",
+                Json::Arr(
+                    self.patches
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                (
+                                    "metadata",
+                                    Json::obj(vec![
+                                        ("name", Json::str(p.name.clone())),
+                                        ("values", Json::arr_f64(&p.values)),
+                                    ]),
+                                ),
+                                ("patch", p.ops.clone()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+impl Patch {
+    /// Apply this patch to a workspace document (clone-and-patch).
+    pub fn apply_to(&self, bkg_workspace: &Json) -> Result<Json, JsonError> {
+        let mut doc = bkg_workspace.clone();
+        json::apply_patch(&mut doc, &self.ops)?;
+        Ok(doc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::histfactory::spec::Workspace;
+    use crate::util::json::parse;
+
+    fn bkg() -> Json {
+        parse(
+            r#"{
+            "channels": [{"name": "SR", "samples": [
+                {"name": "bkg", "data": [50.0, 40.0], "modifiers": []}
+            ]}],
+            "observations": [{"name": "SR", "data": [55, 38]}],
+            "measurements": [{"name": "m", "config": {"poi": "mu", "parameters": []}}],
+            "version": "1.0.0"
+        }"#,
+        )
+        .unwrap()
+    }
+
+    fn pset() -> Patchset {
+        Patchset::from_str(
+            r#"{
+            "metadata": {"name": "test-pallet", "description": "d", "labels": ["m1", "m2"]},
+            "version": "1.0.0",
+            "patches": [
+                {"metadata": {"name": "sig_300_100", "values": [300, 100]},
+                 "patch": [{"op": "add", "path": "/channels/0/samples/0",
+                            "value": {"name": "signal", "data": [3.0, 1.0],
+                                      "modifiers": [{"name": "mu", "type": "normfactor", "data": null}]}}]}
+            ]
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_metadata() {
+        let ps = pset();
+        assert_eq!(ps.name, "test-pallet");
+        assert_eq!(ps.labels, vec!["m1", "m2"]);
+        assert_eq!(ps.len(), 1);
+        assert_eq!(ps.patches[0].values, vec![300.0, 100.0]);
+    }
+
+    #[test]
+    fn apply_produces_signal_workspace() {
+        let ps = pset();
+        let patched = ps.apply(&bkg(), "sig_300_100").unwrap();
+        let ws = Workspace::from_json(&patched).unwrap();
+        assert_eq!(ws.channels[0].samples.len(), 2);
+        assert_eq!(ws.channels[0].samples[0].name, "signal");
+        // original untouched (clone-and-patch)
+        let orig = Workspace::from_json(&bkg()).unwrap();
+        assert_eq!(orig.channels[0].samples.len(), 1);
+    }
+
+    #[test]
+    fn unknown_patch_is_error() {
+        assert!(pset().apply(&bkg(), "nope").is_err());
+    }
+
+    #[test]
+    fn roundtrip_to_json() {
+        let ps = pset();
+        let doc = ps.to_json();
+        let back = Patchset::from_json(&doc).unwrap();
+        assert_eq!(back.name, ps.name);
+        assert_eq!(back.len(), ps.len());
+        assert_eq!(back.patches[0].name, ps.patches[0].name);
+    }
+}

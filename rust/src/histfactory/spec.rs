@@ -1,0 +1,351 @@
+//! Typed HistFactory workspace specification, parsed from pyhf JSON.
+//!
+//! Implements the subset of the pyhf workspace schema the paper's analyses
+//! use: channels/samples with `normfactor`, `normsys`, `histosys`,
+//! `staterror`, `shapesys` and `lumi` modifiers, observations, and
+//! measurements with a POI. See `dense.rs` for compilation into the padded
+//! tensor layout of the AOT artifacts.
+
+use crate::util::json::{Json, JsonError};
+
+/// One systematic/normalization modifier attached to a sample.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Modifier {
+    /// Free multiplicative normalization (the POI is one of these).
+    NormFactor { name: String },
+    /// Constrained log-normal-ish normalization (code1 interpolation).
+    NormSys { name: String, hi: f64, lo: f64 },
+    /// Constrained additive shape variation (code0 interpolation).
+    HistoSys { name: String, hi_data: Vec<f64>, lo_data: Vec<f64> },
+    /// Per-bin MC statistical uncertainty, Gaussian-constrained gammas.
+    StatError { name: String, data: Vec<f64> },
+    /// Per-bin data-driven shape uncertainty, Poisson-constrained gammas.
+    ShapeSys { name: String, data: Vec<f64> },
+    /// Luminosity uncertainty; modeled as a code1 normsys with
+    /// kappa = 1 +- sigma (documented approximation, DESIGN.md section 4).
+    Lumi { name: String, sigma: f64 },
+}
+
+impl Modifier {
+    pub fn name(&self) -> &str {
+        match self {
+            Modifier::NormFactor { name }
+            | Modifier::NormSys { name, .. }
+            | Modifier::HistoSys { name, .. }
+            | Modifier::StatError { name, .. }
+            | Modifier::ShapeSys { name, .. }
+            | Modifier::Lumi { name, .. } => name,
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Modifier::NormFactor { .. } => "normfactor",
+            Modifier::NormSys { .. } => "normsys",
+            Modifier::HistoSys { .. } => "histosys",
+            Modifier::StatError { .. } => "staterror",
+            Modifier::ShapeSys { .. } => "shapesys",
+            Modifier::Lumi { .. } => "lumi",
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    pub name: String,
+    pub data: Vec<f64>,
+    pub modifiers: Vec<Modifier>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Channel {
+    pub name: String,
+    pub samples: Vec<Sample>,
+}
+
+impl Channel {
+    pub fn n_bins(&self) -> usize {
+        self.samples.first().map(|s| s.data.len()).unwrap_or(0)
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Observation {
+    pub name: String,
+    pub data: Vec<f64>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Measurement {
+    pub name: String,
+    pub poi: String,
+}
+
+/// A full workspace document.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Workspace {
+    pub channels: Vec<Channel>,
+    pub observations: Vec<Observation>,
+    pub measurements: Vec<Measurement>,
+    pub version: String,
+}
+
+fn field<'a>(v: &'a Json, key: &str, ctx: &str) -> Result<&'a Json, JsonError> {
+    v.get(key).ok_or_else(|| JsonError {
+        msg: format!("{ctx}: missing field '{key}'"),
+        at: None,
+    })
+}
+
+fn str_field(v: &Json, key: &str, ctx: &str) -> Result<String, JsonError> {
+    field(v, key, ctx)?
+        .as_str()
+        .map(|s| s.to_string())
+        .ok_or_else(|| JsonError { msg: format!("{ctx}: field '{key}' must be a string"), at: None })
+}
+
+fn parse_modifier(v: &Json, ctx: &str) -> Result<Modifier, JsonError> {
+    let name = str_field(v, "name", ctx)?;
+    let kind = str_field(v, "type", ctx)?;
+    let data = v.get("data");
+    let err = |msg: String| JsonError { msg, at: None };
+    match kind.as_str() {
+        "normfactor" => Ok(Modifier::NormFactor { name }),
+        "normsys" => {
+            let d = data.ok_or_else(|| err(format!("{ctx}: normsys '{name}' missing data")))?;
+            let hi = d.get("hi").and_then(|x| x.as_f64());
+            let lo = d.get("lo").and_then(|x| x.as_f64());
+            match (hi, lo) {
+                (Some(hi), Some(lo)) if hi > 0.0 && lo > 0.0 => Ok(Modifier::NormSys { name, hi, lo }),
+                (Some(_), Some(_)) => Err(err(format!("{ctx}: normsys '{name}' hi/lo must be positive"))),
+                _ => Err(err(format!("{ctx}: normsys '{name}' needs numeric hi/lo"))),
+            }
+        }
+        "histosys" => {
+            let d = data.ok_or_else(|| err(format!("{ctx}: histosys '{name}' missing data")))?;
+            Ok(Modifier::HistoSys {
+                name,
+                hi_data: d.f64_array("hi_data")?,
+                lo_data: d.f64_array("lo_data")?,
+            })
+        }
+        "staterror" => {
+            let d = data.ok_or_else(|| err(format!("{ctx}: staterror '{name}' missing data")))?;
+            let arr = d
+                .as_arr()
+                .ok_or_else(|| err(format!("{ctx}: staterror '{name}' data must be an array")))?;
+            let data = arr
+                .iter()
+                .map(|x| x.as_f64().ok_or_else(|| err(format!("{ctx}: staterror '{name}' non-numeric"))))
+                .collect::<Result<Vec<_>, _>>()?;
+            Ok(Modifier::StatError { name, data })
+        }
+        "shapesys" => {
+            let d = data.ok_or_else(|| err(format!("{ctx}: shapesys '{name}' missing data")))?;
+            let arr = d
+                .as_arr()
+                .ok_or_else(|| err(format!("{ctx}: shapesys '{name}' data must be an array")))?;
+            let data = arr
+                .iter()
+                .map(|x| x.as_f64().ok_or_else(|| err(format!("{ctx}: shapesys '{name}' non-numeric"))))
+                .collect::<Result<Vec<_>, _>>()?;
+            Ok(Modifier::ShapeSys { name, data })
+        }
+        "lumi" => {
+            // pyhf keeps lumi sigma in the measurement parameter config; we
+            // accept it inline (data.sigma) for self-contained workspaces.
+            let sigma = data
+                .and_then(|d| d.get("sigma"))
+                .and_then(|x| x.as_f64())
+                .unwrap_or(0.02);
+            Ok(Modifier::Lumi { name, sigma })
+        }
+        other => Err(err(format!("{ctx}: unsupported modifier type '{other}'"))),
+    }
+}
+
+impl Workspace {
+    /// Parse a pyhf workspace JSON document.
+    pub fn from_json(doc: &Json) -> Result<Workspace, JsonError> {
+        let channels_json = field(doc, "channels", "workspace")?
+            .as_arr()
+            .ok_or_else(|| JsonError { msg: "workspace: 'channels' must be an array".into(), at: None })?;
+
+        let mut channels = Vec::new();
+        for cj in channels_json {
+            let cname = str_field(cj, "name", "channel")?;
+            let ctx = format!("channel '{cname}'");
+            let samples_json = field(cj, "samples", &ctx)?
+                .as_arr()
+                .ok_or_else(|| JsonError { msg: format!("{ctx}: 'samples' must be an array"), at: None })?;
+            let mut samples = Vec::new();
+            for sj in samples_json {
+                let sname = str_field(sj, "name", &ctx)?;
+                let sctx = format!("{ctx} sample '{sname}'");
+                let data = sj.f64_array("data")?;
+                let mods_json = sj.get("modifiers").and_then(|m| m.as_arr()).unwrap_or(&[]);
+                let modifiers = mods_json
+                    .iter()
+                    .map(|m| parse_modifier(m, &sctx))
+                    .collect::<Result<Vec<_>, _>>()?;
+                samples.push(Sample { name: sname, data, modifiers });
+            }
+            channels.push(Channel { name: cname, samples });
+        }
+
+        let mut observations = Vec::new();
+        if let Some(obs) = doc.get("observations").and_then(|o| o.as_arr()) {
+            for oj in obs {
+                observations.push(Observation {
+                    name: str_field(oj, "name", "observation")?,
+                    data: oj.f64_array("data")?,
+                });
+            }
+        }
+
+        let mut measurements = Vec::new();
+        if let Some(ms) = doc.get("measurements").and_then(|m| m.as_arr()) {
+            for mj in ms {
+                let name = str_field(mj, "name", "measurement")?;
+                let poi = mj
+                    .get("config")
+                    .and_then(|c| c.get("poi"))
+                    .and_then(|p| p.as_str())
+                    .unwrap_or("mu")
+                    .to_string();
+                measurements.push(Measurement { name, poi });
+            }
+        }
+
+        let version = doc
+            .get("version")
+            .and_then(|v| v.as_str())
+            .unwrap_or("1.0.0")
+            .to_string();
+
+        Ok(Workspace { channels, observations, measurements, version })
+    }
+
+    /// Parse from a JSON string.
+    pub fn from_str(s: &str) -> Result<Workspace, JsonError> {
+        Workspace::from_json(&crate::util::json::parse(s)?)
+    }
+
+    /// Total bins across channels.
+    pub fn n_bins(&self) -> usize {
+        self.channels.iter().map(|c| c.n_bins()).sum()
+    }
+
+    /// POI name from the first measurement (pyhf default "mu").
+    pub fn poi(&self) -> &str {
+        self.measurements.first().map(|m| m.poi.as_str()).unwrap_or("mu")
+    }
+
+    /// Observation vector flattened in channel order; missing channels get
+    /// their nominal background expectation? No — that would hide user error:
+    /// it is an error for an observation to be missing.
+    pub fn flat_observations(&self) -> Result<Vec<f64>, JsonError> {
+        let mut out = Vec::with_capacity(self.n_bins());
+        for ch in &self.channels {
+            let obs = self
+                .observations
+                .iter()
+                .find(|o| o.name == ch.name)
+                .ok_or_else(|| JsonError {
+                    msg: format!("no observation for channel '{}'", ch.name),
+                    at: None,
+                })?;
+            if obs.data.len() != ch.n_bins() {
+                return Err(JsonError {
+                    msg: format!(
+                        "observation for '{}' has {} bins, channel has {}",
+                        ch.name,
+                        obs.data.len(),
+                        ch.n_bins()
+                    ),
+                    at: None,
+                });
+            }
+            out.extend_from_slice(&obs.data);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    pub(crate) const WS: &str = r#"{
+        "channels": [
+            {"name": "SR", "samples": [
+                {"name": "signal", "data": [1.0, 2.0],
+                 "modifiers": [{"name": "mu", "type": "normfactor", "data": null}]},
+                {"name": "bkg", "data": [50.0, 40.0],
+                 "modifiers": [
+                    {"name": "bkg_norm", "type": "normsys", "data": {"hi": 1.1, "lo": 0.9}},
+                    {"name": "shape_tilt", "type": "histosys",
+                     "data": {"hi_data": [52.0, 39.0], "lo_data": [48.0, 41.0]}},
+                    {"name": "staterror_SR", "type": "staterror", "data": [2.0, 1.5]}
+                 ]}
+            ]}
+        ],
+        "observations": [{"name": "SR", "data": [55, 38]}],
+        "measurements": [{"name": "meas", "config": {"poi": "mu", "parameters": []}}],
+        "version": "1.0.0"
+    }"#;
+
+    #[test]
+    fn parses_workspace() {
+        let ws = Workspace::from_str(WS).unwrap();
+        assert_eq!(ws.channels.len(), 1);
+        assert_eq!(ws.channels[0].samples.len(), 2);
+        assert_eq!(ws.n_bins(), 2);
+        assert_eq!(ws.poi(), "mu");
+        assert_eq!(ws.flat_observations().unwrap(), vec![55.0, 38.0]);
+        let mods = &ws.channels[0].samples[1].modifiers;
+        assert_eq!(mods.len(), 3);
+        assert_eq!(mods[0].kind(), "normsys");
+        assert_eq!(mods[1].kind(), "histosys");
+        assert_eq!(mods[2].kind(), "staterror");
+    }
+
+    #[test]
+    fn rejects_bad_modifier() {
+        let doc = parse(
+            r#"{"channels": [{"name": "c", "samples": [
+                {"name": "s", "data": [1], "modifiers": [{"name": "x", "type": "wat"}]}
+            ]}]}"#,
+        )
+        .unwrap();
+        let err = Workspace::from_json(&doc).unwrap_err();
+        assert!(err.msg.contains("unsupported modifier"));
+    }
+
+    #[test]
+    fn rejects_negative_normsys() {
+        let doc = parse(
+            r#"{"channels": [{"name": "c", "samples": [
+                {"name": "s", "data": [1], "modifiers":
+                 [{"name": "x", "type": "normsys", "data": {"hi": -1.0, "lo": 0.9}}]}
+            ]}]}"#,
+        )
+        .unwrap();
+        assert!(Workspace::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn missing_observation_is_error() {
+        let mut ws = Workspace::from_str(WS).unwrap();
+        ws.observations.clear();
+        assert!(ws.flat_observations().is_err());
+    }
+
+    #[test]
+    fn observation_length_mismatch_is_error() {
+        let mut ws = Workspace::from_str(WS).unwrap();
+        ws.observations[0].data.push(1.0);
+        assert!(ws.flat_observations().is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Inference post-processing: scan aggregation, exclusion contours and
+//! interpolated upper limits over hypotest results.
+
+pub mod results;
+pub mod upperlimit;
+
+pub use results::{PointResult, ScanResult};
+pub use upperlimit::{default_mu_grid, upper_limit_scan, UpperLimit};
+
+/// Re-export of the shared asymptotic CLs formulas (observed + expected band
+/// from (qmu, qmu_A)); the same polynomial erf is baked into the HLO
+/// artifacts so all three paths round identically.
+pub use crate::fitter::native::{asymptotic_cls, erf_approx, norm_cdf};

@@ -1,0 +1,195 @@
+//! Scan result containers: per-patch hypotest outcomes, exclusion decisions
+//! and 1D interpolated upper limits, serializable to JSON for the CLI and
+//! examples.
+
+use crate::util::json::Json;
+
+/// Hypotest outcome for one signal-hypothesis patch.
+#[derive(Debug, Clone)]
+pub struct PointResult {
+    pub patch: String,
+    /// grid metadata values (e.g. masses)
+    pub values: Vec<f64>,
+    pub cls_obs: f64,
+    pub cls_exp: [f64; 5],
+    pub qmu: f64,
+    pub qmu_a: f64,
+    pub mu_hat: f64,
+    /// wall time of the fit task in seconds (service time, excl. queueing)
+    pub fit_seconds: f64,
+}
+
+impl PointResult {
+    /// Excluded at 95% CL (CLs < 0.05), the standard HEP criterion.
+    pub fn excluded(&self) -> bool {
+        self.cls_obs < 0.05
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("patch", Json::str(self.patch.clone())),
+            ("values", Json::arr_f64(&self.values)),
+            ("cls_obs", Json::num(self.cls_obs)),
+            ("cls_exp", Json::arr_f64(&self.cls_exp)),
+            ("qmu", Json::num(self.qmu)),
+            ("qmu_A", Json::num(self.qmu_a)),
+            ("mu_hat", Json::num(self.mu_hat)),
+            ("fit_seconds", Json::num(self.fit_seconds)),
+            ("excluded_95", Json::Bool(self.excluded())),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Option<PointResult> {
+        let cls_exp_v = v.get("cls_exp")?.as_arr()?;
+        let mut cls_exp = [0.0; 5];
+        for (i, x) in cls_exp_v.iter().take(5).enumerate() {
+            cls_exp[i] = x.as_f64()?;
+        }
+        Some(PointResult {
+            patch: v.get("patch")?.as_str()?.to_string(),
+            values: v.get("values")?.as_arr()?.iter().filter_map(|x| x.as_f64()).collect(),
+            cls_obs: v.get("cls_obs")?.as_f64()?,
+            cls_exp,
+            qmu: v.get("qmu")?.as_f64()?,
+            qmu_a: v.get("qmu_A")?.as_f64()?,
+            mu_hat: v.get("mu_hat")?.as_f64()?,
+            fit_seconds: v.get("fit_seconds")?.as_f64()?,
+        })
+    }
+}
+
+/// A full signal-grid scan for one analysis.
+#[derive(Debug, Clone, Default)]
+pub struct ScanResult {
+    pub analysis: String,
+    pub points: Vec<PointResult>,
+    /// end-to-end wall time of the scan in seconds
+    pub wall_seconds: f64,
+}
+
+impl ScanResult {
+    pub fn new(analysis: impl Into<String>) -> Self {
+        ScanResult { analysis: analysis.into(), points: Vec::new(), wall_seconds: 0.0 }
+    }
+
+    pub fn n_excluded(&self) -> usize {
+        self.points.iter().filter(|p| p.excluded()).count()
+    }
+
+    /// Sum of individual fit service times — the "single worker" equivalent.
+    pub fn total_fit_seconds(&self) -> f64 {
+        self.points.iter().map(|p| p.fit_seconds).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("analysis", Json::str(self.analysis.clone())),
+            ("wall_seconds", Json::num(self.wall_seconds)),
+            ("n_points", Json::num(self.points.len() as f64)),
+            ("n_excluded_95", Json::num(self.n_excluded() as f64)),
+            ("total_fit_seconds", Json::num(self.total_fit_seconds())),
+            ("points", Json::Arr(self.points.iter().map(|p| p.to_json()).collect())),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Option<ScanResult> {
+        Some(ScanResult {
+            analysis: v.get("analysis")?.as_str()?.to_string(),
+            wall_seconds: v.get("wall_seconds")?.as_f64()?,
+            points: v
+                .get("points")?
+                .as_arr()?
+                .iter()
+                .filter_map(PointResult::from_json)
+                .collect(),
+        })
+    }
+}
+
+/// Interpolated 95% CLs upper limit on the first grid axis: the crossing of
+/// cls(m1) with 0.05, linear between neighbouring scan points (for fixed
+/// second-axis value). Returns None when no crossing exists.
+pub fn upper_limit_on_axis(points: &[PointResult], axis2_value: f64) -> Option<f64> {
+    let mut line: Vec<(f64, f64)> = points
+        .iter()
+        .filter(|p| p.values.len() >= 2 && (p.values[1] - axis2_value).abs() < 1e-9)
+        .map(|p| (p.values[0], p.cls_obs))
+        .collect();
+    if line.len() < 2 {
+        return None;
+    }
+    line.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    for w in line.windows(2) {
+        let ((x0, c0), (x1, c1)) = (w[0], w[1]);
+        // CLs rises with mass (signal weakens): crossing from excluded to allowed
+        if (c0 - 0.05) * (c1 - 0.05) <= 0.0 && c0 != c1 {
+            return Some(x0 + (0.05 - c0) / (c1 - c0) * (x1 - x0));
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point(name: &str, m1: f64, m2: f64, cls: f64) -> PointResult {
+        PointResult {
+            patch: name.into(),
+            values: vec![m1, m2],
+            cls_obs: cls,
+            cls_exp: [cls * 0.2, cls * 0.5, cls, (cls * 1.5).min(1.0), (cls * 2.0).min(1.0)],
+            qmu: 1.0,
+            qmu_a: 2.0,
+            mu_hat: 0.1,
+            fit_seconds: 0.5,
+        }
+    }
+
+    #[test]
+    fn exclusion_criterion() {
+        assert!(point("a", 300.0, 0.0, 0.01).excluded());
+        assert!(!point("b", 900.0, 0.0, 0.4).excluded());
+    }
+
+    #[test]
+    fn scan_aggregates() {
+        let mut scan = ScanResult::new("1Lbb");
+        scan.points.push(point("a", 300.0, 0.0, 0.01));
+        scan.points.push(point("b", 600.0, 0.0, 0.20));
+        assert_eq!(scan.n_excluded(), 1);
+        assert!((scan.total_fit_seconds() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut scan = ScanResult::new("stau");
+        scan.wall_seconds = 57.4;
+        scan.points.push(point("a", 300.0, 0.0, 0.01));
+        let back = ScanResult::from_json(&scan.to_json()).unwrap();
+        assert_eq!(back.analysis, "stau");
+        assert_eq!(back.points.len(), 1);
+        assert!((back.points[0].cls_obs - 0.01).abs() < 1e-12);
+        assert!((back.wall_seconds - 57.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn upper_limit_interpolates_crossing() {
+        let pts = vec![
+            point("a", 200.0, 0.0, 0.01),
+            point("b", 400.0, 0.0, 0.03),
+            point("c", 600.0, 0.0, 0.09),
+            point("d", 800.0, 0.0, 0.30),
+        ];
+        let ul = upper_limit_on_axis(&pts, 0.0).unwrap();
+        // crossing between 400 (0.03) and 600 (0.09): 400 + 2/6*200 = 466.7
+        assert!((ul - 466.6667).abs() < 0.1, "ul = {ul}");
+    }
+
+    #[test]
+    fn upper_limit_none_without_crossing() {
+        let pts = vec![point("a", 200.0, 0.0, 0.2), point("b", 400.0, 0.0, 0.4)];
+        assert!(upper_limit_on_axis(&pts, 0.0).is_none());
+        assert!(upper_limit_on_axis(&pts, 50.0).is_none());
+    }
+}

@@ -1,0 +1,140 @@
+//! Upper limits on the signal strength: scan CLs(mu) and interpolate the
+//! 95% CL crossing — `pyhf.infer.intervals.upper_limits` for this stack.
+//!
+//! The paper's conclusions motivate exactly this workload ("large
+//! dimensional scans of theory parameter space"): each scan point is an
+//! independent hypotest at a different mu_test, embarrassingly parallel
+//! over the FaaS fabric. This implementation drives the native fitter
+//! (arbitrary mu_test; the AOT artifacts bake mu_test = 1).
+
+use crate::fitter::native::NativeFitter;
+use crate::histfactory::dense::DenseModel;
+
+/// Result of an upper-limit scan.
+#[derive(Debug, Clone)]
+pub struct UpperLimit {
+    /// observed 95% CL upper limit on mu (None if no crossing in range)
+    pub obs: Option<f64>,
+    /// expected band limits (-2..+2 sigma), same convention as cls_exp
+    pub exp: [Option<f64>; 5],
+    /// the scan: (mu, cls_obs, cls_exp[5])
+    pub scan: Vec<(f64, f64, [f64; 5])>,
+}
+
+/// Linear interpolation of the 0.05 crossing on a (mu, cls) series.
+/// CLs decreases with mu; returns the first downward crossing.
+fn crossing(series: &[(f64, f64)], level: f64) -> Option<f64> {
+    for w in series.windows(2) {
+        let ((m0, c0), (m1, c1)) = (w[0], w[1]);
+        if (c0 - level) * (c1 - level) <= 0.0 && c0 != c1 {
+            return Some(m0 + (level - c0) / (c1 - c0) * (m1 - m0));
+        }
+    }
+    None
+}
+
+/// Scan CLs over `mu_grid` and interpolate the 95% CL upper limits.
+pub fn upper_limit_scan(model: &DenseModel, mu_grid: &[f64]) -> UpperLimit {
+    let fitter = NativeFitter::new(model);
+    let mut scan = Vec::with_capacity(mu_grid.len());
+    for &mu in mu_grid {
+        let h = fitter.hypotest(mu);
+        scan.push((mu, h.cls_obs, h.cls_exp));
+    }
+
+    let obs_series: Vec<(f64, f64)> = scan.iter().map(|(m, c, _)| (*m, *c)).collect();
+    let obs = crossing(&obs_series, 0.05);
+    let mut exp = [None; 5];
+    for k in 0..5 {
+        let series: Vec<(f64, f64)> = scan.iter().map(|(m, _, e)| (*m, e[k])).collect();
+        exp[k] = crossing(&series, 0.05);
+    }
+    UpperLimit { obs, exp, scan }
+}
+
+/// Default mu grid: log-ish spacing from near zero to mu_max.
+pub fn default_mu_grid(mu_max: f64, points: usize) -> Vec<f64> {
+    assert!(points >= 2);
+    (0..points)
+        .map(|i| {
+            let f = i as f64 / (points - 1) as f64;
+            0.05 + (mu_max - 0.05) * f * f // quadratic spacing, denser at small mu
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::histfactory::dense::{compile, ShapeClass};
+    use crate::histfactory::spec::Workspace;
+
+    fn model(sig_scale: f64) -> DenseModel {
+        let class = ShapeClass {
+            name: "quickstart".into(),
+            n_bins: 16,
+            n_samples: 6,
+            n_alpha: 6,
+            n_free: 2,
+            bin_block: 16,
+            mu_max: 10.0,
+            max_newton: 48,
+            cg_iters: 24,
+        };
+        let doc = format!(
+            r#"{{
+            "channels": [{{"name": "SR", "samples": [
+                {{"name": "signal", "data": [{}, {}, {}],
+                 "modifiers": [{{"name": "mu", "type": "normfactor", "data": null}}]}},
+                {{"name": "bkg", "data": [60.0, 50.0, 40.0],
+                 "modifiers": [{{"name": "st", "type": "staterror", "data": [2.0, 1.8, 1.5]}}]}}
+            ]}}],
+            "observations": [{{"name": "SR", "data": [60, 50, 40]}}],
+            "measurements": [{{"name": "m", "config": {{"poi": "mu", "parameters": []}}}}],
+            "version": "1.0.0"
+        }}"#,
+            4.0 * sig_scale,
+            6.0 * sig_scale,
+            3.0 * sig_scale
+        );
+        compile(&Workspace::from_str(&doc).unwrap(), &class).unwrap()
+    }
+
+    #[test]
+    fn crossing_interpolates() {
+        let series = [(0.0, 0.8), (1.0, 0.1), (2.0, 0.01)];
+        let x = crossing(&series, 0.05).unwrap();
+        assert!(x > 1.0 && x < 2.0, "{x}");
+    }
+
+    #[test]
+    fn upper_limit_found_and_scales_with_signal() {
+        let grid = default_mu_grid(10.0, 18);
+        let weak = upper_limit_scan(&model(1.0), &grid);
+        let strong = upper_limit_scan(&model(3.0), &grid);
+        let w = weak.obs.expect("weak limit");
+        let s = strong.obs.expect("strong limit");
+        // 3x the signal cross-section => ~1/3 the mu limit
+        assert!(s < w, "strong {s} < weak {w}");
+        assert!((w / s - 3.0).abs() < 1.2, "ratio {} not ~3", w / s);
+        // expected band ordered
+        let e: Vec<f64> = weak.exp.iter().map(|x| x.unwrap()).collect();
+        for k in 1..5 {
+            assert!(e[k] >= e[k - 1] - 1e-9);
+        }
+        // CLs decreases along the scan
+        for w2 in weak.scan.windows(2) {
+            assert!(w2[1].1 <= w2[0].1 + 0.02);
+        }
+    }
+
+    #[test]
+    fn grid_is_monotone() {
+        let g = default_mu_grid(10.0, 10);
+        assert_eq!(g.len(), 10);
+        for w in g.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+        assert!(g[0] > 0.0 && g[9] <= 10.0);
+    }
+}

@@ -1,0 +1,29 @@
+//! # pyhf-faas: distributed statistical inference as a service
+//!
+//! Reproduction of *"Distributed statistical inference with pyhf enabled
+//! through funcX"* (Feickert, Heinrich, Stark, Galewsky; vCHEP 2021) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — a funcX-style function-serving fabric in Rust:
+//!   function registry, task queue, endpoints, block/manager/worker
+//!   executor, providers, plus the HistFactory/pallet substrates and a
+//!   discrete-event cluster simulator for RIVER-scale topology replay.
+//! * **L2 (python/compile, build-time only)** — the pyhf-equivalent dense
+//!   HistFactory model with an in-graph Fisher-scoring MLE fit and the
+//!   qmu-tilde asymptotic CLs hypotest, AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels)** — Pallas kernels for the expected-rate
+//!   + analytic-Jacobian hot loop and the Poisson NLL reduction.
+//!
+//! At runtime the Rust coordinator loads `artifacts/*.hlo.txt` through the
+//! PJRT C API (`runtime` module) and serves fits with no Python anywhere on
+//! the request path.
+
+pub mod bench;
+pub mod coordinator;
+pub mod fitter;
+pub mod histfactory;
+pub mod infer;
+pub mod pallet;
+pub mod runtime;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,395 @@
+//! pyhf-faas CLI — the leader entrypoint.
+//!
+//! ```text
+//! pyhf-faas generate-pallet --analysis 1Lbb --out pallets/1Lbb
+//! pyhf-faas scan --pallet pallets/1Lbb --backend pjrt --workers 2 --verbose
+//! pyhf-faas hypotest --pallet pallets/1Lbb --patch C1N2_Wh_hbb_300_150
+//! pyhf-faas simulate --pallet pallets/1Lbb --blocks 1,2,4,8 --trials 10
+//! pyhf-faas info
+//! ```
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use pyhf_faas::coordinator::{
+    fitops, run_scan, Endpoint, EndpointConfig, ExecutorConfig, FaasClient, Service,
+    SimSlurmProvider,
+};
+use pyhf_faas::histfactory::{dense, Workspace};
+use pyhf_faas::infer::results::upper_limit_on_axis;
+use pyhf_faas::pallet::{self, io as pallet_io, library};
+use pyhf_faas::runtime::{default_artifact_dir, Engine, Manifest};
+use pyhf_faas::sim;
+use pyhf_faas::util::cli::Args;
+use pyhf_faas::util::json;
+
+const USAGE: &str = "\
+pyhf-faas — distributed statistical inference as a service (vCHEP 2021 repro)
+
+USAGE: pyhf-faas <command> [options]
+
+COMMANDS:
+  generate-pallet  --analysis <1Lbb|2L0J|stau|quickstart> --out <dir>
+  scan             --pallet <dir> [--backend pjrt|native] [--workers N]
+                   [--max-blocks N] [--limit N] [--out results.json] [--verbose]
+  hypotest         --pallet <dir> --patch <name> [--backend pjrt|native]
+  simulate         --pallet <dir> [--blocks 1,2,4,8] [--trials 10]
+                   [--sample N] (replays measured fits on the paper topology)
+  upper-limit      --pallet <dir> --patch <name> [--points 16]
+  toys             --pallet <dir> --patch <name> [--n-toys 300] [--seed 42]
+  info             [--artifacts <dir>]
+";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let parsed = match Args::parse(args, &["verbose", "help"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if parsed.flag("help") || parsed.command.is_none() {
+        println!("{USAGE}");
+        return;
+    }
+    let cmd = parsed.command.clone().unwrap();
+    let result = match cmd.as_str() {
+        "generate-pallet" => cmd_generate(&parsed),
+        "scan" => cmd_scan(&parsed),
+        "hypotest" => cmd_hypotest(&parsed),
+        "simulate" => cmd_simulate(&parsed),
+        "upper-limit" => cmd_upper_limit(&parsed),
+        "toys" => cmd_toys(&parsed),
+        "info" => cmd_info(&parsed),
+        other => Err(format!("unknown command '{other}'\n{USAGE}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn artifact_dir(args: &Args) -> PathBuf {
+    args.get("artifacts").map(PathBuf::from).unwrap_or_else(default_artifact_dir)
+}
+
+fn cmd_generate(args: &Args) -> Result<(), String> {
+    let analysis = args.get_or("analysis", "quickstart");
+    let out = args
+        .get("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(format!("pallets/{analysis}")));
+    let cfg = library::config_by_name(analysis).ok_or_else(|| {
+        format!("unknown analysis '{analysis}' (try 1Lbb, 2L0J, stau, quickstart)")
+    })?;
+    let pallet = pallet_io::materialize(&cfg, &out).map_err(|e| e.to_string())?;
+    println!(
+        "wrote pallet '{}' ({} channels x {} bins, {} patches) to {}",
+        cfg.name,
+        cfg.n_channels,
+        cfg.bins_per_channel,
+        pallet.patchset.len(),
+        out.display()
+    );
+    Ok(())
+}
+
+fn load_pallet(args: &Args) -> Result<pallet::Pallet, String> {
+    let dir = PathBuf::from(args.get("pallet").ok_or("--pallet <dir> is required")?);
+    let (bkg, ps) = pallet_io::read_pallet(&dir)?;
+    // infer the analysis config from metadata if present
+    let name = std::fs::read_to_string(dir.join("metadata.json"))
+        .ok()
+        .and_then(|t| json::parse(&t).ok())
+        .and_then(|m| m.get("analysis").and_then(|v| v.as_str()).map(String::from))
+        .unwrap_or_else(|| "quickstart".to_string());
+    let config = library::config_by_name(&name).unwrap_or_else(library::config_quickstart);
+    Ok(pallet::Pallet { config, bkg_workspace: bkg, patchset: ps })
+}
+
+fn start_endpoint(
+    svc: &pyhf_faas::coordinator::ServiceHandle,
+    backend: &str,
+    workers: usize,
+    max_blocks: usize,
+    artifacts: PathBuf,
+) -> Result<(Endpoint, pyhf_faas::coordinator::FunctionId), String> {
+    let exec = ExecutorConfig {
+        max_blocks,
+        nodes_per_block: 1,
+        workers_per_node: workers,
+        parallelism: 1.0,
+        poll: Duration::from_millis(2),
+    };
+    let client = FaasClient::new(svc.clone());
+    let (init, handler, fname) = match backend {
+        "pjrt" => (
+            fitops::pjrt_worker_init(artifacts),
+            fitops::fit_patch_handler(),
+            "fit_patch_pjrt",
+        ),
+        "native" => (
+            fitops::native_worker_init(artifacts),
+            fitops::native_fit_handler(),
+            "fit_patch_native",
+        ),
+        other => return Err(format!("unknown backend '{other}' (pjrt|native)")),
+    };
+    let ep = Endpoint::start(
+        svc.clone(),
+        EndpointConfig::new(format!("{backend}-endpoint"))
+            .with_executor(exec)
+            .with_provider(Box::new(SimSlurmProvider::laptop_scale(11)))
+            .with_worker_init(init),
+    );
+    let f = client.register_function(fname, handler);
+    Ok((ep, f))
+}
+
+fn cmd_scan(args: &Args) -> Result<(), String> {
+    let pallet = load_pallet(args)?;
+    let backend = args.get_or("backend", "pjrt");
+    let workers = args.get_usize("workers", 2)?;
+    let max_blocks = args.get_usize("max-blocks", 4)?;
+    let limit = match args.get("limit") {
+        Some(_) => Some(args.get_usize("limit", 0)?),
+        None => None,
+    };
+
+    let svc = Service::new();
+    let (ep, f) = start_endpoint(&svc, backend, workers, max_blocks, artifact_dir(args))?;
+    let client = FaasClient::new(svc.clone());
+
+    println!("prepare: waiting-for-nodes");
+    let opts = pyhf_faas::coordinator::ScanOptions {
+        verbose: args.flag("verbose"),
+        limit,
+        ..Default::default()
+    };
+    let scan = run_scan(&client, ep.id, f, &pallet, &opts)?;
+
+    let m = svc.metrics.snapshot();
+    println!(
+        "\nscan '{}' complete: {} patches in {:.1} s wall ({} excluded at 95% CL)",
+        scan.analysis,
+        scan.points.len(),
+        scan.wall_seconds,
+        scan.n_excluded()
+    );
+    println!(
+        "  blocks {} | workers {} | mean wait {:.3} s | mean fit {:.3} s | total fit {:.1} s",
+        ep.blocks(),
+        ep.active_workers(),
+        m.mean_wait_s,
+        m.mean_service_s,
+        m.total_service_s
+    );
+    if let Some(ul) = upper_limit_on_axis(&scan.points, 0.0) {
+        println!("  interpolated 95% CL mass limit (m2 = 0): {ul:.0} GeV");
+    }
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, json::to_string_pretty(&scan.to_json())).map_err(|e| e.to_string())?;
+        println!("  wrote {out}");
+    }
+    ep.shutdown();
+    Ok(())
+}
+
+fn cmd_hypotest(args: &Args) -> Result<(), String> {
+    let pallet = load_pallet(args)?;
+    let patch_name = args.get("patch").ok_or("--patch <name> is required")?;
+    let backend = args.get_or("backend", "pjrt");
+    let patch = pallet
+        .patchset
+        .find(patch_name)
+        .ok_or_else(|| format!("no patch '{patch_name}' in pallet"))?;
+    let patched = patch.apply_to(&pallet.bkg_workspace).map_err(|e| e.to_string())?;
+    let ws = Workspace::from_json(&patched).map_err(|e| e.to_string())?;
+
+    let manifest = Manifest::load(&artifact_dir(args))?;
+    let classes = manifest.classes();
+    let class = dense::pick_class(&ws, &classes).map_err(|e| e.to_string())?;
+    let model = dense::compile(&ws, class).map_err(|e| e.to_string())?;
+
+    let (cls_obs, cls_exp, mu_hat, qmu) = match backend {
+        "pjrt" => {
+            let engine = Engine::cpu().map_err(|e| e.to_string())?;
+            let entry = manifest.hypotest(&class.name).ok_or("missing artifact")?;
+            let compiled = engine.load(entry, &manifest.dir).map_err(|e| e.to_string())?;
+            let h = compiled.hypotest(&model).map_err(|e| e.to_string())?;
+            (h.cls_obs, h.cls_exp, h.mu_hat, h.qmu)
+        }
+        "native" => {
+            let h = pyhf_faas::fitter::NativeFitter::new(&model).hypotest(1.0);
+            (h.cls_obs, h.cls_exp, h.mu_hat, h.qmu)
+        }
+        other => return Err(format!("unknown backend '{other}'")),
+    };
+    println!("patch {patch_name} (class {}):", class.name);
+    println!(
+        "  CLs_obs  = {cls_obs:.5}   ({})",
+        if cls_obs < 0.05 { "EXCLUDED at 95% CL" } else { "allowed" }
+    );
+    println!(
+        "  CLs_exp  = [{:.5}, {:.5}, {:.5}, {:.5}, {:.5}]  (-2..+2 sigma)",
+        cls_exp[0], cls_exp[1], cls_exp[2], cls_exp[3], cls_exp[4]
+    );
+    println!("  mu_hat   = {mu_hat:.4}   qmu = {qmu:.4}");
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<(), String> {
+    let pallet = load_pallet(args)?;
+    let trials = args.get_usize("trials", 10)?;
+    let sample = args.get_usize("sample", 12)?;
+    let blocks: Vec<usize> = args
+        .get_or("blocks", "1,2,4,8")
+        .split(',')
+        .map(|s| s.trim().parse().map_err(|_| format!("bad block count '{s}'")))
+        .collect::<Result<_, _>>()?;
+
+    // measure real service times on a sample of patches with the native
+    // fitter, then replay at paper scale
+    println!("measuring {sample} real fits (native backend) ...");
+    let manifest = Manifest::load(&artifact_dir(args)).ok();
+    let classes = manifest.as_ref().map(|m| m.classes()).unwrap_or_default();
+    let mut measured = Vec::new();
+    for patch in pallet.patchset.patches.iter().take(sample) {
+        let patched = patch.apply_to(&pallet.bkg_workspace).map_err(|e| e.to_string())?;
+        let ws = Workspace::from_json(&patched).map_err(|e| e.to_string())?;
+        let class = if classes.is_empty() {
+            default_class_for(&pallet.config.name)
+        } else {
+            dense::pick_class(&ws, &classes).map_err(|e| e.to_string())?.clone()
+        };
+        let model = dense::compile(&ws, &class).map_err(|e| e.to_string())?;
+        let t0 = std::time::Instant::now();
+        let _ = pyhf_faas::fitter::NativeFitter::new(&model).hypotest(1.0);
+        measured.push(t0.elapsed().as_secs_f64());
+    }
+    // tile up to the full patch count
+    let n = pallet.patchset.len();
+    let service: Vec<f64> = (0..n).map(|i| measured[i % measured.len()]).collect();
+
+    let paper_single = sim::PAPER_TABLE1
+        .iter()
+        .find(|r| r.analysis == pallet.config.name)
+        .map(|r| r.single_node_s)
+        .unwrap_or(60.0);
+    let row = sim::replay_table1_row(&pallet.config.name, &service, paper_single, trials, 42);
+    println!(
+        "paper-topology replay ({}): wall {:.1} ± {:.1} s | single node {:.0} s | speedup {:.1}x (multiplier {:.1})",
+        row.analysis, row.wall.mean, row.wall.std, row.single_node_s, row.speedup, row.work_multiplier
+    );
+
+    let scaled: Vec<f64> = service.iter().map(|s| s * row.work_multiplier).collect();
+    println!("block scaling (nodes_per_block=1, 24 workers/node, {trials} trials):");
+    for (b, s) in sim::block_scaling(&scaled, &blocks, trials, 7) {
+        println!("  max_blocks = {b:>2}: wall {:>8.1} ± {:>6.1} s", s.mean, s.std);
+    }
+    Ok(())
+}
+
+fn default_class_for(name: &str) -> dense::ShapeClass {
+    // fallback mirrors python/compile/shapes.py when artifacts are absent
+    let (b, s, a) = match name {
+        "1Lbb" => (80, 48, 48),
+        "2L0J" => (32, 16, 16),
+        "stau" => (48, 20, 28),
+        _ => (16, 6, 6),
+    };
+    dense::ShapeClass {
+        name: name.to_string(),
+        n_bins: b,
+        n_samples: s,
+        n_alpha: a,
+        n_free: 2,
+        bin_block: 16,
+        mu_max: 10.0,
+        max_newton: 48,
+        cg_iters: 64,
+    }
+}
+
+/// Compile the named patch of a pallet into a dense model.
+fn patch_model(args: &Args) -> Result<(String, dense::DenseModel), String> {
+    let pallet = load_pallet(args)?;
+    let patch_name = args.get("patch").ok_or("--patch <name> is required")?;
+    let patch = pallet
+        .patchset
+        .find(patch_name)
+        .ok_or_else(|| format!("no patch '{patch_name}' in pallet"))?;
+    let ws = Workspace::from_json(&patch.apply_to(&pallet.bkg_workspace).map_err(|e| e.to_string())?)
+        .map_err(|e| e.to_string())?;
+    let class = match Manifest::load(&artifact_dir(args)) {
+        Ok(m) => dense::pick_class(&ws, &m.classes()).map_err(|e| e.to_string())?.clone(),
+        Err(_) => default_class_for(&pallet.config.name),
+    };
+    let model = dense::compile(&ws, &class).map_err(|e| e.to_string())?;
+    Ok((patch_name.to_string(), model))
+}
+
+fn cmd_upper_limit(args: &Args) -> Result<(), String> {
+    let (name, model) = patch_model(args)?;
+    let points = args.get_usize("points", 16)?;
+    let grid = pyhf_faas::infer::default_mu_grid(model.class.mu_max, points);
+    let ul = pyhf_faas::infer::upper_limit_scan(&model, &grid);
+    println!("upper-limit scan for '{name}' ({points} points):");
+    for (mu, cls, _) in &ul.scan {
+        println!("  mu = {mu:7.3}  CLs = {cls:.5}");
+    }
+    match ul.obs {
+        Some(x) => println!("observed 95% CL upper limit: mu < {x:.4}"),
+        None => println!("no 0.05 crossing in range"),
+    }
+    if let (Some(lo2), Some(lo1), Some(med), Some(hi1), Some(hi2)) =
+        (ul.exp[0], ul.exp[1], ul.exp[2], ul.exp[3], ul.exp[4])
+    {
+        println!("expected band: [{lo2:.4}, {lo1:.4}, {med:.4}, {hi1:.4}, {hi2:.4}] (-2..+2 sigma)");
+    }
+    Ok(())
+}
+
+fn cmd_toys(args: &Args) -> Result<(), String> {
+    let (name, model) = patch_model(args)?;
+    let n_toys = args.get_usize("n-toys", 300)?;
+    let seed = args.get_u64("seed", 42)?;
+    let asym = pyhf_faas::fitter::NativeFitter::new(&model).hypotest(1.0);
+    let toys = pyhf_faas::fitter::hypotest_toys(&model, 1.0, n_toys, seed);
+    println!("toy-based hypotest for '{name}' ({n_toys} toys/hypothesis):");
+    println!("  qmu_obs        = {:.4}", toys.qmu_obs);
+    println!("  CLs (toys)     = {:.4}  (CLsb {:.4} / CLb {:.4})", toys.cls_obs, toys.clsb, toys.clb);
+    println!("  CLs (asympt.)  = {:.4}", asym.cls_obs);
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<(), String> {
+    let dir = artifact_dir(args);
+    println!("pyhf-faas — three-layer Rust + JAX + Pallas reproduction");
+    match Engine::cpu() {
+        Ok(e) => println!("PJRT platform: {}", e.platform()),
+        Err(e) => println!("PJRT unavailable: {e}"),
+    }
+    match Manifest::load(Path::new(&dir)) {
+        Ok(m) => {
+            println!("artifacts ({}):", dir.display());
+            let mut keys: Vec<_> = m.entries.keys().collect();
+            keys.sort();
+            for k in keys {
+                let e = &m.entries[k];
+                println!(
+                    "  {k}: class {} (B={}, S={}, A={}, P={})",
+                    e.class.name,
+                    e.class.n_bins,
+                    e.class.n_samples,
+                    e.class.n_alpha,
+                    e.class.n_params()
+                );
+            }
+        }
+        Err(e) => println!("no artifacts: {e}"),
+    }
+    println!("analyses: 1Lbb (125 patches), 2L0J (76), stau (57), quickstart (9)");
+    Ok(())
+}

@@ -1,0 +1,388 @@
+//! Synthetic pallet generator: HEPData-pallet-shaped workspaces + patchsets.
+//!
+//! Substitutes for the published ATLAS probability models the paper fits
+//! (HEPData is not reachable from this environment); see DESIGN.md §4. The
+//! generator emits a background-only HistFactory workspace and a signal
+//! patchset with the same *structure* (channel counts, modifier budget,
+//! patch grid naming `PREFIX_m1_m2`) and complexity tier as each analysis.
+
+use crate::histfactory::patchset::{Patch, Patchset};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Structural description of one analysis pallet.
+#[derive(Debug, Clone)]
+pub struct AnalysisConfig {
+    /// e.g. "1Lbb" — matches the AOT shape-class name.
+    pub name: String,
+    /// patch-name prefix, e.g. "C1N2_Wh_hbb"
+    pub prefix: String,
+    pub n_channels: usize,
+    pub bins_per_channel: usize,
+    /// background samples per channel (signal arrives via patch)
+    pub bkg_samples: usize,
+    /// correlated normsys systematics shared across channels
+    pub n_normsys: usize,
+    /// correlated histosys systematics shared across channels
+    pub n_histosys: usize,
+    pub n_patches: usize,
+    /// mean background yield scale of the leading sample
+    pub bkg_scale: f64,
+    /// signal yield at the lightest mass point
+    pub signal_scale: f64,
+    pub seed: u64,
+    /// include a lumi modifier on all samples
+    pub lumi: bool,
+}
+
+/// A generated pallet: background-only workspace + signal patchset.
+#[derive(Debug, Clone)]
+pub struct Pallet {
+    pub config: AnalysisConfig,
+    pub bkg_workspace: Json,
+    pub patchset: Patchset,
+}
+
+fn channel_name(i: usize) -> String {
+    // SRs first, then CRs — cosmetic, mirrors published workspaces
+    if i % 2 == 0 {
+        format!("SR_lep_cuts_{}", i / 2)
+    } else {
+        format!("CR_bkg_{}", i / 2)
+    }
+}
+
+/// Generate the background-only workspace document.
+fn gen_bkg_workspace(cfg: &AnalysisConfig, rng: &mut Rng) -> Json {
+    let nb = cfg.bins_per_channel;
+
+    // correlated systematic magnitudes, shared across channels
+    let normsys: Vec<(String, f64)> = (0..cfg.n_normsys)
+        .map(|i| (format!("sys_norm_{i}"), rng.uniform(0.02, 0.20)))
+        .collect();
+    let histosys: Vec<(String, f64)> = (0..cfg.n_histosys)
+        .map(|i| (format!("sys_shape_{i}"), rng.uniform(0.03, 0.15)))
+        .collect();
+
+    let mut channels = Vec::new();
+    let mut observations = Vec::new();
+    for c in 0..cfg.n_channels {
+        let cname = channel_name(c);
+        let mut samples = Vec::new();
+        let mut totals = vec![0.0f64; nb];
+
+        for s in 0..cfg.bkg_samples {
+            let norm = cfg.bkg_scale * rng.uniform(0.5, 1.5) / (s + 1) as f64;
+            let slope = rng.uniform(1.0, 4.0);
+            let data: Vec<f64> = (0..nb)
+                .map(|b| {
+                    let x = b as f64 / nb.max(2) as f64;
+                    norm * (-slope * x).exp() + rng.uniform(0.5, 2.0)
+                })
+                .collect();
+            for (b, &v) in data.iter().enumerate() {
+                totals[b] += v;
+            }
+
+            let mut modifiers = Vec::new();
+            // each sample subscribes to a subset of the shared systematics
+            for (name, mag) in &normsys {
+                if rng.f64() < 0.6 {
+                    let hi = 1.0 + mag * rng.uniform(0.7, 1.3);
+                    let lo = (1.0 / hi).max(0.5) * rng.uniform(0.95, 1.05);
+                    modifiers.push(Json::obj(vec![
+                        ("name", Json::str(name.clone())),
+                        ("type", Json::str("normsys")),
+                        ("data", Json::obj(vec![("hi", Json::num(hi)), ("lo", Json::num(lo))])),
+                    ]));
+                }
+            }
+            for (name, mag) in &histosys {
+                if rng.f64() < 0.5 {
+                    let tilt = mag * rng.uniform(-1.0, 1.0);
+                    let hi: Vec<f64> = data
+                        .iter()
+                        .enumerate()
+                        .map(|(b, &v)| v * (1.0 + tilt * (b as f64 / nb as f64 - 0.5)))
+                        .collect();
+                    let lo: Vec<f64> = data
+                        .iter()
+                        .enumerate()
+                        .map(|(b, &v)| v * (1.0 - tilt * (b as f64 / nb as f64 - 0.5)))
+                        .collect();
+                    modifiers.push(Json::obj(vec![
+                        ("name", Json::str(name.clone())),
+                        ("type", Json::str("histosys")),
+                        (
+                            "data",
+                            Json::obj(vec![
+                                ("hi_data", Json::arr_f64(&hi)),
+                                ("lo_data", Json::arr_f64(&lo)),
+                            ]),
+                        ),
+                    ]));
+                }
+            }
+            if cfg.lumi {
+                modifiers.push(Json::obj(vec![
+                    ("name", Json::str("lumi")),
+                    ("type", Json::str("lumi")),
+                    ("data", Json::obj(vec![("sigma", Json::num(0.017))])),
+                ]));
+            }
+            // leading sample floats freely (data-driven normalization)
+            if s == 0 {
+                modifiers.push(Json::obj(vec![
+                    ("name", Json::str("bkg_norm")),
+                    ("type", Json::str("normfactor")),
+                    ("data", Json::Null),
+                ]));
+            }
+            // MC stat uncertainty on every background sample
+            let stat: Vec<f64> = data.iter().map(|v| (v * rng.uniform(0.0005, 0.004)).sqrt().max(0.01)).collect();
+            modifiers.push(Json::obj(vec![
+                ("name", Json::str(format!("staterror_{cname}"))),
+                ("type", Json::str("staterror")),
+                ("data", Json::arr_f64(&stat)),
+            ]));
+
+            samples.push(Json::obj(vec![
+                ("name", Json::str(format!("bkg_{s}"))),
+                ("data", Json::arr_f64(&data)),
+                ("modifiers", Json::Arr(modifiers)),
+            ]));
+        }
+
+        // observed data: Poisson around total background
+        let obs: Vec<f64> = totals.iter().map(|&t| rng.poisson(t) as f64).collect();
+        observations.push(Json::obj(vec![
+            ("name", Json::str(cname.clone())),
+            ("data", Json::arr_f64(&obs)),
+        ]));
+        channels.push(Json::obj(vec![
+            ("name", Json::str(cname)),
+            ("samples", Json::Arr(samples)),
+        ]));
+    }
+
+    Json::obj(vec![
+        ("channels", Json::Arr(channels)),
+        ("observations", Json::Arr(observations)),
+        (
+            "measurements",
+            Json::Arr(vec![Json::obj(vec![
+                ("name", Json::str("NormalMeasurement")),
+                (
+                    "config",
+                    Json::obj(vec![
+                        ("poi", Json::str("mu")),
+                        ("parameters", Json::Arr(vec![])),
+                    ]),
+                ),
+            ])]),
+        ),
+        ("version", Json::str("1.0.0")),
+    ])
+}
+
+/// Mass grid like the published electroweakino scan: m1 rising, m2 < m1.
+fn mass_grid(n: usize) -> Vec<(u32, u32)> {
+    let mut pts = Vec::new();
+    let mut m1 = 150u32;
+    'outer: loop {
+        let mut m2 = 0u32;
+        while m2 + 125 <= m1 {
+            pts.push((m1, m2));
+            if pts.len() == n {
+                break 'outer;
+            }
+            m2 += 50;
+        }
+        m1 += 25;
+        if m1 > 5000 {
+            break;
+        }
+    }
+    // published grids are not ordered lexicographically; shuffle-stable order
+    pts.truncate(n);
+    pts
+}
+
+/// Generate the signal patchset: each patch adds one signal sample per
+/// channel (appended at index 0 like pyhf pallets) with a mass-dependent
+/// yield and a bump-like shape.
+fn gen_patchset(cfg: &AnalysisConfig, rng: &mut Rng) -> Patchset {
+    let nb = cfg.bins_per_channel;
+    let grid = mass_grid(cfg.n_patches);
+    let mut patches = Vec::with_capacity(grid.len());
+
+    for &(m1, m2) in &grid {
+        // heavier signal -> smaller cross-section; compressed (m1-m2 small)
+        // -> lower acceptance
+        let xsec = cfg.signal_scale * (150.0 / m1 as f64).powf(2.5);
+        let acc = 0.4 + 0.6 * ((m1 - m2) as f64 / m1 as f64).min(1.0);
+        let mut ops = Vec::new();
+        for c in 0..cfg.n_channels {
+            let center = rng.uniform(0.3, 0.8);
+            let width = rng.uniform(0.1, 0.25);
+            let data: Vec<f64> = (0..nb)
+                .map(|b| {
+                    let x = b as f64 / nb.max(2) as f64;
+                    let z = (x - center) / width;
+                    (xsec * acc * (-0.5 * z * z).exp()).max(1e-4)
+                })
+                .collect();
+            let signal = Json::obj(vec![
+                ("name", Json::str(format!("signal_{m1}_{m2}"))),
+                ("data", Json::arr_f64(&data)),
+                (
+                    "modifiers",
+                    Json::Arr(vec![
+                        Json::obj(vec![
+                            ("name", Json::str("mu")),
+                            ("type", Json::str("normfactor")),
+                            ("data", Json::Null),
+                        ]),
+                        Json::obj(vec![
+                            ("name", Json::str("sys_sig_xsec")),
+                            ("type", Json::str("normsys")),
+                            (
+                                "data",
+                                Json::obj(vec![
+                                    ("hi", Json::num(1.05)),
+                                    ("lo", Json::num(0.95)),
+                                ]),
+                            ),
+                        ]),
+                    ]),
+                ),
+            ]);
+            ops.push(Json::obj(vec![
+                ("op", Json::str("add")),
+                ("path", Json::str(format!("/channels/{c}/samples/0"))),
+                ("value", signal),
+            ]));
+        }
+        patches.push(Patch {
+            name: format!("{}_{}_{}", cfg.prefix, m1, m2),
+            values: vec![m1 as f64, m2 as f64],
+            ops: Json::Arr(ops),
+        });
+    }
+
+    Patchset {
+        name: format!("{}-pallet", cfg.name),
+        description: format!(
+            "synthetic reproduction pallet for the {} analysis tier",
+            cfg.name
+        ),
+        labels: vec!["m1".into(), "m2".into()],
+        patches,
+    }
+}
+
+/// Generate a complete pallet for an analysis config.
+pub fn generate(cfg: &AnalysisConfig) -> Pallet {
+    let mut rng = Rng::new(cfg.seed);
+    let bkg_workspace = gen_bkg_workspace(cfg, &mut rng);
+    let patchset = gen_patchset(cfg, &mut rng);
+    Pallet { config: cfg.clone(), bkg_workspace, patchset }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::histfactory::spec::Workspace;
+
+    fn tiny() -> AnalysisConfig {
+        AnalysisConfig {
+            name: "quickstart".into(),
+            prefix: "SIG".into(),
+            n_channels: 2,
+            bins_per_channel: 4,
+            bkg_samples: 2,
+            n_normsys: 3,
+            n_histosys: 2,
+            n_patches: 9,
+            bkg_scale: 60.0,
+            signal_scale: 8.0,
+            seed: 7,
+            lumi: false,
+        }
+    }
+
+    #[test]
+    fn generates_parseable_workspace() {
+        let p = generate(&tiny());
+        let ws = Workspace::from_json(&p.bkg_workspace).unwrap();
+        assert_eq!(ws.channels.len(), 2);
+        assert_eq!(ws.n_bins(), 8);
+        assert_eq!(ws.channels[0].samples.len(), 2);
+        assert!(ws.flat_observations().is_ok());
+    }
+
+    #[test]
+    fn generates_requested_patch_count_with_grid_names() {
+        let p = generate(&tiny());
+        assert_eq!(p.patchset.len(), 9);
+        for patch in &p.patchset.patches {
+            assert!(patch.name.starts_with("SIG_"), "{}", patch.name);
+            assert_eq!(patch.values.len(), 2);
+            assert!(patch.values[0] > patch.values[1]);
+        }
+        // names unique
+        let mut names: Vec<_> = p.patchset.patches.iter().map(|p| p.name.clone()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), 9);
+    }
+
+    #[test]
+    fn patches_apply_and_add_signal() {
+        let p = generate(&tiny());
+        let name = p.patchset.patches[0].name.clone();
+        let patched = p.patchset.apply(&p.bkg_workspace, &name).unwrap();
+        let ws = Workspace::from_json(&patched).unwrap();
+        assert_eq!(ws.channels[0].samples.len(), 3);
+        assert!(ws.channels[0].samples[0].name.starts_with("signal_"));
+        // signal carries the POI
+        assert!(ws.channels[0].samples[0]
+            .modifiers
+            .iter()
+            .any(|m| m.kind() == "normfactor" && m.name() == "mu"));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(&tiny());
+        let b = generate(&tiny());
+        assert_eq!(
+            crate::util::json::to_string(&a.bkg_workspace),
+            crate::util::json::to_string(&b.bkg_workspace)
+        );
+        let mut cfg = tiny();
+        cfg.seed = 8;
+        let c = generate(&cfg);
+        assert_ne!(
+            crate::util::json::to_string(&a.bkg_workspace),
+            crate::util::json::to_string(&c.bkg_workspace)
+        );
+    }
+
+    #[test]
+    fn heavier_masses_have_smaller_yield() {
+        let p = generate(&tiny());
+        let first = &p.patchset.patches[0];
+        let last = p.patchset.patches.last().unwrap();
+        let yield_of = |patch: &crate::histfactory::patchset::Patch| -> f64 {
+            let ws = patch.apply_to(&p.bkg_workspace).unwrap();
+            let ws = Workspace::from_json(&ws).unwrap();
+            ws.channels
+                .iter()
+                .map(|c| c.samples[0].data.iter().sum::<f64>())
+                .sum()
+        };
+        assert!(first.values[0] < last.values[0]);
+        assert!(yield_of(first) > yield_of(last));
+    }
+}

@@ -1,0 +1,77 @@
+//! Pallet directory I/O, mirroring HEPData pallet layout:
+//!
+//! ```text
+//! <dir>/BkgOnly.json     background-only workspace
+//! <dir>/patchset.json    signal patchset
+//! <dir>/metadata.json    generator provenance (ours)
+//! ```
+
+use std::fs;
+use std::path::Path;
+
+use crate::histfactory::patchset::Patchset;
+use crate::pallet::generator::{AnalysisConfig, Pallet};
+use crate::util::json::{self, Json};
+
+/// Write a pallet to `dir` (created if missing).
+pub fn write_pallet(pallet: &Pallet, dir: &Path) -> std::io::Result<()> {
+    fs::create_dir_all(dir)?;
+    fs::write(dir.join("BkgOnly.json"), json::to_string_pretty(&pallet.bkg_workspace))?;
+    fs::write(
+        dir.join("patchset.json"),
+        json::to_string_pretty(&pallet.patchset.to_json()),
+    )?;
+    let cfg = &pallet.config;
+    let meta = Json::obj(vec![
+        ("analysis", Json::str(cfg.name.clone())),
+        ("prefix", Json::str(cfg.prefix.clone())),
+        ("n_channels", Json::num(cfg.n_channels as f64)),
+        ("bins_per_channel", Json::num(cfg.bins_per_channel as f64)),
+        ("bkg_samples", Json::num(cfg.bkg_samples as f64)),
+        ("n_patches", Json::num(cfg.n_patches as f64)),
+        ("seed", Json::num(cfg.seed as f64)),
+        ("generator", Json::str("pyhf-faas synthetic pallet generator")),
+    ]);
+    fs::write(dir.join("metadata.json"), json::to_string_pretty(&meta))
+}
+
+/// Load `(bkg_workspace, patchset)` from a pallet directory.
+pub fn read_pallet(dir: &Path) -> Result<(Json, Patchset), String> {
+    let bkg_text = fs::read_to_string(dir.join("BkgOnly.json"))
+        .map_err(|e| format!("read {}/BkgOnly.json: {e}", dir.display()))?;
+    let ps_text = fs::read_to_string(dir.join("patchset.json"))
+        .map_err(|e| format!("read {}/patchset.json: {e}", dir.display()))?;
+    let bkg = json::parse(&bkg_text).map_err(|e| e.to_string())?;
+    let ps = Patchset::from_str(&ps_text).map_err(|e| e.to_string())?;
+    Ok((bkg, ps))
+}
+
+/// Generate-and-write in one step; returns the pallet.
+pub fn materialize(cfg: &AnalysisConfig, dir: &Path) -> std::io::Result<Pallet> {
+    let pallet = crate::pallet::generator::generate(cfg);
+    write_pallet(&pallet, dir)?;
+    Ok(pallet)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pallet::library::config_quickstart;
+
+    #[test]
+    fn roundtrip_pallet_dir() {
+        let dir = std::env::temp_dir().join(format!("pallet-test-{}", std::process::id()));
+        let pallet = materialize(&config_quickstart(), &dir).unwrap();
+        let (bkg, ps) = read_pallet(&dir).unwrap();
+        assert_eq!(json::to_string(&bkg), json::to_string(&pallet.bkg_workspace));
+        assert_eq!(ps.len(), pallet.patchset.len());
+        assert_eq!(ps.patches[0].name, pallet.patchset.patches[0].name);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn read_missing_dir_is_error() {
+        let err = read_pallet(Path::new("/nonexistent/pallet")).unwrap_err();
+        assert!(err.contains("BkgOnly.json"));
+    }
+}

@@ -1,0 +1,121 @@
+//! The three Table-1 analyses plus the quickstart pallet, as generator
+//! configs. Structural tiers mirror the published workspaces (DESIGN.md §4):
+//! 1Lbb is the heavy model (most channels/bins/NPs, slowest per-patch fits),
+//! 2L0J the light one, stau in between — preserving the per-patch fit-cost
+//! ordering behind the paper's Table 1.
+
+use crate::pallet::generator::AnalysisConfig;
+
+/// Eur. Phys. J. C 80 (2020) 691 — electroweakino 1Lbb search, 125 patches.
+pub fn config_1lbb() -> AnalysisConfig {
+    AnalysisConfig {
+        name: "1Lbb".into(),
+        prefix: "C1N2_Wh_hbb".into(),
+        n_channels: 8,
+        bins_per_channel: 9,
+        bkg_samples: 5,
+        n_normsys: 24,
+        n_histosys: 20,
+        n_patches: 125,
+        bkg_scale: 120.0,
+        signal_scale: 14.0,
+        seed: 0x1bb,
+        lumi: true,
+    }
+}
+
+/// JHEP 06 (2020) 46 — squarks/gluinos with same-sign leptons, 76 patches.
+pub fn config_2l0j() -> AnalysisConfig {
+    AnalysisConfig {
+        name: "2L0J".into(),
+        prefix: "SS_N2_hino".into(),
+        n_channels: 4,
+        bins_per_channel: 6,
+        bkg_samples: 3,
+        n_normsys: 8,
+        n_histosys: 5,
+        n_patches: 76,
+        bkg_scale: 40.0,
+        signal_scale: 9.0,
+        seed: 0x210,
+        lumi: true,
+    }
+}
+
+/// Phys. Rev. D 101 (2020) 032009 — direct stau production, 57 patches.
+pub fn config_stau() -> AnalysisConfig {
+    AnalysisConfig {
+        name: "stau".into(),
+        prefix: "StauStau".into(),
+        n_channels: 5,
+        bins_per_channel: 8,
+        bkg_samples: 3,
+        n_normsys: 14,
+        n_histosys: 12,
+        n_patches: 57,
+        bkg_scale: 70.0,
+        signal_scale: 11.0,
+        seed: 0x57a,
+        lumi: true,
+    }
+}
+
+/// Tiny pallet for the quickstart example and fast tests.
+pub fn config_quickstart() -> AnalysisConfig {
+    AnalysisConfig {
+        name: "quickstart".into(),
+        prefix: "DEMO".into(),
+        n_channels: 2,
+        bins_per_channel: 4,
+        bkg_samples: 2,
+        n_normsys: 3,
+        n_histosys: 2,
+        n_patches: 9,
+        bkg_scale: 60.0,
+        signal_scale: 8.0,
+        seed: 0x9d,
+        lumi: false,
+    }
+}
+
+/// All analysis configs keyed by shape-class name.
+pub fn all_configs() -> Vec<AnalysisConfig> {
+    vec![config_1lbb(), config_2l0j(), config_stau(), config_quickstart()]
+}
+
+/// Look up a config by name.
+pub fn config_by_name(name: &str) -> Option<AnalysisConfig> {
+    all_configs().into_iter().find(|c| c.name == name)
+}
+
+/// Patch counts from the paper's Table 1 (for assertions in benches/tests).
+pub const PAPER_PATCHES: [(&str, usize); 3] = [("1Lbb", 125), ("2L0J", 76), ("stau", 57)];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn patch_counts_match_paper_table1() {
+        assert_eq!(config_1lbb().n_patches, 125);
+        assert_eq!(config_2l0j().n_patches, 76);
+        assert_eq!(config_stau().n_patches, 57);
+    }
+
+    #[test]
+    fn complexity_ordering_is_heavy_medium_light() {
+        let complexity = |c: &AnalysisConfig| {
+            c.n_channels * c.bins_per_channel * (c.n_normsys + c.n_histosys)
+        };
+        let heavy = complexity(&config_1lbb());
+        let medium = complexity(&config_stau());
+        let light = complexity(&config_2l0j());
+        assert!(heavy > medium && medium > light);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(config_by_name("1Lbb").is_some());
+        assert!(config_by_name("nope").is_none());
+    }
+}

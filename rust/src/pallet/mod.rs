@@ -1,0 +1,9 @@
+//! Synthetic pallet substrate: generator + the Table-1 analysis library +
+//! HEPData-style directory I/O (substitution for the published ATLAS
+//! probability models, DESIGN.md §4).
+
+pub mod generator;
+pub mod io;
+pub mod library;
+
+pub use generator::{generate, AnalysisConfig, Pallet};

@@ -1,0 +1,169 @@
+//! PJRT execution engine: load HLO-text artifacts, compile on the CPU
+//! client, execute dense models. Adapted from /opt/xla-example/load_hlo.
+//!
+//! Thread model: `xla::PjRtClient` is `Rc`-backed (not `Send`), so every
+//! worker thread owns its own `Engine` and compiled executables. That
+//! per-worker compile cost is the direct analog of funcX worker startup
+//! (container pull + `pip install pyhf`), and is accounted the same way in
+//! the scaling study (DESIGN.md §4).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::histfactory::dense::DenseModel;
+use crate::infer::results::PointResult;
+use crate::runtime::manifest::ArtifactEntry;
+
+/// A PJRT CPU client.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+/// A compiled artifact bound to its manifest entry.
+pub struct Compiled {
+    pub entry: ArtifactEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Parsed outputs of a hypotest artifact execution (OUTPUT_ORDER contract).
+#[derive(Debug, Clone)]
+pub struct HypotestOut {
+    pub cls_obs: f64,
+    pub cls_exp: [f64; 5],
+    pub qmu: f64,
+    pub qmu_a: f64,
+    pub mu_hat: f64,
+    pub nll_free: f64,
+    pub nll_fixed: f64,
+    /// (accepted steps, |grad|) per fit, 4 fits
+    pub diag: [f64; 8],
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        Ok(Engine { client: xla::PjRtClient::cpu().context("create PJRT CPU client")? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact from `dir`.
+    pub fn load(&self, entry: &ArtifactEntry, dir: &Path) -> Result<Compiled> {
+        let path = entry.path(dir);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 artifact path"))?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))?;
+        Ok(Compiled { entry: entry.clone(), exe })
+    }
+}
+
+impl Compiled {
+    /// Execute with the dense model's tensors; returns flattened f64 outputs
+    /// in OUTPUT_ORDER.
+    pub fn execute_raw(&self, inputs: &[(&str, &[f64])]) -> Result<Vec<Vec<f64>>> {
+        // marshal in manifest order, validating names and lengths
+        if inputs.len() != self.entry.inputs.len() {
+            return Err(anyhow!(
+                "artifact '{}' expects {} inputs, got {}",
+                self.entry.key,
+                self.entry.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (name, data)) in inputs.iter().enumerate() {
+            let (want_name, want_shape) = &self.entry.inputs[i];
+            if want_name != name {
+                return Err(anyhow!(
+                    "input {i} of '{}' must be '{want_name}', got '{name}'",
+                    self.entry.key
+                ));
+            }
+            let want_len: usize = want_shape.iter().product::<usize>().max(1);
+            if data.len() != want_len {
+                return Err(anyhow!(
+                    "input '{name}' of '{}' expects {want_len} elements, got {}",
+                    self.entry.key,
+                    data.len()
+                ));
+            }
+            let lit = xla::Literal::vec1(data);
+            let dims: Vec<i64> = want_shape.iter().map(|&d| d as i64).collect();
+            let lit = if dims.len() > 1 {
+                lit.reshape(&dims).context("reshape literal")?
+            } else {
+                lit
+            };
+            literals.push(lit);
+        }
+
+        let result = self.exe.execute::<xla::Literal>(&literals).context("execute artifact")?;
+        let mut tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetch result literal")?;
+        let parts = tuple.decompose_tuple().context("decompose output tuple")?;
+        let mut out = Vec::with_capacity(parts.len());
+        for part in parts {
+            out.push(part.to_vec::<f64>().context("read f64 output")?);
+        }
+        Ok(out)
+    }
+
+    /// Execute the hypotest artifact against a compiled dense model.
+    pub fn hypotest(&self, model: &DenseModel) -> Result<HypotestOut> {
+        let views = model.input_views();
+        let outs = self.execute_raw(&views)?;
+        if outs.len() != 8 {
+            return Err(anyhow!("hypotest artifact returned {} outputs, want 8", outs.len()));
+        }
+        let scalar = |i: usize| -> f64 { outs[i][0] };
+        let mut cls_exp = [0.0; 5];
+        cls_exp.copy_from_slice(&outs[1][..5]);
+        let mut diag = [0.0; 8];
+        diag.copy_from_slice(&outs[7][..8]);
+        Ok(HypotestOut {
+            cls_obs: scalar(0),
+            cls_exp,
+            qmu: scalar(2),
+            qmu_a: scalar(3),
+            mu_hat: scalar(4),
+            nll_free: scalar(5),
+            nll_fixed: scalar(6),
+            diag,
+        })
+    }
+
+    /// Execute the MLE artifact: returns (theta_hat, nll, diag).
+    pub fn mle(&self, model: &DenseModel) -> Result<(Vec<f64>, f64, Vec<f64>)> {
+        let views = model.input_views();
+        let outs = self.execute_raw(&views)?;
+        if outs.len() != 3 {
+            return Err(anyhow!("mle artifact returned {} outputs, want 3", outs.len()));
+        }
+        Ok((outs[0].clone(), outs[1][0], outs[2].clone()))
+    }
+}
+
+impl HypotestOut {
+    /// Convert to a scan point result.
+    pub fn to_point(&self, patch: &str, values: Vec<f64>, fit_seconds: f64) -> PointResult {
+        PointResult {
+            patch: patch.to_string(),
+            values,
+            cls_obs: self.cls_obs,
+            cls_exp: self.cls_exp,
+            qmu: self.qmu,
+            qmu_a: self.qmu_a,
+            mu_hat: self.mu_hat,
+            fit_seconds,
+        }
+    }
+}

@@ -1,0 +1,201 @@
+//! Artifact manifest: the shape/ordering contract emitted by
+//! ``python/compile/aot.py`` (`artifacts/manifest.json`).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::histfactory::dense::ShapeClass;
+use crate::util::json::{self, Json};
+
+/// One artifact entry (a compiled HLO program for a shape class).
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    /// e.g. "hypotest_1Lbb"
+    pub key: String,
+    /// "hypotest" or "mle"
+    pub kind: String,
+    /// file name within the artifact directory
+    pub file: String,
+    pub class: ShapeClass,
+    /// input names with shapes, in artifact argument order
+    pub inputs: Vec<(String, Vec<usize>)>,
+}
+
+impl ArtifactEntry {
+    pub fn path(&self, dir: &Path) -> PathBuf {
+        dir.join(&self.file)
+    }
+
+    /// Total element count of input `i`.
+    pub fn input_len(&self, i: usize) -> usize {
+        self.inputs[i].1.iter().product::<usize>().max(1)
+    }
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub input_order: Vec<String>,
+    pub output_order: Vec<String>,
+    pub mu_test: f64,
+    pub use_pallas: bool,
+    pub entries: HashMap<String, ArtifactEntry>,
+}
+
+fn shape_class_from_json(v: &Json) -> Result<ShapeClass, String> {
+    let get = |k: &str| -> Result<f64, String> {
+        v.get(k)
+            .and_then(|x| x.as_f64())
+            .ok_or_else(|| format!("manifest shape_class missing '{k}'"))
+    };
+    Ok(ShapeClass {
+        name: v
+            .get("name")
+            .and_then(|x| x.as_str())
+            .ok_or("manifest shape_class missing 'name'")?
+            .to_string(),
+        n_bins: get("n_bins")? as usize,
+        n_samples: get("n_samples")? as usize,
+        n_alpha: get("n_alpha")? as usize,
+        n_free: get("n_free")? as usize,
+        bin_block: get("bin_block")? as usize,
+        mu_max: get("mu_max")?,
+        max_newton: get("max_newton")? as usize,
+        cg_iters: get("cg_iters")? as usize,
+    })
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e} (run `make artifacts` first)", path.display()))?;
+        let doc = json::parse(&text).map_err(|e| e.to_string())?;
+
+        let strings = |key: &str| -> Result<Vec<String>, String> {
+            doc.get(key)
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_str().map(String::from)).collect())
+                .ok_or_else(|| format!("manifest missing '{key}'"))
+        };
+
+        let mut entries = HashMap::new();
+        let entries_json = doc
+            .get("entries")
+            .and_then(|v| v.as_obj())
+            .ok_or("manifest missing 'entries'")?;
+        for (key, ej) in entries_json {
+            let file = ej
+                .get("file")
+                .and_then(|v| v.as_str())
+                .ok_or("manifest entry missing 'file'")?
+                .to_string();
+            let kind = ej
+                .get("kind")
+                .and_then(|v| v.as_str())
+                .ok_or("manifest entry missing 'kind'")?
+                .to_string();
+            let class = shape_class_from_json(
+                ej.get("shape_class").ok_or("manifest entry missing 'shape_class'")?,
+            )?;
+            let mut inputs = Vec::new();
+            for ij in ej.get("inputs").and_then(|v| v.as_arr()).ok_or("entry missing inputs")? {
+                let name = ij
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .ok_or("input missing name")?
+                    .to_string();
+                let shape: Vec<usize> = ij
+                    .get("shape")
+                    .and_then(|v| v.as_arr())
+                    .ok_or("input missing shape")?
+                    .iter()
+                    .filter_map(|x| x.as_usize())
+                    .collect();
+                inputs.push((name, shape));
+            }
+            entries.insert(
+                key.clone(),
+                ArtifactEntry { key: key.clone(), kind, file, class, inputs },
+            );
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            input_order: strings("input_order")?,
+            output_order: strings("output_order")?,
+            mu_test: doc.get("mu_test").and_then(|v| v.as_f64()).unwrap_or(1.0),
+            use_pallas: doc.get("use_pallas").and_then(|v| v.as_bool()).unwrap_or(true),
+            entries,
+        })
+    }
+
+    /// The hypotest entry for a shape-class name.
+    pub fn hypotest(&self, class: &str) -> Option<&ArtifactEntry> {
+        self.entries.get(&format!("hypotest_{class}"))
+    }
+
+    pub fn mle(&self, class: &str) -> Option<&ArtifactEntry> {
+        self.entries.get(&format!("mle_{class}"))
+    }
+
+    /// All shape classes present, smallest first.
+    pub fn classes(&self) -> Vec<ShapeClass> {
+        let mut out: Vec<ShapeClass> = self
+            .entries
+            .values()
+            .filter(|e| e.kind == "hypotest")
+            .map(|e| e.class.clone())
+            .collect();
+        out.sort_by_key(|c| c.n_params());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MANIFEST: &str = r#"{
+        "format": "hlo-text", "dtype": "f64", "mu_test": 1.0, "use_pallas": true,
+        "input_order": ["data", "nominal"],
+        "output_order": ["cls_obs"],
+        "entries": {
+            "hypotest_quickstart": {
+                "file": "hypotest_quickstart.hlo.txt",
+                "kind": "hypotest",
+                "shape_class": {"name": "quickstart", "n_bins": 16, "n_samples": 6,
+                                "n_alpha": 6, "n_free": 2, "bin_block": 16,
+                                "mu_max": 10.0, "max_newton": 32, "cg_iters": 24,
+                                "n_params": 24},
+                "inputs": [
+                    {"name": "data", "shape": [16], "dtype": "f64"},
+                    {"name": "nominal", "shape": [6, 16], "dtype": "f64"}
+                ]
+            }
+        }
+    }"#;
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join(format!("manifest-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), MANIFEST).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.input_order, vec!["data", "nominal"]);
+        let e = m.hypotest("quickstart").unwrap();
+        assert_eq!(e.class.n_params(), 24);
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.input_len(1), 96);
+        assert_eq!(m.classes().len(), 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make_artifacts() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(err.contains("make artifacts"));
+    }
+}

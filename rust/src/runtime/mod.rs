@@ -1,0 +1,24 @@
+//! Runtime layer: PJRT client wrapper + artifact manifest. Loads the
+//! AOT-compiled HLO-text programs produced by `python/compile/aot.py` and
+//! executes them from the request path (no Python anywhere at runtime).
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Compiled, Engine, HypotestOut};
+pub use manifest::{ArtifactEntry, Manifest};
+
+use std::path::PathBuf;
+
+/// Default artifact directory: `$PYHF_FAAS_ARTIFACTS`, else `./artifacts`,
+/// else `<repo>/artifacts` (so examples work from any working directory).
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("PYHF_FAAS_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    let local = PathBuf::from("artifacts");
+    if local.join("manifest.json").exists() {
+        return local;
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

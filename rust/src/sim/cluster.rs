@@ -1,0 +1,276 @@
+//! Discrete-event cluster simulator: replays measured per-task service
+//! times through a block/node/worker topology with provisioning latency,
+//! worker startup, data transfer and stragglers.
+//!
+//! This is the substitution (DESIGN.md §4) for the RIVER HPC system: funcX
+//! wall time decomposes into block acquisition + worker startup + queueing +
+//! transfer + service, and the simulator reproduces exactly those terms so
+//! the paper's Table-1 topology (max_blocks = 4, nodes_per_block = 1,
+//! 24-thread nodes) can be replayed on this host using service-time
+//! distributions measured from the *real* Rust+PJRT fit path.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+
+/// Block/node/worker topology (the funcX endpoint configuration).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Topology {
+    pub max_blocks: usize,
+    pub nodes_per_block: usize,
+    pub workers_per_node: usize,
+}
+
+impl Topology {
+    pub fn workers(&self) -> usize {
+        self.max_blocks * self.nodes_per_block * self.workers_per_node
+    }
+
+    /// The paper's Table 1 endpoint on RIVER: max_blocks = 4,
+    /// nodes_per_block = 1, 24 hardware threads per node.
+    pub fn river_table1() -> Topology {
+        Topology { max_blocks: 4, nodes_per_block: 1, workers_per_node: 24 }
+    }
+
+    /// A single sequential worker ("single node" column of Table 1: one
+    /// pyhf process fitting patches back to back).
+    pub fn single_node() -> Topology {
+        Topology { max_blocks: 1, nodes_per_block: 1, workers_per_node: 1 }
+    }
+}
+
+/// Latency/cost model for the non-compute terms.
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    /// mean batch-queue latency for a block grant
+    pub provision_base_s: f64,
+    /// exponential jitter added per block
+    pub provision_jitter_s: f64,
+    /// per-worker startup (container pull / pip install / artifact compile)
+    pub worker_startup_s: f64,
+    /// per-task input transfer (patched workspace JSON upload)
+    pub transfer_in_s: f64,
+    /// per-task result download
+    pub transfer_out_s: f64,
+    /// probability a task runs slow
+    pub straggler_prob: f64,
+    /// service-time multiplier for stragglers
+    pub straggler_factor: f64,
+    /// relative jitter on every service time (trial-to-trial variance)
+    pub service_jitter_rel: f64,
+}
+
+impl CostModel {
+    /// RIVER-like terms (seconds), calibrated per DESIGN.md §4.
+    pub fn river() -> CostModel {
+        CostModel {
+            provision_base_s: 18.0,
+            provision_jitter_s: 8.0,
+            worker_startup_s: 4.0,
+            transfer_in_s: 0.25,
+            transfer_out_s: 0.05,
+            straggler_prob: 0.08,
+            straggler_factor: 1.6,
+            service_jitter_rel: 0.06,
+        }
+    }
+
+    /// Free-of-overhead model (pure scheduling).
+    pub fn ideal() -> CostModel {
+        CostModel {
+            provision_base_s: 0.0,
+            provision_jitter_s: 0.0,
+            worker_startup_s: 0.0,
+            transfer_in_s: 0.0,
+            transfer_out_s: 0.0,
+            straggler_prob: 0.0,
+            straggler_factor: 1.0,
+            service_jitter_rel: 0.0,
+        }
+    }
+}
+
+/// Outcome of one simulated run.
+#[derive(Debug, Clone)]
+pub struct SimOutcome {
+    /// end-to-end wall time (submission of all tasks at t=0 -> last result)
+    pub makespan_s: f64,
+    /// per-task completion times
+    pub completions_s: Vec<f64>,
+    /// busy-time / (workers * makespan)
+    pub utilization: f64,
+    /// total time spent in non-compute terms (provision+startup+transfer)
+    pub overhead_s: f64,
+    pub summary: Summary,
+}
+
+/// Simulate `service_times` (one entry per task) through a topology.
+///
+/// All tasks are submitted at t = 0 (the paper's scan fans out the full
+/// patchset immediately). Blocks are requested at t = 0 and become ready
+/// after their provisioning latency; workers add startup; tasks are
+/// list-scheduled onto the earliest-free worker.
+pub fn simulate(
+    service_times: &[f64],
+    topo: Topology,
+    cost: CostModel,
+    seed: u64,
+) -> SimOutcome {
+    let mut rng = Rng::new(seed);
+    let n = service_times.len();
+
+    // worker ready times
+    let mut ready: Vec<f64> = Vec::with_capacity(topo.workers());
+    let mut overhead = 0.0;
+    for _b in 0..topo.max_blocks {
+        let prov = cost.provision_base_s
+            + if cost.provision_jitter_s > 0.0 {
+                rng.exponential(1.0 / cost.provision_jitter_s)
+            } else {
+                0.0
+            };
+        for _nd in 0..topo.nodes_per_block {
+            for _w in 0..topo.workers_per_node {
+                ready.push(prov + cost.worker_startup_s);
+                overhead += prov + cost.worker_startup_s;
+            }
+        }
+    }
+
+    // earliest-free-worker list scheduling
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> = ready
+        .iter()
+        .enumerate()
+        .map(|(i, &t)| Reverse((f64_key(t), i)))
+        .collect();
+    let mut free_at = ready.clone();
+    let mut completions = Vec::with_capacity(n);
+    let mut busy = 0.0;
+
+    for &svc in service_times {
+        let Reverse((_, w)) = heap.pop().expect("at least one worker");
+        let jitter = 1.0 + cost.service_jitter_rel * rng.normal();
+        let mut service = svc * jitter.max(0.1);
+        if rng.f64() < cost.straggler_prob {
+            service *= cost.straggler_factor;
+        }
+        let total = cost.transfer_in_s + service + cost.transfer_out_s;
+        let start = free_at[w];
+        let done = start + total;
+        free_at[w] = done;
+        busy += total;
+        overhead += cost.transfer_in_s + cost.transfer_out_s;
+        completions.push(done);
+        heap.push(Reverse((f64_key(done), w)));
+    }
+
+    let makespan = completions.iter().cloned().fold(0.0, f64::max);
+    let utilization = if makespan > 0.0 {
+        busy / (topo.workers() as f64 * makespan)
+    } else {
+        0.0
+    };
+    SimOutcome {
+        makespan_s: makespan,
+        utilization,
+        overhead_s: overhead,
+        summary: Summary::of(&completions),
+        completions_s: completions,
+    }
+}
+
+/// Run `trials` independent simulations; returns the makespans.
+pub fn trials(
+    service_times: &[f64],
+    topo: Topology,
+    cost: CostModel,
+    n_trials: usize,
+    seed: u64,
+) -> Vec<f64> {
+    (0..n_trials)
+        .map(|t| simulate(service_times, topo, cost, seed.wrapping_add(t as u64 * 7919)).makespan_s)
+        .collect()
+}
+
+/// Order-preserving f64 -> u64 key for the scheduling heap (times >= 0).
+fn f64_key(x: f64) -> u64 {
+    debug_assert!(x >= 0.0);
+    x.to_bits()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_worker_is_sequential() {
+        let svc = vec![1.0, 2.0, 3.0];
+        let out = simulate(&svc, Topology::single_node(), CostModel::ideal(), 1);
+        assert!((out.makespan_s - 6.0).abs() < 1e-9);
+        assert!((out.utilization - 1.0).abs() < 1e-9);
+        assert_eq!(out.overhead_s, 0.0);
+    }
+
+    #[test]
+    fn more_workers_never_slower() {
+        let svc: Vec<f64> = (0..50).map(|i| 1.0 + (i % 7) as f64 * 0.3).collect();
+        let mut prev = f64::INFINITY;
+        for w in [1, 2, 4, 8, 16] {
+            let topo = Topology { max_blocks: 1, nodes_per_block: 1, workers_per_node: w };
+            let out = simulate(&svc, topo, CostModel::ideal(), 3);
+            assert!(out.makespan_s <= prev + 1e-9, "w={w}");
+            prev = out.makespan_s;
+        }
+    }
+
+    #[test]
+    fn ideal_speedup_near_linear_when_saturated() {
+        let svc = vec![1.0; 128];
+        let t1 = simulate(&svc, Topology::single_node(), CostModel::ideal(), 5).makespan_s;
+        let topo = Topology { max_blocks: 4, nodes_per_block: 1, workers_per_node: 8 };
+        let t32 = simulate(&svc, topo, CostModel::ideal(), 5).makespan_s;
+        assert!((t1 / t32 - 32.0).abs() < 1.0, "speedup {}", t1 / t32);
+    }
+
+    #[test]
+    fn provisioning_latency_adds_floor() {
+        let svc = vec![0.1; 8];
+        let mut cost = CostModel::ideal();
+        cost.provision_base_s = 30.0;
+        let topo = Topology { max_blocks: 2, nodes_per_block: 1, workers_per_node: 4 };
+        let out = simulate(&svc, topo, cost, 7);
+        assert!(out.makespan_s >= 30.0);
+        assert!(out.makespan_s < 31.0);
+    }
+
+    #[test]
+    fn stragglers_increase_makespan() {
+        let svc = vec![1.0; 64];
+        let topo = Topology { max_blocks: 1, nodes_per_block: 1, workers_per_node: 8 };
+        let base = simulate(&svc, topo, CostModel::ideal(), 11).makespan_s;
+        let mut cost = CostModel::ideal();
+        cost.straggler_prob = 1.0;
+        cost.straggler_factor = 2.0;
+        let slow = simulate(&svc, topo, cost, 11).makespan_s;
+        assert!((slow / base - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn trials_are_deterministic_per_seed() {
+        let svc = vec![1.0; 16];
+        let a = trials(&svc, Topology::river_table1(), CostModel::river(), 5, 42);
+        let b = trials(&svc, Topology::river_table1(), CostModel::river(), 5, 42);
+        assert_eq!(a, b);
+        let c = trials(&svc, Topology::river_table1(), CostModel::river(), 5, 43);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let svc = vec![0.5; 100];
+        let out = simulate(&svc, Topology::river_table1(), CostModel::river(), 1);
+        assert!(out.utilization > 0.0 && out.utilization <= 1.0);
+    }
+}

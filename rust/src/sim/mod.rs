@@ -1,0 +1,11 @@
+//! Cluster simulation substrate: discrete-event scheduling over
+//! block/node/worker topologies ([`cluster`]) and the paper-testbed replay
+//! harness ([`replay`]).
+
+pub mod cluster;
+pub mod replay;
+
+pub use cluster::{simulate, trials, CostModel, SimOutcome, Topology};
+pub use replay::{
+    block_scaling, calibrate_multiplier, replay_table1_row, PaperRow, ReplayRow, PAPER_TABLE1,
+};

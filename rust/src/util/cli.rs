@@ -1,0 +1,113 @@
+//! Minimal command-line argument parser (offline crate set has no clap).
+//!
+//! Supports `command [--flag] [--key value] [positional...]` with typed
+//! accessors and generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: flags, key-value options and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: Option<String>,
+    pub flags: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (excluding argv[0]). `known_flags`
+    /// lists boolean options; everything else starting with `--` consumes a
+    /// value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, known_flags: &[&str]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if known_flags.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else {
+                    let val = iter
+                        .next()
+                        .ok_or_else(|| format!("option --{name} expects a value"))?;
+                    out.options.insert(name.to_string(), val);
+                }
+            } else if out.command.is_none() && out.positional.is_empty() {
+                out.command = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| format!("--{name} expects an integer, got '{s}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| format!("--{name} expects a number, got '{s}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| format!("--{name} expects an integer, got '{s}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str], flags: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()), flags).unwrap()
+    }
+
+    #[test]
+    fn commands_options_flags_positionals() {
+        let a = parse(
+            &["scan", "--patches", "125", "--verbose", "--out=res.json", "pallet-dir"],
+            &["verbose"],
+        );
+        assert_eq!(a.command.as_deref(), Some("scan"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("patches"), Some("125"));
+        assert_eq!(a.get("out"), Some("res.json"));
+        assert_eq!(a.positional, vec!["pallet-dir"]);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse(&["x", "--n", "12", "--r", "1.5"], &[]);
+        assert_eq!(a.get_usize("n", 0).unwrap(), 12);
+        assert_eq!(a.get_f64("r", 0.0).unwrap(), 1.5);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!(a.get_usize("r", 0).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(vec!["--n".to_string()], &[]).is_err());
+    }
+}

@@ -1,0 +1,806 @@
+//! From-scratch JSON: value model, parser, serializer, RFC 6901 pointers and
+//! RFC 6902 patches.
+//!
+//! HistFactory workspaces are JSON documents and pyhf *patchsets* are literal
+//! JSON Patch operations, so this is a core substrate of the reproduction
+//! (and the offline crate set has no serde_json). Object key order is
+//! preserved — patch round-trips must not reshuffle workspaces.
+
+use std::fmt;
+
+/// A JSON value. Numbers are f64 (HistFactory rates/counts are doubles).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+/// Errors from parsing, pointer resolution or patch application.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JsonError {
+    pub msg: String,
+    /// Byte offset for parse errors, if known.
+    pub at: Option<usize>,
+}
+
+impl JsonError {
+    fn new(msg: impl Into<String>) -> Self {
+        JsonError { msg: msg.into(), at: None }
+    }
+    fn at(msg: impl Into<String>, pos: usize) -> Self {
+        JsonError { msg: msg.into(), at: Some(pos) }
+    }
+}
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.at {
+            Some(p) => write!(f, "json error at byte {}: {}", p, self.msg),
+            None => write!(f, "json error: {}", self.msg),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
+
+pub type Result<T> = std::result::Result<T, JsonError>;
+
+// ---------------------------------------------------------------------------
+// accessors
+// ---------------------------------------------------------------------------
+
+impl Json {
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    pub fn num(x: f64) -> Json {
+        Json::Num(x)
+    }
+
+    pub fn arr_f64(xs: &[f64]) -> Json {
+        Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, Json::Null)
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 => Some(*x as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&[(String, Json)]> {
+        match self {
+            Json::Obj(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Object field lookup (first match).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(v) => v.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn get_mut(&mut self, key: &str) -> Option<&mut Json> {
+        match self {
+            Json::Obj(v) => v.iter_mut().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Array index lookup.
+    pub fn idx(&self, i: usize) -> Option<&Json> {
+        self.as_arr().and_then(|a| a.get(i))
+    }
+
+    /// Field as f64 array; errors if missing or mistyped.
+    pub fn f64_array(&self, key: &str) -> Result<Vec<f64>> {
+        let arr = self
+            .get(key)
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| JsonError::new(format!("missing array field '{key}'")))?;
+        arr.iter()
+            .map(|v| v.as_f64().ok_or_else(|| JsonError::new(format!("non-number in '{key}'"))))
+            .collect()
+    }
+
+    /// Insert or replace an object field.
+    pub fn set(&mut self, key: &str, val: Json) {
+        if let Json::Obj(v) = self {
+            if let Some(slot) = v.iter_mut().find(|(k, _)| k == key) {
+                slot.1 = val;
+            } else {
+                v.push((key.to_string(), val));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// parser
+// ---------------------------------------------------------------------------
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn new(s: &'a str) -> Self {
+        Parser { bytes: s.as_bytes(), pos: 0 }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let b = self.peek();
+        if b.is_some() {
+            self.pos += 1;
+        }
+        b
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        if self.bump() == Some(b) {
+            Ok(())
+        } else {
+            Err(JsonError::at(format!("expected '{}'", b as char), self.pos))
+        }
+    }
+
+    fn parse_value(&mut self) -> Result<Json> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.parse_obj(),
+            Some(b'[') => self.parse_arr(),
+            Some(b'"') => Ok(Json::Str(self.parse_string()?)),
+            Some(b't') => self.parse_lit("true", Json::Bool(true)),
+            Some(b'f') => self.parse_lit("false", Json::Bool(false)),
+            Some(b'n') => self.parse_lit("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.parse_num(),
+            Some(c) => Err(JsonError::at(format!("unexpected byte '{}'", c as char), self.pos)),
+            None => Err(JsonError::at("unexpected end of input", self.pos)),
+        }
+    }
+
+    fn parse_lit(&mut self, lit: &str, val: Json) -> Result<Json> {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(val)
+        } else {
+            Err(JsonError::at(format!("expected '{lit}'"), self.pos))
+        }
+    }
+
+    fn parse_num(&mut self) -> Result<Json> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| JsonError::at("bad utf8 in number", start))?;
+        text.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| JsonError::at(format!("bad number '{text}'"), start))
+    }
+
+    fn parse_string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.bump() {
+                None => return Err(JsonError::at("unterminated string", self.pos)),
+                Some(b'"') => return Ok(out),
+                Some(b'\\') => match self.bump() {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'b') => out.push('\u{0008}'),
+                    Some(b'f') => out.push('\u{000C}'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'u') => {
+                        let cp = self.parse_hex4()?;
+                        // surrogate pair handling
+                        let ch = if (0xD800..0xDC00).contains(&cp) {
+                            if self.bump() != Some(b'\\') || self.bump() != Some(b'u') {
+                                return Err(JsonError::at("lone high surrogate", self.pos));
+                            }
+                            let lo = self.parse_hex4()?;
+                            if !(0xDC00..0xE000).contains(&lo) {
+                                return Err(JsonError::at("bad low surrogate", self.pos));
+                            }
+                            let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                            char::from_u32(c)
+                        } else {
+                            char::from_u32(cp)
+                        };
+                        out.push(ch.ok_or_else(|| JsonError::at("bad codepoint", self.pos))?);
+                    }
+                    _ => return Err(JsonError::at("bad escape", self.pos)),
+                },
+                Some(c) if c < 0x80 => out.push(c as char),
+                Some(c) => {
+                    // re-decode multibyte utf8 from the raw input
+                    let start = self.pos - 1;
+                    let width = match c {
+                        0xC0..=0xDF => 2,
+                        0xE0..=0xEF => 3,
+                        0xF0..=0xF7 => 4,
+                        _ => return Err(JsonError::at("bad utf8", start)),
+                    };
+                    let end = start + width;
+                    let s = self
+                        .bytes
+                        .get(start..end)
+                        .and_then(|b| std::str::from_utf8(b).ok())
+                        .ok_or_else(|| JsonError::at("bad utf8", start))?;
+                    out.push_str(s);
+                    self.pos = end;
+                }
+            }
+        }
+    }
+
+    fn parse_hex4(&mut self) -> Result<u32> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let c = self.bump().ok_or_else(|| JsonError::at("eof in \\u", self.pos))?;
+            let d = (c as char).to_digit(16).ok_or_else(|| JsonError::at("bad hex", self.pos))?;
+            v = v * 16 + d;
+        }
+        Ok(v)
+    }
+
+    fn parse_arr(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut out = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(out));
+        }
+        loop {
+            out.push(self.parse_value()?);
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b']') => return Ok(Json::Arr(out)),
+                _ => return Err(JsonError::at("expected ',' or ']'", self.pos)),
+            }
+        }
+    }
+
+    fn parse_obj(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut out = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(out));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.parse_string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.parse_value()?;
+            out.push((key, val));
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b'}') => return Ok(Json::Obj(out)),
+                _ => return Err(JsonError::at("expected ',' or '}'", self.pos)),
+            }
+        }
+    }
+}
+
+/// Parse a JSON document (must consume all non-whitespace input).
+pub fn parse(s: &str) -> Result<Json> {
+    let mut p = Parser::new(s);
+    let v = p.parse_value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return Err(JsonError::at("trailing input", p.pos));
+    }
+    Ok(v)
+}
+
+// ---------------------------------------------------------------------------
+// serializer
+// ---------------------------------------------------------------------------
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+fn write_num(x: f64, out: &mut String) {
+    if x.fract() == 0.0 && x.abs() < 1e15 {
+        out.push_str(&format!("{}", x as i64));
+    } else {
+        // shortest round-trip repr rust gives us
+        out.push_str(&format!("{x}"));
+    }
+}
+
+fn write_value(v: &Json, indent: Option<usize>, level: usize, out: &mut String) {
+    match v {
+        Json::Null => out.push_str("null"),
+        Json::Bool(true) => out.push_str("true"),
+        Json::Bool(false) => out.push_str("false"),
+        Json::Num(x) => write_num(*x, out),
+        Json::Str(s) => write_escaped(s, out),
+        Json::Arr(items) => {
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                if let Some(w) = indent {
+                    out.push('\n');
+                    out.push_str(&" ".repeat(w * (level + 1)));
+                }
+                write_value(item, indent, level + 1, out);
+            }
+            if indent.is_some() && !items.is_empty() {
+                out.push('\n');
+                out.push_str(&" ".repeat(indent.unwrap() * level));
+            }
+            out.push(']');
+        }
+        Json::Obj(pairs) => {
+            out.push('{');
+            for (i, (k, item)) in pairs.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                if let Some(w) = indent {
+                    out.push('\n');
+                    out.push_str(&" ".repeat(w * (level + 1)));
+                }
+                write_escaped(k, out);
+                out.push(':');
+                if indent.is_some() {
+                    out.push(' ');
+                }
+                write_value(item, indent, level + 1, out);
+            }
+            if indent.is_some() && !pairs.is_empty() {
+                out.push('\n');
+                out.push_str(&" ".repeat(indent.unwrap() * level));
+            }
+            out.push('}');
+        }
+    }
+}
+
+/// Compact serialization.
+pub fn to_string(v: &Json) -> String {
+    let mut out = String::new();
+    write_value(v, None, 0, &mut out);
+    out
+}
+
+/// Pretty serialization with 2-space indent.
+pub fn to_string_pretty(v: &Json) -> String {
+    let mut out = String::new();
+    write_value(v, Some(2), 0, &mut out);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// RFC 6901 JSON Pointer
+// ---------------------------------------------------------------------------
+
+/// Split and unescape a JSON pointer into reference tokens.
+pub fn pointer_tokens(ptr: &str) -> Result<Vec<String>> {
+    if ptr.is_empty() {
+        return Ok(vec![]);
+    }
+    if !ptr.starts_with('/') {
+        return Err(JsonError::new(format!("pointer must start with '/': {ptr}")));
+    }
+    Ok(ptr[1..]
+        .split('/')
+        .map(|t| t.replace("~1", "/").replace("~0", "~"))
+        .collect())
+}
+
+/// Resolve a pointer to a reference.
+pub fn pointer<'a>(doc: &'a Json, ptr: &str) -> Result<&'a Json> {
+    let mut cur = doc;
+    for tok in pointer_tokens(ptr)? {
+        cur = match cur {
+            Json::Obj(_) => cur
+                .get(&tok)
+                .ok_or_else(|| JsonError::new(format!("pointer: missing key '{tok}'")))?,
+            Json::Arr(items) => {
+                let i: usize = tok
+                    .parse()
+                    .map_err(|_| JsonError::new(format!("pointer: bad index '{tok}'")))?;
+                items
+                    .get(i)
+                    .ok_or_else(|| JsonError::new(format!("pointer: index {i} out of range")))?
+            }
+            _ => return Err(JsonError::new("pointer: descended into scalar")),
+        };
+    }
+    Ok(cur)
+}
+
+// ---------------------------------------------------------------------------
+// RFC 6902 JSON Patch
+// ---------------------------------------------------------------------------
+
+enum Loc<'a> {
+    ObjField(&'a mut Json, String),
+    ArrIdx(&'a mut Json, usize),
+    ArrEnd(&'a mut Json),
+    Root,
+}
+
+/// Navigate to the parent of the pointer target; returns where the final
+/// token lands.
+fn locate<'a>(doc: &'a mut Json, ptr: &str) -> Result<Loc<'a>> {
+    let toks = pointer_tokens(ptr)?;
+    if toks.is_empty() {
+        return Ok(Loc::Root);
+    }
+    let (last, parents) = toks.split_last().unwrap();
+    let mut cur = doc;
+    for tok in parents {
+        let next = match cur {
+            Json::Obj(_) => cur
+                .get_mut(tok)
+                .ok_or_else(|| JsonError::new(format!("patch path: missing key '{tok}'")))?,
+            Json::Arr(items) => {
+                let i: usize = tok
+                    .parse()
+                    .map_err(|_| JsonError::new(format!("patch path: bad index '{tok}'")))?;
+                items
+                    .get_mut(i)
+                    .ok_or_else(|| JsonError::new(format!("patch path: index {i} out of range")))?
+            }
+            _ => return Err(JsonError::new("patch path: descended into scalar")),
+        };
+        cur = next;
+    }
+    match cur {
+        Json::Obj(_) => Ok(Loc::ObjField(cur, last.clone())),
+        Json::Arr(_) if last == "-" => Ok(Loc::ArrEnd(cur)),
+        Json::Arr(_) => {
+            let i: usize = last
+                .parse()
+                .map_err(|_| JsonError::new(format!("patch path: bad index '{last}'")))?;
+            Ok(Loc::ArrIdx(cur, i))
+        }
+        _ => Err(JsonError::new("patch path: parent is a scalar")),
+    }
+}
+
+/// Apply one RFC 6902 operation in place.
+pub fn apply_op(doc: &mut Json, op: &Json) -> Result<()> {
+    let kind = op
+        .get("op")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| JsonError::new("patch op missing 'op'"))?
+        .to_string();
+    let path = op
+        .get("path")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| JsonError::new("patch op missing 'path'"))?
+        .to_string();
+
+    let fetch_value = |op: &Json| -> Result<Json> {
+        op.get("value").cloned().ok_or_else(|| JsonError::new("patch op missing 'value'"))
+    };
+
+    match kind.as_str() {
+        "add" => {
+            let value = fetch_value(op)?;
+            match locate(doc, &path)? {
+                Loc::Root => *doc = value,
+                Loc::ObjField(parent, key) => parent.set(&key, value),
+                Loc::ArrEnd(parent) => {
+                    if let Json::Arr(items) = parent {
+                        items.push(value)
+                    }
+                }
+                Loc::ArrIdx(parent, i) => {
+                    if let Json::Arr(items) = parent {
+                        if i > items.len() {
+                            return Err(JsonError::new(format!("add: index {i} out of range")));
+                        }
+                        items.insert(i, value);
+                    }
+                }
+            }
+        }
+        "replace" => {
+            let value = fetch_value(op)?;
+            match locate(doc, &path)? {
+                Loc::Root => *doc = value,
+                Loc::ObjField(parent, key) => {
+                    parent
+                        .get_mut(&key)
+                        .map(|slot| *slot = value)
+                        .ok_or_else(|| JsonError::new(format!("replace: missing key '{key}'")))?;
+                }
+                Loc::ArrEnd(_) => return Err(JsonError::new("replace: '-' not allowed")),
+                Loc::ArrIdx(parent, i) => {
+                    if let Json::Arr(items) = parent {
+                        *items
+                            .get_mut(i)
+                            .ok_or_else(|| JsonError::new(format!("replace: index {i} out of range")))? = value;
+                    }
+                }
+            }
+        }
+        "remove" => match locate(doc, &path)? {
+            Loc::Root => return Err(JsonError::new("remove: cannot remove root")),
+            Loc::ObjField(parent, key) => {
+                if let Json::Obj(pairs) = parent {
+                    let before = pairs.len();
+                    pairs.retain(|(k, _)| k != &key);
+                    if pairs.len() == before {
+                        return Err(JsonError::new(format!("remove: missing key '{key}'")));
+                    }
+                }
+            }
+            Loc::ArrEnd(_) => return Err(JsonError::new("remove: '-' not allowed")),
+            Loc::ArrIdx(parent, i) => {
+                if let Json::Arr(items) = parent {
+                    if i >= items.len() {
+                        return Err(JsonError::new(format!("remove: index {i} out of range")));
+                    }
+                    items.remove(i);
+                }
+            }
+        },
+        "test" => {
+            let value = fetch_value(op)?;
+            let actual = pointer(doc, &path)?;
+            if *actual != value {
+                return Err(JsonError::new(format!("test failed at '{path}'")));
+            }
+        }
+        "copy" | "move" => {
+            let from = op
+                .get("from")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| JsonError::new("patch op missing 'from'"))?
+                .to_string();
+            let value = pointer(doc, &from)?.clone();
+            if kind == "move" {
+                apply_op(doc, &Json::obj(vec![("op", Json::str("remove")), ("path", Json::str(from))]))?;
+            }
+            apply_op(
+                doc,
+                &Json::obj(vec![
+                    ("op", Json::str("add")),
+                    ("path", Json::str(path)),
+                    ("value", value),
+                ]),
+            )?;
+        }
+        other => return Err(JsonError::new(format!("unsupported patch op '{other}'"))),
+    }
+    Ok(())
+}
+
+/// Apply a full RFC 6902 patch (array of ops) in place; atomicity is the
+/// caller's concern (clone first if needed).
+pub fn apply_patch(doc: &mut Json, patch: &Json) -> Result<()> {
+    let ops = patch.as_arr().ok_or_else(|| JsonError::new("patch must be an array"))?;
+    for op in ops {
+        apply_op(doc, op)?;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// tests
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars() {
+        assert_eq!(parse("null").unwrap(), Json::Null);
+        assert_eq!(parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(parse("false").unwrap(), Json::Bool(false));
+        assert_eq!(parse("42").unwrap(), Json::Num(42.0));
+        assert_eq!(parse("-1.5e3").unwrap(), Json::Num(-1500.0));
+        assert_eq!(parse("\"hi\"").unwrap(), Json::Str("hi".into()));
+    }
+
+    #[test]
+    fn parse_nested() {
+        let v = parse(r#"{"a": [1, 2, {"b": null}], "c": "x"}"#).unwrap();
+        assert_eq!(v.get("a").unwrap().idx(2).unwrap().get("b"), Some(&Json::Null));
+        assert_eq!(v.get("c").unwrap().as_str(), Some("x"));
+    }
+
+    #[test]
+    fn parse_escapes_and_unicode() {
+        let v = parse(r#""a\nb\t\"q\" é 😀 ü""#).unwrap();
+        assert_eq!(v.as_str(), Some("a\nb\t\"q\" é 😀 ü"));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("01x").is_err());
+        assert!(parse("\"unterminated").is_err());
+        assert!(parse("{} trailing").is_err());
+        assert!(parse("{\"a\" 1}").is_err());
+    }
+
+    #[test]
+    fn roundtrip_compact_and_pretty() {
+        let src = r#"{"w": {"xs": [1, 2.5, -3e-2], "s": "a\"b", "n": null, "t": true}}"#;
+        let v = parse(src).unwrap();
+        assert_eq!(parse(&to_string(&v)).unwrap(), v);
+        assert_eq!(parse(&to_string_pretty(&v)).unwrap(), v);
+    }
+
+    #[test]
+    fn number_formatting_preserves_integers() {
+        assert_eq!(to_string(&Json::Num(125.0)), "125");
+        assert_eq!(to_string(&Json::Num(0.5)), "0.5");
+    }
+
+    #[test]
+    fn object_key_order_preserved() {
+        let v = parse(r#"{"z": 1, "a": 2, "m": 3}"#).unwrap();
+        assert_eq!(to_string(&v), r#"{"z":1,"a":2,"m":3}"#);
+    }
+
+    #[test]
+    fn pointer_resolution() {
+        let v = parse(r#"{"a": {"b": [10, 20]}, "x~y": 1, "p/q": 2}"#).unwrap();
+        assert_eq!(pointer(&v, "/a/b/1").unwrap(), &Json::Num(20.0));
+        assert_eq!(pointer(&v, "/x~0y").unwrap(), &Json::Num(1.0));
+        assert_eq!(pointer(&v, "/p~1q").unwrap(), &Json::Num(2.0));
+        assert_eq!(pointer(&v, "").unwrap(), &v);
+        assert!(pointer(&v, "/a/z").is_err());
+        assert!(pointer(&v, "a/b").is_err());
+    }
+
+    #[test]
+    fn patch_add_replace_remove() {
+        let mut v = parse(r#"{"channels": [{"name": "SR"}]}"#).unwrap();
+        let patch = parse(
+            r#"[
+            {"op": "add", "path": "/channels/-", "value": {"name": "CR"}},
+            {"op": "replace", "path": "/channels/0/name", "value": "SR2"},
+            {"op": "add", "path": "/version", "value": "1.0.0"}
+        ]"#,
+        )
+        .unwrap();
+        apply_patch(&mut v, &patch).unwrap();
+        assert_eq!(pointer(&v, "/channels/1/name").unwrap().as_str(), Some("CR"));
+        assert_eq!(pointer(&v, "/channels/0/name").unwrap().as_str(), Some("SR2"));
+        let rm = parse(r#"[{"op": "remove", "path": "/channels/0"}]"#).unwrap();
+        apply_patch(&mut v, &rm).unwrap();
+        assert_eq!(pointer(&v, "/channels/0/name").unwrap().as_str(), Some("CR"));
+    }
+
+    #[test]
+    fn patch_test_copy_move() {
+        let mut v = parse(r#"{"a": 1, "b": {"c": 2}}"#).unwrap();
+        let p = parse(
+            r#"[
+            {"op": "test", "path": "/a", "value": 1},
+            {"op": "copy", "from": "/b/c", "path": "/d"},
+            {"op": "move", "from": "/a", "path": "/b/e"}
+        ]"#,
+        )
+        .unwrap();
+        apply_patch(&mut v, &p).unwrap();
+        assert_eq!(pointer(&v, "/d").unwrap(), &Json::Num(2.0));
+        assert_eq!(pointer(&v, "/b/e").unwrap(), &Json::Num(1.0));
+        assert!(v.get("a").is_none());
+    }
+
+    #[test]
+    fn patch_test_failure_reported() {
+        let mut v = parse(r#"{"a": 1}"#).unwrap();
+        let p = parse(r#"[{"op": "test", "path": "/a", "value": 2}]"#).unwrap();
+        assert!(apply_patch(&mut v, &p).is_err());
+    }
+
+    #[test]
+    fn patch_array_insert_mid() {
+        let mut v = parse("[1,3]").unwrap();
+        apply_patch(&mut v, &parse(r#"[{"op":"add","path":"/1","value":2}]"#).unwrap()).unwrap();
+        assert_eq!(to_string(&v), "[1,2,3]");
+        assert!(apply_patch(&mut v, &parse(r#"[{"op":"add","path":"/9","value":0}]"#).unwrap()).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! From-scratch utility substrates (the offline crate set is the `xla`
+//! closure only, so JSON, RNG, CLI parsing, thread pools, statistics and
+//! property-test helpers are all built here).
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,91 @@
+//! Miniature property-testing harness (no proptest crate offline).
+//!
+//! `forall(seed, cases, gen, prop)` runs `prop` over `cases` generated
+//! inputs; on failure it performs a bounded shrink search by re-generating
+//! with "smaller" generator budgets and reports the smallest failing case.
+
+use crate::util::rng::Rng;
+
+/// Controls generator sizes; shrinking lowers `size` toward 1.
+#[derive(Debug)]
+pub struct Gen<'a> {
+    pub rng: &'a mut Rng,
+    pub size: usize,
+}
+
+impl<'a> Gen<'a> {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        let hi = hi.min(lo + self.size.max(1));
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.rng.uniform(lo, hi)).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.f64() < 0.5
+    }
+}
+
+/// Run a property over generated cases. `generate` must be deterministic in
+/// the Gen it receives. Panics with the smallest failing case found.
+pub fn forall<T, G, P>(seed: u64, cases: usize, mut generate: G, mut prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Gen) -> T,
+    P: FnMut(&T) -> bool,
+{
+    let mut failing: Option<(u64, usize, T)> = None;
+    for case in 0..cases {
+        let case_seed = seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        let mut gen = Gen { rng: &mut rng, size: 64 };
+        let input = generate(&mut gen);
+        if !prop(&input) {
+            failing = Some((case_seed, 64, input));
+            break;
+        }
+    }
+
+    if let Some((case_seed, _, worst)) = failing {
+        // bounded shrink: retry the same stream with smaller size budgets
+        let mut smallest = worst.clone();
+        for size in [32, 16, 8, 4, 2, 1] {
+            let mut rng = Rng::new(case_seed);
+            let mut gen = Gen { rng: &mut rng, size };
+            let candidate = generate(&mut gen);
+            if !prop(&candidate) {
+                smallest = candidate;
+            }
+        }
+        panic!(
+            "property failed (seed {case_seed:#x}); smallest failing case: {smallest:?}"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_is_quiet() {
+        forall(1, 200, |g| {
+            let len = g.usize_in(0, 10);
+            g.vec_f64(len, -5.0, 5.0)
+        }, |xs| {
+            xs.iter().sum::<f64>().abs() <= 5.0 * xs.len() as f64 + 1e-12
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_case() {
+        forall(2, 100, |g| g.usize_in(0, 50), |&n| n < 10);
+    }
+}

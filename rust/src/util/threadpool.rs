@@ -1,0 +1,163 @@
+//! Fixed-size worker thread pool over std channels.
+//!
+//! The coordinator's HighThroughputExecutor runs funcX "workers" as pool
+//! threads (the offline crate set has no tokio; explicit threads also mirror
+//! Parsl's process-worker model more faithfully than an async runtime would).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// A fixed pool of worker threads consuming jobs from a shared queue.
+pub struct ThreadPool {
+    tx: Sender<Msg>,
+    handles: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Spawn `size` workers named `{name}-{i}`.
+    pub fn new(name: &str, size: usize) -> Self {
+        assert!(size > 0);
+        let (tx, rx) = channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::with_capacity(size);
+        for i in 0..size {
+            let rx = Arc::clone(&rx);
+            let handle = std::thread::Builder::new()
+                .name(format!("{name}-{i}"))
+                .spawn(move || loop {
+                    let msg = {
+                        let guard = rx.lock().expect("pool queue poisoned");
+                        guard.recv()
+                    };
+                    match msg {
+                        Ok(Msg::Run(job)) => job(),
+                        Ok(Msg::Shutdown) | Err(_) => break,
+                    }
+                })
+                .expect("spawn pool worker");
+            handles.push(handle);
+        }
+        ThreadPool { tx, handles, size }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Enqueue a job; panics if the pool is shut down.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
+        self.tx.send(Msg::Run(Box::new(job))).expect("pool is shut down");
+    }
+
+    /// Signal shutdown and join all workers (runs remaining queued jobs first,
+    /// since each worker drains the queue until it sees a Shutdown message).
+    pub fn shutdown(mut self) {
+        for _ in 0..self.handles.len() {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in 0..self.handles.len() {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Convenience: run `f` over `items` with `workers` threads, preserving order
+/// of results.
+pub fn parallel_map<T, R, F>(workers: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send + 'static,
+    R: Send + 'static,
+    F: Fn(T) -> R + Send + Sync + 'static,
+{
+    let n = items.len();
+    if n == 0 {
+        return vec![];
+    }
+    let pool = ThreadPool::new("pmap", workers.max(1));
+    let f = Arc::new(f);
+    let (tx, rx): (Sender<(usize, R)>, Receiver<(usize, R)>) = channel();
+    for (i, item) in items.into_iter().enumerate() {
+        let f = Arc::clone(&f);
+        let tx = tx.clone();
+        pool.execute(move || {
+            let r = f(item);
+            let _ = tx.send((i, r));
+        });
+    }
+    drop(tx);
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    for (i, r) in rx.iter() {
+        out[i] = Some(r);
+    }
+    pool.shutdown();
+    out.into_iter().map(|r| r.expect("worker dropped result")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new("t", 4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.shutdown();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map(3, (0..50).collect(), |x: i32| x * x);
+        assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_empty() {
+        let out: Vec<i32> = parallel_map(2, Vec::<i32>::new(), |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = ThreadPool::new("d", 2);
+            for _ in 0..10 {
+                let c = Arc::clone(&counter);
+                pool.execute(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            // drop here must join, running all 10 jobs
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+}

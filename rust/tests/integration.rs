@@ -1,0 +1,211 @@
+//! Integration tests across the full stack: pallet -> patch -> dense model
+//! -> AOT artifact execution via PJRT -> CLs, cross-checked against the
+//! native-Rust fitter, plus the end-to-end coordinator scan.
+//!
+//! Requires `make artifacts` (tests are skipped with a notice otherwise).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use pyhf_faas::coordinator::{
+    fitops, run_scan, Endpoint, EndpointConfig, ExecutorConfig, FaasClient, ScanOptions, Service,
+};
+use pyhf_faas::fitter::NativeFitter;
+use pyhf_faas::histfactory::{dense, Workspace};
+use pyhf_faas::pallet::{self, library};
+use pyhf_faas::runtime::{Engine, Manifest};
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn manifest_covers_all_shape_classes() {
+    let Some(dir) = artifact_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    for class in ["1Lbb", "2L0J", "stau", "quickstart"] {
+        assert!(m.hypotest(class).is_some(), "missing hypotest_{class}");
+        assert!(m.mle(class).is_some(), "missing mle_{class}");
+    }
+    assert_eq!(m.classes().len(), 4);
+}
+
+#[test]
+fn pjrt_hypotest_matches_native_fitter() {
+    let Some(dir) = artifact_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let entry = manifest.hypotest("quickstart").unwrap();
+    let compiled = engine.load(entry, &dir).unwrap();
+
+    let pallet = pallet::generate(&library::config_quickstart());
+    for patch in pallet.patchset.patches.iter().take(3) {
+        let ws_json = patch.apply_to(&pallet.bkg_workspace).unwrap();
+        let ws = Workspace::from_json(&ws_json).unwrap();
+        let model = dense::compile(&ws, &entry.class).unwrap();
+
+        let pjrt = compiled.hypotest(&model).unwrap();
+        let native = NativeFitter::new(&model).hypotest(1.0);
+
+        // Two independent optimizers (CG-Fisher in HLO vs Cholesky-Fisher in
+        // Rust) on the same NLL: physics quantities must agree closely.
+        assert!(
+            (pjrt.cls_obs - native.cls_obs).abs() < 0.02,
+            "{}: cls_obs pjrt {} vs native {}",
+            patch.name,
+            pjrt.cls_obs,
+            native.cls_obs
+        );
+        assert!(
+            (pjrt.mu_hat - native.mu_hat).abs() < 0.05 * (1.0 + native.mu_hat.abs()),
+            "{}: mu_hat pjrt {} vs native {}",
+            patch.name,
+            pjrt.mu_hat,
+            native.mu_hat
+        );
+        assert!(
+            (pjrt.qmu_a - native.qmu_a).abs() < 0.05 * (1.0 + native.qmu_a),
+            "{}: qmu_A pjrt {} vs native {}",
+            patch.name,
+            pjrt.qmu_a,
+            native.qmu_a
+        );
+        for k in 0..5 {
+            assert!(
+                (pjrt.cls_exp[k] - native.cls_exp[k]).abs() < 0.02,
+                "{}: cls_exp[{k}] pjrt {} vs native {}",
+                patch.name,
+                pjrt.cls_exp[k],
+                native.cls_exp[k]
+            );
+        }
+    }
+}
+
+#[test]
+fn mle_artifact_agrees_with_native_minimum() {
+    let Some(dir) = artifact_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let entry = manifest.mle("quickstart").unwrap();
+    let compiled = engine.load(entry, &dir).unwrap();
+
+    let pallet = pallet::generate(&library::config_quickstart());
+    let patch = &pallet.patchset.patches[0];
+    let ws = Workspace::from_json(&patch.apply_to(&pallet.bkg_workspace).unwrap()).unwrap();
+    let model = dense::compile(&ws, &entry.class).unwrap();
+
+    let (theta, nll, diag) = compiled.mle(&model).unwrap();
+    assert_eq!(theta.len(), entry.class.n_params());
+    assert!(nll.is_finite());
+    assert!(diag[0] >= 1.0, "no accepted steps");
+
+    let native = NativeFitter::new(&model).fit_free(&model.data, &pyhf_faas::fitter::Centers::nominal(&model));
+    assert!(
+        (nll - native.nll).abs() < 1e-3 * (1.0 + native.nll.abs()),
+        "nll pjrt {nll} vs native {}",
+        native.nll
+    );
+    assert!((theta[0] - native.theta[0]).abs() < 0.05 * (1.0 + native.theta[0].abs()));
+}
+
+#[test]
+fn coordinator_scan_pjrt_end_to_end() {
+    let Some(dir) = artifact_dir() else { return };
+    let svc = Service::new();
+    let ep = Endpoint::start(
+        svc.clone(),
+        EndpointConfig::new("pjrt-test")
+            .with_executor(ExecutorConfig {
+                max_blocks: 1,
+                nodes_per_block: 1,
+                workers_per_node: 1,
+                parallelism: 1.0,
+                poll: Duration::from_millis(1),
+            })
+            .with_worker_init(fitops::pjrt_worker_init(dir)),
+    );
+    let client = FaasClient::new(svc.clone());
+    let f = client.register_function("fit_patch", fitops::fit_patch_handler());
+
+    let pallet = pallet::generate(&library::config_quickstart());
+    let opts = ScanOptions { limit: Some(3), ..Default::default() };
+    let scan = run_scan(&client, ep.id, f, &pallet, &opts).unwrap();
+
+    assert_eq!(scan.points.len(), 3);
+    for p in &scan.points {
+        assert!(p.cls_obs >= 0.0 && p.cls_obs <= 1.0 + 1e-9);
+        assert!(p.qmu_a > 0.0, "{}: degenerate qmu_A", p.patch);
+        assert!(p.fit_seconds > 0.0);
+    }
+    // all tasks accounted (task lifecycle lands on the service metrics;
+    // block/worker provisioning lands on the endpoint metrics)
+    let snap = svc.metrics.snapshot();
+    assert_eq!(snap.completed, 3);
+    assert!(snap.mean_service_s > 0.0);
+    assert!(ep.metrics_snapshot().blocks_provisioned >= 1);
+    ep.shutdown();
+}
+
+#[test]
+fn oversized_workspace_rejected_cleanly() {
+    let Some(dir) = artifact_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    // a 1Lbb-sized pallet cannot compile into the quickstart class
+    let pallet = pallet::generate(&library::config_1lbb());
+    let ws = Workspace::from_json(&pallet.bkg_workspace).unwrap();
+    let entry = manifest.hypotest("quickstart").unwrap();
+    let err = dense::compile(&ws, &entry.class).unwrap_err();
+    assert!(err.0.contains("bins") || err.0.contains("rows"), "{}", err.0);
+    // but pick_class finds the right one
+    let classes = manifest.classes();
+    let picked = dense::pick_class(&ws, &classes).unwrap();
+    assert_eq!(picked.name, "1Lbb");
+}
+
+#[test]
+fn executable_cache_reused_across_tasks() {
+    let Some(dir) = artifact_dir() else { return };
+    // two fits through the same worker context must compile only once:
+    // second hypotest call should be much faster than the first
+    let svc = Service::new();
+    let ep = Endpoint::start(
+        svc.clone(),
+        EndpointConfig::new("cache-test")
+            .with_executor(ExecutorConfig {
+                max_blocks: 1,
+                nodes_per_block: 1,
+                workers_per_node: 1,
+                parallelism: 1.0,
+                poll: Duration::from_millis(1),
+            })
+            .with_worker_init(fitops::pjrt_worker_init(dir)),
+    );
+    let client = FaasClient::new(svc.clone());
+    let f = client.register_function("fit_patch", fitops::fit_patch_handler());
+    let pallet = pallet::generate(&library::config_quickstart());
+
+    let mut times = Vec::new();
+    for patch in pallet.patchset.patches.iter().take(3) {
+        let payload = fitops::patch_payload(&pallet.bkg_workspace, patch, None).unwrap();
+        let t0 = std::time::Instant::now();
+        let id = client.run(payload, ep.id, f).unwrap();
+        client.wait(id, Duration::from_secs(300)).unwrap();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    // first call includes the artifact compile; later ones are cached
+    assert!(
+        times[2] < times[0],
+        "expected cached fit ({}) to beat first fit ({})",
+        times[2],
+        times[0]
+    );
+    ep.shutdown();
+}

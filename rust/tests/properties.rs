@@ -1,0 +1,219 @@
+//! Property-based tests over the substrates, using the in-house
+//! `util::proptest` harness (no proptest crate offline): randomized JSON
+//! round-trips, patch inverses, dense-model invariants, scheduler laws and
+//! asymptotic-formula laws.
+
+use pyhf_faas::fitter::native::{asymptotic_cls, NativeFitter};
+use pyhf_faas::histfactory::dense::{compile, ShapeClass};
+use pyhf_faas::histfactory::spec::Workspace;
+use pyhf_faas::sim::cluster::{simulate, CostModel, Topology};
+use pyhf_faas::util::json::{self, Json};
+use pyhf_faas::util::proptest::{forall, Gen};
+
+// ---------------------------------------------------------------------------
+// JSON round trips
+// ---------------------------------------------------------------------------
+
+fn random_json(g: &mut Gen, depth: usize) -> Json {
+    let choice = g.usize_in(0, if depth == 0 { 3 } else { 5 });
+    match choice {
+        0 => Json::Null,
+        1 => Json::Bool(g.bool()),
+        2 => Json::Num((g.f64_in(-1e6, 1e6) * 8.0).round() / 8.0),
+        3 => {
+            let len = g.usize_in(0, 8);
+            Json::Str(
+                (0..len)
+                    .map(|_| {
+                        let c = g.usize_in(0, 4);
+                        match c {
+                            0 => '"',
+                            1 => '\\',
+                            2 => 'é',
+                            _ => (b'a' + g.usize_in(0, 25) as u8) as char,
+                        }
+                    })
+                    .collect(),
+            )
+        }
+        4 => {
+            let len = g.usize_in(0, 4);
+            Json::Arr((0..len).map(|_| random_json(g, depth - 1)).collect())
+        }
+        _ => {
+            let len = g.usize_in(0, 4);
+            Json::Obj(
+                (0..len)
+                    .map(|i| (format!("k{i}"), random_json(g, depth - 1)))
+                    .collect(),
+            )
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_compact_and_pretty() {
+    forall(11, 300, |g| random_json(g, 3), |doc| {
+        let compact = json::parse(&json::to_string(doc)).unwrap();
+        let pretty = json::parse(&json::to_string_pretty(doc)).unwrap();
+        compact == *doc && pretty == *doc
+    });
+}
+
+#[test]
+fn prop_patch_add_then_remove_is_identity() {
+    forall(13, 200, |g| (random_json(g, 2), g.usize_in(0, 6)), |(value, slot)| {
+        let mut doc = json::parse(r#"{"channels": [1, 2, 3], "version": "1.0.0"}"#).unwrap();
+        let original = doc.clone();
+        let idx = (*slot).min(3);
+        let add = Json::Arr(vec![Json::obj(vec![
+            ("op", Json::str("add")),
+            ("path", Json::str(format!("/channels/{idx}"))),
+            ("value", value.clone()),
+        ])]);
+        let remove = Json::Arr(vec![Json::obj(vec![
+            ("op", Json::str("remove")),
+            ("path", Json::str(format!("/channels/{idx}"))),
+        ])]);
+        json::apply_patch(&mut doc, &add).unwrap();
+        json::apply_patch(&mut doc, &remove).unwrap();
+        doc == original
+    });
+}
+
+// ---------------------------------------------------------------------------
+// dense model invariants
+// ---------------------------------------------------------------------------
+
+fn tiny_class() -> ShapeClass {
+    ShapeClass {
+        name: "quickstart".into(),
+        n_bins: 16,
+        n_samples: 6,
+        n_alpha: 6,
+        n_free: 2,
+        bin_block: 16,
+        mu_max: 10.0,
+        max_newton: 48,
+        cg_iters: 24,
+    }
+}
+
+fn two_channel_ws(s1: f64, s2: f64, b1: f64, b2: f64, o1: f64, o2: f64) -> Workspace {
+    let doc = format!(
+        r#"{{
+        "channels": [
+            {{"name": "A", "samples": [
+                {{"name": "signal", "data": [{s1}],
+                 "modifiers": [{{"name": "mu", "type": "normfactor", "data": null}}]}},
+                {{"name": "bkg", "data": [{b1}], "modifiers": []}}
+            ]}},
+            {{"name": "B", "samples": [
+                {{"name": "signal", "data": [{s2}],
+                 "modifiers": [{{"name": "mu", "type": "normfactor", "data": null}}]}},
+                {{"name": "bkg", "data": [{b2}], "modifiers": []}}
+            ]}}
+        ],
+        "observations": [
+            {{"name": "A", "data": [{o1}]}},
+            {{"name": "B", "data": [{o2}]}}
+        ],
+        "measurements": [{{"name": "m", "config": {{"poi": "mu", "parameters": []}}}}],
+        "version": "1.0.0"
+    }}"#
+    );
+    Workspace::from_str(&doc).unwrap()
+}
+
+#[test]
+fn prop_expected_rates_linear_in_mu() {
+    forall(17, 60, |g| {
+        (
+            g.f64_in(0.5, 8.0),  // signal 1
+            g.f64_in(0.5, 8.0),  // signal 2
+            g.f64_in(20.0, 90.0), // bkg 1
+            g.f64_in(20.0, 90.0), // bkg 2
+            g.f64_in(0.2, 6.0),  // mu
+        )
+    }, |&(s1, s2, b1, b2, mu)| {
+        let ws = two_channel_ws(s1, s2, b1, b2, b1, b2);
+        let m = compile(&ws, &tiny_class()).unwrap();
+        let fitter = NativeFitter::new(&m);
+        let mut th = fitter.init_theta(mu);
+        let (nu_mu, _) = fitter.expected_jac(&th);
+        th[0] = 0.0f64.max(1e-10);
+        let (nu_0, _) = fitter.expected_jac(&th);
+        // nu(mu) = bkg + mu * sig in every active bin
+        let ok1 = (nu_mu[0] - (b1 + mu * s1)).abs() < 1e-9 * (1.0 + b1);
+        let ok2 = (nu_mu[1] - (b2 + mu * s2)).abs() < 1e-9 * (1.0 + b2);
+        let ok3 = (nu_0[0] - b1).abs() < 1e-6;
+        ok1 && ok2 && ok3
+    });
+}
+
+#[test]
+fn prop_channel_order_does_not_change_nll_at_init() {
+    forall(19, 60, |g| {
+        (
+            g.f64_in(0.5, 8.0),
+            g.f64_in(0.5, 8.0),
+            g.f64_in(20.0, 90.0),
+            g.f64_in(20.0, 90.0),
+        )
+    }, |&(s1, s2, b1, b2)| {
+        let class = tiny_class();
+        let wa = two_channel_ws(s1, s2, b1, b2, b1 + 1.0, b2 - 1.0);
+        // swapped channel order (and matching observations)
+        let wb = two_channel_ws(s2, s1, b2, b1, b2 - 1.0, b1 + 1.0);
+        let ma = compile(&wa, &class).unwrap();
+        let mb = compile(&wb, &class).unwrap();
+        let fa = NativeFitter::new(&ma);
+        let fb = NativeFitter::new(&mb);
+        let ca = pyhf_faas::fitter::Centers::nominal(&ma);
+        let cb = pyhf_faas::fitter::Centers::nominal(&mb);
+        let na = fa.nll(&fa.init_theta(1.0), &ma.data, &ca);
+        let nb = fb.nll(&fb.init_theta(1.0), &mb.data, &cb);
+        (na - nb).abs() < 1e-9 * (1.0 + na.abs())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// scheduler laws
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_makespan_bounds() {
+    forall(23, 100, |g| {
+        let n = g.usize_in(1, 40);
+        let svc = g.vec_f64(n, 0.1, 5.0);
+        let workers = g.usize_in(1, 8);
+        (svc, workers)
+    }, |(svc, workers)| {
+        let topo = Topology { max_blocks: 1, nodes_per_block: 1, workers_per_node: *workers };
+        let out = simulate(svc, topo, CostModel::ideal(), 5);
+        let total: f64 = svc.iter().sum();
+        let longest = svc.iter().cloned().fold(0.0, f64::max);
+        // classic list-scheduling bounds: max(longest, total/m) <= makespan <= total
+        out.makespan_s >= longest - 1e-9
+            && out.makespan_s >= total / *workers as f64 - 1e-9
+            && out.makespan_s <= total + 1e-9
+            && out.completions_s.len() == svc.len()
+    });
+}
+
+// ---------------------------------------------------------------------------
+// asymptotic formula laws
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_asymptotic_cls_laws() {
+    forall(29, 300, |g| (g.f64_in(0.0, 30.0), g.f64_in(0.01, 30.0)), |&(qmu, qmu_a)| {
+        let (cls, exp) = asymptotic_cls(qmu, qmu_a);
+        let in_range = (0.0..=1.0 + 1e-9).contains(&cls)
+            && exp.iter().all(|e| (0.0..=1.0 + 1e-9).contains(e));
+        let band_monotone = exp.windows(2).all(|w| w[0] <= w[1] + 1e-12);
+        // CLs decreases as the observed qmu grows (for fixed qmu_A)
+        let (cls_hi, _) = asymptotic_cls(qmu + 1.0, qmu_a);
+        in_range && band_monotone && cls_hi <= cls + 1e-9
+    });
+}
