@@ -27,7 +27,7 @@ use pyhf_faas::coordinator::{
 };
 use pyhf_faas::infer::results::PointResult;
 use pyhf_faas::pallet::{self, library};
-use pyhf_faas::runtime::default_artifact_dir;
+use pyhf_faas::runtime::{default_artifact_dir, Engine};
 use pyhf_faas::util::json::Json;
 
 fn read_frame(stream: &mut TcpStream) -> std::io::Result<Option<Json>> {
@@ -54,6 +54,10 @@ fn write_frame(stream: &mut TcpStream, v: &Json) -> std::io::Result<()> {
 }
 
 fn serve(addr: &str) -> Result<(), String> {
+    // fail fast if the PJRT engine is stubbed out (default build without the
+    // vendored xla crate) — otherwise every worker dies at init and clients
+    // poll forever
+    Engine::cpu().map_err(|e| format!("faas_service needs the PJRT engine: {e}"))?;
     let svc = Service::new();
     let ep = Endpoint::start(
         svc.clone(),
@@ -123,6 +127,28 @@ fn serve(addr: &str) -> Result<(), String> {
         }
         println!("[service] connection closed");
     }
+    // scheduler accounting: queue wait + service times land on the service
+    // hub; affinity and block counters land on the endpoint hub
+    let sm = svc.metrics.snapshot();
+    let em = ep.metrics_snapshot();
+    println!(
+        "[service] {} tasks ({} failed) | mean queue wait {:.3} s | mean fit {:.3} s",
+        sm.completed + sm.failed,
+        sm.failed,
+        sm.mean_wait_s,
+        sm.mean_service_s
+    );
+    println!(
+        "[service] scheduler: affinity {} hit / {} miss ({:.0}% warm) | batches {} ({} fits, {} deduped) | blocks +{} -{}",
+        em.affinity_hits,
+        em.affinity_misses,
+        em.affinity_hit_rate() * 100.0,
+        sm.batches,
+        sm.batched_tasks,
+        sm.dedup_hits,
+        em.blocks_provisioned,
+        em.blocks_released
+    );
     ep.shutdown();
     println!("[service] shut down");
     Ok(())

@@ -1,0 +1,2 @@
+"""L2 build-time compiler package: dense HistFactory model, Pallas kernels,
+shape classes and the AOT-to-HLO emitter (see `aot.build_all`)."""

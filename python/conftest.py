@@ -1,0 +1,7 @@
+"""Pytest bootstrap: make `compile.*` importable no matter where pytest is
+invoked from (repo root in CI, `python/` locally)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -1,0 +1,128 @@
+//! Bench SCHED — dispatch-policy comparison on the paper's Table-1 workload
+//! replayed over the RIVER topology (max_blocks = 4, nodes_per_block = 1,
+//! 24 workers/node).
+//!
+//! Workload: the three published analyses served concurrently through one
+//! endpoint — the 125-patch 1Lbb scan arriving interleaved with the 76-patch
+//! 2L0J and 57-patch stau scans, each task needing its analysis' compiled
+//! executable. The per-worker compile cost is what warm-worker affinity
+//! routing avoids: FIFO dispatch cycles every worker through every
+//! executable, affinity keeps workers on the shape class they already hold.
+//!
+//! A single-analysis control row (1Lbb alone: one shape class) shows the
+//! policies coincide when there is nothing to route — affinity is free.
+//!
+//! Run: `cargo bench --bench scheduler`
+
+use pyhf_faas::sim::{
+    simulate_policy, table1_mixed_workload, CostModel, SimPolicy, SimTask, Topology,
+    PAPER_TABLE1,
+};
+use pyhf_faas::util::stats::Summary;
+
+/// Per-worker executable compile cost (seconds): the PJRT artifact compile
+/// a cold worker pays before its first fit of a class — same order as the
+/// worker-startup term of the RIVER cost model.
+const CLASS_COMPILE_S: f64 = 5.0;
+const TRIALS: u64 = 10;
+
+struct Row {
+    label: &'static str,
+    latency: Summary,
+    makespan: Summary,
+    compiles: f64,
+    hit_rate: f64,
+}
+
+fn run(label: &'static str, tasks: &[SimTask], policy: SimPolicy) -> Row {
+    let topo = Topology::river_table1();
+    let mut latencies = Vec::new();
+    let mut makespans = Vec::new();
+    let mut compiles = 0.0;
+    let mut hits = 0.0;
+    for t in 0..TRIALS {
+        let out = simulate_policy(
+            tasks,
+            topo,
+            CostModel::river(),
+            CLASS_COMPILE_S,
+            policy,
+            0x5c4ed + t * 7919,
+        );
+        latencies.push(out.mean_latency_s);
+        makespans.push(out.makespan_s);
+        compiles += out.compiles as f64;
+        hits += out.affinity_hits as f64;
+    }
+    let n = tasks.len() as f64 * TRIALS as f64;
+    Row {
+        label,
+        latency: Summary::of(&latencies),
+        makespan: Summary::of(&makespans),
+        compiles: compiles / TRIALS as f64,
+        hit_rate: hits / n,
+    }
+}
+
+fn print_row(r: &Row) {
+    println!(
+        "{:<26} {:>8.1} ± {:>4.1} {:>10.1} ± {:>4.1} {:>9.1} {:>8.0}%",
+        r.label,
+        r.latency.mean,
+        r.latency.std,
+        r.makespan.mean,
+        r.makespan.std,
+        r.compiles,
+        r.hit_rate * 100.0
+    );
+}
+
+fn main() {
+    println!("=== SCHED: dispatch policies on the Table-1 workload (RIVER topology) ===\n");
+    let tasks = table1_mixed_workload();
+    println!(
+        "workload: {} tasks ({}), compile {CLASS_COMPILE_S:.0} s/class/worker, {TRIALS} trials\n",
+        tasks.len(),
+        PAPER_TABLE1
+            .iter()
+            .map(|r| format!("{} x {}", r.patches, r.analysis))
+            .collect::<Vec<_>>()
+            .join(" + "),
+    );
+    println!(
+        "{:<26} {:>15} {:>17} {:>9} {:>9}",
+        "policy", "mean latency (s)", "makespan (s)", "compiles", "warm"
+    );
+    let fifo = run("fifo (seed interchange)", &tasks, SimPolicy::Fifo);
+    let affinity = run("affinity (warm-worker)", &tasks, SimPolicy::Affinity);
+    print_row(&fifo);
+    print_row(&affinity);
+
+    println!("\n--- control: 1Lbb alone (125 patches, one shape class) ---");
+    let row = &PAPER_TABLE1[0];
+    let single: Vec<SimTask> = (0..row.patches)
+        .map(|_| SimTask { service_s: row.single_node_s / row.patches as f64, class: 0 })
+        .collect();
+    let fifo_1 = run("fifo / 1Lbb only", &single, SimPolicy::Fifo);
+    let affinity_1 = run("affinity / 1Lbb only", &single, SimPolicy::Affinity);
+    print_row(&fifo_1);
+    print_row(&affinity_1);
+
+    // acceptance: affinity beats FIFO on the mixed Table-1 workload and is
+    // never worse on the single-class control
+    assert!(
+        affinity.latency.mean < fifo.latency.mean,
+        "affinity mean latency {:.2} s must beat fifo {:.2} s",
+        affinity.latency.mean,
+        fifo.latency.mean
+    );
+    assert!(affinity.compiles < fifo.compiles);
+    assert!(affinity_1.latency.mean <= fifo_1.latency.mean * 1.001);
+    println!(
+        "\ncheck PASSED: affinity mean latency {:.1} s < fifo {:.1} s \
+         ({:.0}% fewer compiles; single-class control identical).",
+        affinity.latency.mean,
+        fifo.latency.mean,
+        (1.0 - affinity.compiles / fifo.compiles) * 100.0
+    );
+}

@@ -1,7 +1,6 @@
 //! Shared measurement helpers for the bench targets: run real PJRT/native
 //! fits over a pallet and collect per-patch service times + physics outputs.
-
-use anyhow::{anyhow, Result};
+//! Errors are plain `String`s (no error crates in the offline build).
 
 use crate::fitter::native::NativeFitter;
 use crate::histfactory::dense;
@@ -21,12 +20,12 @@ pub struct Campaign {
 }
 
 /// Fit `limit` patches (None = all) of `cfg`'s pallet with the PJRT artifact.
-pub fn measure_pjrt(cfg: &AnalysisConfig, limit: Option<usize>) -> Result<Campaign> {
+pub fn measure_pjrt(cfg: &AnalysisConfig, limit: Option<usize>) -> Result<Campaign, String> {
     let dir = default_artifact_dir();
-    let manifest = Manifest::load(&dir).map_err(|e| anyhow!(e))?;
+    let manifest = Manifest::load(&dir)?;
     let entry = manifest
         .hypotest(&cfg.name)
-        .ok_or_else(|| anyhow!("no hypotest artifact for '{}'", cfg.name))?;
+        .ok_or_else(|| format!("no hypotest artifact for '{}'", cfg.name))?;
     let engine = Engine::cpu()?;
     let t0 = std::time::Instant::now();
     let compiled = engine.load(entry, &dir)?;
@@ -37,9 +36,9 @@ pub fn measure_pjrt(cfg: &AnalysisConfig, limit: Option<usize>) -> Result<Campai
     let mut service = Vec::with_capacity(n);
     let mut points = Vec::with_capacity(n);
     for patch in pallet.patchset.patches.iter().take(n) {
-        let ws = Workspace::from_json(&patch.apply_to(&pallet.bkg_workspace).map_err(|e| anyhow!(e.to_string()))?)
-            .map_err(|e| anyhow!(e.to_string()))?;
-        let model = dense::compile(&ws, &entry.class).map_err(|e| anyhow!(e.to_string()))?;
+        let patched = patch.apply_to(&pallet.bkg_workspace).map_err(|e| e.to_string())?;
+        let ws = Workspace::from_json(&patched).map_err(|e| e.to_string())?;
+        let model = dense::compile(&ws, &entry.class).map_err(|e| e.to_string())?;
         let t0 = std::time::Instant::now();
         let out = compiled.hypotest(&model)?;
         let dt = t0.elapsed().as_secs_f64();
@@ -51,21 +50,21 @@ pub fn measure_pjrt(cfg: &AnalysisConfig, limit: Option<usize>) -> Result<Campai
 
 /// Same campaign through the native-Rust scalar fitter (the "traditional
 /// single-node implementation" baseline).
-pub fn measure_native(cfg: &AnalysisConfig, limit: Option<usize>) -> Result<Campaign> {
+pub fn measure_native(cfg: &AnalysisConfig, limit: Option<usize>) -> Result<Campaign, String> {
     let dir = default_artifact_dir();
-    let manifest = Manifest::load(&dir).map_err(|e| anyhow!(e))?;
+    let manifest = Manifest::load(&dir)?;
     let entry = manifest
         .hypotest(&cfg.name)
-        .ok_or_else(|| anyhow!("no hypotest artifact for '{}'", cfg.name))?;
+        .ok_or_else(|| format!("no hypotest artifact for '{}'", cfg.name))?;
 
     let pallet = generate(cfg);
     let n = limit.unwrap_or(pallet.patchset.len()).min(pallet.patchset.len());
     let mut service = Vec::with_capacity(n);
     let mut points = Vec::with_capacity(n);
     for patch in pallet.patchset.patches.iter().take(n) {
-        let ws = Workspace::from_json(&patch.apply_to(&pallet.bkg_workspace).map_err(|e| anyhow!(e.to_string()))?)
-            .map_err(|e| anyhow!(e.to_string()))?;
-        let model = dense::compile(&ws, &entry.class).map_err(|e| anyhow!(e.to_string()))?;
+        let patched = patch.apply_to(&pallet.bkg_workspace).map_err(|e| e.to_string())?;
+        let ws = Workspace::from_json(&patched).map_err(|e| e.to_string())?;
+        let model = dense::compile(&ws, &entry.class).map_err(|e| e.to_string())?;
         let t0 = std::time::Instant::now();
         let h = NativeFitter::new(&model).hypotest(1.0);
         let dt = t0.elapsed().as_secs_f64();

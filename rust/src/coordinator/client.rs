@@ -6,7 +6,26 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::service::{Handler, ServiceHandle};
 use crate::coordinator::task::{EndpointId, FunctionId, TaskId, TaskState};
+use crate::scheduler::batcher::{plan_batches, BatchPlan};
 use crate::util::json::Json;
+
+/// A coalesced submission wave: one task per batch group plus the plan
+/// that maps group results back onto the original payload order.
+pub struct BatchSubmission {
+    /// one task per group, in group order
+    pub tasks: Vec<TaskId>,
+    pub plan: BatchPlan,
+}
+
+impl BatchSubmission {
+    /// Map per-group results back to per-original-payload results.
+    pub fn unpack(
+        &self,
+        group_results: &[Result<Json, String>],
+    ) -> Result<Vec<Result<Json, String>>, String> {
+        self.plan.unpack(group_results)
+    }
+}
 
 /// Client handle onto a service.
 #[derive(Clone)]
@@ -49,6 +68,31 @@ impl FaasClient {
     /// Blocking wait with timeout.
     pub fn wait(&self, task: TaskId, timeout: Duration) -> Result<Json, String> {
         self.service.wait_result(task, timeout)
+    }
+
+    /// Submit a payload wave through the batcher: identical payloads are
+    /// deduped (sharing one execution), unique same-class payloads are
+    /// coalesced into `{"batch": [...]}` tasks of at most `max_batch` fits.
+    /// The target function must be batch-aware (wrap its handler in
+    /// [`crate::scheduler::batcher::batched_handler`]); with `max_batch =
+    /// 1` every group is a singleton, so any handler works.
+    pub fn run_coalesced(
+        &self,
+        payloads: &[Json],
+        endpoint_id: EndpointId,
+        function_id: FunctionId,
+        max_batch: usize,
+    ) -> Result<BatchSubmission, String> {
+        let plan = plan_batches(payloads, max_batch);
+        if plan.dedup_hits > 0 {
+            self.service.metrics.dedup_hit(plan.dedup_hits as u64);
+        }
+        let mut tasks = Vec::with_capacity(plan.n_tasks());
+        for g in 0..plan.n_tasks() {
+            self.service.metrics.batch_submitted(plan.groups[g].len() as u64);
+            tasks.push(self.run(plan.group_payload(g, payloads), endpoint_id, function_id)?);
+        }
+        Ok(BatchSubmission { tasks, plan })
     }
 
     /// Submit many payloads and return task ids (scan fan-out).
@@ -179,6 +223,38 @@ mod tests {
         for (i, r) in results.iter().enumerate() {
             assert_eq!(r.as_ref().unwrap().as_f64(), Some(i as f64));
         }
+        ep.shutdown();
+    }
+
+    #[test]
+    fn coalesced_run_dedups_and_restores_order() {
+        let svc = Service::new();
+        let ep = quick_endpoint(&svc);
+        let fxc = FaasClient::new(svc.clone());
+        let f = fxc.register_function(
+            "echo",
+            crate::scheduler::batcher::batched_handler(Arc::new(|p: &Json, _| Ok(p.clone()))),
+        );
+        // three distinct payloads of one class + one exact duplicate
+        let mk = |name: &str| {
+            Json::obj(vec![("patch", Json::str(name)), ("class", Json::str("quickstart"))])
+        };
+        let payloads = vec![mk("p0"), mk("p1"), mk("p0"), mk("p2")];
+        let sub = fxc.run_coalesced(&payloads, ep.id, f, 8).unwrap();
+        // 3 uniques coalesce into one batch task
+        assert_eq!(sub.tasks.len(), 1);
+        let group_results = fxc
+            .gather(&sub.tasks, Duration::from_secs(10), Duration::from_millis(1), None, |_, _| {})
+            .unwrap();
+        let results = sub.unpack(&group_results).unwrap();
+        assert_eq!(results.len(), 4);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.as_ref().unwrap(), &payloads[i]);
+        }
+        let m = svc.metrics.snapshot();
+        assert_eq!(m.dedup_hits, 1);
+        assert_eq!(m.batches, 1);
+        assert_eq!(m.batched_tasks, 3);
         ep.shutdown();
     }
 }

@@ -19,6 +19,10 @@ pub struct ScanOptions {
     pub verbose: bool,
     /// cap on patches (None = all)
     pub limit: Option<usize>,
+    /// coalesce up to this many same-class fits per task (1 = no batching,
+    /// the seed behavior; >1 requires the registered function to be wrapped
+    /// in `scheduler::batcher::batched_handler`)
+    pub batch: usize,
     pub timeout: Duration,
     pub poll: Duration,
     /// fail fast if nothing completes within this window (e.g. every worker
@@ -32,6 +36,7 @@ impl Default for ScanOptions {
             class: None,
             verbose: false,
             limit: None,
+            batch: 1,
             timeout: Duration::from_secs(3600),
             poll: Duration::from_millis(5),
             stall_timeout: Duration::from_secs(120),
@@ -54,28 +59,51 @@ pub fn run_scan(
     let n = opts.limit.unwrap_or(pallet.patchset.len()).min(pallet.patchset.len());
     let t0 = Instant::now();
 
-    // fan-out: build + submit payloads (patch application happens client-side,
-    // like pyhf pallets: the worker receives a complete workspace)
-    let mut tasks = Vec::with_capacity(n);
+    // fan-out: build payloads (patch application happens client-side, like
+    // pyhf pallets: the worker receives a complete workspace)
+    let mut payloads = Vec::with_capacity(n);
     let mut names = Vec::with_capacity(n);
     for patch in pallet.patchset.patches.iter().take(n) {
-        let payload =
-            fitops::patch_payload(&pallet.bkg_workspace, patch, opts.class.as_deref())?;
+        payloads.push(fitops::patch_payload(&pallet.bkg_workspace, patch, opts.class.as_deref())?);
         names.push(patch.name.clone());
-        tasks.push(client.run(payload, endpoint, function)?);
     }
 
-    // gather with completion stream
-    let mut done = 0usize;
-    let results = client.gather(&tasks, opts.timeout, opts.poll, Some(opts.stall_timeout), |i, r| {
-        done += 1;
-        if opts.verbose {
-            match r {
-                Ok(_) => println!("Task {} complete, there are {} results now", names[i], done),
-                Err(e) => println!("Task {} FAILED: {e}", names[i]),
-            }
+    let results = if opts.batch <= 1 {
+        // one task per patch + Listing-2 completion stream (seed behavior)
+        let mut tasks = Vec::with_capacity(n);
+        for payload in payloads {
+            tasks.push(client.run(payload, endpoint, function)?);
         }
-    })?;
+        let mut done = 0usize;
+        client.gather(&tasks, opts.timeout, opts.poll, Some(opts.stall_timeout), |i, r| {
+            done += 1;
+            if opts.verbose {
+                match r {
+                    Ok(_) => println!("Task {} complete, there are {} results now", names[i], done),
+                    Err(e) => println!("Task {} FAILED: {e}", names[i]),
+                }
+            }
+        })?
+    } else {
+        // coalesced fan-out: dedup + same-class batches of opts.batch fits
+        let sub = client.run_coalesced(&payloads, endpoint, function, opts.batch)?;
+        let mut done = 0usize;
+        let group_results = client
+            .gather(&sub.tasks, opts.timeout, opts.poll, Some(opts.stall_timeout), |g, r| {
+                done += 1;
+                if opts.verbose {
+                    let fits = sub.plan.groups[g].len();
+                    match r {
+                        Ok(_) => println!(
+                            "Batch {g} complete ({fits} fits), {done} of {} batches now",
+                            sub.tasks.len()
+                        ),
+                        Err(e) => println!("Batch {g} FAILED: {e}"),
+                    }
+                }
+            })?;
+        sub.unpack(&group_results)?
+    };
 
     let mut scan = ScanResult::new(pallet.config.name.clone());
     for (i, r) in results.into_iter().enumerate() {
@@ -134,6 +162,53 @@ mod tests {
             assert!(p.values.len() == 2);
         }
         assert!(scan.wall_seconds > 0.0);
+        ep.shutdown();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Same scan through the batcher (4 patches coalesced into same-class
+    /// multi-fit tasks): identical physics, fewer tasks on the wire.
+    #[test]
+    fn batched_scan_matches_unbatched() {
+        let svc = Service::new();
+        let dir = std::env::temp_dir().join(format!("scan-batch-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), TEST_MANIFEST).unwrap();
+
+        let ep = Endpoint::start(
+            svc.clone(),
+            EndpointConfig::new("native-batched")
+                .with_executor(ExecutorConfig {
+                    max_blocks: 1,
+                    nodes_per_block: 1,
+                    workers_per_node: 2,
+                    parallelism: 1.0,
+                    poll: Duration::from_millis(1),
+                })
+                .with_worker_init(crate::coordinator::fitops::native_worker_init(dir.clone())),
+        );
+        let client = FaasClient::new(svc.clone());
+        let f = client.register_function(
+            "fit_patch_native",
+            crate::scheduler::batcher::batched_handler(
+                crate::coordinator::fitops::native_fit_handler(),
+            ),
+        );
+
+        let pallet = crate::pallet::generate(&config_quickstart());
+        let opts = ScanOptions { limit: Some(4), batch: 2, ..Default::default() };
+        let scan = run_scan(&client, ep.id, f, &pallet, &opts).unwrap();
+
+        assert_eq!(scan.points.len(), 4);
+        for (i, p) in scan.points.iter().enumerate() {
+            assert_eq!(p.patch, pallet.patchset.patches[i].name);
+            assert!(p.cls_obs >= 0.0 && p.cls_obs <= 1.0 + 1e-12);
+        }
+        // the wave coalesced: fewer tasks than patches, counters populated
+        let m = svc.metrics.snapshot();
+        assert!(m.submitted < 4, "expected coalesced tasks, got {}", m.submitted);
+        assert!(m.batches >= 1);
+        assert_eq!(m.batched_tasks, 4);
         ep.shutdown();
         std::fs::remove_dir_all(&dir).unwrap();
     }

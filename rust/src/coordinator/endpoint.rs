@@ -12,11 +12,17 @@ use crate::coordinator::metrics::{Metrics, Snapshot};
 use crate::coordinator::provider::Provider;
 use crate::coordinator::service::{ServiceHandle, TaskQueue, WorkerInit};
 use crate::coordinator::task::EndpointId;
+use crate::scheduler::autoscale::AutoscaleConfig;
+use crate::scheduler::policy::PolicyKind;
 
 /// Endpoint configuration (descriptive metadata + execution setup).
 pub struct EndpointConfig {
     pub name: String,
     pub executor: ExecutorConfig,
+    /// interchange dispatch policy (default FIFO — the seed behavior)
+    pub policy: PolicyKind,
+    /// elastic-block knobs (default: Parsl simple scaling, no scale-down)
+    pub autoscale: AutoscaleConfig,
     pub provider: Box<dyn Provider>,
     pub worker_init: WorkerInit,
 }
@@ -26,6 +32,8 @@ impl EndpointConfig {
         EndpointConfig {
             name: name.into(),
             executor: ExecutorConfig::default(),
+            policy: PolicyKind::Fifo,
+            autoscale: AutoscaleConfig::default(),
             provider: Box::new(crate::coordinator::provider::LocalProvider::default()),
             worker_init: Arc::new(|_| Ok(())),
         }
@@ -33,6 +41,16 @@ impl EndpointConfig {
 
     pub fn with_executor(mut self, executor: ExecutorConfig) -> Self {
         self.executor = executor;
+        self
+    }
+
+    pub fn with_policy(mut self, policy: PolicyKind) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn with_autoscale(mut self, autoscale: AutoscaleConfig) -> Self {
+        self.autoscale = autoscale;
         self
     }
 
@@ -60,9 +78,10 @@ pub struct Endpoint {
 impl Endpoint {
     /// Register with the service and start the executor.
     pub fn start(service: ServiceHandle, config: EndpointConfig) -> Endpoint {
-        let queue = TaskQueue::new();
-        let id = service.register_endpoint(&config.name, queue.clone());
+        let queue = TaskQueue::with_policy(config.policy.build());
         let metrics = Arc::new(Metrics::new());
+        queue.attach_metrics(metrics.clone());
+        let id = service.register_endpoint(&config.name, queue.clone());
         let executor = HighThroughputExecutor::start(
             service.clone(),
             id,
@@ -70,9 +89,15 @@ impl Endpoint {
             config.provider,
             config.worker_init,
             config.executor,
+            config.autoscale,
             metrics.clone(),
         );
         Endpoint { id, name: config.name, queue, executor: Some(executor), service, metrics }
+    }
+
+    /// Name of the installed dispatch policy.
+    pub fn policy_name(&self) -> &'static str {
+        self.queue.policy_name()
     }
 
     pub fn active_workers(&self) -> usize {

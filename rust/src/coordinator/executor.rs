@@ -3,17 +3,25 @@
 //!
 //! A *block* is the unit of resources acquired from the provider
 //! (`nodes_per_block` nodes, `workers_per_node` workers each). The scaling
-//! loop provisions blocks while
+//! loop delegates to the scheduler's [`AutoscaleController`]: scale-up on
+//! the classic Parsl condition
 //!
 //! ```text
 //! outstanding_tasks > parallelism * active_workers   and   blocks < max_blocks
 //! ```
 //!
-//! which is exactly Parsl's simple-scaling condition with the parallelism
-//! ratio the paper describes in §3. Workers are OS threads; each runs the
-//! endpoint's `WorkerInit` once (compiling PJRT artifacts — the analog of a
-//! funcX worker's container pull + `pip install`) and then drains the
-//! interchange queue.
+//! (optionally also on head-of-line queue latency), scale-down of idle
+//! blocks when `AutoscaleConfig::idle_release` is set. Workers are OS
+//! threads; each runs the endpoint's `WorkerInit` once (compiling PJRT
+//! artifacts — the analog of a funcX worker's container pull + `pip
+//! install`), then drains the interchange through the installed scheduling
+//! policy, carrying a [`WorkerProfile`] whose warm set enables affinity
+//! routing.
+//!
+//! Shutdown semantics: closing the interchange stops *intake*, not
+//! execution — workers keep popping until the queue is empty, so every
+//! accepted task reaches a terminal state (the seed dropped still-queued
+//! tasks when shutdown raced a drain).
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -24,6 +32,10 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::provider::Provider;
 use crate::coordinator::service::{ServiceHandle, TaskQueue, WorkerContext, WorkerInit};
 use crate::coordinator::task::EndpointId;
+use crate::scheduler::autoscale::{
+    AutoscaleConfig, AutoscaleController, LoadSnapshot, ScaleDecision,
+};
+use crate::scheduler::policy::WorkerProfile;
 
 /// Executor tuning knobs (funcX endpoint config).
 #[derive(Debug, Clone)]
@@ -67,17 +79,27 @@ impl ExecutorConfig {
     }
 }
 
+/// One provisioned block: its workers and the retire flag the autoscaler
+/// flips to release it.
+struct BlockHandle {
+    index: usize,
+    retire: Arc<AtomicBool>,
+    workers: Vec<JoinHandle<()>>,
+}
+
 /// Running executor; owns the scaling thread and all worker threads.
 pub struct HighThroughputExecutor {
     shutdown: Arc<AtomicBool>,
     scaler: Option<JoinHandle<()>>,
-    workers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    blocks_list: Arc<Mutex<Vec<BlockHandle>>>,
     active_workers: Arc<AtomicUsize>,
-    blocks: Arc<AtomicUsize>,
+    live_blocks: Arc<AtomicUsize>,
+    service: ServiceHandle,
 }
 
 impl HighThroughputExecutor {
     /// Start the executor for an endpoint.
+    #[allow(clippy::too_many_arguments)]
     pub fn start(
         service: ServiceHandle,
         endpoint: EndpointId,
@@ -85,60 +107,98 @@ impl HighThroughputExecutor {
         mut provider: Box<dyn Provider>,
         worker_init: WorkerInit,
         config: ExecutorConfig,
+        autoscale: AutoscaleConfig,
         metrics: Arc<Metrics>,
     ) -> HighThroughputExecutor {
         let shutdown = Arc::new(AtomicBool::new(false));
         let active_workers = Arc::new(AtomicUsize::new(0));
-        let blocks = Arc::new(AtomicUsize::new(0));
-        let workers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let live_blocks = Arc::new(AtomicUsize::new(0));
+        let blocks_list: Arc<Mutex<Vec<BlockHandle>>> = Arc::new(Mutex::new(Vec::new()));
+        let service_for_shutdown = service.clone();
 
         let scaler = {
             let shutdown = shutdown.clone();
             let active_workers = active_workers.clone();
-            let blocks = blocks.clone();
-            let workers = workers.clone();
+            let live_blocks = live_blocks.clone();
+            let blocks_list = blocks_list.clone();
+            let queue = queue.clone();
             std::thread::Builder::new()
                 .name(format!("ep{endpoint}-scaler"))
                 .spawn(move || {
+                    // oldest_wait scans the queue under its mutex — only pay
+                    // for it when a latency trigger is actually configured
+                    let wants_wait = autoscale.target_wait.is_some();
+                    let mut controller =
+                        AutoscaleController::new(autoscale, config.parallelism, config.max_blocks);
+                    // block indices are never reused, even across releases
+                    let mut next_block: usize = 0;
                     while !shutdown.load(Ordering::SeqCst) {
-                        let outstanding = service.outstanding(endpoint);
-                        let capacity = active_workers.load(Ordering::SeqCst);
-                        let nblocks = blocks.load(Ordering::SeqCst);
-                        let need_scale = nblocks < config.max_blocks
-                            && outstanding as f64 > config.parallelism * capacity as f64;
-                        if need_scale {
-                            match provider.request_block(nblocks, config.nodes_per_block) {
-                                Ok(grant) => {
-                                    // block acquisition latency (batch queue)
-                                    std::thread::sleep(grant.latency);
-                                    metrics.block_provisioned();
-                                    blocks.fetch_add(1, Ordering::SeqCst);
-                                    let mut guard = workers.lock().unwrap();
-                                    for node in 0..grant.nodes {
-                                        for w in 0..config.workers_per_node {
-                                            let name = format!(
-                                                "block-{}/node-{node}/worker-{w}",
-                                                grant.block_index
-                                            );
-                                            guard.push(spawn_worker(
-                                                name,
-                                                service.clone(),
-                                                queue.clone(),
-                                                worker_init.clone(),
-                                                shutdown.clone(),
-                                                active_workers.clone(),
-                                                metrics.clone(),
-                                            ));
+                        reap_retired_blocks(&blocks_list);
+                        let load = LoadSnapshot {
+                            outstanding: service.outstanding(endpoint),
+                            queued: queue.len(),
+                            active_workers: active_workers.load(Ordering::SeqCst),
+                            blocks: live_blocks.load(Ordering::SeqCst),
+                            oldest_wait: if wants_wait { queue.oldest_wait() } else { None },
+                        };
+                        match controller.decide(Instant::now(), &load) {
+                            ScaleDecision::Up => {
+                                match provider.request_block(next_block, config.nodes_per_block) {
+                                    Ok(grant) => {
+                                        // block acquisition latency (batch queue)
+                                        std::thread::sleep(grant.latency);
+                                        metrics.block_provisioned();
+                                        next_block += 1;
+                                        let retire = Arc::new(AtomicBool::new(false));
+                                        let mut handles = Vec::new();
+                                        for node in 0..grant.nodes {
+                                            for w in 0..config.workers_per_node {
+                                                let name = format!(
+                                                    "block-{}/node-{node}/worker-{w}",
+                                                    grant.block_index
+                                                );
+                                                handles.push(spawn_worker(
+                                                    name,
+                                                    service.clone(),
+                                                    queue.clone(),
+                                                    worker_init.clone(),
+                                                    retire.clone(),
+                                                    active_workers.clone(),
+                                                    metrics.clone(),
+                                                ));
+                                            }
                                         }
+                                        blocks_list.lock().unwrap().push(BlockHandle {
+                                            index: grant.block_index,
+                                            retire,
+                                            workers: handles,
+                                        });
+                                        live_blocks.fetch_add(1, Ordering::SeqCst);
+                                    }
+                                    Err(_) => {
+                                        // provider exhausted: back off
+                                        std::thread::sleep(
+                                            config.poll.max(Duration::from_millis(20)),
+                                        );
                                     }
                                 }
-                                Err(_) => {
-                                    // provider exhausted: stop trying
-                                    std::thread::sleep(config.poll.max(Duration::from_millis(20)));
-                                }
                             }
-                        } else {
-                            std::thread::sleep(config.poll);
+                            ScaleDecision::Down => {
+                                let mut list = blocks_list.lock().unwrap();
+                                if let Some(block) = list
+                                    .iter_mut()
+                                    .rev()
+                                    .find(|b| !b.retire.load(Ordering::SeqCst))
+                                {
+                                    block.retire.store(true, Ordering::SeqCst);
+                                    live_blocks.fetch_sub(1, Ordering::SeqCst);
+                                    metrics.block_released();
+                                    provider.release_block(block.index);
+                                }
+                                drop(list);
+                                std::thread::sleep(config.poll);
+                            }
+                            ScaleDecision::Hold => std::thread::sleep(config.poll),
                         }
                     }
                 })
@@ -148,9 +208,10 @@ impl HighThroughputExecutor {
         HighThroughputExecutor {
             shutdown,
             scaler: Some(scaler),
-            workers,
+            blocks_list,
             active_workers,
-            blocks,
+            live_blocks,
+            service: service_for_shutdown,
         }
     }
 
@@ -158,20 +219,55 @@ impl HighThroughputExecutor {
         self.active_workers.load(Ordering::SeqCst)
     }
 
+    /// Live (non-retired) blocks.
     pub fn blocks(&self) -> usize {
-        self.blocks.load(Ordering::SeqCst)
+        self.live_blocks.load(Ordering::SeqCst)
     }
 
-    /// Stop scaling, close the queue semantics are the endpoint's concern;
-    /// here we signal shutdown and join everything.
+    /// Stop scaling, close the interchange and join everything. Workers
+    /// drain the queue first; anything still queued after they exit (every
+    /// worker failed init, or the autoscaler had retired the last block
+    /// when shutdown hit) is failed terminally rather than left Pending —
+    /// every accepted task reaches a terminal state.
     pub fn shutdown(mut self, queue: &TaskQueue) {
         self.shutdown.store(true, Ordering::SeqCst);
         queue.close();
         if let Some(s) = self.scaler.take() {
             let _ = s.join();
         }
-        let handles: Vec<_> = self.workers.lock().unwrap().drain(..).collect();
-        for h in handles {
+        let blocks: Vec<BlockHandle> = self.blocks_list.lock().unwrap().drain(..).collect();
+        for block in blocks {
+            for h in block.workers {
+                let _ = h.join();
+            }
+        }
+        for meta in queue.drain_remaining() {
+            self.service
+                .complete(meta.id, Err("endpoint shut down before the task could run".to_string()));
+        }
+    }
+}
+
+/// Reap retired blocks whose workers have all exited: join the (finished)
+/// threads and drop the handles, so scale-up/down cycles on a long-lived
+/// endpoint don't accumulate dead `BlockHandle`s. Blocks still winding down
+/// (a worker finishing its in-flight task) are left for a later pass.
+fn reap_retired_blocks(blocks_list: &Mutex<Vec<BlockHandle>>) {
+    let mut done = Vec::new();
+    {
+        let mut list = blocks_list.lock().unwrap();
+        let mut i = 0;
+        while i < list.len() {
+            let b = &list[i];
+            if b.retire.load(Ordering::SeqCst) && b.workers.iter().all(|h| h.is_finished()) {
+                done.push(list.remove(i));
+            } else {
+                i += 1;
+            }
+        }
+    }
+    for block in done {
+        for h in block.workers {
             let _ = h.join();
         }
     }
@@ -182,7 +278,7 @@ fn spawn_worker(
     service: ServiceHandle,
     queue: Arc<TaskQueue>,
     worker_init: WorkerInit,
-    shutdown: Arc<AtomicBool>,
+    retire: Arc<AtomicBool>,
     active_workers: Arc<AtomicUsize>,
     metrics: Arc<Metrics>,
 ) -> JoinHandle<()> {
@@ -197,11 +293,17 @@ fn spawn_worker(
             }
             metrics.worker_started(t0.elapsed().as_secs_f64());
             active_workers.fetch_add(1, Ordering::SeqCst);
+            let mut profile = WorkerProfile::new(name.clone());
 
             loop {
-                match queue.pop(Duration::from_millis(50)) {
-                    Some(task_id) => {
-                        if let Some((handler, payload)) = service.claim(task_id, &name) {
+                if retire.load(Ordering::SeqCst) {
+                    // block released by the autoscaler
+                    break;
+                }
+                match queue.pop_task(&profile, Duration::from_millis(50)) {
+                    Some(meta) => {
+                        let mut ran_ok = false;
+                        if let Some((handler, payload)) = service.claim(meta.id, &name) {
                             // a panicking handler must fail the task, not
                             // wedge it in Running and kill the worker
                             let outcome = std::panic::catch_unwind(
@@ -215,13 +317,25 @@ fn spawn_worker(
                                     .unwrap_or_else(|| "handler panicked".into());
                                 Err(format!("handler panicked: {msg}"))
                             });
-                            service.complete(task_id, outcome);
+                            // an all-failure batch envelope is Ok at the
+                            // task level but proves nothing was compiled
+                            ran_ok = match &outcome {
+                                Ok(v) => crate::scheduler::batcher::result_proves_warm(v),
+                                Err(_) => false,
+                            };
+                            service.complete(meta.id, outcome);
+                        }
+                        // only a successful run proves this worker holds
+                        // the warm state for the key (a failed handler may
+                        // never have compiled anything)
+                        if ran_ok && !meta.affinity_key.is_empty() {
+                            profile.note_warm(meta.affinity_key);
                         }
                     }
                     None => {
-                        if shutdown.load(Ordering::SeqCst)
-                            || (queue.is_closed() && queue.is_empty())
-                        {
+                        // exit only once intake has stopped AND the queue is
+                        // drained — never drop queued work on shutdown
+                        if queue.is_closed() && queue.is_empty() {
                             break;
                         }
                     }
@@ -237,6 +351,7 @@ mod tests {
     use super::*;
     use crate::coordinator::provider::LocalProvider;
     use crate::coordinator::service::Service;
+    use crate::coordinator::task::TaskState;
     use crate::util::json::Json;
     use std::sync::Arc;
 
@@ -269,6 +384,7 @@ mod tests {
             Box::new(LocalProvider::default()),
             Arc::new(|_| Ok(())),
             config,
+            AutoscaleConfig::default(),
             metrics.clone(),
         );
 
@@ -309,6 +425,7 @@ mod tests {
             Box::new(LocalProvider::default()),
             Arc::new(|_| Ok(())),
             config,
+            AutoscaleConfig::default(),
             metrics,
         );
         let ids: Vec<_> = (0..10)
@@ -350,6 +467,7 @@ mod tests {
             Box::new(LocalProvider::default()),
             Arc::new(|_| Ok(())),
             config,
+            AutoscaleConfig::default(),
             metrics,
         );
         let bad = svc.submit(ep, boom, Json::num(13.0)).unwrap();
@@ -385,6 +503,7 @@ mod tests {
             Box::new(LocalProvider::default()),
             Arc::new(|_| Err("no artifacts".into())),
             config,
+            AutoscaleConfig::default(),
             metrics,
         );
         // a pending task triggers scaling; the worker then fails init
@@ -395,6 +514,98 @@ mod tests {
             svc.task_state(id),
             Some(crate::coordinator::task::TaskState::Pending)
         );
+        exec.shutdown(&q);
+    }
+
+    #[test]
+    fn shutdown_drains_queued_tasks() {
+        // the seed dropped still-queued tasks when shutdown raced the
+        // drain; now every accepted task must reach a terminal state
+        let svc = Service::new();
+        let q = TaskQueue::new();
+        let ep = svc.register_endpoint("e", q.clone());
+        let f = svc.register_function("sleepy", sleepy_handler(10));
+        let metrics = Arc::new(Metrics::new());
+        let config = ExecutorConfig {
+            max_blocks: 1,
+            nodes_per_block: 1,
+            workers_per_node: 1,
+            parallelism: 1.0,
+            poll: Duration::from_millis(1),
+        };
+        let exec = HighThroughputExecutor::start(
+            svc.clone(),
+            ep,
+            q.clone(),
+            Box::new(LocalProvider::default()),
+            Arc::new(|_| Ok(())),
+            config,
+            AutoscaleConfig::default(),
+            metrics,
+        );
+        let ids: Vec<_> = (0..6)
+            .map(|i| svc.submit(ep, f, Json::num(i as f64)).unwrap())
+            .collect();
+        // wait until the (single) worker exists, then shut down immediately
+        // with most tasks still queued
+        let t0 = Instant::now();
+        while exec.active_workers() == 0 && t0.elapsed() < Duration::from_secs(5) {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(exec.active_workers() >= 1, "worker never started");
+        exec.shutdown(&q);
+        for id in &ids {
+            assert_eq!(svc.task_state(*id), Some(TaskState::Success), "task {id} dropped");
+        }
+    }
+
+    #[test]
+    fn idle_blocks_released_when_configured() {
+        let svc = Service::new();
+        let q = TaskQueue::new();
+        let ep = svc.register_endpoint("e", q.clone());
+        let f = svc.register_function("sleepy", sleepy_handler(2));
+        let metrics = Arc::new(Metrics::new());
+        let config = ExecutorConfig {
+            max_blocks: 2,
+            nodes_per_block: 1,
+            workers_per_node: 1,
+            parallelism: 1.0,
+            poll: Duration::from_millis(1),
+        };
+        let autoscale = AutoscaleConfig {
+            min_blocks: 0,
+            idle_release: Some(Duration::from_millis(20)),
+            target_wait: None,
+        };
+        let exec = HighThroughputExecutor::start(
+            svc.clone(),
+            ep,
+            q.clone(),
+            Box::new(LocalProvider::default()),
+            Arc::new(|_| Ok(())),
+            config,
+            autoscale,
+            metrics.clone(),
+        );
+        let ids: Vec<_> = (0..8)
+            .map(|i| svc.submit(ep, f, Json::num(i as f64)).unwrap())
+            .collect();
+        for id in ids {
+            svc.wait_result(id, Duration::from_secs(10)).unwrap();
+        }
+        // endpoint now idle: the autoscaler must release every block
+        let t0 = Instant::now();
+        while exec.blocks() > 0 && t0.elapsed() < Duration::from_secs(5) {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(exec.blocks(), 0, "idle blocks not released");
+        let t0 = Instant::now();
+        while exec.active_workers() > 0 && t0.elapsed() < Duration::from_secs(5) {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(exec.active_workers(), 0, "retired workers still running");
+        assert!(metrics.snapshot().blocks_released >= 1);
         exec.shutdown(&q);
     }
 }

@@ -1,6 +1,11 @@
 //! Coordinator metrics: counters + latency accumulators, snapshot-able for
 //! the CLI/benches (the paper's §4 calls out separating orchestration
 //! overhead from pure inference time — these counters are that split).
+//!
+//! Scheduler accounting rides on the same hub: the interchange counts
+//! affinity hits/misses at pop time, the client-side batcher counts
+//! coalesced submissions and dedup elisions, and the autoscaler counts
+//! blocks acquired and released.
 
 use std::sync::Mutex;
 
@@ -13,10 +18,17 @@ struct Inner {
     completed: u64,
     failed: u64,
     blocks_provisioned: u64,
+    blocks_released: u64,
     workers_started: u64,
+    affinity_hits: u64,
+    affinity_misses: u64,
+    batches: u64,
+    batched_tasks: u64,
+    dedup_hits: u64,
     wait: Accumulator,
     service: Accumulator,
     startup: Accumulator,
+    batch_size: Accumulator,
 }
 
 /// Thread-safe metrics hub (one per endpoint + one per service).
@@ -32,11 +44,21 @@ pub struct Snapshot {
     pub completed: u64,
     pub failed: u64,
     pub blocks_provisioned: u64,
+    pub blocks_released: u64,
     pub workers_started: u64,
+    pub affinity_hits: u64,
+    pub affinity_misses: u64,
+    /// coalesced submissions (each becoming one task)
+    pub batches: u64,
+    /// fits carried inside those submissions
+    pub batched_tasks: u64,
+    /// payloads elided as content-hash duplicates
+    pub dedup_hits: u64,
     pub mean_wait_s: f64,
     pub mean_service_s: f64,
     pub total_service_s: f64,
     pub mean_worker_startup_s: f64,
+    pub mean_batch_size: f64,
 }
 
 impl Metrics {
@@ -63,10 +85,37 @@ impl Metrics {
         self.inner.lock().unwrap().blocks_provisioned += 1;
     }
 
+    pub fn block_released(&self) {
+        self.inner.lock().unwrap().blocks_released += 1;
+    }
+
     pub fn worker_started(&self, startup_s: f64) {
         let mut g = self.inner.lock().unwrap();
         g.workers_started += 1;
         g.startup.push(startup_s);
+    }
+
+    /// Interchange popped a task onto a worker already warm for its key.
+    pub fn affinity_hit(&self) {
+        self.inner.lock().unwrap().affinity_hits += 1;
+    }
+
+    /// Interchange popped a task onto a cold worker.
+    pub fn affinity_miss(&self) {
+        self.inner.lock().unwrap().affinity_misses += 1;
+    }
+
+    /// One coalesced submission carrying `members` fits.
+    pub fn batch_submitted(&self, members: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.batched_tasks += members;
+        g.batch_size.push(members as f64);
+    }
+
+    /// `n` payloads elided as duplicates during batch planning.
+    pub fn dedup_hit(&self, n: u64) {
+        self.inner.lock().unwrap().dedup_hits += n;
     }
 
     pub fn snapshot(&self) -> Snapshot {
@@ -76,27 +125,51 @@ impl Metrics {
             completed: g.completed,
             failed: g.failed,
             blocks_provisioned: g.blocks_provisioned,
+            blocks_released: g.blocks_released,
             workers_started: g.workers_started,
+            affinity_hits: g.affinity_hits,
+            affinity_misses: g.affinity_misses,
+            batches: g.batches,
+            batched_tasks: g.batched_tasks,
+            dedup_hits: g.dedup_hits,
             mean_wait_s: if g.wait.count() > 0 { g.wait.mean() } else { 0.0 },
             mean_service_s: if g.service.count() > 0 { g.service.mean() } else { 0.0 },
             total_service_s: g.service.mean() * g.service.count() as f64,
             mean_worker_startup_s: if g.startup.count() > 0 { g.startup.mean() } else { 0.0 },
+            mean_batch_size: if g.batch_size.count() > 0 { g.batch_size.mean() } else { 0.0 },
         }
     }
 }
 
 impl Snapshot {
+    /// Fraction of keyed pops that landed on a warm worker (0 when none).
+    pub fn affinity_hit_rate(&self) -> f64 {
+        let total = self.affinity_hits + self.affinity_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.affinity_hits as f64 / total as f64
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("submitted", Json::num(self.submitted as f64)),
             ("completed", Json::num(self.completed as f64)),
             ("failed", Json::num(self.failed as f64)),
             ("blocks_provisioned", Json::num(self.blocks_provisioned as f64)),
+            ("blocks_released", Json::num(self.blocks_released as f64)),
             ("workers_started", Json::num(self.workers_started as f64)),
+            ("affinity_hits", Json::num(self.affinity_hits as f64)),
+            ("affinity_misses", Json::num(self.affinity_misses as f64)),
+            ("batches", Json::num(self.batches as f64)),
+            ("batched_tasks", Json::num(self.batched_tasks as f64)),
+            ("dedup_hits", Json::num(self.dedup_hits as f64)),
             ("mean_wait_s", Json::num(self.mean_wait_s)),
             ("mean_service_s", Json::num(self.mean_service_s)),
             ("total_service_s", Json::num(self.total_service_s)),
             ("mean_worker_startup_s", Json::num(self.mean_worker_startup_s)),
+            ("mean_batch_size", Json::num(self.mean_batch_size)),
         ])
     }
 }
@@ -123,5 +196,37 @@ mod tests {
         assert!((s.mean_service_s - 1.5).abs() < 1e-12);
         assert!((s.total_service_s - 3.0).abs() < 1e-12);
         assert!((s.mean_worker_startup_s - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scheduler_counters_accumulate() {
+        let m = Metrics::new();
+        m.affinity_hit();
+        m.affinity_hit();
+        m.affinity_hit();
+        m.affinity_miss();
+        m.batch_submitted(4);
+        m.batch_submitted(2);
+        m.dedup_hit(3);
+        m.block_provisioned();
+        m.block_released();
+        let s = m.snapshot();
+        assert_eq!(s.affinity_hits, 3);
+        assert_eq!(s.affinity_misses, 1);
+        assert!((s.affinity_hit_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.batched_tasks, 6);
+        assert_eq!(s.dedup_hits, 3);
+        assert_eq!(s.blocks_released, 1);
+        assert!((s.mean_batch_size - 3.0).abs() < 1e-12);
+        // json export carries the scheduler counters
+        let j = s.to_json();
+        assert_eq!(j.get("affinity_hits").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("blocks_released").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn empty_hit_rate_is_zero() {
+        assert_eq!(Metrics::new().snapshot().affinity_hit_rate(), 0.0);
     }
 }

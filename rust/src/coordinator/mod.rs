@@ -7,6 +7,11 @@
 //! * [`fitops`] — the servable pyhf fit functions (PJRT + native backends);
 //! * [`driver`] — the `fit_analysis.py` scan driver;
 //! * [`serialize`], [`task`], [`metrics`] — wire format, lifecycle, accounting.
+//!
+//! Dispatch (routing, batching, autoscaling) is pluggable via the
+//! [`crate::scheduler`] subsystem: endpoints pick a policy with
+//! [`EndpointConfig::with_policy`] and elastic-block behavior with
+//! [`EndpointConfig::with_autoscale`].
 
 pub mod client;
 pub mod driver;
@@ -19,7 +24,7 @@ pub mod serialize;
 pub mod service;
 pub mod task;
 
-pub use client::FaasClient;
+pub use client::{BatchSubmission, FaasClient};
 pub use driver::{run_scan, ScanOptions};
 pub use endpoint::{Endpoint, EndpointConfig};
 pub use executor::ExecutorConfig;

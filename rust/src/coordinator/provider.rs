@@ -29,6 +29,10 @@ pub trait Provider: Send {
     /// Request one block of `nodes` nodes. Returns the grant (with its
     /// acquisition latency) or an error when the resource is exhausted.
     fn request_block(&mut self, block_index: usize, nodes: usize) -> Result<BlockGrant, String>;
+
+    /// Return a block to the provider (autoscaler scale-down). Default:
+    /// no-op — providers with allocation caps free a slot here.
+    fn release_block(&mut self, _block_index: usize) {}
 }
 
 /// Immediate local execution (funcX's LocalProvider).
@@ -94,6 +98,11 @@ impl Provider for SimSlurmProvider {
         let latency = (self.base.as_secs_f64() + jitter).min(self.max_latency.as_secs_f64());
         Ok(BlockGrant { block_index, nodes, latency: Duration::from_secs_f64(latency) })
     }
+
+    /// Releasing frees a slot in the (capped) allocation.
+    fn release_block(&mut self, _block_index: usize) {
+        self.granted = self.granted.saturating_sub(1);
+    }
 }
 
 #[cfg(test)]
@@ -128,5 +137,9 @@ mod tests {
         assert!(p.request_block(0, 1).is_ok());
         assert!(p.request_block(1, 1).is_ok());
         assert!(p.request_block(2, 1).is_err());
+        // releasing a block frees an allocation slot
+        p.release_block(0);
+        assert!(p.request_block(3, 1).is_ok());
+        assert!(p.request_block(4, 1).is_err());
     }
 }

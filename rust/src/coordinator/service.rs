@@ -8,14 +8,20 @@
 //! executables between tasks).
 
 use std::any::Any;
-use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::task::{EndpointId, FunctionId, TaskId, TaskOutcome, TaskRecord, TaskState};
+use crate::scheduler::policy::TaskMeta;
 use crate::util::json::Json;
+
+/// The interchange between the service and one endpoint's workers. Since
+/// the scheduler subsystem landed this is the policy-driven
+/// [`crate::scheduler::SchedQueue`] (FIFO by default — the seed behavior);
+/// the old name stays for the seed's call sites.
+pub use crate::scheduler::queue::SchedQueue as TaskQueue;
 
 /// Worker-local state: initialized once per worker by the endpoint's
 /// `WorkerInit`, then handed to every handler invocation on that worker.
@@ -46,62 +52,6 @@ impl WorkerContext {
 pub type Handler = Arc<dyn Fn(&Json, &mut WorkerContext) -> Result<Json, String> + Send + Sync>;
 /// Per-worker initialization (compile artifacts, load pallets, ...).
 pub type WorkerInit = Arc<dyn Fn(&mut WorkerContext) -> Result<(), String> + Send + Sync>;
-
-/// FIFO task queue shared between the service and one endpoint's workers
-/// (the funcX "interchange").
-pub struct TaskQueue {
-    q: Mutex<VecDeque<TaskId>>,
-    cvar: Condvar,
-    closed: AtomicBool,
-}
-
-impl TaskQueue {
-    pub fn new() -> Arc<TaskQueue> {
-        Arc::new(TaskQueue { q: Mutex::new(VecDeque::new()), cvar: Condvar::new(), closed: AtomicBool::new(false) })
-    }
-
-    pub fn push(&self, id: TaskId) {
-        self.q.lock().unwrap().push_back(id);
-        self.cvar.notify_one();
-    }
-
-    /// Blocking pop with timeout; None on timeout or closed-and-empty.
-    pub fn pop(&self, timeout: Duration) -> Option<TaskId> {
-        let mut g = self.q.lock().unwrap();
-        let deadline = Instant::now() + timeout;
-        loop {
-            if let Some(id) = g.pop_front() {
-                return Some(id);
-            }
-            if self.closed.load(Ordering::SeqCst) {
-                return None;
-            }
-            let now = Instant::now();
-            if now >= deadline {
-                return None;
-            }
-            let (gg, _) = self.cvar.wait_timeout(g, deadline - now).unwrap();
-            g = gg;
-        }
-    }
-
-    pub fn len(&self) -> usize {
-        self.q.lock().unwrap().len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
-    }
-
-    pub fn close(&self) {
-        self.closed.store(true, Ordering::SeqCst);
-        self.cvar.notify_all();
-    }
-
-    pub fn is_closed(&self) -> bool {
-        self.closed.load(Ordering::SeqCst)
-    }
-}
 
 struct FunctionEntry {
     name: String,
@@ -185,12 +135,23 @@ impl Service {
             .clone();
         let id = g.next_task;
         g.next_task += 1;
+        // scheduling metadata travels on the interchange; the payload stays
+        // in the task store
+        let affinity_key = crate::scheduler::affinity_key_of(function, &payload);
+        let priority = payload.get("priority").and_then(|v| v.as_f64()).unwrap_or(0.0);
         let mut rec = TaskRecord::new(id, function, endpoint, payload);
         rec.state = TaskState::Pending;
         g.tasks.insert(id, rec);
         drop(g);
         self.metrics.task_submitted();
-        queue.push(id);
+        let accepted = queue
+            .push_meta(TaskMeta { id, function, affinity_key, priority, enqueued: Instant::now() });
+        if !accepted {
+            // the interchange closed under us (endpoint shutting down):
+            // fail the record terminally so no waiter hangs on it
+            self.complete(id, Err("endpoint is shutting down".to_string()));
+            return Err(format!("endpoint {endpoint} is shutting down"));
+        }
         Ok(id)
     }
 

@@ -5,9 +5,12 @@
 //! three-layer Rust + JAX + Pallas system:
 //!
 //! * **L3 (this crate)** — a funcX-style function-serving fabric in Rust:
-//!   function registry, task queue, endpoints, block/manager/worker
-//!   executor, providers, plus the HistFactory/pallet substrates and a
-//!   discrete-event cluster simulator for RIVER-scale topology replay.
+//!   function registry, endpoints, block/manager/worker executor, providers,
+//!   and a pluggable **scheduler** (policy-driven interchange with
+//!   warm-worker affinity routing, request batching/dedup, and elastic
+//!   block autoscaling — see [`scheduler`]), plus the HistFactory/pallet
+//!   substrates and a discrete-event cluster simulator for RIVER-scale
+//!   topology replay.
 //! * **L2 (python/compile, build-time only)** — the pyhf-equivalent dense
 //!   HistFactory model with an in-graph Fisher-scoring MLE fit and the
 //!   qmu-tilde asymptotic CLs hypotest, AOT-lowered to HLO text.
@@ -25,5 +28,6 @@ pub mod histfactory;
 pub mod infer;
 pub mod pallet;
 pub mod runtime;
+pub mod scheduler;
 pub mod sim;
 pub mod util;

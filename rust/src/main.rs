@@ -19,6 +19,7 @@ use pyhf_faas::histfactory::{dense, Workspace};
 use pyhf_faas::infer::results::upper_limit_on_axis;
 use pyhf_faas::pallet::{self, io as pallet_io, library};
 use pyhf_faas::runtime::{default_artifact_dir, Engine, Manifest};
+use pyhf_faas::scheduler::{batched_handler, PolicyKind};
 use pyhf_faas::sim;
 use pyhf_faas::util::cli::Args;
 use pyhf_faas::util::json;
@@ -32,6 +33,7 @@ COMMANDS:
   generate-pallet  --analysis <1Lbb|2L0J|stau|quickstart> --out <dir>
   scan             --pallet <dir> [--backend pjrt|native] [--workers N]
                    [--max-blocks N] [--limit N] [--out results.json] [--verbose]
+                   [--policy fifo|priority|affinity] [--batch N]
   hypotest         --pallet <dir> --patch <name> [--backend pjrt|native]
   simulate         --pallet <dir> [--blocks 1,2,4,8] [--trials 10]
                    [--sample N] (replays measured fits on the paper topology)
@@ -113,6 +115,7 @@ fn start_endpoint(
     backend: &str,
     workers: usize,
     max_blocks: usize,
+    policy: PolicyKind,
     artifacts: PathBuf,
 ) -> Result<(Endpoint, pyhf_faas::coordinator::FunctionId), String> {
     let exec = ExecutorConfig {
@@ -124,11 +127,19 @@ fn start_endpoint(
     };
     let client = FaasClient::new(svc.clone());
     let (init, handler, fname) = match backend {
-        "pjrt" => (
-            fitops::pjrt_worker_init(artifacts),
-            fitops::fit_patch_handler(),
-            "fit_patch_pjrt",
-        ),
+        "pjrt" => {
+            // fail fast instead of letting every worker die at init and the
+            // scan idle out on its stall timeout (the default build stubs
+            // the engine when the vendored xla crate is absent)
+            Engine::cpu().map_err(|e| {
+                format!("pjrt backend unavailable ({e}); retry with --backend native")
+            })?;
+            (
+                fitops::pjrt_worker_init(artifacts),
+                fitops::fit_patch_handler(),
+                "fit_patch_pjrt",
+            )
+        }
         "native" => (
             fitops::native_worker_init(artifacts),
             fitops::native_fit_handler(),
@@ -140,10 +151,12 @@ fn start_endpoint(
         svc.clone(),
         EndpointConfig::new(format!("{backend}-endpoint"))
             .with_executor(exec)
+            .with_policy(policy)
             .with_provider(Box::new(SimSlurmProvider::laptop_scale(11)))
             .with_worker_init(init),
     );
-    let f = client.register_function(fname, handler);
+    // handlers are batch-aware: single payloads pass through untouched
+    let f = client.register_function(fname, batched_handler(handler));
     Ok((ep, f))
 }
 
@@ -156,20 +169,26 @@ fn cmd_scan(args: &Args) -> Result<(), String> {
         Some(_) => Some(args.get_usize("limit", 0)?),
         None => None,
     };
+    let policy_name = args.get_or("policy", "fifo");
+    let policy = PolicyKind::parse(policy_name)
+        .ok_or_else(|| format!("unknown policy '{policy_name}' (fifo|priority|affinity)"))?;
+    let batch = args.get_usize("batch", 1)?.max(1);
 
     let svc = Service::new();
-    let (ep, f) = start_endpoint(&svc, backend, workers, max_blocks, artifact_dir(args))?;
+    let (ep, f) = start_endpoint(&svc, backend, workers, max_blocks, policy, artifact_dir(args))?;
     let client = FaasClient::new(svc.clone());
 
     println!("prepare: waiting-for-nodes");
     let opts = pyhf_faas::coordinator::ScanOptions {
         verbose: args.flag("verbose"),
         limit,
+        batch,
         ..Default::default()
     };
     let scan = run_scan(&client, ep.id, f, &pallet, &opts)?;
 
     let m = svc.metrics.snapshot();
+    let em = ep.metrics_snapshot();
     println!(
         "\nscan '{}' complete: {} patches in {:.1} s wall ({} excluded at 95% CL)",
         scan.analysis,
@@ -184,6 +203,19 @@ fn cmd_scan(args: &Args) -> Result<(), String> {
         m.mean_wait_s,
         m.mean_service_s,
         m.total_service_s
+    );
+    println!(
+        "  scheduler: policy {} | affinity {} hit / {} miss ({:.0}% warm) | \
+         batches {} ({} fits, {} deduped) | blocks +{} -{}",
+        ep.policy_name(),
+        em.affinity_hits,
+        em.affinity_misses,
+        em.affinity_hit_rate() * 100.0,
+        m.batches,
+        m.batched_tasks,
+        m.dedup_hits,
+        em.blocks_provisioned,
+        em.blocks_released
     );
     if let Some(ul) = upper_limit_on_axis(&scan.points, 0.0) {
         println!("  interpolated 95% CL mass limit (m2 = 0): {ul:.0} GeV");

@@ -6,23 +6,36 @@
 //! per-worker compile cost is the direct analog of funcX worker startup
 //! (container pull + `pip install pyhf`), and is accounted the same way in
 //! the scaling study (DESIGN.md §4).
+//!
+//! Feature gating: the `xla` crate is only present in vendored toolchains,
+//! so the real engine compiles behind the `pjrt` feature. The default build
+//! ships a stub whose constructors report unavailability — the coordinator,
+//! scheduler, native fitter and simulator all keep working, and PJRT-backed
+//! tests/benches skip cleanly. Errors are plain `String`s (the offline build
+//! carries no error-handling crates).
 
 use std::path::Path;
-
-use anyhow::{anyhow, Context, Result};
 
 use crate::histfactory::dense::DenseModel;
 use crate::infer::results::PointResult;
 use crate::runtime::manifest::ArtifactEntry;
 
-/// A PJRT CPU client.
+/// A PJRT CPU client (stubbed out unless built with `--features pjrt`).
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     client: xla::PjRtClient,
+}
+
+/// A PJRT CPU client (stubbed out unless built with `--features pjrt`).
+#[cfg(not(feature = "pjrt"))]
+pub struct Engine {
+    _private: (),
 }
 
 /// A compiled artifact bound to its manifest entry.
 pub struct Compiled {
     pub entry: ArtifactEntry,
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
 }
 
@@ -40,9 +53,17 @@ pub struct HypotestOut {
     pub diag: [f64; 8],
 }
 
+#[cfg(not(feature = "pjrt"))]
+const UNAVAILABLE: &str = "PJRT engine unavailable: built without the 'pjrt' feature \
+     (vendored xla crate not present); use the native backend";
+
+#[cfg(feature = "pjrt")]
 impl Engine {
-    pub fn cpu() -> Result<Engine> {
-        Ok(Engine { client: xla::PjRtClient::cpu().context("create PJRT CPU client")? })
+    pub fn cpu() -> Result<Engine, String> {
+        Ok(Engine {
+            client: xla::PjRtClient::cpu()
+                .map_err(|e| format!("create PJRT CPU client: {e:?}"))?,
+        })
     }
 
     pub fn platform(&self) -> String {
@@ -50,28 +71,45 @@ impl Engine {
     }
 
     /// Load + compile one artifact from `dir`.
-    pub fn load(&self, entry: &ArtifactEntry, dir: &Path) -> Result<Compiled> {
+    pub fn load(&self, entry: &ArtifactEntry, dir: &Path) -> Result<Compiled, String> {
         let path = entry.path(dir);
         let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 artifact path"))?,
+            path.to_str().ok_or_else(|| "non-utf8 artifact path".to_string())?,
         )
-        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        .map_err(|e| format!("parse HLO text {}: {e:?}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self
             .client
             .compile(&comp)
-            .with_context(|| format!("compile {}", path.display()))?;
+            .map_err(|e| format!("compile {}: {e:?}", path.display()))?;
         Ok(Compiled { entry: entry.clone(), exe })
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
+impl Engine {
+    pub fn cpu() -> Result<Engine, String> {
+        Err(UNAVAILABLE.to_string())
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (pjrt feature disabled)".to_string()
+    }
+
+    /// Load + compile one artifact from `dir`.
+    pub fn load(&self, _entry: &ArtifactEntry, _dir: &Path) -> Result<Compiled, String> {
+        Err(UNAVAILABLE.to_string())
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl Compiled {
     /// Execute with the dense model's tensors; returns flattened f64 outputs
     /// in OUTPUT_ORDER.
-    pub fn execute_raw(&self, inputs: &[(&str, &[f64])]) -> Result<Vec<Vec<f64>>> {
+    pub fn execute_raw(&self, inputs: &[(&str, &[f64])]) -> Result<Vec<Vec<f64>>, String> {
         // marshal in manifest order, validating names and lengths
         if inputs.len() != self.entry.inputs.len() {
-            return Err(anyhow!(
+            return Err(format!(
                 "artifact '{}' expects {} inputs, got {}",
                 self.entry.key,
                 self.entry.inputs.len(),
@@ -82,14 +120,14 @@ impl Compiled {
         for (i, (name, data)) in inputs.iter().enumerate() {
             let (want_name, want_shape) = &self.entry.inputs[i];
             if want_name != name {
-                return Err(anyhow!(
+                return Err(format!(
                     "input {i} of '{}' must be '{want_name}', got '{name}'",
                     self.entry.key
                 ));
             }
             let want_len: usize = want_shape.iter().product::<usize>().max(1);
             if data.len() != want_len {
-                return Err(anyhow!(
+                return Err(format!(
                     "input '{name}' of '{}' expects {want_len} elements, got {}",
                     self.entry.key,
                     data.len()
@@ -98,31 +136,36 @@ impl Compiled {
             let lit = xla::Literal::vec1(data);
             let dims: Vec<i64> = want_shape.iter().map(|&d| d as i64).collect();
             let lit = if dims.len() > 1 {
-                lit.reshape(&dims).context("reshape literal")?
+                lit.reshape(&dims).map_err(|e| format!("reshape literal: {e:?}"))?
             } else {
                 lit
             };
             literals.push(lit);
         }
 
-        let result = self.exe.execute::<xla::Literal>(&literals).context("execute artifact")?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| format!("execute artifact: {e:?}"))?;
         let mut tuple = result[0][0]
             .to_literal_sync()
-            .context("fetch result literal")?;
-        let parts = tuple.decompose_tuple().context("decompose output tuple")?;
+            .map_err(|e| format!("fetch result literal: {e:?}"))?;
+        let parts = tuple
+            .decompose_tuple()
+            .map_err(|e| format!("decompose output tuple: {e:?}"))?;
         let mut out = Vec::with_capacity(parts.len());
         for part in parts {
-            out.push(part.to_vec::<f64>().context("read f64 output")?);
+            out.push(part.to_vec::<f64>().map_err(|e| format!("read f64 output: {e:?}"))?);
         }
         Ok(out)
     }
 
     /// Execute the hypotest artifact against a compiled dense model.
-    pub fn hypotest(&self, model: &DenseModel) -> Result<HypotestOut> {
+    pub fn hypotest(&self, model: &DenseModel) -> Result<HypotestOut, String> {
         let views = model.input_views();
         let outs = self.execute_raw(&views)?;
         if outs.len() != 8 {
-            return Err(anyhow!("hypotest artifact returned {} outputs, want 8", outs.len()));
+            return Err(format!("hypotest artifact returned {} outputs, want 8", outs.len()));
         }
         let scalar = |i: usize| -> f64 { outs[i][0] };
         let mut cls_exp = [0.0; 5];
@@ -142,13 +185,31 @@ impl Compiled {
     }
 
     /// Execute the MLE artifact: returns (theta_hat, nll, diag).
-    pub fn mle(&self, model: &DenseModel) -> Result<(Vec<f64>, f64, Vec<f64>)> {
+    pub fn mle(&self, model: &DenseModel) -> Result<(Vec<f64>, f64, Vec<f64>), String> {
         let views = model.input_views();
         let outs = self.execute_raw(&views)?;
         if outs.len() != 3 {
-            return Err(anyhow!("mle artifact returned {} outputs, want 3", outs.len()));
+            return Err(format!("mle artifact returned {} outputs, want 3", outs.len()));
         }
         Ok((outs[0].clone(), outs[1][0], outs[2].clone()))
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Compiled {
+    /// Execute with the dense model's tensors (stub: always unavailable).
+    pub fn execute_raw(&self, _inputs: &[(&str, &[f64])]) -> Result<Vec<Vec<f64>>, String> {
+        Err(UNAVAILABLE.to_string())
+    }
+
+    /// Execute the hypotest artifact (stub: always unavailable).
+    pub fn hypotest(&self, _model: &DenseModel) -> Result<HypotestOut, String> {
+        Err(UNAVAILABLE.to_string())
+    }
+
+    /// Execute the MLE artifact (stub: always unavailable).
+    pub fn mle(&self, _model: &DenseModel) -> Result<(Vec<f64>, f64, Vec<f64>), String> {
+        Err(UNAVAILABLE.to_string())
     }
 }
 

@@ -1,0 +1,206 @@
+//! Warm-worker affinity routing.
+//!
+//! Fit workers cache one compiled PJRT executable per model shape class in
+//! their `WorkerContext` (see `coordinator::fitops`); the first task of a
+//! class on a worker pays the artifact compile, every later one is warm.
+//! [`AffinityPolicy`] routes each popping worker to the first queued task
+//! whose affinity key the worker has already served, so a multi-analysis
+//! stream does not thrash every worker through every executable — the
+//! scheduling analog of funcX placing tasks on endpoints with pre-pulled
+//! containers.
+//!
+//! Fairness: affinity may bypass the head-of-line task in favor of a
+//! deeper warm match, but only [`AffinityPolicy::max_head_skips`] times in
+//! a row — after that the head is served unconditionally and the budget
+//! resets. The bound is counted in pops, not wall time, so it holds even
+//! when an entire scan is enqueued at t = 0 and every task is equally
+//! "old" (a wall-clock age cutoff would degrade to pure FIFO there).
+//! Workers with no warm match within [`AffinityPolicy::max_scan`] entries
+//! serve plain FIFO.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::scheduler::policy::{SchedPolicy, TaskMeta, WorkerProfile};
+
+/// Route tasks to workers that already hold the warm executable for the
+/// task's affinity key; FIFO otherwise.
+pub struct AffinityPolicy {
+    q: VecDeque<TaskMeta>,
+    /// how deep to scan for a warm match before falling back to FIFO
+    pub max_scan: usize,
+    /// how many consecutive pops may bypass the head-of-line task before
+    /// it is served unconditionally (starvation bound)
+    pub max_head_skips: usize,
+    head_skips: usize,
+}
+
+impl Default for AffinityPolicy {
+    fn default() -> Self {
+        AffinityPolicy { q: VecDeque::new(), max_scan: 256, max_head_skips: 64, head_skips: 0 }
+    }
+}
+
+impl AffinityPolicy {
+    pub fn new() -> AffinityPolicy {
+        AffinityPolicy::default()
+    }
+
+    pub fn with_limits(max_scan: usize, max_head_skips: usize) -> AffinityPolicy {
+        AffinityPolicy { max_scan, max_head_skips, ..AffinityPolicy::default() }
+    }
+}
+
+impl SchedPolicy for AffinityPolicy {
+    fn name(&self) -> &'static str {
+        "affinity"
+    }
+
+    fn push(&mut self, task: TaskMeta) {
+        self.q.push_back(task);
+    }
+
+    fn pop_for(&mut self, worker: &WorkerProfile, _now: Instant) -> Option<TaskMeta> {
+        if self.q.is_empty() {
+            return None;
+        }
+        if self.head_skips >= self.max_head_skips {
+            // the head has been bypassed long enough: serve it now
+            self.head_skips = 0;
+            return self.q.pop_front();
+        }
+        let scan = self.q.len().min(self.max_scan);
+        let warm_at = (0..scan).find(|&i| {
+            let key = &self.q[i].affinity_key;
+            !key.is_empty() && worker.is_warm(key)
+        });
+        match warm_at {
+            Some(i) if i > 0 => {
+                self.head_skips += 1;
+                self.q.remove(i)
+            }
+            // warm head or no warm match: the head is served either way
+            _ => {
+                self.head_skips = 0;
+                self.q.pop_front()
+            }
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    fn oldest_enqueued(&self) -> Option<Instant> {
+        // pushes append and removals preserve relative order, so the front
+        // is always the oldest remaining task
+        self.q.front().map(|t| t.enqueued)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(id: u64, key: &str) -> TaskMeta {
+        TaskMeta { affinity_key: key.to_string(), ..TaskMeta::bare(id) }
+    }
+
+    #[test]
+    fn warm_match_skips_ahead() {
+        let mut p = AffinityPolicy::new();
+        p.push(meta(1, "A"));
+        p.push(meta(2, "B"));
+        p.push(meta(3, "A"));
+        let mut w = WorkerProfile::new("w");
+        w.note_warm("B");
+        let now = Instant::now();
+        // warm worker for B takes task 2 over the FIFO head
+        assert_eq!(p.pop_for(&w, now).unwrap().id, 2);
+        // no more warm matches: FIFO order
+        assert_eq!(p.pop_for(&w, now).unwrap().id, 1);
+        assert_eq!(p.pop_for(&w, now).unwrap().id, 3);
+        assert!(p.pop_for(&w, now).is_none());
+    }
+
+    #[test]
+    fn cold_worker_serves_fifo() {
+        let mut p = AffinityPolicy::new();
+        p.push(meta(1, "A"));
+        p.push(meta(2, "B"));
+        let w = WorkerProfile::new("cold");
+        assert_eq!(p.pop_for(&w, Instant::now()).unwrap().id, 1);
+    }
+
+    #[test]
+    fn head_skip_budget_bounds_starvation() {
+        let mut p = AffinityPolicy::with_limits(256, 2);
+        p.push(meta(1, "A"));
+        p.push(meta(2, "B"));
+        p.push(meta(3, "B"));
+        p.push(meta(4, "B"));
+        let mut w = WorkerProfile::new("w");
+        w.note_warm("B");
+        let now = Instant::now();
+        // two warm bypasses allowed...
+        assert_eq!(p.pop_for(&w, now).unwrap().id, 2);
+        assert_eq!(p.pop_for(&w, now).unwrap().id, 3);
+        // ...then the bypassed head must be served despite the warm B task
+        assert_eq!(p.pop_for(&w, now).unwrap().id, 1);
+        // budget reset: warm routing resumes
+        assert_eq!(p.pop_for(&w, now).unwrap().id, 4);
+        assert!(p.pop_for(&w, now).is_none());
+    }
+
+    #[test]
+    fn serving_the_head_resets_the_skip_budget() {
+        let mut p = AffinityPolicy::with_limits(256, 2);
+        let mut w = WorkerProfile::new("w");
+        w.note_warm("B");
+        // alternate: a warm bypass, then a cold head (no warm match), many
+        // times over — the head pop resets the budget each round, so the
+        // bypass cap is never wrongly tripped
+        for round in 0..10u64 {
+            p.push(meta(round * 2 + 1, "A"));
+            p.push(meta(round * 2 + 2, "B"));
+            let now = Instant::now();
+            assert_eq!(p.pop_for(&w, now).unwrap().id, round * 2 + 2, "round {round}");
+            assert_eq!(p.pop_for(&w, now).unwrap().id, round * 2 + 1, "round {round}");
+        }
+    }
+
+    #[test]
+    fn scan_window_bounds_lookahead() {
+        let mut p = AffinityPolicy::with_limits(2, 1000);
+        p.push(meta(1, "A"));
+        p.push(meta(2, "A"));
+        p.push(meta(3, "B"));
+        let mut w = WorkerProfile::new("w");
+        w.note_warm("B");
+        // the warm B task sits beyond the scan window: FIFO head wins
+        assert_eq!(p.pop_for(&w, Instant::now()).unwrap().id, 1);
+    }
+
+    #[test]
+    fn empty_key_never_matches() {
+        let mut p = AffinityPolicy::new();
+        p.push(meta(1, ""));
+        p.push(meta(2, "A"));
+        let mut w = WorkerProfile::new("w");
+        w.note_warm("");
+        w.note_warm("A");
+        // empty keys are unroutable; the warm A match is preferred
+        assert_eq!(p.pop_for(&w, Instant::now()).unwrap().id, 2);
+    }
+
+    #[test]
+    fn oldest_is_front() {
+        let mut p = AffinityPolicy::new();
+        assert!(p.oldest_enqueued().is_none());
+        let first = meta(1, "A");
+        let t0 = first.enqueued;
+        p.push(first);
+        p.push(meta(2, "B"));
+        assert_eq!(p.oldest_enqueued(), Some(t0));
+    }
+}

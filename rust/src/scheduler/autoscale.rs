@@ -1,0 +1,210 @@
+//! Elastic block autoscaling (Parsl-style simple scaling, extended).
+//!
+//! The controller is a pure decision kernel: the executor's scaling loop
+//! feeds it a [`LoadSnapshot`] each poll and acts on the returned
+//! [`ScaleDecision`]. Scale-up fires on the classic Parsl condition
+//! (`outstanding > parallelism * active_workers`) *or* on queue latency
+//! (head-of-line wait beyond `target_wait`); scale-down releases blocks
+//! after the endpoint has been fully idle for `idle_release`, never going
+//! below `min_blocks`. Defaults reproduce the seed behavior exactly
+//! (depth-based scale-up only, no scale-down).
+
+use std::time::{Duration, Instant};
+
+/// Autoscaler knobs. `Default` = seed behavior (no latency trigger, no
+/// scale-down).
+#[derive(Debug, Clone)]
+pub struct AutoscaleConfig {
+    /// never release below this many blocks
+    pub min_blocks: usize,
+    /// release one block after this much full idleness (None = never)
+    pub idle_release: Option<Duration>,
+    /// scale up when the oldest queued task has waited this long
+    /// (None = depth-based scaling only)
+    pub target_wait: Option<Duration>,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig { min_blocks: 0, idle_release: None, target_wait: None }
+    }
+}
+
+/// One poll's view of endpoint load.
+#[derive(Debug, Clone, Copy)]
+pub struct LoadSnapshot {
+    /// queued + running tasks on the endpoint
+    pub outstanding: usize,
+    /// tasks still in the interchange queue
+    pub queued: usize,
+    pub active_workers: usize,
+    pub blocks: usize,
+    /// age of the oldest queued task
+    pub oldest_wait: Option<Duration>,
+}
+
+/// What the scaling loop should do this poll.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDecision {
+    Hold,
+    /// request one more block from the provider
+    Up,
+    /// release one (the newest) block back to the provider
+    Down,
+}
+
+/// Stateful controller: tracks idle streaks between polls.
+#[derive(Debug)]
+pub struct AutoscaleController {
+    cfg: AutoscaleConfig,
+    parallelism: f64,
+    max_blocks: usize,
+    idle_since: Option<Instant>,
+}
+
+impl AutoscaleController {
+    pub fn new(cfg: AutoscaleConfig, parallelism: f64, max_blocks: usize) -> Self {
+        AutoscaleController { cfg, parallelism, max_blocks, idle_since: None }
+    }
+
+    pub fn decide(&mut self, now: Instant, load: &LoadSnapshot) -> ScaleDecision {
+        let depth_pressure =
+            load.outstanding as f64 > self.parallelism * load.active_workers as f64;
+        let latency_pressure = match (self.cfg.target_wait, load.oldest_wait) {
+            (Some(target), Some(wait)) => load.queued > 0 && wait > target,
+            _ => false,
+        };
+        if load.blocks < self.max_blocks && (depth_pressure || latency_pressure) {
+            self.idle_since = None;
+            return ScaleDecision::Up;
+        }
+
+        if load.outstanding == 0 {
+            if let Some(idle_after) = self.cfg.idle_release {
+                match self.idle_since {
+                    None => self.idle_since = Some(now),
+                    Some(t0) => {
+                        if now.saturating_duration_since(t0) >= idle_after
+                            && load.blocks > self.cfg.min_blocks
+                        {
+                            // restart the streak so releases pace out one
+                            // idle_release apart
+                            self.idle_since = Some(now);
+                            return ScaleDecision::Down;
+                        }
+                    }
+                }
+            }
+        } else {
+            self.idle_since = None;
+        }
+        ScaleDecision::Hold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn load(outstanding: usize, workers: usize, blocks: usize) -> LoadSnapshot {
+        LoadSnapshot {
+            outstanding,
+            queued: outstanding,
+            active_workers: workers,
+            blocks,
+            oldest_wait: None,
+        }
+    }
+
+    #[test]
+    fn parsl_depth_condition_scales_up() {
+        let mut c = AutoscaleController::new(AutoscaleConfig::default(), 1.0, 4);
+        let now = Instant::now();
+        assert_eq!(c.decide(now, &load(5, 2, 1)), ScaleDecision::Up);
+        // capacity satisfies the ratio: hold
+        assert_eq!(c.decide(now, &load(2, 2, 1)), ScaleDecision::Hold);
+        // at max blocks: hold no matter the pressure
+        assert_eq!(c.decide(now, &load(100, 2, 4)), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn latency_trigger_scales_up_before_depth() {
+        let cfg = AutoscaleConfig {
+            target_wait: Some(Duration::from_millis(100)),
+            ..Default::default()
+        };
+        let mut c = AutoscaleController::new(cfg, 4.0, 4);
+        let now = Instant::now();
+        // depth alone would hold (2 < 4 * 2), but the head has aged out
+        let mut l = load(2, 2, 1);
+        l.oldest_wait = Some(Duration::from_millis(200));
+        assert_eq!(c.decide(now, &l), ScaleDecision::Up);
+        l.oldest_wait = Some(Duration::from_millis(50));
+        assert_eq!(c.decide(now, &l), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn idle_release_after_streak_respects_min_blocks() {
+        let cfg = AutoscaleConfig {
+            min_blocks: 1,
+            idle_release: Some(Duration::from_millis(50)),
+            ..Default::default()
+        };
+        let mut c = AutoscaleController::new(cfg, 1.0, 4);
+        let t0 = Instant::now();
+        // first idle poll starts the streak
+        assert_eq!(c.decide(t0, &load(0, 4, 2)), ScaleDecision::Hold);
+        // streak too short
+        assert_eq!(
+            c.decide(t0 + Duration::from_millis(20), &load(0, 4, 2)),
+            ScaleDecision::Hold
+        );
+        // streak long enough: release one block
+        assert_eq!(
+            c.decide(t0 + Duration::from_millis(80), &load(0, 4, 2)),
+            ScaleDecision::Down
+        );
+        // at min_blocks: hold even when idle forever
+        assert_eq!(
+            c.decide(t0 + Duration::from_secs(60), &load(0, 2, 1)),
+            ScaleDecision::Hold
+        );
+    }
+
+    #[test]
+    fn work_resets_idle_streak() {
+        let cfg = AutoscaleConfig {
+            idle_release: Some(Duration::from_millis(50)),
+            ..Default::default()
+        };
+        let mut c = AutoscaleController::new(cfg, 1.0, 4);
+        let t0 = Instant::now();
+        assert_eq!(c.decide(t0, &load(0, 4, 2)), ScaleDecision::Hold);
+        // a task arrives (enough capacity, so no scale-up) and resets idling
+        assert_eq!(
+            c.decide(t0 + Duration::from_millis(40), &load(1, 4, 2)),
+            ScaleDecision::Hold
+        );
+        // idleness must re-accumulate from scratch
+        assert_eq!(
+            c.decide(t0 + Duration::from_millis(60), &load(0, 4, 2)),
+            ScaleDecision::Hold
+        );
+        assert_eq!(
+            c.decide(t0 + Duration::from_millis(130), &load(0, 4, 2)),
+            ScaleDecision::Down
+        );
+    }
+
+    #[test]
+    fn default_config_never_scales_down() {
+        let mut c = AutoscaleController::new(AutoscaleConfig::default(), 1.0, 4);
+        let t0 = Instant::now();
+        for i in 0..100 {
+            assert_eq!(
+                c.decide(t0 + Duration::from_secs(i), &load(0, 8, 4)),
+                ScaleDecision::Hold
+            );
+        }
+    }
+}

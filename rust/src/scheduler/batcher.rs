@@ -1,0 +1,357 @@
+//! Request batching and payload dedup for the fit-serving fabric.
+//!
+//! A scan fans out one task per signal patch; many of those tasks target
+//! the same function and the same model shape class, and retried or
+//! multi-client campaigns can resubmit byte-identical payloads. The
+//! batcher coalesces a submission wave:
+//!
+//! * **dedup** — byte-identical payloads (FNV-1a over the canonical JSON
+//!   serialization, confirmed by structural equality) are submitted once
+//!   and fan the result back out to every requester;
+//! * **coalescing** — unique payloads are grouped by shape class and
+//!   wrapped into one `{"batch": [...]}` multi-patch invocation of up to
+//!   `max_batch` fits, amortizing per-task queue + claim + transfer
+//!   overhead while keeping a whole batch on one warm executable.
+//!
+//! Handlers opt in via [`batched_handler`], which unwraps batch envelopes
+//! and passes single payloads through untouched; [`BatchPlan::unpack`]
+//! restores per-original-payload results in submission order.
+
+use std::collections::HashMap;
+
+use crate::coordinator::serialize::fnv1a;
+use crate::coordinator::service::{Handler, WorkerContext};
+use crate::util::json::{self, Json};
+
+/// Content digest of a payload: FNV-1a over its canonical serialization.
+pub fn content_hash(payload: &Json) -> u64 {
+    fnv1a(json::to_string(payload).as_bytes())
+}
+
+/// The outcome of planning one submission wave.
+#[derive(Debug, Clone)]
+pub struct BatchPlan {
+    /// groups of canonical payload indices; each group becomes one task
+    pub groups: Vec<Vec<usize>>,
+    /// original payload index -> canonical payload index (dedup mapping)
+    pub canonical: Vec<usize>,
+    /// canonical payload index -> (group, position within group)
+    locate: HashMap<usize, (usize, usize)>,
+    /// payloads elided as duplicates of an earlier canonical payload
+    pub dedup_hits: usize,
+}
+
+/// Plan a submission wave: dedup identical payloads, then chunk the unique
+/// ones into same-class groups of at most `max_batch`.
+pub fn plan_batches(payloads: &[Json], max_batch: usize) -> BatchPlan {
+    let max_batch = max_batch.max(1);
+    let mut seen: HashMap<u64, usize> = HashMap::new();
+    let mut canonical = Vec::with_capacity(payloads.len());
+    let mut uniques: Vec<usize> = Vec::new();
+    let mut dedup_hits = 0usize;
+    for (i, p) in payloads.iter().enumerate() {
+        let h = content_hash(p);
+        match seen.get(&h) {
+            // hash match confirmed structurally: a true duplicate
+            Some(&c) if payloads[c] == *p => {
+                canonical.push(c);
+                dedup_hits += 1;
+            }
+            _ => {
+                seen.insert(h, i);
+                canonical.push(i);
+                uniques.push(i);
+            }
+        }
+    }
+
+    // group uniques by class key, preserving submission order; one open
+    // group per key at a time so batches stay contiguous-ish
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    let mut open: HashMap<String, usize> = HashMap::new();
+    for &i in &uniques {
+        let key = payloads[i]
+            .get("class")
+            .and_then(|v| v.as_str())
+            .unwrap_or("")
+            .to_string();
+        match open.get(&key) {
+            Some(&g) if groups[g].len() < max_batch => groups[g].push(i),
+            _ => {
+                groups.push(vec![i]);
+                open.insert(key, groups.len() - 1);
+            }
+        }
+    }
+
+    let mut locate = HashMap::new();
+    for (g, members) in groups.iter().enumerate() {
+        for (pos, &c) in members.iter().enumerate() {
+            locate.insert(c, (g, pos));
+        }
+    }
+    BatchPlan { groups, canonical, locate, dedup_hits }
+}
+
+impl BatchPlan {
+    /// Number of tasks this plan submits.
+    pub fn n_tasks(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Build the task payload for group `g` (the payload itself for a
+    /// singleton, a `{"batch": [...]}` envelope otherwise). The envelope
+    /// carries the highest member priority at top level so coalescing
+    /// cannot demote urgent work under `PriorityPolicy` (the service reads
+    /// priority from the task payload it is handed).
+    pub fn group_payload(&self, g: usize, payloads: &[Json]) -> Json {
+        let members = &self.groups[g];
+        if members.len() == 1 {
+            payloads[members[0]].clone()
+        } else {
+            let priority = members
+                .iter()
+                .filter_map(|&i| payloads[i].get("priority").and_then(|v| v.as_f64()))
+                .reduce(f64::max);
+            let mut fields = vec![(
+                "batch",
+                Json::Arr(members.iter().map(|&i| payloads[i].clone()).collect()),
+            )];
+            if let Some(p) = priority {
+                fields.push(("priority", Json::num(p)));
+            }
+            Json::obj(fields)
+        }
+    }
+
+    /// Map per-group results back to per-original-payload results, in the
+    /// original submission order.
+    pub fn unpack(
+        &self,
+        group_results: &[Result<Json, String>],
+    ) -> Result<Vec<Result<Json, String>>, String> {
+        if group_results.len() != self.groups.len() {
+            return Err(format!(
+                "expected {} group results, got {}",
+                self.groups.len(),
+                group_results.len()
+            ));
+        }
+        let mut out = Vec::with_capacity(self.canonical.len());
+        for &c in &self.canonical {
+            let &(g, pos) = self
+                .locate
+                .get(&c)
+                .ok_or_else(|| "corrupt batch plan: unlocated canonical index".to_string())?;
+            let r = match &group_results[g] {
+                Err(e) => Err(e.clone()),
+                Ok(v) => {
+                    if self.groups[g].len() == 1 {
+                        Ok(v.clone())
+                    } else {
+                        let entries = v
+                            .get("results")
+                            .and_then(|r| r.as_arr())
+                            .ok_or_else(|| {
+                                "malformed batch result: missing 'results'".to_string()
+                            })?;
+                        let entry = entries.get(pos).ok_or_else(|| {
+                            "malformed batch result: short 'results'".to_string()
+                        })?;
+                        if let Some(ok) = entry.get("ok") {
+                            Ok(ok.clone())
+                        } else if let Some(e) = entry.get("error") {
+                            Err(e.as_str().unwrap_or("task failed").to_string())
+                        } else {
+                            return Err("malformed batch result entry".to_string());
+                        }
+                    }
+                }
+            };
+            out.push(r);
+        }
+        Ok(out)
+    }
+}
+
+/// Whether a handler result proves the worker actually did (at least part
+/// of) the work: for a `{"results": [...]}` batch envelope at least one
+/// member must have succeeded — an all-failure envelope is `Ok` at the
+/// task level but must not mark the worker warm for the batch's affinity
+/// key. Any other result shape is a plain success.
+pub fn result_proves_warm(result: &Json) -> bool {
+    match result.get("results").and_then(|r| r.as_arr()) {
+        Some(entries) => entries.iter().any(|e| e.get("ok").is_some()),
+        None => true,
+    }
+}
+
+/// Wrap a handler so it also serves `{"batch": [...]}` envelopes: each
+/// entry runs through the inner handler against the same worker context
+/// (so a whole batch shares one warm executable), and per-entry outcomes
+/// are encoded as `{"ok": ...}` / `{"error": ...}` so one bad patch does
+/// not fail its batch-mates. Non-batch payloads pass through untouched.
+pub fn batched_handler(inner: Handler) -> Handler {
+    std::sync::Arc::new(move |payload: &Json, ctx: &mut WorkerContext| {
+        match payload.get("batch").and_then(|b| b.as_arr()) {
+            None => inner(payload, ctx),
+            Some(entries) => {
+                let mut results = Vec::with_capacity(entries.len());
+                for e in entries {
+                    match inner(e, ctx) {
+                        Ok(v) => results.push(Json::obj(vec![("ok", v)])),
+                        Err(m) => results.push(Json::obj(vec![("error", Json::str(m))])),
+                    }
+                }
+                Ok(Json::obj(vec![("results", Json::Arr(results))]))
+            }
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn payload(patch: &str, class: &str) -> Json {
+        Json::obj(vec![("patch", Json::str(patch)), ("class", Json::str(class))])
+    }
+
+    #[test]
+    fn content_hash_distinguishes_payloads() {
+        let a = payload("p1", "A");
+        let b = payload("p2", "A");
+        assert_eq!(content_hash(&a), content_hash(&a.clone()));
+        assert_ne!(content_hash(&a), content_hash(&b));
+    }
+
+    #[test]
+    fn plan_dedups_and_groups_by_class() {
+        let payloads = vec![
+            payload("p1", "A"),
+            payload("p2", "B"),
+            payload("p1", "A"), // duplicate of 0
+            payload("p3", "A"),
+            payload("p4", "B"),
+        ];
+        let plan = plan_batches(&payloads, 4);
+        assert_eq!(plan.dedup_hits, 1);
+        assert_eq!(plan.canonical, vec![0, 1, 0, 3, 4]);
+        // uniques 0,3 share class A; 1,4 share class B
+        assert_eq!(plan.groups, vec![vec![0, 3], vec![1, 4]]);
+        assert_eq!(plan.n_tasks(), 2);
+    }
+
+    #[test]
+    fn plan_respects_max_batch() {
+        let payloads: Vec<Json> =
+            (0..7).map(|i| payload(&format!("p{i}"), "A")).collect();
+        let plan = plan_batches(&payloads, 3);
+        let sizes: Vec<usize> = plan.groups.iter().map(|g| g.len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 7);
+        assert!(sizes.iter().all(|&s| s <= 3));
+    }
+
+    #[test]
+    fn group_payload_wraps_multi() {
+        let payloads = vec![payload("p1", "A"), payload("p2", "A"), payload("p3", "B")];
+        let plan = plan_batches(&payloads, 4);
+        let batch = plan.group_payload(0, &payloads);
+        assert_eq!(batch.get("batch").unwrap().as_arr().unwrap().len(), 2);
+        // no member priorities: the envelope carries none
+        assert!(batch.get("priority").is_none());
+        let single = plan.group_payload(1, &payloads);
+        assert_eq!(single.get("patch").unwrap().as_str(), Some("p3"));
+    }
+
+    #[test]
+    fn envelope_carries_max_member_priority() {
+        let mk = |name: &str, prio: f64| {
+            Json::obj(vec![
+                ("patch", Json::str(name)),
+                ("class", Json::str("A")),
+                ("priority", Json::num(prio)),
+            ])
+        };
+        let payloads = vec![mk("p1", 2.0), mk("p2", 9.0), mk("p3", 0.0)];
+        let plan = plan_batches(&payloads, 4);
+        assert_eq!(plan.n_tasks(), 1);
+        let env = plan.group_payload(0, &payloads);
+        // the batch schedules at the urgency of its most urgent member
+        assert_eq!(env.get("priority").unwrap().as_f64(), Some(9.0));
+    }
+
+    #[test]
+    fn unpack_restores_original_order_with_dedup() {
+        let payloads = vec![
+            payload("p1", "A"),
+            payload("p2", "A"),
+            payload("p1", "A"), // dup of 0
+        ];
+        let plan = plan_batches(&payloads, 4);
+        assert_eq!(plan.n_tasks(), 1);
+        // simulate the batched handler's envelope
+        let group_result = Ok(Json::obj(vec![(
+            "results",
+            Json::Arr(vec![
+                Json::obj(vec![("ok", Json::num(1.0))]),
+                Json::obj(vec![("error", Json::str("boom"))]),
+            ]),
+        )]));
+        let out = plan.unpack(&[group_result]).unwrap();
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].as_ref().unwrap().as_f64(), Some(1.0));
+        assert_eq!(out[1].as_ref().unwrap_err(), "boom");
+        assert_eq!(out[2].as_ref().unwrap().as_f64(), Some(1.0)); // dedup share
+    }
+
+    #[test]
+    fn result_proves_warm_sees_through_envelopes() {
+        // plain results always prove warmth
+        assert!(result_proves_warm(&Json::num(1.0)));
+        assert!(result_proves_warm(&Json::obj(vec![("cls_obs", Json::num(0.03))])));
+        // envelope with at least one success proves warmth
+        let mixed = Json::obj(vec![(
+            "results",
+            Json::Arr(vec![
+                Json::obj(vec![("error", Json::str("boom"))]),
+                Json::obj(vec![("ok", Json::num(1.0))]),
+            ]),
+        )]);
+        assert!(result_proves_warm(&mixed));
+        // all-failure envelope does not
+        let failed = Json::obj(vec![(
+            "results",
+            Json::Arr(vec![Json::obj(vec![("error", Json::str("boom"))])]),
+        )]);
+        assert!(!result_proves_warm(&failed));
+    }
+
+    #[test]
+    fn batched_handler_maps_entries_and_passes_singles() {
+        let inner: Handler = Arc::new(|p: &Json, _ctx: &mut WorkerContext| {
+            match p.get("patch").and_then(|v| v.as_str()) {
+                Some("bad") => Err("kaput".to_string()),
+                Some(name) => Ok(Json::str(name.to_string())),
+                None => Err("no patch".to_string()),
+            }
+        });
+        let h = batched_handler(inner);
+        let mut ctx = WorkerContext::new("w");
+
+        // single payload passes through
+        let single = h(&payload("p9", "A"), &mut ctx).unwrap();
+        assert_eq!(single.as_str(), Some("p9"));
+
+        // batch envelope maps entries, capturing per-entry errors
+        let env = Json::obj(vec![(
+            "batch",
+            Json::Arr(vec![payload("p1", "A"), payload("bad", "A")]),
+        )]);
+        let out = h(&env, &mut ctx).unwrap();
+        let results = out.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results[0].get("ok").unwrap().as_str(), Some("p1"));
+        assert_eq!(results[1].get("error").unwrap().as_str(), Some("kaput"));
+    }
+}

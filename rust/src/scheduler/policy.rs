@@ -1,0 +1,351 @@
+//! Scheduling policies: the pluggable decision kernel of the interchange.
+//!
+//! A [`SchedPolicy`] owns the set of queued tasks and answers one question:
+//! *which task should this worker run next?* The worker's identity (and its
+//! warm-executable set) is carried in a [`WorkerProfile`], so policies can
+//! route work to workers that already paid the compile cost for a model
+//! shape (see [`crate::scheduler::affinity`]).
+//!
+//! Shipped policies:
+//! * [`FifoPolicy`] — the seed behavior: strict submission order;
+//! * [`PriorityPolicy`] — highest payload `priority` first, FIFO within a
+//!   priority level (no starvation *within* a level; levels are the
+//!   caller's contract);
+//! * [`crate::scheduler::affinity::AffinityPolicy`] — warm-worker routing.
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, HashSet, VecDeque};
+use std::time::Instant;
+
+use crate::coordinator::task::{FunctionId, TaskId};
+
+/// Scheduling-relevant task metadata carried by the interchange (the task
+/// payload itself stays in the service store).
+#[derive(Debug, Clone)]
+pub struct TaskMeta {
+    pub id: TaskId,
+    pub function: FunctionId,
+    /// routing key: same key => same warm executable (empty = no affinity)
+    pub affinity_key: String,
+    /// larger runs earlier under [`PriorityPolicy`]; kept as f64 so
+    /// fractional payload priorities (and the batcher's max-member
+    /// priority) order correctly instead of truncating to 0
+    pub priority: f64,
+    pub enqueued: Instant,
+}
+
+impl TaskMeta {
+    /// Minimal metadata for id-only pushes (legacy `TaskQueue::push`).
+    pub fn bare(id: TaskId) -> TaskMeta {
+        TaskMeta {
+            id,
+            function: 0,
+            affinity_key: String::new(),
+            priority: 0.0,
+            enqueued: Instant::now(),
+        }
+    }
+}
+
+/// What the interchange knows about a popping worker: its name and the set
+/// of affinity keys it has already served (= compiled executables held in
+/// its `WorkerContext`).
+#[derive(Debug, Clone)]
+pub struct WorkerProfile {
+    pub name: String,
+    warm: HashSet<String>,
+}
+
+impl WorkerProfile {
+    pub fn new(name: impl Into<String>) -> WorkerProfile {
+        WorkerProfile { name: name.into(), warm: HashSet::new() }
+    }
+
+    /// Profile for callers that pop without a worker identity.
+    pub fn anonymous() -> WorkerProfile {
+        WorkerProfile::new("anonymous")
+    }
+
+    pub fn is_warm(&self, key: &str) -> bool {
+        self.warm.contains(key)
+    }
+
+    /// Record that this worker now holds the warm state for `key`.
+    pub fn note_warm(&mut self, key: impl Into<String>) {
+        self.warm.insert(key.into());
+    }
+
+    pub fn warm_count(&self) -> usize {
+        self.warm.len()
+    }
+}
+
+/// A dispatch policy: owns queued task metadata, picks the next task for a
+/// given worker. Implementations live behind the interchange mutex, so they
+/// are plain single-threaded data structures.
+pub trait SchedPolicy: Send {
+    fn name(&self) -> &'static str;
+
+    fn push(&mut self, task: TaskMeta);
+
+    /// Pick (and remove) the next task for `worker`; `now` supports
+    /// age-based fairness overrides. None when empty.
+    fn pop_for(&mut self, worker: &WorkerProfile, now: Instant) -> Option<TaskMeta>;
+
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Enqueue instant of the oldest queued task (for latency-based
+    /// autoscaling).
+    fn oldest_enqueued(&self) -> Option<Instant>;
+}
+
+// ---------------------------------------------------------------------------
+// FIFO
+// ---------------------------------------------------------------------------
+
+/// Strict submission order — the seed interchange behavior.
+#[derive(Default)]
+pub struct FifoPolicy {
+    q: VecDeque<TaskMeta>,
+}
+
+impl FifoPolicy {
+    pub fn new() -> FifoPolicy {
+        FifoPolicy::default()
+    }
+}
+
+impl SchedPolicy for FifoPolicy {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn push(&mut self, task: TaskMeta) {
+        self.q.push_back(task);
+    }
+
+    fn pop_for(&mut self, _worker: &WorkerProfile, _now: Instant) -> Option<TaskMeta> {
+        self.q.pop_front()
+    }
+
+    fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    fn oldest_enqueued(&self) -> Option<Instant> {
+        // FIFO front is always the oldest (pushes append in arrival order)
+        self.q.front().map(|t| t.enqueued)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Priority
+// ---------------------------------------------------------------------------
+
+struct PrioEntry {
+    priority: f64,
+    seq: u64,
+    task: TaskMeta,
+}
+
+impl PartialEq for PrioEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for PrioEntry {}
+
+impl PartialOrd for PrioEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for PrioEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // max-heap: larger = runs first. Higher priority wins (total_cmp
+        // gives a total order over f64, NaN sorting last-ish is fine for a
+        // nonsense priority); within a level, the earlier sequence number
+        // wins (stable FIFO).
+        self.priority
+            .total_cmp(&other.priority)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Highest `priority` first; FIFO within a level.
+#[derive(Default)]
+pub struct PriorityPolicy {
+    heap: BinaryHeap<PrioEntry>,
+    next_seq: u64,
+}
+
+impl PriorityPolicy {
+    pub fn new() -> PriorityPolicy {
+        PriorityPolicy::default()
+    }
+}
+
+impl SchedPolicy for PriorityPolicy {
+    fn name(&self) -> &'static str {
+        "priority"
+    }
+
+    fn push(&mut self, task: TaskMeta) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(PrioEntry { priority: task.priority, seq, task });
+    }
+
+    fn pop_for(&mut self, _worker: &WorkerProfile, _now: Instant) -> Option<TaskMeta> {
+        self.heap.pop().map(|e| e.task)
+    }
+
+    fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    fn oldest_enqueued(&self) -> Option<Instant> {
+        self.heap.iter().map(|e| e.task.enqueued).min()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Policy selection
+// ---------------------------------------------------------------------------
+
+/// Named policy selector (CLI `--policy`, endpoint configuration).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    Fifo,
+    Priority,
+    Affinity,
+}
+
+impl Default for PolicyKind {
+    fn default() -> Self {
+        PolicyKind::Fifo
+    }
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        match s {
+            "fifo" => Some(PolicyKind::Fifo),
+            "priority" => Some(PolicyKind::Priority),
+            "affinity" => Some(PolicyKind::Affinity),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PolicyKind::Fifo => "fifo",
+            PolicyKind::Priority => "priority",
+            PolicyKind::Affinity => "affinity",
+        }
+    }
+
+    /// Instantiate the policy with its defaults.
+    pub fn build(&self) -> Box<dyn SchedPolicy> {
+        match self {
+            PolicyKind::Fifo => Box::new(FifoPolicy::new()),
+            PolicyKind::Priority => Box::new(PriorityPolicy::new()),
+            PolicyKind::Affinity => {
+                Box::new(crate::scheduler::affinity::AffinityPolicy::new())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(id: TaskId, priority: f64) -> TaskMeta {
+        TaskMeta { priority, ..TaskMeta::bare(id) }
+    }
+
+    fn drain(p: &mut dyn SchedPolicy) -> Vec<TaskId> {
+        let w = WorkerProfile::anonymous();
+        let mut out = Vec::new();
+        while let Some(t) = p.pop_for(&w, Instant::now()) {
+            out.push(t.id);
+        }
+        out
+    }
+
+    #[test]
+    fn fifo_preserves_order() {
+        let mut p = FifoPolicy::new();
+        for id in [3, 1, 4, 1, 5] {
+            p.push(meta(id, 0.0));
+        }
+        assert_eq!(p.len(), 5);
+        assert_eq!(drain(&mut p), vec![3, 1, 4, 1, 5]);
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn priority_runs_high_first_fifo_within_level() {
+        let mut p = PriorityPolicy::new();
+        p.push(meta(1, 0.0));
+        p.push(meta(2, 5.0));
+        p.push(meta(3, 0.0));
+        p.push(meta(4, 5.0));
+        p.push(meta(5, -1.0));
+        assert_eq!(drain(&mut p), vec![2, 4, 1, 3, 5]);
+    }
+
+    #[test]
+    fn fractional_priorities_order_correctly() {
+        let mut p = PriorityPolicy::new();
+        p.push(meta(1, 0.1));
+        p.push(meta(2, 0.9));
+        p.push(meta(3, -0.5));
+        assert_eq!(drain(&mut p), vec![2, 1, 3]);
+    }
+
+    #[test]
+    fn oldest_enqueued_tracks_front() {
+        let mut p = FifoPolicy::new();
+        assert!(p.oldest_enqueued().is_none());
+        let first = meta(1, 0.0);
+        let t0 = first.enqueued;
+        p.push(first);
+        p.push(meta(2, 0.0));
+        assert_eq!(p.oldest_enqueued(), Some(t0));
+        let w = WorkerProfile::anonymous();
+        p.pop_for(&w, Instant::now());
+        assert!(p.oldest_enqueued().unwrap() >= t0);
+    }
+
+    #[test]
+    fn policy_kind_parse_and_build() {
+        for (s, k) in [
+            ("fifo", PolicyKind::Fifo),
+            ("priority", PolicyKind::Priority),
+            ("affinity", PolicyKind::Affinity),
+        ] {
+            assert_eq!(PolicyKind::parse(s), Some(k));
+            assert_eq!(k.as_str(), s);
+            assert_eq!(k.build().name(), s);
+        }
+        assert!(PolicyKind::parse("lifo").is_none());
+    }
+
+    #[test]
+    fn worker_profile_warm_set() {
+        let mut w = WorkerProfile::new("block-0/node-0/worker-0");
+        assert!(!w.is_warm("fn0:1Lbb"));
+        w.note_warm("fn0:1Lbb");
+        w.note_warm("fn0:1Lbb");
+        assert!(w.is_warm("fn0:1Lbb"));
+        assert_eq!(w.warm_count(), 1);
+    }
+}

@@ -1,0 +1,262 @@
+//! The policy-driven interchange queue.
+//!
+//! [`SchedQueue`] replaces the seed's bare FIFO `TaskQueue` as the channel
+//! between the service and one endpoint's workers. Pushes carry
+//! [`TaskMeta`]; pops carry the popping worker's [`WorkerProfile`] so the
+//! installed [`SchedPolicy`] can route warm work (affinity), reorder by
+//! priority, or fall back to plain FIFO (the default — byte-for-byte the
+//! seed behavior).
+//!
+//! Closing semantics (shutdown drain): `close()` wakes all waiters; `pop*`
+//! keeps returning queued tasks after close and only returns `None` once
+//! the queue is *empty* — so a closing endpoint drains deterministically
+//! instead of dropping in-flight work.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::task::TaskId;
+use crate::scheduler::policy::{FifoPolicy, SchedPolicy, TaskMeta, WorkerProfile};
+
+struct Inner {
+    policy: Box<dyn SchedPolicy>,
+    metrics: Option<Arc<Metrics>>,
+}
+
+/// Thread-safe, policy-driven interchange (the funcX "interchange" between
+/// service and workers).
+pub struct SchedQueue {
+    inner: Mutex<Inner>,
+    cvar: Condvar,
+    closed: AtomicBool,
+}
+
+impl SchedQueue {
+    /// FIFO interchange — the seed default.
+    pub fn new() -> Arc<SchedQueue> {
+        SchedQueue::with_policy(Box::new(FifoPolicy::new()))
+    }
+
+    pub fn with_policy(policy: Box<dyn SchedPolicy>) -> Arc<SchedQueue> {
+        Arc::new(SchedQueue {
+            inner: Mutex::new(Inner { policy, metrics: None }),
+            cvar: Condvar::new(),
+            closed: AtomicBool::new(false),
+        })
+    }
+
+    /// Attach a metrics hub; affinity hits/misses observed at pop time are
+    /// counted there.
+    pub fn attach_metrics(&self, metrics: Arc<Metrics>) {
+        self.inner.lock().unwrap().metrics = Some(metrics);
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.inner.lock().unwrap().policy.name()
+    }
+
+    /// Push by id only (legacy path; no routing metadata). Ignores the
+    /// closed-queue rejection — see [`SchedQueue::push_meta`].
+    pub fn push(&self, id: TaskId) {
+        let _ = self.push_meta(TaskMeta::bare(id));
+    }
+
+    /// Enqueue a task. Returns false (without enqueuing) once the queue is
+    /// closed: a push that raced the shutdown drain would otherwise strand
+    /// the task in Pending forever. The closed flag is checked under the
+    /// same lock the drain pops through (and `close()` synchronizes on it),
+    /// so every accepted push strictly precedes the drain's final empty
+    /// pop.
+    pub fn push_meta(&self, meta: TaskMeta) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if self.closed.load(Ordering::SeqCst) {
+            return false;
+        }
+        g.policy.push(meta);
+        drop(g);
+        self.cvar.notify_one();
+        true
+    }
+
+    /// Blocking pop with timeout and no worker identity; None on timeout or
+    /// closed-and-empty.
+    pub fn pop(&self, timeout: Duration) -> Option<TaskId> {
+        self.pop_task(&WorkerProfile::anonymous(), timeout).map(|m| m.id)
+    }
+
+    /// Blocking policy-routed pop for `worker`; None on timeout or
+    /// closed-and-empty.
+    pub fn pop_task(&self, worker: &WorkerProfile, timeout: Duration) -> Option<TaskMeta> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(meta) = g.policy.pop_for(worker, Instant::now()) {
+                let metrics = g.metrics.clone();
+                drop(g);
+                if let Some(m) = metrics {
+                    if !meta.affinity_key.is_empty() {
+                        if worker.is_warm(&meta.affinity_key) {
+                            m.affinity_hit();
+                        } else {
+                            m.affinity_miss();
+                        }
+                    }
+                }
+                return Some(meta);
+            }
+            if self.closed.load(Ordering::SeqCst) {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (gg, _) = self.cvar.wait_timeout(g, deadline - now).unwrap();
+            g = gg;
+        }
+    }
+
+    /// Pop every remaining task at once, bypassing routing and the
+    /// affinity hit/miss accounting — for shutdown leftovers, which are
+    /// not dispatches and must not skew the endpoint's counters.
+    pub fn drain_remaining(&self) -> Vec<TaskMeta> {
+        let mut g = self.inner.lock().unwrap();
+        let anon = WorkerProfile::anonymous();
+        let mut out = Vec::new();
+        while let Some(meta) = g.policy.pop_for(&anon, Instant::now()) {
+            out.push(meta);
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().policy.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Age of the oldest queued task (autoscaler latency signal).
+    pub fn oldest_wait(&self) -> Option<Duration> {
+        let oldest = self.inner.lock().unwrap().policy.oldest_enqueued()?;
+        Some(Instant::now().saturating_duration_since(oldest))
+    }
+
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::SeqCst);
+        // synchronize with in-flight pushes: any push that passed the
+        // closed check is inside the lock now; taking it here means such
+        // pushes are enqueued (and visible to a subsequent drain) before
+        // close() returns
+        drop(self.inner.lock().unwrap());
+        self.cvar.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::affinity::AffinityPolicy;
+    use crate::scheduler::policy::PriorityPolicy;
+
+    #[test]
+    fn fifo_default_roundtrip() {
+        let q = SchedQueue::new();
+        assert_eq!(q.policy_name(), "fifo");
+        q.push(7);
+        q.push(8);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(Duration::from_millis(5)), Some(7));
+        assert_eq!(q.pop(Duration::from_millis(5)), Some(8));
+        assert_eq!(q.pop(Duration::from_millis(5)), None);
+    }
+
+    #[test]
+    fn close_drains_before_none() {
+        let q = SchedQueue::new();
+        q.push(1);
+        q.push(2);
+        q.close();
+        // queued work survives close and drains in order
+        assert_eq!(q.pop(Duration::from_millis(5)), Some(1));
+        assert_eq!(q.pop(Duration::from_millis(5)), Some(2));
+        assert_eq!(q.pop(Duration::from_millis(5)), None);
+        assert!(q.is_closed());
+    }
+
+    #[test]
+    fn push_after_close_is_rejected() {
+        let q = SchedQueue::new();
+        assert!(q.push_meta(TaskMeta::bare(1)));
+        q.close();
+        // a late push must not strand a task behind the shutdown drain
+        assert!(!q.push_meta(TaskMeta::bare(2)));
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop(Duration::from_millis(5)), Some(1));
+        assert_eq!(q.pop(Duration::from_millis(5)), None);
+    }
+
+    #[test]
+    fn close_wakes_blocked_popper() {
+        let q = SchedQueue::new();
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || q2.pop(Duration::from_secs(10)));
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert_eq!(t.join().unwrap(), None);
+    }
+
+    #[test]
+    fn push_wakes_blocked_popper() {
+        let q = SchedQueue::new();
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || q2.pop(Duration::from_secs(10)));
+        std::thread::sleep(Duration::from_millis(20));
+        q.push(42);
+        assert_eq!(t.join().unwrap(), Some(42));
+    }
+
+    #[test]
+    fn priority_policy_through_queue() {
+        let q = SchedQueue::with_policy(Box::new(PriorityPolicy::new()));
+        assert_eq!(q.policy_name(), "priority");
+        q.push_meta(TaskMeta { priority: 0.0, ..TaskMeta::bare(1) });
+        q.push_meta(TaskMeta { priority: 3.0, ..TaskMeta::bare(2) });
+        assert_eq!(q.pop(Duration::from_millis(5)), Some(2));
+        assert_eq!(q.pop(Duration::from_millis(5)), Some(1));
+    }
+
+    #[test]
+    fn affinity_routes_to_warm_worker_and_counts() {
+        let q = SchedQueue::with_policy(Box::new(AffinityPolicy::new()));
+        let metrics = Arc::new(Metrics::new());
+        q.attach_metrics(metrics.clone());
+        q.push_meta(TaskMeta { affinity_key: "A".into(), ..TaskMeta::bare(1) });
+        q.push_meta(TaskMeta { affinity_key: "B".into(), ..TaskMeta::bare(2) });
+        let mut w = WorkerProfile::new("w0");
+        w.note_warm("B");
+        let got = q.pop_task(&w, Duration::from_millis(5)).unwrap();
+        assert_eq!(got.id, 2);
+        let got = q.pop_task(&w, Duration::from_millis(5)).unwrap();
+        assert_eq!(got.id, 1);
+        let s = metrics.snapshot();
+        assert_eq!(s.affinity_hits, 1);
+        assert_eq!(s.affinity_misses, 1);
+    }
+
+    #[test]
+    fn oldest_wait_reported() {
+        let q = SchedQueue::new();
+        assert!(q.oldest_wait().is_none());
+        q.push(1);
+        std::thread::sleep(Duration::from_millis(10));
+        assert!(q.oldest_wait().unwrap() >= Duration::from_millis(5));
+    }
+}

@@ -10,7 +10,7 @@
 //! distributions measured from the *real* Rust+PJRT fit path.
 
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashSet, VecDeque};
 
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
@@ -121,23 +121,8 @@ pub fn simulate(
     let mut rng = Rng::new(seed);
     let n = service_times.len();
 
-    // worker ready times
-    let mut ready: Vec<f64> = Vec::with_capacity(topo.workers());
-    let mut overhead = 0.0;
-    for _b in 0..topo.max_blocks {
-        let prov = cost.provision_base_s
-            + if cost.provision_jitter_s > 0.0 {
-                rng.exponential(1.0 / cost.provision_jitter_s)
-            } else {
-                0.0
-            };
-        for _nd in 0..topo.nodes_per_block {
-            for _w in 0..topo.workers_per_node {
-                ready.push(prov + cost.worker_startup_s);
-                overhead += prov + cost.worker_startup_s;
-            }
-        }
-    }
+    let ready = provision_ready_times(&mut rng, topo, &cost);
+    let mut overhead: f64 = ready.iter().sum();
 
     // earliest-free-worker list scheduling
     let mut heap: BinaryHeap<Reverse<(u64, usize)>> = ready
@@ -181,6 +166,128 @@ pub fn simulate(
     }
 }
 
+// ---------------------------------------------------------------------------
+// policy-aware replay (scheduler subsystem)
+// ---------------------------------------------------------------------------
+
+/// One task in a policy-aware replay: its service time plus the shape class
+/// whose compiled executable it needs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimTask {
+    pub service_s: f64,
+    pub class: usize,
+}
+
+/// Dispatch policies the simulator can replay (the thread-level priority
+/// policy has no analog here: replay tasks share one priority).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimPolicy {
+    /// strict submission order onto the earliest-free worker
+    Fifo,
+    /// earliest-free worker prefers the first queued task whose class it
+    /// has already compiled; FIFO fallback when it has no warm match
+    Affinity,
+}
+
+/// Outcome of one policy replay.
+#[derive(Debug, Clone)]
+pub struct PolicyOutcome {
+    pub makespan_s: f64,
+    /// mean task completion time (all tasks submitted at t = 0, so
+    /// completion == latency)
+    pub mean_latency_s: f64,
+    pub completions_s: Vec<f64>,
+    /// cold (worker, class) pairs: each paid `class_compile_s`
+    pub compiles: usize,
+    /// tasks that landed on a worker already warm for their class
+    pub affinity_hits: usize,
+    pub utilization: f64,
+}
+
+/// Replay `tasks` (all submitted at t = 0) through a topology under a
+/// dispatch policy. The first task of a class on a worker pays
+/// `class_compile_s` (the per-worker executable compile — the warm-start
+/// cost affinity routing avoids); later same-class tasks on that worker are
+/// warm. Provisioning, startup, transfer, jitter and stragglers follow
+/// `cost` exactly as in [`simulate`].
+pub fn simulate_policy(
+    tasks: &[SimTask],
+    topo: Topology,
+    cost: CostModel,
+    class_compile_s: f64,
+    policy: SimPolicy,
+    seed: u64,
+) -> PolicyOutcome {
+    let mut rng = Rng::new(seed);
+    let mut free_at = provision_ready_times(&mut rng, topo, &cost);
+
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> = free_at
+        .iter()
+        .enumerate()
+        .map(|(i, &t)| Reverse((f64_key(t), i)))
+        .collect();
+    let mut warm: Vec<HashSet<usize>> = vec![HashSet::new(); free_at.len()];
+    let mut remaining: VecDeque<usize> = (0..tasks.len()).collect();
+    let mut completions = vec![0.0; tasks.len()];
+    let mut busy = 0.0;
+    let mut compiles = 0usize;
+    let mut hits = 0usize;
+
+    while !remaining.is_empty() {
+        let Reverse((_, w)) = heap.pop().expect("at least one worker");
+        let pick = match policy {
+            SimPolicy::Fifo => 0,
+            SimPolicy::Affinity => remaining
+                .iter()
+                .position(|&t| warm[w].contains(&tasks[t].class))
+                .unwrap_or(0),
+        };
+        let t = remaining.remove(pick).expect("picked index in range");
+        let task = tasks[t];
+
+        let compile = if warm[w].contains(&task.class) {
+            hits += 1;
+            0.0
+        } else {
+            warm[w].insert(task.class);
+            compiles += 1;
+            class_compile_s
+        };
+        let jitter = 1.0 + cost.service_jitter_rel * rng.normal();
+        let mut service = task.service_s * jitter.max(0.1);
+        if rng.f64() < cost.straggler_prob {
+            service *= cost.straggler_factor;
+        }
+        let total = cost.transfer_in_s + compile + service + cost.transfer_out_s;
+        let start = free_at[w];
+        let done = start + total;
+        free_at[w] = done;
+        busy += total;
+        completions[t] = done;
+        heap.push(Reverse((f64_key(done), w)));
+    }
+
+    let makespan = completions.iter().cloned().fold(0.0, f64::max);
+    let mean_latency = if completions.is_empty() {
+        0.0
+    } else {
+        completions.iter().sum::<f64>() / completions.len() as f64
+    };
+    let utilization = if makespan > 0.0 {
+        busy / (topo.workers() as f64 * makespan)
+    } else {
+        0.0
+    };
+    PolicyOutcome {
+        makespan_s: makespan,
+        mean_latency_s: mean_latency,
+        completions_s: completions,
+        compiles,
+        affinity_hits: hits,
+        utilization,
+    }
+}
+
 /// Run `trials` independent simulations; returns the makespans.
 pub fn trials(
     service_times: &[f64],
@@ -192,6 +299,29 @@ pub fn trials(
     (0..n_trials)
         .map(|t| simulate(service_times, topo, cost, seed.wrapping_add(t as u64 * 7919)).makespan_s)
         .collect()
+}
+
+/// Worker ready times for a topology: one provisioning-latency draw per
+/// block (base + exponential jitter), plus per-worker startup. Shared by
+/// [`simulate`] and [`simulate_policy`] so both replay the identical
+/// provisioning model — and the identical RNG draw order, which the
+/// FIFO-parity test relies on.
+fn provision_ready_times(rng: &mut Rng, topo: Topology, cost: &CostModel) -> Vec<f64> {
+    let mut ready = Vec::with_capacity(topo.workers());
+    for _b in 0..topo.max_blocks {
+        let prov = cost.provision_base_s
+            + if cost.provision_jitter_s > 0.0 {
+                rng.exponential(1.0 / cost.provision_jitter_s)
+            } else {
+                0.0
+            };
+        for _nd in 0..topo.nodes_per_block {
+            for _w in 0..topo.workers_per_node {
+                ready.push(prov + cost.worker_startup_s);
+            }
+        }
+    }
+    ready
 }
 
 /// Order-preserving f64 -> u64 key for the scheduling heap (times >= 0).
@@ -272,5 +402,86 @@ mod tests {
         let svc = vec![0.5; 100];
         let out = simulate(&svc, Topology::river_table1(), CostModel::river(), 1);
         assert!(out.utilization > 0.0 && out.utilization <= 1.0);
+    }
+
+    // -- policy-aware replay -----------------------------------------------
+
+    #[test]
+    fn fifo_policy_with_no_compile_matches_plain_simulate() {
+        let svc: Vec<f64> = (0..40).map(|i| 0.5 + (i % 5) as f64 * 0.2).collect();
+        let tasks: Vec<SimTask> =
+            svc.iter().map(|&s| SimTask { service_s: s, class: 0 }).collect();
+        let topo = Topology { max_blocks: 2, nodes_per_block: 1, workers_per_node: 4 };
+        let plain = simulate(&svc, topo, CostModel::river(), 17);
+        let fifo = simulate_policy(&tasks, topo, CostModel::river(), 0.0, SimPolicy::Fifo, 17);
+        assert_eq!(plain.completions_s, fifo.completions_s);
+        assert_eq!(plain.makespan_s, fifo.makespan_s);
+    }
+
+    #[test]
+    fn single_class_policies_are_identical() {
+        let tasks: Vec<SimTask> =
+            (0..50).map(|_| SimTask { service_s: 1.0, class: 0 }).collect();
+        let topo = Topology { max_blocks: 1, nodes_per_block: 1, workers_per_node: 8 };
+        let fifo = simulate_policy(&tasks, topo, CostModel::ideal(), 5.0, SimPolicy::Fifo, 3);
+        let aff =
+            simulate_policy(&tasks, topo, CostModel::ideal(), 5.0, SimPolicy::Affinity, 3);
+        // with one class, affinity has nothing to route: identical schedule
+        assert_eq!(fifo.completions_s, aff.completions_s);
+        assert_eq!(fifo.compiles, aff.compiles);
+        assert_eq!(fifo.compiles, 8); // one compile per worker
+    }
+
+    #[test]
+    fn affinity_cuts_compiles_and_mean_latency_on_mixed_classes() {
+        // 3 classes interleaved over 8 workers (coprime so FIFO thrashes:
+        // worker k's task stream cycles through all classes), compile >>
+        // service
+        let tasks: Vec<SimTask> =
+            (0..96).map(|i| SimTask { service_s: 0.5, class: i % 3 }).collect();
+        let topo = Topology { max_blocks: 1, nodes_per_block: 1, workers_per_node: 8 };
+        let fifo = simulate_policy(&tasks, topo, CostModel::ideal(), 10.0, SimPolicy::Fifo, 5);
+        let aff =
+            simulate_policy(&tasks, topo, CostModel::ideal(), 10.0, SimPolicy::Affinity, 5);
+        assert!(
+            aff.compiles < fifo.compiles,
+            "affinity compiles {} !< fifo {}",
+            aff.compiles,
+            fifo.compiles
+        );
+        assert!(
+            aff.mean_latency_s < fifo.mean_latency_s,
+            "affinity latency {} !< fifo {}",
+            aff.mean_latency_s,
+            fifo.mean_latency_s
+        );
+        assert!(aff.affinity_hits > fifo.affinity_hits);
+        // every task completes under both policies
+        assert_eq!(aff.completions_s.len(), 96);
+        assert!(aff.completions_s.iter().all(|&c| c > 0.0));
+    }
+
+    #[test]
+    fn policy_replay_deterministic_per_seed() {
+        let tasks: Vec<SimTask> =
+            (0..30).map(|i| SimTask { service_s: 1.0, class: i % 2 }).collect();
+        let a = simulate_policy(
+            &tasks,
+            Topology::river_table1(),
+            CostModel::river(),
+            4.0,
+            SimPolicy::Affinity,
+            42,
+        );
+        let b = simulate_policy(
+            &tasks,
+            Topology::river_table1(),
+            CostModel::river(),
+            4.0,
+            SimPolicy::Affinity,
+            42,
+        );
+        assert_eq!(a.completions_s, b.completions_s);
+        assert_eq!(a.compiles, b.compiles);
     }
 }

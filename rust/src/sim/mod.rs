@@ -5,7 +5,11 @@
 pub mod cluster;
 pub mod replay;
 
-pub use cluster::{simulate, trials, CostModel, SimOutcome, Topology};
+pub use cluster::{
+    simulate, simulate_policy, trials, CostModel, PolicyOutcome, SimOutcome, SimPolicy, SimTask,
+    Topology,
+};
 pub use replay::{
-    block_scaling, calibrate_multiplier, replay_table1_row, PaperRow, ReplayRow, PAPER_TABLE1,
+    block_scaling, calibrate_multiplier, replay_table1_row, table1_mixed_workload, PaperRow,
+    ReplayRow, PAPER_TABLE1,
 };

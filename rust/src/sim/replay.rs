@@ -10,7 +10,7 @@
 //! who wins, the speedup ordering across analyses, and where overhead
 //! dominates (see EXPERIMENTS.md).
 
-use crate::sim::cluster::{simulate, trials, CostModel, Topology};
+use crate::sim::cluster::{simulate, trials, CostModel, SimTask, Topology};
 use crate::util::stats::Summary;
 
 /// Paper Table 1 reference numbers (seconds).
@@ -84,6 +84,36 @@ pub fn replay_table1_row(
     }
 }
 
+/// The Table-1 workload as one mixed stream for policy replays: all three
+/// published analyses (125 + 76 + 57 patches) arriving interleaved at a
+/// shared endpoint, each task tagged with its analysis' shape class and
+/// carrying that analysis' mean per-patch service time (single-node wall /
+/// patch count). This is the multi-tenant serving picture the scheduler
+/// targets: FIFO dispatch thrashes workers across the three compiled
+/// executables, affinity routing keeps them warm.
+pub fn table1_mixed_workload() -> Vec<SimTask> {
+    let mut streams: Vec<(usize, f64, usize)> = PAPER_TABLE1
+        .iter()
+        .enumerate()
+        .map(|(class, row)| (class, row.single_node_s / row.patches as f64, row.patches))
+        .collect();
+    let mut out = Vec::new();
+    loop {
+        let mut emitted = false;
+        for (class, per_task, left) in streams.iter_mut() {
+            if *left > 0 {
+                out.push(SimTask { service_s: *per_task, class: *class });
+                *left -= 1;
+                emitted = true;
+            }
+        }
+        if !emitted {
+            break;
+        }
+    }
+    out
+}
+
 /// Block-scaling sweep (§3 / isolated-run discussion): makespan vs
 /// max_blocks at the paper's node shape.
 pub fn block_scaling(
@@ -149,6 +179,22 @@ mod tests {
             .collect();
         assert!(reps[0].speedup > reps[2].speedup, "1Lbb > stau");
         assert!(reps[2].speedup > reps[1].speedup, "stau > 2L0J");
+    }
+
+    #[test]
+    fn mixed_workload_covers_all_analyses() {
+        let tasks = table1_mixed_workload();
+        let total: usize = PAPER_TABLE1.iter().map(|r| r.patches).sum();
+        assert_eq!(tasks.len(), total);
+        for (class, row) in PAPER_TABLE1.iter().enumerate() {
+            let n = tasks.iter().filter(|t| t.class == class).count();
+            assert_eq!(n, row.patches, "{}", row.analysis);
+            let per = tasks.iter().find(|t| t.class == class).unwrap().service_s;
+            assert!((per - row.single_node_s / row.patches as f64).abs() < 1e-12);
+        }
+        // interleaved: the first three tasks are one of each class
+        let head: Vec<usize> = tasks.iter().take(3).map(|t| t.class).collect();
+        assert_eq!(head, vec![0, 1, 2]);
     }
 
     #[test]

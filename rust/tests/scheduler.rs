@@ -1,0 +1,302 @@
+//! Scheduler integration tests: each dispatch policy exercised through the
+//! real coordinator (service + endpoint + executor threads), the shutdown
+//! drain guarantee, and the sim-driven check that warm-worker affinity
+//! beats FIFO on warm-start latency at paper scale.
+//!
+//! Determinism pattern: tests that assert on dispatch *order* gate worker
+//! startup behind an `AtomicBool` in `worker_init`, so the whole wave is
+//! queued before the first pop.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use pyhf_faas::coordinator::{
+    Endpoint, EndpointConfig, ExecutorConfig, FaasClient, Service, ServiceHandle, TaskState,
+};
+use pyhf_faas::scheduler::PolicyKind;
+use pyhf_faas::sim::{
+    simulate_policy, table1_mixed_workload, CostModel, SimPolicy, Topology,
+};
+use pyhf_faas::util::json::Json;
+
+fn single_worker_exec() -> ExecutorConfig {
+    ExecutorConfig {
+        max_blocks: 1,
+        nodes_per_block: 1,
+        workers_per_node: 1,
+        parallelism: 1.0,
+        poll: Duration::from_millis(1),
+    }
+}
+
+/// Endpoint whose (single) worker blocks in init until `gate` is released.
+fn gated_endpoint(svc: &ServiceHandle, policy: PolicyKind, gate: Arc<AtomicBool>) -> Endpoint {
+    Endpoint::start(
+        svc.clone(),
+        EndpointConfig::new(format!("gated-{}", policy.as_str()))
+            .with_executor(single_worker_exec())
+            .with_policy(policy)
+            .with_worker_init(Arc::new(move |_ctx: &mut _| {
+                while !gate.load(Ordering::SeqCst) {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Ok(())
+            })),
+    )
+}
+
+/// Handler that appends its payload `tag` to a shared log.
+fn recording_handler(
+    log: Arc<Mutex<Vec<String>>>,
+) -> pyhf_faas::coordinator::service::Handler {
+    Arc::new(move |p: &Json, _ctx: &mut _| {
+        let tag = p.get("tag").and_then(|v| v.as_str()).unwrap_or("?").to_string();
+        log.lock().unwrap().push(tag);
+        Ok(Json::Null)
+    })
+}
+
+#[test]
+fn fifo_preserves_submission_order() {
+    let svc = Service::new();
+    let gate = Arc::new(AtomicBool::new(false));
+    let ep = gated_endpoint(&svc, PolicyKind::Fifo, gate.clone());
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let f = svc.register_function("record", recording_handler(log.clone()));
+
+    let ids: Vec<_> = (0..10)
+        .map(|i| {
+            svc.submit(ep.id, f, Json::obj(vec![("tag", Json::str(format!("t{i}")))])).unwrap()
+        })
+        .collect();
+    gate.store(true, Ordering::SeqCst);
+    for id in ids {
+        svc.wait_result(id, Duration::from_secs(10)).unwrap();
+    }
+    let order = log.lock().unwrap().clone();
+    let expect: Vec<String> = (0..10).map(|i| format!("t{i}")).collect();
+    assert_eq!(order, expect);
+    ep.shutdown();
+}
+
+#[test]
+fn priority_policy_runs_high_priority_first() {
+    let svc = Service::new();
+    let gate = Arc::new(AtomicBool::new(false));
+    let ep = gated_endpoint(&svc, PolicyKind::Priority, gate.clone());
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let f = svc.register_function("record", recording_handler(log.clone()));
+
+    // three low-priority tasks submitted BEFORE three high-priority ones
+    let mut ids = Vec::new();
+    for i in 0..3 {
+        ids.push(
+            svc.submit(
+                ep.id,
+                f,
+                Json::obj(vec![
+                    ("tag", Json::str(format!("low{i}"))),
+                    ("priority", Json::num(0.0)),
+                ]),
+            )
+            .unwrap(),
+        );
+    }
+    for i in 0..3 {
+        ids.push(
+            svc.submit(
+                ep.id,
+                f,
+                Json::obj(vec![
+                    ("tag", Json::str(format!("high{i}"))),
+                    ("priority", Json::num(9.0)),
+                ]),
+            )
+            .unwrap(),
+        );
+    }
+    gate.store(true, Ordering::SeqCst);
+    for id in ids {
+        svc.wait_result(id, Duration::from_secs(10)).unwrap();
+    }
+    let order = log.lock().unwrap().clone();
+    assert_eq!(order, vec!["high0", "high1", "high2", "low0", "low1", "low2"]);
+    ep.shutdown();
+}
+
+#[test]
+fn affinity_policy_groups_classes_and_hits() {
+    // interleaved classes A,B,C,A,B,C,... through one affinity worker: the
+    // worker must serve each class as one contiguous run (2 switches for 3
+    // classes instead of 35 under FIFO), and the endpoint's hit counters
+    // must show a warm stream
+    let svc = Service::new();
+    let gate = Arc::new(AtomicBool::new(false));
+    let ep = gated_endpoint(&svc, PolicyKind::Affinity, gate.clone());
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let colds = Arc::new(AtomicUsize::new(0));
+    let f = {
+        let log = log.clone();
+        let colds = colds.clone();
+        svc.register_function(
+            "classy",
+            Arc::new(move |p: &Json, ctx: &mut _| {
+                let class = p.get("class").and_then(|v| v.as_str()).unwrap_or("?").to_string();
+                let slot = format!("warm:{class}");
+                if ctx.get::<bool>(&slot).is_none() {
+                    // cold start: "compile" the executable for this class
+                    colds.fetch_add(1, Ordering::SeqCst);
+                    ctx.insert(&slot, true);
+                }
+                log.lock().unwrap().push(class);
+                Ok(Json::Null)
+            }),
+        )
+    };
+
+    let classes = ["A", "B", "C"];
+    let ids: Vec<_> = (0..36)
+        .map(|i| {
+            svc.submit(
+                ep.id,
+                f,
+                Json::obj(vec![("class", Json::str(classes[i % 3]))]),
+            )
+            .unwrap()
+        })
+        .collect();
+    gate.store(true, Ordering::SeqCst);
+    for id in ids {
+        svc.wait_result(id, Duration::from_secs(10)).unwrap();
+    }
+
+    let order = log.lock().unwrap().clone();
+    assert_eq!(order.len(), 36);
+    let switches = order.windows(2).filter(|w| w[0] != w[1]).count();
+    assert!(
+        switches <= 2,
+        "affinity should serve classes contiguously, saw {switches} switches: {order:?}"
+    );
+    assert_eq!(colds.load(Ordering::SeqCst), 3, "one cold start per class");
+
+    let m = ep.metrics_snapshot();
+    assert_eq!(m.affinity_hits + m.affinity_misses, 36);
+    // first pop of each class is a miss; everything else must be warm
+    assert_eq!(m.affinity_misses, 3, "hits {} misses {}", m.affinity_hits, m.affinity_misses);
+    assert!(m.affinity_hit_rate() > 0.9);
+    ep.shutdown();
+}
+
+#[test]
+fn shutdown_drains_all_queued_tasks() {
+    // the satellite fix: Endpoint::shutdown must let workers finish every
+    // queued task (the seed raced shutdown and dropped them)
+    let svc = Service::new();
+    let ep = Endpoint::start(
+        svc.clone(),
+        EndpointConfig::new("drain")
+            .with_executor(single_worker_exec())
+            .with_worker_init(Arc::new(|_| Ok(()))),
+    );
+    let f = svc.register_function(
+        "slow",
+        Arc::new(|p: &Json, _| {
+            std::thread::sleep(Duration::from_millis(8));
+            Ok(p.clone())
+        }),
+    );
+    let ids: Vec<_> = (0..8).map(|i| svc.submit(ep.id, f, Json::num(i as f64)).unwrap()).collect();
+    // wait for the worker, then shut down with most of the wave still queued
+    let t0 = std::time::Instant::now();
+    while ep.active_workers() == 0 && t0.elapsed() < Duration::from_secs(5) {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    ep.shutdown();
+    for id in &ids {
+        assert_eq!(svc.task_state(*id), Some(TaskState::Success), "task {id} was dropped");
+    }
+    let m = svc.metrics.snapshot();
+    assert_eq!(m.completed, 8);
+    assert_eq!(m.failed, 0);
+}
+
+#[test]
+fn batched_wave_through_real_endpoint() {
+    // batching + affinity end-to-end: a deduped, coalesced wave through a
+    // batch-aware echo function on an affinity endpoint
+    let svc = Service::new();
+    let ep = Endpoint::start(
+        svc.clone(),
+        EndpointConfig::new("batched")
+            .with_executor(ExecutorConfig {
+                max_blocks: 1,
+                nodes_per_block: 1,
+                workers_per_node: 2,
+                parallelism: 1.0,
+                poll: Duration::from_millis(1),
+            })
+            .with_policy(PolicyKind::Affinity),
+    );
+    let client = FaasClient::new(svc.clone());
+    let f = client.register_function(
+        "echo",
+        pyhf_faas::scheduler::batched_handler(Arc::new(|p: &Json, _| Ok(p.clone()))),
+    );
+    let mk = |name: &str, class: &str| {
+        Json::obj(vec![("patch", Json::str(name)), ("class", Json::str(class))])
+    };
+    let payloads = vec![
+        mk("a0", "A"),
+        mk("b0", "B"),
+        mk("a0", "A"), // duplicate
+        mk("a1", "A"),
+        mk("b1", "B"),
+    ];
+    let sub = client.run_coalesced(&payloads, ep.id, f, 4).unwrap();
+    // 4 uniques -> one A-batch (a0, a1) + one B-batch (b0, b1)
+    assert_eq!(sub.tasks.len(), 2);
+    let group_results = client
+        .gather(&sub.tasks, Duration::from_secs(10), Duration::from_millis(1), None, |_, _| {})
+        .unwrap();
+    let results = sub.unpack(&group_results).unwrap();
+    assert_eq!(results.len(), 5);
+    for (i, r) in results.iter().enumerate() {
+        assert_eq!(r.as_ref().unwrap(), &payloads[i]);
+    }
+    let m = svc.metrics.snapshot();
+    assert_eq!(m.dedup_hits, 1);
+    assert_eq!(m.batches, 2);
+    assert_eq!(m.batched_tasks, 4);
+    ep.shutdown();
+}
+
+#[test]
+fn sim_affinity_beats_fifo_on_table1_workload() {
+    // the acceptance check behind benches/scheduler.rs, in test form: on
+    // the mixed Table-1 workload over the RIVER topology, warm-worker
+    // affinity yields lower mean task latency and fewer cold compiles than
+    // the seed FIFO interchange
+    let tasks = table1_mixed_workload();
+    let topo = Topology::river_table1();
+    for seed in [1u64, 42, 0x5c4ed] {
+        let fifo = simulate_policy(&tasks, topo, CostModel::river(), 5.0, SimPolicy::Fifo, seed);
+        let affinity =
+            simulate_policy(&tasks, topo, CostModel::river(), 5.0, SimPolicy::Affinity, seed);
+        assert!(
+            affinity.mean_latency_s < fifo.mean_latency_s,
+            "seed {seed}: affinity {:.2} s !< fifo {:.2} s",
+            affinity.mean_latency_s,
+            fifo.mean_latency_s
+        );
+        assert!(
+            affinity.compiles < fifo.compiles,
+            "seed {seed}: compiles {} !< {}",
+            affinity.compiles,
+            fifo.compiles
+        );
+        // both schedules complete the full workload
+        assert_eq!(fifo.completions_s.len(), tasks.len());
+        assert_eq!(affinity.completions_s.len(), tasks.len());
+    }
+}
