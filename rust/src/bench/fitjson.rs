@@ -1,0 +1,191 @@
+//! Machine-readable fit-kernel throughput report (`BENCH_fit.json`).
+//!
+//! `cargo bench --bench kernel` and `pyhf-faas scan --bench-out` both emit
+//! this schema so the perf trajectory of the L1 compute layer is tracked
+//! across PRs (and archived as a CI artifact). Fields not measured by a
+//! producer are reported as `0.0`.
+
+use std::path::Path;
+
+use crate::util::json::{self, Json};
+
+/// Schema tag checked by CI and by [`validate`].
+pub const SCHEMA: &str = "pyhf-faas/bench_fit/v1";
+
+/// Per-shape-class throughput numbers.
+#[derive(Debug, Clone)]
+pub struct ClassBench {
+    pub class: String,
+    /// fused-kernel NLL evaluations per second
+    pub nll_evals_per_s: f64,
+    /// fused-kernel full free fits per second
+    pub fits_per_s: f64,
+    /// toy pseudoexperiments (qmu-tilde each) per second
+    pub toys_per_s: f64,
+    /// seed (baseline) implementation full fits per second
+    pub baseline_fits_per_s: f64,
+    /// fits_per_s / baseline_fits_per_s
+    pub speedup: f64,
+    /// wall time spent benchmarking this class
+    pub wall_s: f64,
+}
+
+impl ClassBench {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("class", Json::str(self.class.clone())),
+            ("nll_evals_per_s", Json::num(self.nll_evals_per_s)),
+            ("fits_per_s", Json::num(self.fits_per_s)),
+            ("toys_per_s", Json::num(self.toys_per_s)),
+            ("baseline_fits_per_s", Json::num(self.baseline_fits_per_s)),
+            ("speedup", Json::num(self.speedup)),
+            ("wall_s", Json::num(self.wall_s)),
+        ])
+    }
+}
+
+/// The full report.
+#[derive(Debug, Clone)]
+pub struct FitBenchReport {
+    /// producer: "kernel-bench" or "scan"
+    pub source: String,
+    /// quick (CI smoke) mode: fewer trials, no regression assertions
+    pub quick: bool,
+    pub commit: String,
+    pub classes: Vec<ClassBench>,
+}
+
+impl FitBenchReport {
+    pub fn new(source: &str, quick: bool) -> FitBenchReport {
+        FitBenchReport {
+            source: source.to_string(),
+            quick,
+            commit: git_commit(),
+            classes: Vec::new(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str(SCHEMA)),
+            ("source", Json::str(self.source.clone())),
+            ("quick", Json::Bool(self.quick)),
+            ("commit", Json::str(self.commit.clone())),
+            (
+                "classes",
+                Json::Arr(self.classes.iter().map(|c| c.to_json()).collect()),
+            ),
+        ])
+    }
+
+    /// Serialize to `path` (pretty-printed).
+    pub fn write(&self, path: &Path) -> Result<(), String> {
+        let doc = self.to_json();
+        validate(&doc)?;
+        std::fs::write(path, json::to_string_pretty(&doc))
+            .map_err(|e| format!("write {}: {e}", path.display()))
+    }
+}
+
+/// Current commit hash (short), or "unknown" outside a git checkout.
+pub fn git_commit() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Schema check: every required key present with the right type, every
+/// throughput number finite and non-negative.
+pub fn validate(doc: &Json) -> Result<(), String> {
+    let schema = doc.get("schema").and_then(|v| v.as_str()).ok_or("missing 'schema'")?;
+    if schema != SCHEMA {
+        return Err(format!("schema '{schema}' != '{SCHEMA}'"));
+    }
+    doc.get("source").and_then(|v| v.as_str()).ok_or("missing 'source'")?;
+    doc.get("commit").and_then(|v| v.as_str()).ok_or("missing 'commit'")?;
+    match doc.get("quick") {
+        Some(Json::Bool(_)) => {}
+        _ => return Err("missing boolean 'quick'".to_string()),
+    }
+    let classes = doc.get("classes").and_then(|v| v.as_arr()).ok_or("missing 'classes'")?;
+    for (i, c) in classes.iter().enumerate() {
+        c.get("class")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| format!("classes[{i}]: missing 'class'"))?;
+        for key in [
+            "nll_evals_per_s",
+            "fits_per_s",
+            "toys_per_s",
+            "baseline_fits_per_s",
+            "speedup",
+            "wall_s",
+        ] {
+            let v = c
+                .get(key)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| format!("classes[{i}]: missing numeric '{key}'"))?;
+            if !v.is_finite() || v < 0.0 {
+                return Err(format!("classes[{i}].{key}: bad value {v}"));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> FitBenchReport {
+        let mut r = FitBenchReport::new("kernel-bench", true);
+        r.classes.push(ClassBench {
+            class: "quickstart".into(),
+            nll_evals_per_s: 1e6,
+            fits_per_s: 1e3,
+            toys_per_s: 500.0,
+            baseline_fits_per_s: 400.0,
+            speedup: 2.5,
+            wall_s: 1.2,
+        });
+        r
+    }
+
+    #[test]
+    fn report_roundtrips_and_validates() {
+        let doc = sample().to_json();
+        validate(&doc).unwrap();
+        let text = json::to_string_pretty(&doc);
+        let parsed = json::parse(&text).unwrap();
+        validate(&parsed).unwrap();
+        assert_eq!(parsed.get("schema").unwrap().as_str(), Some(SCHEMA));
+        let cls = parsed.get("classes").unwrap().as_arr().unwrap();
+        assert_eq!(cls[0].get("fits_per_s").unwrap().as_f64(), Some(1e3));
+    }
+
+    #[test]
+    fn validate_rejects_missing_and_bad_fields() {
+        let mut r = sample();
+        r.classes[0].speedup = f64::NAN;
+        assert!(validate(&r.to_json()).is_err());
+        let doc = json::parse(r#"{"schema": "nope"}"#).unwrap();
+        assert!(validate(&doc).is_err());
+        let doc = json::parse(
+            r#"{"schema": "pyhf-faas/bench_fit/v1", "source": "x",
+                "commit": "c", "quick": true, "classes": [{"class": "q"}]}"#,
+        )
+        .unwrap();
+        let err = validate(&doc).unwrap_err();
+        assert!(err.contains("nll_evals_per_s"), "{err}");
+    }
+
+    #[test]
+    fn git_commit_never_empty() {
+        assert!(!git_commit().is_empty());
+    }
+}

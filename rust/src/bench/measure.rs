@@ -2,12 +2,12 @@
 //! fits over a pallet and collect per-patch service times + physics outputs.
 //! Errors are plain `String`s (no error crates in the offline build).
 
-use crate::fitter::native::NativeFitter;
+use crate::fitter::FitScratch;
 use crate::histfactory::dense;
 use crate::histfactory::spec::Workspace;
 use crate::infer::results::PointResult;
 use crate::pallet::generator::{generate, AnalysisConfig};
-use crate::runtime::{default_artifact_dir, Engine, Manifest};
+use crate::runtime::{default_artifact_dir, native_hypotest, Engine, Manifest};
 
 /// Measured fit campaign over one analysis pallet.
 pub struct Campaign {
@@ -48,8 +48,9 @@ pub fn measure_pjrt(cfg: &AnalysisConfig, limit: Option<usize>) -> Result<Campai
     Ok(Campaign { analysis: cfg.name.clone(), service_s: service, points, compile_s })
 }
 
-/// Same campaign through the native-Rust scalar fitter (the "traditional
-/// single-node implementation" baseline).
+/// Same campaign through the native CPU path (`runtime::native_hypotest`),
+/// with one [`FitScratch`] reused across every patch — the same warm-worker
+/// steady state the coordinator's native handler runs in.
 pub fn measure_native(cfg: &AnalysisConfig, limit: Option<usize>) -> Result<Campaign, String> {
     let dir = default_artifact_dir();
     let manifest = Manifest::load(&dir)?;
@@ -61,12 +62,13 @@ pub fn measure_native(cfg: &AnalysisConfig, limit: Option<usize>) -> Result<Camp
     let n = limit.unwrap_or(pallet.patchset.len()).min(pallet.patchset.len());
     let mut service = Vec::with_capacity(n);
     let mut points = Vec::with_capacity(n);
+    let mut scratch = FitScratch::for_class(&entry.class);
     for patch in pallet.patchset.patches.iter().take(n) {
         let patched = patch.apply_to(&pallet.bkg_workspace).map_err(|e| e.to_string())?;
         let ws = Workspace::from_json(&patched).map_err(|e| e.to_string())?;
         let model = dense::compile(&ws, &entry.class).map_err(|e| e.to_string())?;
         let t0 = std::time::Instant::now();
-        let h = NativeFitter::new(&model).hypotest(1.0);
+        let h = native_hypotest(&model, &mut scratch, 1.0);
         let dt = t0.elapsed().as_secs_f64();
         service.push(dt);
         points.push(PointResult {

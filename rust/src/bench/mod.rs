@@ -1,6 +1,8 @@
 //! Bench harness substrate (no criterion offline).
 
+pub mod fitjson;
 pub mod harness;
 pub mod measure;
 
+pub use fitjson::{ClassBench, FitBenchReport};
 pub use harness::{bench, BenchResult, Bencher};

@@ -137,6 +137,7 @@ impl HighThroughputExecutor {
                         let load = LoadSnapshot {
                             outstanding: service.outstanding(endpoint),
                             queued: queue.len(),
+                            queued_weight: queue.queued_weight(),
                             active_workers: active_workers.load(Ordering::SeqCst),
                             blocks: live_blocks.load(Ordering::SeqCst),
                             oldest_wait: if wants_wait { queue.oldest_wait() } else { None },
@@ -327,9 +328,13 @@ fn spawn_worker(
                         }
                         // only a successful run proves this worker holds
                         // the warm state for the key (a failed handler may
-                        // never have compiled anything)
+                        // never have compiled anything); the warm set is a
+                        // bounded LRU, and evictions are surfaced in the
+                        // scheduler metrics
                         if ran_ok && !meta.affinity_key.is_empty() {
-                            profile.note_warm(meta.affinity_key);
+                            if profile.note_warm(meta.affinity_key).is_some() {
+                                metrics.warm_evicted();
+                            }
                         }
                     }
                     None => {

@@ -17,23 +17,32 @@
 //! compiles one executable per shape class (cached in the worker context —
 //! the analog of a funcX worker's container with pyhf pre-installed).
 
-use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::coordinator::service::{Handler, WorkerContext, WorkerInit};
-use crate::fitter::native::NativeFitter;
+use crate::fitter::FitScratch;
 use crate::histfactory::dense::{self, DenseModel};
 use crate::histfactory::spec::Workspace;
-use crate::infer::results::PointResult;
-use crate::runtime::engine::{Compiled, Engine};
+use crate::runtime::engine::{native_hypotest, Compiled, Engine};
 use crate::runtime::manifest::Manifest;
 use crate::util::json::Json;
+use crate::util::lru::LruCache;
 
 const ENGINE_KEY: &str = "fitops.engine";
 const MANIFEST_KEY: &str = "fitops.manifest";
 const CACHE_KEY: &str = "fitops.compiled";
+const SCRATCH_KEY: &str = "fitops.scratch";
+
+/// Bound on per-worker warm state (compiled executables / fit scratch
+/// workspaces), LRU-evicted beyond this. Sized to match
+/// `scheduler::policy::DEFAULT_WARM_CAPACITY` so the interchange's
+/// per-`(function, class)`-keyed view of a worker's warmth tracks these
+/// class-keyed caches closely (they can still drift on multi-function
+/// endpoints; only profile-side evictions surface in the `warm_evictions`
+/// metric — handlers have no metrics handle).
+pub const WARM_CAPACITY: usize = crate::scheduler::policy::DEFAULT_WARM_CAPACITY;
 
 struct EngineBox {
     engine: Engine,
@@ -44,26 +53,32 @@ struct EngineBox {
 unsafe impl Send for EngineBox {}
 
 struct CompiledCache {
-    map: HashMap<String, Arc<Compiled>>,
+    lru: LruCache<String, Arc<Compiled>>,
 }
 unsafe impl Send for CompiledCache {}
 
-/// Worker initializer: PJRT engine + manifest + empty executable cache.
+/// Per-worker fit scratch workspaces, one per warm shape class: a worker
+/// warm for a class holds its compiled model *and* its scratch.
+struct ScratchCache {
+    lru: LruCache<String, FitScratch>,
+}
+
+/// Worker initializer: PJRT engine + manifest + bounded executable cache.
 pub fn pjrt_worker_init(artifact_dir: PathBuf) -> WorkerInit {
     Arc::new(move |ctx: &mut WorkerContext| {
         let manifest = Manifest::load(&artifact_dir).map_err(|e| e.to_string())?;
         let engine = Engine::cpu().map_err(|e| e.to_string())?;
         ctx.insert(ENGINE_KEY, EngineBox { engine });
         ctx.insert(MANIFEST_KEY, manifest);
-        ctx.insert(CACHE_KEY, CompiledCache { map: HashMap::new() });
+        ctx.insert(CACHE_KEY, CompiledCache { lru: LruCache::new(WARM_CAPACITY) });
         Ok(())
     })
 }
 
 /// Build (or fetch) the compiled hypotest executable for a shape class.
 fn compiled_for(ctx: &mut WorkerContext, class_name: &str) -> Result<Arc<Compiled>, String> {
-    if let Some(cache) = ctx.get::<CompiledCache>(CACHE_KEY) {
-        if let Some(c) = cache.map.get(class_name) {
+    if let Some(cache) = ctx.get_mut::<CompiledCache>(CACHE_KEY) {
+        if let Some(c) = cache.lru.get(class_name) {
             return Ok(c.clone());
         }
     }
@@ -77,7 +92,7 @@ fn compiled_for(ctx: &mut WorkerContext, class_name: &str) -> Result<Arc<Compile
     let compiled = engine_box.engine.load(&entry, &dir).map_err(|e| e.to_string())?;
     let compiled = Arc::new(compiled);
     let cache = ctx.get_mut::<CompiledCache>(CACHE_KEY).ok_or("worker missing cache")?;
-    cache.map.insert(class_name.to_string(), compiled.clone());
+    cache.lru.put(class_name.to_string(), compiled.clone());
     Ok(compiled)
 }
 
@@ -125,34 +140,34 @@ pub fn fit_patch_handler() -> Handler {
     })
 }
 
-/// The native-Rust fit handler: same statistics via the scalar baseline
-/// fitter (the "traditional single-node implementation" comparator).
+/// The native-Rust fit handler: same statistics via the fused CPU kernel
+/// (`runtime::engine::native_hypotest`). A worker warm for a shape class
+/// reuses that class's [`FitScratch`] across every fit it serves, so the
+/// steady state allocates nothing per NLL evaluation — the native analog
+/// of holding a warm compiled executable.
 pub fn native_fit_handler() -> Handler {
     Arc::new(|payload: &Json, ctx: &mut WorkerContext| {
         let (patch, values, model) = parse_payload(payload, ctx)?;
+        let cache =
+            ctx.get_mut::<ScratchCache>(SCRATCH_KEY).ok_or("worker missing scratch cache")?;
+        let mut scratch = cache.lru.take(model.class.name.as_str()).unwrap_or_default();
         let t0 = Instant::now();
-        let h = NativeFitter::new(&model).hypotest(1.0);
+        let out = native_hypotest(&model, &mut scratch, 1.0);
         let fit_seconds = t0.elapsed().as_secs_f64();
-        Ok(PointResult {
-            patch,
-            values,
-            cls_obs: h.cls_obs,
-            cls_exp: h.cls_exp,
-            qmu: h.qmu,
-            qmu_a: h.qmu_a,
-            mu_hat: h.mu_hat,
-            fit_seconds,
-        }
-        .to_json())
+        let cache =
+            ctx.get_mut::<ScratchCache>(SCRATCH_KEY).ok_or("worker missing scratch cache")?;
+        cache.lru.put(model.class.name.clone(), scratch);
+        Ok(out.to_point(&patch, values, fit_seconds).to_json())
     })
 }
 
-/// Worker init for the native handler (manifest only, for class selection —
-/// no PJRT engine needed).
+/// Worker init for the native handler: manifest (for class selection) plus
+/// the bounded per-class scratch cache — no PJRT engine needed.
 pub fn native_worker_init(artifact_dir: PathBuf) -> WorkerInit {
     Arc::new(move |ctx: &mut WorkerContext| {
         let manifest = Manifest::load(&artifact_dir).map_err(|e| e.to_string())?;
         ctx.insert(MANIFEST_KEY, manifest);
+        ctx.insert(SCRATCH_KEY, ScratchCache { lru: LruCache::new(WARM_CAPACITY) });
         Ok(())
     })
 }

@@ -25,6 +25,7 @@ struct Inner {
     batches: u64,
     batched_tasks: u64,
     dedup_hits: u64,
+    warm_evictions: u64,
     wait: Accumulator,
     service: Accumulator,
     startup: Accumulator,
@@ -54,6 +55,8 @@ pub struct Snapshot {
     pub batched_tasks: u64,
     /// payloads elided as content-hash duplicates
     pub dedup_hits: u64,
+    /// warm-set entries dropped by the bounded per-worker LRU
+    pub warm_evictions: u64,
     pub mean_wait_s: f64,
     pub mean_service_s: f64,
     pub total_service_s: f64,
@@ -118,6 +121,11 @@ impl Metrics {
         self.inner.lock().unwrap().dedup_hits += n;
     }
 
+    /// A worker's bounded warm set evicted its LRU entry.
+    pub fn warm_evicted(&self) {
+        self.inner.lock().unwrap().warm_evictions += 1;
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let g = self.inner.lock().unwrap();
         Snapshot {
@@ -132,6 +140,7 @@ impl Metrics {
             batches: g.batches,
             batched_tasks: g.batched_tasks,
             dedup_hits: g.dedup_hits,
+            warm_evictions: g.warm_evictions,
             mean_wait_s: if g.wait.count() > 0 { g.wait.mean() } else { 0.0 },
             mean_service_s: if g.service.count() > 0 { g.service.mean() } else { 0.0 },
             total_service_s: g.service.mean() * g.service.count() as f64,
@@ -165,6 +174,7 @@ impl Snapshot {
             ("batches", Json::num(self.batches as f64)),
             ("batched_tasks", Json::num(self.batched_tasks as f64)),
             ("dedup_hits", Json::num(self.dedup_hits as f64)),
+            ("warm_evictions", Json::num(self.warm_evictions as f64)),
             ("mean_wait_s", Json::num(self.mean_wait_s)),
             ("mean_service_s", Json::num(self.mean_service_s)),
             ("total_service_s", Json::num(self.total_service_s)),
@@ -208,6 +218,8 @@ mod tests {
         m.batch_submitted(4);
         m.batch_submitted(2);
         m.dedup_hit(3);
+        m.warm_evicted();
+        m.warm_evicted();
         m.block_provisioned();
         m.block_released();
         let s = m.snapshot();
@@ -217,6 +229,7 @@ mod tests {
         assert_eq!(s.batches, 2);
         assert_eq!(s.batched_tasks, 6);
         assert_eq!(s.dedup_hits, 3);
+        assert_eq!(s.warm_evictions, 2);
         assert_eq!(s.blocks_released, 1);
         assert!((s.mean_batch_size - 3.0).abs() < 1e-12);
         // json export carries the scheduler counters

@@ -139,13 +139,14 @@ impl Service {
         // in the task store
         let affinity_key = crate::scheduler::affinity_key_of(function, &payload);
         let priority = payload.get("priority").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        let weight = crate::scheduler::batcher::payload_weight(&payload);
         let mut rec = TaskRecord::new(id, function, endpoint, payload);
         rec.state = TaskState::Pending;
         g.tasks.insert(id, rec);
         drop(g);
         self.metrics.task_submitted();
         let accepted = queue
-            .push_meta(TaskMeta { id, function, affinity_key, priority, enqueued: Instant::now() });
+            .push_meta(TaskMeta { id, function, affinity_key, priority, weight, enqueued: Instant::now() });
         if !accepted {
             // the interchange closed under us (endpoint shutting down):
             // fail the record terminally so no waiter hangs on it

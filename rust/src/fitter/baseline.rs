@@ -1,0 +1,509 @@
+//! The seed scalar fitter, preserved as the perf/numerics comparator.
+//!
+//! This is byte-for-byte the algorithm the repo shipped before the fused
+//! scratch-reuse kernel landed in `fitter::scratch`: fresh `Vec`
+//! allocations for every intermediate on every Newton iteration, full
+//! padded `n_samples x n_bins` sweeps, and separate `expected_jac` passes
+//! inside `nll` and `grad_fisher`. It exists so that
+//!
+//! * `cargo bench --bench kernel` can assert the fused kernel beats the
+//!   seed implementation on full-fit throughput, release over release;
+//! * property tests can check the fused `nll`/gradient against an
+//!   independent, unfused evaluation of the same math.
+//!
+//! Do not optimize this module — its slowness is the point.
+
+use crate::fitter::native::{cholesky_solve, Centers, FitResult, Hypotest};
+use crate::fitter::native::{asymptotic_cls, ALPHA_BOUND, EPS_RATE, FREE_LO, GAMMA_HI, GAMMA_LO};
+use crate::histfactory::dense::DenseModel;
+
+/// The seed fitter: borrows a dense model, allocates as it goes.
+pub struct BaselineFitter<'a> {
+    pub m: &'a DenseModel,
+    pub max_newton: usize,
+}
+
+impl<'a> BaselineFitter<'a> {
+    pub fn new(m: &'a DenseModel) -> Self {
+        BaselineFitter { m, max_newton: m.class.max_newton.max(32) }
+    }
+
+    fn dims(&self) -> (usize, usize, usize, usize, usize) {
+        let c = &self.m.class;
+        (c.n_samples, c.n_alpha, c.n_bins, c.n_free, c.n_params())
+    }
+
+    /// Effective parameters after masking (phi, alpha, gamma).
+    fn effective(&self, theta: &[f64]) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+        let (_, a_, b_, f_, _) = self.dims();
+        let m = self.m;
+        let phi: Vec<f64> = (0..f_)
+            .map(|f| if m.free_mask[f] > 0.0 { theta[f] } else { 1.0 })
+            .collect();
+        let alpha: Vec<f64> = (0..a_).map(|a| theta[f_ + a] * m.alpha_mask[a]).collect();
+        let gamma: Vec<f64> = (0..b_)
+            .map(|b| if m.ctype[b] > 0.0 { theta[f_ + a_ + b] } else { 1.0 })
+            .collect();
+        (phi, alpha, gamma)
+    }
+
+    /// Expected rates nu[B] and Jacobian jac[P*B] (row-major [p][b]).
+    pub fn expected_jac(&self, theta: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        let (s_, a_, b_, f_, p_) = self.dims();
+        let m = self.m;
+        let (phi, alpha, gamma) = self.effective(theta);
+
+        let mut nu = vec![0.0; b_];
+        let mut jac = vec![0.0; p_ * b_];
+
+        for s in 0..s_ {
+            let mut lnmult = 0.0;
+            for a in 0..a_ {
+                let al = alpha[a];
+                lnmult += if al >= 0.0 {
+                    al * m.norm_lnup[s * a_ + a]
+                } else {
+                    -al * m.norm_lndn[s * a_ + a]
+                };
+            }
+            for f in 0..f_ {
+                let e = m.free_map[s * f_ + f];
+                if e != 0.0 {
+                    lnmult += e * phi[f].max(FREE_LO).ln();
+                }
+            }
+            let mult = lnmult.exp();
+
+            for b in 0..b_ {
+                let mut delta = 0.0;
+                for a in 0..a_ {
+                    let al = alpha[a];
+                    if al == 0.0 {
+                        continue;
+                    }
+                    let d = if al >= 0.0 {
+                        m.histo_up[(s * a_ + a) * b_ + b]
+                    } else {
+                        m.histo_dn[(s * a_ + a) * b_ + b]
+                    };
+                    delta += al * d;
+                }
+                let raw = m.nominal[s * b_ + b] + delta;
+                let base = raw.max(EPS_RATE);
+                let unclipped = raw > EPS_RATE;
+
+                let gmask = m.gamma_mask[s * b_ + b];
+                let gam = 1.0 + gmask * (gamma[b] - 1.0);
+                let nu_sb = base * mult * gam;
+                nu[b] += nu_sb;
+
+                for f in 0..f_ {
+                    let e = m.free_map[s * f_ + f];
+                    if e != 0.0 && m.free_mask[f] > 0.0 {
+                        jac[f * b_ + b] += nu_sb * e / phi[f].max(FREE_LO);
+                    }
+                }
+                for a in 0..a_ {
+                    if m.alpha_mask[a] == 0.0 {
+                        continue;
+                    }
+                    let al = alpha[a];
+                    let dside = if al >= 0.0 {
+                        m.histo_up[(s * a_ + a) * b_ + b]
+                    } else {
+                        m.histo_dn[(s * a_ + a) * b_ + b]
+                    };
+                    let dlnf = if al >= 0.0 {
+                        m.norm_lnup[s * a_ + a]
+                    } else {
+                        -m.norm_lndn[s * a_ + a]
+                    };
+                    let add = if unclipped { dside * mult * gam } else { 0.0 };
+                    jac[(f_ + a) * b_ + b] += add + nu_sb * dlnf;
+                }
+                if m.ctype[b] > 0.0 && gmask > 0.0 {
+                    jac[(f_ + a_ + b) * b_ + b] += nu_sb * gmask / gam;
+                }
+            }
+        }
+        (nu, jac)
+    }
+
+    /// Full NLL for `data` at `theta` with constraint `centers`.
+    pub fn nll(&self, theta: &[f64], data: &[f64], centers: &Centers) -> f64 {
+        let (_, a_, b_, f_, _) = self.dims();
+        let m = self.m;
+        let (nu, _) = self.expected_jac(theta);
+        let (_, alpha, gamma) = self.effective(theta);
+
+        let mut out = 0.0;
+        for b in 0..b_ {
+            if m.bin_mask[b] == 0.0 {
+                continue;
+            }
+            let v = nu[b].max(EPS_RATE);
+            out += v - data[b] * v.ln();
+        }
+        for a in 0..a_ {
+            out += 0.5 * m.alpha_mask[a] * (alpha[a] - centers.alpha[a]).powi(2);
+        }
+        for b in 0..b_ {
+            match m.ctype[b] as i64 {
+                1 => out += 0.5 * m.cscale[b] * (gamma[b] - centers.gamma[b]).powi(2),
+                2 => {
+                    let taug = (m.cscale[b] * gamma[b]).max(1e-300);
+                    let aux = m.cscale[b] * centers.gamma[b];
+                    out += taug - aux * taug.ln();
+                }
+                _ => {}
+            }
+        }
+        let _ = f_;
+        out
+    }
+
+    /// Gradient + Fisher matrix with fixed-parameter pinning.
+    pub fn grad_fisher(
+        &self,
+        theta: &[f64],
+        data: &[f64],
+        centers: &Centers,
+        fixed: &[bool],
+    ) -> (Vec<f64>, Vec<f64>) {
+        let (_, a_, b_, f_, p_) = self.dims();
+        let m = self.m;
+        let (nu, jac) = self.expected_jac(theta);
+        let (_, alpha, gamma) = self.effective(theta);
+
+        let mut grad = vec![0.0; p_];
+        let mut fisher = vec![0.0; p_ * p_];
+
+        let mut resid = vec![0.0; b_];
+        let mut w = vec![0.0; b_];
+        for b in 0..b_ {
+            if m.bin_mask[b] == 0.0 {
+                continue;
+            }
+            let v = nu[b].max(EPS_RATE);
+            resid[b] = 1.0 - data[b] / v;
+            w[b] = 1.0 / v;
+        }
+
+        for p in 0..p_ {
+            let rowp = &jac[p * b_..(p + 1) * b_];
+            let mut g = 0.0;
+            for b in 0..b_ {
+                g += rowp[b] * resid[b];
+            }
+            grad[p] = g;
+            for q in p..p_ {
+                let rowq = &jac[q * b_..(q + 1) * b_];
+                let mut h = 0.0;
+                for b in 0..b_ {
+                    h += rowp[b] * w[b] * rowq[b];
+                }
+                fisher[p * p_ + q] = h;
+                fisher[q * p_ + p] = h;
+            }
+        }
+
+        for a in 0..a_ {
+            grad[f_ + a] += m.alpha_mask[a] * (alpha[a] - centers.alpha[a]);
+            fisher[(f_ + a) * p_ + f_ + a] += m.alpha_mask[a];
+        }
+        for b in 0..b_ {
+            let i = f_ + a_ + b;
+            match m.ctype[b] as i64 {
+                1 => {
+                    grad[i] += m.cscale[b] * (gamma[b] - centers.gamma[b]);
+                    fisher[i * p_ + i] += m.cscale[b];
+                }
+                2 => {
+                    let aux = m.cscale[b] * centers.gamma[b];
+                    let gs = gamma[b].max(GAMMA_LO);
+                    grad[i] += m.cscale[b] - aux / gs;
+                    fisher[i * p_ + i] += aux / (gs * gs);
+                }
+                _ => {}
+            }
+        }
+
+        for p in 0..p_ {
+            if fixed[p] {
+                grad[p] = 0.0;
+                for q in 0..p_ {
+                    fisher[p * p_ + q] = 0.0;
+                    fisher[q * p_ + p] = 0.0;
+                }
+                fisher[p * p_ + p] = 1.0;
+            }
+        }
+        (grad, fisher)
+    }
+
+    /// Parameter box (lo, hi).
+    pub fn bounds(&self) -> (Vec<f64>, Vec<f64>) {
+        let (_, a_, b_, f_, _) = self.dims();
+        let mut lo = Vec::with_capacity(f_ + a_ + b_);
+        let mut hi = Vec::with_capacity(f_ + a_ + b_);
+        lo.extend(std::iter::repeat(FREE_LO).take(f_));
+        hi.extend(std::iter::repeat(self.m.class.mu_max).take(f_));
+        lo.extend(std::iter::repeat(-ALPHA_BOUND).take(a_));
+        hi.extend(std::iter::repeat(ALPHA_BOUND).take(a_));
+        lo.extend(std::iter::repeat(GAMMA_LO).take(b_));
+        hi.extend(std::iter::repeat(GAMMA_HI).take(b_));
+        (lo, hi)
+    }
+
+    pub fn init_theta(&self, mu_init: f64) -> Vec<f64> {
+        let (_, a_, b_, f_, _) = self.dims();
+        let mut th = Vec::with_capacity(f_ + a_ + b_);
+        th.extend(std::iter::repeat(1.0).take(f_));
+        th.extend(std::iter::repeat(0.0).take(a_));
+        th.extend(std::iter::repeat(1.0).take(b_));
+        th[0] = mu_init;
+        th
+    }
+
+    /// Structurally fixed params (+ optionally the POI).
+    pub fn fixed_mask(&self, fix_poi: bool) -> Vec<bool> {
+        let (_, a_, b_, f_, _) = self.dims();
+        let m = self.m;
+        let mut fixed = Vec::with_capacity(f_ + a_ + b_);
+        for f in 0..f_ {
+            fixed.push(m.free_mask[f] == 0.0);
+        }
+        for a in 0..a_ {
+            fixed.push(m.alpha_mask[a] == 0.0);
+        }
+        for b in 0..b_ {
+            fixed.push(m.ctype[b] == 0.0);
+        }
+        if fix_poi {
+            fixed[0] = true;
+        }
+        fixed
+    }
+
+    /// Damped Fisher scoring (same schedule as the AOT graph).
+    pub fn minimize(
+        &self,
+        data: &[f64],
+        centers: &Centers,
+        fixed: &[bool],
+        theta0: Vec<f64>,
+    ) -> FitResult {
+        let p_ = self.dims().4;
+        let (lo, hi) = self.bounds();
+        let mut theta = theta0;
+        let mut nll = self.nll(&theta, data, centers);
+        let mut lam = 1e-3;
+        let mut accepted = 0usize;
+        let mut stall = 0usize;
+
+        for _ in 0..self.max_newton {
+            if stall >= 5 {
+                break;
+            }
+            let (grad, mut h) = self.grad_fisher(&theta, data, centers, fixed);
+            for p in 0..p_ {
+                let d = h[p * p_ + p].max(1e-8);
+                h[p * p_ + p] += lam * d;
+            }
+            let step = match cholesky_solve(&h, &grad, p_) {
+                Some(s) => s,
+                None => {
+                    lam = (lam * 8.0).min(1e10);
+                    stall += 1;
+                    continue;
+                }
+            };
+            let mut theta_try = theta.clone();
+            for p in 0..p_ {
+                theta_try[p] = (theta[p] - step[p]).clamp(lo[p], hi[p]);
+            }
+            let nll_try = self.nll(&theta_try, data, centers);
+            if nll_try <= nll - 1e-12 {
+                stall = if nll - nll_try > 1e-9 { 0 } else { stall + 1 };
+                theta = theta_try;
+                nll = nll_try;
+                lam = (lam / 3.0).max(1e-10);
+                accepted += 1;
+            } else {
+                lam = (lam * 8.0).min(1e10);
+                stall += 1;
+            }
+        }
+        let (grad, _) = self.grad_fisher(&theta, data, centers, fixed);
+        let gn = grad
+            .iter()
+            .enumerate()
+            .map(|(p, &g)| {
+                let at_lo = theta[p] <= lo[p] + 1e-12 && g > 0.0;
+                let at_hi = theta[p] >= hi[p] - 1e-12 && g < 0.0;
+                if at_lo || at_hi {
+                    0.0
+                } else {
+                    g * g
+                }
+            })
+            .sum::<f64>()
+            .sqrt();
+        FitResult { theta, nll, accepted_steps: accepted, grad_norm: gn }
+    }
+
+    /// Fit with the POI fixed at `mu`.
+    pub fn fit_mu_fixed(&self, data: &[f64], centers: &Centers, mu: f64) -> FitResult {
+        let fixed = self.fixed_mask(true);
+        self.minimize(data, centers, &fixed, self.init_theta(mu))
+    }
+
+    /// Free fit (POI bounded >= 0).
+    pub fn fit_free(&self, data: &[f64], centers: &Centers) -> FitResult {
+        let fixed = self.fixed_mask(false);
+        self.minimize(data, centers, &fixed, self.init_theta(1.0))
+    }
+
+    /// Full asymptotic qmu-tilde hypotest (seed 4-fit recipe).
+    pub fn hypotest(&self, mu_test: f64) -> Hypotest {
+        let m = self.m;
+        let data = m.data.clone();
+        let nominal_centers = Centers::nominal(m);
+
+        let free = self.fit_free(&data, &nominal_centers);
+        let fixed = self.fit_mu_fixed(&data, &nominal_centers, mu_test);
+        let bkg = self.fit_mu_fixed(&data, &nominal_centers, FREE_LO);
+
+        let (nu_bkg, _) = self.expected_jac(&bkg.theta);
+        let (_, alpha_bkg, gamma_bkg) = self.effective(&bkg.theta);
+        let asimov_centers = Centers { alpha: alpha_bkg, gamma: gamma_bkg };
+
+        let afix = self.fit_mu_fixed(&nu_bkg, &asimov_centers, mu_test);
+        let a_free_nll = self.nll(&bkg.theta, &nu_bkg, &asimov_centers);
+
+        let mu_hat = free.theta[0];
+        let qmu = if mu_hat <= mu_test {
+            (2.0 * (fixed.nll - free.nll)).max(0.0)
+        } else {
+            0.0
+        };
+        let qmu_a = (2.0 * (afix.nll - a_free_nll)).max(0.0);
+
+        let (cls_obs, cls_exp) = asymptotic_cls(qmu, qmu_a);
+        Hypotest {
+            cls_obs,
+            cls_exp,
+            qmu,
+            qmu_a,
+            mu_hat,
+            nll_free: free.nll,
+            nll_fixed: fixed.nll,
+            diag: [
+                free.accepted_steps as f64,
+                free.grad_norm,
+                fixed.accepted_steps as f64,
+                fixed.grad_norm,
+                bkg.accepted_steps as f64,
+                bkg.grad_norm,
+                afix.accepted_steps as f64,
+                afix.grad_norm,
+            ],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fitter::native::NativeFitter;
+    use crate::histfactory::dense::{compile, ShapeClass};
+    use crate::histfactory::spec::Workspace;
+
+    fn class() -> ShapeClass {
+        ShapeClass {
+            name: "quickstart".into(),
+            n_bins: 16,
+            n_samples: 6,
+            n_alpha: 6,
+            n_free: 2,
+            bin_block: 16,
+            mu_max: 10.0,
+            max_newton: 48,
+            cg_iters: 24,
+        }
+    }
+
+    fn ws() -> Workspace {
+        Workspace::from_str(
+            r#"{
+            "channels": [{"name": "SR", "samples": [
+                {"name": "signal", "data": [4.0, 6.0, 3.0],
+                 "modifiers": [{"name": "mu", "type": "normfactor", "data": null}]},
+                {"name": "bkg", "data": [60.0, 50.0, 40.0],
+                 "modifiers": [
+                    {"name": "bn", "type": "normsys", "data": {"hi": 1.08, "lo": 0.93}},
+                    {"name": "st", "type": "staterror", "data": [2.0, 1.8, 1.5]}
+                 ]}
+            ]}],
+            "observations": [{"name": "SR", "data": [68.0, 62.0, 46.0]}],
+            "measurements": [{"name": "m", "config": {"poi": "mu", "parameters": []}}],
+            "version": "1.0.0"
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn fused_kernel_matches_seed_nll_and_gradient() {
+        let m = compile(&ws(), &class()).unwrap();
+        let seed = BaselineFitter::new(&m);
+        let fused = NativeFitter::new(&m);
+        let centers = Centers::nominal(&m);
+        let mut theta = seed.init_theta(1.4);
+        theta[2] = 0.3; // active alpha
+        theta[m.class.n_free + m.class.n_alpha] = 1.04; // gamma bin 0
+
+        // the fused kernel skips padded rows, which in the seed each added
+        // a clipped EPS_RATE to every bin's expected rate — tolerance
+        // covers that deliberate difference
+        let n0 = seed.nll(&theta, &m.data, &centers);
+        let n1 = fused.nll(&theta, &m.data, &centers);
+        assert!((n0 - n1).abs() < 1e-6 * (1.0 + n0.abs()), "{n0} vs {n1}");
+
+        let fixed = seed.fixed_mask(false);
+        let (g0, h0) = seed.grad_fisher(&theta, &m.data, &centers, &fixed);
+        let (g1, h1) = fused.grad_fisher(&theta, &m.data, &centers, &fixed);
+        for p in 0..m.class.n_params() {
+            assert!(
+                (g0[p] - g1[p]).abs() < 1e-6 * (1.0 + g0[p].abs()),
+                "grad[{p}]: {} vs {}",
+                g0[p],
+                g1[p]
+            );
+        }
+        for (i, (&a, &b)) in h0.iter().zip(h1.iter()).enumerate() {
+            assert!((a - b).abs() < 1e-6 * (1.0 + a.abs()), "fisher[{i}]: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn fused_fit_matches_seed_fit() {
+        let m = compile(&ws(), &class()).unwrap();
+        let seed = BaselineFitter::new(&m);
+        let fused = NativeFitter::new(&m);
+        let centers = Centers::nominal(&m);
+        let r0 = seed.fit_free(&m.data, &centers);
+        let r1 = fused.fit_free(&m.data, &centers);
+        assert!((r0.nll - r1.nll).abs() < 1e-6 * (1.0 + r0.nll.abs()));
+        assert!((r0.theta[0] - r1.theta[0]).abs() < 1e-4, "{} vs {}", r0.theta[0], r1.theta[0]);
+    }
+
+    #[test]
+    fn fused_hypotest_matches_seed_hypotest() {
+        let m = compile(&ws(), &class()).unwrap();
+        let h0 = BaselineFitter::new(&m).hypotest(1.0);
+        let h1 = NativeFitter::new(&m).hypotest(1.0);
+        assert!((h0.cls_obs - h1.cls_obs).abs() < 1e-4, "{} vs {}", h0.cls_obs, h1.cls_obs);
+        assert!((h0.qmu_a - h1.qmu_a).abs() < 1e-4 * (1.0 + h0.qmu_a));
+    }
+}

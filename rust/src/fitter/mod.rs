@@ -1,8 +1,13 @@
-//! Fitters over the dense model: the native-Rust scalar baseline (also the
-//! numerics cross-check) and the PJRT-artifact fitter (see `runtime`).
+//! Fitters over the dense model: the fused allocation-free native kernel
+//! (also the numerics cross-check of the PJRT path), the preserved seed
+//! implementation it is benchmarked against, and toy-based hypotests.
 
+pub mod baseline;
 pub mod native;
+pub mod scratch;
 pub mod toys;
 
+pub use baseline::BaselineFitter;
 pub use native::{Centers, FitResult, Hypotest, NativeFitter};
+pub use scratch::FitScratch;
 pub use toys::{hypotest_toys, ToyResult};

@@ -1,16 +1,25 @@
-//! Native-Rust reference fitter over the dense model.
+//! Native-Rust fitter over the dense model, running on the fused
+//! allocation-free kernel in [`crate::fitter::scratch`].
 //!
 //! Scalar f64 implementation of exactly the math in
 //! ``python/compile/kernels/ref.py`` + ``model.py``: expected rates with
 //! analytic Jacobian, Poisson+constraint NLL, damped Fisher scoring with a
 //! Cholesky solve, and the qmu-tilde asymptotic hypotest.
 //!
-//! Two roles (DESIGN.md K1/S2):
-//! * the **"traditional single-node" baseline** the paper contrasts pyhf's
-//!   tensorized backends against;
-//! * an independent numerics **cross-check** of the AOT/PJRT path (both must
-//!   find the same optima for the same tensors).
+//! Three roles (DESIGN.md K1/S2):
+//! * the production **CPU hot path** for fit serving: a [`FitScratch`]
+//!   workspace is allocated once per `(shape class, worker)` and reused
+//!   across NLL evaluations, Newton iterations, toys and scan points
+//!   (zero heap allocations per NLL evaluation after warmup);
+//! * an independent numerics **cross-check** of the AOT/PJRT path (both
+//!   must find the same optima for the same tensors);
+//! * the fused counterpart of the preserved seed implementation in
+//!   [`crate::fitter::baseline`], which benches and property tests compare
+//!   against.
 
+use std::cell::RefCell;
+
+use crate::fitter::scratch::{self, FitScratch};
 use crate::histfactory::dense::DenseModel;
 
 pub const EPS_RATE: f64 = 1e-9;
@@ -52,6 +61,9 @@ pub struct Hypotest {
     pub mu_hat: f64,
     pub nll_free: f64,
     pub nll_fixed: f64,
+    /// (accepted steps, |grad|) per fit — free, fixed, bkg, asimov-fixed —
+    /// mirroring the AOT artifact's diagnostic output
+    pub diag: [f64; 8],
 }
 
 /// Abramowitz & Stegun 7.1.26 erf — identical polynomial to the one baked
@@ -68,15 +80,52 @@ pub fn norm_cdf(x: f64) -> f64 {
     0.5 * (1.0 + erf_approx(x / std::f64::consts::SQRT_2))
 }
 
-/// The fitter: borrows a dense model and the observed data vector.
+/// The fitter: borrows a dense model and the observed data vector, and
+/// owns a reusable [`FitScratch`] workspace (interior-mutable so the
+/// read-only fitting API stays `&self`).
 pub struct NativeFitter<'a> {
     pub m: &'a DenseModel,
     pub max_newton: usize,
+    scratch: RefCell<FitScratch>,
+    fixed_free: Vec<bool>,
+    fixed_poi: Vec<bool>,
 }
 
 impl<'a> NativeFitter<'a> {
     pub fn new(m: &'a DenseModel) -> Self {
-        NativeFitter { m, max_newton: m.class.max_newton.max(32) }
+        NativeFitter::with_scratch(m, FitScratch::default())
+    }
+
+    /// Build a fitter around an existing scratch (a warm worker hands its
+    /// per-class workspace back in; reuse is allocation-free when the
+    /// scratch already fits the model's class). Reclaim it afterwards with
+    /// [`NativeFitter::into_scratch`].
+    pub fn with_scratch(m: &'a DenseModel, mut scratch: FitScratch) -> Self {
+        scratch.ensure(&m.class);
+        let mut fixed_free = Vec::with_capacity(m.class.n_params());
+        for f in 0..m.class.n_free {
+            fixed_free.push(m.free_mask[f] == 0.0);
+        }
+        for a in 0..m.class.n_alpha {
+            fixed_free.push(m.alpha_mask[a] == 0.0);
+        }
+        for b in 0..m.class.n_bins {
+            fixed_free.push(m.ctype[b] == 0.0);
+        }
+        let mut fixed_poi = fixed_free.clone();
+        fixed_poi[0] = true;
+        NativeFitter {
+            m,
+            max_newton: m.class.max_newton.max(32),
+            scratch: RefCell::new(scratch),
+            fixed_free,
+            fixed_poi,
+        }
+    }
+
+    /// Hand the scratch back (for a worker's warm-state cache).
+    pub fn into_scratch(self) -> FitScratch {
+        self.scratch.into_inner()
     }
 
     fn dims(&self) -> (usize, usize, usize, usize, usize) {
@@ -84,142 +133,47 @@ impl<'a> NativeFitter<'a> {
         (c.n_samples, c.n_alpha, c.n_bins, c.n_free, c.n_params())
     }
 
-    /// Effective parameters after masking (phi, alpha, gamma).
-    fn effective(&self, theta: &[f64]) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
-        let (_, a_, b_, f_, _) = self.dims();
-        let m = self.m;
-        let phi: Vec<f64> = (0..f_)
-            .map(|f| if m.free_mask[f] > 0.0 { theta[f] } else { 1.0 })
-            .collect();
-        let alpha: Vec<f64> = (0..a_).map(|a| theta[f_ + a] * m.alpha_mask[a]).collect();
-        let gamma: Vec<f64> = (0..b_)
-            .map(|b| if m.ctype[b] > 0.0 { theta[f_ + a_ + b] } else { 1.0 })
-            .collect();
-        (phi, alpha, gamma)
-    }
-
     /// Expected rates nu[B] and Jacobian jac[P*B] (row-major [p][b]).
+    ///
+    /// Compat wrapper over the fused kernel: the kernel keeps the dense
+    /// (free+alpha) rows and the diagonal gamma rows separately and only
+    /// touches the active region, so the padded full matrix is
+    /// materialized here.
     pub fn expected_jac(&self, theta: &[f64]) -> (Vec<f64>, Vec<f64>) {
-        let (s_, a_, b_, f_, p_) = self.dims();
+        let mut s = self.scratch.borrow_mut();
+        scratch::eval_expected(self.m, &mut s, theta, true);
+        let (_, a_, b_, f_, p_) = self.dims();
         let m = self.m;
-        let (phi, alpha, gamma) = self.effective(theta);
-
-        let mut nu = vec![0.0; b_];
+        // only the active region of the scratch is maintained by the
+        // kernel; everything else stays zero in the materialized matrix
+        let ba = m.n_active_bins;
         let mut jac = vec![0.0; p_ * b_];
-
-        // per-row multiplicative norm factor and its phi-derivative pieces
-        for s in 0..s_ {
-            let mut lnmult = 0.0;
-            for a in 0..a_ {
-                let al = alpha[a];
-                lnmult += if al >= 0.0 {
-                    al * m.norm_lnup[s * a_ + a]
-                } else {
-                    -al * m.norm_lndn[s * a_ + a]
-                };
-            }
-            for f in 0..f_ {
-                let e = m.free_map[s * f_ + f];
-                if e != 0.0 {
-                    lnmult += e * phi[f].max(FREE_LO).ln();
-                }
-            }
-            let mult = lnmult.exp();
-
-            for b in 0..b_ {
-                // additive interpolation
-                let mut delta = 0.0;
-                for a in 0..a_ {
-                    let al = alpha[a];
-                    if al == 0.0 {
-                        continue;
-                    }
-                    let d = if al >= 0.0 {
-                        m.histo_up[(s * a_ + a) * b_ + b]
-                    } else {
-                        m.histo_dn[(s * a_ + a) * b_ + b]
-                    };
-                    delta += al * d;
-                }
-                let raw = m.nominal[s * b_ + b] + delta;
-                let base = raw.max(EPS_RATE);
-                let unclipped = raw > EPS_RATE;
-
-                let gmask = m.gamma_mask[s * b_ + b];
-                let gam = 1.0 + gmask * (gamma[b] - 1.0);
-                let nu_sb = base * mult * gam;
-                nu[b] += nu_sb;
-
-                // free rows
-                for f in 0..f_ {
-                    let e = m.free_map[s * f_ + f];
-                    if e != 0.0 && m.free_mask[f] > 0.0 {
-                        jac[f * b_ + b] += nu_sb * e / phi[f].max(FREE_LO);
-                    }
-                }
-                // alpha rows
-                for a in 0..a_ {
-                    if m.alpha_mask[a] == 0.0 {
-                        continue;
-                    }
-                    let al = alpha[a];
-                    let dside = if al >= 0.0 {
-                        m.histo_up[(s * a_ + a) * b_ + b]
-                    } else {
-                        m.histo_dn[(s * a_ + a) * b_ + b]
-                    };
-                    let dlnf = if al >= 0.0 {
-                        m.norm_lnup[s * a_ + a]
-                    } else {
-                        -m.norm_lndn[s * a_ + a]
-                    };
-                    let add = if unclipped { dside * mult * gam } else { 0.0 };
-                    jac[(f_ + a) * b_ + b] += add + nu_sb * dlnf;
-                }
-                // gamma row (diagonal in b)
-                if m.ctype[b] > 0.0 && gmask > 0.0 {
-                    jac[(f_ + a_ + b) * b_ + b] += nu_sb * gmask / gam;
-                }
-            }
+        for f in 0..m.n_active_free {
+            jac[f * b_..f * b_ + ba].copy_from_slice(&s.jac[f * b_..f * b_ + ba]);
         }
-        (nu, jac)
+        for a in 0..m.n_active_alpha {
+            let r = (f_ + a) * b_;
+            jac[r..r + ba].copy_from_slice(&s.jac[r..r + ba]);
+        }
+        for b in 0..m.n_active_bins {
+            jac[(f_ + a_ + b) * b_ + b] = s.jac_gamma[b];
+        }
+        (s.nu.clone(), jac)
     }
 
-    /// Full NLL for `data` at `theta` with constraint `centers`.
+    /// Full NLL for `data` at `theta` with constraint `centers`
+    /// (rates-only fused evaluation; no Jacobian work, no allocation).
     pub fn nll(&self, theta: &[f64], data: &[f64], centers: &Centers) -> f64 {
-        let (_, a_, b_, f_, _) = self.dims();
-        let m = self.m;
-        let (nu, _) = self.expected_jac(theta);
-        let (_, alpha, gamma) = self.effective(theta);
-
-        let mut out = 0.0;
-        for b in 0..b_ {
-            if m.bin_mask[b] == 0.0 {
-                continue;
-            }
-            let v = nu[b].max(EPS_RATE);
-            out += v - data[b] * v.ln();
-        }
-        for a in 0..a_ {
-            out += 0.5 * m.alpha_mask[a] * (alpha[a] - centers.alpha[a]).powi(2);
-        }
-        for b in 0..b_ {
-            match m.ctype[b] as i64 {
-                1 => out += 0.5 * m.cscale[b] * (gamma[b] - centers.gamma[b]).powi(2),
-                2 => {
-                    let taug = (m.cscale[b] * gamma[b]).max(1e-300);
-                    let aux = m.cscale[b] * centers.gamma[b];
-                    out += taug - aux * taug.ln();
-                }
-                _ => {}
-            }
-        }
-        let _ = f_;
-        out
+        let mut s = self.scratch.borrow_mut();
+        scratch::nll(self.m, &mut s, theta, data, centers)
     }
 
-    /// Gradient + expected-information (Fisher) matrix with fixed-parameter
-    /// pinning (zero grad row, identity Hessian row).
+    /// Gradient + expected-information (Fisher) matrix with
+    /// fixed-parameter pinning (zero grad row, identity Hessian row).
+    ///
+    /// Compat wrapper: the hot path solves the reduced active-set system
+    /// directly; this materializes the full padded matrices for tests and
+    /// external callers.
     pub fn grad_fisher(
         &self,
         theta: &[f64],
@@ -227,91 +181,19 @@ impl<'a> NativeFitter<'a> {
         centers: &Centers,
         fixed: &[bool],
     ) -> (Vec<f64>, Vec<f64>) {
-        let (_, a_, b_, f_, p_) = self.dims();
-        let m = self.m;
-        let (nu, jac) = self.expected_jac(theta);
-        let (_, alpha, gamma) = self.effective(theta);
-
-        let mut grad = vec![0.0; p_];
-        let mut fisher = vec![0.0; p_ * p_];
-
-        let mut resid = vec![0.0; b_];
-        let mut w = vec![0.0; b_];
-        for b in 0..b_ {
-            if m.bin_mask[b] == 0.0 {
-                continue;
-            }
-            let v = nu[b].max(EPS_RATE);
-            resid[b] = 1.0 - data[b] / v;
-            w[b] = 1.0 / v;
-        }
-
-        for p in 0..p_ {
-            let rowp = &jac[p * b_..(p + 1) * b_];
-            let mut g = 0.0;
-            for b in 0..b_ {
-                g += rowp[b] * resid[b];
-            }
-            grad[p] = g;
-            for q in p..p_ {
-                let rowq = &jac[q * b_..(q + 1) * b_];
-                let mut h = 0.0;
-                for b in 0..b_ {
-                    h += rowp[b] * w[b] * rowq[b];
-                }
-                fisher[p * p_ + q] = h;
-                fisher[q * p_ + p] = h;
-            }
-        }
-
-        // constraints
-        for a in 0..a_ {
-            grad[f_ + a] += m.alpha_mask[a] * (alpha[a] - centers.alpha[a]);
-            fisher[(f_ + a) * p_ + f_ + a] += m.alpha_mask[a];
-        }
-        for b in 0..b_ {
-            let i = f_ + a_ + b;
-            match m.ctype[b] as i64 {
-                1 => {
-                    grad[i] += m.cscale[b] * (gamma[b] - centers.gamma[b]);
-                    fisher[i * p_ + i] += m.cscale[b];
-                }
-                2 => {
-                    let aux = m.cscale[b] * centers.gamma[b];
-                    let gs = gamma[b].max(GAMMA_LO);
-                    grad[i] += m.cscale[b] - aux / gs;
-                    fisher[i * p_ + i] += aux / (gs * gs);
-                }
-                _ => {}
-            }
-        }
-
-        // pin fixed parameters
-        for p in 0..p_ {
-            if fixed[p] {
-                grad[p] = 0.0;
-                for q in 0..p_ {
-                    fisher[p * p_ + q] = 0.0;
-                    fisher[q * p_ + p] = 0.0;
-                }
-                fisher[p * p_ + p] = 1.0;
-            }
-        }
-        (grad, fisher)
+        let mut s = self.scratch.borrow_mut();
+        scratch::eval_expected(self.m, &mut s, theta, true);
+        scratch::build_active(self.m, &mut s, fixed);
+        scratch::grad_fisher_reduced(self.m, &mut s, data, centers);
+        let p_ = self.m.class.n_params();
+        let fisher = s.full_fisher(p_, fixed);
+        (s.grad.to_vec(), fisher)
     }
 
     /// Parameter box (lo, hi).
     pub fn bounds(&self) -> (Vec<f64>, Vec<f64>) {
-        let (_, a_, b_, f_, _) = self.dims();
-        let mut lo = Vec::with_capacity(f_ + a_ + b_);
-        let mut hi = Vec::with_capacity(f_ + a_ + b_);
-        lo.extend(std::iter::repeat(FREE_LO).take(f_));
-        hi.extend(std::iter::repeat(self.m.class.mu_max).take(f_));
-        lo.extend(std::iter::repeat(-ALPHA_BOUND).take(a_));
-        hi.extend(std::iter::repeat(ALPHA_BOUND).take(a_));
-        lo.extend(std::iter::repeat(GAMMA_LO).take(b_));
-        hi.extend(std::iter::repeat(GAMMA_HI).take(b_));
-        (lo, hi)
+        let s = self.scratch.borrow();
+        (s.lo.clone(), s.hi.clone())
     }
 
     pub fn init_theta(&self, mu_init: f64) -> Vec<f64> {
@@ -326,22 +208,11 @@ impl<'a> NativeFitter<'a> {
 
     /// Structurally fixed params (+ optionally the POI).
     pub fn fixed_mask(&self, fix_poi: bool) -> Vec<bool> {
-        let (_, a_, b_, f_, _) = self.dims();
-        let m = self.m;
-        let mut fixed = Vec::with_capacity(f_ + a_ + b_);
-        for f in 0..f_ {
-            fixed.push(m.free_mask[f] == 0.0);
-        }
-        for a in 0..a_ {
-            fixed.push(m.alpha_mask[a] == 0.0);
-        }
-        for b in 0..b_ {
-            fixed.push(m.ctype[b] == 0.0);
-        }
         if fix_poi {
-            fixed[0] = true;
+            self.fixed_poi.clone()
+        } else {
+            self.fixed_free.clone()
         }
-        fixed
     }
 
     /// Damped Fisher scoring (same schedule as the AOT graph).
@@ -352,10 +223,26 @@ impl<'a> NativeFitter<'a> {
         fixed: &[bool],
         theta0: Vec<f64>,
     ) -> FitResult {
+        let mut s = self.scratch.borrow_mut();
+        self.minimize_in(&mut s, data, centers, fixed, theta0)
+    }
+
+    /// The allocation-free fit loop: every intermediate lives in `s`. The
+    /// only allocation per fit is the `theta0` the caller passes in, which
+    /// becomes `FitResult::theta`.
+    fn minimize_in(
+        &self,
+        s: &mut FitScratch,
+        data: &[f64],
+        centers: &Centers,
+        fixed: &[bool],
+        theta0: Vec<f64>,
+    ) -> FitResult {
         let p_ = self.dims().4;
-        let (lo, hi) = self.bounds();
+        debug_assert_eq!(theta0.len(), p_);
+        scratch::build_active(self.m, s, fixed);
         let mut theta = theta0;
-        let mut nll = self.nll(&theta, data, centers);
+        let mut nll = scratch::nll(self.m, s, &theta, data, centers);
         let mut lam = 1e-3;
         let mut accepted = 0usize;
         let mut stall = 0usize;
@@ -364,27 +251,24 @@ impl<'a> NativeFitter<'a> {
             if stall >= 5 {
                 break; // same early-exit policy as the AOT graph
             }
-            let (grad, mut h) = self.grad_fisher(&theta, data, centers, fixed);
-            for p in 0..p_ {
-                let d = h[p * p_ + p].max(1e-8);
-                h[p * p_ + p] += lam * d;
+            // one fused pass per iteration: rates, Jacobian, gradient and
+            // Fisher from a single sweep (the seed evaluated the expected
+            // rates twice per iteration)
+            scratch::eval_expected(self.m, s, &theta, true);
+            scratch::grad_fisher_reduced(self.m, s, data, centers);
+            if !scratch::solve_step(s, p_, lam) {
+                lam = (lam * 8.0).min(1e10);
+                stall += 1;
+                continue;
             }
-            let step = match cholesky_solve(&h, &grad, p_) {
-                Some(s) => s,
-                None => {
-                    lam = (lam * 8.0).min(1e10);
-                    stall += 1;
-                    continue;
-                }
-            };
-            let mut theta_try = theta.clone();
+            let mut theta_try = std::mem::take(&mut s.theta_try);
             for p in 0..p_ {
-                theta_try[p] = (theta[p] - step[p]).clamp(lo[p], hi[p]);
+                theta_try[p] = (theta[p] - s.step[p]).clamp(s.lo[p], s.hi[p]);
             }
-            let nll_try = self.nll(&theta_try, data, centers);
+            let nll_try = scratch::nll(self.m, s, &theta_try, data, centers);
             if nll_try <= nll - 1e-12 {
                 stall = if nll - nll_try > 1e-9 { 0 } else { stall + 1 };
-                theta = theta_try;
+                std::mem::swap(&mut theta, &mut theta_try);
                 nll = nll_try;
                 lam = (lam / 3.0).max(1e-10);
                 accepted += 1;
@@ -392,56 +276,65 @@ impl<'a> NativeFitter<'a> {
                 lam = (lam * 8.0).min(1e10);
                 stall += 1;
             }
+            s.theta_try = theta_try;
         }
-        let (grad, _) = self.grad_fisher(&theta, data, centers, fixed);
+        scratch::eval_expected(self.m, s, &theta, true);
+        scratch::grad_fisher_reduced(self.m, s, data, centers);
         // projected gradient norm: components pushing out of the feasible
         // box at an active bound do not count against convergence
-        let gn = grad
-            .iter()
-            .enumerate()
-            .map(|(p, &g)| {
-                let at_lo = theta[p] <= lo[p] + 1e-12 && g > 0.0;
-                let at_hi = theta[p] >= hi[p] - 1e-12 && g < 0.0;
-                if at_lo || at_hi {
-                    0.0
-                } else {
-                    g * g
-                }
-            })
-            .sum::<f64>()
-            .sqrt();
-        FitResult { theta, nll, accepted_steps: accepted, grad_norm: gn }
+        let mut gn2 = 0.0;
+        for p in 0..p_ {
+            let g = s.grad[p];
+            let at_lo = theta[p] <= s.lo[p] + 1e-12 && g > 0.0;
+            let at_hi = theta[p] >= s.hi[p] - 1e-12 && g < 0.0;
+            if !(at_lo || at_hi) {
+                gn2 += g * g;
+            }
+        }
+        FitResult { theta, nll, accepted_steps: accepted, grad_norm: gn2.sqrt() }
     }
 
     /// Fit with the POI fixed at `mu`.
     pub fn fit_mu_fixed(&self, data: &[f64], centers: &Centers, mu: f64) -> FitResult {
-        let fixed = self.fixed_mask(true);
-        self.minimize(data, centers, &fixed, self.init_theta(mu))
+        let theta0 = self.init_theta(mu);
+        let mut s = self.scratch.borrow_mut();
+        self.minimize_in(&mut s, data, centers, &self.fixed_poi, theta0)
     }
 
     /// Free fit (POI bounded >= 0).
     pub fn fit_free(&self, data: &[f64], centers: &Centers) -> FitResult {
-        let fixed = self.fixed_mask(false);
-        self.minimize(data, centers, &fixed, self.init_theta(1.0))
+        let theta0 = self.init_theta(1.0);
+        let mut s = self.scratch.borrow_mut();
+        self.minimize_in(&mut s, data, centers, &self.fixed_free, theta0)
     }
 
     /// Full asymptotic qmu-tilde hypotest — same 4-fit recipe as the AOT
-    /// graph (see model.hypotest_graph).
+    /// graph (see model.hypotest_graph). All four fits share one scratch.
     pub fn hypotest(&self, mu_test: f64) -> Hypotest {
         let m = self.m;
-        let data = m.data.clone();
-        let nominal_centers = Centers::nominal(m);
+        let nominal = Centers::nominal(m);
+        let mut s = self.scratch.borrow_mut();
 
-        let free = self.fit_free(&data, &nominal_centers);
-        let fixed = self.fit_mu_fixed(&data, &nominal_centers, mu_test);
-        let bkg = self.fit_mu_fixed(&data, &nominal_centers, FREE_LO);
+        let free =
+            self.minimize_in(&mut s, &m.data, &nominal, &self.fixed_free, self.init_theta(1.0));
+        let fixed =
+            self.minimize_in(&mut s, &m.data, &nominal, &self.fixed_poi, self.init_theta(mu_test));
+        let bkg =
+            self.minimize_in(&mut s, &m.data, &nominal, &self.fixed_poi, self.init_theta(FREE_LO));
 
-        let (nu_bkg, _) = self.expected_jac(&bkg.theta);
-        let (_, alpha_bkg, gamma_bkg) = self.effective(&bkg.theta);
-        let asimov_centers = Centers { alpha: alpha_bkg, gamma: gamma_bkg };
+        // Asimov data + centers from the background-only conditional fit
+        scratch::eval_expected(m, &mut s, &bkg.theta, false);
+        let nu_bkg: Vec<f64> = s.nu.to_vec();
+        let asimov_centers = Centers { alpha: s.alpha.clone(), gamma: s.gamma.clone() };
 
-        let afix = self.fit_mu_fixed(&nu_bkg, &asimov_centers, mu_test);
-        let a_free_nll = self.nll(&bkg.theta, &nu_bkg, &asimov_centers);
+        let afix = self.minimize_in(
+            &mut s,
+            &nu_bkg,
+            &asimov_centers,
+            &self.fixed_poi,
+            self.init_theta(mu_test),
+        );
+        let a_free_nll = scratch::nll(m, &mut s, &bkg.theta, &nu_bkg, &asimov_centers);
 
         let mu_hat = free.theta[0];
         let qmu = if mu_hat <= mu_test {
@@ -460,6 +353,16 @@ impl<'a> NativeFitter<'a> {
             mu_hat,
             nll_free: free.nll,
             nll_fixed: fixed.nll,
+            diag: [
+                free.accepted_steps as f64,
+                free.grad_norm,
+                fixed.accepted_steps as f64,
+                fixed.grad_norm,
+                bkg.accepted_steps as f64,
+                bkg.grad_norm,
+                afix.accepted_steps as f64,
+                afix.grad_norm,
+            ],
         }
     }
 }
@@ -486,6 +389,8 @@ pub fn asymptotic_cls(qmu: f64, qmu_a: f64) -> (f64, [f64; 5]) {
 }
 
 /// Dense Cholesky solve of (SPD) `h x = g`; returns None if not PD.
+/// Allocating legacy helper, kept for the baseline fitter and tests; the
+/// hot path factors in-place inside [`FitScratch`].
 pub fn cholesky_solve(h: &[f64], g: &[f64], n: usize) -> Option<Vec<f64>> {
     let mut l = vec![0.0; n * n];
     for i in 0..n {
@@ -671,5 +576,58 @@ mod tests {
         assert!((erf_approx(1.0) - 0.8427007929497149).abs() < 2e-7);
         assert!((erf_approx(-1.0) + 0.8427007929497149).abs() < 2e-7);
         assert!((norm_cdf(1.959963984540054) - 0.975).abs() < 1e-6);
+    }
+
+    #[test]
+    fn scratch_roundtrip_reuse_is_clean_across_models() {
+        // a warm worker hands one scratch across models with different
+        // active counts in the same class; stale rows from the wider model
+        // must not leak into the narrower one's outputs
+        let class = class();
+        let wide = compile(&ws([3.0, 5.0, 2.0], [62.0, 55.0, 41.0]), &class).unwrap();
+        let narrow_ws = Workspace::from_str(
+            r#"{
+            "channels": [{"name": "SR", "samples": [
+                {"name": "signal", "data": [2.0, 3.0],
+                 "modifiers": [{"name": "mu", "type": "normfactor", "data": null}]},
+                {"name": "bkg", "data": [30.0, 25.0], "modifiers": []}
+            ]}],
+            "observations": [{"name": "SR", "data": [31.0, 27.0]}],
+            "measurements": [{"name": "m", "config": {"poi": "mu", "parameters": []}}],
+            "version": "1.0.0"
+        }"#,
+        )
+        .unwrap();
+        let narrow = compile(&narrow_ws, &class).unwrap();
+
+        let f_wide = NativeFitter::new(&wide);
+        let mut th = f_wide.init_theta(1.2);
+        th[2] = 0.5;
+        let _ = f_wide.expected_jac(&th);
+        let scratch = f_wide.into_scratch();
+
+        let f_reused = NativeFitter::with_scratch(&narrow, scratch);
+        let f_fresh = NativeFitter::new(&narrow);
+        let th2 = f_fresh.init_theta(1.2);
+        let (nu_a, jac_a) = f_reused.expected_jac(&th2);
+        let (nu_b, jac_b) = f_fresh.expected_jac(&th2);
+        assert_eq!(nu_a, nu_b);
+        assert_eq!(jac_a, jac_b);
+        let c = Centers::nominal(&narrow);
+        assert_eq!(
+            f_reused.nll(&th2, &narrow.data, &c).to_bits(),
+            f_fresh.nll(&th2, &narrow.data, &c).to_bits()
+        );
+    }
+
+    #[test]
+    fn hypotest_diag_reports_four_fits() {
+        let m = compile(&ws([4.0, 6.0, 3.0], [68.0, 62.0, 46.0]), &class()).unwrap();
+        let h = NativeFitter::new(&m).hypotest(1.0);
+        // every fit accepted at least one step and converged reasonably
+        for f in 0..4 {
+            assert!(h.diag[2 * f] >= 1.0, "fit {f} accepted no steps");
+            assert!(h.diag[2 * f + 1].is_finite());
+        }
     }
 }

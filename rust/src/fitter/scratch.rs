@@ -1,0 +1,642 @@
+//! Allocation-free fused fit kernel + per-worker scratch workspace.
+//!
+//! The seed fitter allocated fresh `Vec<f64>`s for the effective
+//! parameters, expected rates, Jacobian, gradient, Fisher matrix and
+//! Cholesky factor on **every Newton iteration**, and swept the fully
+//! padded `n_samples x n_bins` tensors even when most rows/bins were
+//! padding. This module replaces that inner loop with:
+//!
+//! * [`FitScratch`] — every buffer the hot path needs, allocated once per
+//!   `(shape class, worker)` and reused across NLL evaluations, Newton
+//!   iterations, toys and scan points (zero heap allocations per NLL
+//!   evaluation after warmup — audited in `tests/alloc_audit.rs`);
+//! * a fused `eval` + `grad`/`Fisher` pass: expected rates and
+//!   interpolation factors are computed once per iteration instead of
+//!   twice (the seed ran `expected_jac` once inside `grad_fisher` and
+//!   again inside `nll`);
+//! * active-region compaction: loops run over `n_active_rows x
+//!   n_active_bins` (and the active free/alpha slots) using the counts
+//!   recorded by `DenseModel`, skipping padding entirely — a padded and a
+//!   compact layout of the same workspace evaluate **bit-identically**;
+//! * flat row-major, FMA-friendly inner loops in the style of the gemm
+//!   scalar microkernels: per-sample alpha interpolation is an axpy over a
+//!   contiguous bin tile (`ShapeClass::bin_block`) with `mul_add`
+//!   accumulation, and equal-length slice windows let the compiler elide
+//!   bounds checks in the kernel body;
+//! * a reduced Newton solve: the gradient/Fisher system is assembled only
+//!   over the non-fixed parameters (gamma rows are diagonal in the bin
+//!   index, so the gamma block is filled in O(params x bins) instead of
+//!   O(params^2 x bins)), and the damped Cholesky factors in-place in the
+//!   scratch.
+
+use crate::fitter::native::{Centers, EPS_RATE, FREE_LO, GAMMA_LO};
+use crate::histfactory::dense::{DenseModel, ShapeClass};
+
+/// Sentinel for "parameter not in the active (non-fixed) set".
+const INACTIVE: usize = usize::MAX;
+
+/// Reusable fit workspace sized for one shape class. `Default` builds an
+/// empty scratch; [`FitScratch::ensure`] (re)sizes it for a class, which
+/// is a no-op (and allocation-free) when the dimensions already match.
+#[derive(Debug, Default)]
+pub struct FitScratch {
+    // dimensions (and bounds-affecting knobs) this scratch is sized for
+    n_bins: usize,
+    n_samples: usize,
+    n_alpha: usize,
+    n_free: usize,
+    mu_max: f64,
+    // effective (masked) parameters
+    pub(crate) phi: Vec<f64>,   // F
+    pub(crate) alpha: Vec<f64>, // A
+    pub(crate) gamma: Vec<f64>, // B
+    // fused evaluation outputs
+    pub(crate) nu: Vec<f64>,        // B
+    pub(crate) jac: Vec<f64>,       // (F+A) x B row-major (dense-param rows)
+    pub(crate) jac_gamma: Vec<f64>, // B (gamma rows are diagonal in b)
+    // per-sample-row working tiles
+    rate: Vec<f64>,   // B: nominal + additive interpolation
+    gam_row: Vec<f64>, // B: per-bin gamma factor
+    cg_row: Vec<f64>,  // B: mult * gam, zeroed where the rate clipped
+    nur: Vec<f64>,     // B: this row's contribution to nu
+    // assembled Newton system over the active parameter set
+    pub(crate) grad: Vec<f64>, // P (full layout; fixed entries stay 0)
+    act: Vec<usize>,           // active param indices: dense first, then gamma
+    pos: Vec<usize>,           // param index -> reduced index (or INACTIVE)
+    n_act_dense: usize,
+    fisher_r: Vec<f64>, // n_act^2 (capacity P^2)
+    chol: Vec<f64>,     // n_act^2 in-place Cholesky workspace
+    sol: Vec<f64>,      // n_act
+    scaled: Vec<f64>,   // B: w-scaled Jacobian row
+    resid: Vec<f64>,    // B
+    w: Vec<f64>,        // B
+    pub(crate) step: Vec<f64>,      // P
+    pub(crate) theta_try: Vec<f64>, // P
+    // parameter box (depends only on the class)
+    pub(crate) lo: Vec<f64>, // P
+    pub(crate) hi: Vec<f64>, // P
+}
+
+impl FitScratch {
+    /// Scratch pre-sized for `class`.
+    pub fn for_class(class: &ShapeClass) -> FitScratch {
+        let mut s = FitScratch::default();
+        s.ensure(class);
+        s
+    }
+
+    /// Whether this scratch is already sized for `class` (reuse is then
+    /// allocation-free).
+    pub fn fits(&self, class: &ShapeClass) -> bool {
+        self.n_bins == class.n_bins
+            && self.n_samples == class.n_samples
+            && self.n_alpha == class.n_alpha
+            && self.n_free == class.n_free
+            // mu_max shapes the lo/hi parameter box, so two classes with
+            // identical dimensions but different bounds must not share a
+            // warmed scratch
+            && self.mu_max == class.mu_max
+    }
+
+    /// (Re)size every buffer for `class`. No-op when it already fits.
+    pub fn ensure(&mut self, class: &ShapeClass) {
+        if self.fits(class) && !self.lo.is_empty() {
+            return;
+        }
+        let (b_, s_, a_, f_) = (class.n_bins, class.n_samples, class.n_alpha, class.n_free);
+        let p_ = class.n_params();
+        self.n_bins = b_;
+        self.n_samples = s_;
+        self.n_alpha = a_;
+        self.n_free = f_;
+        self.mu_max = class.mu_max;
+        self.phi = vec![0.0; f_];
+        self.alpha = vec![0.0; a_];
+        self.gamma = vec![0.0; b_];
+        self.nu = vec![0.0; b_];
+        self.jac = vec![0.0; (f_ + a_) * b_];
+        self.jac_gamma = vec![0.0; b_];
+        self.rate = vec![0.0; b_];
+        self.gam_row = vec![0.0; b_];
+        self.cg_row = vec![0.0; b_];
+        self.nur = vec![0.0; b_];
+        self.grad = vec![0.0; p_];
+        self.act = Vec::with_capacity(p_);
+        self.pos = vec![INACTIVE; p_];
+        self.n_act_dense = 0;
+        self.fisher_r = vec![0.0; p_ * p_];
+        self.chol = vec![0.0; p_ * p_];
+        self.sol = vec![0.0; p_];
+        self.scaled = vec![0.0; b_];
+        self.resid = vec![0.0; b_];
+        self.w = vec![0.0; b_];
+        self.step = vec![0.0; p_];
+        self.theta_try = vec![0.0; p_];
+        self.lo = Vec::with_capacity(p_);
+        self.hi = Vec::with_capacity(p_);
+        self.lo.extend(std::iter::repeat(FREE_LO).take(f_));
+        self.hi.extend(std::iter::repeat(class.mu_max).take(f_));
+        self.lo.extend(std::iter::repeat(-crate::fitter::native::ALPHA_BOUND).take(a_));
+        self.hi.extend(std::iter::repeat(crate::fitter::native::ALPHA_BOUND).take(a_));
+        self.lo.extend(std::iter::repeat(GAMMA_LO).take(b_));
+        self.hi.extend(std::iter::repeat(crate::fitter::native::GAMMA_HI).take(b_));
+    }
+
+    /// Expected rates from the latest evaluation (padded layout; bins past
+    /// the active region are zero).
+    pub fn nu(&self) -> &[f64] {
+        &self.nu
+    }
+
+    /// Gradient from the latest `grad_fisher_reduced` (full parameter
+    /// layout; fixed entries are zero).
+    pub fn grad(&self) -> &[f64] {
+        &self.grad
+    }
+
+    /// Expand the latest reduced Fisher system back to the full padded
+    /// layout, with seed-style identity pinning on fixed rows (supports
+    /// the compat `grad_fisher` wrapper and tests).
+    pub(crate) fn full_fisher(&self, n_params: usize, fixed: &[bool]) -> Vec<f64> {
+        let n = self.act.len();
+        let mut fisher = vec![0.0; n_params * n_params];
+        for i in 0..n {
+            for j in 0..n {
+                fisher[self.act[i] * n_params + self.act[j]] = self.fisher_r[i * n + j];
+            }
+        }
+        for (p, &fx) in fixed.iter().enumerate().take(n_params) {
+            if fx {
+                fisher[p * n_params + p] = 1.0;
+            }
+        }
+        fisher
+    }
+}
+
+/// Fill the effective (masked) parameters from `theta`.
+fn effective_into(m: &DenseModel, s: &mut FitScratch, theta: &[f64]) {
+    let (f_, a_, b_) = (m.class.n_free, m.class.n_alpha, m.class.n_bins);
+    for f in 0..f_ {
+        s.phi[f] = if m.free_mask[f] > 0.0 { theta[f] } else { 1.0 };
+    }
+    for a in 0..a_ {
+        s.alpha[a] = theta[f_ + a] * m.alpha_mask[a];
+    }
+    for b in 0..b_ {
+        s.gamma[b] = if m.ctype[b] > 0.0 { theta[f_ + a_ + b] } else { 1.0 };
+    }
+}
+
+/// Fused expected-rates (+ optional Jacobian) evaluation over the active
+/// region only. Fills `s.nu` (and `s.jac`/`s.jac_gamma` when `with_jac`).
+///
+/// Exactly the math of `python/compile/kernels/ref.py`, restructured so
+/// the alpha interpolation and every Jacobian row accumulate as contiguous
+/// axpy sweeps over `bin_block`-sized tiles.
+pub(crate) fn eval_expected(m: &DenseModel, s: &mut FitScratch, theta: &[f64], with_jac: bool) {
+    effective_into(m, s, theta);
+    let c = &m.class;
+    let (b_, a_, f_) = (c.n_bins, c.n_alpha, c.n_free);
+    let ba = m.n_active_bins;
+    let rows = m.n_active_rows;
+    let aa = m.n_active_alpha;
+    let fa = m.n_active_free;
+    let block = c.bin_block.max(1);
+
+    s.nu.fill(0.0);
+    if with_jac {
+        // only the active dense rows are accumulated below; zero exactly
+        // those (plus the gamma diagonal)
+        for f in 0..fa {
+            s.jac[f * b_..f * b_ + ba].fill(0.0);
+        }
+        for a in 0..aa {
+            let r = (f_ + a) * b_;
+            s.jac[r..r + ba].fill(0.0);
+        }
+        s.jac_gamma[..ba].fill(0.0);
+    }
+
+    for srow in 0..rows {
+        // row-constant multiplicative norm factor (normsys/lumi + free
+        // norms), over active slots only
+        let lnup_row = &m.norm_lnup[srow * a_..srow * a_ + aa];
+        let lndn_row = &m.norm_lndn[srow * a_..srow * a_ + aa];
+        let mut lnmult = 0.0;
+        for a in 0..aa {
+            let al = s.alpha[a];
+            lnmult += if al >= 0.0 { al * lnup_row[a] } else { -al * lndn_row[a] };
+        }
+        let fmap_row = &m.free_map[srow * f_..srow * f_ + fa];
+        for f in 0..fa {
+            let e = fmap_row[f];
+            if e != 0.0 {
+                lnmult += e * s.phi[f].max(FREE_LO).ln();
+            }
+        }
+        let mult = lnmult.exp();
+
+        let mut b0 = 0usize;
+        while b0 < ba {
+            let nb = block.min(ba - b0);
+
+            // rate <- nominal + sum_a alpha * histo_side (axpy per alpha)
+            s.rate[b0..b0 + nb]
+                .copy_from_slice(&m.nominal[srow * b_ + b0..srow * b_ + b0 + nb]);
+            for a in 0..aa {
+                let al = s.alpha[a];
+                if al == 0.0 {
+                    continue;
+                }
+                let off = (srow * a_ + a) * b_ + b0;
+                let side = if al >= 0.0 {
+                    &m.histo_up[off..off + nb]
+                } else {
+                    &m.histo_dn[off..off + nb]
+                };
+                let rate = &mut s.rate[b0..b0 + nb];
+                for i in 0..nb {
+                    rate[i] = al.mul_add(side[i], rate[i]);
+                }
+            }
+
+            // clip, gamma factor, this row's rate contribution
+            {
+                let gmask = &m.gamma_mask[srow * b_ + b0..srow * b_ + b0 + nb];
+                for i in 0..nb {
+                    let b = b0 + i;
+                    let raw = s.rate[b];
+                    let base = raw.max(EPS_RATE);
+                    let gam = gmask[i].mul_add(s.gamma[b] - 1.0, 1.0);
+                    s.gam_row[b] = gam;
+                    s.cg_row[b] = if raw > EPS_RATE { mult * gam } else { 0.0 };
+                    let nu_sb = base * mult * gam;
+                    s.nur[b] = nu_sb;
+                    s.nu[b] += nu_sb;
+                }
+            }
+
+            if with_jac {
+                // free-norm rows: d nu / d phi_f = nu_sb * e / phi_f
+                for f in 0..fa {
+                    let e = fmap_row[f];
+                    if e == 0.0 || m.free_mask[f] == 0.0 {
+                        continue;
+                    }
+                    let cphi = e / s.phi[f].max(FREE_LO);
+                    let row = &mut s.jac[f * b_ + b0..f * b_ + b0 + nb];
+                    let nur = &s.nur[b0..b0 + nb];
+                    for i in 0..nb {
+                        row[i] = cphi.mul_add(nur[i], row[i]);
+                    }
+                }
+                // alpha rows: additive (histosys, clipped with the rate)
+                // plus multiplicative (normsys) pieces
+                for a in 0..aa {
+                    if m.alpha_mask[a] == 0.0 {
+                        continue;
+                    }
+                    let al = s.alpha[a];
+                    let off = (srow * a_ + a) * b_ + b0;
+                    let (side, dlnf) = if al >= 0.0 {
+                        (&m.histo_up[off..off + nb], lnup_row[a])
+                    } else {
+                        (&m.histo_dn[off..off + nb], -lndn_row[a])
+                    };
+                    let joff = (f_ + a) * b_ + b0;
+                    let row = &mut s.jac[joff..joff + nb];
+                    let nur = &s.nur[b0..b0 + nb];
+                    let cg = &s.cg_row[b0..b0 + nb];
+                    for i in 0..nb {
+                        row[i] += side[i] * cg[i] + nur[i] * dlnf;
+                    }
+                }
+                // gamma rows are diagonal in b
+                let gmask = &m.gamma_mask[srow * b_ + b0..srow * b_ + b0 + nb];
+                for i in 0..nb {
+                    let b = b0 + i;
+                    if m.ctype[b] > 0.0 && gmask[i] > 0.0 {
+                        s.jac_gamma[b] += s.nur[b] * gmask[i] / s.gam_row[b];
+                    }
+                }
+            }
+            b0 += nb;
+        }
+    }
+}
+
+/// Poisson + constraint NLL from the rates already in `s.nu` (and the
+/// effective parameters from the same evaluation).
+pub(crate) fn nll_from_rates(m: &DenseModel, s: &FitScratch, data: &[f64], centers: &Centers) -> f64 {
+    let ba = m.n_active_bins;
+    let aa = m.n_active_alpha;
+    let mut out = 0.0;
+    for b in 0..ba {
+        if m.bin_mask[b] == 0.0 {
+            continue;
+        }
+        let v = s.nu[b].max(EPS_RATE);
+        out += v - data[b] * v.ln();
+    }
+    for a in 0..aa {
+        out += 0.5 * m.alpha_mask[a] * (s.alpha[a] - centers.alpha[a]).powi(2);
+    }
+    for b in 0..ba {
+        match m.ctype[b] as i64 {
+            1 => out += 0.5 * m.cscale[b] * (s.gamma[b] - centers.gamma[b]).powi(2),
+            2 => {
+                let taug = (m.cscale[b] * s.gamma[b]).max(1e-300);
+                let aux = m.cscale[b] * centers.gamma[b];
+                out += taug - aux * taug.ln();
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Full NLL at `theta` (rates-only evaluation: no Jacobian work).
+pub(crate) fn nll(
+    m: &DenseModel,
+    s: &mut FitScratch,
+    theta: &[f64],
+    data: &[f64],
+    centers: &Centers,
+) -> f64 {
+    eval_expected(m, s, theta, false);
+    nll_from_rates(m, s, data, centers)
+}
+
+/// Rebuild the active (non-fixed) parameter set: dense params (free norms
+/// + alphas) first, gamma params after, preserving parameter order.
+pub(crate) fn build_active(m: &DenseModel, s: &mut FitScratch, fixed: &[bool]) {
+    let (f_, a_) = (m.class.n_free, m.class.n_alpha);
+    s.act.clear();
+    s.pos.fill(INACTIVE);
+    for f in 0..m.n_active_free {
+        if !fixed[f] {
+            s.pos[f] = s.act.len();
+            s.act.push(f);
+        }
+    }
+    for a in 0..m.n_active_alpha {
+        let p = f_ + a;
+        if !fixed[p] {
+            s.pos[p] = s.act.len();
+            s.act.push(p);
+        }
+    }
+    s.n_act_dense = s.act.len();
+    for b in 0..m.n_active_bins {
+        let p = f_ + a_ + b;
+        if !fixed[p] {
+            s.pos[p] = s.act.len();
+            s.act.push(p);
+        }
+    }
+}
+
+/// Gradient + expected-information (Fisher) system over the active set.
+/// Requires `eval_expected(..., true)` for the same `theta` to have run.
+///
+/// The full-layout gradient lands in `s.grad` (fixed entries zero); the
+/// reduced Fisher matrix lands in `s.fisher_r`. Gamma Jacobian rows are
+/// diagonal in the bin index, so the gamma blocks cost O(n_dense x bins)
+/// and O(bins) instead of the seed's dense O(params^2 x bins) sweep.
+pub(crate) fn grad_fisher_reduced(
+    m: &DenseModel,
+    s: &mut FitScratch,
+    data: &[f64],
+    centers: &Centers,
+) {
+    let (f_, a_, b_) = (m.class.n_free, m.class.n_alpha, m.class.n_bins);
+    let ba = m.n_active_bins;
+    let n = s.act.len();
+    let nd = s.n_act_dense;
+
+    for b in 0..ba {
+        if m.bin_mask[b] == 0.0 {
+            s.resid[b] = 0.0;
+            s.w[b] = 0.0;
+        } else {
+            let v = s.nu[b].max(EPS_RATE);
+            s.resid[b] = 1.0 - data[b] / v;
+            s.w[b] = 1.0 / v;
+        }
+    }
+
+    s.grad.fill(0.0);
+    s.fisher_r[..n * n].fill(0.0);
+
+    // dense rows: gradient, dense-dense block, dense-gamma border
+    for i in 0..nd {
+        let p = s.act[i];
+        let joff = p * b_; // p < F + A, so this indexes a dense jac row
+        let mut g = 0.0;
+        for b in 0..ba {
+            let jpb = s.jac[joff + b];
+            g = jpb.mul_add(s.resid[b], g);
+            s.scaled[b] = jpb * s.w[b];
+        }
+        s.grad[p] = g;
+        for j in i..nd {
+            let qoff = s.act[j] * b_;
+            let mut h = 0.0;
+            for b in 0..ba {
+                h = s.scaled[b].mul_add(s.jac[qoff + b], h);
+            }
+            s.fisher_r[i * n + j] = h;
+            s.fisher_r[j * n + i] = h;
+        }
+        for j in nd..n {
+            let bg = s.act[j] - f_ - a_;
+            let h = s.scaled[bg] * s.jac_gamma[bg];
+            s.fisher_r[i * n + j] = h;
+            s.fisher_r[j * n + i] = h;
+        }
+    }
+    // gamma rows: gradient + diagonal block
+    for j in nd..n {
+        let p = s.act[j];
+        let bg = p - f_ - a_;
+        s.grad[p] = s.jac_gamma[bg] * s.resid[bg];
+        s.fisher_r[j * n + j] = s.jac_gamma[bg] * s.jac_gamma[bg] * s.w[bg];
+    }
+
+    // constraint terms; only non-fixed parameters enter the system (the
+    // seed pinned fixed rows to zero-grad/identity after the fact)
+    for a in 0..m.n_active_alpha {
+        let p = f_ + a;
+        let k = s.pos[p];
+        if k == INACTIVE {
+            continue;
+        }
+        s.grad[p] += m.alpha_mask[a] * (s.alpha[a] - centers.alpha[a]);
+        s.fisher_r[k * n + k] += m.alpha_mask[a];
+    }
+    for b in 0..m.n_active_bins {
+        let p = f_ + a_ + b;
+        let k = s.pos[p];
+        if k == INACTIVE {
+            continue;
+        }
+        match m.ctype[b] as i64 {
+            1 => {
+                s.grad[p] += m.cscale[b] * (s.gamma[b] - centers.gamma[b]);
+                s.fisher_r[k * n + k] += m.cscale[b];
+            }
+            2 => {
+                let aux = m.cscale[b] * centers.gamma[b];
+                let gs = s.gamma[b].max(GAMMA_LO);
+                s.grad[p] += m.cscale[b] - aux / gs;
+                s.fisher_r[k * n + k] += aux / (gs * gs);
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Solve `(F + lam * diag(F)) step = grad` over the active set with an
+/// in-place Cholesky in the scratch; the step is scattered into `s.step`
+/// (zero for fixed parameters). Returns false when the damped system is
+/// not positive definite (caller escalates the damping).
+pub(crate) fn solve_step(s: &mut FitScratch, n_params: usize, lam: f64) -> bool {
+    let n = s.act.len();
+    s.chol[..n * n].copy_from_slice(&s.fisher_r[..n * n]);
+    for k in 0..n {
+        let d = s.fisher_r[k * n + k].max(1e-8);
+        s.chol[k * n + k] += lam * d;
+    }
+    // in-place lower Cholesky factorization
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = s.chol[i * n + j];
+            for k in 0..j {
+                sum -= s.chol[i * n + k] * s.chol[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return false;
+                }
+                s.chol[i * n + i] = sum.sqrt();
+            } else {
+                s.chol[i * n + j] = sum / s.chol[j * n + j];
+            }
+        }
+    }
+    // forward: L y = g (y overwrites sol)
+    for i in 0..n {
+        let mut sum = s.grad[s.act[i]];
+        for k in 0..i {
+            sum -= s.chol[i * n + k] * s.sol[k];
+        }
+        s.sol[i] = sum / s.chol[i * n + i];
+    }
+    // backward: L^T x = y (x overwrites sol in place)
+    for i in (0..n).rev() {
+        let mut sum = s.sol[i];
+        for k in i + 1..n {
+            sum -= s.chol[k * n + i] * s.sol[k];
+        }
+        s.sol[i] = sum / s.chol[i * n + i];
+    }
+    s.step[..n_params].fill(0.0);
+    for i in 0..n {
+        s.step[s.act[i]] = s.sol[i];
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn class(b: usize, s: usize, a: usize, f: usize) -> ShapeClass {
+        ShapeClass {
+            name: "t".into(),
+            n_bins: b,
+            n_samples: s,
+            n_alpha: a,
+            n_free: f,
+            bin_block: 4,
+            mu_max: 10.0,
+            max_newton: 32,
+            cg_iters: 8,
+        }
+    }
+
+    #[test]
+    fn ensure_sizes_buffers_and_is_idempotent() {
+        let c = class(8, 3, 2, 2);
+        let mut s = FitScratch::default();
+        assert!(!s.fits(&c));
+        s.ensure(&c);
+        assert!(s.fits(&c));
+        assert_eq!(s.nu.len(), 8);
+        assert_eq!(s.jac.len(), (2 + 2) * 8);
+        assert_eq!(s.grad.len(), c.n_params());
+        assert_eq!(s.lo.len(), c.n_params());
+        let ptr = s.nu.as_ptr();
+        s.ensure(&c);
+        // same class: no reallocation
+        assert_eq!(s.nu.as_ptr(), ptr);
+        // different class: resized
+        let c2 = class(16, 4, 3, 2);
+        s.ensure(&c2);
+        assert!(s.fits(&c2));
+        assert_eq!(s.nu.len(), 16);
+    }
+
+    #[test]
+    fn solve_step_matches_dense_cholesky() {
+        // solve a small SPD system through the reduced path and compare
+        // against the legacy dense solver
+        let c = class(4, 1, 1, 1);
+        let mut s = FitScratch::for_class(&c);
+        // active set = all params (pretend nothing is fixed)
+        let p_ = c.n_params();
+        s.act = (0..p_).collect();
+        s.pos = (0..p_).collect();
+        s.n_act_dense = 2;
+        // SPD matrix a a^T + 2 I
+        let n = p_;
+        let mut spd = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut v = if i == j { 2.0 } else { 0.0 };
+                for k in 0..n {
+                    v += ((i * k) as f64).cos() * ((j * k) as f64).cos();
+                }
+                spd[i * n + j] = v;
+            }
+        }
+        s.fisher_r[..n * n].copy_from_slice(&spd);
+        for (i, g) in s.grad.iter_mut().enumerate() {
+            *g = i as f64 + 1.0;
+        }
+        assert!(solve_step(&mut s, p_, 0.0));
+        // residual check: spd * step = grad
+        for i in 0..n {
+            let mut r = 0.0;
+            for j in 0..n {
+                r += spd[i * n + j] * s.step[j];
+            }
+            assert!((r - (i as f64 + 1.0)).abs() < 1e-9, "row {i}: {r}");
+        }
+    }
+
+    #[test]
+    fn solve_step_rejects_indefinite() {
+        let c = class(1, 1, 1, 1);
+        let mut s = FitScratch::for_class(&c);
+        s.act = vec![0, 1];
+        s.pos = vec![0, 1, INACTIVE];
+        s.n_act_dense = 2;
+        // eigenvalues 3, -1
+        s.fisher_r[..4].copy_from_slice(&[1.0, 2.0, 2.0, 1.0]);
+        s.grad[0] = 1.0;
+        s.grad[1] = 1.0;
+        assert!(!solve_step(&mut s, 3, 0.0));
+    }
+}

@@ -38,44 +38,44 @@ fn qmu_tilde(fitter: &NativeFitter, data: &[f64], centers: &Centers, mu_test: f6
     }
 }
 
-/// Sample a toy: Poisson main data around `nu`, Gaussian/Poisson-fluctuated
-/// constraint centers around the generating nuisance values.
-fn sample_toy(
+/// Sample a toy in place: Poisson main data around `nu`,
+/// Gaussian/Poisson-fluctuated constraint centers around the generating
+/// nuisance values. The output buffers are reused across toys — the seed
+/// allocated a fresh data vector and `Centers` per pseudoexperiment.
+fn sample_toy_into(
     model: &DenseModel,
     nu: &[f64],
     gen_alpha: &[f64],
     gen_gamma: &[f64],
     rng: &mut Rng,
-) -> (Vec<f64>, Centers) {
+    data: &mut [f64],
+    centers: &mut Centers,
+) {
     let b_ = model.class.n_bins;
-    let mut data = vec![0.0; b_];
     for b in 0..b_ {
-        if model.bin_mask[b] > 0.0 {
-            data[b] = rng.poisson(nu[b].max(0.0)) as f64;
-        }
+        data[b] = if model.bin_mask[b] > 0.0 {
+            rng.poisson(nu[b].max(0.0)) as f64
+        } else {
+            0.0
+        };
     }
     // auxiliary measurements: alpha_c ~ N(alpha_gen, 1); gamma aux per type
-    let alpha_c: Vec<f64> = gen_alpha
-        .iter()
-        .enumerate()
-        .map(|(a, &v)| {
-            if model.alpha_mask[a] > 0.0 {
-                rng.normal_scaled(v, 1.0)
-            } else {
-                0.0
-            }
-        })
-        .collect();
-    let gamma_c: Vec<f64> = (0..b_)
-        .map(|b| match model.ctype[b] as i64 {
+    for (a, &v) in gen_alpha.iter().enumerate() {
+        centers.alpha[a] = if model.alpha_mask[a] > 0.0 {
+            rng.normal_scaled(v, 1.0)
+        } else {
+            0.0
+        };
+    }
+    for b in 0..b_ {
+        centers.gamma[b] = match model.ctype[b] as i64 {
             // gauss: center ~ N(gamma_gen, delta) with delta = 1/sqrt(w)
             1 => rng.normal_scaled(gen_gamma[b], 1.0 / model.cscale[b].sqrt()).max(1e-6),
             // poisson: aux count m ~ Pois(tau * gamma_gen), center = m / tau
             2 => rng.poisson(model.cscale[b] * gen_gamma[b]) as f64 / model.cscale[b],
             _ => 1.0,
-        })
-        .collect();
-    (data, Centers { alpha: alpha_c, gamma: gamma_c })
+        };
+    }
 }
 
 /// Toy-based CLs at `mu_test` with `n_toys` pseudoexperiments per hypothesis.
@@ -103,11 +103,15 @@ pub fn hypotest_toys(model: &DenseModel, mu_test: f64, n_toys: usize, seed: u64)
 
     let mut q_sb = Vec::with_capacity(n_toys);
     let mut q_b = Vec::with_capacity(n_toys);
+    // toy buffers (and the fitter's scratch) are reused across all
+    // pseudoexperiments — no per-toy model-sized allocations
+    let mut toy_data = vec![0.0; model.class.n_bins];
+    let mut toy_centers = Centers::nominal(model);
     for _ in 0..n_toys {
-        let (d, c) = sample_toy(model, &nu_sb, &a_sb, &g_sb, &mut rng);
-        q_sb.push(qmu_tilde(&fitter, &d, &c, mu_test));
-        let (d, c) = sample_toy(model, &nu_b, &a_b, &g_b, &mut rng);
-        q_b.push(qmu_tilde(&fitter, &d, &c, mu_test));
+        sample_toy_into(model, &nu_sb, &a_sb, &g_sb, &mut rng, &mut toy_data, &mut toy_centers);
+        q_sb.push(qmu_tilde(&fitter, &toy_data, &toy_centers, mu_test));
+        sample_toy_into(model, &nu_b, &a_b, &g_b, &mut rng, &mut toy_data, &mut toy_centers);
+        q_b.push(qmu_tilde(&fitter, &toy_data, &toy_centers, mu_test));
     }
 
     // tail fractions (with the +1 continuity convention)

@@ -71,6 +71,12 @@ pub struct DenseModel {
     pub alpha_names: Vec<String>,
     pub n_active_bins: usize,
     pub n_active_rows: usize,
+    /// allocated free-parameter slots (POI included); slots beyond this are
+    /// padding (mask 0, map 0) and can be skipped by compacted kernels
+    pub n_active_free: usize,
+    /// allocated alpha slots; slots beyond this are padding (mask 0,
+    /// all-zero tensors) and can be skipped by compacted kernels
+    pub n_active_alpha: usize,
 }
 
 impl DenseModel {
@@ -133,6 +139,8 @@ pub fn compile(ws: &Workspace, class: &ShapeClass) -> Result<DenseModel, DenseEr
         alpha_names: Vec::new(),
         n_active_bins: n_bins,
         n_active_rows: n_rows,
+        n_active_free: 1,
+        n_active_alpha: 0,
     };
     m.free_mask[0] = 1.0; // POI always active
 
@@ -299,7 +307,33 @@ pub fn compile(ws: &Workspace, class: &ShapeClass) -> Result<DenseModel, DenseEr
         m.bin_mask[i] = 1.0;
     }
 
+    m.n_active_free = m.free_names.len();
+    m.n_active_alpha = m.alpha_names.len();
+
     Ok(m)
+}
+
+/// Built-in shape classes mirroring `python/compile/shapes.py`, for paths
+/// that must work without a compiled artifact manifest (CLI fallback,
+/// kernel bench).
+pub fn builtin_class(name: &str) -> ShapeClass {
+    let (b, s, a) = match name {
+        "1Lbb" => (80, 48, 48),
+        "2L0J" => (32, 16, 16),
+        "stau" => (48, 20, 28),
+        _ => (16, 6, 6),
+    };
+    ShapeClass {
+        name: name.to_string(),
+        n_bins: b,
+        n_samples: s,
+        n_alpha: a,
+        n_free: 2,
+        bin_block: 16,
+        mu_max: 10.0,
+        max_newton: 48,
+        cg_iters: 64,
+    }
 }
 
 /// Pick the smallest class (by parameter count) that fits the workspace.
@@ -411,6 +445,8 @@ mod tests {
         let m = compile(&ws(), &tiny_class()).unwrap();
         assert_eq!(m.n_active_bins, 5);
         assert_eq!(m.n_active_rows, 3);
+        assert_eq!(m.n_active_free, 1);
+        assert_eq!(m.n_active_alpha, 2);
         assert_eq!(m.free_names, vec!["mu"]);
         assert_eq!(m.alpha_names, vec!["bkg_norm", "tilt"]);
         // bin mask: first 5 active

@@ -7,6 +7,6 @@ pub mod patchset;
 pub mod spec;
 
 pub use combine::{combine, prefix_channels};
-pub use dense::{compile, pick_class, DenseModel, ShapeClass};
+pub use dense::{builtin_class, compile, pick_class, DenseModel, ShapeClass};
 pub use patchset::{Patch, Patchset};
 pub use spec::{Channel, Measurement, Modifier, Observation, Sample, Workspace};

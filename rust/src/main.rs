@@ -34,6 +34,7 @@ COMMANDS:
   scan             --pallet <dir> [--backend pjrt|native] [--workers N]
                    [--max-blocks N] [--limit N] [--out results.json] [--verbose]
                    [--policy fifo|priority|affinity] [--batch N]
+                   [--bench-out BENCH_fit.json] (machine-readable throughput)
   hypotest         --pallet <dir> --patch <name> [--backend pjrt|native]
   simulate         --pallet <dir> [--blocks 1,2,4,8] [--trials 10]
                    [--sample N] (replays measured fits on the paper topology)
@@ -224,6 +225,23 @@ fn cmd_scan(args: &Args) -> Result<(), String> {
         std::fs::write(out, json::to_string_pretty(&scan.to_json())).map_err(|e| e.to_string())?;
         println!("  wrote {out}");
     }
+    if let Some(bench_out) = args.get("bench-out") {
+        // scan-level throughput in the shared BENCH_fit schema (kernel-only
+        // rates are the kernel bench's job and stay 0 here)
+        let mut report = pyhf_faas::bench::FitBenchReport::new("scan", false);
+        let n = scan.points.len() as f64;
+        report.classes.push(pyhf_faas::bench::ClassBench {
+            class: pallet.config.name.clone(),
+            nll_evals_per_s: 0.0,
+            fits_per_s: if m.total_service_s > 0.0 { n / m.total_service_s } else { 0.0 },
+            toys_per_s: 0.0,
+            baseline_fits_per_s: 0.0,
+            speedup: 0.0,
+            wall_s: scan.wall_seconds,
+        });
+        report.write(std::path::Path::new(bench_out)).map_err(|e| e.to_string())?;
+        println!("  wrote {bench_out}");
+    }
     ep.shutdown();
     Ok(())
 }
@@ -325,23 +343,7 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
 
 fn default_class_for(name: &str) -> dense::ShapeClass {
     // fallback mirrors python/compile/shapes.py when artifacts are absent
-    let (b, s, a) = match name {
-        "1Lbb" => (80, 48, 48),
-        "2L0J" => (32, 16, 16),
-        "stau" => (48, 20, 28),
-        _ => (16, 6, 6),
-    };
-    dense::ShapeClass {
-        name: name.to_string(),
-        n_bins: b,
-        n_samples: s,
-        n_alpha: a,
-        n_free: 2,
-        bin_block: 16,
-        mu_max: 10.0,
-        max_newton: 48,
-        cg_iters: 64,
-    }
+    dense::builtin_class(name)
 }
 
 /// Compile the named patch of a pallet into a dense model.

@@ -213,6 +213,34 @@ impl Compiled {
     }
 }
 
+/// CPU fallback for the artifact hot path: run the full qmu-tilde
+/// hypotest with the native fused kernel, shaped like an artifact
+/// execution ([`HypotestOut`]). `scratch` is the worker's per-class
+/// [`FitScratch`]; reusing it across calls makes the steady state
+/// allocation-free per NLL evaluation, exactly like a warm compiled
+/// executable. This is what serves fits when the `pjrt` feature (and so
+/// the real engine) is absent.
+pub fn native_hypotest(
+    model: &DenseModel,
+    scratch: &mut crate::fitter::FitScratch,
+    mu_test: f64,
+) -> HypotestOut {
+    let owned = std::mem::take(scratch);
+    let fitter = crate::fitter::NativeFitter::with_scratch(model, owned);
+    let h = fitter.hypotest(mu_test);
+    *scratch = fitter.into_scratch();
+    HypotestOut {
+        cls_obs: h.cls_obs,
+        cls_exp: h.cls_exp,
+        qmu: h.qmu,
+        qmu_a: h.qmu_a,
+        mu_hat: h.mu_hat,
+        nll_free: h.nll_free,
+        nll_fixed: h.nll_fixed,
+        diag: h.diag,
+    }
+}
+
 impl HypotestOut {
     /// Convert to a scan point result.
     pub fn to_point(&self, patch: &str, values: Vec<f64>, fit_seconds: f64) -> PointResult {

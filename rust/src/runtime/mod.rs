@@ -5,7 +5,7 @@
 pub mod engine;
 pub mod manifest;
 
-pub use engine::{Compiled, Engine, HypotestOut};
+pub use engine::{native_hypotest, Compiled, Engine, HypotestOut};
 pub use manifest::{ArtifactEntry, Manifest};
 
 use std::path::PathBuf;

@@ -37,6 +37,10 @@ pub struct LoadSnapshot {
     pub outstanding: usize,
     /// tasks still in the interchange queue
     pub queued: usize,
+    /// queued *fits*: tasks weighted by batch size (a coalesced
+    /// `{"batch": [...]}` task carries `k` fits, so plain task depth
+    /// underestimates demand by the mean batch size)
+    pub queued_weight: usize,
     pub active_workers: usize,
     pub blocks: usize,
     /// age of the oldest queued task
@@ -68,8 +72,12 @@ impl AutoscaleController {
     }
 
     pub fn decide(&mut self, now: Instant, load: &LoadSnapshot) -> ScaleDecision {
-        let depth_pressure =
-            load.outstanding as f64 > self.parallelism * load.active_workers as f64;
+        // batch-aware demand: replace the queued-task count inside
+        // `outstanding` with the queued fit count, so one 8-fit envelope
+        // exerts the pressure of 8 tasks (running tasks keep weight 1 —
+        // they already hold a worker)
+        let demand = load.outstanding.saturating_sub(load.queued) + load.queued_weight;
+        let depth_pressure = demand as f64 > self.parallelism * load.active_workers as f64;
         let latency_pressure = match (self.cfg.target_wait, load.oldest_wait) {
             (Some(target), Some(wait)) => load.queued > 0 && wait > target,
             _ => false,
@@ -110,6 +118,7 @@ mod tests {
         LoadSnapshot {
             outstanding,
             queued: outstanding,
+            queued_weight: outstanding,
             active_workers: workers,
             blocks,
             oldest_wait: None,
@@ -125,6 +134,28 @@ mod tests {
         assert_eq!(c.decide(now, &load(2, 2, 1)), ScaleDecision::Hold);
         // at max blocks: hold no matter the pressure
         assert_eq!(c.decide(now, &load(100, 2, 4)), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn batched_tasks_weigh_queue_depth_by_fit_count() {
+        let mut c = AutoscaleController::new(AutoscaleConfig::default(), 1.0, 4);
+        let now = Instant::now();
+        // 2 queued tasks against 4 workers: plain depth would hold...
+        let mut l = load(2, 4, 1);
+        assert_eq!(c.decide(now, &l), ScaleDecision::Hold);
+        // ...but those tasks are 4-fit batches: 8 fits of demand
+        l.queued_weight = 8;
+        assert_eq!(c.decide(now, &l), ScaleDecision::Up);
+        // running tasks keep weight 1: 3 running + 2 queued singles = 5
+        let l2 = LoadSnapshot {
+            outstanding: 5,
+            queued: 2,
+            queued_weight: 2,
+            active_workers: 8,
+            blocks: 1,
+            oldest_wait: None,
+        };
+        assert_eq!(c.decide(now, &l2), ScaleDecision::Hold);
     }
 
     #[test]

@@ -28,6 +28,17 @@ pub fn content_hash(payload: &Json) -> u64 {
     fnv1a(json::to_string(payload).as_bytes())
 }
 
+/// Number of fits a task payload carries: the member count for a
+/// `{"batch": [...]}` envelope, 1 otherwise. The service stamps this onto
+/// `TaskMeta::weight` so the autoscaler sees fit demand, not task count.
+pub fn payload_weight(payload: &Json) -> usize {
+    payload
+        .get("batch")
+        .and_then(|b| b.as_arr())
+        .map(|a| a.len().max(1))
+        .unwrap_or(1)
+}
+
 /// The outcome of planning one submission wave.
 #[derive(Debug, Clone)]
 pub struct BatchPlan {
@@ -224,6 +235,17 @@ mod tests {
         let b = payload("p2", "A");
         assert_eq!(content_hash(&a), content_hash(&a.clone()));
         assert_ne!(content_hash(&a), content_hash(&b));
+    }
+
+    #[test]
+    fn payload_weight_counts_batch_members() {
+        assert_eq!(payload_weight(&payload("p1", "A")), 1);
+        let env = Json::obj(vec![(
+            "batch",
+            Json::Arr(vec![payload("p1", "A"), payload("p2", "A"), payload("p3", "A")]),
+        )]);
+        assert_eq!(payload_weight(&env), 3);
+        assert_eq!(payload_weight(&Json::Null), 1);
     }
 
     #[test]

@@ -14,10 +14,17 @@
 //! * [`crate::scheduler::affinity::AffinityPolicy`] — warm-worker routing.
 
 use std::cmp::Ordering;
-use std::collections::{BinaryHeap, HashSet, VecDeque};
+use std::collections::{BinaryHeap, VecDeque};
 use std::time::Instant;
 
 use crate::coordinator::task::{FunctionId, TaskId};
+use crate::util::lru::LruSet;
+
+/// Default bound on a worker's warm set: how many shape classes' compiled
+/// executables + fit scratch workspaces one worker keeps before LRU
+/// eviction (ROADMAP "warm-state eviction"). Small on purpose — warm state
+/// is hundreds of KB to tens of MB per class.
+pub const DEFAULT_WARM_CAPACITY: usize = 8;
 
 /// Scheduling-relevant task metadata carried by the interchange (the task
 /// payload itself stays in the service store).
@@ -31,6 +38,10 @@ pub struct TaskMeta {
     /// fractional payload priorities (and the batcher's max-member
     /// priority) order correctly instead of truncating to 0
     pub priority: f64,
+    /// number of fits this task carries: 1 for a plain payload, the
+    /// member count for a `{"batch": [...]}` envelope. The autoscaler
+    /// weighs queue depth by it so coalescing doesn't hide demand.
+    pub weight: usize,
     pub enqueued: Instant,
 }
 
@@ -42,23 +53,31 @@ impl TaskMeta {
             function: 0,
             affinity_key: String::new(),
             priority: 0.0,
+            weight: 1,
             enqueued: Instant::now(),
         }
     }
 }
 
 /// What the interchange knows about a popping worker: its name and the set
-/// of affinity keys it has already served (= compiled executables held in
-/// its `WorkerContext`).
+/// of affinity keys it has already served (= compiled executables + fit
+/// scratch held in its `WorkerContext`). The set is a bounded LRU so a
+/// long-lived worker serving many shape classes cannot accrete unbounded
+/// warm state; evictions surface in `coordinator::metrics`.
 #[derive(Debug, Clone)]
 pub struct WorkerProfile {
     pub name: String,
-    warm: HashSet<String>,
+    warm: LruSet<String>,
 }
 
 impl WorkerProfile {
     pub fn new(name: impl Into<String>) -> WorkerProfile {
-        WorkerProfile { name: name.into(), warm: HashSet::new() }
+        WorkerProfile::with_warm_capacity(name, DEFAULT_WARM_CAPACITY)
+    }
+
+    /// Profile with an explicit warm-set bound.
+    pub fn with_warm_capacity(name: impl Into<String>, cap: usize) -> WorkerProfile {
+        WorkerProfile { name: name.into(), warm: LruSet::new(cap) }
     }
 
     /// Profile for callers that pop without a worker identity.
@@ -70,13 +89,19 @@ impl WorkerProfile {
         self.warm.contains(key)
     }
 
-    /// Record that this worker now holds the warm state for `key`.
-    pub fn note_warm(&mut self, key: impl Into<String>) {
-        self.warm.insert(key.into());
+    /// Record that this worker now holds (or just refreshed) the warm
+    /// state for `key`; returns the key evicted from the bounded warm set,
+    /// if any.
+    pub fn note_warm(&mut self, key: impl Into<String>) -> Option<String> {
+        self.warm.insert(key.into())
     }
 
     pub fn warm_count(&self) -> usize {
         self.warm.len()
+    }
+
+    pub fn warm_capacity(&self) -> usize {
+        self.warm.capacity()
     }
 }
 
@@ -343,9 +368,22 @@ mod tests {
     fn worker_profile_warm_set() {
         let mut w = WorkerProfile::new("block-0/node-0/worker-0");
         assert!(!w.is_warm("fn0:1Lbb"));
-        w.note_warm("fn0:1Lbb");
-        w.note_warm("fn0:1Lbb");
+        assert!(w.note_warm("fn0:1Lbb").is_none());
+        assert!(w.note_warm("fn0:1Lbb").is_none());
         assert!(w.is_warm("fn0:1Lbb"));
         assert_eq!(w.warm_count(), 1);
+        assert_eq!(w.warm_capacity(), DEFAULT_WARM_CAPACITY);
+    }
+
+    #[test]
+    fn worker_profile_warm_set_is_bounded_lru() {
+        let mut w = WorkerProfile::with_warm_capacity("w0", 2);
+        assert!(w.note_warm("fn0:A").is_none());
+        assert!(w.note_warm("fn0:B").is_none());
+        // refreshing A makes B the LRU victim when C arrives
+        assert!(w.note_warm("fn0:A").is_none());
+        assert_eq!(w.note_warm("fn0:C"), Some("fn0:B".to_string()));
+        assert!(w.is_warm("fn0:A") && w.is_warm("fn0:C") && !w.is_warm("fn0:B"));
+        assert_eq!(w.warm_count(), 2);
     }
 }

@@ -23,6 +23,9 @@ use crate::scheduler::policy::{FifoPolicy, SchedPolicy, TaskMeta, WorkerProfile}
 struct Inner {
     policy: Box<dyn SchedPolicy>,
     metrics: Option<Arc<Metrics>>,
+    /// sum of queued task weights (fits, not tasks): batched envelopes
+    /// carry `k` fits each, so this is the autoscaler's demand signal
+    queued_weight: usize,
 }
 
 /// Thread-safe, policy-driven interchange (the funcX "interchange" between
@@ -41,7 +44,7 @@ impl SchedQueue {
 
     pub fn with_policy(policy: Box<dyn SchedPolicy>) -> Arc<SchedQueue> {
         Arc::new(SchedQueue {
-            inner: Mutex::new(Inner { policy, metrics: None }),
+            inner: Mutex::new(Inner { policy, metrics: None, queued_weight: 0 }),
             cvar: Condvar::new(),
             closed: AtomicBool::new(false),
         })
@@ -74,6 +77,7 @@ impl SchedQueue {
         if self.closed.load(Ordering::SeqCst) {
             return false;
         }
+        g.queued_weight += meta.weight.max(1);
         g.policy.push(meta);
         drop(g);
         self.cvar.notify_one();
@@ -93,6 +97,7 @@ impl SchedQueue {
         let mut g = self.inner.lock().unwrap();
         loop {
             if let Some(meta) = g.policy.pop_for(worker, Instant::now()) {
+                g.queued_weight = g.queued_weight.saturating_sub(meta.weight.max(1));
                 let metrics = g.metrics.clone();
                 drop(g);
                 if let Some(m) = metrics {
@@ -128,11 +133,18 @@ impl SchedQueue {
         while let Some(meta) = g.policy.pop_for(&anon, Instant::now()) {
             out.push(meta);
         }
+        g.queued_weight = 0;
         out
     }
 
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().policy.len()
+    }
+
+    /// Total queued *fits* (tasks weighted by batch size) — the demand
+    /// signal for batch-aware autoscaling.
+    pub fn queued_weight(&self) -> usize {
+        self.inner.lock().unwrap().queued_weight
     }
 
     pub fn is_empty(&self) -> bool {
@@ -249,6 +261,31 @@ mod tests {
         let s = metrics.snapshot();
         assert_eq!(s.affinity_hits, 1);
         assert_eq!(s.affinity_misses, 1);
+    }
+
+    #[test]
+    fn queued_weight_tracks_batched_fits() {
+        let q = SchedQueue::new();
+        assert_eq!(q.queued_weight(), 0);
+        q.push_meta(TaskMeta { weight: 5, ..TaskMeta::bare(1) });
+        q.push_meta(TaskMeta::bare(2));
+        // 2 tasks but 6 fits of demand
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.queued_weight(), 6);
+        q.pop(Duration::from_millis(5));
+        assert_eq!(q.queued_weight(), 1);
+        q.pop(Duration::from_millis(5));
+        assert_eq!(q.queued_weight(), 0);
+    }
+
+    #[test]
+    fn drain_resets_queued_weight() {
+        let q = SchedQueue::new();
+        q.push_meta(TaskMeta { weight: 3, ..TaskMeta::bare(1) });
+        q.close();
+        let drained = q.drain_remaining();
+        assert_eq!(drained.len(), 1);
+        assert_eq!(q.queued_weight(), 0);
     }
 
     #[test]

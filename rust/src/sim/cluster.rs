@@ -10,8 +10,9 @@
 //! distributions measured from the *real* Rust+PJRT fit path.
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashSet, VecDeque};
+use std::collections::{BinaryHeap, VecDeque};
 
+use crate::util::lru::LruSet;
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 
@@ -60,6 +61,9 @@ pub struct CostModel {
     pub straggler_factor: f64,
     /// relative jitter on every service time (trial-to-trial variance)
     pub service_jitter_rel: f64,
+    /// cap on a worker's warm executable set; the LRU class is evicted
+    /// (and must recompile on next use) beyond this
+    pub warm_capacity: usize,
 }
 
 impl CostModel {
@@ -74,6 +78,7 @@ impl CostModel {
             straggler_prob: 0.08,
             straggler_factor: 1.6,
             service_jitter_rel: 0.06,
+            warm_capacity: 8,
         }
     }
 
@@ -88,6 +93,7 @@ impl CostModel {
             straggler_prob: 0.0,
             straggler_factor: 1.0,
             service_jitter_rel: 0.0,
+            warm_capacity: 8,
         }
     }
 }
@@ -201,6 +207,8 @@ pub struct PolicyOutcome {
     pub compiles: usize,
     /// tasks that landed on a worker already warm for their class
     pub affinity_hits: usize,
+    /// warm-set entries dropped by the bounded per-worker LRU
+    pub warm_evictions: usize,
     pub utilization: f64,
 }
 
@@ -226,12 +234,14 @@ pub fn simulate_policy(
         .enumerate()
         .map(|(i, &t)| Reverse((f64_key(t), i)))
         .collect();
-    let mut warm: Vec<HashSet<usize>> = vec![HashSet::new(); free_at.len()];
+    let mut warm: Vec<LruSet<usize>> =
+        (0..free_at.len()).map(|_| LruSet::new(cost.warm_capacity)).collect();
     let mut remaining: VecDeque<usize> = (0..tasks.len()).collect();
     let mut completions = vec![0.0; tasks.len()];
     let mut busy = 0.0;
     let mut compiles = 0usize;
     let mut hits = 0usize;
+    let mut evictions = 0usize;
 
     while !remaining.is_empty() {
         let Reverse((_, w)) = heap.pop().expect("at least one worker");
@@ -245,11 +255,13 @@ pub fn simulate_policy(
         let t = remaining.remove(pick).expect("picked index in range");
         let task = tasks[t];
 
-        let compile = if warm[w].contains(&task.class) {
+        let compile = if warm[w].touch(&task.class) {
             hits += 1;
             0.0
         } else {
-            warm[w].insert(task.class);
+            if warm[w].insert(task.class).is_some() {
+                evictions += 1;
+            }
             compiles += 1;
             class_compile_s
         };
@@ -284,6 +296,7 @@ pub fn simulate_policy(
         completions_s: completions,
         compiles,
         affinity_hits: hits,
+        warm_evictions: evictions,
         utilization,
     }
 }
@@ -459,6 +472,26 @@ mod tests {
         // every task completes under both policies
         assert_eq!(aff.completions_s.len(), 96);
         assert!(aff.completions_s.iter().all(|&c| c > 0.0));
+    }
+
+    #[test]
+    fn bounded_warm_sets_force_recompiles_and_count_evictions() {
+        // 4 classes cycling through a single worker with room for only 2:
+        // every task (after the first two) evicts and every pop recompiles
+        let tasks: Vec<SimTask> =
+            (0..16).map(|i| SimTask { service_s: 0.1, class: i % 4 }).collect();
+        let topo = Topology { max_blocks: 1, nodes_per_block: 1, workers_per_node: 1 };
+        let mut tight = CostModel::ideal();
+        tight.warm_capacity = 2;
+        let bounded = simulate_policy(&tasks, topo, tight, 3.0, SimPolicy::Fifo, 9);
+        let roomy = simulate_policy(&tasks, topo, CostModel::ideal(), 3.0, SimPolicy::Fifo, 9);
+        // unbounded (capacity 8 > 4 classes): 4 compiles, no evictions
+        assert_eq!(roomy.compiles, 4);
+        assert_eq!(roomy.warm_evictions, 0);
+        // capacity 2 against a 4-class cycle: every task is cold
+        assert_eq!(bounded.compiles, 16);
+        assert_eq!(bounded.warm_evictions, 14);
+        assert!(bounded.makespan_s > roomy.makespan_s);
     }
 
     #[test]

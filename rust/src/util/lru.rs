@@ -1,0 +1,207 @@
+//! Tiny bounded LRU containers (no external crates offline).
+//!
+//! Worker warm state — compiled PJRT executables, fit scratch workspaces,
+//! affinity keys — must not grow without bound on a long-lived endpoint
+//! serving many shape classes (ROADMAP "warm-state eviction"). Capacities
+//! are small (a handful of shape classes), so a `Vec` in recency order
+//! beats a linked-map: O(cap) scans with perfect cache locality.
+
+use std::borrow::Borrow;
+
+/// Bounded key-value cache with least-recently-used eviction. Recency
+/// order: index 0 is the LRU entry, the back is the MRU entry.
+#[derive(Debug, Clone)]
+pub struct LruCache<K, V> {
+    cap: usize,
+    entries: Vec<(K, V)>,
+}
+
+impl<K: PartialEq, V> LruCache<K, V> {
+    pub fn new(cap: usize) -> LruCache<K, V> {
+        LruCache { cap: cap.max(1), entries: Vec::new() }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn contains<Q>(&self, k: &Q) -> bool
+    where
+        K: Borrow<Q>,
+        Q: PartialEq + ?Sized,
+    {
+        self.entries.iter().any(|(key, _)| key.borrow() == k)
+    }
+
+    /// Refresh `k` to most-recently-used; true if it was present.
+    pub fn touch<Q>(&mut self, k: &Q) -> bool
+    where
+        K: Borrow<Q>,
+        Q: PartialEq + ?Sized,
+    {
+        match self.entries.iter().position(|(key, _)| key.borrow() == k) {
+            Some(i) => {
+                let e = self.entries.remove(i);
+                self.entries.push(e);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Fetch `k`, refreshing it to most-recently-used.
+    pub fn get<Q>(&mut self, k: &Q) -> Option<&V>
+    where
+        K: Borrow<Q>,
+        Q: PartialEq + ?Sized,
+    {
+        if self.touch(k) {
+            self.entries.last().map(|(_, v)| v)
+        } else {
+            None
+        }
+    }
+
+    /// Remove and return the value under `k` (no eviction bookkeeping).
+    pub fn take<Q>(&mut self, k: &Q) -> Option<V>
+    where
+        K: Borrow<Q>,
+        Q: PartialEq + ?Sized,
+    {
+        let i = self.entries.iter().position(|(key, _)| key.borrow() == k)?;
+        Some(self.entries.remove(i).1)
+    }
+
+    /// Insert (or refresh) `k`; returns the evicted LRU entry when the
+    /// cache overflows its capacity.
+    pub fn put(&mut self, k: K, v: V) -> Option<(K, V)> {
+        if let Some(i) = self.entries.iter().position(|(key, _)| *key == k) {
+            self.entries.remove(i);
+        }
+        self.entries.push((k, v));
+        if self.entries.len() > self.cap {
+            Some(self.entries.remove(0))
+        } else {
+            None
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &K> {
+        self.entries.iter().map(|(k, _)| k)
+    }
+}
+
+/// Bounded set with least-recently-used eviction (an [`LruCache`] with
+/// unit values).
+#[derive(Debug, Clone)]
+pub struct LruSet<K> {
+    cache: LruCache<K, ()>,
+}
+
+impl<K: PartialEq> LruSet<K> {
+    pub fn new(cap: usize) -> LruSet<K> {
+        LruSet { cache: LruCache::new(cap) }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cache.capacity()
+    }
+
+    pub fn len(&self) -> usize {
+        self.cache.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cache.is_empty()
+    }
+
+    pub fn contains<Q>(&self, k: &Q) -> bool
+    where
+        K: Borrow<Q>,
+        Q: PartialEq + ?Sized,
+    {
+        self.cache.contains(k)
+    }
+
+    /// Refresh `k` to most-recently-used; true if it was present.
+    pub fn touch<Q>(&mut self, k: &Q) -> bool
+    where
+        K: Borrow<Q>,
+        Q: PartialEq + ?Sized,
+    {
+        self.cache.touch(k)
+    }
+
+    /// Insert (or refresh) `k`; returns the evicted key on overflow.
+    pub fn insert(&mut self, k: K) -> Option<K> {
+        self.cache.put(k, ()).map(|(key, ())| key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_and_evict_lru_order() {
+        let mut c: LruCache<String, u32> = LruCache::new(2);
+        assert!(c.put("a".to_string(), 1).is_none());
+        assert!(c.put("b".to_string(), 2).is_none());
+        // touching "a" makes "b" the LRU victim
+        assert_eq!(c.get("a"), Some(&1));
+        let evicted = c.put("c".to_string(), 3).unwrap();
+        assert_eq!(evicted.0, "b");
+        assert!(c.contains("a") && c.contains("c") && !c.contains("b"));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn put_refreshes_existing_key() {
+        let mut c: LruCache<String, u32> = LruCache::new(2);
+        c.put("a".into(), 1);
+        c.put("b".into(), 2);
+        // re-putting "a" refreshes it instead of evicting
+        assert!(c.put("a".into(), 10).is_none());
+        assert_eq!(c.get("a"), Some(&10));
+        let evicted = c.put("c".into(), 3).unwrap();
+        assert_eq!(evicted.0, "b");
+    }
+
+    #[test]
+    fn take_removes_without_eviction() {
+        let mut c: LruCache<String, u32> = LruCache::new(4);
+        c.put("a".into(), 1);
+        assert_eq!(c.take("a"), Some(1));
+        assert_eq!(c.take("a"), None);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn set_insert_contains_and_evicts() {
+        let mut s: LruSet<usize> = LruSet::new(2);
+        assert!(s.insert(1).is_none());
+        assert!(s.insert(2).is_none());
+        assert!(s.touch(&1));
+        assert_eq!(s.insert(3), Some(2));
+        assert!(s.contains(&1) && s.contains(&3) && !s.contains(&2));
+        assert_eq!(s.len(), 2);
+        // duplicate insert refreshes, never evicts
+        assert!(s.insert(1).is_none());
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let mut s: LruSet<u8> = LruSet::new(0);
+        assert_eq!(s.capacity(), 1);
+        assert!(s.insert(1).is_none());
+        assert_eq!(s.insert(2), Some(1));
+    }
+}

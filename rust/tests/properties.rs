@@ -4,6 +4,7 @@
 //! asymptotic-formula laws.
 
 use pyhf_faas::fitter::native::{asymptotic_cls, NativeFitter};
+use pyhf_faas::fitter::{BaselineFitter, Centers};
 use pyhf_faas::histfactory::dense::{compile, ShapeClass};
 use pyhf_faas::histfactory::spec::Workspace;
 use pyhf_faas::sim::cluster::{simulate, CostModel, Topology};
@@ -175,6 +176,210 @@ fn prop_channel_order_does_not_change_nll_at_init() {
         let nb = fb.nll(&fb.init_theta(1.0), &mb.data, &cb);
         (na - nb).abs() < 1e-9 * (1.0 + na.abs())
     });
+}
+
+// ---------------------------------------------------------------------------
+// fused kernel laws (ISSUE 2)
+// ---------------------------------------------------------------------------
+
+/// Random one-channel workspace exercising every modifier family the dense
+/// kernel handles: normfactor, normsys, histosys, staterror.
+fn rand_ws(g: &mut Gen) -> Workspace {
+    let nb = 2 + g.usize_in(0, 2); // 2..=4 bins
+    let sig: Vec<f64> = g.vec_f64(nb, 0.5, 8.0);
+    let bkg: Vec<f64> = g.vec_f64(nb, 25.0, 95.0);
+    let obs: Vec<f64> = bkg.iter().map(|b| (b + g.f64_in(-4.0, 8.0)).max(1.0).round()).collect();
+    let hi: Vec<f64> = bkg.iter().map(|b| b * (1.0 + g.f64_in(0.01, 0.12))).collect();
+    let lo: Vec<f64> = bkg.iter().map(|b| b * (1.0 - g.f64_in(0.01, 0.12))).collect();
+    let st: Vec<f64> = bkg.iter().map(|b| (b * g.f64_in(0.02, 0.08)).max(0.3)).collect();
+    let fmt = |v: &[f64]| {
+        v.iter().map(|x| format!("{x:.4}")).collect::<Vec<_>>().join(", ")
+    };
+    let kappa_hi = 1.0 + g.f64_in(0.02, 0.2);
+    let kappa_lo = 1.0 - g.f64_in(0.02, 0.2);
+    let doc = format!(
+        r#"{{
+        "channels": [{{"name": "SR", "samples": [
+            {{"name": "signal", "data": [{sig}],
+             "modifiers": [{{"name": "mu", "type": "normfactor", "data": null}}]}},
+            {{"name": "bkg", "data": [{bkg}],
+             "modifiers": [
+                {{"name": "bn", "type": "normsys",
+                 "data": {{"hi": {kappa_hi:.4}, "lo": {kappa_lo:.4}}}}},
+                {{"name": "tilt", "type": "histosys",
+                 "data": {{"hi_data": [{hi}], "lo_data": [{lo}]}}}},
+                {{"name": "st", "type": "staterror", "data": [{st}]}}
+             ]}}
+        ]}}],
+        "observations": [{{"name": "SR", "data": [{obs}]}}],
+        "measurements": [{{"name": "m", "config": {{"poi": "mu", "parameters": []}}}}],
+        "version": "1.0.0"
+    }}"#,
+        sig = fmt(&sig),
+        bkg = fmt(&bkg),
+        hi = fmt(&hi),
+        lo = fmt(&lo),
+        st = fmt(&st),
+        obs = fmt(&obs),
+    );
+    Workspace::from_str(&doc).unwrap()
+}
+
+#[test]
+fn prop_fused_nll_grad_fisher_matches_unfused_and_finite_differences() {
+    forall(37, 30, |g| {
+        (rand_ws(g), g.f64_in(0.3, 3.0), g.f64_in(-1.5, 1.5), g.f64_in(0.9, 1.1))
+    }, |(ws, mu, al, gam)| {
+        let m = compile(ws, &tiny_class()).unwrap();
+        let fused = NativeFitter::new(&m);
+        let seed = BaselineFitter::new(&m);
+        let centers = Centers::nominal(&m);
+        let p_ = m.class.n_params();
+        let f_ = m.class.n_free;
+        let a_ = m.class.n_alpha;
+
+        let mut theta = fused.init_theta(*mu);
+        theta[f_] = *al; // normsys alpha
+        theta[f_ + 1] = -*al; // histosys alpha, opposite side
+        for b in 0..m.n_active_bins {
+            if m.ctype[b] > 0.0 {
+                theta[f_ + a_ + b] = *gam;
+            }
+        }
+
+        // 1. fused NLL equals the unfused seed NLL (the seed additionally
+        // counts a clipped EPS_RATE per padded sample row: ~1e-9 absolute)
+        let n_fused = fused.nll(&theta, &m.data, &centers);
+        let n_seed = seed.nll(&theta, &m.data, &centers);
+        if (n_fused - n_seed).abs() > 1e-6 * (1.0 + n_seed.abs()) {
+            return false;
+        }
+
+        // 2. fused analytic gradient equals central finite differences of
+        // the fused NLL on every non-fixed parameter
+        let fixed = fused.fixed_mask(false);
+        let (grad, _) = fused.grad_fisher(&theta, &m.data, &centers, &fixed);
+        let eps = 1e-6;
+        for p in 0..p_ {
+            if fixed[p] {
+                if grad[p] != 0.0 {
+                    return false;
+                }
+                continue;
+            }
+            let mut tp = theta.clone();
+            tp[p] += eps;
+            let up = fused.nll(&tp, &m.data, &centers);
+            tp[p] -= 2.0 * eps;
+            let dn = fused.nll(&tp, &m.data, &centers);
+            let fd = (up - dn) / (2.0 * eps);
+            if (fd - grad[p]).abs() > 2e-3 * (1.0 + grad[p].abs()) {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn padded_and_compact_evaluations_are_bit_identical() {
+    // the same workspace compiled into an exactly-fitting class and into a
+    // much larger padded class (with a different bin_block tile) must
+    // produce bit-identical NLLs and fits: the fused kernel sweeps only
+    // the active region, so padding cannot perturb the arithmetic
+    let ws = Workspace::from_str(
+        r#"{
+        "channels": [
+            {"name": "SR", "samples": [
+                {"name": "signal", "data": [3.0, 5.0, 2.0],
+                 "modifiers": [{"name": "mu", "type": "normfactor", "data": null}]},
+                {"name": "bkg", "data": [60.0, 50.0, 40.0],
+                 "modifiers": [
+                    {"name": "bn", "type": "normsys", "data": {"hi": 1.08, "lo": 0.93}},
+                    {"name": "tilt", "type": "histosys",
+                     "data": {"hi_data": [62.0, 49.0, 41.0], "lo_data": [58.0, 51.0, 39.0]}},
+                    {"name": "st", "type": "staterror", "data": [2.0, 1.8, 1.5]}
+                 ]}
+            ]},
+            {"name": "CR", "samples": [
+                {"name": "bkg", "data": [100.0, 90.0],
+                 "modifiers": [
+                    {"name": "bn", "type": "normsys", "data": {"hi": 1.1, "lo": 0.9}},
+                    {"name": "dd", "type": "shapesys", "data": [10.0, 9.0]}
+                 ]}
+            ]}
+        ],
+        "observations": [
+            {"name": "SR", "data": [64.0, 54.0, 42.0]},
+            {"name": "CR", "data": [101.0, 88.0]}
+        ],
+        "measurements": [{"name": "m", "config": {"poi": "mu", "parameters": []}}],
+        "version": "1.0.0"
+    }"#,
+    )
+    .unwrap();
+
+    let exact = ShapeClass {
+        name: "exact".into(),
+        n_bins: 5,
+        n_samples: 3,
+        n_alpha: 3,
+        n_free: 1,
+        bin_block: 16,
+        mu_max: 10.0,
+        max_newton: 48,
+        cg_iters: 24,
+    };
+    let padded = ShapeClass {
+        name: "padded".into(),
+        n_bins: 64,
+        n_samples: 24,
+        n_alpha: 24,
+        n_free: 4,
+        bin_block: 8, // different tile: tiling must not change the sums
+        mu_max: 10.0,
+        max_newton: 48,
+        cg_iters: 24,
+    };
+    let me = compile(&ws, &exact).unwrap();
+    let mp = compile(&ws, &padded).unwrap();
+    assert_eq!(me.n_active_bins, mp.n_active_bins);
+    assert_eq!(me.n_active_rows, mp.n_active_rows);
+    assert_eq!(me.n_active_alpha, mp.n_active_alpha);
+
+    let fe = NativeFitter::new(&me);
+    let fp = NativeFitter::new(&mp);
+    let ce = Centers::nominal(&me);
+    let cp = Centers::nominal(&mp);
+
+    // same point, expressed in each class's parameter layout
+    let build_theta = |m: &pyhf_faas::histfactory::dense::DenseModel,
+                       f: &NativeFitter| -> Vec<f64> {
+        let mut th = f.init_theta(1.3);
+        let (f_, a_) = (m.class.n_free, m.class.n_alpha);
+        th[f_] = 0.37;
+        th[f_ + 1] = -0.52;
+        th[f_ + 2] = 0.11;
+        for b in 0..m.n_active_bins {
+            if m.ctype[b] > 0.0 {
+                th[f_ + a_ + b] = 1.07;
+            }
+        }
+        th
+    };
+    let te = build_theta(&me, &fe);
+    let tp = build_theta(&mp, &fp);
+
+    let ne = fe.nll(&te, &me.data, &ce);
+    let np = fp.nll(&tp, &mp.data, &cp);
+    assert_eq!(ne.to_bits(), np.to_bits(), "padded NLL {np} != compact NLL {ne}");
+
+    // full fits walk the identical Newton trajectory bit for bit
+    let re = fe.fit_free(&me.data, &ce);
+    let rp = fp.fit_free(&mp.data, &cp);
+    assert_eq!(re.nll.to_bits(), rp.nll.to_bits());
+    assert_eq!(re.theta[0].to_bits(), rp.theta[0].to_bits());
+    assert_eq!(re.accepted_steps, rp.accepted_steps);
 }
 
 // ---------------------------------------------------------------------------
