@@ -1,0 +1,172 @@
+//! Bench ROUTE — cross-endpoint routing strategies on the two-site
+//! Table-1 workload.
+//!
+//! Workload: the three published analyses (125 x 1Lbb + 76 x 2L0J + 57 x
+//! stau) arriving interleaved at a *federation* of endpoints — the paper's
+//! RIVER endpoint (4 blocks x 24 workers) plus a smaller remote facility
+//! (2 blocks x 24 workers) behind a 0.35 s WAN link. Each routing strategy
+//! places every task at a site; within a site, warm-worker affinity
+//! dispatch serves the stream exactly as in `bench scheduler`.
+//!
+//! `round_robin` is the naive multi-site baseline; `least_loaded` balances
+//! per-worker backlog + link cost; `warm_first` additionally concentrates
+//! each shape class on the site already serving it, spilling only when the
+//! warm site's queueing penalty exceeds the recompile cost.
+//!
+//! Acceptance (asserted): `warm_first` beats `round_robin` on mean task
+//! latency. Emits machine-readable `BENCH_route.json` (schema
+//! `pyhf-faas/bench_route/v1`) next to `BENCH_fit.json`.
+//!
+//! Run: `cargo bench --bench router [-- --quick] [-- --out BENCH_route.json]`
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use pyhf_faas::bench::routejson::{RouteBenchReport, StrategyBench};
+use pyhf_faas::sim::{
+    simulate_sites, table1_mixed_workload, two_site_table1, RouteSim, SimTask, SiteSpec,
+    PAPER_TABLE1,
+};
+use pyhf_faas::util::stats::Summary;
+
+/// Per-worker executable compile cost (seconds) — same term as `bench
+/// scheduler`.
+const CLASS_COMPILE_S: f64 = 5.0;
+
+struct Row {
+    strategy: RouteSim,
+    latency: Summary,
+    makespan: Summary,
+    compiles: f64,
+    warm_hits: f64,
+    spillovers: f64,
+    wall_s: f64,
+}
+
+fn run(strategy: RouteSim, tasks: &[SimTask], sites: &[SiteSpec], trials: u64) -> Row {
+    let t0 = Instant::now();
+    let mut latencies = Vec::new();
+    let mut makespans = Vec::new();
+    let mut compiles = 0.0;
+    let mut warm_hits = 0.0;
+    let mut spillovers = 0.0;
+    for t in 0..trials {
+        let out = simulate_sites(tasks, sites, CLASS_COMPILE_S, strategy, 0x407e + t * 7919);
+        latencies.push(out.mean_latency_s);
+        makespans.push(out.makespan_s);
+        compiles += out.compiles as f64;
+        warm_hits += out.route_warm_hits as f64;
+        spillovers += out.spillovers as f64;
+    }
+    let n = trials as f64;
+    Row {
+        strategy,
+        latency: Summary::of(&latencies),
+        makespan: Summary::of(&makespans),
+        compiles: compiles / n,
+        warm_hits: warm_hits / n,
+        spillovers: spillovers / n,
+        wall_s: t0.elapsed().as_secs_f64(),
+    }
+}
+
+fn print_row(r: &Row) {
+    println!(
+        "{:<14} {:>8.1} ± {:>4.1} {:>10.1} ± {:>4.1} {:>9.1} {:>10.1} {:>7.1}",
+        r.strategy.as_str(),
+        r.latency.mean,
+        r.latency.std,
+        r.makespan.mean,
+        r.makespan.std,
+        r.compiles,
+        r.warm_hits,
+        r.spillovers
+    );
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("BENCH_route.json"));
+    let trials: u64 = if quick { 3 } else { 10 };
+
+    let tasks = table1_mixed_workload();
+    let sites = two_site_table1();
+    let mut report = RouteBenchReport::new("router-bench", quick, "table1-mixed/two-site");
+
+    println!(
+        "=== ROUTE: cross-endpoint strategies on the two-site Table-1 workload \
+         (quick = {quick}, commit {}) ===\n",
+        report.commit
+    );
+    println!(
+        "workload: {} tasks ({}) over {} sites ({} + {} workers, remote link {:.2} s), \
+         compile {CLASS_COMPILE_S:.0} s/class/worker, {trials} trials\n",
+        tasks.len(),
+        PAPER_TABLE1
+            .iter()
+            .map(|r| format!("{} x {}", r.patches, r.analysis))
+            .collect::<Vec<_>>()
+            .join(" + "),
+        sites.len(),
+        sites[0].topo.workers(),
+        sites[1].topo.workers(),
+        sites[1].link_s,
+    );
+    println!(
+        "{:<14} {:>15} {:>17} {:>9} {:>10} {:>7}",
+        "strategy", "mean latency (s)", "makespan (s)", "compiles", "warm hits", "spills"
+    );
+
+    let mut rows = Vec::new();
+    for strategy in [RouteSim::RoundRobin, RouteSim::LeastLoaded, RouteSim::WarmFirst] {
+        let row = run(strategy, &tasks, &sites, trials);
+        print_row(&row);
+        report.strategies.push(StrategyBench {
+            strategy: row.strategy.as_str().to_string(),
+            mean_latency_s: row.latency.mean,
+            makespan_s: row.makespan.mean,
+            compiles: row.compiles,
+            route_warm_hits: row.warm_hits,
+            spillovers: row.spillovers,
+            wall_s: row.wall_s,
+        });
+        rows.push(row);
+    }
+
+    report.write(&out_path).expect("write BENCH_route.json");
+    println!("\nwrote {}", out_path.display());
+
+    // acceptance: warm-first routing beats round-robin on mean latency for
+    // the mixed workload over the two-site topology, and never loses to
+    // plain load balancing
+    let rr = &rows[0];
+    let ll = &rows[1];
+    let wf = &rows[2];
+    assert!(
+        wf.latency.mean < rr.latency.mean,
+        "warm_first mean latency {:.2} s must beat round_robin {:.2} s",
+        wf.latency.mean,
+        rr.latency.mean
+    );
+    assert!(
+        wf.latency.mean <= ll.latency.mean * 1.05,
+        "warm_first {:.2} s must not lose to least_loaded {:.2} s by more than 5%",
+        wf.latency.mean,
+        ll.latency.mean
+    );
+    assert!(wf.warm_hits > 0.0);
+    println!(
+        "\ncheck PASSED: warm_first mean latency {:.1} s < round_robin {:.1} s \
+         ({:.0}% warm placements, {:.1} spillovers/trial).",
+        wf.latency.mean,
+        rr.latency.mean,
+        wf.warm_hits / tasks.len() as f64 * 100.0,
+        wf.spillovers
+    );
+}

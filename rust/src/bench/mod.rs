@@ -3,6 +3,8 @@
 pub mod fitjson;
 pub mod harness;
 pub mod measure;
+pub mod routejson;
 
 pub use fitjson::{ClassBench, FitBenchReport};
 pub use harness::{bench, BenchResult, Bencher};
+pub use routejson::{RouteBenchReport, StrategyBench};

@@ -1,0 +1,189 @@
+//! Machine-readable router-bench report (`BENCH_route.json`).
+//!
+//! `cargo bench --bench router` emits this schema next to `BENCH_fit.json`
+//! so the scheduling layer's routing trajectory is tracked across PRs (and
+//! archived as a CI artifact): one entry per routing strategy replayed over
+//! the two-site Table-1 workload.
+
+use std::path::Path;
+
+use crate::bench::fitjson::git_commit;
+use crate::util::json::{self, Json};
+
+/// Schema tag checked by CI and by [`validate`].
+pub const SCHEMA: &str = "pyhf-faas/bench_route/v1";
+
+/// Replay numbers for one routing strategy.
+#[derive(Debug, Clone)]
+pub struct StrategyBench {
+    pub strategy: String,
+    /// mean task latency over trials (seconds)
+    pub mean_latency_s: f64,
+    /// mean makespan over trials (seconds)
+    pub makespan_s: f64,
+    /// mean cold (worker, class) compiles per trial
+    pub compiles: f64,
+    /// mean router-level warm placements per trial
+    pub route_warm_hits: f64,
+    /// mean spillovers off a saturated warm site per trial
+    pub spillovers: f64,
+    /// wall time spent benchmarking this strategy
+    pub wall_s: f64,
+}
+
+impl StrategyBench {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("strategy", Json::str(self.strategy.clone())),
+            ("mean_latency_s", Json::num(self.mean_latency_s)),
+            ("makespan_s", Json::num(self.makespan_s)),
+            ("compiles", Json::num(self.compiles)),
+            ("route_warm_hits", Json::num(self.route_warm_hits)),
+            ("spillovers", Json::num(self.spillovers)),
+            ("wall_s", Json::num(self.wall_s)),
+        ])
+    }
+}
+
+/// The full report.
+#[derive(Debug, Clone)]
+pub struct RouteBenchReport {
+    /// producer: "router-bench"
+    pub source: String,
+    /// quick (CI smoke) mode: fewer trials
+    pub quick: bool,
+    pub commit: String,
+    /// workload descriptor, e.g. "table1-mixed/two-site"
+    pub workload: String,
+    pub strategies: Vec<StrategyBench>,
+}
+
+impl RouteBenchReport {
+    pub fn new(source: &str, quick: bool, workload: &str) -> RouteBenchReport {
+        RouteBenchReport {
+            source: source.to_string(),
+            quick,
+            commit: git_commit(),
+            workload: workload.to_string(),
+            strategies: Vec::new(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str(SCHEMA)),
+            ("source", Json::str(self.source.clone())),
+            ("quick", Json::Bool(self.quick)),
+            ("commit", Json::str(self.commit.clone())),
+            ("workload", Json::str(self.workload.clone())),
+            (
+                "strategies",
+                Json::Arr(self.strategies.iter().map(|s| s.to_json()).collect()),
+            ),
+        ])
+    }
+
+    /// Serialize to `path` (pretty-printed), schema-checked first.
+    pub fn write(&self, path: &Path) -> Result<(), String> {
+        let doc = self.to_json();
+        validate(&doc)?;
+        std::fs::write(path, json::to_string_pretty(&doc))
+            .map_err(|e| format!("write {}: {e}", path.display()))
+    }
+}
+
+/// Schema check: every required key present with the right type, every
+/// number finite and non-negative.
+pub fn validate(doc: &Json) -> Result<(), String> {
+    let schema = doc.get("schema").and_then(|v| v.as_str()).ok_or("missing 'schema'")?;
+    if schema != SCHEMA {
+        return Err(format!("schema '{schema}' != '{SCHEMA}'"));
+    }
+    doc.get("source").and_then(|v| v.as_str()).ok_or("missing 'source'")?;
+    doc.get("commit").and_then(|v| v.as_str()).ok_or("missing 'commit'")?;
+    doc.get("workload").and_then(|v| v.as_str()).ok_or("missing 'workload'")?;
+    match doc.get("quick") {
+        Some(Json::Bool(_)) => {}
+        _ => return Err("missing boolean 'quick'".to_string()),
+    }
+    let strategies =
+        doc.get("strategies").and_then(|v| v.as_arr()).ok_or("missing 'strategies'")?;
+    if strategies.is_empty() {
+        return Err("empty 'strategies'".to_string());
+    }
+    for (i, s) in strategies.iter().enumerate() {
+        s.get("strategy")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| format!("strategies[{i}]: missing 'strategy'"))?;
+        for key in [
+            "mean_latency_s",
+            "makespan_s",
+            "compiles",
+            "route_warm_hits",
+            "spillovers",
+            "wall_s",
+        ] {
+            let v = s
+                .get(key)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| format!("strategies[{i}]: missing numeric '{key}'"))?;
+            if !v.is_finite() || v < 0.0 {
+                return Err(format!("strategies[{i}].{key}: bad value {v}"));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RouteBenchReport {
+        let mut r = RouteBenchReport::new("router-bench", true, "table1-mixed/two-site");
+        for name in ["round_robin", "warm_first"] {
+            r.strategies.push(StrategyBench {
+                strategy: name.into(),
+                mean_latency_s: 50.0,
+                makespan_s: 120.0,
+                compiles: 144.0,
+                route_warm_hits: 200.0,
+                spillovers: 3.0,
+                wall_s: 0.2,
+            });
+        }
+        r
+    }
+
+    #[test]
+    fn report_roundtrips_and_validates() {
+        let doc = sample().to_json();
+        validate(&doc).unwrap();
+        let text = json::to_string_pretty(&doc);
+        let parsed = json::parse(&text).unwrap();
+        validate(&parsed).unwrap();
+        assert_eq!(parsed.get("schema").unwrap().as_str(), Some(SCHEMA));
+        let st = parsed.get("strategies").unwrap().as_arr().unwrap();
+        assert_eq!(st.len(), 2);
+        assert_eq!(st[1].get("strategy").unwrap().as_str(), Some("warm_first"));
+    }
+
+    #[test]
+    fn validate_rejects_missing_and_bad_fields() {
+        let mut r = sample();
+        r.strategies[0].mean_latency_s = f64::NAN;
+        assert!(validate(&r.to_json()).is_err());
+        let mut r = sample();
+        r.strategies.clear();
+        assert!(validate(&r.to_json()).unwrap_err().contains("empty"));
+        let doc = json::parse(r#"{"schema": "nope"}"#).unwrap();
+        assert!(validate(&doc).is_err());
+        let doc = json::parse(
+            r#"{"schema": "pyhf-faas/bench_route/v1", "source": "x", "commit": "c",
+                "workload": "w", "quick": true, "strategies": [{"strategy": "rr"}]}"#,
+        )
+        .unwrap();
+        let err = validate(&doc).unwrap_err();
+        assert!(err.contains("mean_latency_s"), "{err}");
+    }
+}

@@ -70,6 +70,19 @@ impl FaasClient {
         self.service.wait_result(task, timeout)
     }
 
+    /// Submit a task letting the service's installed cross-endpoint router
+    /// pick the endpoint (the multi-site analog of [`FaasClient::run`];
+    /// see `Service::install_router`).
+    pub fn run_routed(&self, payload: Json, function_id: FunctionId) -> Result<TaskId, String> {
+        self.service.submit_routed(function_id, payload)
+    }
+
+    /// Cancel (or drain) a task this client no longer wants; see
+    /// `Service::cancel` for the per-state semantics.
+    pub fn cancel(&self, task: TaskId) -> bool {
+        self.service.cancel(task)
+    }
+
     /// Submit a payload wave through the batcher: identical payloads are
     /// deduped (sharing one execution), unique same-class payloads are
     /// coalesced into `{"batch": [...]}` tasks of at most `max_batch` fits.
@@ -83,36 +96,101 @@ impl FaasClient {
         function_id: FunctionId,
         max_batch: usize,
     ) -> Result<BatchSubmission, String> {
+        self.coalesce_with(payloads, max_batch, |p| self.run(p, endpoint_id, function_id))
+    }
+
+    /// [`FaasClient::run_coalesced`] through the cross-endpoint router:
+    /// each coalesced group is routed independently, so one wave can fan
+    /// out across sites while every group still lands whole on one warm
+    /// executable.
+    pub fn run_coalesced_routed(
+        &self,
+        payloads: &[Json],
+        function_id: FunctionId,
+        max_batch: usize,
+    ) -> Result<BatchSubmission, String> {
+        self.coalesce_with(payloads, max_batch, |p| self.run_routed(p, function_id))
+    }
+
+    fn coalesce_with(
+        &self,
+        payloads: &[Json],
+        max_batch: usize,
+        mut submit: impl FnMut(Json) -> Result<TaskId, String>,
+    ) -> Result<BatchSubmission, String> {
         let plan = plan_batches(payloads, max_batch);
+        let group_payloads: Vec<Json> =
+            (0..plan.n_tasks()).map(|g| plan.group_payload(g, payloads)).collect();
+        let sizes: Vec<u64> = plan.groups.iter().map(|g| g.len() as u64).collect();
+        let mut next = 0usize;
+        let tasks = self.submit_wave(group_payloads, |p| {
+            let submitted = submit(p);
+            if submitted.is_ok() {
+                // count only accepted coalesced submissions
+                self.service.metrics.batch_submitted(sizes[next]);
+            }
+            next += 1;
+            submitted
+        })?;
+        // dedup elisions only count once the wave is actually on the wire —
+        // an aborted wave elided nothing
         if plan.dedup_hits > 0 {
             self.service.metrics.dedup_hit(plan.dedup_hits as u64);
-        }
-        let mut tasks = Vec::with_capacity(plan.n_tasks());
-        for g in 0..plan.n_tasks() {
-            self.service.metrics.batch_submitted(plan.groups[g].len() as u64);
-            tasks.push(self.run(plan.group_payload(g, payloads), endpoint_id, function_id)?);
         }
         Ok(BatchSubmission { tasks, plan })
     }
 
-    /// Submit many payloads and return task ids (scan fan-out).
+    /// Submit a wave of payloads through `submit`, cancelling every
+    /// already-submitted task if a later submission fails: on `Err` the
+    /// caller gets no ids back, so nothing could ever drain or cancel the
+    /// tasks already on the wire. All multi-payload entry points
+    /// ([`FaasClient::run_batch`], the coalesced waves, the scan driver's
+    /// fan-out) share this sweep.
+    pub fn submit_wave(
+        &self,
+        payloads: Vec<Json>,
+        mut submit: impl FnMut(Json) -> Result<TaskId, String>,
+    ) -> Result<Vec<TaskId>, String> {
+        let n = payloads.len();
+        let mut tasks = Vec::with_capacity(n);
+        for p in payloads {
+            match submit(p) {
+                Ok(id) => tasks.push(id),
+                Err(e) => {
+                    let cancelled = tasks.iter().filter(|&&t| self.cancel(t)).count();
+                    return Err(format!(
+                        "wave aborted after {} of {n} submissions: {e} \
+                         ({cancelled} already-submitted tasks cancelled)",
+                        tasks.len()
+                    ));
+                }
+            }
+        }
+        Ok(tasks)
+    }
+
+    /// Submit many payloads and return task ids (scan fan-out); a mid-wave
+    /// submission failure cancels the whole wave.
     pub fn run_batch(
         &self,
         payloads: Vec<Json>,
         endpoint_id: EndpointId,
         function_id: FunctionId,
     ) -> Result<Vec<TaskId>, String> {
-        payloads
-            .into_iter()
-            .map(|p| self.run(p, endpoint_id, function_id))
-            .collect()
+        self.submit_wave(payloads, |p| self.run(p, endpoint_id, function_id))
     }
 
     /// Gather all results, invoking `on_complete(index, result)` as each
     /// arrives (drives the Listing-2-style completion stream). Polling
-    /// mirrors the paper's client loop. `stall_timeout` (if set) aborts when
+    /// mirrors the paper's client loop, but only still-outstanding slots
+    /// are scanned each iteration. `stall_timeout` (if set) aborts when
     /// *nothing* completes for that long — the fail-fast path when every
     /// worker died at init (missing artifacts, broken endpoint).
+    ///
+    /// Both error paths cancel every outstanding task before returning
+    /// (`Service::cancel`): queued tasks are removed so they never occupy a
+    /// worker, running ones are marked abandoned so their results are
+    /// dropped on arrival instead of leaking in the service store.
     pub fn gather<F: FnMut(usize, &Result<Json, String>)>(
         &self,
         tasks: &[TaskId],
@@ -124,36 +202,53 @@ impl FaasClient {
         let deadline = Instant::now() + timeout;
         let mut last_progress = Instant::now();
         let mut results: Vec<Option<Result<Json, String>>> = vec![None; tasks.len()];
-        let mut remaining = tasks.len();
-        while remaining > 0 {
+        // indices still awaiting a result: completed slots leave the scan
+        // set, so each poll is O(outstanding), not O(total wave)
+        let mut pending: Vec<usize> = (0..tasks.len()).collect();
+        loop {
+            // harvest BEFORE the deadline/stall checks: results that
+            // arrived during the last sleep must be collected, not
+            // destroyed by the cancel sweep below
+            pending.retain(|&i| match self.get_result(tasks[i]) {
+                Some(r) => {
+                    on_complete(i, &r);
+                    results[i] = Some(r);
+                    last_progress = Instant::now();
+                    false
+                }
+                None => true,
+            });
+            if pending.is_empty() {
+                break;
+            }
             if Instant::now() > deadline {
-                return Err(format!("timeout with {remaining} tasks outstanding"));
+                let cancelled = self.cancel_outstanding(tasks, &pending);
+                return Err(format!(
+                    "timeout with {} tasks outstanding ({cancelled} cancelled)",
+                    pending.len()
+                ));
             }
             if let Some(stall) = stall_timeout {
                 if Instant::now() - last_progress > stall {
+                    let n = pending.len();
+                    let cancelled = self.cancel_outstanding(tasks, &pending);
                     return Err(format!(
-                        "no task completed for {:.0} s with {remaining} outstanding — \
-                         endpoint unhealthy? (check worker init: artifacts present?)",
+                        "no task completed for {:.0} s with {n} outstanding \
+                         ({cancelled} cancelled) — endpoint unhealthy? (check \
+                         worker init: artifacts present?)",
                         stall.as_secs_f64()
                     ));
                 }
             }
-            for (i, &t) in tasks.iter().enumerate() {
-                if results[i].is_some() {
-                    continue;
-                }
-                if let Some(r) = self.get_result(t) {
-                    on_complete(i, &r);
-                    results[i] = Some(r);
-                    remaining -= 1;
-                    last_progress = Instant::now();
-                }
-            }
-            if remaining > 0 {
-                std::thread::sleep(poll);
-            }
+            std::thread::sleep(poll);
         }
         Ok(results.into_iter().map(|r| r.unwrap()).collect())
+    }
+
+    /// Cancel every still-pending slot of an abandoned gather; returns how
+    /// many tasks were actually cancelled (vs merely drained).
+    fn cancel_outstanding(&self, tasks: &[TaskId], pending: &[usize]) -> usize {
+        pending.iter().filter(|&&i| self.service.cancel(tasks[i])).count()
     }
 }
 

@@ -44,6 +44,14 @@ impl Default for ScanOptions {
     }
 }
 
+/// Where a scan's tasks go: one named endpoint (the seed behavior) or the
+/// service's installed cross-endpoint router.
+#[derive(Debug, Clone, Copy)]
+enum ScanTarget {
+    Endpoint(EndpointId),
+    Routed,
+}
+
 /// Run a full signal-grid scan of `pallet` through the FaaS fabric.
 ///
 /// Submits one fit task per patch (payload = patched workspace JSON, the
@@ -52,6 +60,29 @@ impl Default for ScanOptions {
 pub fn run_scan(
     client: &FaasClient,
     endpoint: EndpointId,
+    function: FunctionId,
+    pallet: &Pallet,
+    opts: &ScanOptions,
+) -> Result<ScanResult, String> {
+    scan_impl(client, ScanTarget::Endpoint(endpoint), function, pallet, opts)
+}
+
+/// [`run_scan`] through the service's cross-endpoint router: every task (or
+/// coalesced batch) is placed by the installed `RouteStrategy`, so one scan
+/// fans out across all registered sites. Requires `Service::install_router`
+/// to have been called.
+pub fn run_scan_routed(
+    client: &FaasClient,
+    function: FunctionId,
+    pallet: &Pallet,
+    opts: &ScanOptions,
+) -> Result<ScanResult, String> {
+    scan_impl(client, ScanTarget::Routed, function, pallet, opts)
+}
+
+fn scan_impl(
+    client: &FaasClient,
+    target: ScanTarget,
     function: FunctionId,
     pallet: &Pallet,
     opts: &ScanOptions,
@@ -69,11 +100,13 @@ pub fn run_scan(
     }
 
     let results = if opts.batch <= 1 {
-        // one task per patch + Listing-2 completion stream (seed behavior)
-        let mut tasks = Vec::with_capacity(n);
-        for payload in payloads {
-            tasks.push(client.run(payload, endpoint, function)?);
-        }
+        // one task per patch + Listing-2 completion stream (seed behavior);
+        // submit_wave cancels the fan-out already on the wire if a
+        // mid-wave submission fails
+        let tasks = client.submit_wave(payloads, |p| match target {
+            ScanTarget::Endpoint(ep) => client.run(p, ep, function),
+            ScanTarget::Routed => client.run_routed(p, function),
+        })?;
         let mut done = 0usize;
         client.gather(&tasks, opts.timeout, opts.poll, Some(opts.stall_timeout), |i, r| {
             done += 1;
@@ -86,7 +119,12 @@ pub fn run_scan(
         })?
     } else {
         // coalesced fan-out: dedup + same-class batches of opts.batch fits
-        let sub = client.run_coalesced(&payloads, endpoint, function, opts.batch)?;
+        let sub = match target {
+            ScanTarget::Endpoint(ep) => {
+                client.run_coalesced(&payloads, ep, function, opts.batch)?
+            }
+            ScanTarget::Routed => client.run_coalesced_routed(&payloads, function, opts.batch)?,
+        };
         let mut done = 0usize;
         let group_results = client
             .gather(&sub.tasks, opts.timeout, opts.poll, Some(opts.stall_timeout), |g, r| {

@@ -5,6 +5,7 @@
 //! identified by an id the client passes to `run` — "resources on different
 //! HPCs can be accessed by simply changing the endpoint identifier".
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use crate::coordinator::executor::{ExecutorConfig, HighThroughputExecutor};
@@ -14,6 +15,7 @@ use crate::coordinator::service::{ServiceHandle, TaskQueue, WorkerInit};
 use crate::coordinator::task::EndpointId;
 use crate::scheduler::autoscale::AutoscaleConfig;
 use crate::scheduler::policy::PolicyKind;
+use crate::scheduler::router::EndpointProbe;
 
 /// Endpoint configuration (descriptive metadata + execution setup).
 pub struct EndpointConfig {
@@ -112,6 +114,19 @@ impl Endpoint {
         self.metrics.snapshot()
     }
 
+    /// Live load probe for the cross-endpoint router: queued fit weight
+    /// from the interchange, the executor's live-worker counter, and the
+    /// interchange-reported shape-class hit rate. The probe holds only
+    /// `Arc`s, so it stays valid (reporting an idle endpoint) after
+    /// shutdown.
+    pub fn probe(&self) -> Arc<dyn EndpointProbe> {
+        Arc::new(LiveEndpointProbe {
+            queue: self.queue.clone(),
+            metrics: self.metrics.clone(),
+            workers: self.executor.as_ref().map(|e| e.active_workers_handle()),
+        })
+    }
+
     /// Drain and stop: closes the interchange (workers finish queued tasks
     /// first), joins threads, deregisters.
     pub fn shutdown(mut self) {
@@ -119,6 +134,33 @@ impl Endpoint {
             exec.shutdown(&self.queue);
         }
         self.service.deregister_endpoint(self.id);
+    }
+}
+
+/// [`EndpointProbe`] over a live endpoint's interchange + executor.
+struct LiveEndpointProbe {
+    queue: Arc<TaskQueue>,
+    metrics: Arc<Metrics>,
+    workers: Option<Arc<AtomicUsize>>,
+}
+
+impl EndpointProbe for LiveEndpointProbe {
+    fn queued_weight(&self) -> usize {
+        self.queue.queued_weight()
+    }
+
+    fn active_workers(&self) -> usize {
+        self.workers.as_ref().map(|w| w.load(Ordering::SeqCst)).unwrap_or(0)
+    }
+
+    fn warm_hit_rate(&self) -> f64 {
+        let (hits, misses) = self.metrics.affinity_counts();
+        if hits + misses == 0 {
+            // no keyed pop observed yet: presume the endpoint can stay warm
+            1.0
+        } else {
+            hits as f64 / (hits + misses) as f64
+        }
     }
 }
 

@@ -220,6 +220,12 @@ impl HighThroughputExecutor {
         self.active_workers.load(Ordering::SeqCst)
     }
 
+    /// Shared live-worker counter, for probes that outlive this handle
+    /// (the cross-endpoint router reads it through `Endpoint::probe`).
+    pub fn active_workers_handle(&self) -> Arc<AtomicUsize> {
+        self.active_workers.clone()
+    }
+
     /// Live (non-retired) blocks.
     pub fn blocks(&self) -> usize {
         self.live_blocks.load(Ordering::SeqCst)

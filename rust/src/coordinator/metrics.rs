@@ -4,8 +4,9 @@
 //!
 //! Scheduler accounting rides on the same hub: the interchange counts
 //! affinity hits/misses at pop time, the client-side batcher counts
-//! coalesced submissions and dedup elisions, and the autoscaler counts
-//! blocks acquired and released.
+//! coalesced submissions and dedup elisions, the autoscaler counts blocks
+//! acquired and released, and the cross-endpoint router counts routed
+//! submissions, endpoint-level warm hits and load spillovers.
 
 use std::sync::Mutex;
 
@@ -26,6 +27,10 @@ struct Inner {
     batched_tasks: u64,
     dedup_hits: u64,
     warm_evictions: u64,
+    routed: u64,
+    route_warm_hits: u64,
+    route_spillovers: u64,
+    cancelled: u64,
     wait: Accumulator,
     service: Accumulator,
     startup: Accumulator,
@@ -57,6 +62,14 @@ pub struct Snapshot {
     pub dedup_hits: u64,
     /// warm-set entries dropped by the bounded per-worker LRU
     pub warm_evictions: u64,
+    /// tasks placed by the cross-endpoint router
+    pub routed: u64,
+    /// routed tasks that landed on an endpoint already warm for their key
+    pub route_warm_hits: u64,
+    /// routed tasks steered off a warm endpoint because it was saturated
+    pub route_spillovers: u64,
+    /// tasks cancelled by the client before completion
+    pub cancelled: u64,
     pub mean_wait_s: f64,
     pub mean_service_s: f64,
     pub total_service_s: f64,
@@ -126,6 +139,31 @@ impl Metrics {
         self.inner.lock().unwrap().warm_evictions += 1;
     }
 
+    /// The cross-endpoint router placed one task.
+    pub fn task_routed(&self, warm_hit: bool, spillover: bool) {
+        let mut g = self.inner.lock().unwrap();
+        g.routed += 1;
+        if warm_hit {
+            g.route_warm_hits += 1;
+        }
+        if spillover {
+            g.route_spillovers += 1;
+        }
+    }
+
+    /// A client cancelled a task before it completed.
+    pub fn task_cancelled(&self) {
+        self.inner.lock().unwrap().cancelled += 1;
+    }
+
+    /// (hits, misses) of keyed pops — the narrow read the cross-endpoint
+    /// router's probes poll on every routing decision, so they don't build
+    /// a full [`Snapshot`] under the router lock.
+    pub fn affinity_counts(&self) -> (u64, u64) {
+        let g = self.inner.lock().unwrap();
+        (g.affinity_hits, g.affinity_misses)
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let g = self.inner.lock().unwrap();
         Snapshot {
@@ -141,6 +179,10 @@ impl Metrics {
             batched_tasks: g.batched_tasks,
             dedup_hits: g.dedup_hits,
             warm_evictions: g.warm_evictions,
+            routed: g.routed,
+            route_warm_hits: g.route_warm_hits,
+            route_spillovers: g.route_spillovers,
+            cancelled: g.cancelled,
             mean_wait_s: if g.wait.count() > 0 { g.wait.mean() } else { 0.0 },
             mean_service_s: if g.service.count() > 0 { g.service.mean() } else { 0.0 },
             total_service_s: g.service.mean() * g.service.count() as f64,
@@ -161,6 +203,16 @@ impl Snapshot {
         }
     }
 
+    /// Fraction of routed tasks placed on an already-warm endpoint (0 when
+    /// nothing was routed).
+    pub fn route_warm_rate(&self) -> f64 {
+        if self.routed == 0 {
+            0.0
+        } else {
+            self.route_warm_hits as f64 / self.routed as f64
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("submitted", Json::num(self.submitted as f64)),
@@ -175,6 +227,10 @@ impl Snapshot {
             ("batched_tasks", Json::num(self.batched_tasks as f64)),
             ("dedup_hits", Json::num(self.dedup_hits as f64)),
             ("warm_evictions", Json::num(self.warm_evictions as f64)),
+            ("routed", Json::num(self.routed as f64)),
+            ("route_warm_hits", Json::num(self.route_warm_hits as f64)),
+            ("route_spillovers", Json::num(self.route_spillovers as f64)),
+            ("cancelled", Json::num(self.cancelled as f64)),
             ("mean_wait_s", Json::num(self.mean_wait_s)),
             ("mean_service_s", Json::num(self.mean_service_s)),
             ("total_service_s", Json::num(self.total_service_s)),
@@ -241,5 +297,26 @@ mod tests {
     #[test]
     fn empty_hit_rate_is_zero() {
         assert_eq!(Metrics::new().snapshot().affinity_hit_rate(), 0.0);
+        assert_eq!(Metrics::new().snapshot().route_warm_rate(), 0.0);
+    }
+
+    #[test]
+    fn router_and_cancel_counters_accumulate() {
+        let m = Metrics::new();
+        m.task_routed(false, false); // cold first placement
+        m.task_routed(true, false); // warm hit
+        m.task_routed(true, false);
+        m.task_routed(false, true); // spillover off a saturated warm site
+        m.task_cancelled();
+        let s = m.snapshot();
+        assert_eq!(s.routed, 4);
+        assert_eq!(s.route_warm_hits, 2);
+        assert_eq!(s.route_spillovers, 1);
+        assert_eq!(s.cancelled, 1);
+        assert!((s.route_warm_rate() - 0.5).abs() < 1e-12);
+        let j = s.to_json();
+        assert_eq!(j.get("routed").unwrap().as_f64(), Some(4.0));
+        assert_eq!(j.get("route_spillovers").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("cancelled").unwrap().as_f64(), Some(1.0));
     }
 }

@@ -10,8 +10,11 @@
 //!
 //! Dispatch (routing, batching, autoscaling) is pluggable via the
 //! [`crate::scheduler`] subsystem: endpoints pick a policy with
-//! [`EndpointConfig::with_policy`] and elastic-block behavior with
-//! [`EndpointConfig::with_autoscale`].
+//! [`EndpointConfig::with_policy`], elastic-block behavior with
+//! [`EndpointConfig::with_autoscale`], and multi-site placement with
+//! `Service::install_router` (a [`crate::scheduler::Router`] fed by
+//! [`Endpoint::probe`]) + [`FaasClient::run_routed`] /
+//! [`run_scan_routed`].
 
 pub mod client;
 pub mod driver;
@@ -25,7 +28,7 @@ pub mod service;
 pub mod task;
 
 pub use client::{BatchSubmission, FaasClient};
-pub use driver::{run_scan, ScanOptions};
+pub use driver::{run_scan, run_scan_routed, ScanOptions};
 pub use endpoint::{Endpoint, EndpointConfig};
 pub use executor::ExecutorConfig;
 pub use provider::{LocalProvider, Provider, SimSlurmProvider};

@@ -15,6 +15,7 @@ use std::time::{Duration, Instant};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::task::{EndpointId, FunctionId, TaskId, TaskOutcome, TaskRecord, TaskState};
 use crate::scheduler::policy::TaskMeta;
+use crate::scheduler::router::Router;
 use crate::util::json::Json;
 
 /// The interchange between the service and one endpoint's workers. Since
@@ -70,10 +71,32 @@ struct State {
     next_endpoint: EndpointId,
 }
 
+/// Why a submission was rejected: fatal rejections propagate as-is, while
+/// endpoint-gone rejections (the target deregistered or closed its
+/// interchange between routing and enqueue) carry the payload back so the
+/// routed path can retry it on a surviving endpoint.
+enum Rejection {
+    Fatal(String),
+    EndpointGone { reason: String, payload: Json },
+}
+
+impl Rejection {
+    fn into_message(self) -> String {
+        match self {
+            Rejection::Fatal(msg) => msg,
+            Rejection::EndpointGone { reason, .. } => reason,
+        }
+    }
+}
+
 /// The service hub. Clone the `Arc` freely; everything inside is locked.
 pub struct Service {
     state: Mutex<State>,
     results: Condvar,
+    /// cross-endpoint router (None until [`Service::install_router`]); its
+    /// own lock, never taken while `state` is held — routing reads endpoint
+    /// probes, which take the interchange locks
+    router: Mutex<Option<Router>>,
     pub metrics: Metrics,
 }
 
@@ -81,7 +104,12 @@ pub type ServiceHandle = Arc<Service>;
 
 impl Service {
     pub fn new() -> ServiceHandle {
-        Arc::new(Service { state: Mutex::new(State::default()), results: Condvar::new(), metrics: Metrics::new() })
+        Arc::new(Service {
+            state: Mutex::new(State::default()),
+            results: Condvar::new(),
+            router: Mutex::new(None),
+            metrics: Metrics::new(),
+        })
     }
 
     // -- registry ---------------------------------------------------------
@@ -109,9 +137,79 @@ impl Service {
     }
 
     pub fn deregister_endpoint(&self, id: EndpointId) {
-        let mut g = self.state.lock().unwrap();
-        if let Some(q) = g.endpoints.remove(&id) {
+        let queue = self.state.lock().unwrap().endpoints.remove(&id);
+        if let Some(q) = queue {
             q.close();
+        }
+        // a deregistered endpoint must leave the routing candidate set too:
+        // its probe reports zero load forever, which would otherwise make
+        // it the permanent least-loaded pick (and every routed submission
+        // to it a hard failure)
+        if let Some(router) = self.router.lock().unwrap().as_mut() {
+            router.remove_target(id);
+        }
+    }
+
+    // -- cross-endpoint routing -------------------------------------------
+
+    /// Install (or replace) the multi-endpoint router used by
+    /// [`Service::submit_routed`].
+    pub fn install_router(&self, router: Router) {
+        *self.router.lock().unwrap() = Some(router);
+    }
+
+    pub fn has_router(&self) -> bool {
+        self.router.lock().unwrap().is_some()
+    }
+
+    /// Name of the installed routing strategy, if any.
+    pub fn route_strategy_name(&self) -> Option<&'static str> {
+        self.router.lock().unwrap().as_ref().map(|r| r.strategy_name())
+    }
+
+    /// Submit a task letting the installed router pick the endpoint: the
+    /// multi-site analog of [`Service::submit`]. Routing decisions are
+    /// counted on the service metrics hub (`routed` / `route_warm_hits` /
+    /// `route_spillovers`) — only once the submission is actually accepted,
+    /// so failed submissions don't inflate the placement counters or the
+    /// router's warm sets.
+    ///
+    /// Routing races endpoint shutdown: the router can pick an endpoint
+    /// that deregisters (or closes its interchange) between the decision
+    /// and the enqueue. Such rejections evict the dead endpoint from the
+    /// router and re-decide among the survivors — the loop is bounded
+    /// because every retry shrinks the candidate set.
+    pub fn submit_routed(&self, function: FunctionId, payload: Json) -> Result<TaskId, String> {
+        let key = crate::scheduler::affinity_key_of(function, &payload);
+        let weight = crate::scheduler::batcher::payload_weight(&payload);
+        let mut payload = payload;
+        loop {
+            let decision = {
+                let mut guard = self.router.lock().unwrap();
+                let router = guard
+                    .as_mut()
+                    .ok_or("no router installed on this service (Service::install_router)")?;
+                router.decide(&key, weight).ok_or("router has no registered endpoints")?
+            };
+            match self.submit_with_meta(decision.endpoint, function, payload, key.clone(), weight)
+            {
+                Ok(id) => {
+                    // commit warmth and counters only now: a failed submit
+                    // must not skew placement state or metrics
+                    if let Some(router) = self.router.lock().unwrap().as_mut() {
+                        router.note_routed(decision.endpoint, &key);
+                    }
+                    self.metrics.task_routed(decision.warm_hit, decision.spillover);
+                    return Ok(id);
+                }
+                Err(Rejection::Fatal(msg)) => return Err(msg),
+                Err(Rejection::EndpointGone { reason: _, payload: p }) => {
+                    payload = p;
+                    if let Some(router) = self.router.lock().unwrap().as_mut() {
+                        router.remove_target(decision.endpoint);
+                    }
+                }
+            }
         }
     }
 
@@ -124,35 +222,70 @@ impl Service {
         function: FunctionId,
         payload: Json,
     ) -> Result<TaskId, String> {
+        let affinity_key = crate::scheduler::affinity_key_of(function, &payload);
+        let weight = crate::scheduler::batcher::payload_weight(&payload);
+        self.submit_with_meta(endpoint, function, payload, affinity_key, weight)
+            .map_err(Rejection::into_message)
+    }
+
+    /// Submission core with the routing metadata precomputed — the routed
+    /// path derives key and weight once for the routing decision and passes
+    /// them through instead of re-walking the payload. Endpoint-gone
+    /// rejections hand the payload back so the routed path can retry it on
+    /// a surviving endpoint.
+    fn submit_with_meta(
+        &self,
+        endpoint: EndpointId,
+        function: FunctionId,
+        payload: Json,
+        affinity_key: String,
+        weight: usize,
+    ) -> Result<TaskId, Rejection> {
         let mut g = self.state.lock().unwrap();
         if !g.functions.contains_key(&function) {
-            return Err(format!("unknown function id {function}"));
+            return Err(Rejection::Fatal(format!("unknown function id {function}")));
         }
-        let queue = g
-            .endpoints
-            .get(&endpoint)
-            .ok_or_else(|| format!("unknown endpoint id {endpoint}"))?
-            .clone();
+        let Some(queue) = g.endpoints.get(&endpoint).cloned() else {
+            return Err(Rejection::EndpointGone {
+                reason: format!("unknown endpoint id {endpoint}"),
+                payload,
+            });
+        };
         let id = g.next_task;
         g.next_task += 1;
         // scheduling metadata travels on the interchange; the payload stays
         // in the task store
-        let affinity_key = crate::scheduler::affinity_key_of(function, &payload);
         let priority = payload.get("priority").and_then(|v| v.as_f64()).unwrap_or(0.0);
-        let weight = crate::scheduler::batcher::payload_weight(&payload);
         let mut rec = TaskRecord::new(id, function, endpoint, payload);
         rec.state = TaskState::Pending;
         g.tasks.insert(id, rec);
         drop(g);
-        self.metrics.task_submitted();
         let accepted = queue
             .push_meta(TaskMeta { id, function, affinity_key, priority, weight, enqueued: Instant::now() });
         if !accepted {
-            // the interchange closed under us (endpoint shutting down):
-            // fail the record terminally so no waiter hangs on it
-            self.complete(id, Err("endpoint is shutting down".to_string()));
-            return Err(format!("endpoint {endpoint} is shutting down"));
+            // the interchange closed under us (endpoint shutting down). The
+            // id never escapes — this Err is the only way the caller learns
+            // of the task — so reclaim the record outright: a stored Failed
+            // outcome nobody can drain would leak one record per
+            // shutdown-race submission. The payload rides back for retry.
+            let payload = self
+                .state
+                .lock()
+                .unwrap()
+                .tasks
+                .remove(&id)
+                .map(|t| t.payload)
+                .unwrap_or(Json::Null);
+            self.results.notify_all();
+            return Err(Rejection::EndpointGone {
+                reason: format!("endpoint {endpoint} is shutting down"),
+                payload,
+            });
         }
+        // count only accepted submissions: a reclaimed rejection (or a
+        // routed retry) must not leave a phantom in-flight task in the
+        // submitted-vs-finished ledger
+        self.metrics.task_submitted();
         Ok(id)
     }
 
@@ -231,10 +364,12 @@ impl Service {
         Some((handler, payload))
     }
 
-    /// Record a task outcome and wake waiters.
+    /// Record a task outcome and wake waiters. A record the client has
+    /// [`Service::cancel`]ed while it ran is dropped here instead of
+    /// stored: nobody will ever drain its result.
     pub fn complete(&self, id: TaskId, outcome: Result<Json, String>) {
         let mut g = self.state.lock().unwrap();
-        let (ok, wait_s, service_s) = {
+        let (ok, wait_s, service_s, abandoned) = {
             let Some(t) = g.tasks.get_mut(&id) else { return };
             t.finished_at = Some(Instant::now());
             let ok = outcome.is_ok();
@@ -243,7 +378,12 @@ impl Service {
                 Ok(v) => TaskOutcome::Ok(v),
                 Err(e) => TaskOutcome::Err(e),
             });
-            (ok, t.wait_seconds().unwrap_or(0.0), t.service_seconds().unwrap_or(0.0))
+            (
+                ok,
+                t.wait_seconds().unwrap_or(0.0),
+                t.service_seconds().unwrap_or(0.0),
+                t.abandoned,
+            )
         };
         let endpoint = g.tasks.get(&id).map(|t| t.endpoint);
         if let Some(ep) = endpoint {
@@ -251,9 +391,77 @@ impl Service {
                 *r = r.saturating_sub(1);
             }
         }
+        if abandoned {
+            g.tasks.remove(&id);
+        }
         drop(g);
-        self.metrics.task_finished(ok, wait_s, service_s);
+        if !abandoned {
+            // an abandoned task was already accounted as `cancelled` when
+            // the client gave up; counting it finished too would break the
+            // ledger (submitted = completed + failed + cancelled + in
+            // flight) and skew the latency accumulators with a discarded
+            // outcome
+            self.metrics.task_finished(ok, wait_s, service_s);
+        }
         self.results.notify_all();
+    }
+
+    /// Cancel a task the client no longer wants (a gather that timed out or
+    /// stalled). Every accepted submission terminates in exactly one
+    /// metrics bucket — completed, failed, or cancelled — so the hub's
+    /// ledger reconciles (`submitted - completed - failed - cancelled` =
+    /// tasks in flight). Returns true when the cancellation had any effect:
+    ///
+    /// * **Pending / WaitingForNodes** — the record is removed and the
+    ///   interchange entry discarded immediately, so cancelled work never
+    ///   occupies a worker and stops counting toward the autoscaler's
+    ///   depth/weight/age signals at once (a meta that raced into a
+    ///   worker's pop is skipped at `claim`);
+    /// * **Running** — the worker cannot be interrupted, so the record is
+    ///   marked abandoned and [`Service::complete`] drops it when the
+    ///   handler returns (the result is never stored, closing the leak);
+    /// * **terminal** — the unclaimed result is drained from the store
+    ///   (returns false: nothing was cancelled, just cleaned up).
+    pub fn cancel(&self, id: TaskId) -> bool {
+        let mut g = self.state.lock().unwrap();
+        let state = match g.tasks.get(&id) {
+            Some(t) => t.state,
+            None => return false,
+        };
+        match state {
+            TaskState::Pending | TaskState::WaitingForNodes => {
+                let endpoint = g.tasks.remove(&id).map(|t| t.endpoint);
+                let queue = endpoint.and_then(|ep| g.endpoints.get(&ep).cloned());
+                drop(g);
+                // purge the interchange entry so the cancelled task stops
+                // counting toward queue depth, weight and age immediately
+                if let Some(q) = queue {
+                    q.discard(id);
+                }
+                self.metrics.task_cancelled();
+                self.results.notify_all();
+                true
+            }
+            TaskState::Running => {
+                let t = g.tasks.get_mut(&id).expect("checked above");
+                if t.abandoned {
+                    return false;
+                }
+                t.abandoned = true;
+                drop(g);
+                self.metrics.task_cancelled();
+                true
+            }
+            TaskState::Success | TaskState::Failed => {
+                g.tasks.remove(&id);
+                false
+            }
+        }
+    }
+
+    /// Number of task records currently held (leak observability).
+    pub fn task_count(&self) -> usize {
+        self.state.lock().unwrap().tasks.len()
     }
 
     /// Per-task timing export (patch name lookups for Listing-2-style logs).
@@ -339,6 +547,133 @@ mod tests {
         std::thread::sleep(Duration::from_millis(20));
         q.close();
         assert_eq!(t.join().unwrap(), None);
+    }
+
+    #[test]
+    fn cancel_pending_removes_record_and_queue_entry() {
+        let svc = Service::new();
+        let q = TaskQueue::new();
+        let ep = svc.register_endpoint("e", q.clone());
+        let f = svc.register_function("echo", echo_handler());
+        let id = svc.submit(ep, f, Json::num(1.0)).unwrap();
+        assert_eq!(q.len(), 1);
+        assert!(svc.cancel(id));
+        // record gone: nothing leaks, waiters see "unknown task"
+        assert_eq!(svc.task_state(id), None);
+        assert_eq!(svc.task_count(), 0);
+        assert!(svc.wait_result(id, Duration::from_millis(5)).unwrap_err().contains("unknown"));
+        // the interchange entry was discarded with it: no phantom demand
+        // left for the autoscaler, nothing for a worker to pop
+        assert_eq!(q.len(), 0);
+        assert_eq!(q.queued_weight(), 0);
+        assert_eq!(q.pop(Duration::from_millis(5)), None);
+        assert_eq!(svc.metrics.snapshot().cancelled, 1);
+    }
+
+    #[test]
+    fn cancelled_meta_that_raced_into_a_pop_is_skipped_at_claim() {
+        // a worker may have popped the meta before cancel() could discard
+        // it — claim must then refuse the stale id
+        let svc = Service::new();
+        let q = TaskQueue::new();
+        let ep = svc.register_endpoint("e", q.clone());
+        let f = svc.register_function("echo", echo_handler());
+        let id = svc.submit(ep, f, Json::num(1.0)).unwrap();
+        let tid = q.pop(Duration::from_millis(10)).unwrap();
+        assert!(svc.cancel(id));
+        assert!(svc.claim(tid, "w0").is_none());
+    }
+
+    #[test]
+    fn cancel_running_drops_record_on_completion() {
+        let svc = Service::new();
+        let q = TaskQueue::new();
+        let ep = svc.register_endpoint("e", q.clone());
+        let f = svc.register_function("echo", echo_handler());
+        let id = svc.submit(ep, f, Json::num(2.0)).unwrap();
+        let tid = q.pop(Duration::from_millis(10)).unwrap();
+        let (h, p) = svc.claim(tid, "w0").unwrap();
+        // client gives up while the worker is mid-task
+        assert!(svc.cancel(id));
+        assert!(!svc.cancel(id), "double-cancel must be a no-op");
+        let mut ctx = WorkerContext::new("w0");
+        svc.complete(tid, h(&p, &mut ctx));
+        // the abandoned result was dropped, not stored
+        assert_eq!(svc.task_state(id), None);
+        assert_eq!(svc.task_count(), 0);
+        assert_eq!(svc.outstanding(ep), 0, "running counter must still drop");
+    }
+
+    #[test]
+    fn cancel_terminal_drains_the_record() {
+        let svc = Service::new();
+        let q = TaskQueue::new();
+        let ep = svc.register_endpoint("e", q.clone());
+        let f = svc.register_function("echo", echo_handler());
+        let id = svc.submit(ep, f, Json::num(3.0)).unwrap();
+        let tid = q.pop(Duration::from_millis(10)).unwrap();
+        let (h, p) = svc.claim(tid, "w0").unwrap();
+        let mut ctx = WorkerContext::new("w0");
+        svc.complete(tid, h(&p, &mut ctx));
+        // already finished: cancel only drains the unclaimed result
+        assert!(!svc.cancel(id));
+        assert_eq!(svc.task_count(), 0);
+        assert_eq!(svc.metrics.snapshot().cancelled, 0);
+    }
+
+    #[test]
+    fn submit_routed_requires_router() {
+        let svc = Service::new();
+        let err = svc.submit_routed(0, Json::Null).unwrap_err();
+        assert!(err.contains("no router"), "{err}");
+        svc.install_router(crate::scheduler::router::Router::new(
+            crate::scheduler::router::RouteStrategyKind::WarmFirst,
+        ));
+        assert!(svc.has_router());
+        assert_eq!(svc.route_strategy_name(), Some("warm_first"));
+        let err = svc.submit_routed(0, Json::Null).unwrap_err();
+        assert!(err.contains("no registered endpoints"), "{err}");
+    }
+
+    #[test]
+    fn deregistered_endpoint_leaves_the_routing_candidate_set() {
+        // a shut-down endpoint's probe reports zero load forever — if it
+        // stayed a router target it would become the permanent
+        // least-loaded pick and every routed submission would hard-fail
+        struct IdleProbe;
+        impl crate::scheduler::router::EndpointProbe for IdleProbe {
+            fn queued_weight(&self) -> usize {
+                0
+            }
+            fn active_workers(&self) -> usize {
+                0
+            }
+            fn warm_hit_rate(&self) -> f64 {
+                1.0
+            }
+        }
+        let svc = Service::new();
+        let q0 = TaskQueue::new();
+        let q1 = TaskQueue::new();
+        let ep0 = svc.register_endpoint("a", q0.clone());
+        let ep1 = svc.register_endpoint("b", q1.clone());
+        let f = svc.register_function("echo", echo_handler());
+        let mut router = crate::scheduler::router::Router::new(
+            crate::scheduler::router::RouteStrategyKind::LeastLoaded,
+        );
+        router.add_target(ep0, 0, Arc::new(IdleProbe));
+        router.add_target(ep1, 1, Arc::new(IdleProbe));
+        svc.install_router(router);
+        // ties route to the first target...
+        let id = svc.submit_routed(f, Json::num(1.0)).unwrap();
+        assert_eq!(q0.len(), 1);
+        // ...until it deregisters: routed work must fail over to ep1
+        svc.deregister_endpoint(ep0);
+        let id2 = svc.submit_routed(f, Json::num(2.0)).unwrap();
+        assert_ne!(id, id2);
+        assert_eq!(q1.len(), 1);
+        // routed counter reflects accepted submissions only
+        assert_eq!(svc.metrics.snapshot().routed, 2);
     }
 
     #[test]

@@ -62,6 +62,9 @@ pub struct TaskRecord {
     pub outcome: Option<TaskOutcome>,
     /// which worker ran it, for metrics ("block-b/node-n/worker-w")
     pub worker: Option<String>,
+    /// client cancelled while Running: the record is dropped (not stored)
+    /// when the worker completes, so abandoned results cannot leak
+    pub abandoned: bool,
 }
 
 impl TaskRecord {
@@ -77,6 +80,7 @@ impl TaskRecord {
             finished_at: None,
             outcome: None,
             worker: None,
+            abandoned: false,
         }
     }
 

@@ -19,7 +19,7 @@ use pyhf_faas::histfactory::{dense, Workspace};
 use pyhf_faas::infer::results::upper_limit_on_axis;
 use pyhf_faas::pallet::{self, io as pallet_io, library};
 use pyhf_faas::runtime::{default_artifact_dir, Engine, Manifest};
-use pyhf_faas::scheduler::{batched_handler, PolicyKind};
+use pyhf_faas::scheduler::{batched_handler, PolicyKind, RouteStrategyKind, Router};
 use pyhf_faas::sim;
 use pyhf_faas::util::cli::Args;
 use pyhf_faas::util::json;
@@ -34,6 +34,8 @@ COMMANDS:
   scan             --pallet <dir> [--backend pjrt|native] [--workers N]
                    [--max-blocks N] [--limit N] [--out results.json] [--verbose]
                    [--policy fifo|priority|affinity] [--batch N]
+                   [--endpoints N] [--route round_robin|least_loaded|warm_first]
+                   (fan the scan out across N endpoints via the router)
                    [--bench-out BENCH_fit.json] (machine-readable throughput)
   hypotest         --pallet <dir> --patch <name> [--backend pjrt|native]
   simulate         --pallet <dir> [--blocks 1,2,4,8] [--trials 10]
@@ -111,14 +113,54 @@ fn load_pallet(args: &Args) -> Result<pallet::Pallet, String> {
     Ok(pallet::Pallet { config, bkg_workspace: bkg, patchset: ps })
 }
 
-fn start_endpoint(
+/// Backend-specific worker init + servable handler + function name.
+fn backend_setup(
+    backend: &str,
+    artifacts: PathBuf,
+) -> Result<
+    (
+        pyhf_faas::coordinator::service::WorkerInit,
+        pyhf_faas::coordinator::service::Handler,
+        &'static str,
+    ),
+    String,
+> {
+    match backend {
+        "pjrt" => {
+            // fail fast instead of letting every worker die at init and the
+            // scan idle out on its stall timeout (the default build stubs
+            // the engine when the vendored xla crate is absent)
+            Engine::cpu().map_err(|e| {
+                format!("pjrt backend unavailable ({e}); retry with --backend native")
+            })?;
+            Ok((
+                fitops::pjrt_worker_init(artifacts),
+                fitops::fit_patch_handler(),
+                "fit_patch_pjrt",
+            ))
+        }
+        "native" => Ok((
+            fitops::native_worker_init(artifacts),
+            fitops::native_fit_handler(),
+            "fit_patch_native",
+        )),
+        other => Err(format!("unknown backend '{other}' (pjrt|native)")),
+    }
+}
+
+/// Start `n_endpoints` identical endpoints (sites) and register the fit
+/// function once; with more than one endpoint, install the cross-endpoint
+/// router so routed submissions fan out across sites.
+fn start_endpoints(
     svc: &pyhf_faas::coordinator::ServiceHandle,
     backend: &str,
     workers: usize,
     max_blocks: usize,
     policy: PolicyKind,
+    n_endpoints: usize,
+    route: RouteStrategyKind,
     artifacts: PathBuf,
-) -> Result<(Endpoint, pyhf_faas::coordinator::FunctionId), String> {
+) -> Result<(Vec<Endpoint>, pyhf_faas::coordinator::FunctionId), String> {
     let exec = ExecutorConfig {
         max_blocks,
         nodes_per_block: 1,
@@ -127,38 +169,34 @@ fn start_endpoint(
         poll: Duration::from_millis(2),
     };
     let client = FaasClient::new(svc.clone());
-    let (init, handler, fname) = match backend {
-        "pjrt" => {
-            // fail fast instead of letting every worker die at init and the
-            // scan idle out on its stall timeout (the default build stubs
-            // the engine when the vendored xla crate is absent)
-            Engine::cpu().map_err(|e| {
-                format!("pjrt backend unavailable ({e}); retry with --backend native")
-            })?;
-            (
-                fitops::pjrt_worker_init(artifacts),
-                fitops::fit_patch_handler(),
-                "fit_patch_pjrt",
+    let (init, handler, fname) = backend_setup(backend, artifacts)?;
+    let endpoints: Vec<Endpoint> = (0..n_endpoints.max(1))
+        .map(|site| {
+            let name = if n_endpoints > 1 {
+                format!("{backend}-site{site}")
+            } else {
+                format!("{backend}-endpoint")
+            };
+            Endpoint::start(
+                svc.clone(),
+                EndpointConfig::new(name)
+                    .with_executor(exec.clone())
+                    .with_policy(policy)
+                    .with_provider(Box::new(SimSlurmProvider::laptop_scale(11 + site as u64)))
+                    .with_worker_init(init.clone()),
             )
+        })
+        .collect();
+    if endpoints.len() > 1 {
+        let mut router = Router::new(route);
+        for (site, ep) in endpoints.iter().enumerate() {
+            router.add_target(ep.id, site, ep.probe());
         }
-        "native" => (
-            fitops::native_worker_init(artifacts),
-            fitops::native_fit_handler(),
-            "fit_patch_native",
-        ),
-        other => return Err(format!("unknown backend '{other}' (pjrt|native)")),
-    };
-    let ep = Endpoint::start(
-        svc.clone(),
-        EndpointConfig::new(format!("{backend}-endpoint"))
-            .with_executor(exec)
-            .with_policy(policy)
-            .with_provider(Box::new(SimSlurmProvider::laptop_scale(11)))
-            .with_worker_init(init),
-    );
+        svc.install_router(router);
+    }
     // handlers are batch-aware: single payloads pass through untouched
     let f = client.register_function(fname, batched_handler(handler));
-    Ok((ep, f))
+    Ok((endpoints, f))
 }
 
 fn cmd_scan(args: &Args) -> Result<(), String> {
@@ -174,9 +212,29 @@ fn cmd_scan(args: &Args) -> Result<(), String> {
     let policy = PolicyKind::parse(policy_name)
         .ok_or_else(|| format!("unknown policy '{policy_name}' (fifo|priority|affinity)"))?;
     let batch = args.get_usize("batch", 1)?.max(1);
+    let n_endpoints = args.get_usize("endpoints", 1)?.max(1);
+    let route_name = args.get_or("route", "warm_first");
+    let route = RouteStrategyKind::parse(route_name).ok_or_else(|| {
+        format!("unknown route strategy '{route_name}' (round_robin|least_loaded|warm_first)")
+    })?;
+    if n_endpoints == 1 && args.get("route").is_some() {
+        eprintln!(
+            "note: --route {route_name} has no effect with a single endpoint \
+             (pass --endpoints N with N > 1 to enable the router)"
+        );
+    }
 
     let svc = Service::new();
-    let (ep, f) = start_endpoint(&svc, backend, workers, max_blocks, policy, artifact_dir(args))?;
+    let (endpoints, f) = start_endpoints(
+        &svc,
+        backend,
+        workers,
+        max_blocks,
+        policy,
+        n_endpoints,
+        route,
+        artifact_dir(args),
+    )?;
     let client = FaasClient::new(svc.clone());
 
     println!("prepare: waiting-for-nodes");
@@ -186,10 +244,15 @@ fn cmd_scan(args: &Args) -> Result<(), String> {
         batch,
         ..Default::default()
     };
-    let scan = run_scan(&client, ep.id, f, &pallet, &opts)?;
+    let scan = if endpoints.len() > 1 {
+        pyhf_faas::coordinator::run_scan_routed(&client, f, &pallet, &opts)?
+    } else {
+        run_scan(&client, endpoints[0].id, f, &pallet, &opts)?
+    };
 
     let m = svc.metrics.snapshot();
-    let em = ep.metrics_snapshot();
+    let blocks: usize = endpoints.iter().map(|e| e.blocks()).sum();
+    let active: usize = endpoints.iter().map(|e| e.active_workers()).sum();
     println!(
         "\nscan '{}' complete: {} patches in {:.1} s wall ({} excluded at 95% CL)",
         scan.analysis,
@@ -199,25 +262,35 @@ fn cmd_scan(args: &Args) -> Result<(), String> {
     );
     println!(
         "  blocks {} | workers {} | mean wait {:.3} s | mean fit {:.3} s | total fit {:.1} s",
-        ep.blocks(),
-        ep.active_workers(),
-        m.mean_wait_s,
-        m.mean_service_s,
-        m.total_service_s
+        blocks, active, m.mean_wait_s, m.mean_service_s, m.total_service_s
     );
+    for ep in &endpoints {
+        let em = ep.metrics_snapshot();
+        println!(
+            "  endpoint {}: policy {} | affinity {} hit / {} miss ({:.0}% warm) | blocks +{} -{}",
+            ep.name,
+            ep.policy_name(),
+            em.affinity_hits,
+            em.affinity_misses,
+            em.affinity_hit_rate() * 100.0,
+            em.blocks_provisioned,
+            em.blocks_released
+        );
+    }
     println!(
-        "  scheduler: policy {} | affinity {} hit / {} miss ({:.0}% warm) | \
-         batches {} ({} fits, {} deduped) | blocks +{} -{}",
-        ep.policy_name(),
-        em.affinity_hits,
-        em.affinity_misses,
-        em.affinity_hit_rate() * 100.0,
-        m.batches,
-        m.batched_tasks,
-        m.dedup_hits,
-        em.blocks_provisioned,
-        em.blocks_released
+        "  batcher: batches {} ({} fits, {} deduped)",
+        m.batches, m.batched_tasks, m.dedup_hits
     );
+    if endpoints.len() > 1 {
+        println!(
+            "  router: strategy {} | routed {} | {} warm ({:.0}%) | {} spillovers",
+            svc.route_strategy_name().unwrap_or("-"),
+            m.routed,
+            m.route_warm_hits,
+            m.route_warm_rate() * 100.0,
+            m.route_spillovers
+        );
+    }
     if let Some(ul) = upper_limit_on_axis(&scan.points, 0.0) {
         println!("  interpolated 95% CL mass limit (m2 = 0): {ul:.0} GeV");
     }
@@ -242,7 +315,9 @@ fn cmd_scan(args: &Args) -> Result<(), String> {
         report.write(std::path::Path::new(bench_out)).map_err(|e| e.to_string())?;
         println!("  wrote {bench_out}");
     }
-    ep.shutdown();
+    for ep in endpoints {
+        ep.shutdown();
+    }
     Ok(())
 }
 

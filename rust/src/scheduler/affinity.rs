@@ -87,14 +87,22 @@ impl SchedPolicy for AffinityPolicy {
         }
     }
 
+    fn remove(&mut self, id: u64) -> Option<TaskMeta> {
+        let i = self.q.iter().position(|t| t.id == id)?;
+        self.q.remove(i)
+    }
+
     fn len(&self) -> usize {
         self.q.len()
     }
 
     fn oldest_enqueued(&self) -> Option<Instant> {
-        // pushes append and removals preserve relative order, so the front
-        // is always the oldest remaining task
-        self.q.front().map(|t| t.enqueued)
+        // the front is NOT guaranteed oldest: metas are stamped before the
+        // interchange lock is taken, so concurrent submitters can land out
+        // of stamp order, and head-skip removals churn the deque. Report
+        // the true minimum — under-reporting queue age would starve the
+        // autoscaler's latency trigger.
+        self.q.iter().map(|t| t.enqueued).min()
     }
 }
 
@@ -202,5 +210,25 @@ mod tests {
         p.push(first);
         p.push(meta(2, "B"));
         assert_eq!(p.oldest_enqueued(), Some(t0));
+    }
+
+    #[test]
+    fn oldest_enqueued_reports_true_minimum_not_the_front() {
+        // regression: metas are stamped before the interchange lock is
+        // taken, so a task stamped earlier can be pushed later — the front
+        // of the deque then under-reports queue age to the autoscaler's
+        // latency trigger
+        let mut p = AffinityPolicy::new();
+        let old = Instant::now()
+            .checked_sub(std::time::Duration::from_secs(5))
+            .expect("5 s into the past");
+        p.push(meta(1, "A"));
+        p.push(TaskMeta { enqueued: old, ..meta(2, "B") });
+        assert_eq!(p.oldest_enqueued(), Some(old));
+        // serving the old task restores the front's stamp as the minimum
+        let mut w = WorkerProfile::new("w");
+        w.note_warm("B");
+        assert_eq!(p.pop_for(&w, Instant::now()).unwrap().id, 2);
+        assert!(p.oldest_enqueued().unwrap() > old);
     }
 }

@@ -55,21 +55,38 @@ pub struct BatchPlan {
 /// Plan a submission wave: dedup identical payloads, then chunk the unique
 /// ones into same-class groups of at most `max_batch`.
 pub fn plan_batches(payloads: &[Json], max_batch: usize) -> BatchPlan {
+    plan_batches_hashed(payloads, max_batch, content_hash)
+}
+
+/// [`plan_batches`] with an injectable content hash — the production entry
+/// point always uses [`content_hash`]; tests force hash collisions to prove
+/// dedup never merges distinct payloads.
+///
+/// Dedup is two-stage on purpose: the hash only *nominates* candidates, and
+/// every candidate sharing the hash is compared structurally before a
+/// payload is elided. Colliding-but-distinct payloads therefore coexist in
+/// the same bucket (each stays submittable, and later true duplicates of
+/// *any* of them still dedup) instead of silently sharing one fit result.
+pub fn plan_batches_hashed(
+    payloads: &[Json],
+    max_batch: usize,
+    hash: impl Fn(&Json) -> u64,
+) -> BatchPlan {
     let max_batch = max_batch.max(1);
-    let mut seen: HashMap<u64, usize> = HashMap::new();
+    let mut seen: HashMap<u64, Vec<usize>> = HashMap::new();
     let mut canonical = Vec::with_capacity(payloads.len());
     let mut uniques: Vec<usize> = Vec::new();
     let mut dedup_hits = 0usize;
     for (i, p) in payloads.iter().enumerate() {
-        let h = content_hash(p);
-        match seen.get(&h) {
+        let bucket = seen.entry(hash(p)).or_default();
+        match bucket.iter().copied().find(|&c| payloads[c] == *p) {
             // hash match confirmed structurally: a true duplicate
-            Some(&c) if payloads[c] == *p => {
+            Some(c) => {
                 canonical.push(c);
                 dedup_hits += 1;
             }
-            _ => {
-                seen.insert(h, i);
+            None => {
+                bucket.push(i);
                 canonical.push(i);
                 uniques.push(i);
             }
@@ -263,6 +280,55 @@ mod tests {
         // uniques 0,3 share class A; 1,4 share class B
         assert_eq!(plan.groups, vec![vec![0, 3], vec![1, 4]]);
         assert_eq!(plan.n_tasks(), 2);
+    }
+
+    #[test]
+    fn forced_hash_collision_never_merges_distinct_payloads() {
+        // regression: dedup once trusted the content hash alone, so two
+        // distinct payloads landing on the same digest were silently merged
+        // and one caller got the other's fit result. Force every payload
+        // onto one digest and require structural comparison to keep them
+        // apart.
+        let payloads = vec![payload("p1", "A"), payload("p2", "A"), payload("p3", "B")];
+        let plan = plan_batches_hashed(&payloads, 8, |_| 0);
+        assert_eq!(plan.dedup_hits, 0);
+        assert_eq!(plan.canonical, vec![0, 1, 2]);
+        // all three stay individually submitted (grouped by class as usual)
+        let submitted: usize = plan.groups.iter().map(|g| g.len()).sum();
+        assert_eq!(submitted, 3);
+    }
+
+    #[test]
+    fn collision_chain_still_dedups_true_duplicates() {
+        // regression: with a single-slot hash map, a colliding distinct
+        // payload evicted the earlier bucket entry, so a later *true*
+        // duplicate of the first payload was resubmitted. Buckets must hold
+        // every colliding canonical payload.
+        let payloads = vec![
+            payload("p1", "A"),
+            payload("p2", "A"), // "collides" with p1 under the forced hash
+            payload("p1", "A"), // true duplicate of 0 — must still dedup
+            payload("p2", "A"), // true duplicate of 1 — must still dedup
+        ];
+        let plan = plan_batches_hashed(&payloads, 8, |_| 42);
+        assert_eq!(plan.dedup_hits, 2);
+        assert_eq!(plan.canonical, vec![0, 1, 0, 1]);
+        assert_eq!(plan.groups, vec![vec![0, 1]]);
+    }
+
+    #[test]
+    fn hashed_planner_with_real_hash_matches_plan_batches() {
+        let payloads = vec![
+            payload("p1", "A"),
+            payload("p2", "B"),
+            payload("p1", "A"),
+            payload("p3", "A"),
+        ];
+        let a = plan_batches(&payloads, 4);
+        let b = plan_batches_hashed(&payloads, 4, content_hash);
+        assert_eq!(a.canonical, b.canonical);
+        assert_eq!(a.groups, b.groups);
+        assert_eq!(a.dedup_hits, b.dedup_hits);
     }
 
     #[test]

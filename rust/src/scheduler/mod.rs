@@ -21,23 +21,34 @@
 //!   scaling loop;
 //! * [`queue`] — [`SchedQueue`], the policy-driven interchange that
 //!   replaces the seed's bare FIFO `TaskQueue` (and is re-exported under
-//!   that name by `coordinator::service` for compatibility).
+//!   that name by `coordinator::service` for compatibility);
+//! * [`router`] — the service-level multi-endpoint router above the
+//!   interchanges: [`RouteStrategy`] (round-robin / least-loaded /
+//!   warm-first with load spillover) picks *which* endpoint a task goes
+//!   to, from per-endpoint warmth, queued weight, active workers and a
+//!   link-cost table.
 //!
 //! Selection is by [`PolicyKind`] (`--policy fifo|priority|affinity` on the
-//! CLI, `EndpointConfig::with_policy` in code); scheduling counters land in
-//! `coordinator::metrics`.
+//! CLI, `EndpointConfig::with_policy` in code) and [`RouteStrategyKind`]
+//! (`--route round_robin|least_loaded|warm_first`, `Router::new`);
+//! scheduling counters land in `coordinator::metrics`.
 
 pub mod affinity;
 pub mod autoscale;
 pub mod batcher;
 pub mod policy;
 pub mod queue;
+pub mod router;
 
 pub use affinity::AffinityPolicy;
 pub use autoscale::{AutoscaleConfig, AutoscaleController, LoadSnapshot, ScaleDecision};
-pub use batcher::{batched_handler, content_hash, plan_batches, BatchPlan};
+pub use batcher::{batched_handler, content_hash, plan_batches, plan_batches_hashed, BatchPlan};
 pub use policy::{FifoPolicy, PolicyKind, PriorityPolicy, SchedPolicy, TaskMeta, WorkerProfile};
 pub use queue::SchedQueue;
+pub use router::{
+    EndpointProbe, EndpointView, LeastLoadedRoute, RoundRobinRoute, RouteDecision, RoutePick,
+    RouteStrategy, RouteStrategyKind, Router, WarmFirstRoute,
+};
 
 use crate::coordinator::task::FunctionId;
 use crate::util::json::Json;

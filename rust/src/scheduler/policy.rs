@@ -117,6 +117,11 @@ pub trait SchedPolicy: Send {
     /// age-based fairness overrides. None when empty.
     fn pop_for(&mut self, worker: &WorkerProfile, now: Instant) -> Option<TaskMeta>;
 
+    /// Remove a queued task by id (client-side cancellation): the entry
+    /// must stop counting toward depth, weight and age immediately, not
+    /// linger until a worker pops and discards it. None when not queued.
+    fn remove(&mut self, id: TaskId) -> Option<TaskMeta>;
+
     fn len(&self) -> usize;
 
     fn is_empty(&self) -> bool {
@@ -157,13 +162,20 @@ impl SchedPolicy for FifoPolicy {
         self.q.pop_front()
     }
 
+    fn remove(&mut self, id: TaskId) -> Option<TaskMeta> {
+        let i = self.q.iter().position(|t| t.id == id)?;
+        self.q.remove(i)
+    }
+
     fn len(&self) -> usize {
         self.q.len()
     }
 
     fn oldest_enqueued(&self) -> Option<Instant> {
-        // FIFO front is always the oldest (pushes append in arrival order)
-        self.q.front().map(|t| t.enqueued)
+        // same caveat as AffinityPolicy: metas are stamped before the
+        // interchange lock is taken, so concurrent submitters can land out
+        // of stamp order — report the true minimum, not the front
+        self.q.iter().map(|t| t.enqueued).min()
     }
 }
 
@@ -229,6 +241,22 @@ impl SchedPolicy for PriorityPolicy {
 
     fn pop_for(&mut self, _worker: &WorkerProfile, _now: Instant) -> Option<TaskMeta> {
         self.heap.pop().map(|e| e.task)
+    }
+
+    fn remove(&mut self, id: TaskId) -> Option<TaskMeta> {
+        if !self.heap.iter().any(|e| e.task.id == id) {
+            return None;
+        }
+        // O(n log n) rebuild — cancellation is cold-path, pops stay O(log n)
+        let mut found = None;
+        for e in std::mem::take(&mut self.heap).into_vec() {
+            if found.is_none() && e.task.id == id {
+                found = Some(e.task);
+            } else {
+                self.heap.push(e);
+            }
+        }
+        found
     }
 
     fn len(&self) -> usize {
@@ -348,6 +376,39 @@ mod tests {
         let w = WorkerProfile::anonymous();
         p.pop_for(&w, Instant::now());
         assert!(p.oldest_enqueued().unwrap() >= t0);
+    }
+
+    #[test]
+    fn fifo_oldest_enqueued_survives_out_of_order_stamps() {
+        // metas are stamped before the interchange lock, so a task stamped
+        // earlier can be pushed later — the age signal must still see it
+        let mut p = FifoPolicy::new();
+        let old = Instant::now()
+            .checked_sub(std::time::Duration::from_secs(2))
+            .expect("2 s into the past");
+        p.push(meta(1, 0.0));
+        p.push(TaskMeta { enqueued: old, ..meta(2, 0.0) });
+        assert_eq!(p.oldest_enqueued(), Some(old));
+    }
+
+    #[test]
+    fn remove_cancels_queued_tasks_under_every_policy() {
+        for kind in [PolicyKind::Fifo, PolicyKind::Priority, PolicyKind::Affinity] {
+            let mut p = kind.build();
+            p.push(meta(1, 1.0));
+            p.push(meta(2, 5.0));
+            p.push(meta(3, 3.0));
+            // missing ids are a no-op
+            assert!(p.remove(9).is_none(), "{}", p.name());
+            // removing the mid-priority task leaves the others intact
+            let removed = p.remove(3).expect("queued task");
+            assert_eq!(removed.id, 3, "{}", p.name());
+            assert!(p.remove(3).is_none(), "{}", p.name());
+            assert_eq!(p.len(), 2, "{}", p.name());
+            let mut left = drain(p.as_mut());
+            left.sort_unstable();
+            assert_eq!(left, vec![1, 2], "{}", p.name());
+        }
     }
 
     #[test]

@@ -123,6 +123,22 @@ impl SchedQueue {
         }
     }
 
+    /// Remove a queued task by id (client cancellation): the entry stops
+    /// counting toward depth, weight and age immediately instead of
+    /// lingering until a worker pops and discards it — a pile of cancelled
+    /// metas would otherwise keep the autoscaler provisioning for phantom
+    /// demand. False when the task is no longer queued (already popped).
+    pub fn discard(&self, id: TaskId) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        match g.policy.remove(id) {
+            Some(meta) => {
+                g.queued_weight = g.queued_weight.saturating_sub(meta.weight.max(1));
+                true
+            }
+            None => false,
+        }
+    }
+
     /// Pop every remaining task at once, bypassing routing and the
     /// affinity hit/miss accounting — for shutdown leftovers, which are
     /// not dispatches and must not skew the endpoint's counters.
@@ -286,6 +302,44 @@ mod tests {
         let drained = q.drain_remaining();
         assert_eq!(drained.len(), 1);
         assert_eq!(q.queued_weight(), 0);
+    }
+
+    #[test]
+    fn discard_removes_entry_and_weight() {
+        let q = SchedQueue::new();
+        q.push_meta(TaskMeta { weight: 4, ..TaskMeta::bare(1) });
+        q.push_meta(TaskMeta::bare(2));
+        assert_eq!(q.queued_weight(), 5);
+        // cancelling task 1 stops its demand signal immediately
+        assert!(q.discard(1));
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.queued_weight(), 1);
+        // already gone: discard is a no-op, remaining entry still pops
+        assert!(!q.discard(1));
+        assert_eq!(q.pop(Duration::from_millis(5)), Some(2));
+        assert!(!q.discard(2));
+    }
+
+    #[test]
+    fn discard_works_under_every_policy() {
+        for policy in [
+            Box::new(crate::scheduler::policy::FifoPolicy::new()) as Box<dyn crate::scheduler::policy::SchedPolicy>,
+            Box::new(PriorityPolicy::new()),
+            Box::new(AffinityPolicy::new()),
+        ] {
+            let q = SchedQueue::with_policy(policy);
+            q.push_meta(TaskMeta { priority: 1.0, ..TaskMeta::bare(1) });
+            q.push_meta(TaskMeta { priority: 2.0, ..TaskMeta::bare(2) });
+            q.push_meta(TaskMeta { priority: 3.0, ..TaskMeta::bare(3) });
+            assert!(q.discard(2), "{}", q.policy_name());
+            assert_eq!(q.len(), 2, "{}", q.policy_name());
+            let mut left = vec![
+                q.pop(Duration::from_millis(5)).unwrap(),
+                q.pop(Duration::from_millis(5)).unwrap(),
+            ];
+            left.sort_unstable();
+            assert_eq!(left, vec![1, 3], "{}", q.policy_name());
+        }
     }
 
     #[test]

@@ -1,0 +1,625 @@
+//! Cross-endpoint routing: the service-level dispatch layer above the
+//! per-endpoint interchange.
+//!
+//! The paper's deployment treats fitting as a service that can span funcX
+//! endpoints at multiple facilities ("resources on different HPCs can be
+//! accessed by simply changing the endpoint identifier"); funcX itself is
+//! built around steering work across federated endpoints. PR 1's
+//! [`crate::scheduler::affinity::AffinityPolicy`] routes *within* one
+//! endpoint's interchange — this module picks *which* endpoint a task goes
+//! to in the first place, so a multi-analysis campaign can keep each shape
+//! class concentrated on the site whose workers already hold its compiled
+//! executable while spilling to colder sites when the warm one saturates.
+//!
+//! Architecture mirrors the interchange layer one level down:
+//!
+//! * [`RouteStrategy`] is the pluggable decision kernel (the analog of
+//!   [`crate::scheduler::SchedPolicy`]): given per-endpoint
+//!   [`EndpointView`] snapshots it picks a target;
+//! * [`Router`] owns the per-endpoint state — a bounded LRU of affinity
+//!   keys routed to each endpoint (endpoint-level warmth), the site each
+//!   endpoint lives at, and a per-site link-cost table — and builds the
+//!   views from live [`EndpointProbe`]s (queued weight, active workers and
+//!   the shape-class hit-rate each interchange reports);
+//! * [`RouteStrategyKind`] selects a strategy by name (`--route
+//!   round_robin|least_loaded|warm_first` on the CLI).
+//!
+//! Shipped strategies:
+//! * `round_robin` — rotate through endpoints (the naive multi-site
+//!   baseline);
+//! * `least_loaded` — smallest per-worker queued-fit backlog plus link
+//!   cost;
+//! * `warm_first` — prefer an endpoint already warm for the task's
+//!   affinity key, discounted by that interchange's *observed* hit rate,
+//!   but spill to the least-loaded endpoint once the warm one's backlog
+//!   advantage is gone (bounded by [`WarmFirstRoute::spill_margin`]) —
+//!   the endpoint-level analog of the affinity policy's head-skip budget.
+//!
+//! Routing decisions are counted in `coordinator::metrics` (`routed`,
+//! `route_warm_hits`, `route_spillovers`); the discrete-event analog for
+//! paper-scale replays is [`crate::sim::simulate_sites`].
+
+use std::sync::Arc;
+
+use crate::coordinator::task::EndpointId;
+use crate::util::lru::LruSet;
+
+/// Default bound on the per-endpoint routed-key warm set. Endpoint-level
+/// warmth is coarser than worker-level warmth (many workers share one
+/// endpoint), so the bound is correspondingly larger than
+/// [`crate::scheduler::policy::DEFAULT_WARM_CAPACITY`].
+pub const DEFAULT_WARM_KEYS_PER_ENDPOINT: usize = 64;
+
+/// Default `warm_first` spill margin, in queued fits per active worker: a
+/// warm endpoint may be at most this much deeper than the least-loaded
+/// alternative before the router spills cold.
+pub const DEFAULT_SPILL_MARGIN: f64 = 4.0;
+
+/// Live load source for one endpoint — implemented by
+/// `coordinator::endpoint::Endpoint::probe()` for real endpoints and by
+/// test fakes here.
+pub trait EndpointProbe: Send + Sync {
+    /// Queued fits on the endpoint's interchange (tasks weighted by batch
+    /// size).
+    fn queued_weight(&self) -> usize;
+
+    /// Workers currently alive on the endpoint.
+    fn active_workers(&self) -> usize;
+
+    /// Shape-class affinity hit rate the interchange reports (fraction of
+    /// keyed pops landing on a warm worker). Implementations should return
+    /// 1.0 when no keyed pop has happened yet — an endpoint is presumed
+    /// able to stay warm until it demonstrates otherwise.
+    fn warm_hit_rate(&self) -> f64;
+}
+
+/// What a [`RouteStrategy`] sees about one candidate endpoint.
+#[derive(Debug, Clone)]
+pub struct EndpointView {
+    /// index into the router's target list
+    pub index: usize,
+    /// site this endpoint lives at (indexes the link-cost table)
+    pub site: usize,
+    pub queued_weight: usize,
+    pub active_workers: usize,
+    /// interchange-reported shape-class hit rate (1.0 until observed)
+    pub warm_hit_rate: f64,
+    /// whether the router has routed this task's affinity key here before
+    pub warm: bool,
+    /// link-cost penalty for this endpoint's site, in queued-fits-per-worker
+    /// equivalents (0.0 for the local site)
+    pub link_cost: f64,
+}
+
+impl EndpointView {
+    /// Per-worker queued backlog plus the link penalty — the scalar the
+    /// load-aware strategies minimize.
+    pub fn load(&self) -> f64 {
+        self.queued_weight as f64 / self.active_workers.max(1) as f64 + self.link_cost
+    }
+}
+
+/// A strategy's verdict for one task.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RoutePick {
+    /// index into the views/targets
+    pub index: usize,
+    /// the chosen endpoint was already warm for the task's key
+    pub warm_hit: bool,
+    /// a warm endpoint existed but was bypassed for load reasons
+    pub spillover: bool,
+}
+
+/// The pluggable routing kernel: pick a target endpoint for a task, given
+/// its affinity key, weight (fits) and the candidate views. `views` is
+/// never empty. Implementations live behind the router mutex, so they are
+/// plain single-threaded data structures (mirroring `SchedPolicy`).
+pub trait RouteStrategy: Send {
+    fn name(&self) -> &'static str;
+
+    fn pick(&mut self, key: &str, weight: usize, views: &[EndpointView]) -> RoutePick;
+}
+
+fn argmin_load(views: &[EndpointView], filter: impl Fn(&EndpointView) -> bool) -> Option<usize> {
+    views
+        .iter()
+        .filter(|v| filter(v))
+        .min_by(|a, b| a.load().total_cmp(&b.load()))
+        .map(|v| v.index)
+}
+
+// ---------------------------------------------------------------------------
+// round_robin
+// ---------------------------------------------------------------------------
+
+/// Rotate through endpoints in registration order — load- and
+/// warmth-oblivious, the multi-site baseline.
+#[derive(Debug, Default)]
+pub struct RoundRobinRoute {
+    cursor: usize,
+}
+
+impl RoundRobinRoute {
+    pub fn new() -> RoundRobinRoute {
+        RoundRobinRoute::default()
+    }
+}
+
+impl RouteStrategy for RoundRobinRoute {
+    fn name(&self) -> &'static str {
+        "round_robin"
+    }
+
+    fn pick(&mut self, _key: &str, _weight: usize, views: &[EndpointView]) -> RoutePick {
+        let index = self.cursor % views.len();
+        self.cursor = self.cursor.wrapping_add(1);
+        RoutePick { index, warm_hit: views[index].warm, spillover: false }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// least_loaded
+// ---------------------------------------------------------------------------
+
+/// Smallest per-worker queued backlog plus link cost; ties go to the
+/// earlier-registered endpoint.
+#[derive(Debug, Default)]
+pub struct LeastLoadedRoute;
+
+impl LeastLoadedRoute {
+    pub fn new() -> LeastLoadedRoute {
+        LeastLoadedRoute
+    }
+}
+
+impl RouteStrategy for LeastLoadedRoute {
+    fn name(&self) -> &'static str {
+        "least_loaded"
+    }
+
+    fn pick(&mut self, _key: &str, _weight: usize, views: &[EndpointView]) -> RoutePick {
+        let index = argmin_load(views, |_| true).expect("views non-empty");
+        RoutePick { index, warm_hit: views[index].warm, spillover: false }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// warm_first
+// ---------------------------------------------------------------------------
+
+/// Prefer the endpoint already warm for the task's key; spill to the
+/// least-loaded endpoint once the warm one's backlog exceeds the
+/// alternative by more than `spill_margin`.
+#[derive(Debug)]
+pub struct WarmFirstRoute {
+    /// how many queued fits per worker of extra backlog a warm endpoint may
+    /// carry before the router spills cold — the recompile cost expressed
+    /// as queue depth
+    pub spill_margin: f64,
+}
+
+impl Default for WarmFirstRoute {
+    fn default() -> Self {
+        WarmFirstRoute { spill_margin: DEFAULT_SPILL_MARGIN }
+    }
+}
+
+impl WarmFirstRoute {
+    pub fn new() -> WarmFirstRoute {
+        WarmFirstRoute::default()
+    }
+
+    pub fn with_margin(spill_margin: f64) -> WarmFirstRoute {
+        WarmFirstRoute { spill_margin }
+    }
+}
+
+impl RouteStrategy for WarmFirstRoute {
+    fn name(&self) -> &'static str {
+        "warm_first"
+    }
+
+    fn pick(&mut self, key: &str, _weight: usize, views: &[EndpointView]) -> RoutePick {
+        let best = argmin_load(views, |_| true).expect("views non-empty");
+        if key.is_empty() {
+            // unroutable key: plain least-loaded
+            return RoutePick { index: best, warm_hit: false, spillover: false };
+        }
+        match argmin_load(views, |v| v.warm) {
+            None => RoutePick { index: best, warm_hit: false, spillover: false },
+            Some(w) => {
+                // discount the warm endpoint's claimed warmth by the hit
+                // rate its interchange actually delivers: an endpoint whose
+                // warm state thrashes (low hit rate) earns a smaller
+                // backlog allowance before the router spills
+                let margin =
+                    self.spill_margin * views[w].warm_hit_rate.clamp(0.0, 1.0).max(0.1);
+                if views[w].load() <= views[best].load() + margin {
+                    RoutePick { index: w, warm_hit: true, spillover: false }
+                } else {
+                    RoutePick { index: best, warm_hit: false, spillover: true }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// strategy selection
+// ---------------------------------------------------------------------------
+
+/// Named strategy selector (CLI `--route`, service configuration).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RouteStrategyKind {
+    RoundRobin,
+    LeastLoaded,
+    #[default]
+    WarmFirst,
+}
+
+impl RouteStrategyKind {
+    pub fn parse(s: &str) -> Option<RouteStrategyKind> {
+        match s {
+            "round_robin" => Some(RouteStrategyKind::RoundRobin),
+            "least_loaded" => Some(RouteStrategyKind::LeastLoaded),
+            "warm_first" => Some(RouteStrategyKind::WarmFirst),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RouteStrategyKind::RoundRobin => "round_robin",
+            RouteStrategyKind::LeastLoaded => "least_loaded",
+            RouteStrategyKind::WarmFirst => "warm_first",
+        }
+    }
+
+    /// Instantiate the strategy with its defaults.
+    pub fn build(&self) -> Box<dyn RouteStrategy> {
+        match self {
+            RouteStrategyKind::RoundRobin => Box::new(RoundRobinRoute::new()),
+            RouteStrategyKind::LeastLoaded => Box::new(LeastLoadedRoute::new()),
+            RouteStrategyKind::WarmFirst => Box::new(WarmFirstRoute::new()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// router
+// ---------------------------------------------------------------------------
+
+/// The routing verdict the service acts on.
+#[derive(Debug, Clone, Copy)]
+pub struct RouteDecision {
+    pub endpoint: EndpointId,
+    /// index of the chosen target in registration order
+    pub index: usize,
+    pub warm_hit: bool,
+    pub spillover: bool,
+}
+
+struct Target {
+    endpoint: EndpointId,
+    site: usize,
+    probe: Arc<dyn EndpointProbe>,
+    /// affinity keys routed here before (endpoint-level warm set)
+    warm: LruSet<String>,
+}
+
+/// Service-level multi-endpoint router: owns the target registry, the
+/// per-endpoint warm sets and the link-cost table, and delegates each
+/// decision to the installed [`RouteStrategy`].
+pub struct Router {
+    targets: Vec<Target>,
+    strategy: Box<dyn RouteStrategy>,
+    /// per-site link penalty (queued-fits-per-worker equivalents), indexed
+    /// by site; absent sites cost 0.0
+    link_costs: Vec<f64>,
+    warm_keys_capacity: usize,
+}
+
+impl Router {
+    pub fn new(kind: RouteStrategyKind) -> Router {
+        Router::with_strategy(kind.build())
+    }
+
+    pub fn with_strategy(strategy: Box<dyn RouteStrategy>) -> Router {
+        Router {
+            targets: Vec::new(),
+            strategy,
+            link_costs: Vec::new(),
+            warm_keys_capacity: DEFAULT_WARM_KEYS_PER_ENDPOINT,
+        }
+    }
+
+    /// Install a per-site link-cost table (site index -> penalty). The
+    /// RIVER-style local site is 0.0; remote facilities pay their WAN
+    /// transfer as extra effective backlog.
+    pub fn with_link_costs(mut self, costs: Vec<f64>) -> Router {
+        self.link_costs = costs;
+        self
+    }
+
+    /// Bound on each endpoint's routed-key warm set.
+    pub fn with_warm_keys_capacity(mut self, cap: usize) -> Router {
+        self.warm_keys_capacity = cap.max(1);
+        self
+    }
+
+    /// Register an endpoint at `site` with its live load probe.
+    pub fn add_target(&mut self, endpoint: EndpointId, site: usize, probe: Arc<dyn EndpointProbe>) {
+        self.targets.push(Target {
+            endpoint,
+            site,
+            probe,
+            warm: LruSet::new(self.warm_keys_capacity),
+        });
+    }
+
+    /// Drop an endpoint from the candidate set (endpoint deregistration).
+    /// Without this, a shut-down endpoint's probe reports zero load and
+    /// becomes the permanent least-loaded pick — every routed submission
+    /// would then hard-fail against the dead endpoint. Returns true when a
+    /// target was removed.
+    pub fn remove_target(&mut self, endpoint: EndpointId) -> bool {
+        let before = self.targets.len();
+        self.targets.retain(|t| t.endpoint != endpoint);
+        self.targets.len() < before
+    }
+
+    pub fn len(&self) -> usize {
+        self.targets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.targets.is_empty()
+    }
+
+    pub fn strategy_name(&self) -> &'static str {
+        self.strategy.name()
+    }
+
+    fn link_cost(&self, site: usize) -> f64 {
+        self.link_costs.get(site).copied().unwrap_or(0.0)
+    }
+
+    /// Pick a target without committing any warmth: snapshot every target,
+    /// ask the strategy. `None` when no target is registered. Callers that
+    /// go on to submit should call [`Router::note_routed`] once the
+    /// submission is accepted — a failed submit must not leave the picked
+    /// endpoint marked warm for a key it never received (possibly evicting
+    /// a genuinely warm key from the bounded set).
+    pub fn decide(&mut self, key: &str, weight: usize) -> Option<RouteDecision> {
+        if self.targets.is_empty() {
+            return None;
+        }
+        let views: Vec<EndpointView> = self
+            .targets
+            .iter()
+            .enumerate()
+            .map(|(index, t)| EndpointView {
+                index,
+                site: t.site,
+                queued_weight: t.probe.queued_weight(),
+                active_workers: t.probe.active_workers(),
+                warm_hit_rate: t.probe.warm_hit_rate(),
+                warm: !key.is_empty() && t.warm.contains(key),
+                link_cost: self.link_cost(t.site),
+            })
+            .collect();
+        let pick = self.strategy.pick(key, weight, &views);
+        Some(RouteDecision {
+            endpoint: self.targets[pick.index].endpoint,
+            index: pick.index,
+            warm_hit: pick.warm_hit,
+            spillover: pick.spillover,
+        })
+    }
+
+    /// Record that a task with `key` was accepted by `endpoint`: routing
+    /// the key there is what warms the site (its own interchange handles
+    /// worker-level placement). Looked up by endpoint id, not index —
+    /// targets may have been removed since the decision.
+    pub fn note_routed(&mut self, endpoint: EndpointId, key: &str) {
+        if key.is_empty() {
+            return;
+        }
+        if let Some(t) = self.targets.iter_mut().find(|t| t.endpoint == endpoint) {
+            t.warm.insert(key.to_string());
+        }
+    }
+
+    /// [`Router::decide`] + [`Router::note_routed`] in one step, for
+    /// callers whose placement cannot fail (tests, simulations).
+    pub fn route(&mut self, key: &str, weight: usize) -> Option<RouteDecision> {
+        let decision = self.decide(key, weight)?;
+        self.note_routed(decision.endpoint, key);
+        Some(decision)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// Probe with externally mutable load.
+    struct FakeProbe {
+        queued: AtomicUsize,
+        workers: AtomicUsize,
+        hit_rate_milli: AtomicUsize,
+    }
+
+    impl FakeProbe {
+        fn new(queued: usize, workers: usize) -> Arc<FakeProbe> {
+            Arc::new(FakeProbe {
+                queued: AtomicUsize::new(queued),
+                workers: AtomicUsize::new(workers),
+                hit_rate_milli: AtomicUsize::new(1000),
+            })
+        }
+    }
+
+    impl EndpointProbe for FakeProbe {
+        fn queued_weight(&self) -> usize {
+            self.queued.load(Ordering::SeqCst)
+        }
+        fn active_workers(&self) -> usize {
+            self.workers.load(Ordering::SeqCst)
+        }
+        fn warm_hit_rate(&self) -> f64 {
+            self.hit_rate_milli.load(Ordering::SeqCst) as f64 / 1000.0
+        }
+    }
+
+    fn two_target_router(kind: RouteStrategyKind) -> (Router, Arc<FakeProbe>, Arc<FakeProbe>) {
+        let mut r = Router::new(kind);
+        let p0 = FakeProbe::new(0, 1);
+        let p1 = FakeProbe::new(0, 1);
+        r.add_target(10, 0, p0.clone());
+        r.add_target(20, 1, p1.clone());
+        (r, p0, p1)
+    }
+
+    #[test]
+    fn kind_parse_and_build() {
+        for (s, k) in [
+            ("round_robin", RouteStrategyKind::RoundRobin),
+            ("least_loaded", RouteStrategyKind::LeastLoaded),
+            ("warm_first", RouteStrategyKind::WarmFirst),
+        ] {
+            assert_eq!(RouteStrategyKind::parse(s), Some(k));
+            assert_eq!(k.as_str(), s);
+            assert_eq!(k.build().name(), s);
+        }
+        assert!(RouteStrategyKind::parse("random").is_none());
+    }
+
+    #[test]
+    fn empty_router_routes_nothing() {
+        let mut r = Router::new(RouteStrategyKind::RoundRobin);
+        assert!(r.is_empty());
+        assert!(r.route("fn0:A", 1).is_none());
+    }
+
+    #[test]
+    fn round_robin_rotates() {
+        let (mut r, _p0, _p1) = two_target_router(RouteStrategyKind::RoundRobin);
+        let eps: Vec<EndpointId> =
+            (0..4).map(|_| r.route("fn0:A", 1).unwrap().endpoint).collect();
+        assert_eq!(eps, vec![10, 20, 10, 20]);
+    }
+
+    #[test]
+    fn least_loaded_follows_backlog_per_worker() {
+        let (mut r, p0, p1) = two_target_router(RouteStrategyKind::LeastLoaded);
+        p0.queued.store(8, Ordering::SeqCst);
+        p0.workers.store(8, Ordering::SeqCst); // 1 fit/worker
+        p1.queued.store(6, Ordering::SeqCst);
+        p1.workers.store(2, Ordering::SeqCst); // 3 fits/worker
+        assert_eq!(r.route("fn0:A", 1).unwrap().endpoint, 10);
+        p0.queued.store(40, Ordering::SeqCst); // now 5 fits/worker
+        assert_eq!(r.route("fn0:A", 1).unwrap().endpoint, 20);
+    }
+
+    #[test]
+    fn link_cost_penalizes_remote_site() {
+        let mut r = Router::new(RouteStrategyKind::LeastLoaded).with_link_costs(vec![0.0, 5.0]);
+        let p0 = FakeProbe::new(3, 1); // local: 3 fits of backlog
+        let p1 = FakeProbe::new(0, 1); // remote: idle but 5.0 away
+        r.add_target(10, 0, p0);
+        r.add_target(20, 1, p1);
+        assert_eq!(r.route("fn0:A", 1).unwrap().endpoint, 10);
+    }
+
+    #[test]
+    fn warm_first_sticks_to_warm_endpoint() {
+        let (mut r, p0, _p1) = two_target_router(RouteStrategyKind::WarmFirst);
+        // first task of the key: cold everywhere, least-loaded tie -> 10
+        let d = r.route("fn0:A", 1).unwrap();
+        assert_eq!(d.endpoint, 10);
+        assert!(!d.warm_hit && !d.spillover);
+        // later tasks stick to the now-warm endpoint, even when it carries
+        // backlog within the spill margin
+        p0.queued.store(2, Ordering::SeqCst);
+        for _ in 0..3 {
+            let d = r.route("fn0:A", 1).unwrap();
+            assert_eq!(d.endpoint, 10);
+            assert!(d.warm_hit);
+        }
+        // a different class lands on the idle endpoint (least loaded, cold)
+        let d = r.route("fn0:B", 1).unwrap();
+        assert_eq!(d.endpoint, 20);
+        assert!(!d.warm_hit);
+    }
+
+    #[test]
+    fn warm_first_spills_when_saturated() {
+        let (mut r, p0, _p1) = two_target_router(RouteStrategyKind::WarmFirst);
+        assert_eq!(r.route("fn0:A", 1).unwrap().endpoint, 10); // warms 10
+        // warm endpoint far deeper than margin over the idle one
+        p0.queued.store(100, Ordering::SeqCst);
+        let d = r.route("fn0:A", 1).unwrap();
+        assert_eq!(d.endpoint, 20);
+        assert!(d.spillover && !d.warm_hit);
+        // the spill itself warmed 20: with both warm, the shallower wins
+        let d = r.route("fn0:A", 1).unwrap();
+        assert_eq!(d.endpoint, 20);
+        assert!(d.warm_hit);
+    }
+
+    #[test]
+    fn low_observed_hit_rate_shrinks_the_spill_margin() {
+        let (mut r, p0, _p1) = two_target_router(RouteStrategyKind::WarmFirst);
+        assert_eq!(r.route("fn0:A", 1).unwrap().endpoint, 10);
+        // backlog within the default margin: stays warm at full hit rate...
+        p0.queued.store(3, Ordering::SeqCst);
+        assert!(r.route("fn0:A", 1).unwrap().warm_hit);
+        // ...but a thrashing interchange (10% hits) earns margin 0.4 only
+        p0.hit_rate_milli.store(100, Ordering::SeqCst);
+        let d = r.route("fn0:A", 1).unwrap();
+        assert_eq!(d.endpoint, 20);
+        assert!(d.spillover);
+    }
+
+    #[test]
+    fn empty_key_routes_by_load_only() {
+        let (mut r, p0, _p1) = two_target_router(RouteStrategyKind::WarmFirst);
+        p0.queued.store(5, Ordering::SeqCst);
+        let d = r.route("", 1).unwrap();
+        assert_eq!(d.endpoint, 20);
+        assert!(!d.warm_hit && !d.spillover);
+    }
+
+    #[test]
+    fn removed_target_stops_receiving_work() {
+        let (mut r, _p0, _p1) = two_target_router(RouteStrategyKind::LeastLoaded);
+        assert_eq!(r.len(), 2);
+        assert!(r.remove_target(10));
+        assert!(!r.remove_target(10), "second removal is a no-op");
+        assert_eq!(r.len(), 1);
+        // all traffic now lands on the survivor
+        for _ in 0..3 {
+            assert_eq!(r.route("fn0:A", 1).unwrap().endpoint, 20);
+        }
+        // removing the last target empties the router
+        assert!(r.remove_target(20));
+        assert!(r.is_empty());
+        assert!(r.route("fn0:A", 1).is_none());
+    }
+
+    #[test]
+    fn warm_set_is_bounded() {
+        let mut r =
+            Router::new(RouteStrategyKind::WarmFirst).with_warm_keys_capacity(2);
+        let p = FakeProbe::new(0, 1);
+        r.add_target(10, 0, p);
+        for key in ["fn0:A", "fn0:B", "fn0:C"] {
+            r.route(key, 1);
+        }
+        // A was evicted by C: routing A again is a cold pick, not a warm hit
+        let d = r.route("fn0:A", 1).unwrap();
+        assert!(!d.warm_hit);
+    }
+}

@@ -227,7 +227,54 @@ pub fn simulate_policy(
     seed: u64,
 ) -> PolicyOutcome {
     let mut rng = Rng::new(seed);
-    let mut free_at = provision_ready_times(&mut rng, topo, &cost);
+    let r = pull_replay(tasks, topo, &cost, class_compile_s, policy, &mut rng);
+
+    let makespan = r.completions.iter().cloned().fold(0.0, f64::max);
+    let mean_latency = if r.completions.is_empty() {
+        0.0
+    } else {
+        r.completions.iter().sum::<f64>() / r.completions.len() as f64
+    };
+    let utilization = if makespan > 0.0 {
+        r.busy / (topo.workers() as f64 * makespan)
+    } else {
+        0.0
+    };
+    PolicyOutcome {
+        makespan_s: makespan,
+        mean_latency_s: mean_latency,
+        completions_s: r.completions,
+        compiles: r.compiles,
+        affinity_hits: r.hits,
+        warm_evictions: r.evictions,
+        utilization,
+    }
+}
+
+/// Raw per-endpoint replay result ([`pull_replay`]).
+struct PullReplay {
+    completions: Vec<f64>,
+    compiles: usize,
+    hits: usize,
+    evictions: usize,
+    busy: f64,
+}
+
+/// The pull-based dispatch core shared by [`simulate_policy`] (one
+/// endpoint) and [`simulate_sites`] (per site): provision workers, then let
+/// the earliest-free worker repeatedly pick its next task under `policy`,
+/// paying `class_compile_s` for each cold (worker, class) pair. RNG draw
+/// order is identical to the original `simulate_policy`, preserving
+/// seed-for-seed reproducibility.
+fn pull_replay(
+    tasks: &[SimTask],
+    topo: Topology,
+    cost: &CostModel,
+    class_compile_s: f64,
+    policy: SimPolicy,
+    rng: &mut Rng,
+) -> PullReplay {
+    let mut free_at = provision_ready_times(rng, topo, cost);
 
     let mut heap: BinaryHeap<Reverse<(u64, usize)>> = free_at
         .iter()
@@ -279,25 +326,168 @@ pub fn simulate_policy(
         heap.push(Reverse((f64_key(done), w)));
     }
 
+    PullReplay { completions, compiles, hits, evictions, busy }
+}
+
+// ---------------------------------------------------------------------------
+// multi-site routed replay (cross-endpoint router)
+// ---------------------------------------------------------------------------
+
+/// One facility in a multi-site replay: its worker topology, cost model and
+/// the one-way WAN latency every task routed there pays on top of the
+/// site-local transfer terms.
+#[derive(Debug, Clone, Copy)]
+pub struct SiteSpec {
+    pub topo: Topology,
+    pub cost: CostModel,
+    /// per-task link latency to reach this site (0.0 for the local site)
+    pub link_s: f64,
+}
+
+/// Routing strategies the multi-site simulator can replay — the
+/// discrete-event analogs of `scheduler::router`'s `RouteStrategy`s.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouteSim {
+    /// rotate through sites task by task
+    RoundRobin,
+    /// smallest estimated per-worker backlog (routed work / workers +
+    /// link latency)
+    LeastLoaded,
+    /// prefer a site already serving the task's class; spill to the
+    /// cheapest cold site once the warm site's queueing penalty exceeds
+    /// the recompile cost
+    WarmFirst,
+}
+
+impl RouteSim {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RouteSim::RoundRobin => "round_robin",
+            RouteSim::LeastLoaded => "least_loaded",
+            RouteSim::WarmFirst => "warm_first",
+        }
+    }
+}
+
+/// Outcome of one routed multi-site replay.
+#[derive(Debug, Clone)]
+pub struct MultiSiteOutcome {
+    pub makespan_s: f64,
+    /// mean task completion time (all tasks submitted at t = 0)
+    pub mean_latency_s: f64,
+    pub completions_s: Vec<f64>,
+    /// cold (worker, class) compiles summed over every site
+    pub compiles: usize,
+    /// tasks routed to a site already serving their class
+    pub route_warm_hits: usize,
+    /// tasks steered off a warm site because its backlog exceeded the
+    /// recompile cost
+    pub spillovers: usize,
+    pub per_site_tasks: Vec<usize>,
+}
+
+/// Replay `tasks` (all submitted at t = 0, in order) through a federation
+/// of `sites` under a routing strategy: the router assigns each task to a
+/// site from estimated per-worker backlog, link latency and site-level
+/// class warmth, then each site's stream is served by its own workers under
+/// warm-worker affinity dispatch exactly as in [`simulate_policy`] (with
+/// the site's link latency folded into per-task transfer).
+pub fn simulate_sites(
+    tasks: &[SimTask],
+    sites: &[SiteSpec],
+    class_compile_s: f64,
+    route: RouteSim,
+    seed: u64,
+) -> MultiSiteOutcome {
+    assert!(!sites.is_empty(), "at least one site");
+    let nsites = sites.len();
+    let workers: Vec<f64> = sites.iter().map(|s| s.topo.workers().max(1) as f64).collect();
+
+    // --- routing pass: assign every task a site ---------------------------
+    let mut routed: Vec<Vec<usize>> = vec![Vec::new(); nsites];
+    let mut backlog_s: Vec<f64> = vec![0.0; nsites]; // routed work, seconds
+    let mut classes: Vec<Vec<usize>> = vec![Vec::new(); nsites]; // site warm classes
+    let mut warm_hits = 0usize;
+    let mut spillovers = 0usize;
+    let mut rr = 0usize;
+
+    // estimated completion penalty of sending the next task to site s
+    let est = |s: usize, backlog_s: &[f64]| backlog_s[s] / workers[s] + sites[s].link_s;
+
+    for (i, task) in tasks.iter().enumerate() {
+        let pick = match route {
+            RouteSim::RoundRobin => {
+                let p = rr % nsites;
+                rr += 1;
+                p
+            }
+            RouteSim::LeastLoaded => (0..nsites)
+                .min_by(|&a, &b| est(a, &backlog_s).total_cmp(&est(b, &backlog_s)))
+                .expect("non-empty"),
+            RouteSim::WarmFirst => {
+                // effective cost = queueing estimate + the compile a cold
+                // site's worker would pay; warm sites win until their
+                // backlog advantage is gone (then the router spills)
+                let eff = |s: usize| {
+                    est(s, &backlog_s)
+                        + if classes[s].contains(&task.class) { 0.0 } else { class_compile_s }
+                };
+                (0..nsites)
+                    .min_by(|&a, &b| eff(a).total_cmp(&eff(b)))
+                    .expect("non-empty")
+            }
+        };
+        let warm = classes[pick].contains(&task.class);
+        if route == RouteSim::WarmFirst {
+            if warm {
+                warm_hits += 1;
+            } else if (0..nsites).any(|s| classes[s].contains(&task.class)) {
+                spillovers += 1;
+            }
+        } else if warm {
+            warm_hits += 1;
+        }
+        routed[pick].push(i);
+        backlog_s[pick] += task.service_s + if warm { 0.0 } else { class_compile_s };
+        if !warm {
+            classes[pick].push(task.class);
+        }
+    }
+
+    // --- serving pass: per-site affinity replay ---------------------------
+    let mut completions = vec![0.0; tasks.len()];
+    let mut compiles = 0usize;
+    for (s, site) in sites.iter().enumerate() {
+        if routed[s].is_empty() {
+            continue;
+        }
+        let local: Vec<SimTask> = routed[s].iter().map(|&i| tasks[i]).collect();
+        let mut cost = site.cost;
+        cost.transfer_in_s += site.link_s;
+        // per-site RNG stream: site 0 with link 0 replays identically to
+        // simulate_policy(seed)
+        let mut rng = Rng::new(seed.wrapping_add((s as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)));
+        let r = pull_replay(&local, site.topo, &cost, class_compile_s, SimPolicy::Affinity, &mut rng);
+        compiles += r.compiles;
+        for (j, &orig) in routed[s].iter().enumerate() {
+            completions[orig] = r.completions[j];
+        }
+    }
+
     let makespan = completions.iter().cloned().fold(0.0, f64::max);
     let mean_latency = if completions.is_empty() {
         0.0
     } else {
         completions.iter().sum::<f64>() / completions.len() as f64
     };
-    let utilization = if makespan > 0.0 {
-        busy / (topo.workers() as f64 * makespan)
-    } else {
-        0.0
-    };
-    PolicyOutcome {
+    MultiSiteOutcome {
         makespan_s: makespan,
         mean_latency_s: mean_latency,
         completions_s: completions,
         compiles,
-        affinity_hits: hits,
-        warm_evictions: evictions,
-        utilization,
+        route_warm_hits: warm_hits,
+        spillovers,
+        per_site_tasks: routed.iter().map(|r| r.len()).collect(),
     }
 }
 
@@ -492,6 +682,115 @@ mod tests {
         assert_eq!(bounded.compiles, 16);
         assert_eq!(bounded.warm_evictions, 14);
         assert!(bounded.makespan_s > roomy.makespan_s);
+    }
+
+    // -- multi-site routed replay ------------------------------------------
+
+    fn two_equal_sites() -> Vec<SiteSpec> {
+        let topo = Topology { max_blocks: 1, nodes_per_block: 1, workers_per_node: 4 };
+        vec![
+            SiteSpec { topo, cost: CostModel::ideal(), link_s: 0.0 },
+            SiteSpec { topo, cost: CostModel::ideal(), link_s: 0.0 },
+        ]
+    }
+
+    #[test]
+    fn single_site_replay_matches_simulate_policy() {
+        let tasks: Vec<SimTask> =
+            (0..40).map(|i| SimTask { service_s: 1.0, class: i % 3 }).collect();
+        let topo = Topology { max_blocks: 2, nodes_per_block: 1, workers_per_node: 4 };
+        let sites = vec![SiteSpec { topo, cost: CostModel::river(), link_s: 0.0 }];
+        for route in [RouteSim::RoundRobin, RouteSim::LeastLoaded, RouteSim::WarmFirst] {
+            let multi = simulate_sites(&tasks, &sites, 5.0, route, 21);
+            let single =
+                simulate_policy(&tasks, topo, CostModel::river(), 5.0, SimPolicy::Affinity, 21);
+            // with one site every strategy degenerates to the plain replay
+            assert_eq!(multi.completions_s, single.completions_s, "{route:?}");
+            assert_eq!(multi.compiles, single.compiles);
+            assert_eq!(multi.per_site_tasks, vec![tasks.len()]);
+        }
+    }
+
+    #[test]
+    fn round_robin_splits_tasks_evenly() {
+        let tasks: Vec<SimTask> =
+            (0..20).map(|i| SimTask { service_s: 1.0, class: i % 2 }).collect();
+        let out = simulate_sites(&tasks, &two_equal_sites(), 5.0, RouteSim::RoundRobin, 1);
+        assert_eq!(out.per_site_tasks, vec![10, 10]);
+        assert_eq!(out.completions_s.len(), 20);
+        assert!(out.completions_s.iter().all(|&c| c > 0.0));
+    }
+
+    #[test]
+    fn warm_first_concentrates_classes_and_cuts_compiles() {
+        // 6 equal-work classes over 2 sites of 2 workers each: warm-first
+        // pins 3 classes per site (each worker multiplexes 3 executables at
+        // most), while round-robin smears all 6 classes over both sites so
+        // every worker cycles through 3 compiles of its own. The arrival
+        // pattern is phase-shifted mid-period so round-robin's site parity
+        // cannot accidentally align with the class cycle.
+        let pat = [0usize, 1, 2, 3, 4, 5, 3, 4, 5, 0, 1, 2];
+        let tasks: Vec<SimTask> =
+            (0..120).map(|i| SimTask { service_s: 1.0, class: pat[i % 12] }).collect();
+        let topo = Topology { max_blocks: 1, nodes_per_block: 1, workers_per_node: 2 };
+        let sites = vec![
+            SiteSpec { topo, cost: CostModel::ideal(), link_s: 0.0 },
+            SiteSpec { topo, cost: CostModel::ideal(), link_s: 0.0 },
+        ];
+        let rr = simulate_sites(&tasks, &sites, 10.0, RouteSim::RoundRobin, 7);
+        let wf = simulate_sites(&tasks, &sites, 10.0, RouteSim::WarmFirst, 7);
+        assert!(wf.compiles < rr.compiles, "wf {} !< rr {}", wf.compiles, rr.compiles);
+        assert!(
+            wf.mean_latency_s < rr.mean_latency_s,
+            "wf {} !< rr {}",
+            wf.mean_latency_s,
+            rr.mean_latency_s
+        );
+        assert!(wf.route_warm_hits > 0);
+        // both sites still share the work (class-level, not task-level)
+        assert!(wf.per_site_tasks.iter().all(|&n| n > 0), "{:?}", wf.per_site_tasks);
+    }
+
+    #[test]
+    fn warm_first_spills_when_the_warm_site_saturates() {
+        // one heavy class, two single-worker sites: the warm site's backlog
+        // quickly exceeds the recompile cost and work spills to the cold
+        // site
+        let tasks: Vec<SimTask> =
+            (0..12).map(|_| SimTask { service_s: 10.0, class: 0 }).collect();
+        let topo = Topology { max_blocks: 1, nodes_per_block: 1, workers_per_node: 1 };
+        let sites = vec![
+            SiteSpec { topo, cost: CostModel::ideal(), link_s: 0.0 },
+            SiteSpec { topo, cost: CostModel::ideal(), link_s: 0.0 },
+        ];
+        let out = simulate_sites(&tasks, &sites, 5.0, RouteSim::WarmFirst, 3);
+        assert!(out.spillovers > 0, "no spillover despite saturation");
+        assert!(out.per_site_tasks.iter().all(|&n| n > 0), "{:?}", out.per_site_tasks);
+    }
+
+    #[test]
+    fn link_cost_steers_least_loaded_away_from_remote_site() {
+        // remote site is so far away that keeping everything local wins
+        // until the local backlog exceeds the link latency
+        let tasks: Vec<SimTask> = (0..4).map(|_| SimTask { service_s: 0.5, class: 0 }).collect();
+        let topo = Topology { max_blocks: 1, nodes_per_block: 1, workers_per_node: 4 };
+        let sites = vec![
+            SiteSpec { topo, cost: CostModel::ideal(), link_s: 0.0 },
+            SiteSpec { topo, cost: CostModel::ideal(), link_s: 100.0 },
+        ];
+        let out = simulate_sites(&tasks, &sites, 0.0, RouteSim::LeastLoaded, 5);
+        assert_eq!(out.per_site_tasks, vec![4, 0]);
+    }
+
+    #[test]
+    fn multisite_replay_deterministic_per_seed() {
+        let tasks: Vec<SimTask> =
+            (0..30).map(|i| SimTask { service_s: 1.0, class: i % 3 }).collect();
+        let sites = two_equal_sites();
+        let a = simulate_sites(&tasks, &sites, 5.0, RouteSim::WarmFirst, 42);
+        let b = simulate_sites(&tasks, &sites, 5.0, RouteSim::WarmFirst, 42);
+        assert_eq!(a.completions_s, b.completions_s);
+        assert_eq!(a.spillovers, b.spillovers);
     }
 
     #[test]

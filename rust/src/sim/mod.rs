@@ -6,10 +6,10 @@ pub mod cluster;
 pub mod replay;
 
 pub use cluster::{
-    simulate, simulate_policy, trials, CostModel, PolicyOutcome, SimOutcome, SimPolicy, SimTask,
-    Topology,
+    simulate, simulate_policy, simulate_sites, trials, CostModel, MultiSiteOutcome,
+    PolicyOutcome, RouteSim, SimOutcome, SimPolicy, SimTask, SiteSpec, Topology,
 };
 pub use replay::{
-    block_scaling, calibrate_multiplier, replay_table1_row, table1_mixed_workload, PaperRow,
-    ReplayRow, PAPER_TABLE1,
+    block_scaling, calibrate_multiplier, replay_table1_row, table1_mixed_workload,
+    two_site_table1, PaperRow, ReplayRow, PAPER_TABLE1,
 };

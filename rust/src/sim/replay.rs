@@ -10,7 +10,7 @@
 //! who wins, the speedup ordering across analyses, and where overhead
 //! dominates (see EXPERIMENTS.md).
 
-use crate::sim::cluster::{simulate, trials, CostModel, SimTask, Topology};
+use crate::sim::cluster::{simulate, trials, CostModel, SimTask, SiteSpec, Topology};
 use crate::util::stats::Summary;
 
 /// Paper Table 1 reference numbers (seconds).
@@ -114,6 +114,24 @@ pub fn table1_mixed_workload() -> Vec<SimTask> {
     out
 }
 
+/// The two-site federation for routed Table-1 replays: the paper's RIVER
+/// endpoint plus a smaller remote facility behind a WAN link — the
+/// multi-site serving picture the cross-endpoint router targets (funcX
+/// endpoints at multiple facilities; the HL-LHC analysis-facility
+/// blueprint). Link latency on the remote site is per-task (patched
+/// workspace upload across the WAN), on top of the site-local transfer
+/// terms.
+pub fn two_site_table1() -> Vec<SiteSpec> {
+    vec![
+        SiteSpec { topo: Topology::river_table1(), cost: CostModel::river(), link_s: 0.0 },
+        SiteSpec {
+            topo: Topology { max_blocks: 2, nodes_per_block: 1, workers_per_node: 24 },
+            cost: CostModel::river(),
+            link_s: 0.35,
+        },
+    ]
+}
+
 /// Block-scaling sweep (§3 / isolated-run discussion): makespan vs
 /// max_blocks at the paper's node shape.
 pub fn block_scaling(
@@ -195,6 +213,43 @@ mod tests {
         // interleaved: the first three tasks are one of each class
         let head: Vec<usize> = tasks.iter().take(3).map(|t| t.class).collect();
         assert_eq!(head, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn two_site_topology_shape() {
+        let sites = two_site_table1();
+        assert_eq!(sites.len(), 2);
+        assert_eq!(sites[0].topo.workers(), 96); // RIVER Table-1 endpoint
+        assert_eq!(sites[0].link_s, 0.0);
+        assert!(sites[1].link_s > 0.0, "remote site must pay a WAN link");
+        assert!(sites[1].topo.workers() < sites[0].topo.workers());
+    }
+
+    #[test]
+    fn routed_mixed_workload_beats_round_robin_on_two_sites() {
+        // the bench assertion in test form: on the Table-1 mixed workload
+        // over RIVER + remote, warm-first routing yields lower mean latency
+        // and fewer compiles than round-robin
+        use crate::sim::cluster::{simulate_sites, RouteSim};
+        let tasks = table1_mixed_workload();
+        let sites = two_site_table1();
+        for seed in [1u64, 42] {
+            let rr = simulate_sites(&tasks, &sites, 5.0, RouteSim::RoundRobin, seed);
+            let wf = simulate_sites(&tasks, &sites, 5.0, RouteSim::WarmFirst, seed);
+            assert!(
+                wf.mean_latency_s < rr.mean_latency_s,
+                "seed {seed}: warm_first {:.2} s !< round_robin {:.2} s",
+                wf.mean_latency_s,
+                rr.mean_latency_s
+            );
+            // class-concentrated routing: most tasks land on a warm site
+            // (compiles can tie when the wave is wider than the worker
+            // pool — every first pop is cold either way — so the routing
+            // signal, not the compile count, is the robust check here)
+            assert!(wf.route_warm_hits > tasks.len() / 2, "seed {seed}");
+            assert!(wf.compiles <= rr.compiles, "seed {seed}");
+            assert_eq!(wf.completions_s.len(), tasks.len());
+        }
     }
 
     #[test]

@@ -14,7 +14,7 @@ use std::time::Duration;
 use pyhf_faas::coordinator::{
     Endpoint, EndpointConfig, ExecutorConfig, FaasClient, Service, ServiceHandle, TaskState,
 };
-use pyhf_faas::scheduler::PolicyKind;
+use pyhf_faas::scheduler::{PolicyKind, RouteStrategyKind, Router, WarmFirstRoute};
 use pyhf_faas::sim::{
     simulate_policy, table1_mixed_workload, CostModel, SimPolicy, Topology,
 };
@@ -269,6 +269,214 @@ fn batched_wave_through_real_endpoint() {
     assert_eq!(m.batches, 2);
     assert_eq!(m.batched_tasks, 4);
     ep.shutdown();
+}
+
+#[test]
+fn warm_first_router_spills_to_cold_endpoint_when_saturated() {
+    // two single-worker sites behind the cross-endpoint router, workers
+    // gated so the whole wave routes against queued backlog: warm-first
+    // keeps class A on the first site until its backlog exceeds the spill
+    // margin, then steers overflow to the cold site — after the gate opens
+    // both sites run their share of the work
+    let svc = Service::new();
+    let gate = Arc::new(AtomicBool::new(false));
+    let ep0 = gated_endpoint(&svc, PolicyKind::Affinity, gate.clone());
+    let ep1 = gated_endpoint(&svc, PolicyKind::Affinity, gate.clone());
+
+    let mut router = Router::with_strategy(Box::new(WarmFirstRoute::with_margin(2.0)));
+    router.add_target(ep0.id, 0, ep0.probe());
+    router.add_target(ep1.id, 1, ep1.probe());
+    svc.install_router(router);
+    assert_eq!(svc.route_strategy_name(), Some("warm_first"));
+
+    let client = FaasClient::new(svc.clone());
+    let f = client.register_function("echo", Arc::new(|p: &Json, _: &mut _| Ok(p.clone())));
+
+    let p0 = ep0.probe();
+    let p1 = ep1.probe();
+    let ids: Vec<_> = (0..12)
+        .map(|i| {
+            client
+                .run_routed(
+                    Json::obj(vec![("n", Json::num(i as f64)), ("class", Json::str("A"))]),
+                    f,
+                )
+                .unwrap()
+        })
+        .collect();
+
+    // routing happened against gated (all-queued) backlog: the warm site
+    // filled to the margin, then work spilled to the cold site
+    assert!(p0.queued_weight() > 0, "warm site got nothing");
+    assert!(p1.queued_weight() > 0, "saturated warm site never spilled");
+    let m = svc.metrics.snapshot();
+    assert_eq!(m.routed, 12);
+    assert!(m.route_warm_hits >= 4, "warm hits {}", m.route_warm_hits);
+    assert!(m.route_spillovers >= 1, "spillovers {}", m.route_spillovers);
+
+    gate.store(true, Ordering::SeqCst);
+    for (i, id) in ids.iter().enumerate() {
+        let r = svc.wait_result(*id, Duration::from_secs(10)).unwrap();
+        assert_eq!(r.get("n").unwrap().as_f64(), Some(i as f64));
+    }
+    // both interchanges actually dispatched work
+    let s0 = ep0.metrics_snapshot();
+    let s1 = ep1.metrics_snapshot();
+    assert!(s0.affinity_hits + s0.affinity_misses > 0);
+    assert!(s1.affinity_hits + s1.affinity_misses > 0);
+    ep0.shutdown();
+    ep1.shutdown();
+}
+
+#[test]
+fn routed_coalesced_wave_spans_endpoints_and_restores_order() {
+    // round-robin routing of a deduped + coalesced wave across two live
+    // endpoints: results come back in submission order regardless of site
+    let svc = Service::new();
+    let mk_ep = |name: &str| {
+        Endpoint::start(
+            svc.clone(),
+            EndpointConfig::new(name)
+                .with_executor(single_worker_exec())
+                .with_policy(PolicyKind::Affinity),
+        )
+    };
+    let ep0 = mk_ep("site0");
+    let ep1 = mk_ep("site1");
+    let mut router = Router::new(RouteStrategyKind::RoundRobin);
+    router.add_target(ep0.id, 0, ep0.probe());
+    router.add_target(ep1.id, 1, ep1.probe());
+    svc.install_router(router);
+
+    let client = FaasClient::new(svc.clone());
+    let f = client.register_function(
+        "echo",
+        pyhf_faas::scheduler::batched_handler(Arc::new(|p: &Json, _| Ok(p.clone()))),
+    );
+    let mk = |name: &str, class: &str| {
+        Json::obj(vec![("patch", Json::str(name)), ("class", Json::str(class))])
+    };
+    let payloads = vec![
+        mk("a0", "A"),
+        mk("b0", "B"),
+        mk("a0", "A"), // duplicate
+        mk("a1", "A"),
+        mk("b1", "B"),
+    ];
+    let sub = client.run_coalesced_routed(&payloads, f, 2).unwrap();
+    assert_eq!(sub.tasks.len(), 2); // A-batch (a0, a1) + B-batch (b0, b1)
+    let group_results = client
+        .gather(&sub.tasks, Duration::from_secs(10), Duration::from_millis(1), None, |_, _| {})
+        .unwrap();
+    let results = sub.unpack(&group_results).unwrap();
+    assert_eq!(results.len(), 5);
+    for (i, r) in results.iter().enumerate() {
+        assert_eq!(r.as_ref().unwrap(), &payloads[i]);
+    }
+    let m = svc.metrics.snapshot();
+    assert_eq!(m.routed, 2, "each coalesced group is routed once");
+    assert_eq!(m.dedup_hits, 1);
+    ep0.shutdown();
+    ep1.shutdown();
+}
+
+#[test]
+fn gather_timeout_cancels_and_drains_outstanding_tasks() {
+    // regression: gather used to return Err on timeout and walk away —
+    // outstanding tasks kept running, occupied workers, and their results
+    // leaked in the service store forever
+    let svc = Service::new();
+    let executions = Arc::new(AtomicUsize::new(0));
+    let ep = Endpoint::start(
+        svc.clone(),
+        EndpointConfig::new("slow").with_executor(single_worker_exec()),
+    );
+    let f = {
+        let executions = executions.clone();
+        svc.register_function(
+            "slow",
+            Arc::new(move |p: &Json, _: &mut _| {
+                executions.fetch_add(1, Ordering::SeqCst);
+                // long per-task sleep vs the 100 ms gather deadline below:
+                // even a badly descheduled CI runner cannot finish all six
+                // before the timeout fires
+                std::thread::sleep(Duration::from_millis(200));
+                Ok(p.clone())
+            }),
+        )
+    };
+    let client = FaasClient::new(svc.clone());
+    let tasks = client
+        .run_batch((0..6).map(|i| Json::num(i as f64)).collect(), ep.id, f)
+        .unwrap();
+
+    let collected = Arc::new(Mutex::new(Vec::new()));
+    let err = {
+        let collected = collected.clone();
+        client
+            .gather(
+                &tasks,
+                Duration::from_millis(100),
+                Duration::from_millis(2),
+                None,
+                move |i, _| collected.lock().unwrap().push(i),
+            )
+            .unwrap_err()
+    };
+    assert!(err.contains("cancelled"), "error must report the cleanup: {err}");
+    assert!(svc.metrics.snapshot().cancelled >= 1);
+
+    // every uncollected task must vanish from the store: cancelled pending
+    // tasks immediately, the abandoned in-flight one when its handler
+    // returns
+    let collected = collected.lock().unwrap().clone();
+    let outstanding: Vec<_> = (0..tasks.len()).filter(|i| !collected.contains(i)).collect();
+    assert!(!outstanding.is_empty(), "test needs a timeout with work left");
+    let t0 = std::time::Instant::now();
+    loop {
+        let leaked = outstanding.iter().filter(|&&i| svc.task_state(tasks[i]).is_some()).count();
+        if leaked == 0 {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(5), "{leaked} task records leaked");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // cancelled queued tasks never reached a worker
+    assert!(
+        executions.load(Ordering::SeqCst) < 6,
+        "cancelled tasks still executed: {}",
+        executions.load(Ordering::SeqCst)
+    );
+    ep.shutdown();
+}
+
+#[test]
+fn batcher_dedup_survives_forced_hash_collisions() {
+    // regression (e2e view of the batcher fix): colliding-but-distinct
+    // payloads stay individually submitted, true duplicates still dedup
+    let mk = |name: &str| {
+        Json::obj(vec![("patch", Json::str(name)), ("class", Json::str("A"))])
+    };
+    let payloads = vec![mk("p1"), mk("p2"), mk("p1")];
+    let plan = pyhf_faas::scheduler::plan_batches_hashed(&payloads, 8, |_| 7);
+    assert_eq!(plan.dedup_hits, 1, "true duplicate must dedup through the collision");
+    assert_eq!(plan.canonical, vec![0, 1, 0]);
+    assert_eq!(plan.groups.iter().map(|g| g.len()).sum::<usize>(), 2);
+}
+
+#[test]
+fn affinity_queue_age_is_true_minimum() {
+    // regression (e2e view of the aging fix): the autoscaler's latency
+    // signal must see the oldest task even when stamps arrive out of order
+    use pyhf_faas::scheduler::{AffinityPolicy, SchedPolicy, TaskMeta};
+    let mut p = AffinityPolicy::new();
+    let old = std::time::Instant::now()
+        .checked_sub(Duration::from_secs(3))
+        .expect("3 s into the past");
+    p.push(TaskMeta::bare(1));
+    p.push(TaskMeta { enqueued: old, ..TaskMeta::bare(2) });
+    let reported = p.oldest_enqueued().expect("non-empty queue");
+    assert_eq!(reported, old, "queue age under-reported");
 }
 
 #[test]
