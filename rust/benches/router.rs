@@ -1,5 +1,5 @@
 //! Bench ROUTE — cross-endpoint routing strategies on the two-site
-//! Table-1 workload.
+//! Table-1 workload, plus the chaos scenario for fault-aware routing.
 //!
 //! Workload: the three published analyses (125 x 1Lbb + 76 x 2L0J + 57 x
 //! stau) arriving interleaved at a *federation* of endpoints — the paper's
@@ -13,9 +13,18 @@
 //! each shape class on the site already serving it, spilling only when the
 //! warm site's queueing penalty exceeds the recompile cost.
 //!
+//! **Chaos scenario** (`table1_chaos_plan`): the RIVER endpoint stalls
+//! mid-workload. `warm_first/chaos-blind` replays the fault with PR 4's
+//! everything-is-live routing; `warm_first/chaos-aware` replays it with
+//! health scoring (detection, quarantine + exponential backoff, recall
+//! retries) enabled.
+//!
 //! Acceptance (asserted): `warm_first` beats `round_robin` on mean task
-//! latency. Emits machine-readable `BENCH_route.json` (schema
-//! `pyhf-faas/bench_route/v1`) next to `BENCH_fit.json`.
+//! latency on the clean workload, and health-aware routing beats
+//! health-blind routing on the chaos workload. Emits machine-readable
+//! `BENCH_route.json` (schema `pyhf-faas/bench_route/v1`, now carrying
+//! `quarantines` / `retries` / `health_diverted` per row) next to
+//! `BENCH_fit.json`.
 //!
 //! Run: `cargo bench --bench router [-- --quick] [-- --out BENCH_route.json]`
 
@@ -24,8 +33,8 @@ use std::time::Instant;
 
 use pyhf_faas::bench::routejson::{RouteBenchReport, StrategyBench};
 use pyhf_faas::sim::{
-    simulate_sites, table1_mixed_workload, two_site_table1, RouteSim, SimTask, SiteSpec,
-    PAPER_TABLE1,
+    simulate_sites_faulty, table1_chaos_plan, table1_mixed_workload, two_site_table1, FaultPlan,
+    RouteSim, SimTask, SiteSpec, PAPER_TABLE1,
 };
 use pyhf_faas::util::stats::Summary;
 
@@ -34,54 +43,100 @@ use pyhf_faas::util::stats::Summary;
 const CLASS_COMPILE_S: f64 = 5.0;
 
 struct Row {
-    strategy: RouteSim,
+    name: String,
     latency: Summary,
     makespan: Summary,
     compiles: f64,
     warm_hits: f64,
     spillovers: f64,
+    quarantines: f64,
+    retries: f64,
+    health_diverted: f64,
     wall_s: f64,
 }
 
-fn run(strategy: RouteSim, tasks: &[SimTask], sites: &[SiteSpec], trials: u64) -> Row {
+#[allow(clippy::too_many_arguments)]
+fn run(
+    name: &str,
+    strategy: RouteSim,
+    tasks: &[SimTask],
+    sites: &[SiteSpec],
+    plan: &FaultPlan,
+    health_aware: bool,
+    trials: u64,
+) -> Row {
     let t0 = Instant::now();
     let mut latencies = Vec::new();
     let mut makespans = Vec::new();
     let mut compiles = 0.0;
     let mut warm_hits = 0.0;
     let mut spillovers = 0.0;
+    let mut quarantines = 0.0;
+    let mut retries = 0.0;
+    let mut health_diverted = 0.0;
     for t in 0..trials {
-        let out = simulate_sites(tasks, sites, CLASS_COMPILE_S, strategy, 0x407e + t * 7919);
+        let out = simulate_sites_faulty(
+            tasks,
+            sites,
+            CLASS_COMPILE_S,
+            strategy,
+            plan,
+            health_aware,
+            0x407e + t * 7919,
+        );
         latencies.push(out.mean_latency_s);
         makespans.push(out.makespan_s);
         compiles += out.compiles as f64;
         warm_hits += out.route_warm_hits as f64;
         spillovers += out.spillovers as f64;
+        quarantines += out.quarantines as f64;
+        retries += out.retries as f64;
+        health_diverted += out.health_diverted as f64;
     }
     let n = trials as f64;
     Row {
-        strategy,
+        name: name.to_string(),
         latency: Summary::of(&latencies),
         makespan: Summary::of(&makespans),
         compiles: compiles / n,
         warm_hits: warm_hits / n,
         spillovers: spillovers / n,
+        quarantines: quarantines / n,
+        retries: retries / n,
+        health_diverted: health_diverted / n,
         wall_s: t0.elapsed().as_secs_f64(),
     }
 }
 
 fn print_row(r: &Row) {
     println!(
-        "{:<14} {:>8.1} ± {:>4.1} {:>10.1} ± {:>4.1} {:>9.1} {:>10.1} {:>7.1}",
-        r.strategy.as_str(),
+        "{:<22} {:>8.1} ± {:>4.1} {:>10.1} ± {:>4.1} {:>9.1} {:>10.1} {:>7.1} {:>6.1} {:>6.1}",
+        r.name,
         r.latency.mean,
         r.latency.std,
         r.makespan.mean,
         r.makespan.std,
         r.compiles,
         r.warm_hits,
-        r.spillovers
+        r.spillovers,
+        r.quarantines,
+        r.retries
     );
+}
+
+fn push_report(report: &mut RouteBenchReport, r: &Row) {
+    report.strategies.push(StrategyBench {
+        strategy: r.name.clone(),
+        mean_latency_s: r.latency.mean,
+        makespan_s: r.makespan.mean,
+        compiles: r.compiles,
+        route_warm_hits: r.warm_hits,
+        spillovers: r.spillovers,
+        quarantines: r.quarantines,
+        retries: r.retries,
+        health_diverted: r.health_diverted,
+        wall_s: r.wall_s,
+    });
 }
 
 fn main() {
@@ -97,6 +152,7 @@ fn main() {
 
     let tasks = table1_mixed_workload();
     let sites = two_site_table1();
+    let clean = FaultPlan::none();
     let mut report = RouteBenchReport::new("router-bench", quick, "table1-mixed/two-site");
 
     println!(
@@ -119,25 +175,31 @@ fn main() {
         sites[1].link_s,
     );
     println!(
-        "{:<14} {:>15} {:>17} {:>9} {:>10} {:>7}",
-        "strategy", "mean latency (s)", "makespan (s)", "compiles", "warm hits", "spills"
+        "{:<22} {:>15} {:>17} {:>9} {:>10} {:>7} {:>6} {:>6}",
+        "strategy", "mean latency (s)", "makespan (s)", "compiles", "warm hits", "spills",
+        "quar", "retry"
     );
 
     let mut rows = Vec::new();
     for strategy in [RouteSim::RoundRobin, RouteSim::LeastLoaded, RouteSim::WarmFirst] {
-        let row = run(strategy, &tasks, &sites, trials);
+        let row = run(strategy.as_str(), strategy, &tasks, &sites, &clean, false, trials);
         print_row(&row);
-        report.strategies.push(StrategyBench {
-            strategy: row.strategy.as_str().to_string(),
-            mean_latency_s: row.latency.mean,
-            makespan_s: row.makespan.mean,
-            compiles: row.compiles,
-            route_warm_hits: row.warm_hits,
-            spillovers: row.spillovers,
-            wall_s: row.wall_s,
-        });
+        push_report(&mut report, &row);
         rows.push(row);
     }
+
+    // chaos: RIVER stalls mid-workload; health-blind warm_first (PR 4)
+    // keeps feeding the stalled site, health-aware routing detects,
+    // quarantines and recalls
+    let chaos = table1_chaos_plan();
+    let blind =
+        run("warm_first/chaos-blind", RouteSim::WarmFirst, &tasks, &sites, &chaos, false, trials);
+    print_row(&blind);
+    push_report(&mut report, &blind);
+    let aware =
+        run("warm_first/chaos-aware", RouteSim::WarmFirst, &tasks, &sites, &chaos, true, trials);
+    print_row(&aware);
+    push_report(&mut report, &aware);
 
     report.write(&out_path).expect("write BENCH_route.json");
     println!("\nwrote {}", out_path.display());
@@ -168,5 +230,26 @@ fn main() {
         rr.latency.mean,
         wf.warm_hits / tasks.len() as f64 * 100.0,
         wf.spillovers
+    );
+
+    // chaos acceptance: with one endpoint stalled mid-workload, health-aware
+    // routing completes the work with lower mean latency than health-blind
+    // routing, having actually exercised the quarantine/retry machinery
+    assert!(
+        aware.latency.mean < blind.latency.mean,
+        "chaos: health-aware {:.2} s must beat health-blind {:.2} s",
+        aware.latency.mean,
+        blind.latency.mean
+    );
+    assert!(aware.quarantines > 0.0, "chaos run never quarantined the stalled site");
+    assert!(aware.retries > 0.0, "chaos run never retried a recalled task");
+    println!(
+        "chaos PASSED: health-aware {:.1} s < health-blind {:.1} s \
+         ({:.1} quarantines, {:.1} retries, {:.1} diverted per trial).",
+        aware.latency.mean,
+        blind.latency.mean,
+        aware.quarantines,
+        aware.retries,
+        aware.health_diverted
     );
 }

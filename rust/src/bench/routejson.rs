@@ -3,7 +3,11 @@
 //! `cargo bench --bench router` emits this schema next to `BENCH_fit.json`
 //! so the scheduling layer's routing trajectory is tracked across PRs (and
 //! archived as a CI artifact): one entry per routing strategy replayed over
-//! the two-site Table-1 workload.
+//! the two-site Table-1 workload, including the chaos rows
+//! (`warm_first/chaos-blind` / `warm_first/chaos-aware`) whose
+//! `quarantines` / `retries` / `health_diverted` fields record the
+//! fault-aware machinery at work. Field-by-field documentation lives in
+//! `docs/BENCHMARKS.md`.
 
 use std::path::Path;
 
@@ -27,6 +31,13 @@ pub struct StrategyBench {
     pub route_warm_hits: f64,
     /// mean spillovers off a saturated warm site per trial
     pub spillovers: f64,
+    /// mean quarantine sentences imposed by health-aware routing per trial
+    /// (0 for fault-free or health-blind rows)
+    pub quarantines: f64,
+    /// mean tasks recalled from a quarantined site and re-routed per trial
+    pub retries: f64,
+    /// mean tasks steered off a quarantined-but-warm site per trial
+    pub health_diverted: f64,
     /// wall time spent benchmarking this strategy
     pub wall_s: f64,
 }
@@ -40,6 +51,9 @@ impl StrategyBench {
             ("compiles", Json::num(self.compiles)),
             ("route_warm_hits", Json::num(self.route_warm_hits)),
             ("spillovers", Json::num(self.spillovers)),
+            ("quarantines", Json::num(self.quarantines)),
+            ("retries", Json::num(self.retries)),
+            ("health_diverted", Json::num(self.health_diverted)),
             ("wall_s", Json::num(self.wall_s)),
         ])
     }
@@ -121,6 +135,9 @@ pub fn validate(doc: &Json) -> Result<(), String> {
             "compiles",
             "route_warm_hits",
             "spillovers",
+            "quarantines",
+            "retries",
+            "health_diverted",
             "wall_s",
         ] {
             let v = s
@@ -149,6 +166,9 @@ mod tests {
                 compiles: 144.0,
                 route_warm_hits: 200.0,
                 spillovers: 3.0,
+                quarantines: 0.0,
+                retries: 0.0,
+                health_diverted: 0.0,
                 wall_s: 0.2,
             });
         }

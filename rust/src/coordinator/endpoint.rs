@@ -13,7 +13,7 @@ use crate::coordinator::metrics::{Metrics, Snapshot};
 use crate::coordinator::provider::Provider;
 use crate::coordinator::service::{ServiceHandle, TaskQueue, WorkerInit};
 use crate::coordinator::task::EndpointId;
-use crate::scheduler::autoscale::AutoscaleConfig;
+use crate::scheduler::autoscale::{AutoscaleConfig, RouterScaleSignal};
 use crate::scheduler::policy::PolicyKind;
 use crate::scheduler::router::EndpointProbe;
 
@@ -75,6 +75,7 @@ pub struct Endpoint {
     executor: Option<HighThroughputExecutor>,
     service: ServiceHandle,
     pub metrics: Arc<Metrics>,
+    scale_signal: Arc<RouterScaleSignal>,
 }
 
 impl Endpoint {
@@ -83,6 +84,7 @@ impl Endpoint {
         let queue = TaskQueue::with_policy(config.policy.build());
         let metrics = Arc::new(Metrics::new());
         queue.attach_metrics(metrics.clone());
+        let scale_signal = RouterScaleSignal::new();
         let id = service.register_endpoint(&config.name, queue.clone());
         let executor = HighThroughputExecutor::start(
             service.clone(),
@@ -93,8 +95,17 @@ impl Endpoint {
             config.executor,
             config.autoscale,
             metrics.clone(),
+            scale_signal.clone(),
         );
-        Endpoint { id, name: config.name, queue, executor: Some(executor), service, metrics }
+        Endpoint {
+            id,
+            name: config.name,
+            queue,
+            executor: Some(executor),
+            service,
+            metrics,
+            scale_signal,
+        }
     }
 
     /// Name of the installed dispatch policy.
@@ -114,10 +125,12 @@ impl Endpoint {
         self.metrics.snapshot()
     }
 
-    /// Live load probe for the cross-endpoint router: queued fit weight
-    /// from the interchange, the executor's live-worker counter, and the
-    /// interchange-reported shape-class hit rate. The probe holds only
-    /// `Arc`s, so it stays valid (reporting an idle endpoint) after
+    /// Live load + fault probe for the cross-endpoint router: queued fit
+    /// weight from the interchange, the executor's live-worker counter,
+    /// the interchange-reported shape-class hit rate, and the health
+    /// signals (completed/failed tasks, worker-init failures) the router's
+    /// health scoring folds into a per-endpoint score. The probe holds
+    /// only `Arc`s, so it stays valid (reporting an idle endpoint) after
     /// shutdown.
     pub fn probe(&self) -> Arc<dyn EndpointProbe> {
         Arc::new(LiveEndpointProbe {
@@ -125,6 +138,14 @@ impl Endpoint {
             metrics: self.metrics.clone(),
             workers: self.executor.as_ref().map(|e| e.active_workers_handle()),
         })
+    }
+
+    /// This endpoint's autoscale inbox for router-shed demand; register it
+    /// with [`crate::scheduler::Router::add_target_with_signal`] so
+    /// spillovers and quarantine diversions landing here scale the site up
+    /// before its own queue triggers fire.
+    pub fn scale_signal(&self) -> Arc<RouterScaleSignal> {
+        self.scale_signal.clone()
     }
 
     /// Drain and stop: closes the interchange (workers finish queued tasks
@@ -161,6 +182,11 @@ impl EndpointProbe for LiveEndpointProbe {
         } else {
             hits as f64 / (hits + misses) as f64
         }
+    }
+
+    fn fault_counts(&self) -> (u64, u64, u64) {
+        // one metrics-hub lock per routing decision
+        self.metrics.health_counts()
     }
 }
 

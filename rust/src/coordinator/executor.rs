@@ -10,8 +10,10 @@
 //! outstanding_tasks > parallelism * active_workers   and   blocks < max_blocks
 //! ```
 //!
-//! (optionally also on head-of-line queue latency), scale-down of idle
-//! blocks when `AutoscaleConfig::idle_release` is set. Workers are OS
+//! (optionally also on head-of-line queue latency, and on router pressure
+//! — spilled work announced through the endpoint's [`RouterScaleSignal`]),
+//! scale-down of idle blocks when `AutoscaleConfig::idle_release` is set.
+//! Workers are OS
 //! threads; each runs the endpoint's `WorkerInit` once (compiling PJRT
 //! artifacts — the analog of a funcX worker's container pull + `pip
 //! install`), then drains the interchange through the installed scheduling
@@ -33,7 +35,7 @@ use crate::coordinator::provider::Provider;
 use crate::coordinator::service::{ServiceHandle, TaskQueue, WorkerContext, WorkerInit};
 use crate::coordinator::task::EndpointId;
 use crate::scheduler::autoscale::{
-    AutoscaleConfig, AutoscaleController, LoadSnapshot, ScaleDecision,
+    AutoscaleConfig, AutoscaleController, LoadSnapshot, RouterScaleSignal, ScaleDecision,
 };
 use crate::scheduler::policy::WorkerProfile;
 
@@ -109,6 +111,7 @@ impl HighThroughputExecutor {
         config: ExecutorConfig,
         autoscale: AutoscaleConfig,
         metrics: Arc<Metrics>,
+        scale_signal: Arc<RouterScaleSignal>,
     ) -> HighThroughputExecutor {
         let shutdown = Arc::new(AtomicBool::new(false));
         let active_workers = Arc::new(AtomicUsize::new(0));
@@ -141,6 +144,10 @@ impl HighThroughputExecutor {
                             active_workers: active_workers.load(Ordering::SeqCst),
                             blocks: live_blocks.load(Ordering::SeqCst),
                             oldest_wait: if wants_wait { queue.oldest_wait() } else { None },
+                            // router-shed demand announced since the last
+                            // poll; the controller accumulates it until a
+                            // scale-up answers
+                            route_pressure: scale_signal.take(),
                         };
                         match controller.decide(Instant::now(), &load) {
                             ScaleDecision::Up => {
@@ -296,6 +303,10 @@ fn spawn_worker(
             let t0 = Instant::now();
             if let Err(e) = worker_init(&mut ctx) {
                 crate::log_error!("worker", "{name}: init failed: {e}");
+                // lost capacity the live-worker count cannot reveal on a
+                // site that never came up — the router's health probe
+                // reads this
+                metrics.worker_init_failed();
                 return;
             }
             metrics.worker_started(t0.elapsed().as_secs_f64());
@@ -330,6 +341,14 @@ fn spawn_worker(
                                 Ok(v) => crate::scheduler::batcher::result_proves_warm(v),
                                 Err(_) => false,
                             };
+                            // endpoint-hub completion/failure counters:
+                            // the health probe's failure rate and the
+                            // stall detector's progress clock. Uses the
+                            // envelope-aware verdict, not task-level
+                            // Ok-ness: an all-failure `{"batch": [...]}`
+                            // is Ok on the wire but proves the endpoint
+                            // is failing its actual work
+                            metrics.task_executed(ran_ok);
                             service.complete(meta.id, outcome);
                         }
                         // only a successful run proves this worker holds
@@ -397,6 +416,7 @@ mod tests {
             config,
             AutoscaleConfig::default(),
             metrics.clone(),
+            RouterScaleSignal::new(),
         );
 
         let ids: Vec<_> = (0..20)
@@ -438,6 +458,7 @@ mod tests {
             config,
             AutoscaleConfig::default(),
             metrics,
+            RouterScaleSignal::new(),
         );
         let ids: Vec<_> = (0..10)
             .map(|i| svc.submit(ep, f, Json::num(i as f64)).unwrap())
@@ -480,6 +501,7 @@ mod tests {
             config,
             AutoscaleConfig::default(),
             metrics,
+            RouterScaleSignal::new(),
         );
         let bad = svc.submit(ep, boom, Json::num(13.0)).unwrap();
         let good = svc.submit(ep, boom, Json::num(1.0)).unwrap();
@@ -516,6 +538,7 @@ mod tests {
             config,
             AutoscaleConfig::default(),
             metrics,
+            RouterScaleSignal::new(),
         );
         // a pending task triggers scaling; the worker then fails init
         let id = svc.submit(ep, _f, Json::Null).unwrap();
@@ -553,6 +576,7 @@ mod tests {
             config,
             AutoscaleConfig::default(),
             metrics,
+            RouterScaleSignal::new(),
         );
         let ids: Vec<_> = (0..6)
             .map(|i| svc.submit(ep, f, Json::num(i as f64)).unwrap())
@@ -598,6 +622,7 @@ mod tests {
             config,
             autoscale,
             metrics.clone(),
+            RouterScaleSignal::new(),
         );
         let ids: Vec<_> = (0..8)
             .map(|i| svc.submit(ep, f, Json::num(i as f64)).unwrap())

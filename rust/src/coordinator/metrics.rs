@@ -6,7 +6,10 @@
 //! affinity hits/misses at pop time, the client-side batcher counts
 //! coalesced submissions and dedup elisions, the autoscaler counts blocks
 //! acquired and released, and the cross-endpoint router counts routed
-//! submissions, endpoint-level warm hits and load spillovers.
+//! submissions, endpoint-level warm hits, load spillovers, mid-flight
+//! retries and the health lifecycle (endpoints quarantined / readmitted).
+//! Endpoint hubs additionally count executed tasks and worker-init
+//! failures — the signals the router's health probes poll.
 
 use std::sync::Mutex;
 
@@ -30,6 +33,10 @@ struct Inner {
     routed: u64,
     route_warm_hits: u64,
     route_spillovers: u64,
+    route_retries: u64,
+    endpoints_quarantined: u64,
+    endpoints_readmitted: u64,
+    worker_init_failures: u64,
     cancelled: u64,
     wait: Accumulator,
     service: Accumulator,
@@ -68,6 +75,15 @@ pub struct Snapshot {
     pub route_warm_hits: u64,
     /// routed tasks steered off a warm endpoint because it was saturated
     pub route_spillovers: u64,
+    /// routed submissions retried on a surviving endpoint after their pick
+    /// deregistered (or closed its interchange) mid-flight
+    pub route_retries: u64,
+    /// endpoints the router quarantined for failing health
+    pub endpoints_quarantined: u64,
+    /// quarantined endpoints re-admitted after a successful backoff probe
+    pub endpoints_readmitted: u64,
+    /// workers that failed their init hook and never served a task
+    pub worker_init_failures: u64,
     /// tasks cancelled by the client before completion
     pub cancelled: u64,
     pub mean_wait_s: f64,
@@ -151,9 +167,47 @@ impl Metrics {
         }
     }
 
+    /// A routed submission lost its picked endpoint mid-flight and was
+    /// retried on a surviving one.
+    pub fn route_retry(&self) {
+        self.inner.lock().unwrap().route_retries += 1;
+    }
+
+    /// The router's health scoring quarantined / readmitted endpoints.
+    pub fn health_events(&self, quarantined: u64, readmitted: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.endpoints_quarantined += quarantined;
+        g.endpoints_readmitted += readmitted;
+    }
+
+    /// A worker died in its init hook without serving a task (endpoint
+    /// hub): the health probe's lost-capacity signal.
+    pub fn worker_init_failed(&self) {
+        self.inner.lock().unwrap().worker_init_failures += 1;
+    }
+
+    /// A worker on this endpoint finished executing a task (endpoint hub —
+    /// the service hub tracks latency via [`Metrics::task_finished`]).
+    pub fn task_executed(&self, ok: bool) {
+        let mut g = self.inner.lock().unwrap();
+        if ok {
+            g.completed += 1;
+        } else {
+            g.failed += 1;
+        }
+    }
+
     /// A client cancelled a task before it completed.
     pub fn task_cancelled(&self) {
         self.inner.lock().unwrap().cancelled += 1;
+    }
+
+    /// (completed, failed, worker_init_failures) — the narrow read the
+    /// router's health probes poll on every routing decision, so they don't
+    /// build a full [`Snapshot`] under the router lock.
+    pub fn health_counts(&self) -> (u64, u64, u64) {
+        let g = self.inner.lock().unwrap();
+        (g.completed, g.failed, g.worker_init_failures)
     }
 
     /// (hits, misses) of keyed pops — the narrow read the cross-endpoint
@@ -182,6 +236,10 @@ impl Metrics {
             routed: g.routed,
             route_warm_hits: g.route_warm_hits,
             route_spillovers: g.route_spillovers,
+            route_retries: g.route_retries,
+            endpoints_quarantined: g.endpoints_quarantined,
+            endpoints_readmitted: g.endpoints_readmitted,
+            worker_init_failures: g.worker_init_failures,
             cancelled: g.cancelled,
             mean_wait_s: if g.wait.count() > 0 { g.wait.mean() } else { 0.0 },
             mean_service_s: if g.service.count() > 0 { g.service.mean() } else { 0.0 },
@@ -230,6 +288,10 @@ impl Snapshot {
             ("routed", Json::num(self.routed as f64)),
             ("route_warm_hits", Json::num(self.route_warm_hits as f64)),
             ("route_spillovers", Json::num(self.route_spillovers as f64)),
+            ("route_retries", Json::num(self.route_retries as f64)),
+            ("endpoints_quarantined", Json::num(self.endpoints_quarantined as f64)),
+            ("endpoints_readmitted", Json::num(self.endpoints_readmitted as f64)),
+            ("worker_init_failures", Json::num(self.worker_init_failures as f64)),
             ("cancelled", Json::num(self.cancelled as f64)),
             ("mean_wait_s", Json::num(self.mean_wait_s)),
             ("mean_service_s", Json::num(self.mean_service_s)),
@@ -298,6 +360,27 @@ mod tests {
     fn empty_hit_rate_is_zero() {
         assert_eq!(Metrics::new().snapshot().affinity_hit_rate(), 0.0);
         assert_eq!(Metrics::new().snapshot().route_warm_rate(), 0.0);
+    }
+
+    #[test]
+    fn health_counters_accumulate() {
+        let m = Metrics::new();
+        m.route_retry();
+        m.health_events(2, 1);
+        m.worker_init_failed();
+        m.worker_init_failed();
+        m.task_executed(true);
+        m.task_executed(false);
+        let s = m.snapshot();
+        assert_eq!(s.route_retries, 1);
+        assert_eq!(s.endpoints_quarantined, 2);
+        assert_eq!(s.endpoints_readmitted, 1);
+        assert_eq!(s.worker_init_failures, 2);
+        assert_eq!(m.health_counts(), (1, 1, 2));
+        let j = s.to_json();
+        assert_eq!(j.get("route_retries").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("endpoints_quarantined").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("worker_init_failures").unwrap().as_f64(), Some(2.0));
     }
 
     #[test]

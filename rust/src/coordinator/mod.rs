@@ -13,8 +13,9 @@
 //! [`EndpointConfig::with_policy`], elastic-block behavior with
 //! [`EndpointConfig::with_autoscale`], and multi-site placement with
 //! `Service::install_router` (a [`crate::scheduler::Router`] fed by
-//! [`Endpoint::probe`]) + [`FaasClient::run_routed`] /
-//! [`run_scan_routed`].
+//! [`Endpoint::probe`] — which also reports the fault signals the
+//! router's health scoring quarantines broken sites on) +
+//! [`FaasClient::run_routed`] / [`run_scan_routed`].
 
 pub mod client;
 pub mod driver;

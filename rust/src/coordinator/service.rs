@@ -172,32 +172,51 @@ impl Service {
     /// counted on the service metrics hub (`routed` / `route_warm_hits` /
     /// `route_spillovers`) — only once the submission is actually accepted,
     /// so failed submissions don't inflate the placement counters or the
-    /// router's warm sets.
+    /// router's warm sets. Every decision re-assesses endpoint health:
+    /// quarantine/readmission transitions drain into the metrics hub
+    /// (`endpoints_quarantined` / `endpoints_readmitted`), and an accepted
+    /// placement that was shed load (spillover or quarantine diversion)
+    /// announces its weight to the receiving endpoint's scale signal.
     ///
     /// Routing races endpoint shutdown: the router can pick an endpoint
     /// that deregisters (or closes its interchange) between the decision
     /// and the enqueue. Such rejections evict the dead endpoint from the
-    /// router and re-decide among the survivors — the loop is bounded
-    /// because every retry shrinks the candidate set.
+    /// router and retry on a healthy survivor (counted as `route_retries`)
+    /// — the loop is bounded because every retry shrinks the candidate
+    /// set.
     pub fn submit_routed(&self, function: FunctionId, payload: Json) -> Result<TaskId, String> {
         let key = crate::scheduler::affinity_key_of(function, &payload);
         let weight = crate::scheduler::batcher::payload_weight(&payload);
         let mut payload = payload;
+        let mut retrying = false;
         loop {
             let decision = {
                 let mut guard = self.router.lock().unwrap();
                 let router = guard
                     .as_mut()
                     .ok_or("no router installed on this service (Service::install_router)")?;
-                router.decide(&key, weight).ok_or("router has no registered endpoints")?
+                let decision =
+                    router.decide(&key, weight).ok_or("router has no registered endpoints")?;
+                let events = router.take_health_events();
+                if !events.is_empty() {
+                    self.metrics.health_events(events.quarantined, events.readmitted);
+                }
+                decision
             };
+            if retrying {
+                // count the retry only now that a surviving endpoint was
+                // actually re-decided — losing the *last* target is a
+                // failed submission, not a recovery
+                self.metrics.route_retry();
+                retrying = false;
+            }
             match self.submit_with_meta(decision.endpoint, function, payload, key.clone(), weight)
             {
                 Ok(id) => {
-                    // commit warmth and counters only now: a failed submit
-                    // must not skew placement state or metrics
+                    // commit warmth, scale signals and counters only now: a
+                    // failed submit must not skew placement state or metrics
                     if let Some(router) = self.router.lock().unwrap().as_mut() {
-                        router.note_routed(decision.endpoint, &key);
+                        router.note_submitted(&decision, &key, weight);
                     }
                     self.metrics.task_routed(decision.warm_hit, decision.spillover);
                     return Ok(id);
@@ -205,6 +224,7 @@ impl Service {
                 Err(Rejection::Fatal(msg)) => return Err(msg),
                 Err(Rejection::EndpointGone { reason: _, payload: p }) => {
                     payload = p;
+                    retrying = true;
                     if let Some(router) = self.router.lock().unwrap().as_mut() {
                         router.remove_target(decision.endpoint);
                     }

@@ -19,7 +19,9 @@ use pyhf_faas::histfactory::{dense, Workspace};
 use pyhf_faas::infer::results::upper_limit_on_axis;
 use pyhf_faas::pallet::{self, io as pallet_io, library};
 use pyhf_faas::runtime::{default_artifact_dir, Engine, Manifest};
-use pyhf_faas::scheduler::{batched_handler, PolicyKind, RouteStrategyKind, Router};
+use pyhf_faas::scheduler::{
+    batched_handler, HealthConfig, PolicyKind, RouteStrategyKind, Router,
+};
 use pyhf_faas::sim;
 use pyhf_faas::util::cli::Args;
 use pyhf_faas::util::json;
@@ -36,6 +38,8 @@ COMMANDS:
                    [--policy fifo|priority|affinity] [--batch N]
                    [--endpoints N] [--route round_robin|least_loaded|warm_first]
                    (fan the scan out across N endpoints via the router)
+                   [--stall-after SECS] (router health: quarantine an endpoint
+                   making no completion progress for SECS; default 30)
                    [--bench-out BENCH_fit.json] (machine-readable throughput)
   hypotest         --pallet <dir> --patch <name> [--backend pjrt|native]
   simulate         --pallet <dir> [--blocks 1,2,4,8] [--trials 10]
@@ -159,6 +163,7 @@ fn start_endpoints(
     policy: PolicyKind,
     n_endpoints: usize,
     route: RouteStrategyKind,
+    stall_after: Option<Duration>,
     artifacts: PathBuf,
 ) -> Result<(Vec<Endpoint>, pyhf_faas::coordinator::FunctionId), String> {
     let exec = ExecutorConfig {
@@ -189,8 +194,14 @@ fn start_endpoints(
         .collect();
     if endpoints.len() > 1 {
         let mut router = Router::new(route);
+        if let Some(stall) = stall_after {
+            router = router
+                .with_health_config(HealthConfig { stall_after: stall, ..Default::default() });
+        }
         for (site, ep) in endpoints.iter().enumerate() {
-            router.add_target(ep.id, site, ep.probe());
+            // probe: load + health signals in; scale signal: router-shed
+            // demand out (spillovers/diversions pre-warm the autoscaler)
+            router.add_target_with_signal(ep.id, site, ep.probe(), Some(ep.scale_signal()));
         }
         svc.install_router(router);
     }
@@ -223,6 +234,16 @@ fn cmd_scan(args: &Args) -> Result<(), String> {
              (pass --endpoints N with N > 1 to enable the router)"
         );
     }
+    if n_endpoints == 1 && args.get("stall-after").is_some() {
+        eprintln!(
+            "note: --stall-after has no effect with a single endpoint \
+             (it tunes the router's health scoring; pass --endpoints N with N > 1)"
+        );
+    }
+    let stall_after = match args.get("stall-after") {
+        Some(_) => Some(Duration::from_secs(args.get_u64("stall-after", 30)?)),
+        None => None,
+    };
 
     let svc = Service::new();
     let (endpoints, f) = start_endpoints(
@@ -233,6 +254,7 @@ fn cmd_scan(args: &Args) -> Result<(), String> {
         policy,
         n_endpoints,
         route,
+        stall_after,
         artifact_dir(args),
     )?;
     let client = FaasClient::new(svc.clone());
@@ -283,12 +305,19 @@ fn cmd_scan(args: &Args) -> Result<(), String> {
     );
     if endpoints.len() > 1 {
         println!(
-            "  router: strategy {} | routed {} | {} warm ({:.0}%) | {} spillovers",
+            "  router: strategy {} | routed {} | {} warm ({:.0}%) | {} spillovers | {} retries",
             svc.route_strategy_name().unwrap_or("-"),
             m.routed,
             m.route_warm_hits,
             m.route_warm_rate() * 100.0,
-            m.route_spillovers
+            m.route_spillovers,
+            m.route_retries
+        );
+        let init_failures: u64 =
+            endpoints.iter().map(|e| e.metrics_snapshot().worker_init_failures).sum();
+        println!(
+            "  health: {} quarantined | {} readmitted | {} worker-init failures",
+            m.endpoints_quarantined, m.endpoints_readmitted, init_failures
         );
     }
     if let Some(ul) = upper_limit_on_axis(&scan.points, 0.0) {

@@ -3,12 +3,18 @@
 //! The controller is a pure decision kernel: the executor's scaling loop
 //! feeds it a [`LoadSnapshot`] each poll and acts on the returned
 //! [`ScaleDecision`]. Scale-up fires on the classic Parsl condition
-//! (`outstanding > parallelism * active_workers`) *or* on queue latency
-//! (head-of-line wait beyond `target_wait`); scale-down releases blocks
-//! after the endpoint has been fully idle for `idle_release`, never going
-//! below `min_blocks`. Defaults reproduce the seed behavior exactly
-//! (depth-based scale-up only, no scale-down).
+//! (`outstanding > parallelism * active_workers`), on queue latency
+//! (head-of-line wait beyond `target_wait`), *or* on router pressure: a
+//! [`RouterScaleSignal`] carries the fit-weight of work the cross-endpoint
+//! router spilled (or diverted off a quarantined site) onto this endpoint,
+//! so a site absorbing another site's load scales up before its own queue
+//! depth or latency trigger would fire. Scale-down releases blocks after
+//! the endpoint has been fully idle for `idle_release`, never going below
+//! `min_blocks`. Defaults reproduce the seed behavior exactly (depth-based
+//! scale-up only, no scale-down).
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Autoscaler knobs. `Default` = seed behavior (no latency trigger, no
@@ -45,6 +51,43 @@ pub struct LoadSnapshot {
     pub blocks: usize,
     /// age of the oldest queued task
     pub oldest_wait: Option<Duration>,
+    /// fit-weight the router spilled onto this endpoint since the last
+    /// poll (drained from its [`RouterScaleSignal`]); the controller
+    /// treats it as a decaying urgency boost on top of the queue's own
+    /// demand signals until a scale-up answers it
+    pub route_pressure: usize,
+}
+
+/// Demand signal from the cross-endpoint router to one endpoint's
+/// autoscaler: every spillover (a warm site was saturated) or quarantine
+/// diversion (the warm site is sick) that lands work on this endpoint adds
+/// its fit-weight here. The executor's scaling loop drains the signal each
+/// poll into [`LoadSnapshot::route_pressure`], letting the receiving site
+/// provision ahead of the backlog the router is steering toward it.
+#[derive(Debug, Default)]
+pub struct RouterScaleSignal {
+    pending: AtomicUsize,
+}
+
+impl RouterScaleSignal {
+    pub fn new() -> Arc<RouterScaleSignal> {
+        Arc::new(RouterScaleSignal::default())
+    }
+
+    /// The router placed `weight` fits here that another site shed.
+    pub fn note_spill(&self, weight: usize) {
+        self.pending.fetch_add(weight.max(1), Ordering::SeqCst);
+    }
+
+    /// Drain the accumulated spill weight (scaling loop, once per poll).
+    pub fn take(&self) -> usize {
+        self.pending.swap(0, Ordering::SeqCst)
+    }
+
+    /// Undrained spill weight (observability).
+    pub fn pending(&self) -> usize {
+        self.pending.load(Ordering::SeqCst)
+    }
 }
 
 /// What the scaling loop should do this poll.
@@ -57,26 +100,44 @@ pub enum ScaleDecision {
     Down,
 }
 
-/// Stateful controller: tracks idle streaks between polls.
+/// Stateful controller: tracks idle streaks and router pressure between
+/// polls.
 #[derive(Debug)]
 pub struct AutoscaleController {
     cfg: AutoscaleConfig,
     parallelism: f64,
     max_blocks: usize,
     idle_since: Option<Instant>,
+    /// decaying spill-urgency boost (halves per poll): spilled weight the
+    /// router announced and no scale-up has answered yet
+    route_pressure: usize,
 }
 
 impl AutoscaleController {
     pub fn new(cfg: AutoscaleConfig, parallelism: f64, max_blocks: usize) -> Self {
-        AutoscaleController { cfg, parallelism, max_blocks, idle_since: None }
+        AutoscaleController { cfg, parallelism, max_blocks, idle_since: None, route_pressure: 0 }
     }
 
     pub fn decide(&mut self, now: Instant, load: &LoadSnapshot) -> ScaleDecision {
+        // router pressure is a short-lived urgency boost, not a second
+        // demand ledger: the spilled weight itself already shows up in
+        // `queued_weight` once the submission is accepted, so the boost
+        // deliberately over-weights shed load for a few polls — long
+        // enough to fire the scale-up ahead of the receiving site's own
+        // depth/latency triggers — and then decays (halving per poll)
+        // instead of lingering as phantom demand after the spill is
+        // served. A fully idle endpoint clears it outright.
+        self.route_pressure = (self.route_pressure / 2).saturating_add(load.route_pressure);
+        if load.outstanding == 0 {
+            self.route_pressure = 0;
+        }
         // batch-aware demand: replace the queued-task count inside
         // `outstanding` with the queued fit count, so one 8-fit envelope
         // exerts the pressure of 8 tasks (running tasks keep weight 1 —
         // they already hold a worker)
-        let demand = load.outstanding.saturating_sub(load.queued) + load.queued_weight;
+        let demand = load.outstanding.saturating_sub(load.queued)
+            + load.queued_weight
+            + self.route_pressure;
         let depth_pressure = demand as f64 > self.parallelism * load.active_workers as f64;
         let latency_pressure = match (self.cfg.target_wait, load.oldest_wait) {
             (Some(target), Some(wait)) => load.queued > 0 && wait > target,
@@ -84,6 +145,9 @@ impl AutoscaleController {
         };
         if load.blocks < self.max_blocks && (depth_pressure || latency_pressure) {
             self.idle_since = None;
+            // the scale-up answers the signalled spill; fresh spills will
+            // re-arm it
+            self.route_pressure = 0;
             return ScaleDecision::Up;
         }
 
@@ -122,6 +186,7 @@ mod tests {
             active_workers: workers,
             blocks,
             oldest_wait: None,
+            route_pressure: 0,
         }
     }
 
@@ -154,6 +219,7 @@ mod tests {
             active_workers: 8,
             blocks: 1,
             oldest_wait: None,
+            route_pressure: 0,
         };
         assert_eq!(c.decide(now, &l2), ScaleDecision::Hold);
     }
@@ -225,6 +291,70 @@ mod tests {
             c.decide(t0 + Duration::from_millis(130), &load(0, 4, 2)),
             ScaleDecision::Down
         );
+    }
+
+    #[test]
+    fn router_pressure_scales_up_before_local_queue_fills() {
+        let mut c = AutoscaleController::new(AutoscaleConfig::default(), 1.0, 4);
+        let now = Instant::now();
+        // 2 queued fits against 4 workers: local signals alone would hold...
+        let mut l = load(2, 4, 1);
+        assert_eq!(c.decide(now, &l), ScaleDecision::Hold);
+        // ...but the router announced 8 spilled fits inbound: scale up now,
+        // before they hit this interchange
+        l.route_pressure = 8;
+        assert_eq!(c.decide(now, &l), ScaleDecision::Up);
+        // the scale-up answered the spill: no phantom pressure remains
+        l.route_pressure = 0;
+        l.blocks = 2;
+        assert_eq!(c.decide(now, &l), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn router_pressure_decays_and_clears_instead_of_lingering() {
+        let mut c = AutoscaleController::new(AutoscaleConfig::default(), 1.0, 4);
+        let now = Instant::now();
+        // a spill burst arrives while at max blocks: cannot be answered yet
+        let mut l = load(2, 4, 4);
+        l.route_pressure = 8;
+        assert_eq!(c.decide(now, &l), ScaleDecision::Hold);
+        // blocks free up one poll later: the decayed boost (8/2 = 4) plus
+        // 2 local fits still exceeds the 4 workers => scale up
+        l.route_pressure = 0;
+        l.blocks = 1;
+        assert_eq!(c.decide(now, &l), ScaleDecision::Up);
+        // the boost was consumed by the scale-up: nothing lingers
+        l.blocks = 2;
+        assert_eq!(c.decide(now, &l), ScaleDecision::Hold);
+        // without a scale-up, the boost halves away within a few polls
+        // instead of persisting as phantom demand
+        let mut c = AutoscaleController::new(AutoscaleConfig::default(), 1.0, 4);
+        let mut l = load(2, 8, 4); // plenty of workers: no Up possible need
+        l.route_pressure = 5;
+        assert_eq!(c.decide(now, &l), ScaleDecision::Hold); // boost 5
+        l.route_pressure = 0;
+        assert_eq!(c.decide(now, &l), ScaleDecision::Hold); // boost 2
+        l.blocks = 1;
+        // boost now 1: demand 2 + 1 = 3 <= 8 workers => no spurious Up
+        assert_eq!(c.decide(now, &l), ScaleDecision::Hold);
+        // a fully idle endpoint clears stale pressure outright
+        let mut c = AutoscaleController::new(AutoscaleConfig::default(), 1.0, 4);
+        let mut l = load(0, 4, 1);
+        l.route_pressure = 50;
+        assert_eq!(c.decide(now, &l), ScaleDecision::Hold);
+        let l = load(1, 4, 1);
+        assert_eq!(c.decide(now, &l), ScaleDecision::Hold, "pressure was cleared while idle");
+    }
+
+    #[test]
+    fn scale_signal_drains_once() {
+        let s = RouterScaleSignal::new();
+        assert_eq!(s.pending(), 0);
+        s.note_spill(4);
+        s.note_spill(0); // zero-weight spills still announce one fit
+        assert_eq!(s.pending(), 5);
+        assert_eq!(s.take(), 5);
+        assert_eq!(s.take(), 0);
     }
 
     #[test]

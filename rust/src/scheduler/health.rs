@@ -1,0 +1,612 @@
+//! Endpoint health scoring and quarantine: the fault model of the
+//! cross-endpoint router.
+//!
+//! The paper's deployment federates funcX endpoints at batch HPC sites that
+//! degrade, stall and recover on their own schedules — the serving layer
+//! must route *around* a broken site, not through it. PR 4's router treated
+//! every registered endpoint as permanently live; this module folds three
+//! fault signals (read once per routing decision from each target's
+//! [`crate::scheduler::router::EndpointProbe`] and handed in as a
+//! [`HealthSample`]) into a per-endpoint [`HealthScore`]:
+//!
+//! * **worker-init failures** — workers that died in their init hook
+//!   (missing artifacts, broken container image) never serve a task, so a
+//!   site accumulating them has quietly lost capacity;
+//! * **task-failure rate** — the fraction of finished tasks that failed,
+//!   over a window that resets when an endpoint is re-admitted (a recovered
+//!   site is not punished for its past);
+//! * **stall detection** — no completion progress while the interchange
+//!   backlog is nonzero for longer than [`HealthConfig::stall_after`]: the
+//!   signature of a wedged site (hung filesystem, dead scheduler) that
+//!   still *accepts* work.
+//!
+//! A [`HealthMonitor`] (one per router target) runs a small state machine:
+//!
+//! ```text
+//! Healthy --score < quarantine_below--> Quarantined(backoff)
+//! Quarantined --backoff elapsed--> Probation   (re-enters the candidate set)
+//! Probation --healthy for probation--> Healthy (readmitted; the escalated
+//!                        backoff resets only if work actually completed)
+//! Probation --degraded again--> Quarantined(longer sentence)
+//! ```
+//!
+//! Every quarantine entry escalates the *next* sentence (doubling, capped
+//! at [`HealthConfig::backoff_max`]); only a readmission backed by
+//! completed work resets it. A wedged site that flaps between silent
+//! probations and re-quarantines therefore still backs off exponentially,
+//! even when the stall takes longer than one probation window to re-fire.
+//!
+//! Quarantined endpoints leave the routing candidate set entirely; merely
+//! degraded (low-score) endpoints stay but their
+//! [`crate::scheduler::router::EndpointView::load`] carries a health
+//! penalty, so every [`crate::scheduler::router::RouteStrategy`] steers
+//! away without needing fault-specific logic. When *every* target is
+//! quarantined the router degrades gracefully and routes among them anyway
+//! — a sick endpoint beats a guaranteed error.
+
+use std::time::{Duration, Instant};
+
+/// Knobs for health scoring and quarantine. `Default` is tuned for the
+/// in-process test fabric (sub-second tasks); real federations want
+/// `stall_after` and the backoffs scaled to their queue latencies.
+#[derive(Debug, Clone)]
+pub struct HealthConfig {
+    /// quarantine an endpoint once its score drops below this
+    pub quarantine_below: f64,
+    /// minimum finished tasks (since the last readmission) before the
+    /// failure rate is trusted — one unlucky task must not quarantine a
+    /// cold site
+    pub min_observations: u64,
+    /// the failure rate is computed over (approximately) the most recent
+    /// this-many finished tasks: older observations are shed
+    /// proportionally, so a long healthy history cannot dilute a site
+    /// that *starts* failing into permanent apparent health
+    pub failure_window: u64,
+    /// worker-init failures (since the last readmission) that drive the
+    /// init component of the score to zero
+    pub max_init_failures: u64,
+    /// no completion progress while backlog is nonzero (and at least one
+    /// worker is live) for this long => the endpoint is stalled (score 0).
+    /// Must comfortably exceed the longest expected single fit — a slow
+    /// task is not a stall.
+    pub stall_after: Duration,
+    /// first quarantine length; escalates on every quarantine entry
+    pub backoff_base: Duration,
+    /// backoff growth cap
+    pub backoff_max: Duration,
+    /// how long a re-admitted endpoint must stay healthy before it returns
+    /// to full standing
+    pub probation: Duration,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        HealthConfig {
+            quarantine_below: 0.5,
+            min_observations: 4,
+            failure_window: 64,
+            max_init_failures: 3,
+            // generous on purpose: a live federation serves fits that take
+            // tens of seconds, and a slow fit must not read as a stall
+            // (the stall clock also only runs while workers are live, so
+            // block provisioning / worker init never counts against it)
+            stall_after: Duration::from_secs(30),
+            backoff_base: Duration::from_millis(250),
+            backoff_max: Duration::from_secs(8),
+            probation: Duration::from_millis(250),
+        }
+    }
+}
+
+/// One reading of an endpoint's fault signals, taken by the router from
+/// the target's probe (a single probe pass per routing decision) and
+/// handed to [`HealthMonitor::assess`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HealthSample {
+    /// queued fit weight on the endpoint's interchange
+    pub backlog: usize,
+    /// workers currently live on the endpoint — the stall detector only
+    /// runs while this is nonzero, so a site still provisioning blocks or
+    /// initializing workers (a batch-queue wait, a container pull) is
+    /// "warming up", not stalled
+    pub active_workers: usize,
+    /// tasks this endpoint has finished successfully (monotonic)
+    pub completed: u64,
+    /// tasks this endpoint has finished in error (monotonic)
+    pub failed: u64,
+    /// workers that died in their init hook (monotonic)
+    pub init_failures: u64,
+}
+
+/// One assessment of an endpoint's health, in [0, 1]: 1.0 = fully healthy,
+/// 0.0 = stalled or all workers dead. The score multiplies the survival
+/// fraction of finished tasks by the surviving init capacity, and collapses
+/// to zero on a stall.
+#[derive(Debug, Clone, Copy)]
+pub struct HealthScore {
+    /// composite score in [0, 1]
+    pub score: f64,
+    /// currently serving a quarantine sentence (out of the candidate set)
+    pub quarantined: bool,
+    /// backlog nonzero with no completion progress for `stall_after`
+    pub stalled: bool,
+    /// windowed task-failure rate (0.0 until `min_observations` finishes)
+    pub failure_rate: f64,
+    /// worker-init failures observed since the last readmission
+    pub init_failures: u64,
+}
+
+impl HealthScore {
+    /// A pristine endpoint (used before any probe has been read).
+    pub fn healthy() -> HealthScore {
+        HealthScore {
+            score: 1.0,
+            quarantined: false,
+            stalled: false,
+            failure_rate: 0.0,
+            init_failures: 0,
+        }
+    }
+}
+
+/// Quarantine / readmission transitions observed during an assessment
+/// sweep; the router drains these into `coordinator::metrics`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HealthEvents {
+    /// endpoints newly quarantined
+    pub quarantined: u64,
+    /// endpoints that survived probation and rejoined at full standing
+    pub readmitted: u64,
+}
+
+impl HealthEvents {
+    pub fn absorb(&mut self, other: HealthEvents) {
+        self.quarantined += other.quarantined;
+        self.readmitted += other.readmitted;
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.quarantined == 0 && self.readmitted == 0
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+enum State {
+    Healthy,
+    Quarantined { until: Instant },
+    Probation { since: Instant },
+}
+
+/// Per-endpoint health state machine: folds probe samples into a
+/// [`HealthScore`] and runs the quarantine/backoff lifecycle. Owned by the
+/// router (one per target), assessed on every routing decision.
+#[derive(Debug)]
+pub struct HealthMonitor {
+    cfg: HealthConfig,
+    state: State,
+    /// the NEXT quarantine sentence (escalated at every quarantine entry,
+    /// reset only by a progress-backed readmission)
+    backoff: Duration,
+    /// completion count at the last observed progress
+    last_completed: u64,
+    last_progress: Instant,
+    /// backlog seen by the previous assessment — the stall clock starts
+    /// when backlog *appears*, not at monitor creation, so a cold
+    /// endpoint's first slow task is not misread as a stall
+    prev_backlog: usize,
+    /// live workers seen by the previous assessment — workers coming up
+    /// restart the stall clock too (fresh workers get a full window to
+    /// prove themselves before silence reads as a stall)
+    prev_workers: usize,
+    /// counters forgiven at the last readmission: the failure window and
+    /// init-failure budget restart from here
+    forgiven_completed: u64,
+    forgiven_failed: u64,
+    forgiven_init_failures: u64,
+}
+
+impl HealthMonitor {
+    pub fn new(cfg: HealthConfig) -> HealthMonitor {
+        let now = Instant::now();
+        HealthMonitor {
+            backoff: cfg.backoff_base,
+            cfg,
+            state: State::Healthy,
+            last_completed: 0,
+            last_progress: now,
+            prev_backlog: 0,
+            prev_workers: 0,
+            forgiven_completed: 0,
+            forgiven_failed: 0,
+            forgiven_init_failures: 0,
+        }
+    }
+
+    /// Fold one probe reading into the state machine and return the score.
+    /// Transitions (quarantine entered / endpoint readmitted) are reported
+    /// in `events` so the caller can count them once, centrally.
+    pub fn assess(
+        &mut self,
+        now: Instant,
+        sample: HealthSample,
+        events: &mut HealthEvents,
+    ) -> HealthScore {
+        let HealthSample { backlog, active_workers, completed, failed, init_failures: total_init } =
+            sample;
+
+        // serve out an expiring quarantine FIRST: probation forgives the
+        // past (fresh failure window, fresh init budget, fresh stall
+        // clock — nothing completed *during* the quarantine, and that
+        // silence is not evidence of a stall), so the score below judges
+        // only what the endpoint does from here on.
+        if let State::Quarantined { until } = self.state {
+            if now >= until {
+                self.forgiven_completed = completed;
+                self.forgiven_failed = failed;
+                // lost capacity is forgiven only once capacity demonstrably
+                // came back: a site with zero live workers keeps its
+                // init-failure penalty through probation, so a dead
+                // endpoint relapses at escalating sentences instead of
+                // being readmitted as a task black hole (nothing on a dead
+                // site can fail, stall, or misbehave — the stale penalty
+                // is the only signal left)
+                if active_workers > 0 {
+                    self.forgiven_init_failures = total_init;
+                }
+                self.last_completed = completed;
+                self.last_progress = now;
+                self.prev_backlog = backlog;
+                self.prev_workers = active_workers;
+                self.state = State::Probation { since: now };
+            }
+        }
+
+        // progress clock: any new completion resets the stall detector,
+        // and so does the backlog first appearing (the stall window opens
+        // when there is work to stall on). The detector itself only fires
+        // while workers are live — a site still provisioning or running
+        // worker init is warming up, not wedged (dead init hooks are the
+        // init-failure signal's job).
+        if completed > self.last_completed
+            || (backlog > 0 && self.prev_backlog == 0)
+            || (active_workers > 0 && self.prev_workers == 0)
+        {
+            self.last_completed = completed;
+            self.last_progress = now;
+        }
+        self.prev_backlog = backlog;
+        self.prev_workers = active_workers;
+        let stalled = backlog > 0
+            && active_workers > 0
+            && now.saturating_duration_since(self.last_progress) >= self.cfg.stall_after;
+
+        // windowed failure rate: counts since the last readmission, bounded
+        // to roughly the most recent `failure_window` finishes. The bound
+        // sheds the oldest observations proportionally by advancing the
+        // forgiven baselines, so 10k historical successes cannot hide a
+        // site that starts failing everything *now*.
+        let init_failures = total_init.saturating_sub(self.forgiven_init_failures);
+        let mut wc = completed.saturating_sub(self.forgiven_completed);
+        let mut wf = failed.saturating_sub(self.forgiven_failed);
+        let window = self.cfg.failure_window.max(self.cfg.min_observations).max(1);
+        if wc + wf > window {
+            let excess = wc + wf - window;
+            // shed proportionally (integer split; the remainder comes off
+            // the larger completed side)
+            let drop_failed = (wf.saturating_mul(excess)) / (wc + wf);
+            let drop_completed = excess - drop_failed;
+            self.forgiven_failed += drop_failed;
+            self.forgiven_completed += drop_completed;
+            wf -= drop_failed;
+            wc -= drop_completed;
+        }
+        let failure_rate = if wc + wf >= self.cfg.min_observations.max(1) {
+            wf as f64 / (wc + wf) as f64
+        } else {
+            0.0
+        };
+
+        let init_penalty =
+            (init_failures as f64 / self.cfg.max_init_failures.max(1) as f64).min(1.0);
+        let score = if stalled {
+            0.0
+        } else {
+            ((1.0 - failure_rate) * (1.0 - init_penalty)).clamp(0.0, 1.0)
+        };
+        let degraded = score < self.cfg.quarantine_below;
+
+        let quarantined = match self.state {
+            State::Healthy => {
+                if degraded {
+                    self.enter_quarantine(now, events);
+                    true
+                } else {
+                    false
+                }
+            }
+            // still serving the sentence (expiry was handled above)
+            State::Quarantined { .. } => true,
+            State::Probation { since } => {
+                if degraded {
+                    // relapse: back to quarantine, at the escalated sentence
+                    self.enter_quarantine(now, events);
+                    true
+                } else {
+                    if now.saturating_duration_since(since) >= self.cfg.probation {
+                        self.state = State::Healthy;
+                        // reset the sentence only on evidence of recovery:
+                        // an endpoint readmitted on mere silence keeps its
+                        // escalated backoff, so a wedged site whose stall
+                        // outlasts the probation window still backs off
+                        // exponentially across flaps
+                        if completed > self.forgiven_completed {
+                            self.backoff = self.cfg.backoff_base;
+                        }
+                        events.readmitted += 1;
+                    }
+                    false
+                }
+            }
+        };
+
+        HealthScore { score, quarantined, stalled, failure_rate, init_failures }
+    }
+
+    fn enter_quarantine(&mut self, now: Instant, events: &mut HealthEvents) {
+        self.state = State::Quarantined { until: now + self.backoff };
+        // escalate the NEXT sentence now; only a progress-backed
+        // readmission resets it
+        self.backoff = (self.backoff * 2).min(self.cfg.backoff_max);
+        events.quarantined += 1;
+    }
+
+    /// Current quarantine status without a fresh sample.
+    pub fn is_quarantined(&self, now: Instant) -> bool {
+        matches!(self.state, State::Quarantined { until } if now < until)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// One live worker unless a test says otherwise.
+    fn sample(backlog: usize, completed: u64, failed: u64, init: u64) -> HealthSample {
+        HealthSample { backlog, active_workers: 1, completed, failed, init_failures: init }
+    }
+
+    fn cfg_ms(stall: u64, backoff: u64) -> HealthConfig {
+        HealthConfig {
+            stall_after: Duration::from_millis(stall),
+            backoff_base: Duration::from_millis(backoff),
+            backoff_max: Duration::from_millis(backoff * 8),
+            probation: Duration::from_millis(backoff),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn healthy_sample_scores_one() {
+        let mut m = HealthMonitor::new(HealthConfig::default());
+        let mut ev = HealthEvents::default();
+        let s = m.assess(Instant::now(), sample(0, 10, 0, 0), &mut ev);
+        assert_eq!(s.score, 1.0);
+        assert!(!s.quarantined && !s.stalled);
+        assert!(ev.is_empty());
+    }
+
+    #[test]
+    fn failure_rate_needs_min_observations() {
+        let mut m = HealthMonitor::new(HealthConfig::default());
+        let mut ev = HealthEvents::default();
+        // 2 failures < min_observations = 4: too few to judge
+        let s = m.assess(Instant::now(), sample(0, 0, 2, 0), &mut ev);
+        assert_eq!(s.failure_rate, 0.0);
+        assert!(!s.quarantined, "too few observations to judge");
+        // two more failures cross the threshold: all-failed => score 0
+        let s = m.assess(Instant::now(), sample(0, 0, 4, 0), &mut ev);
+        assert_eq!(s.failure_rate, 1.0);
+        assert!(s.quarantined);
+        assert_eq!(ev.quarantined, 1);
+    }
+
+    #[test]
+    fn long_healthy_history_does_not_dilute_fresh_failures() {
+        // the failure window is bounded: 10k lifetime successes must not
+        // hide a site that starts failing everything now
+        let mut m = HealthMonitor::new(HealthConfig::default()); // window 64
+        let mut ev = HealthEvents::default();
+        let s = m.assess(Instant::now(), sample(0, 10_000, 0, 0), &mut ev);
+        assert_eq!(s.score, 1.0);
+        // ~2 windows of fresh failures cross the threshold regardless of
+        // the healthy history
+        let s = m.assess(Instant::now(), sample(0, 10_000, 130, 0), &mut ev);
+        assert!(s.failure_rate > 0.5, "rate {} diluted by history", s.failure_rate);
+        assert!(s.quarantined);
+        assert_eq!(ev.quarantined, 1);
+    }
+
+    #[test]
+    fn init_failures_degrade_and_quarantine() {
+        let mut m = HealthMonitor::new(HealthConfig::default());
+        let mut ev = HealthEvents::default();
+        let s = m.assess(Instant::now(), sample(0, 0, 0, 1), &mut ev);
+        assert!(s.score < 1.0 && !s.quarantined, "one dead worker only degrades");
+        // = max_init_failures: the init component collapses
+        let s = m.assess(Instant::now(), sample(0, 0, 0, 3), &mut ev);
+        assert_eq!(s.score, 0.0);
+        assert!(s.quarantined);
+    }
+
+    #[test]
+    fn stall_fires_only_with_backlog() {
+        let mut m = HealthMonitor::new(cfg_ms(20, 50));
+        let mut ev = HealthEvents::default();
+        // idle endpoint: no backlog, no stall no matter how long
+        std::thread::sleep(Duration::from_millis(30));
+        let s = m.assess(Instant::now(), sample(0, 0, 0, 0), &mut ev);
+        assert!(!s.stalled && !s.quarantined);
+        // backlog appears: the stall window opens *now*, it does not
+        // inherit the idle time before the work arrived
+        let s = m.assess(Instant::now(), sample(5, 0, 0, 0), &mut ev);
+        assert!(!s.stalled, "backlog onset must restart the stall clock");
+        // nothing completes while the backlog sits there: stall
+        std::thread::sleep(Duration::from_millis(30));
+        let s = m.assess(Instant::now(), sample(5, 0, 0, 0), &mut ev);
+        assert!(s.stalled);
+        assert_eq!(s.score, 0.0);
+        assert!(s.quarantined);
+    }
+
+    #[test]
+    fn provisioning_endpoint_is_not_stalled() {
+        // backlog with zero live workers is a site still warming up (batch
+        // queue wait, container pull, worker init) — never a stall
+        let mut m = HealthMonitor::new(cfg_ms(20, 50));
+        let mut ev = HealthEvents::default();
+        let warming = HealthSample { backlog: 5, active_workers: 0, ..HealthSample::default() };
+        assert!(!m.assess(Instant::now(), warming, &mut ev).stalled);
+        std::thread::sleep(Duration::from_millis(30));
+        let s = m.assess(Instant::now(), warming, &mut ev);
+        assert!(!s.stalled && !s.quarantined, "no live workers => warming up, not wedged");
+        // workers come up: they get a FULL stall window of their own
+        let s = m.assess(Instant::now(), sample(5, 0, 0, 0), &mut ev);
+        assert!(!s.stalled, "fresh workers restart the stall clock");
+        // ...and only silence from live workers counts as a stall
+        std::thread::sleep(Duration::from_millis(30));
+        let s = m.assess(Instant::now(), sample(5, 0, 0, 0), &mut ev);
+        assert!(s.stalled, "live workers with old backlog and no progress is a stall");
+    }
+
+    #[test]
+    fn completion_progress_resets_the_stall_clock() {
+        let mut m = HealthMonitor::new(cfg_ms(40, 50));
+        let mut ev = HealthEvents::default();
+        assert!(!m.assess(Instant::now(), sample(5, 0, 0, 0), &mut ev).stalled);
+        std::thread::sleep(Duration::from_millis(25));
+        // a completion lands before stall_after elapses
+        assert!(!m.assess(Instant::now(), sample(5, 1, 0, 0), &mut ev).stalled);
+        std::thread::sleep(Duration::from_millis(25));
+        // clock restarted at the completion: still within stall_after
+        let s = m.assess(Instant::now(), sample(5, 1, 0, 0), &mut ev);
+        assert!(!s.stalled, "progress must reset the stall detector");
+    }
+
+    #[test]
+    fn quarantine_expires_into_probation_then_readmits() {
+        let mut m = HealthMonitor::new(cfg_ms(20, 30));
+        let mut ev = HealthEvents::default();
+        assert!(m.assess(Instant::now(), sample(0, 0, 8, 0), &mut ev).quarantined);
+        assert!(m.is_quarantined(Instant::now()));
+        // still inside the sentence
+        assert!(m.assess(Instant::now(), sample(0, 0, 8, 0), &mut ev).quarantined);
+        std::thread::sleep(Duration::from_millis(40));
+        // sentence served: probation, past failures forgiven
+        let s = m.assess(Instant::now(), sample(0, 0, 8, 0), &mut ev);
+        assert!(!s.quarantined);
+        assert_eq!(s.failure_rate, 0.0, "readmission forgives the window");
+        assert_eq!(ev.readmitted, 0, "probation is not yet readmission");
+        // healthy (and completing work) through probation: readmitted
+        std::thread::sleep(Duration::from_millis(40));
+        let s = m.assess(Instant::now(), sample(0, 4, 8, 0), &mut ev);
+        assert!(!s.quarantined);
+        assert_eq!(ev.readmitted, 1);
+        assert_eq!(ev.quarantined, 1);
+        // the progress-backed readmission reset the sentence to base
+        let t0 = Instant::now();
+        assert!(m.assess(t0, sample(0, 4, 20, 0), &mut ev).quarantined);
+        assert!(m.is_quarantined(t0 + Duration::from_millis(25)));
+        assert!(!m.is_quarantined(t0 + Duration::from_millis(35)));
+    }
+
+    #[test]
+    fn relapse_serves_an_escalated_sentence() {
+        let mut m = HealthMonitor::new(cfg_ms(20, 30));
+        let mut ev = HealthEvents::default();
+        assert!(m.assess(Instant::now(), sample(0, 0, 8, 0), &mut ev).quarantined);
+        std::thread::sleep(Duration::from_millis(40));
+        // sentence served: probation entry forgives the past...
+        assert!(!m.assess(Instant::now(), sample(0, 0, 8, 0), &mut ev).quarantined);
+        // ...but the endpoint relapses: 8 NEW failures land in the fresh
+        // window, so the next assessment re-quarantines at double length
+        let t0 = Instant::now();
+        assert!(m.assess(t0, sample(0, 0, 16, 0), &mut ev).quarantined);
+        assert_eq!(ev.quarantined, 2);
+        // the escalated sentence (60 ms) outlasts the base backoff (30 ms)
+        assert!(m.is_quarantined(t0 + Duration::from_millis(45)));
+        assert!(!m.is_quarantined(t0 + Duration::from_millis(70)));
+    }
+
+    #[test]
+    fn dead_endpoint_is_not_readmitted_as_a_black_hole() {
+        // all workers died in init and none came back: the init penalty
+        // must survive probation, so the site relapses at escalating
+        // sentences instead of scoring 1.0 forever and swallowing tasks
+        let mut m = HealthMonitor::new(cfg_ms(20, 30));
+        let mut ev = HealthEvents::default();
+        let dead = HealthSample {
+            backlog: 2,
+            active_workers: 0,
+            init_failures: 4,
+            ..HealthSample::default()
+        };
+        assert!(m.assess(Instant::now(), dead, &mut ev).quarantined);
+        std::thread::sleep(Duration::from_millis(40));
+        // sentence served, but no workers came back: relapse, not probation
+        let s = m.assess(Instant::now(), dead, &mut ev);
+        assert!(s.quarantined, "a dead site must not be readmitted on silence");
+        assert_eq!(s.init_failures, 4, "init penalty survives probation");
+        assert_eq!(ev.quarantined, 2);
+        assert_eq!(ev.readmitted, 0);
+        // capacity comes back: the next probation forgives and re-probes
+        std::thread::sleep(Duration::from_millis(70)); // escalated sentence = 60 ms
+        let alive = HealthSample {
+            backlog: 2,
+            active_workers: 2,
+            init_failures: 4,
+            ..HealthSample::default()
+        };
+        let s = m.assess(Instant::now(), alive, &mut ev);
+        assert!(!s.quarantined);
+        assert_eq!(s.init_failures, 0, "restored capacity forgives the lost workers");
+    }
+
+    #[test]
+    fn silent_readmission_keeps_the_escalated_backoff() {
+        // a wedged endpoint whose stall outlasts the probation window flaps
+        // healthy <-> quarantined; because its readmissions are backed by
+        // silence, not completed work, each new sentence must still be the
+        // escalated one
+        let cfg = HealthConfig {
+            stall_after: Duration::from_millis(120),
+            backoff_base: Duration::from_millis(20),
+            backoff_max: Duration::from_millis(320),
+            probation: Duration::from_millis(20),
+            ..Default::default()
+        };
+        let mut m = HealthMonitor::new(cfg);
+        let mut ev = HealthEvents::default();
+        // backlog appears, then the site wedges
+        assert!(!m.assess(Instant::now(), sample(3, 0, 0, 0), &mut ev).stalled);
+        std::thread::sleep(Duration::from_millis(130));
+        assert!(m.assess(Instant::now(), sample(3, 0, 0, 0), &mut ev).quarantined);
+        // sentence (20 ms) served, probation entered, then readmitted on
+        // silence — no completion ever landed
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(!m.assess(Instant::now(), sample(3, 0, 0, 0), &mut ev).quarantined);
+        std::thread::sleep(Duration::from_millis(25));
+        assert!(!m.assess(Instant::now(), sample(3, 0, 0, 0), &mut ev).quarantined);
+        assert_eq!(ev.readmitted, 1, "silent probation still readmits");
+        // the stall re-fires: the NEW sentence must be the escalated one
+        // (40 ms), not the base 20 ms
+        std::thread::sleep(Duration::from_millis(130));
+        let t0 = Instant::now();
+        assert!(m.assess(t0, sample(3, 0, 0, 0), &mut ev).quarantined);
+        assert_eq!(ev.quarantined, 2);
+        assert!(
+            m.is_quarantined(t0 + Duration::from_millis(30)),
+            "silent readmission must not reset the escalated backoff"
+        );
+        assert!(!m.is_quarantined(t0 + Duration::from_millis(50)));
+    }
+}

@@ -25,8 +25,14 @@
 //! * [`router`] — the service-level multi-endpoint router above the
 //!   interchanges: [`RouteStrategy`] (round-robin / least-loaded /
 //!   warm-first with load spillover) picks *which* endpoint a task goes
-//!   to, from per-endpoint warmth, queued weight, active workers and a
-//!   link-cost table.
+//!   to, from per-endpoint warmth, queued weight, active workers, health
+//!   and a link-cost table;
+//! * [`health`] — endpoint health scoring for the router: worker-init
+//!   failures, task-failure rate and a stall detector fold into a
+//!   per-endpoint [`HealthScore`]; failing endpoints are quarantined and
+//!   re-probed with exponential backoff, and quarantine diversions feed
+//!   the receiving site's [`RouterScaleSignal`] (router-driven
+//!   autoscaling).
 //!
 //! Selection is by [`PolicyKind`] (`--policy fifo|priority|affinity` on the
 //! CLI, `EndpointConfig::with_policy` in code) and [`RouteStrategyKind`]
@@ -36,13 +42,17 @@
 pub mod affinity;
 pub mod autoscale;
 pub mod batcher;
+pub mod health;
 pub mod policy;
 pub mod queue;
 pub mod router;
 
 pub use affinity::AffinityPolicy;
-pub use autoscale::{AutoscaleConfig, AutoscaleController, LoadSnapshot, ScaleDecision};
+pub use autoscale::{
+    AutoscaleConfig, AutoscaleController, LoadSnapshot, RouterScaleSignal, ScaleDecision,
+};
 pub use batcher::{batched_handler, content_hash, plan_batches, plan_batches_hashed, BatchPlan};
+pub use health::{HealthConfig, HealthEvents, HealthMonitor, HealthSample, HealthScore};
 pub use policy::{FifoPolicy, PolicyKind, PriorityPolicy, SchedPolicy, TaskMeta, WorkerProfile};
 pub use queue::SchedQueue;
 pub use router::{

@@ -108,6 +108,25 @@ impl WorkerProfile {
 /// A dispatch policy: owns queued task metadata, picks the next task for a
 /// given worker. Implementations live behind the interchange mutex, so they
 /// are plain single-threaded data structures.
+///
+/// # Example
+///
+/// Policies are usually selected by name ([`PolicyKind`]) and driven by the
+/// interchange, but the trait is directly usable:
+///
+/// ```
+/// use pyhf_faas::scheduler::policy::{PolicyKind, TaskMeta, WorkerProfile};
+/// use std::time::Instant;
+///
+/// let mut policy = PolicyKind::Priority.build();
+/// policy.push(TaskMeta { priority: 1.0, ..TaskMeta::bare(1) });
+/// policy.push(TaskMeta { priority: 9.0, ..TaskMeta::bare(2) });
+///
+/// let worker = WorkerProfile::anonymous();
+/// let first = policy.pop_for(&worker, Instant::now()).expect("queued work");
+/// assert_eq!(first.id, 2); // the high-priority task runs first
+/// assert_eq!(policy.len(), 1);
+/// ```
 pub trait SchedPolicy: Send {
     fn name(&self) -> &'static str;
 

@@ -35,13 +35,68 @@
 //!   advantage is gone (bounded by [`WarmFirstRoute::spill_margin`]) —
 //!   the endpoint-level analog of the affinity policy's head-skip budget.
 //!
+//! **Fault awareness** (see [`crate::scheduler::health`]): every routing
+//! decision re-assesses each target's [`HealthMonitor`], quarantined
+//! endpoints leave the candidate set (with graceful degradation when *all*
+//! are quarantined), merely degraded endpoints pay a health penalty inside
+//! [`EndpointView::load`] so every strategy steers away uniformly, and
+//! spillovers / quarantine diversions feed the receiving endpoint's
+//! [`RouterScaleSignal`] so it scales up ahead of the shed load.
+//!
 //! Routing decisions are counted in `coordinator::metrics` (`routed`,
-//! `route_warm_hits`, `route_spillovers`); the discrete-event analog for
-//! paper-scale replays is [`crate::sim::simulate_sites`].
+//! `route_warm_hits`, `route_spillovers`, `route_retries`,
+//! `endpoints_quarantined`, `endpoints_readmitted`); the discrete-event
+//! analog for paper-scale replays is [`crate::sim::simulate_sites`] (and
+//! its fault-injecting sibling `simulate_sites_faulty`).
+//!
+//! # Example
+//!
+//! A custom [`RouteStrategy`] plugs in exactly like a
+//! [`crate::scheduler::SchedPolicy`] does one level down:
+//!
+//! ```
+//! use pyhf_faas::scheduler::router::{
+//!     EndpointProbe, EndpointView, RoutePick, RouteStrategy, Router,
+//! };
+//! use std::sync::Arc;
+//!
+//! /// Always picks the endpoint with the most live workers.
+//! struct MostWorkers;
+//! impl RouteStrategy for MostWorkers {
+//!     fn name(&self) -> &'static str {
+//!         "most_workers"
+//!     }
+//!     fn pick(&mut self, _key: &str, _w: usize, views: &[EndpointView]) -> RoutePick {
+//!         let index = (0..views.len())
+//!             .max_by_key(|&i| views[i].active_workers)
+//!             .expect("views non-empty");
+//!         RoutePick { index, warm_hit: views[index].warm, spillover: false }
+//!     }
+//! }
+//!
+//! /// A static probe (live endpoints implement this over their interchange).
+//! struct Fixed(usize);
+//! impl EndpointProbe for Fixed {
+//!     fn queued_weight(&self) -> usize { 0 }
+//!     fn active_workers(&self) -> usize { self.0 }
+//!     fn warm_hit_rate(&self) -> f64 { 1.0 }
+//! }
+//!
+//! let mut router = Router::with_strategy(Box::new(MostWorkers));
+//! router.add_target(10, 0, Arc::new(Fixed(4)));
+//! router.add_target(20, 1, Arc::new(Fixed(96)));
+//! let decision = router.route("fn0:1Lbb", 1).expect("targets registered");
+//! assert_eq!(decision.endpoint, 20);
+//! ```
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::coordinator::task::EndpointId;
+use crate::scheduler::autoscale::RouterScaleSignal;
+use crate::scheduler::health::{
+    HealthConfig, HealthEvents, HealthMonitor, HealthSample, HealthScore,
+};
 use crate::util::lru::LruSet;
 
 /// Default bound on the per-endpoint routed-key warm set. Endpoint-level
@@ -55,9 +110,16 @@ pub const DEFAULT_WARM_KEYS_PER_ENDPOINT: usize = 64;
 /// alternative before the router spills cold.
 pub const DEFAULT_SPILL_MARGIN: f64 = 4.0;
 
-/// Live load source for one endpoint — implemented by
+/// Load-equivalent of full ill health, in queued-fits-per-worker: an
+/// endpoint at health 0 looks this much deeper than its raw backlog, so
+/// every load-aware strategy steers away from degraded (but not yet
+/// quarantined) endpoints without fault-specific logic.
+pub const HEALTH_LOAD_PENALTY: f64 = 32.0;
+
+/// Live load + fault source for one endpoint — implemented by
 /// `coordinator::endpoint::Endpoint::probe()` for real endpoints and by
-/// test fakes here.
+/// test fakes here. The fault accessors default to "nothing wrong" so
+/// load-only probes keep working.
 pub trait EndpointProbe: Send + Sync {
     /// Queued fits on the endpoint's interchange (tasks weighted by batch
     /// size).
@@ -71,13 +133,26 @@ pub trait EndpointProbe: Send + Sync {
     /// 1.0 when no keyed pop has happened yet — an endpoint is presumed
     /// able to stay warm until it demonstrates otherwise.
     fn warm_hit_rate(&self) -> f64;
+
+    /// `(completed, failed, worker_init_failures)` — the fault counters
+    /// the router's health scoring folds into the per-endpoint score: the
+    /// failure rate and the stall detector's progress clock come from the
+    /// first two, the lost-capacity signal from the third. One method so
+    /// live probes can read their metrics hub under a single lock per
+    /// routing decision. Defaults to "nothing wrong" so load-only probes
+    /// keep working.
+    fn fault_counts(&self) -> (u64, u64, u64) {
+        (0, 0, 0)
+    }
 }
 
-/// What a [`RouteStrategy`] sees about one candidate endpoint.
+/// What a [`RouteStrategy`] sees about one candidate endpoint. Views carry
+/// no endpoint identity on purpose: a strategy picks a *position* in the
+/// slice it was handed ([`RoutePick::index`]) and the router maps that
+/// back to its target list — quarantined targets are filtered out before
+/// the strategy ever sees the slice.
 #[derive(Debug, Clone)]
 pub struct EndpointView {
-    /// index into the router's target list
-    pub index: usize,
     /// site this endpoint lives at (indexes the link-cost table)
     pub site: usize,
     pub queued_weight: usize,
@@ -89,20 +164,25 @@ pub struct EndpointView {
     /// link-cost penalty for this endpoint's site, in queued-fits-per-worker
     /// equivalents (0.0 for the local site)
     pub link_cost: f64,
+    /// health score in [0, 1] (1.0 = fully healthy); degraded endpoints pay
+    /// [`HEALTH_LOAD_PENALTY`] proportionally inside [`EndpointView::load`]
+    pub health: f64,
 }
 
 impl EndpointView {
-    /// Per-worker queued backlog plus the link penalty — the scalar the
-    /// load-aware strategies minimize.
+    /// Per-worker queued backlog plus the link penalty plus the health
+    /// penalty — the scalar the load-aware strategies minimize.
     pub fn load(&self) -> f64 {
-        self.queued_weight as f64 / self.active_workers.max(1) as f64 + self.link_cost
+        self.queued_weight as f64 / self.active_workers.max(1) as f64
+            + self.link_cost
+            + (1.0 - self.health.clamp(0.0, 1.0)) * HEALTH_LOAD_PENALTY
     }
 }
 
 /// A strategy's verdict for one task.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct RoutePick {
-    /// index into the views/targets
+    /// position in the `views` slice handed to [`RouteStrategy::pick`]
     pub index: usize,
     /// the chosen endpoint was already warm for the task's key
     pub warm_hit: bool,
@@ -120,12 +200,14 @@ pub trait RouteStrategy: Send {
     fn pick(&mut self, key: &str, weight: usize, views: &[EndpointView]) -> RoutePick;
 }
 
+/// Position (in the views slice) of the lowest-load view passing `filter`.
 fn argmin_load(views: &[EndpointView], filter: impl Fn(&EndpointView) -> bool) -> Option<usize> {
     views
         .iter()
-        .filter(|v| filter(v))
-        .min_by(|a, b| a.load().total_cmp(&b.load()))
-        .map(|v| v.index)
+        .enumerate()
+        .filter(|(_, v)| filter(v))
+        .min_by(|(_, a), (_, b)| a.load().total_cmp(&b.load()))
+        .map(|(i, _)| i)
 }
 
 // ---------------------------------------------------------------------------
@@ -297,6 +379,10 @@ pub struct RouteDecision {
     pub index: usize,
     pub warm_hit: bool,
     pub spillover: bool,
+    /// the task's affinity key was warm on a *quarantined* endpoint: this
+    /// placement is load shed by a sick site (a demand signal for the
+    /// receiving endpoint's autoscaler, like a spillover)
+    pub quarantine_diverted: bool,
 }
 
 struct Target {
@@ -305,11 +391,15 @@ struct Target {
     probe: Arc<dyn EndpointProbe>,
     /// affinity keys routed here before (endpoint-level warm set)
     warm: LruSet<String>,
+    /// per-endpoint health state machine (scored on every decision)
+    monitor: HealthMonitor,
+    /// the endpoint's autoscale inbox for spilled/diverted demand
+    signal: Option<Arc<RouterScaleSignal>>,
 }
 
 /// Service-level multi-endpoint router: owns the target registry, the
-/// per-endpoint warm sets and the link-cost table, and delegates each
-/// decision to the installed [`RouteStrategy`].
+/// per-endpoint warm sets, health monitors and the link-cost table, and
+/// delegates each decision to the installed [`RouteStrategy`].
 pub struct Router {
     targets: Vec<Target>,
     strategy: Box<dyn RouteStrategy>,
@@ -317,6 +407,10 @@ pub struct Router {
     /// by site; absent sites cost 0.0
     link_costs: Vec<f64>,
     warm_keys_capacity: usize,
+    health_cfg: HealthConfig,
+    /// quarantine/readmission transitions since the last
+    /// [`Router::take_health_events`] drain
+    pending_events: HealthEvents,
 }
 
 impl Router {
@@ -330,7 +424,20 @@ impl Router {
             strategy,
             link_costs: Vec::new(),
             warm_keys_capacity: DEFAULT_WARM_KEYS_PER_ENDPOINT,
+            health_cfg: HealthConfig::default(),
+            pending_events: HealthEvents::default(),
         }
+    }
+
+    /// Install the health-scoring knobs (stall window, quarantine backoff,
+    /// failure thresholds). Existing targets get fresh monitors, so
+    /// configure before registering targets when their history matters.
+    pub fn with_health_config(mut self, cfg: HealthConfig) -> Router {
+        for t in &mut self.targets {
+            t.monitor = HealthMonitor::new(cfg.clone());
+        }
+        self.health_cfg = cfg;
+        self
     }
 
     /// Install a per-site link-cost table (site index -> penalty). The
@@ -349,11 +456,26 @@ impl Router {
 
     /// Register an endpoint at `site` with its live load probe.
     pub fn add_target(&mut self, endpoint: EndpointId, site: usize, probe: Arc<dyn EndpointProbe>) {
+        self.add_target_with_signal(endpoint, site, probe, None);
+    }
+
+    /// [`Router::add_target`] plus the endpoint's [`RouterScaleSignal`]:
+    /// spillovers and quarantine diversions landing on this endpoint will
+    /// announce their fit-weight to its autoscaler.
+    pub fn add_target_with_signal(
+        &mut self,
+        endpoint: EndpointId,
+        site: usize,
+        probe: Arc<dyn EndpointProbe>,
+        signal: Option<Arc<RouterScaleSignal>>,
+    ) {
         self.targets.push(Target {
             endpoint,
             site,
             probe,
             warm: LruSet::new(self.warm_keys_capacity),
+            monitor: HealthMonitor::new(self.health_cfg.clone()),
+            signal,
         });
     }
 
@@ -384,36 +506,107 @@ impl Router {
         self.link_costs.get(site).copied().unwrap_or(0.0)
     }
 
-    /// Pick a target without committing any warmth: snapshot every target,
-    /// ask the strategy. `None` when no target is registered. Callers that
-    /// go on to submit should call [`Router::note_routed`] once the
-    /// submission is accepted — a failed submit must not leave the picked
-    /// endpoint marked warm for a key it never received (possibly evicting
-    /// a genuinely warm key from the bounded set).
+    /// Pick a target without committing any warmth: assess every target's
+    /// health, snapshot the survivors, ask the strategy. `None` when no
+    /// target is registered. Callers that go on to submit should call
+    /// [`Router::note_submitted`] once the submission is accepted — a
+    /// failed submit must not leave the picked endpoint marked warm for a
+    /// key it never received (possibly evicting a genuinely warm key from
+    /// the bounded set) or fire a scale signal for work that never landed.
+    ///
+    /// Quarantined endpoints are excluded from the candidate set; when
+    /// *every* target is quarantined the router degrades gracefully and
+    /// picks among them anyway — a sick endpoint beats a guaranteed error.
     pub fn decide(&mut self, key: &str, weight: usize) -> Option<RouteDecision> {
+        self.decide_at(Instant::now(), key, weight)
+    }
+
+    fn decide_at(&mut self, now: Instant, key: &str, weight: usize) -> Option<RouteDecision> {
         if self.targets.is_empty() {
             return None;
         }
-        let views: Vec<EndpointView> = self
+        // one probe pass + health assessment per target per decision: every
+        // counter is read exactly once (the live probe reads its metrics
+        // hub under a single lock) and reused for both the health monitor
+        // and the strategy's view
+        struct Sampled {
+            queued_weight: usize,
+            active_workers: usize,
+            warm_hit_rate: f64,
+            score: HealthScore,
+        }
+        let mut events = HealthEvents::default();
+        let sampled: Vec<Sampled> = self
             .targets
-            .iter()
-            .enumerate()
-            .map(|(index, t)| EndpointView {
-                index,
-                site: t.site,
-                queued_weight: t.probe.queued_weight(),
-                active_workers: t.probe.active_workers(),
-                warm_hit_rate: t.probe.warm_hit_rate(),
-                warm: !key.is_empty() && t.warm.contains(key),
-                link_cost: self.link_cost(t.site),
+            .iter_mut()
+            .map(|t| {
+                let queued_weight = t.probe.queued_weight();
+                let active_workers = t.probe.active_workers();
+                let warm_hit_rate = t.probe.warm_hit_rate();
+                let (completed, failed, init_failures) = t.probe.fault_counts();
+                let score = t.monitor.assess(
+                    now,
+                    HealthSample {
+                        backlog: queued_weight,
+                        active_workers,
+                        completed,
+                        failed,
+                        init_failures,
+                    },
+                    &mut events,
+                );
+                Sampled { queued_weight, active_workers, warm_hit_rate, score }
             })
             .collect();
+        self.pending_events.absorb(events);
+
+        let view = |index: usize| -> EndpointView {
+            let t = &self.targets[index];
+            let s = &sampled[index];
+            EndpointView {
+                site: t.site,
+                queued_weight: s.queued_weight,
+                active_workers: s.active_workers,
+                warm_hit_rate: s.warm_hit_rate,
+                warm: !key.is_empty() && t.warm.contains(key),
+                link_cost: self.link_cost(t.site),
+                health: s.score.score,
+            }
+        };
+        // candidates[i] is the target index behind views[i]: the strategy
+        // picks a views position, the router resolves the endpoint — a
+        // strategy never handles target indices, so filtering cannot be
+        // misused to route to the wrong endpoint
+        let mut candidates: Vec<usize> = (0..self.targets.len())
+            .filter(|&i| !sampled[i].score.quarantined)
+            .collect();
+        let degraded_mode = candidates.is_empty();
+        if degraded_mode {
+            candidates = (0..self.targets.len()).collect();
+        }
+        let views: Vec<EndpointView> = candidates.iter().map(|&i| view(i)).collect();
+        // does a quarantined site hold warmth for this key? (resolved
+        // against the pick below: only a placement that did NOT land warm
+        // elsewhere is genuinely shed load)
+        let warm_on_quarantined = !degraded_mode
+            && !key.is_empty()
+            && self
+                .targets
+                .iter()
+                .zip(&sampled)
+                .any(|(t, s)| s.score.quarantined && t.warm.contains(key));
+
         let pick = self.strategy.pick(key, weight, &views);
+        let target_index = candidates[pick.index];
         Some(RouteDecision {
-            endpoint: self.targets[pick.index].endpoint,
-            index: pick.index,
+            endpoint: self.targets[target_index].endpoint,
+            index: target_index,
             warm_hit: pick.warm_hit,
             spillover: pick.spillover,
+            // a warm-hit placement is the endpoint's own normal load even
+            // if some quarantined site is also warm for the key — only a
+            // cold landing inherits demand it would not otherwise serve
+            quarantine_diverted: warm_on_quarantined && !pick.warm_hit,
         })
     }
 
@@ -430,11 +623,33 @@ impl Router {
         }
     }
 
-    /// [`Router::decide`] + [`Router::note_routed`] in one step, for
+    /// Commit an accepted submission: warm the endpoint for `key` and, when
+    /// the placement was shed load (a spillover off a saturated warm site
+    /// or a diversion off a quarantined one), announce `weight` fits to the
+    /// receiving endpoint's [`RouterScaleSignal`] so its autoscaler can
+    /// provision ahead of the redirected backlog.
+    pub fn note_submitted(&mut self, decision: &RouteDecision, key: &str, weight: usize) {
+        self.note_routed(decision.endpoint, key);
+        if decision.spillover || decision.quarantine_diverted {
+            if let Some(t) = self.targets.iter().find(|t| t.endpoint == decision.endpoint) {
+                if let Some(signal) = &t.signal {
+                    signal.note_spill(weight);
+                }
+            }
+        }
+    }
+
+    /// Drain the quarantine/readmission transitions observed since the
+    /// last call (the service counts them in `coordinator::metrics`).
+    pub fn take_health_events(&mut self) -> HealthEvents {
+        std::mem::take(&mut self.pending_events)
+    }
+
+    /// [`Router::decide`] + [`Router::note_submitted`] in one step, for
     /// callers whose placement cannot fail (tests, simulations).
     pub fn route(&mut self, key: &str, weight: usize) -> Option<RouteDecision> {
         let decision = self.decide(key, weight)?;
-        self.note_routed(decision.endpoint, key);
+        self.note_submitted(&decision, key, weight);
         Some(decision)
     }
 }
@@ -443,12 +658,16 @@ impl Router {
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
 
-    /// Probe with externally mutable load.
+    /// Probe with externally mutable load and fault counters.
     struct FakeProbe {
         queued: AtomicUsize,
         workers: AtomicUsize,
         hit_rate_milli: AtomicUsize,
+        completed: AtomicUsize,
+        failed: AtomicUsize,
+        init_failures: AtomicUsize,
     }
 
     impl FakeProbe {
@@ -457,6 +676,9 @@ mod tests {
                 queued: AtomicUsize::new(queued),
                 workers: AtomicUsize::new(workers),
                 hit_rate_milli: AtomicUsize::new(1000),
+                completed: AtomicUsize::new(0),
+                failed: AtomicUsize::new(0),
+                init_failures: AtomicUsize::new(0),
             })
         }
     }
@@ -470,6 +692,13 @@ mod tests {
         }
         fn warm_hit_rate(&self) -> f64 {
             self.hit_rate_milli.load(Ordering::SeqCst) as f64 / 1000.0
+        }
+        fn fault_counts(&self) -> (u64, u64, u64) {
+            (
+                self.completed.load(Ordering::SeqCst) as u64,
+                self.failed.load(Ordering::SeqCst) as u64,
+                self.init_failures.load(Ordering::SeqCst) as u64,
+            )
         }
     }
 
@@ -607,6 +836,115 @@ mod tests {
         assert!(r.remove_target(20));
         assert!(r.is_empty());
         assert!(r.route("fn0:A", 1).is_none());
+    }
+
+    fn quick_health() -> HealthConfig {
+        HealthConfig {
+            stall_after: Duration::from_millis(25),
+            backoff_base: Duration::from_millis(40),
+            backoff_max: Duration::from_millis(320),
+            probation: Duration::from_millis(10),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn quarantined_endpoint_stops_receiving_work_and_is_readmitted() {
+        // the regression the fault-aware layer exists for: a failing
+        // endpoint leaves the candidate set, then rejoins once its backoff
+        // probe succeeds
+        let mut r = Router::new(RouteStrategyKind::LeastLoaded).with_health_config(quick_health());
+        let p0 = FakeProbe::new(0, 1);
+        let p1 = FakeProbe::new(0, 1);
+        r.add_target(10, 0, p0.clone());
+        r.add_target(20, 1, p1.clone());
+        // ties go to 10 while both are healthy
+        assert_eq!(r.route("fn0:A", 1).unwrap().endpoint, 10);
+        // endpoint 10 starts failing everything
+        p0.failed.store(8, Ordering::SeqCst);
+        for _ in 0..5 {
+            let d = r.route("fn0:A", 1).unwrap();
+            assert_eq!(d.endpoint, 20, "quarantined endpoint must receive no routed work");
+        }
+        assert_eq!(r.take_health_events().quarantined, 1);
+        // the failures stop; after the backoff the probation probe succeeds
+        // (fresh window, completions resume) and 10 is readmitted
+        p0.completed.store(20, Ordering::SeqCst);
+        std::thread::sleep(Duration::from_millis(60));
+        let d = r.route("fn0:B", 1).unwrap();
+        assert_eq!(d.endpoint, 10, "readmitted endpoint wins the least-loaded tie again");
+        std::thread::sleep(Duration::from_millis(15));
+        r.route("fn0:B", 1);
+        assert_eq!(r.take_health_events().readmitted, 1);
+    }
+
+    #[test]
+    fn quarantining_the_only_endpoint_degrades_gracefully() {
+        // with nowhere else to go the router must keep routing (a sick
+        // endpoint beats a guaranteed error), not return None
+        let mut r = Router::new(RouteStrategyKind::WarmFirst).with_health_config(quick_health());
+        let p = FakeProbe::new(0, 1);
+        r.add_target(10, 0, p.clone());
+        p.failed.store(8, Ordering::SeqCst);
+        for _ in 0..4 {
+            let d = r.route("fn0:A", 1).expect("degraded mode still routes");
+            assert_eq!(d.endpoint, 10);
+        }
+        assert!(r.take_health_events().quarantined >= 1);
+    }
+
+    #[test]
+    fn stalled_endpoint_is_routed_around() {
+        let mut r = Router::new(RouteStrategyKind::LeastLoaded).with_health_config(quick_health());
+        let p0 = FakeProbe::new(0, 1);
+        let p1 = FakeProbe::new(0, 1);
+        r.add_target(10, 0, p0.clone());
+        r.add_target(20, 1, p1.clone());
+        assert_eq!(r.route("fn0:A", 1).unwrap().endpoint, 10);
+        // 10 has backlog but completes nothing: the stall clock starts at
+        // backlog onset (observed by the next decision), and the detector
+        // fires once stall_after elapses with no completion progress
+        p0.queued.store(4, Ordering::SeqCst);
+        r.route("fn0:A", 1); // observes the backlog, opens the stall window
+        std::thread::sleep(Duration::from_millis(40));
+        let d = r.route("fn0:A", 1).unwrap();
+        assert_eq!(d.endpoint, 20);
+        assert_eq!(r.take_health_events().quarantined, 1);
+    }
+
+    #[test]
+    fn degraded_but_not_quarantined_endpoint_pays_a_load_penalty() {
+        // one dead worker degrades the score below 1.0 without crossing the
+        // quarantine threshold: least_loaded now prefers the clean site
+        // even though raw backlog ties
+        let mut r = Router::new(RouteStrategyKind::LeastLoaded);
+        let p0 = FakeProbe::new(0, 2);
+        let p1 = FakeProbe::new(0, 2);
+        r.add_target(10, 0, p0.clone());
+        r.add_target(20, 1, p1);
+        p0.init_failures.store(1, Ordering::SeqCst);
+        let d = r.route("fn0:A", 1).unwrap();
+        assert_eq!(d.endpoint, 20);
+        assert!(r.take_health_events().is_empty(), "degraded != quarantined");
+    }
+
+    #[test]
+    fn quarantine_diversion_fires_the_receivers_scale_signal() {
+        let mut r = Router::new(RouteStrategyKind::WarmFirst).with_health_config(quick_health());
+        let p0 = FakeProbe::new(0, 1);
+        let p1 = FakeProbe::new(0, 1);
+        let sig1 = crate::scheduler::autoscale::RouterScaleSignal::new();
+        r.add_target(10, 0, p0.clone());
+        r.add_target_with_signal(20, 1, p1, Some(sig1.clone()));
+        // warm the key on 10, then break 10
+        assert_eq!(r.route("fn0:A", 3).unwrap().endpoint, 10);
+        assert_eq!(sig1.pending(), 0);
+        p0.failed.store(8, Ordering::SeqCst);
+        let d = r.route("fn0:A", 3).unwrap();
+        assert_eq!(d.endpoint, 20);
+        assert!(d.quarantine_diverted, "key was warm on the quarantined site");
+        // the diverted weight announced itself to 20's autoscaler
+        assert_eq!(sig1.pending(), 3);
     }
 
     #[test]

@@ -227,7 +227,7 @@ pub fn simulate_policy(
     seed: u64,
 ) -> PolicyOutcome {
     let mut rng = Rng::new(seed);
-    let r = pull_replay(tasks, topo, &cost, class_compile_s, policy, &mut rng);
+    let r = pull_replay(tasks, topo, &cost, class_compile_s, policy, &mut rng, None, 0);
 
     let makespan = r.completions.iter().cloned().fold(0.0, f64::max);
     let mean_latency = if r.completions.is_empty() {
@@ -260,12 +260,32 @@ struct PullReplay {
     busy: f64,
 }
 
+/// Per-task serving-side fault effect, tagged by the routing pass of
+/// [`simulate_sites_faulty`]: the identity element (factor 1, extra 0)
+/// leaves the replay bit-identical to the fault-free path.
+#[derive(Debug, Clone, Copy)]
+struct FaultEffect {
+    /// service-time multiplier (an active slowdown window)
+    service_factor: f64,
+    /// seconds the serving worker sits out before the task runs (a stall
+    /// the task is caught in)
+    extra_s: f64,
+}
+
+impl Default for FaultEffect {
+    fn default() -> Self {
+        FaultEffect { service_factor: 1.0, extra_s: 0.0 }
+    }
+}
+
 /// The pull-based dispatch core shared by [`simulate_policy`] (one
 /// endpoint) and [`simulate_sites`] (per site): provision workers, then let
 /// the earliest-free worker repeatedly pick its next task under `policy`,
 /// paying `class_compile_s` for each cold (worker, class) pair. RNG draw
 /// order is identical to the original `simulate_policy`, preserving
-/// seed-for-seed reproducibility.
+/// seed-for-seed reproducibility. `effects` (aligned with `tasks`) carries
+/// per-task fault penalties and `workers_lost` removes workers that failed
+/// init; `None`/0 reproduce the fault-free replay exactly.
 fn pull_replay(
     tasks: &[SimTask],
     topo: Topology,
@@ -273,8 +293,15 @@ fn pull_replay(
     class_compile_s: f64,
     policy: SimPolicy,
     rng: &mut Rng,
+    effects: Option<&[FaultEffect]>,
+    workers_lost: usize,
 ) -> PullReplay {
     let mut free_at = provision_ready_times(rng, topo, cost);
+    if workers_lost > 0 {
+        // dead-on-init workers never pop; at least one survivor serves
+        let alive = free_at.len().saturating_sub(workers_lost).max(1);
+        free_at.truncate(alive);
+    }
 
     let mut heap: BinaryHeap<Reverse<(u64, usize)>> = free_at
         .iter()
@@ -312,12 +339,14 @@ fn pull_replay(
             compiles += 1;
             class_compile_s
         };
+        let eff = effects.map(|e| e[t]).unwrap_or_default();
         let jitter = 1.0 + cost.service_jitter_rel * rng.normal();
         let mut service = task.service_s * jitter.max(0.1);
         if rng.f64() < cost.straggler_prob {
             service *= cost.straggler_factor;
         }
-        let total = cost.transfer_in_s + compile + service + cost.transfer_out_s;
+        service *= eff.service_factor;
+        let total = cost.transfer_in_s + compile + service + cost.transfer_out_s + eff.extra_s;
         let start = free_at[w];
         let done = start + total;
         free_at[w] = done;
@@ -370,6 +399,11 @@ impl RouteSim {
 }
 
 /// Outcome of one routed multi-site replay.
+///
+/// Routing counters (`route_warm_hits` / `spillovers` / `health_diverted`)
+/// count *decisions*, matching the live router's metrics: a task recalled
+/// from a quarantined site decides again when re-routed, so under a fault
+/// plan these can exceed the task count.
 #[derive(Debug, Clone)]
 pub struct MultiSiteOutcome {
     pub makespan_s: f64,
@@ -383,7 +417,102 @@ pub struct MultiSiteOutcome {
     /// tasks steered off a warm site because its backlog exceeded the
     /// recompile cost
     pub spillovers: usize,
+    /// quarantine sentences the health-aware router imposed (0 without a
+    /// fault plan or with health-blind routing)
+    pub quarantines: usize,
+    /// tasks recalled from a just-quarantined site and re-routed to a
+    /// survivor (the replay analog of `submit_routed`'s retry)
+    pub retries: usize,
+    /// tasks routed away from a quarantined site that was warm for their
+    /// class
+    pub health_diverted: usize,
     pub per_site_tasks: Vec<usize>,
+}
+
+// ---------------------------------------------------------------------------
+// fault injection
+// ---------------------------------------------------------------------------
+
+/// What goes wrong at a faulted site.
+#[derive(Debug, Clone, Copy)]
+pub enum FaultKind {
+    /// service times on tasks caught in the window multiply by `factor`
+    /// (thermal throttling, noisy neighbors, degraded filesystem)
+    Slowdown { factor: f64 },
+    /// tasks caught in the window sit out the stall on their worker before
+    /// running — the "no completion progress while backlog is nonzero"
+    /// signature the live stall detector keys on
+    Stall { stall_s: f64 },
+    /// `workers_lost` of the site's workers die in init and never serve for
+    /// the whole replay (the window gates only when the router can *detect*
+    /// the lost capacity)
+    WorkerInitFail { workers_lost: usize },
+}
+
+/// One fault window at one site, in routing-step units (every routing
+/// decision — including a retry of a recalled task — advances the cursor
+/// by one, so steps are the replay's clock for fault onset/recovery).
+#[derive(Debug, Clone, Copy)]
+pub struct SiteFault {
+    pub site: usize,
+    /// fault active from this routing step ...
+    pub from_step: usize,
+    /// ... until this one (exclusive)
+    pub until_step: usize,
+    pub kind: FaultKind,
+}
+
+/// A chaos scenario: fault windows plus the health model of the router
+/// replaying against them.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    pub faults: Vec<SiteFault>,
+    /// in-window tasks a faulted site accumulates before the router's
+    /// health scoring detects the degradation and quarantines it
+    pub detect_tasks: usize,
+    /// of those, how many are already claimed by workers and cannot be
+    /// recalled (they suffer the fault); the rest are re-routed as retries
+    pub stuck_tasks: usize,
+    /// quarantine length in routing steps; doubles on re-detection
+    /// (exponential backoff, mirroring the live `HealthMonitor`)
+    pub quarantine_steps: usize,
+}
+
+impl FaultPlan {
+    /// No faults: `simulate_sites_faulty` degenerates to [`simulate_sites`].
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    fn fault_at(&self, site: usize, step: usize) -> Option<&SiteFault> {
+        self.faults
+            .iter()
+            .find(|f| f.site == site && step >= f.from_step && step < f.until_step)
+    }
+
+    /// Workers at `site` that never pass init (whole-replay capacity loss).
+    fn workers_lost(&self, site: usize) -> usize {
+        self.faults
+            .iter()
+            .filter(|f| f.site == site)
+            .map(|f| match f.kind {
+                FaultKind::WorkerInitFail { workers_lost } => workers_lost,
+                _ => 0,
+            })
+            .sum()
+    }
+}
+
+/// Per-site health bookkeeping inside the routing pass.
+#[derive(Debug, Clone, Default)]
+struct SiteHealthSim {
+    /// tasks routed here while a fault window was active (cleared on
+    /// quarantine and on release)
+    in_window: Vec<usize>,
+    /// routing step at which the current quarantine ends
+    quarantined_until: Option<usize>,
+    /// current sentence length (doubles per detection)
+    sentence: usize,
 }
 
 /// Replay `tasks` (all submitted at t = 0, in order) through a federation
@@ -399,6 +528,28 @@ pub fn simulate_sites(
     route: RouteSim,
     seed: u64,
 ) -> MultiSiteOutcome {
+    simulate_sites_faulty(tasks, sites, class_compile_s, route, &FaultPlan::none(), false, seed)
+}
+
+/// [`simulate_sites`] under a [`FaultPlan`]: the serving pass suffers the
+/// fault windows either way; `health_aware` decides whether the routing
+/// pass *reacts* — detecting a faulted site after
+/// [`FaultPlan::detect_tasks`] in-window placements, quarantining it for
+/// [`FaultPlan::quarantine_steps`] (doubling on relapse), recalling its
+/// unclaimed in-window tasks onto survivors (counted as `retries`), and
+/// steering later tasks of its warm classes elsewhere (`health_diverted`).
+/// Health-blind routing replays the same faults with PR 4's
+/// everything-is-live assumption — the comparison
+/// `cargo bench --bench router` asserts on.
+pub fn simulate_sites_faulty(
+    tasks: &[SimTask],
+    sites: &[SiteSpec],
+    class_compile_s: f64,
+    route: RouteSim,
+    plan: &FaultPlan,
+    health_aware: bool,
+    seed: u64,
+) -> MultiSiteOutcome {
     assert!(!sites.is_empty(), "at least one site");
     let nsites = sites.len();
     let workers: Vec<f64> = sites.iter().map(|s| s.topo.workers().max(1) as f64).collect();
@@ -407,21 +558,49 @@ pub fn simulate_sites(
     let mut routed: Vec<Vec<usize>> = vec![Vec::new(); nsites];
     let mut backlog_s: Vec<f64> = vec![0.0; nsites]; // routed work, seconds
     let mut classes: Vec<Vec<usize>> = vec![Vec::new(); nsites]; // site warm classes
+    let mut backlog_contrib: Vec<f64> = vec![0.0; tasks.len()]; // per-task share
+    let mut effects: Vec<FaultEffect> = vec![FaultEffect::default(); tasks.len()];
+    let mut health: Vec<SiteHealthSim> = vec![SiteHealthSim::default(); nsites];
     let mut warm_hits = 0usize;
     let mut spillovers = 0usize;
+    let mut quarantines = 0usize;
+    let mut retries = 0usize;
+    let mut health_diverted = 0usize;
     let mut rr = 0usize;
+    let mut step = 0usize; // routing-step cursor (the fault clock)
 
     // estimated completion penalty of sending the next task to site s
     let est = |s: usize, backlog_s: &[f64]| backlog_s[s] / workers[s] + sites[s].link_s;
 
-    for (i, task) in tasks.iter().enumerate() {
+    let mut work: VecDeque<usize> = (0..tasks.len()).collect();
+    while let Some(i) = work.pop_front() {
+        let task = &tasks[i];
+        // release served quarantine sentences (the backoff probe)
+        for h in health.iter_mut() {
+            if matches!(h.quarantined_until, Some(until) if step >= until) {
+                h.quarantined_until = None;
+                h.in_window.clear();
+            }
+        }
+        let quarantined =
+            |s: usize, health: &[SiteHealthSim]| health[s].quarantined_until.is_some();
+        // candidate sites: skip quarantined ones; degrade gracefully to the
+        // full set when everything is quarantined (mirrors the live router)
+        let mut candidates: Vec<usize> =
+            (0..nsites).filter(|&s| !quarantined(s, &health)).collect();
+        if candidates.is_empty() {
+            candidates = (0..nsites).collect();
+        }
+
         let pick = match route {
             RouteSim::RoundRobin => {
-                let p = rr % nsites;
+                let p = candidates[rr % candidates.len()];
                 rr += 1;
                 p
             }
-            RouteSim::LeastLoaded => (0..nsites)
+            RouteSim::LeastLoaded => candidates
+                .iter()
+                .copied()
                 .min_by(|&a, &b| est(a, &backlog_s).total_cmp(&est(b, &backlog_s)))
                 .expect("non-empty"),
             RouteSim::WarmFirst => {
@@ -432,29 +611,99 @@ pub fn simulate_sites(
                     est(s, &backlog_s)
                         + if classes[s].contains(&task.class) { 0.0 } else { class_compile_s }
                 };
-                (0..nsites)
+                candidates
+                    .iter()
+                    .copied()
                     .min_by(|&a, &b| eff(a).total_cmp(&eff(b)))
                     .expect("non-empty")
             }
         };
         let warm = classes[pick].contains(&task.class);
+        let diverted = !warm
+            && (0..nsites)
+                .any(|s| quarantined(s, &health) && classes[s].contains(&task.class));
+        if diverted {
+            health_diverted += 1;
+        }
         if route == RouteSim::WarmFirst {
             if warm {
                 warm_hits += 1;
-            } else if (0..nsites).any(|s| classes[s].contains(&task.class)) {
+            } else if !diverted
+                && (0..nsites).any(|s| classes[s].contains(&task.class))
+            {
                 spillovers += 1;
             }
         } else if warm {
             warm_hits += 1;
         }
         routed[pick].push(i);
-        backlog_s[pick] += task.service_s + if warm { 0.0 } else { class_compile_s };
+        let contrib = task.service_s + if warm { 0.0 } else { class_compile_s };
+        backlog_s[pick] += contrib;
+        backlog_contrib[i] = contrib;
         if !warm {
             classes[pick].push(task.class);
         }
+
+        // fault bookkeeping: tag the task's serving penalty and advance the
+        // health model of the picked site
+        if let Some(fault) = plan.fault_at(pick, step) {
+            effects[i] = match fault.kind {
+                FaultKind::Slowdown { factor } => {
+                    FaultEffect { service_factor: factor, extra_s: 0.0 }
+                }
+                FaultKind::Stall { stall_s } => {
+                    FaultEffect { service_factor: 1.0, extra_s: stall_s }
+                }
+                // capacity loss is site-level, not per-task
+                FaultKind::WorkerInitFail { .. } => FaultEffect::default(),
+            };
+            health[pick].in_window.push(i);
+            // detection: enough in-window placements, and somewhere healthy
+            // to send the recalled work (with no alternative the router
+            // stays in degraded mode instead of thrashing)
+            let alternative = (0..nsites).any(|s| s != pick && !quarantined(s, &health));
+            if health_aware
+                && alternative
+                && health[pick].in_window.len() >= plan.detect_tasks.max(1)
+            {
+                let sentence = if health[pick].sentence == 0 {
+                    plan.quarantine_steps.max(1)
+                } else {
+                    health[pick].sentence * 2
+                };
+                health[pick].sentence = sentence;
+                health[pick].quarantined_until = Some(step + sentence);
+                quarantines += 1;
+                // recall everything not already claimed by a worker: those
+                // tasks lose their routed slot (and fault tag) and go back
+                // into the stream as retries
+                let recalled: Vec<usize> =
+                    health[pick].in_window.split_off(plan.stuck_tasks.min(plan.detect_tasks));
+                for &r in &recalled {
+                    if let Some(pos) = routed[pick].iter().position(|&x| x == r) {
+                        routed[pick].remove(pos);
+                    }
+                    backlog_s[pick] -= backlog_contrib[r];
+                    backlog_contrib[r] = 0.0;
+                    effects[r] = FaultEffect::default();
+                    work.push_back(r);
+                    retries += 1;
+                }
+                health[pick].in_window.clear();
+                // warmth rolls back with the recall: a class whose only
+                // tasks were recalled was never actually compiled here, so
+                // leaving it marked warm would attract the class straight
+                // back after release without the compile cost that
+                // attraction is supposed to model
+                classes[pick]
+                    .retain(|&c| routed[pick].iter().any(|&x| tasks[x].class == c));
+            }
+        }
+        step += 1;
     }
 
     // --- serving pass: per-site affinity replay ---------------------------
+    let has_effects = effects.iter().any(|e| e.service_factor != 1.0 || e.extra_s != 0.0);
     let mut completions = vec![0.0; tasks.len()];
     let mut compiles = 0usize;
     for (s, site) in sites.iter().enumerate() {
@@ -462,12 +711,22 @@ pub fn simulate_sites(
             continue;
         }
         let local: Vec<SimTask> = routed[s].iter().map(|&i| tasks[i]).collect();
+        let local_eff: Vec<FaultEffect> = routed[s].iter().map(|&i| effects[i]).collect();
         let mut cost = site.cost;
         cost.transfer_in_s += site.link_s;
         // per-site RNG stream: site 0 with link 0 replays identically to
         // simulate_policy(seed)
         let mut rng = Rng::new(seed.wrapping_add((s as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)));
-        let r = pull_replay(&local, site.topo, &cost, class_compile_s, SimPolicy::Affinity, &mut rng);
+        let r = pull_replay(
+            &local,
+            site.topo,
+            &cost,
+            class_compile_s,
+            SimPolicy::Affinity,
+            &mut rng,
+            if has_effects { Some(&local_eff) } else { None },
+            plan.workers_lost(s),
+        );
         compiles += r.compiles;
         for (j, &orig) in routed[s].iter().enumerate() {
             completions[orig] = r.completions[j];
@@ -487,6 +746,9 @@ pub fn simulate_sites(
         compiles,
         route_warm_hits: warm_hits,
         spillovers,
+        quarantines,
+        retries,
+        health_diverted,
         per_site_tasks: routed.iter().map(|r| r.len()).collect(),
     }
 }
@@ -780,6 +1042,152 @@ mod tests {
         ];
         let out = simulate_sites(&tasks, &sites, 0.0, RouteSim::LeastLoaded, 5);
         assert_eq!(out.per_site_tasks, vec![4, 0]);
+    }
+
+    // -- fault injection ---------------------------------------------------
+
+    fn stall_plan(site: usize, from: usize, until: usize, stall_s: f64) -> FaultPlan {
+        FaultPlan {
+            faults: vec![SiteFault {
+                site,
+                from_step: from,
+                until_step: until,
+                kind: FaultKind::Stall { stall_s },
+            }],
+            detect_tasks: 4,
+            stuck_tasks: 2,
+            quarantine_steps: 10,
+        }
+    }
+
+    #[test]
+    fn empty_fault_plan_matches_simulate_sites() {
+        let tasks: Vec<SimTask> =
+            (0..40).map(|i| SimTask { service_s: 1.0, class: i % 3 }).collect();
+        let sites = two_equal_sites();
+        for route in [RouteSim::RoundRobin, RouteSim::LeastLoaded, RouteSim::WarmFirst] {
+            let plain = simulate_sites(&tasks, &sites, 5.0, route, 77);
+            let faulty = simulate_sites_faulty(
+                &tasks,
+                &sites,
+                5.0,
+                route,
+                &FaultPlan::none(),
+                true,
+                77,
+            );
+            assert_eq!(plain.completions_s, faulty.completions_s, "{route:?}");
+            assert_eq!(plain.route_warm_hits, faulty.route_warm_hits);
+            assert_eq!(plain.spillovers, faulty.spillovers);
+            assert_eq!(faulty.quarantines, 0);
+            assert_eq!(faulty.retries, 0);
+            assert_eq!(faulty.health_diverted, 0);
+        }
+    }
+
+    #[test]
+    fn stall_fault_hurts_health_blind_routing() {
+        let tasks: Vec<SimTask> =
+            (0..60).map(|i| SimTask { service_s: 1.0, class: i % 2 }).collect();
+        let sites = two_equal_sites();
+        let plan = stall_plan(0, 0, 60, 50.0);
+        let clean = simulate_sites(&tasks, &sites, 2.0, RouteSim::WarmFirst, 9);
+        let blind =
+            simulate_sites_faulty(&tasks, &sites, 2.0, RouteSim::WarmFirst, &plan, false, 9);
+        assert!(
+            blind.mean_latency_s > clean.mean_latency_s * 2.0,
+            "a stalled site must hurt when routed blindly: {} !>> {}",
+            blind.mean_latency_s,
+            clean.mean_latency_s
+        );
+        assert_eq!(blind.quarantines, 0, "health-blind routing never quarantines");
+    }
+
+    #[test]
+    fn health_aware_routing_quarantines_recalls_and_wins() {
+        let tasks: Vec<SimTask> =
+            (0..60).map(|i| SimTask { service_s: 1.0, class: i % 2 }).collect();
+        let sites = two_equal_sites();
+        let plan = stall_plan(0, 0, 60, 50.0);
+        let blind =
+            simulate_sites_faulty(&tasks, &sites, 2.0, RouteSim::WarmFirst, &plan, false, 9);
+        let aware =
+            simulate_sites_faulty(&tasks, &sites, 2.0, RouteSim::WarmFirst, &plan, true, 9);
+        assert!(
+            aware.mean_latency_s < blind.mean_latency_s,
+            "health-aware {} !< blind {}",
+            aware.mean_latency_s,
+            blind.mean_latency_s
+        );
+        assert!(aware.quarantines >= 1, "the stalled site must be quarantined");
+        assert!(aware.retries >= 1, "recalled tasks must be re-routed");
+        // every task still completes, on either side
+        assert_eq!(aware.completions_s.len(), tasks.len());
+        assert!(aware.completions_s.iter().all(|&c| c > 0.0));
+        assert_eq!(aware.per_site_tasks.iter().sum::<usize>(), tasks.len());
+    }
+
+    #[test]
+    fn quarantining_the_only_site_degrades_gracefully_in_sim() {
+        // single-site federation with an active fault: no healthy
+        // alternative exists, so the health-aware router must keep routing
+        // (degraded mode) instead of looping on recalls
+        let tasks: Vec<SimTask> = (0..20).map(|_| SimTask { service_s: 1.0, class: 0 }).collect();
+        let topo = Topology { max_blocks: 1, nodes_per_block: 1, workers_per_node: 2 };
+        let sites = vec![SiteSpec { topo, cost: CostModel::ideal(), link_s: 0.0 }];
+        let plan = stall_plan(0, 0, 100, 10.0);
+        let out = simulate_sites_faulty(&tasks, &sites, 1.0, RouteSim::WarmFirst, &plan, true, 3);
+        assert_eq!(out.per_site_tasks, vec![20], "all work still served");
+        assert_eq!(out.quarantines, 0, "no alternative => no quarantine thrash");
+        assert!(out.completions_s.iter().all(|&c| c > 0.0));
+    }
+
+    #[test]
+    fn worker_init_failures_shrink_capacity() {
+        let tasks: Vec<SimTask> = (0..32).map(|_| SimTask { service_s: 1.0, class: 0 }).collect();
+        let topo = Topology { max_blocks: 1, nodes_per_block: 1, workers_per_node: 4 };
+        let sites = vec![SiteSpec { topo, cost: CostModel::ideal(), link_s: 0.0 }];
+        let plan = FaultPlan {
+            faults: vec![SiteFault {
+                site: 0,
+                from_step: 0,
+                until_step: usize::MAX,
+                kind: FaultKind::WorkerInitFail { workers_lost: 3 },
+            }],
+            detect_tasks: 4,
+            stuck_tasks: 2,
+            quarantine_steps: 10,
+        };
+        let healthy = simulate_sites(&tasks, &sites, 0.0, RouteSim::RoundRobin, 5);
+        let crippled =
+            simulate_sites_faulty(&tasks, &sites, 0.0, RouteSim::RoundRobin, &plan, false, 5);
+        // 1 surviving worker instead of 4: serialized => ~4x the makespan
+        assert!(
+            crippled.makespan_s > healthy.makespan_s * 3.0,
+            "lost workers must serialize the site: {} !>> {}",
+            crippled.makespan_s,
+            healthy.makespan_s
+        );
+    }
+
+    #[test]
+    fn slowdown_fault_inflates_service_times() {
+        let tasks: Vec<SimTask> = (0..16).map(|_| SimTask { service_s: 1.0, class: 0 }).collect();
+        let topo = Topology { max_blocks: 1, nodes_per_block: 1, workers_per_node: 2 };
+        let sites = vec![SiteSpec { topo, cost: CostModel::ideal(), link_s: 0.0 }];
+        let plan = FaultPlan {
+            faults: vec![SiteFault {
+                site: 0,
+                from_step: 0,
+                until_step: usize::MAX,
+                kind: FaultKind::Slowdown { factor: 3.0 },
+            }],
+            ..FaultPlan::none()
+        };
+        let clean = simulate_sites(&tasks, &sites, 0.0, RouteSim::RoundRobin, 11);
+        let slow =
+            simulate_sites_faulty(&tasks, &sites, 0.0, RouteSim::RoundRobin, &plan, false, 11);
+        assert!((slow.makespan_s / clean.makespan_s - 3.0).abs() < 0.2);
     }
 
     #[test]

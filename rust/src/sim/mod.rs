@@ -6,10 +6,11 @@ pub mod cluster;
 pub mod replay;
 
 pub use cluster::{
-    simulate, simulate_policy, simulate_sites, trials, CostModel, MultiSiteOutcome,
-    PolicyOutcome, RouteSim, SimOutcome, SimPolicy, SimTask, SiteSpec, Topology,
+    simulate, simulate_policy, simulate_sites, simulate_sites_faulty, trials, CostModel,
+    FaultKind, FaultPlan, MultiSiteOutcome, PolicyOutcome, RouteSim, SimOutcome, SimPolicy,
+    SimTask, SiteFault, SiteSpec, Topology,
 };
 pub use replay::{
-    block_scaling, calibrate_multiplier, replay_table1_row, table1_mixed_workload,
-    two_site_table1, PaperRow, ReplayRow, PAPER_TABLE1,
+    block_scaling, calibrate_multiplier, replay_table1_row, table1_chaos_plan,
+    table1_mixed_workload, two_site_table1, PaperRow, ReplayRow, PAPER_TABLE1,
 };

@@ -10,7 +10,9 @@
 //! who wins, the speedup ordering across analyses, and where overhead
 //! dominates (see EXPERIMENTS.md).
 
-use crate::sim::cluster::{simulate, trials, CostModel, SimTask, SiteSpec, Topology};
+use crate::sim::cluster::{
+    simulate, trials, CostModel, FaultKind, FaultPlan, SimTask, SiteFault, SiteSpec, Topology,
+};
 use crate::util::stats::Summary;
 
 /// Paper Table 1 reference numbers (seconds).
@@ -132,6 +134,28 @@ pub fn two_site_table1() -> Vec<SiteSpec> {
     ]
 }
 
+/// The chaos scenario for the two-site Table-1 federation: the RIVER
+/// endpoint stalls mid-workload (no completion progress while its backlog
+/// is nonzero — a hung shared filesystem in the paper's deployment), for a
+/// window covering roughly the middle half of the routing stream. Tasks
+/// caught on the stalled site sit out a stall comparable to several
+/// single-node-scale fits; the remote 48-worker site stays healthy. The
+/// router-bench replays this plan health-blind vs health-aware and asserts
+/// the health-aware router completes the workload with lower mean latency.
+pub fn table1_chaos_plan() -> FaultPlan {
+    FaultPlan {
+        faults: vec![SiteFault {
+            site: 0,
+            from_step: 60,
+            until_step: 190,
+            kind: FaultKind::Stall { stall_s: 150.0 },
+        }],
+        detect_tasks: 8,
+        stuck_tasks: 4,
+        quarantine_steps: 48,
+    }
+}
+
 /// Block-scaling sweep (§3 / isolated-run discussion): makespan vs
 /// max_blocks at the paper's node shape.
 pub fn block_scaling(
@@ -249,6 +273,50 @@ mod tests {
             assert!(wf.route_warm_hits > tasks.len() / 2, "seed {seed}");
             assert!(wf.compiles <= rr.compiles, "seed {seed}");
             assert_eq!(wf.completions_s.len(), tasks.len());
+        }
+    }
+
+    #[test]
+    fn chaos_plan_targets_the_river_site_mid_workload() {
+        let plan = table1_chaos_plan();
+        assert_eq!(plan.faults.len(), 1);
+        let f = plan.faults[0];
+        assert_eq!(f.site, 0, "the stall hits the big RIVER site");
+        let n = table1_mixed_workload().len();
+        assert!(f.from_step > 0 && f.until_step < n, "mid-workload window");
+        assert!(matches!(f.kind, crate::sim::cluster::FaultKind::Stall { stall_s } if stall_s > 0.0));
+        assert!(plan.stuck_tasks <= plan.detect_tasks);
+        assert!(plan.quarantine_steps > 0);
+    }
+
+    #[test]
+    fn health_aware_routing_beats_health_blind_under_chaos() {
+        // the router-bench chaos assertion in test form: with RIVER stalled
+        // mid-workload, health-aware warm_first completes the two-site
+        // Table-1 workload with lower mean latency than PR 4's health-blind
+        // warm_first, and the fault counters record the story
+        use crate::sim::cluster::{simulate_sites_faulty, RouteSim};
+        let tasks = table1_mixed_workload();
+        let sites = two_site_table1();
+        let plan = table1_chaos_plan();
+        for seed in [1u64, 42] {
+            let blind =
+                simulate_sites_faulty(&tasks, &sites, 5.0, RouteSim::WarmFirst, &plan, false, seed);
+            let aware =
+                simulate_sites_faulty(&tasks, &sites, 5.0, RouteSim::WarmFirst, &plan, true, seed);
+            assert_eq!(blind.completions_s.len(), tasks.len());
+            assert_eq!(aware.completions_s.len(), tasks.len());
+            assert!(aware.completions_s.iter().all(|&c| c > 0.0), "seed {seed}: work dropped");
+            assert!(
+                aware.mean_latency_s < blind.mean_latency_s,
+                "seed {seed}: health-aware {:.1} s !< health-blind {:.1} s",
+                aware.mean_latency_s,
+                blind.mean_latency_s
+            );
+            assert!(aware.quarantines >= 1, "seed {seed}: stalled site never quarantined");
+            assert!(aware.retries >= 1, "seed {seed}: no recalled task was retried");
+            assert_eq!(blind.quarantines, 0);
+            assert_eq!(blind.retries, 0);
         }
     }
 

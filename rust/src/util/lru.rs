@@ -101,6 +101,21 @@ impl<K: PartialEq, V> LruCache<K, V> {
 
 /// Bounded set with least-recently-used eviction (an [`LruCache`] with
 /// unit values).
+///
+/// This is the container behind every warm set in the fabric: a worker's
+/// compiled shape classes, an endpoint's routed affinity keys, the sim's
+/// per-worker executable caches.
+///
+/// ```
+/// use pyhf_faas::util::lru::LruSet;
+///
+/// let mut warm = LruSet::new(2);
+/// assert!(warm.insert("1Lbb").is_none());
+/// assert!(warm.insert("2L0J").is_none());
+/// warm.touch("1Lbb"); // refresh: "2L0J" is now least recently used
+/// assert_eq!(warm.insert("stau"), Some("2L0J"));
+/// assert!(warm.contains("1Lbb") && !warm.contains("2L0J"));
+/// ```
 #[derive(Debug, Clone)]
 pub struct LruSet<K> {
     cache: LruCache<K, ()>,

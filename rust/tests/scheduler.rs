@@ -508,3 +508,75 @@ fn sim_affinity_beats_fifo_on_table1_workload() {
         assert_eq!(affinity.completions_s.len(), tasks.len());
     }
 }
+
+#[test]
+fn router_quarantines_endpoint_whose_workers_fail_init() {
+    // the fault-aware-routing regression: a site whose workers all die in
+    // init (missing artifacts) must be quarantined by the router's health
+    // scoring, routed work must land on the healthy survivor, and the
+    // quarantine must be visible in the service metrics
+    use pyhf_faas::scheduler::HealthConfig;
+    let svc = Service::new();
+    let sick = Endpoint::start(
+        svc.clone(),
+        EndpointConfig::new("sick")
+            .with_executor(ExecutorConfig {
+                max_blocks: 1,
+                nodes_per_block: 1,
+                workers_per_node: 4,
+                parallelism: 1.0,
+                poll: Duration::from_millis(1),
+            })
+            .with_worker_init(Arc::new(|_ctx: &mut _| Err("no artifacts".into()))),
+    );
+    let healthy = Endpoint::start(
+        svc.clone(),
+        EndpointConfig::new("healthy").with_executor(single_worker_exec()),
+    );
+    let f = svc.register_function("echo", Arc::new(|p: &Json, _ctx: &mut _| Ok(p.clone())));
+    // long backoff: the broken site must stay out for the whole test (its
+    // readmission lifecycle is covered by the router unit tests)
+    let mut router = Router::new(RouteStrategyKind::LeastLoaded).with_health_config(
+        HealthConfig {
+            backoff_base: Duration::from_secs(30),
+            backoff_max: Duration::from_secs(30),
+            ..Default::default()
+        },
+    );
+    router.add_target(sick.id, 0, sick.probe());
+    router.add_target(healthy.id, 1, healthy.probe());
+    svc.install_router(router);
+
+    // provoke the init failures: one sacrificial task makes the sick site
+    // provision its block, whose four workers all die in init
+    let sacrificial = svc.submit(sick.id, f, Json::num(-1.0)).unwrap();
+    let t0 = std::time::Instant::now();
+    while sick.metrics_snapshot().worker_init_failures < 3
+        && t0.elapsed() < Duration::from_secs(5)
+    {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert!(
+        sick.metrics_snapshot().worker_init_failures >= 3,
+        "sick endpoint's workers never failed init"
+    );
+
+    // routed work now avoids the sick endpoint entirely
+    let client = FaasClient::new(svc.clone());
+    let ids: Vec<_> =
+        (0..6).map(|i| client.run_routed(Json::num(i as f64), f).unwrap()).collect();
+    for (i, id) in ids.iter().enumerate() {
+        let r = svc.wait_result(*id, Duration::from_secs(10)).unwrap();
+        assert_eq!(r.as_f64(), Some(i as f64), "routed task served wrong result");
+    }
+    let m = svc.metrics.snapshot();
+    assert!(m.endpoints_quarantined >= 1, "sick endpoint was never quarantined");
+    assert_eq!(
+        svc.outstanding(sick.id),
+        1,
+        "only the sacrificial task may sit on the sick site"
+    );
+    assert!(svc.cancel(sacrificial), "sacrificial task should still be pending");
+    healthy.shutdown();
+    sick.shutdown();
+}
