@@ -252,4 +252,31 @@ fn main() {
         aware.retries,
         aware.health_diverted
     );
+
+    // tracing acceptance: turning the trace hub on must not perturb the
+    // routing outcome — re-run the clean warm_first config with tracing
+    // enabled and assert the mean latency is within 2% of the traced-off
+    // run above (every probe site is a relaxed atomic load when disabled,
+    // and the replay itself is deterministic)
+    assert!(!pyhf_faas::trace::enabled(), "tracing must default to off");
+    pyhf_faas::trace::enable();
+    let traced =
+        run("warm_first/traced", RouteSim::WarmFirst, &tasks, &sites, &clean, false, trials);
+    pyhf_faas::trace::clear();
+    pyhf_faas::trace::disable();
+    let delta = (traced.latency.mean - wf.latency.mean).abs() / wf.latency.mean.max(1e-9);
+    assert!(
+        delta < 0.02,
+        "tracing-enabled mean latency {:.3} s drifted {:.1}% from tracing-off {:.3} s",
+        traced.latency.mean,
+        delta * 100.0,
+        wf.latency.mean
+    );
+    println!(
+        "trace PASSED: tracing-enabled mean latency {:.1} s within {:.2}% of tracing-off \
+         {:.1} s (< 2% budget).",
+        traced.latency.mean,
+        delta * 100.0,
+        wf.latency.mean
+    );
 }

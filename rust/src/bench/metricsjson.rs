@@ -1,0 +1,165 @@
+//! Machine-readable observability snapshot (`scan --metrics-out`).
+//!
+//! Dumps the service-wide metrics hub plus every endpoint's hub as
+//! schema-versioned JSON (`pyhf-faas/metrics/v1`), so CI and operators can
+//! consume the full counter/percentile surface next to `BENCH_fit.json` /
+//! `BENCH_route.json` instead of scraping scan stdout.
+
+use std::path::Path;
+
+use crate::coordinator::metrics::Snapshot;
+use crate::util::json::{self, Json};
+
+/// Schema tag checked by CI and by [`validate`].
+pub const SCHEMA: &str = "pyhf-faas/metrics/v1";
+
+/// The full report: one service-wide snapshot + one per endpoint.
+#[derive(Debug, Clone)]
+pub struct MetricsReport {
+    /// producer: "scan" (or a test harness)
+    pub source: String,
+    pub commit: String,
+    pub service: Snapshot,
+    /// (endpoint name, endpoint-hub snapshot)
+    pub endpoints: Vec<(String, Snapshot)>,
+}
+
+impl MetricsReport {
+    pub fn new(source: &str, service: Snapshot) -> MetricsReport {
+        MetricsReport {
+            source: source.to_string(),
+            commit: crate::bench::fitjson::git_commit(),
+            service,
+            endpoints: Vec::new(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str(SCHEMA)),
+            ("source", Json::str(self.source.clone())),
+            ("commit", Json::str(self.commit.clone())),
+            ("service", self.service.to_json()),
+            (
+                "endpoints",
+                Json::Arr(
+                    self.endpoints
+                        .iter()
+                        .map(|(name, snap)| {
+                            Json::obj(vec![
+                                ("name", Json::str(name.clone())),
+                                ("metrics", snap.to_json()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Serialize to `path` (validated, pretty-printed).
+    pub fn write(&self, path: &Path) -> Result<(), String> {
+        let doc = self.to_json();
+        validate(&doc)?;
+        std::fs::write(path, json::to_string_pretty(&doc))
+            .map_err(|e| format!("write {}: {e}", path.display()))
+    }
+}
+
+/// Required numeric keys of every metrics object (service-wide and
+/// per-endpoint): the ledger counters and the latency surface.
+const REQUIRED_NUMERIC: [&str; 14] = [
+    "submitted",
+    "completed",
+    "failed",
+    "cancelled",
+    "routed",
+    "mean_wait_s",
+    "mean_service_s",
+    "total_service_s",
+    "p50_wait_s",
+    "p95_wait_s",
+    "p99_wait_s",
+    "p50_service_s",
+    "p95_service_s",
+    "p99_service_s",
+];
+
+fn validate_metrics_obj(ctx: &str, doc: &Json) -> Result<(), String> {
+    for key in REQUIRED_NUMERIC {
+        let v = doc
+            .get(key)
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| format!("{ctx}: missing numeric '{key}'"))?;
+        if !v.is_finite() || v < 0.0 {
+            return Err(format!("{ctx}.{key}: bad value {v}"));
+        }
+    }
+    Ok(())
+}
+
+/// Schema check: schema/source/commit present, the service snapshot and
+/// every endpoint snapshot carry the required counters and percentiles.
+pub fn validate(doc: &Json) -> Result<(), String> {
+    let schema = doc.get("schema").and_then(|v| v.as_str()).ok_or("missing 'schema'")?;
+    if schema != SCHEMA {
+        return Err(format!("schema '{schema}' != '{SCHEMA}'"));
+    }
+    doc.get("source").and_then(|v| v.as_str()).ok_or("missing 'source'")?;
+    doc.get("commit").and_then(|v| v.as_str()).ok_or("missing 'commit'")?;
+    validate_metrics_obj("service", doc.get("service").ok_or("missing 'service'")?)?;
+    let endpoints = doc.get("endpoints").and_then(|v| v.as_arr()).ok_or("missing 'endpoints'")?;
+    for (i, e) in endpoints.iter().enumerate() {
+        e.get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| format!("endpoints[{i}]: missing 'name'"))?;
+        let m = e.get("metrics").ok_or_else(|| format!("endpoints[{i}]: missing 'metrics'"))?;
+        validate_metrics_obj(&format!("endpoints[{i}].metrics"), m)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::Metrics;
+
+    fn sample() -> MetricsReport {
+        let m = Metrics::new();
+        m.task_submitted();
+        m.task_submitted();
+        m.task_finished(true, 0.01, 0.2);
+        m.task_finished(false, 0.02, 0.4);
+        let mut r = MetricsReport::new("scan", m.snapshot());
+        let ep = Metrics::new();
+        ep.task_executed(true);
+        r.endpoints.push(("native-site0".to_string(), ep.snapshot()));
+        r
+    }
+
+    #[test]
+    fn report_roundtrips_and_validates() {
+        let doc = sample().to_json();
+        validate(&doc).unwrap();
+        let parsed = json::parse(&json::to_string_pretty(&doc)).unwrap();
+        validate(&parsed).unwrap();
+        assert_eq!(parsed.get("schema").unwrap().as_str(), Some(SCHEMA));
+        let svc = parsed.get("service").unwrap();
+        assert_eq!(svc.get("submitted").unwrap().as_f64(), Some(2.0));
+        assert!(svc.get("p95_service_s").unwrap().as_f64().unwrap() > 0.0);
+        let eps = parsed.get("endpoints").unwrap().as_arr().unwrap();
+        assert_eq!(eps[0].get("name").unwrap().as_str(), Some("native-site0"));
+        assert_eq!(eps[0].get("metrics").unwrap().get("completed").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn validate_rejects_malformed_docs() {
+        assert!(validate(&json::parse(r#"{"schema": "nope"}"#).unwrap()).is_err());
+        let mut doc = sample().to_json();
+        if let Some(svc) = doc.get_mut("service") {
+            svc.set("p99_wait_s", Json::str("oops"));
+        }
+        let err = validate(&doc).unwrap_err();
+        assert!(err.contains("p99_wait_s"), "{err}");
+    }
+}

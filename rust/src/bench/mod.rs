@@ -3,8 +3,10 @@
 pub mod fitjson;
 pub mod harness;
 pub mod measure;
+pub mod metricsjson;
 pub mod routejson;
 
 pub use fitjson::{ClassBench, FitBenchReport};
 pub use harness::{bench, BenchResult, Bencher};
+pub use metricsjson::MetricsReport;
 pub use routejson::{RouteBenchReport, StrategyBench};

@@ -199,7 +199,8 @@ impl FaasClient {
         stall_timeout: Option<Duration>,
         mut on_complete: F,
     ) -> Result<Vec<Result<Json, String>>, String> {
-        let deadline = Instant::now() + timeout;
+        let gather_t0 = Instant::now();
+        let deadline = gather_t0 + timeout;
         let mut last_progress = Instant::now();
         let mut results: Vec<Option<Result<Json, String>>> = vec![None; tasks.len()];
         // indices still awaiting a result: completed slots leave the scan
@@ -223,6 +224,7 @@ impl FaasClient {
             }
             if Instant::now() > deadline {
                 let cancelled = self.cancel_outstanding(tasks, &pending);
+                self.trace_gather(gather_t0, tasks.len(), tasks.len() - pending.len(), "timeout");
                 return Err(format!(
                     "timeout with {} tasks outstanding ({cancelled} cancelled)",
                     pending.len()
@@ -232,6 +234,7 @@ impl FaasClient {
                 if Instant::now() - last_progress > stall {
                     let n = pending.len();
                     let cancelled = self.cancel_outstanding(tasks, &pending);
+                    self.trace_gather(gather_t0, tasks.len(), tasks.len() - n, "stalled");
                     return Err(format!(
                         "no task completed for {:.0} s with {n} outstanding \
                          ({cancelled} cancelled) — endpoint unhealthy? (check \
@@ -242,6 +245,7 @@ impl FaasClient {
             }
             std::thread::sleep(poll);
         }
+        self.trace_gather(gather_t0, tasks.len(), tasks.len(), "complete");
         Ok(results.into_iter().map(|r| r.unwrap()).collect())
     }
 
@@ -249,6 +253,20 @@ impl FaasClient {
     /// many tasks were actually cancelled (vs merely drained).
     fn cancel_outstanding(&self, tasks: &[TaskId], pending: &[usize]) -> usize {
         pending.iter().filter(|&&i| self.service.cancel(tasks[i])).count()
+    }
+
+    /// Span for a finished (or aborted) gather on the client track.
+    fn trace_gather(&self, t0: Instant, total: usize, harvested: usize, outcome: &str) {
+        if crate::trace::enabled() {
+            crate::trace::span_between(
+                crate::trace::kind::CLIENT_GATHER,
+                t0,
+                Instant::now(),
+                None,
+                "client",
+                format!("{outcome}: {harvested}/{total} results"),
+            );
+        }
     }
 }
 

@@ -307,9 +307,27 @@ fn spawn_worker(
                 // site that never came up — the router's health probe
                 // reads this
                 metrics.worker_init_failed();
+                if crate::trace::enabled() {
+                    crate::trace::instant(
+                        crate::trace::kind::WORKER_INIT_FAIL,
+                        None,
+                        &name,
+                        e,
+                    );
+                }
                 return;
             }
             metrics.worker_started(t0.elapsed().as_secs_f64());
+            if crate::trace::enabled() {
+                crate::trace::span_between(
+                    crate::trace::kind::WORKER_STARTUP,
+                    t0,
+                    Instant::now(),
+                    None,
+                    &name,
+                    String::new(),
+                );
+            }
             active_workers.fetch_add(1, Ordering::SeqCst);
             let mut profile = WorkerProfile::new(name.clone());
 
@@ -322,6 +340,9 @@ fn spawn_worker(
                     Some(meta) => {
                         let mut ran_ok = false;
                         if let Some((handler, payload)) = service.claim(meta.id, &name) {
+                            // kernel-level spans attach to this task while
+                            // the handler runs on this thread
+                            crate::trace::set_current_task(Some(meta.id));
                             // a panicking handler must fail the task, not
                             // wedge it in Running and kill the worker
                             let outcome = std::panic::catch_unwind(
@@ -335,6 +356,7 @@ fn spawn_worker(
                                     .unwrap_or_else(|| "handler panicked".into());
                                 Err(format!("handler panicked: {msg}"))
                             });
+                            crate::trace::set_current_task(None);
                             // an all-failure batch envelope is Ok at the
                             // task level but proves nothing was compiled
                             ran_ok = match &outcome {

@@ -151,9 +151,34 @@ pub fn native_fit_handler() -> Handler {
         let cache =
             ctx.get_mut::<ScratchCache>(SCRATCH_KEY).ok_or("worker missing scratch cache")?;
         let mut scratch = cache.lru.take(model.class.name.as_str()).unwrap_or_default();
+        scratch.reset_phase_timers();
         let t0 = Instant::now();
         let out = native_hypotest(&model, &mut scratch, 1.0);
         let fit_seconds = t0.elapsed().as_secs_f64();
+        if crate::trace::enabled() {
+            // Kernel phase spans: the fused sweep and the Cholesky/Newton
+            // solve, laid out back-to-back inside the fit window.
+            let task = crate::trace::current_task();
+            let fit_t0_us = crate::trace::us_since_epoch(t0);
+            let sweep_us = scratch.sweep_ns / 1_000;
+            let solve_us = scratch.solve_ns / 1_000;
+            crate::trace::span_at(
+                crate::trace::kind::KERNEL_SWEEP,
+                fit_t0_us,
+                sweep_us,
+                task,
+                &ctx.worker_name,
+                format!("class {}", model.class.name),
+            );
+            crate::trace::span_at(
+                crate::trace::kind::KERNEL_SOLVE,
+                fit_t0_us + sweep_us,
+                solve_us,
+                task,
+                &ctx.worker_name,
+                format!("class {}", model.class.name),
+            );
+        }
         let cache =
             ctx.get_mut::<ScratchCache>(SCRATCH_KEY).ok_or("worker missing scratch cache")?;
         cache.lru.put(model.class.name.clone(), scratch);

@@ -91,6 +91,18 @@ pub struct Snapshot {
     pub total_service_s: f64,
     pub mean_worker_startup_s: f64,
     pub mean_batch_size: f64,
+    /// wait-time quantiles from the accumulator's log-bucketed histogram
+    pub p50_wait_s: f64,
+    pub p95_wait_s: f64,
+    pub p99_wait_s: f64,
+    /// service-time quantiles
+    pub p50_service_s: f64,
+    pub p95_service_s: f64,
+    pub p99_service_s: f64,
+    /// worker-startup quantiles
+    pub p50_worker_startup_s: f64,
+    pub p95_worker_startup_s: f64,
+    pub p99_worker_startup_s: f64,
 }
 
 impl Metrics {
@@ -246,6 +258,15 @@ impl Metrics {
             total_service_s: g.service.mean() * g.service.count() as f64,
             mean_worker_startup_s: if g.startup.count() > 0 { g.startup.mean() } else { 0.0 },
             mean_batch_size: if g.batch_size.count() > 0 { g.batch_size.mean() } else { 0.0 },
+            p50_wait_s: g.wait.p50(),
+            p95_wait_s: g.wait.p95(),
+            p99_wait_s: g.wait.p99(),
+            p50_service_s: g.service.p50(),
+            p95_service_s: g.service.p95(),
+            p99_service_s: g.service.p99(),
+            p50_worker_startup_s: g.startup.p50(),
+            p95_worker_startup_s: g.startup.p95(),
+            p99_worker_startup_s: g.startup.p99(),
         }
     }
 }
@@ -298,6 +319,15 @@ impl Snapshot {
             ("total_service_s", Json::num(self.total_service_s)),
             ("mean_worker_startup_s", Json::num(self.mean_worker_startup_s)),
             ("mean_batch_size", Json::num(self.mean_batch_size)),
+            ("p50_wait_s", Json::num(self.p50_wait_s)),
+            ("p95_wait_s", Json::num(self.p95_wait_s)),
+            ("p99_wait_s", Json::num(self.p99_wait_s)),
+            ("p50_service_s", Json::num(self.p50_service_s)),
+            ("p95_service_s", Json::num(self.p95_service_s)),
+            ("p99_service_s", Json::num(self.p99_service_s)),
+            ("p50_worker_startup_s", Json::num(self.p50_worker_startup_s)),
+            ("p95_worker_startup_s", Json::num(self.p95_worker_startup_s)),
+            ("p99_worker_startup_s", Json::num(self.p99_worker_startup_s)),
         ])
     }
 }
@@ -324,6 +354,13 @@ mod tests {
         assert!((s.mean_service_s - 1.5).abs() < 1e-12);
         assert!((s.total_service_s - 3.0).abs() < 1e-12);
         assert!((s.mean_worker_startup_s - 0.5).abs() < 1e-12);
+        // log-bucketed quantiles bracket the pushed service times (1 s, 2 s)
+        assert!(s.p50_service_s >= 0.7 && s.p50_service_s <= 1.4, "{}", s.p50_service_s);
+        assert!(s.p99_service_s >= 1.5 && s.p99_service_s <= 2.8, "{}", s.p99_service_s);
+        assert!(s.p95_wait_s > 0.0);
+        let j = s.to_json();
+        assert_eq!(j.get("p99_service_s").unwrap().as_f64(), Some(s.p99_service_s));
+        assert_eq!(j.get("p50_wait_s").unwrap().as_f64(), Some(s.p50_wait_s));
     }
 
     #[test]

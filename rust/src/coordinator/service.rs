@@ -136,6 +136,17 @@ impl Service {
         id
     }
 
+    /// Trace-track label for an endpoint (its registered name).
+    fn endpoint_label(&self, id: EndpointId) -> String {
+        self.state
+            .lock()
+            .unwrap()
+            .endpoint_names
+            .get(&id)
+            .cloned()
+            .unwrap_or_else(|| format!("endpoint-{id}"))
+    }
+
     pub fn deregister_endpoint(&self, id: EndpointId) {
         let queue = self.state.lock().unwrap().endpoints.remove(&id);
         if let Some(q) = queue {
@@ -190,7 +201,7 @@ impl Service {
         let mut payload = payload;
         let mut retrying = false;
         loop {
-            let decision = {
+            let (decision, strategy) = {
                 let mut guard = self.router.lock().unwrap();
                 let router = guard
                     .as_mut()
@@ -201,14 +212,41 @@ impl Service {
                 if !events.is_empty() {
                     self.metrics.health_events(events.quarantined, events.readmitted);
                 }
-                decision
+                (decision, router.strategy_name())
             };
+            if crate::trace::enabled() {
+                let label = self.endpoint_label(decision.endpoint);
+                crate::trace::instant(
+                    crate::trace::kind::ROUTE_DECIDE,
+                    None,
+                    &label,
+                    format!(
+                        "strategy {strategy} key {key} warm_hit {} spillover {} \
+                         quarantine_diverted {}",
+                        decision.warm_hit, decision.spillover, decision.quarantine_diverted
+                    ),
+                );
+                if decision.spillover {
+                    crate::trace::instant(
+                        crate::trace::kind::ROUTE_SPILL,
+                        None,
+                        &label,
+                        format!("key {key}"),
+                    );
+                }
+            }
             if retrying {
                 // count the retry only now that a surviving endpoint was
                 // actually re-decided — losing the *last* target is a
                 // failed submission, not a recovery
                 self.metrics.route_retry();
                 retrying = false;
+                crate::trace::instant(
+                    crate::trace::kind::ROUTE_RETRY,
+                    None,
+                    &self.endpoint_label(decision.endpoint),
+                    format!("key {key}"),
+                );
             }
             match self.submit_with_meta(decision.endpoint, function, payload, key.clone(), weight)
             {
@@ -279,6 +317,14 @@ impl Service {
         let mut rec = TaskRecord::new(id, function, endpoint, payload);
         rec.state = TaskState::Pending;
         g.tasks.insert(id, rec);
+        let trace_label = if crate::trace::enabled() {
+            Some((
+                g.endpoint_names.get(&endpoint).cloned().unwrap_or_else(|| format!("endpoint-{endpoint}")),
+                affinity_key.clone(),
+            ))
+        } else {
+            None
+        };
         drop(g);
         let accepted = queue
             .push_meta(TaskMeta { id, function, affinity_key, priority, weight, enqueued: Instant::now() });
@@ -306,6 +352,14 @@ impl Service {
         // routed retry) must not leave a phantom in-flight task in the
         // submitted-vs-finished ledger
         self.metrics.task_submitted();
+        if let Some((label, key)) = trace_label {
+            crate::trace::instant(
+                crate::trace::kind::TASK_SUBMIT,
+                Some(id),
+                &label,
+                format!("function {function} key {key}"),
+            );
+        }
         Ok(id)
     }
 
@@ -365,22 +419,34 @@ impl Service {
     /// and payload.
     pub fn claim(&self, id: TaskId, worker: &str) -> Option<(Handler, Json)> {
         let mut g = self.state.lock().unwrap();
-        let (handler, payload, endpoint) = {
+        let now = Instant::now();
+        let (handler, payload, endpoint, submitted_at) = {
             let function = {
                 let t = g.tasks.get_mut(&id)?;
                 if t.state != TaskState::Pending {
                     return None;
                 }
                 t.state = TaskState::Running;
-                t.started_at = Some(Instant::now());
+                t.started_at = Some(now);
                 t.worker = Some(worker.to_string());
                 t.function
             };
             let handler = g.functions.get(&function)?.handler.clone();
             let t = g.tasks.get(&id).unwrap();
-            (handler, t.payload.clone(), t.endpoint)
+            (handler, t.payload.clone(), t.endpoint, t.submitted_at)
         };
         *g.running.entry(endpoint).or_insert(0) += 1;
+        drop(g);
+        if crate::trace::enabled() {
+            crate::trace::span_between(
+                crate::trace::kind::TASK_WAIT,
+                submitted_at,
+                now,
+                Some(id),
+                worker,
+                String::new(),
+            );
+        }
         Some((handler, payload))
     }
 
@@ -389,7 +455,7 @@ impl Service {
     /// stored: nobody will ever drain its result.
     pub fn complete(&self, id: TaskId, outcome: Result<Json, String>) {
         let mut g = self.state.lock().unwrap();
-        let (ok, wait_s, service_s, abandoned) = {
+        let (ok, wait_s, service_s, abandoned, trace_times) = {
             let Some(t) = g.tasks.get_mut(&id) else { return };
             t.finished_at = Some(Instant::now());
             let ok = outcome.is_ok();
@@ -398,11 +464,17 @@ impl Service {
                 Ok(v) => TaskOutcome::Ok(v),
                 Err(e) => TaskOutcome::Err(e),
             });
+            let trace_times = if crate::trace::enabled() {
+                Some((t.started_at, t.finished_at, t.worker.clone()))
+            } else {
+                None
+            };
             (
                 ok,
                 t.wait_seconds().unwrap_or(0.0),
                 t.service_seconds().unwrap_or(0.0),
                 t.abandoned,
+                trace_times,
             )
         };
         let endpoint = g.tasks.get(&id).map(|t| t.endpoint);
@@ -422,6 +494,30 @@ impl Service {
             // flight) and skew the latency accumulators with a discarded
             // outcome
             self.metrics.task_finished(ok, wait_s, service_s);
+        }
+        if let Some((started, finished, worker)) = trace_times {
+            let track = worker.unwrap_or_else(|| "worker".to_string());
+            if let (Some(t0), Some(t1)) = (started, finished) {
+                crate::trace::span_between(
+                    crate::trace::kind::TASK_EXECUTE,
+                    t0,
+                    t1,
+                    Some(id),
+                    &track,
+                    String::new(),
+                );
+            }
+            if !abandoned {
+                // a result instant per ledger-counted completion — abandoned
+                // outcomes were dropped, their task.cancel instant already
+                // closed the lifecycle
+                crate::trace::instant(
+                    crate::trace::kind::TASK_RESULT,
+                    Some(id),
+                    &track,
+                    if ok { "ok" } else { "err" }.to_string(),
+                );
+            }
         }
         self.results.notify_all();
     }
@@ -459,6 +555,12 @@ impl Service {
                     q.discard(id);
                 }
                 self.metrics.task_cancelled();
+                crate::trace::instant(
+                    crate::trace::kind::TASK_CANCEL,
+                    Some(id),
+                    "client",
+                    "pending".to_string(),
+                );
                 self.results.notify_all();
                 true
             }
@@ -470,6 +572,12 @@ impl Service {
                 t.abandoned = true;
                 drop(g);
                 self.metrics.task_cancelled();
+                crate::trace::instant(
+                    crate::trace::kind::TASK_CANCEL,
+                    Some(id),
+                    "client",
+                    "running (abandoned)".to_string(),
+                );
                 true
             }
             TaskState::Success | TaskState::Failed => {

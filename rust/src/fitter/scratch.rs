@@ -75,6 +75,10 @@ pub struct FitScratch {
     // parameter box (depends only on the class)
     pub(crate) lo: Vec<f64>, // P
     pub(crate) hi: Vec<f64>, // P
+    // kernel phase timers (accumulated only while tracing is enabled):
+    // fused sweep = eval_expected, solve = Cholesky/Newton step
+    pub sweep_ns: u64,
+    pub solve_ns: u64,
 }
 
 impl FitScratch {
@@ -154,6 +158,13 @@ impl FitScratch {
         &self.grad
     }
 
+    /// Zero the kernel phase timers (called once per fit so the traced
+    /// sweep/solve spans cover exactly that fit).
+    pub fn reset_phase_timers(&mut self) {
+        self.sweep_ns = 0;
+        self.solve_ns = 0;
+    }
+
     /// Expand the latest reduced Fisher system back to the full padded
     /// layout, with seed-style identity pinning on fixed rows (supports
     /// the compat `grad_fisher` wrapper and tests).
@@ -195,6 +206,18 @@ fn effective_into(m: &DenseModel, s: &mut FitScratch, theta: &[f64]) {
 /// the alpha interpolation and every Jacobian row accumulate as contiguous
 /// axpy sweeps over `bin_block`-sized tiles.
 pub(crate) fn eval_expected(m: &DenseModel, s: &mut FitScratch, theta: &[f64], with_jac: bool) {
+    let t0 = if crate::trace::enabled() {
+        Some(std::time::Instant::now())
+    } else {
+        None
+    };
+    eval_expected_inner(m, s, theta, with_jac);
+    if let Some(t0) = t0 {
+        s.sweep_ns += t0.elapsed().as_nanos() as u64;
+    }
+}
+
+fn eval_expected_inner(m: &DenseModel, s: &mut FitScratch, theta: &[f64], with_jac: bool) {
     effective_into(m, s, theta);
     let c = &m.class;
     let (b_, a_, f_) = (c.n_bins, c.n_alpha, c.n_free);
@@ -502,6 +525,19 @@ pub(crate) fn grad_fisher_reduced(
 /// (zero for fixed parameters). Returns false when the damped system is
 /// not positive definite (caller escalates the damping).
 pub(crate) fn solve_step(s: &mut FitScratch, n_params: usize, lam: f64) -> bool {
+    let t0 = if crate::trace::enabled() {
+        Some(std::time::Instant::now())
+    } else {
+        None
+    };
+    let ok = solve_step_inner(s, n_params, lam);
+    if let Some(t0) = t0 {
+        s.solve_ns += t0.elapsed().as_nanos() as u64;
+    }
+    ok
+}
+
+fn solve_step_inner(s: &mut FitScratch, n_params: usize, lam: f64) -> bool {
     let n = s.act.len();
     s.chol[..n * n].copy_from_slice(&s.fisher_r[..n * n]);
     for k in 0..n {

@@ -30,4 +30,5 @@ pub mod pallet;
 pub mod runtime;
 pub mod scheduler;
 pub mod sim;
+pub mod trace;
 pub mod util;

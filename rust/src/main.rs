@@ -41,23 +41,38 @@ COMMANDS:
                    [--stall-after SECS] (router health: quarantine an endpoint
                    making no completion progress for SECS; default 30)
                    [--bench-out BENCH_fit.json] (machine-readable throughput)
+                   [--trace-out trace.json] (task-lifecycle trace: Chrome
+                   trace-event JSON, open at ui.perfetto.dev)
+                   [--metrics-out metrics.json] (full counter/percentile
+                   snapshot, schema pyhf-faas/metrics/v1)
   hypotest         --pallet <dir> --patch <name> [--backend pjrt|native]
   simulate         --pallet <dir> [--blocks 1,2,4,8] [--trials 10]
                    [--sample N] (replays measured fits on the paper topology)
+                   [--trace-out trace.json] (synthesize a lifecycle trace
+                   from the two-site chaos replay) [--seed N]
   upper-limit      --pallet <dir> --patch <name> [--points 16]
   toys             --pallet <dir> --patch <name> [--n-toys 300] [--seed 42]
+  validate         <file.json> (schema-check a trace/metrics/bench artifact)
   info             [--artifacts <dir>]
+
+GLOBAL OPTIONS:
+  --log-json       emit structured JSONL log records on stderr
 ";
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let parsed = match Args::parse(args, &["verbose", "help"]) {
+    let parsed = match Args::parse(args, &["verbose", "help", "log-json"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}\n{USAGE}");
             std::process::exit(2);
         }
     };
+    if parsed.flag("log-json") {
+        pyhf_faas::util::logging::set_sink(std::sync::Arc::new(
+            pyhf_faas::util::logging::JsonSink,
+        ));
+    }
     if parsed.flag("help") || parsed.command.is_none() {
         println!("{USAGE}");
         return;
@@ -70,6 +85,7 @@ fn main() {
         "simulate" => cmd_simulate(&parsed),
         "upper-limit" => cmd_upper_limit(&parsed),
         "toys" => cmd_toys(&parsed),
+        "validate" => cmd_validate(&parsed),
         "info" => cmd_info(&parsed),
         other => Err(format!("unknown command '{other}'\n{USAGE}")),
     };
@@ -245,6 +261,11 @@ fn cmd_scan(args: &Args) -> Result<(), String> {
         None => None,
     };
 
+    // tracing must be on before the endpoints spawn so worker startup and
+    // the first route decisions land in the timeline
+    if args.get("trace-out").is_some() {
+        pyhf_faas::trace::enable();
+    }
     let svc = Service::new();
     let (endpoints, f) = start_endpoints(
         &svc,
@@ -303,6 +324,11 @@ fn cmd_scan(args: &Args) -> Result<(), String> {
         "  batcher: batches {} ({} fits, {} deduped)",
         m.batches, m.batched_tasks, m.dedup_hits
     );
+    println!(
+        "  latency: wait p50/p95/p99 {:.3}/{:.3}/{:.3} s | fit p50/p95/p99 {:.3}/{:.3}/{:.3} s",
+        m.p50_wait_s, m.p95_wait_s, m.p99_wait_s,
+        m.p50_service_s, m.p95_service_s, m.p99_service_s
+    );
     if endpoints.len() > 1 {
         println!(
             "  router: strategy {} | routed {} | {} warm ({:.0}%) | {} spillovers | {} retries",
@@ -344,8 +370,28 @@ fn cmd_scan(args: &Args) -> Result<(), String> {
         report.write(std::path::Path::new(bench_out)).map_err(|e| e.to_string())?;
         println!("  wrote {bench_out}");
     }
+    if let Some(metrics_out) = args.get("metrics-out") {
+        let mut report = pyhf_faas::bench::MetricsReport::new("scan", m.clone());
+        for ep in &endpoints {
+            report.endpoints.push((ep.name.clone(), ep.metrics_snapshot()));
+        }
+        report.write(std::path::Path::new(metrics_out))?;
+        println!("  wrote {metrics_out}");
+    }
     for ep in endpoints {
         ep.shutdown();
+    }
+    if let Some(trace_out) = args.get("trace-out") {
+        // drain after shutdown so late worker events are in the timeline
+        let trace = pyhf_faas::trace::drain();
+        pyhf_faas::trace::disable();
+        let report = pyhf_faas::trace::report::OverheadReport::from_trace(&trace);
+        pyhf_faas::trace::chrome::write(std::path::Path::new(trace_out), &trace)?;
+        println!("  trace: {} events -> {trace_out} (open at ui.perfetto.dev)", trace.events.len());
+        println!("  {}", report.summary_line());
+        if trace.dropped > 0 {
+            println!("  trace: {} events dropped to buffer bounds", trace.dropped);
+        }
     }
     Ok(())
 }
@@ -442,6 +488,21 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
     for (b, s) in sim::block_scaling(&scaled, &blocks, trials, 7) {
         println!("  max_blocks = {b:>2}: wall {:>8.1} ± {:>6.1} s", s.mean, s.std);
     }
+
+    if let Some(trace_out) = args.get("trace-out") {
+        // synthesize a lifecycle trace from the two-site chaos replay: the
+        // same event schema as a live `scan --trace-out`, with simulated
+        // seconds on the clock
+        let seed = args.get_u64("seed", 42)?;
+        let trace = sim::chaos_trace(seed);
+        let report = pyhf_faas::trace::report::OverheadReport::from_trace(&trace);
+        pyhf_faas::trace::chrome::write(std::path::Path::new(trace_out), &trace)?;
+        println!(
+            "chaos trace (seed {seed}): {} events -> {trace_out} (open at ui.perfetto.dev)",
+            trace.events.len()
+        );
+        println!("  {}", report.summary_line());
+    }
     Ok(())
 }
 
@@ -499,6 +560,33 @@ fn cmd_toys(args: &Args) -> Result<(), String> {
     println!("  qmu_obs        = {:.4}", toys.qmu_obs);
     println!("  CLs (toys)     = {:.4}  (CLsb {:.4} / CLb {:.4})", toys.cls_obs, toys.clsb, toys.clb);
     println!("  CLs (asympt.)  = {:.4}", asym.cls_obs);
+    Ok(())
+}
+
+/// Schema-check an emitted artifact by its top-level `schema` tag. CI runs
+/// this against trace/metrics/bench JSON before uploading them.
+fn cmd_validate(args: &Args) -> Result<(), String> {
+    let path = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .or_else(|| args.get("file"))
+        .ok_or("usage: pyhf-faas validate <file.json>")?;
+    let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+    let doc = json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+    let schema = doc
+        .get("schema")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| format!("{path}: missing top-level 'schema' tag"))?;
+    match schema {
+        pyhf_faas::trace::chrome::SCHEMA => pyhf_faas::trace::chrome::validate(&doc),
+        pyhf_faas::bench::metricsjson::SCHEMA => pyhf_faas::bench::metricsjson::validate(&doc),
+        pyhf_faas::bench::fitjson::SCHEMA => pyhf_faas::bench::fitjson::validate(&doc),
+        pyhf_faas::bench::routejson::SCHEMA => pyhf_faas::bench::routejson::validate(&doc),
+        other => Err(format!("{path}: unknown schema '{other}'")),
+    }
+    .map_err(|e| format!("{path}: {e}"))?;
+    println!("{path}: valid ({schema})");
     Ok(())
 }
 

@@ -183,6 +183,9 @@ enum State {
 #[derive(Debug)]
 pub struct HealthMonitor {
     cfg: HealthConfig,
+    /// trace label for lifecycle events (the router sets the endpoint
+    /// name/id; empty = anonymous monitor, e.g. in unit tests)
+    label: String,
     state: State,
     /// the NEXT quarantine sentence (escalated at every quarantine entry,
     /// reset only by a progress-backed readmission)
@@ -211,6 +214,7 @@ impl HealthMonitor {
         HealthMonitor {
             backoff: cfg.backoff_base,
             cfg,
+            label: String::new(),
             state: State::Healthy,
             last_completed: 0,
             last_progress: now,
@@ -219,6 +223,19 @@ impl HealthMonitor {
             forgiven_completed: 0,
             forgiven_failed: 0,
             forgiven_init_failures: 0,
+        }
+    }
+
+    /// Label this monitor's trace events with the endpoint it watches.
+    pub fn set_label(&mut self, label: impl Into<String>) {
+        self.label = label.into();
+    }
+
+    fn trace_track(&self) -> &str {
+        if self.label.is_empty() {
+            "endpoint"
+        } else {
+            &self.label
         }
     }
 
@@ -339,10 +356,20 @@ impl HealthMonitor {
                         // escalated backoff, so a wedged site whose stall
                         // outlasts the probation window still backs off
                         // exponentially across flaps
-                        if completed > self.forgiven_completed {
+                        let progressed = completed > self.forgiven_completed;
+                        if progressed {
                             self.backoff = self.cfg.backoff_base;
                         }
                         events.readmitted += 1;
+                        if crate::trace::enabled() {
+                            let how = if progressed { "with progress" } else { "on silence" };
+                            crate::trace::instant(
+                                crate::trace::kind::HEALTH_READMIT,
+                                None,
+                                self.trace_track(),
+                                format!("readmitted {how}"),
+                            );
+                        }
                     }
                     false
                 }
@@ -354,10 +381,19 @@ impl HealthMonitor {
 
     fn enter_quarantine(&mut self, now: Instant, events: &mut HealthEvents) {
         self.state = State::Quarantined { until: now + self.backoff };
+        let sentence = self.backoff;
         // escalate the NEXT sentence now; only a progress-backed
         // readmission resets it
         self.backoff = (self.backoff * 2).min(self.cfg.backoff_max);
         events.quarantined += 1;
+        if crate::trace::enabled() {
+            crate::trace::instant(
+                crate::trace::kind::HEALTH_QUARANTINE,
+                None,
+                self.trace_track(),
+                format!("sentence {:.3}s", sentence.as_secs_f64()),
+            );
+        }
     }
 
     /// Current quarantine status without a fresh sample.

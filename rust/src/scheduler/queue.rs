@@ -77,6 +77,14 @@ impl SchedQueue {
         if self.closed.load(Ordering::SeqCst) {
             return false;
         }
+        if crate::trace::enabled() {
+            crate::trace::instant(
+                crate::trace::kind::TASK_ENQUEUE,
+                Some(meta.id),
+                "queue",
+                format!("priority {} weight {}", meta.priority, meta.weight),
+            );
+        }
         g.queued_weight += meta.weight.max(1);
         g.policy.push(meta);
         drop(g);

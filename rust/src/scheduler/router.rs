@@ -435,6 +435,7 @@ impl Router {
     pub fn with_health_config(mut self, cfg: HealthConfig) -> Router {
         for t in &mut self.targets {
             t.monitor = HealthMonitor::new(cfg.clone());
+            t.monitor.set_label(format!("endpoint-{}", t.endpoint));
         }
         self.health_cfg = cfg;
         self
@@ -469,12 +470,16 @@ impl Router {
         probe: Arc<dyn EndpointProbe>,
         signal: Option<Arc<RouterScaleSignal>>,
     ) {
+        let mut monitor = HealthMonitor::new(self.health_cfg.clone());
+        // the router only knows endpoint ids, not registered names, so
+        // health lifecycle events carry the id-based label
+        monitor.set_label(format!("endpoint-{endpoint}"));
         self.targets.push(Target {
             endpoint,
             site,
             probe,
             warm: LruSet::new(self.warm_keys_capacity),
-            monitor: HealthMonitor::new(self.health_cfg.clone()),
+            monitor,
             signal,
         });
     }

@@ -11,6 +11,6 @@ pub use cluster::{
     SimTask, SiteFault, SiteSpec, Topology,
 };
 pub use replay::{
-    block_scaling, calibrate_multiplier, replay_table1_row, table1_chaos_plan,
+    block_scaling, calibrate_multiplier, chaos_trace, replay_table1_row, table1_chaos_plan,
     table1_mixed_workload, two_site_table1, PaperRow, ReplayRow, PAPER_TABLE1,
 };

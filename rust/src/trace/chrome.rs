@@ -1,0 +1,220 @@
+//! Chrome-trace-event export: serialize a drained [`Trace`] as the JSON
+//! object format Perfetto / `chrome://tracing` load directly, plus the
+//! schema validator CI runs against emitted trace files.
+//!
+//! Layout: one process (pid 1), one timeline row (tid) per distinct
+//! `track` label (endpoint, worker, "client", "queue", "sim"), named via
+//! `thread_name` metadata events. Spans are `ph: "X"` complete events,
+//! lifecycle edges are `ph: "i"` thread-scoped instants; timestamps are
+//! microseconds since the trace epoch. The derived §4 overhead split is
+//! embedded under `"overhead"` (see [`super::report`]).
+
+use std::path::Path;
+
+use crate::trace::report::OverheadReport;
+use crate::trace::{Phase, Trace};
+use crate::util::json::{self, Json};
+
+/// Schema tag checked by CI and by [`validate`].
+pub const SCHEMA: &str = "pyhf-faas/trace/v1";
+
+/// Event category shown in the viewer: the kind's prefix
+/// (`task` / `route` / `health` / `worker` / `kernel` / `client`).
+fn category(kind: &str) -> &str {
+    kind.split('.').next().unwrap_or("trace")
+}
+
+/// Build the full Chrome-trace document for a drained trace.
+pub fn chrome_doc(trace: &Trace) -> Json {
+    // one timeline row per track, in order of first appearance
+    let mut tracks: Vec<&str> = Vec::new();
+    for e in &trace.events {
+        if !tracks.iter().any(|t| *t == e.track.as_str()) {
+            tracks.push(e.track.as_str());
+        }
+    }
+    let tid_of = |track: &str| tracks.iter().position(|t| *t == track).unwrap_or(0) + 1;
+
+    let mut events = Vec::with_capacity(trace.events.len() + tracks.len());
+    for (i, track) in tracks.iter().enumerate() {
+        events.push(Json::obj(vec![
+            ("name", Json::str("thread_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(1.0)),
+            ("tid", Json::num((i + 1) as f64)),
+            ("args", Json::obj(vec![("name", Json::str(*track))])),
+        ]));
+    }
+    for e in &trace.events {
+        let mut args = Vec::new();
+        if let Some(id) = e.task {
+            args.push(("task", Json::num(id as f64)));
+        }
+        if !e.detail.is_empty() {
+            args.push(("detail", Json::str(e.detail.clone())));
+        }
+        let mut fields = vec![
+            ("name", Json::str(e.kind)),
+            ("cat", Json::str(category(e.kind))),
+            (
+                "ph",
+                Json::str(match e.phase {
+                    Phase::Span => "X",
+                    Phase::Instant => "i",
+                }),
+            ),
+            ("ts", Json::num(e.ts_us as f64)),
+            ("pid", Json::num(1.0)),
+            ("tid", Json::num(tid_of(&e.track) as f64)),
+        ];
+        match e.phase {
+            Phase::Span => fields.push(("dur", Json::num(e.dur_us as f64))),
+            Phase::Instant => fields.push(("s", Json::str("t"))),
+        }
+        fields.push(("args", Json::obj(args)));
+        events.push(Json::obj(fields));
+    }
+
+    Json::obj(vec![
+        ("schema", Json::str(SCHEMA)),
+        ("displayTimeUnit", Json::str("ms")),
+        ("dropped", Json::num(trace.dropped as f64)),
+        ("overhead", OverheadReport::from_trace(trace).to_json()),
+        ("traceEvents", Json::Arr(events)),
+    ])
+}
+
+/// Serialize `trace` to `path` (validated, pretty-printed).
+pub fn write(path: &Path, trace: &Trace) -> Result<(), String> {
+    let doc = chrome_doc(trace);
+    validate(&doc)?;
+    std::fs::write(path, json::to_string_pretty(&doc))
+        .map_err(|e| format!("write {}: {e}", path.display()))
+}
+
+/// Schema check: the document must be loadable by Perfetto — every event
+/// carries name/ph/pid/tid, spans carry non-negative ts + dur, instants
+/// carry ts — and the embedded overhead report must be well-formed.
+pub fn validate(doc: &Json) -> Result<(), String> {
+    let schema = doc.get("schema").and_then(|v| v.as_str()).ok_or("missing 'schema'")?;
+    if schema != SCHEMA {
+        return Err(format!("schema '{schema}' != '{SCHEMA}'"));
+    }
+    doc.get("dropped").and_then(|v| v.as_f64()).ok_or("missing numeric 'dropped'")?;
+    crate::trace::report::validate(doc.get("overhead").ok_or("missing 'overhead'")?)?;
+    let events =
+        doc.get("traceEvents").and_then(|v| v.as_arr()).ok_or("missing 'traceEvents'")?;
+    for (i, e) in events.iter().enumerate() {
+        e.get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| format!("traceEvents[{i}]: missing 'name'"))?;
+        let ph = e
+            .get("ph")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| format!("traceEvents[{i}]: missing 'ph'"))?;
+        for key in ["pid", "tid"] {
+            e.get(key)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| format!("traceEvents[{i}]: missing numeric '{key}'"))?;
+        }
+        match ph {
+            "M" => {}
+            "i" | "X" => {
+                let ts = e
+                    .get("ts")
+                    .and_then(|v| v.as_f64())
+                    .ok_or_else(|| format!("traceEvents[{i}]: missing numeric 'ts'"))?;
+                if !ts.is_finite() || ts < 0.0 {
+                    return Err(format!("traceEvents[{i}].ts: bad value {ts}"));
+                }
+                if ph == "X" {
+                    let dur = e
+                        .get("dur")
+                        .and_then(|v| v.as_f64())
+                        .ok_or_else(|| format!("traceEvents[{i}]: missing numeric 'dur'"))?;
+                    if !dur.is_finite() || dur < 0.0 {
+                        return Err(format!("traceEvents[{i}].dur: bad value {dur}"));
+                    }
+                }
+            }
+            other => return Err(format!("traceEvents[{i}]: unknown phase '{other}'")),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{kind, Event};
+
+    fn sample_trace() -> Trace {
+        Trace {
+            events: vec![
+                Event {
+                    kind: kind::TASK_SUBMIT,
+                    phase: Phase::Instant,
+                    ts_us: 0,
+                    dur_us: 0,
+                    task: Some(1),
+                    track: "site-a".into(),
+                    detail: "function 0".into(),
+                },
+                Event {
+                    kind: kind::TASK_WAIT,
+                    phase: Phase::Span,
+                    ts_us: 0,
+                    dur_us: 120,
+                    task: Some(1),
+                    track: "site-a".into(),
+                    detail: String::new(),
+                },
+                Event {
+                    kind: kind::TASK_EXECUTE,
+                    phase: Phase::Span,
+                    ts_us: 120,
+                    dur_us: 480,
+                    task: Some(1),
+                    track: "site-a/w0".into(),
+                    detail: String::new(),
+                },
+            ],
+            dropped: 0,
+        }
+    }
+
+    #[test]
+    fn doc_round_trips_and_validates() {
+        let doc = chrome_doc(&sample_trace());
+        validate(&doc).unwrap();
+        let parsed = json::parse(&json::to_string_pretty(&doc)).unwrap();
+        validate(&parsed).unwrap();
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 tracks -> 2 thread_name metadata events + 3 payload events
+        assert_eq!(events.len(), 5);
+        assert_eq!(events[0].get("ph").unwrap().as_str(), Some("M"));
+        let exec = events.iter().find(|e| e.get("name").unwrap().as_str() == Some("task.execute"));
+        let exec = exec.unwrap();
+        assert_eq!(exec.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(exec.get("dur").unwrap().as_f64(), Some(480.0));
+        assert_eq!(exec.get("cat").unwrap().as_str(), Some("task"));
+    }
+
+    #[test]
+    fn validate_rejects_malformed_docs() {
+        let doc = json::parse(r#"{"schema": "nope"}"#).unwrap();
+        assert!(validate(&doc).is_err());
+        let mut doc = chrome_doc(&sample_trace());
+        // corrupt one span's duration
+        if let Some(events) = doc.get_mut("traceEvents") {
+            if let Json::Arr(list) = events {
+                for e in list.iter_mut() {
+                    if e.get("ph").and_then(|v| v.as_str()) == Some("X") {
+                        e.set("dur", Json::num(f64::NAN));
+                    }
+                }
+            }
+        }
+        assert!(validate(&doc).is_err());
+    }
+}

@@ -1,0 +1,319 @@
+//! Task-lifecycle tracing: bounded per-thread event buffers feeding an
+//! exportable Chrome-trace-event timeline (see `docs/OBSERVABILITY.md`).
+//!
+//! Tracing is off by default and costs one relaxed atomic load per probe
+//! site when disabled ([`enabled`]), so instrumentation can sit on the fit
+//! hot path (the kernel phase timers in `fitter::scratch`). When enabled,
+//! events carry microsecond timestamps relative to a process-wide epoch
+//! and land in a bounded buffer owned by the emitting thread (one
+//! uncontended lock per event; overflow is counted, never blocking).
+//!
+//! The DES replay (`sim::replay::chaos_trace`) synthesizes the same event
+//! schema from simulated time by constructing [`Event`]s directly, so
+//! simulated and live traces open side by side in the same viewer.
+
+pub mod chrome;
+pub mod report;
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Event kinds shared by the live wiring, the DES synthesizer, the
+/// overhead report and the schema validator. Instants mark lifecycle
+/// edges; spans cover intervals.
+pub mod kind {
+    // instants
+    pub const TASK_SUBMIT: &str = "task.submit";
+    pub const TASK_ENQUEUE: &str = "task.enqueue";
+    pub const TASK_RESULT: &str = "task.result";
+    pub const TASK_CANCEL: &str = "task.cancel";
+    pub const ROUTE_DECIDE: &str = "route.decide";
+    pub const ROUTE_RETRY: &str = "route.retry";
+    pub const ROUTE_SPILL: &str = "route.spill";
+    pub const HEALTH_QUARANTINE: &str = "health.quarantine";
+    pub const HEALTH_READMIT: &str = "health.readmit";
+    pub const WORKER_INIT_FAIL: &str = "worker.init_fail";
+    // spans
+    pub const TASK_WAIT: &str = "task.wait";
+    pub const TASK_EXECUTE: &str = "task.execute";
+    pub const WORKER_STARTUP: &str = "worker.startup";
+    pub const KERNEL_SWEEP: &str = "kernel.sweep";
+    pub const KERNEL_SOLVE: &str = "kernel.solve";
+    pub const CLIENT_GATHER: &str = "client.gather";
+}
+
+/// Chrome-trace phase of an event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// complete span (`ph: "X"`): `ts_us` start, `dur_us` length
+    Span,
+    /// instant (`ph: "i"`): `ts_us` only
+    Instant,
+}
+
+/// One trace event. All fields are public so the DES can synthesize
+/// events from simulated time without going through the live hub.
+#[derive(Debug, Clone)]
+pub struct Event {
+    /// one of the [`kind`] constants
+    pub kind: &'static str,
+    pub phase: Phase,
+    /// microseconds since the trace epoch
+    pub ts_us: u64,
+    /// span length in microseconds (0 for instants)
+    pub dur_us: u64,
+    /// owning task id, if the event belongs to one task
+    pub task: Option<u64>,
+    /// timeline label: endpoint, worker, "client", "queue", "sim", …
+    pub track: String,
+    /// free-form annotation (strategy, warm/spill flags, error text, …)
+    pub detail: String,
+}
+
+/// A drained set of events plus how many were dropped to buffer bounds.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    /// events sorted by start timestamp
+    pub events: Vec<Event>,
+    pub dropped: u64,
+}
+
+impl Trace {
+    /// Events of one kind, in timestamp order.
+    pub fn of_kind(&self, kind: &str) -> Vec<&Event> {
+        self.events.iter().filter(|e| e.kind == kind).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// hub state
+// ---------------------------------------------------------------------------
+
+/// Per-thread buffer bound: beyond this, events are counted as dropped
+/// instead of growing without limit (~64k events ≈ a 250k-point scan's
+/// lifecycle instants on one worker thread).
+const BUFFER_CAP: usize = 1 << 16;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+struct Buffer {
+    events: Vec<Event>,
+    dropped: u64,
+}
+
+fn registry() -> &'static Mutex<Vec<Arc<Mutex<Buffer>>>> {
+    static REGISTRY: OnceLock<Mutex<Vec<Arc<Mutex<Buffer>>>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    static LOCAL: Arc<Mutex<Buffer>> = {
+        let buf = Arc::new(Mutex::new(Buffer { events: Vec::new(), dropped: 0 }));
+        registry().lock().unwrap().push(buf.clone());
+        buf
+    };
+    static CURRENT_TASK: Cell<u64> = const { Cell::new(u64::MAX) };
+}
+
+/// Process-wide epoch all live timestamps are relative to; pinned at
+/// first use (normally `enable()`).
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Turn tracing on (pins the epoch so every later `Instant` is after it).
+pub fn enable() {
+    epoch();
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+pub fn disable() {
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+/// The cheap probe-site check: one relaxed atomic load.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Microseconds since the trace epoch, now.
+pub fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+/// Microseconds since the trace epoch at `t` (0 if `t` predates it).
+pub fn us_since_epoch(t: Instant) -> u64 {
+    t.checked_duration_since(epoch()).map(|d| d.as_micros() as u64).unwrap_or(0)
+}
+
+// ---------------------------------------------------------------------------
+// current-task context (kernel phase timers run deep below the task layer)
+// ---------------------------------------------------------------------------
+
+/// Mark the task this worker thread is executing (`None` clears), so
+/// kernel-level spans can attach to it without plumbing ids through the
+/// fit call chain.
+pub fn set_current_task(id: Option<u64>) {
+    CURRENT_TASK.with(|c| c.set(id.unwrap_or(u64::MAX)));
+}
+
+/// The task the current thread is executing, if any.
+pub fn current_task() -> Option<u64> {
+    CURRENT_TASK.with(|c| {
+        let v = c.get();
+        if v == u64::MAX {
+            None
+        } else {
+            Some(v)
+        }
+    })
+}
+
+// ---------------------------------------------------------------------------
+// emission
+// ---------------------------------------------------------------------------
+
+/// Push an event into this thread's buffer (no-op while disabled).
+pub fn emit(event: Event) {
+    if !enabled() {
+        return;
+    }
+    LOCAL.with(|buf| {
+        let mut b = buf.lock().unwrap();
+        if b.events.len() >= BUFFER_CAP {
+            b.dropped += 1;
+        } else {
+            b.events.push(event);
+        }
+    });
+}
+
+/// Instant event stamped now.
+pub fn instant(kind: &'static str, task: Option<u64>, track: &str, detail: String) {
+    if !enabled() {
+        return;
+    }
+    emit(Event {
+        kind,
+        phase: Phase::Instant,
+        ts_us: now_us(),
+        dur_us: 0,
+        task,
+        track: track.to_string(),
+        detail,
+    });
+}
+
+/// Span with an explicit start/length (the DES passes sim-derived times).
+pub fn span_at(
+    kind: &'static str,
+    ts_us: u64,
+    dur_us: u64,
+    task: Option<u64>,
+    track: &str,
+    detail: String,
+) {
+    if !enabled() {
+        return;
+    }
+    emit(Event { kind, phase: Phase::Span, ts_us, dur_us, task, track: track.to_string(), detail });
+}
+
+/// Span covering `[t0, t1]` on the live clock.
+pub fn span_between(
+    kind: &'static str,
+    t0: Instant,
+    t1: Instant,
+    task: Option<u64>,
+    track: &str,
+    detail: String,
+) {
+    if !enabled() {
+        return;
+    }
+    let ts = us_since_epoch(t0);
+    let dur = t1.checked_duration_since(t0).map(|d| d.as_micros() as u64).unwrap_or(0);
+    span_at(kind, ts, dur, task, track, detail);
+}
+
+/// Drain every thread's buffer into one timestamp-sorted [`Trace`].
+pub fn drain() -> Trace {
+    let mut events = Vec::new();
+    let mut dropped = 0;
+    for buf in registry().lock().unwrap().iter() {
+        let mut b = buf.lock().unwrap();
+        events.append(&mut b.events);
+        dropped += b.dropped;
+        b.dropped = 0;
+    }
+    events.sort_by_key(|e| (e.ts_us, e.dur_us));
+    Trace { events, dropped }
+}
+
+/// Discard all buffered events (test/bench hygiene).
+pub fn clear() {
+    drain();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// `drain()` is global and destructive — hub tests must not overlap.
+    fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disabled_hub_swallows_events() {
+        let _g = test_lock();
+        disable();
+        instant(kind::TASK_SUBMIT, Some(1), "trace-test-off", String::new());
+        let t = drain();
+        assert!(t.events.iter().all(|e| e.track != "trace-test-off"));
+    }
+
+    #[test]
+    fn events_round_trip_through_the_hub() {
+        let _g = test_lock();
+        enable();
+        instant(kind::TASK_SUBMIT, Some(7), "trace-test-rt", "f 1".to_string());
+        span_at(kind::TASK_WAIT, 10, 5, Some(7), "trace-test-rt", String::new());
+        let t = drain();
+        disable();
+        let mine: Vec<&Event> = t.events.iter().filter(|e| e.track == "trace-test-rt").collect();
+        assert_eq!(mine.len(), 2);
+        let span = mine.iter().find(|e| e.kind == kind::TASK_WAIT).unwrap();
+        assert_eq!(span.phase, Phase::Span);
+        assert_eq!((span.ts_us, span.dur_us), (10, 5));
+        assert_eq!(span.task, Some(7));
+    }
+
+    #[test]
+    fn current_task_context_brackets() {
+        assert_eq!(current_task(), None);
+        set_current_task(Some(42));
+        assert_eq!(current_task(), Some(42));
+        set_current_task(None);
+        assert_eq!(current_task(), None);
+    }
+
+    #[test]
+    fn buffers_are_bounded() {
+        let _g = test_lock();
+        enable();
+        for i in 0..(BUFFER_CAP + 10) {
+            span_at(kind::KERNEL_SWEEP, i as u64, 1, None, "trace-test-cap", String::new());
+        }
+        let t = drain();
+        disable();
+        let mine = t.events.iter().filter(|e| e.track == "trace-test-cap").count();
+        assert!(mine <= BUFFER_CAP);
+        assert!(t.dropped >= 10);
+    }
+}

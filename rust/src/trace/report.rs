@@ -1,0 +1,197 @@
+//! Derived critical-path report: the paper's §4 split of wall time into
+//! orchestration overhead vs pure inference, recomputed from a trace.
+//!
+//! Per task, total lifecycle time is the wait span (submit → claim) plus
+//! the execute span (claim → result). Pure inference time is the summed
+//! kernel phase spans (`kernel.sweep` + `kernel.solve`) when the fused
+//! fitter emitted them, else the whole execute span (PJRT backend, DES
+//! replay); everything else — queueing, routing, dispatch, result
+//! plumbing — is orchestration overhead.
+
+use std::collections::HashMap;
+
+use crate::trace::{kind, Trace};
+use crate::util::json::Json;
+
+/// Per-scan aggregate of the per-task overhead/inference split.
+#[derive(Debug, Clone, Default)]
+pub struct OverheadReport {
+    /// tasks with at least one lifecycle span in the trace
+    pub n_tasks: usize,
+    /// summed per-task lifecycle time (wait + execute), seconds
+    pub total_s: f64,
+    /// summed pure-inference time, seconds
+    pub inference_s: f64,
+    /// summed orchestration overhead, seconds
+    pub overhead_s: f64,
+    /// overhead_s / total_s (0 when the trace has no lifecycle spans)
+    pub overhead_fraction: f64,
+    /// mean of the per-task overhead fractions
+    pub mean_task_overhead_fraction: f64,
+}
+
+impl OverheadReport {
+    pub fn from_trace(trace: &Trace) -> OverheadReport {
+        #[derive(Default)]
+        struct PerTask {
+            wait_us: u64,
+            exec_us: u64,
+            kernel_us: u64,
+        }
+        let mut per: HashMap<u64, PerTask> = HashMap::new();
+        for e in &trace.events {
+            if let Some(id) = e.task {
+                let t = per.entry(id).or_default();
+                match e.kind {
+                    k if k == kind::TASK_WAIT => t.wait_us += e.dur_us,
+                    k if k == kind::TASK_EXECUTE => t.exec_us += e.dur_us,
+                    k if k == kind::KERNEL_SWEEP || k == kind::KERNEL_SOLVE => {
+                        t.kernel_us += e.dur_us
+                    }
+                    _ => {}
+                }
+            }
+        }
+        let mut report = OverheadReport::default();
+        let mut fraction_sum = 0.0;
+        for t in per.values() {
+            let total_us = t.wait_us + t.exec_us;
+            if total_us == 0 {
+                continue;
+            }
+            // kernel phases, when recorded, are nested inside the execute
+            // span — cap at the execute time so clock skew can't push
+            // inference past the span that contains it
+            let inference_us = if t.kernel_us > 0 { t.kernel_us.min(t.exec_us) } else { t.exec_us };
+            let overhead_us = total_us - inference_us;
+            report.n_tasks += 1;
+            report.total_s += total_us as f64 * 1e-6;
+            report.inference_s += inference_us as f64 * 1e-6;
+            report.overhead_s += overhead_us as f64 * 1e-6;
+            fraction_sum += overhead_us as f64 / total_us as f64;
+        }
+        if report.n_tasks > 0 {
+            report.overhead_fraction = report.overhead_s / report.total_s;
+            report.mean_task_overhead_fraction = fraction_sum / report.n_tasks as f64;
+        }
+        report
+    }
+
+    /// One human line for scan output: the §4 statement.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "orchestration overhead {:.1}% vs pure inference {:.1}% of task lifecycle \
+             ({} tasks, {:.3} s overhead / {:.3} s inference; mean per-task overhead {:.1}%)",
+            self.overhead_fraction * 100.0,
+            (1.0 - self.overhead_fraction) * 100.0,
+            self.n_tasks,
+            self.overhead_s,
+            self.inference_s,
+            self.mean_task_overhead_fraction * 100.0,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n_tasks", Json::num(self.n_tasks as f64)),
+            ("total_s", Json::num(self.total_s)),
+            ("inference_s", Json::num(self.inference_s)),
+            ("overhead_s", Json::num(self.overhead_s)),
+            ("overhead_fraction", Json::num(self.overhead_fraction)),
+            (
+                "mean_task_overhead_fraction",
+                Json::num(self.mean_task_overhead_fraction),
+            ),
+        ])
+    }
+}
+
+/// Validate an embedded overhead-report object (used by the trace-doc
+/// validator).
+pub fn validate(doc: &Json) -> Result<(), String> {
+    for key in [
+        "n_tasks",
+        "total_s",
+        "inference_s",
+        "overhead_s",
+        "overhead_fraction",
+        "mean_task_overhead_fraction",
+    ] {
+        let v = doc
+            .get(key)
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| format!("overhead: missing numeric '{key}'"))?;
+        if !v.is_finite() || v < 0.0 {
+            return Err(format!("overhead.{key}: bad value {v}"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Event, Phase};
+
+    fn span(kind: &'static str, ts: u64, dur: u64, task: u64) -> Event {
+        Event {
+            kind,
+            phase: Phase::Span,
+            ts_us: ts,
+            dur_us: dur,
+            task: Some(task),
+            track: "t".into(),
+            detail: String::new(),
+        }
+    }
+
+    #[test]
+    fn split_matches_hand_computation() {
+        // task 1: wait 100, execute 400 with 300 of kernel time
+        // task 2: wait 300, execute 200, no kernel spans (inference = 200)
+        let trace = Trace {
+            events: vec![
+                span(kind::TASK_WAIT, 0, 100, 1),
+                span(kind::TASK_EXECUTE, 100, 400, 1),
+                span(kind::KERNEL_SWEEP, 120, 250, 1),
+                span(kind::KERNEL_SOLVE, 370, 50, 1),
+                span(kind::TASK_WAIT, 0, 300, 2),
+                span(kind::TASK_EXECUTE, 300, 200, 2),
+            ],
+            dropped: 0,
+        };
+        let r = OverheadReport::from_trace(&trace);
+        assert_eq!(r.n_tasks, 2);
+        assert!((r.total_s - 1000e-6).abs() < 1e-12);
+        assert!((r.inference_s - 500e-6).abs() < 1e-12);
+        assert!((r.overhead_s - 500e-6).abs() < 1e-12);
+        assert!((r.overhead_fraction - 0.5).abs() < 1e-12);
+        // per-task fractions: task 1 -> 200/500, task 2 -> 300/500
+        assert!((r.mean_task_overhead_fraction - 0.5).abs() < 1e-12);
+        validate(&r.to_json()).unwrap();
+        assert!(r.summary_line().contains("50.0%"));
+    }
+
+    #[test]
+    fn empty_trace_yields_zero_report() {
+        let r = OverheadReport::from_trace(&Trace::default());
+        assert_eq!(r.n_tasks, 0);
+        assert_eq!(r.overhead_fraction, 0.0);
+        validate(&r.to_json()).unwrap();
+    }
+
+    #[test]
+    fn kernel_time_is_capped_by_the_execute_span() {
+        let trace = Trace {
+            events: vec![
+                span(kind::TASK_WAIT, 0, 100, 1),
+                span(kind::TASK_EXECUTE, 100, 200, 1),
+                span(kind::KERNEL_SWEEP, 100, 900, 1), // skewed
+            ],
+            dropped: 0,
+        };
+        let r = OverheadReport::from_trace(&trace);
+        assert!((r.inference_s - 200e-6).abs() < 1e-12);
+        assert!((r.overhead_s - 100e-6).abs() < 1e-12);
+    }
+}

@@ -1,8 +1,17 @@
 //! Tiny leveled logger with wall-clock-relative timestamps, mirroring the
 //! task-stream output style of the paper's Listing 2.
+//!
+//! Output is sink-pluggable: the default [`StderrSink`] prints the classic
+//! `[   0.123s INFO  target] msg` lines, [`JsonSink`] emits one JSON
+//! object per line (the `--log-json` CLI flag), and [`CaptureSink`] keeps
+//! records in memory so tests can assert on log output instead of it
+//! vanishing to stderr.
 
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
+
+use crate::util::json::Json;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
@@ -10,6 +19,28 @@ pub enum Level {
     Info = 1,
     Warn = 2,
     Error = 3,
+}
+
+impl Level {
+    /// Fixed-width tag used by the stderr format.
+    pub fn tag(self) -> &'static str {
+        match self {
+            Level::Debug => "DEBUG",
+            Level::Info => "INFO ",
+            Level::Warn => "WARN ",
+            Level::Error => "ERROR",
+        }
+    }
+
+    /// Lowercase name used by the JSONL format.
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Debug => "debug",
+            Level::Info => "info",
+            Level::Warn => "warn",
+            Level::Error => "error",
+        }
+    }
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(1);
@@ -29,18 +60,92 @@ pub fn enabled(level: Level) -> bool {
     level as u8 >= LEVEL.load(Ordering::Relaxed)
 }
 
+/// One log record as handed to a sink.
+#[derive(Debug, Clone)]
+pub struct Record {
+    /// seconds since the logger's session start
+    pub t_s: f64,
+    pub level: Level,
+    pub target: String,
+    pub msg: String,
+}
+
+/// Where formatted records go.
+pub trait LogSink: Send + Sync {
+    fn write(&self, record: &Record);
+}
+
+/// Default sink: the classic human-readable stderr lines.
+pub struct StderrSink;
+
+impl LogSink for StderrSink {
+    fn write(&self, r: &Record) {
+        eprintln!("[{:9.3}s {} {}] {}", r.t_s, r.level.tag(), r.target, r.msg);
+    }
+}
+
+/// Structured sink: one JSON object per stderr line (machine-ingestible;
+/// enabled by the `--log-json` CLI flag).
+pub struct JsonSink;
+
+impl LogSink for JsonSink {
+    fn write(&self, r: &Record) {
+        let line = Json::obj(vec![
+            ("t_s", Json::num(r.t_s)),
+            ("level", Json::str(r.level.name())),
+            ("target", Json::str(r.target.clone())),
+            ("msg", Json::str(r.msg.clone())),
+        ]);
+        eprintln!("{}", crate::util::json::to_string(&line));
+    }
+}
+
+/// Test sink: records accumulate in memory until taken.
+#[derive(Default)]
+pub struct CaptureSink {
+    records: Mutex<Vec<Record>>,
+}
+
+impl CaptureSink {
+    pub fn new() -> Arc<CaptureSink> {
+        Arc::new(CaptureSink::default())
+    }
+
+    /// Drain everything captured so far.
+    pub fn take(&self) -> Vec<Record> {
+        std::mem::take(&mut *self.records.lock().unwrap())
+    }
+}
+
+impl LogSink for CaptureSink {
+    fn write(&self, r: &Record) {
+        self.records.lock().unwrap().push(r.clone());
+    }
+}
+
+fn sink_slot() -> &'static Mutex<Arc<dyn LogSink>> {
+    static SINK: OnceLock<Mutex<Arc<dyn LogSink>>> = OnceLock::new();
+    SINK.get_or_init(|| Mutex::new(Arc::new(StderrSink)))
+}
+
+/// Install a sink (returns the previous one, so tests can restore it).
+pub fn set_sink(sink: Arc<dyn LogSink>) -> Arc<dyn LogSink> {
+    let mut slot = sink_slot().lock().unwrap();
+    std::mem::replace(&mut *slot, sink)
+}
+
 pub fn log(level: Level, target: &str, msg: &str) {
     if !enabled(level) {
         return;
     }
-    let t = start().elapsed().as_secs_f64();
-    let tag = match level {
-        Level::Debug => "DEBUG",
-        Level::Info => "INFO ",
-        Level::Warn => "WARN ",
-        Level::Error => "ERROR",
+    let record = Record {
+        t_s: start().elapsed().as_secs_f64(),
+        level,
+        target: target.to_string(),
+        msg: msg.to_string(),
     };
-    eprintln!("[{t:9.3}s {tag} {target}] {msg}");
+    let sink = sink_slot().lock().unwrap().clone();
+    sink.write(&record);
 }
 
 #[macro_export]
@@ -83,5 +188,40 @@ mod tests {
         assert!(enabled(Level::Error));
         set_level(Level::Info);
         assert!(enabled(Level::Info));
+    }
+
+    #[test]
+    fn capture_sink_sees_records() {
+        set_level(Level::Info);
+        let capture = CaptureSink::new();
+        let previous = set_sink(capture.clone());
+        crate::log_warn!("logging-test", "captured {}", 42);
+        set_sink(previous);
+        let records: Vec<Record> =
+            capture.take().into_iter().filter(|r| r.target == "logging-test").collect();
+        assert_eq!(records.len(), 1);
+        assert_eq!(records[0].level, Level::Warn);
+        assert_eq!(records[0].msg, "captured 42");
+        assert!(records[0].t_s >= 0.0);
+    }
+
+    #[test]
+    fn json_record_shape_is_valid_json() {
+        // format what JsonSink would emit and parse it back
+        let r = Record {
+            t_s: 1.5,
+            level: Level::Error,
+            target: "svc".into(),
+            msg: "task \"x\" failed".into(),
+        };
+        let line = Json::obj(vec![
+            ("t_s", Json::num(r.t_s)),
+            ("level", Json::str(r.level.name())),
+            ("target", Json::str(r.target.clone())),
+            ("msg", Json::str(r.msg.clone())),
+        ]);
+        let parsed = crate::util::json::parse(&crate::util::json::to_string(&line)).unwrap();
+        assert_eq!(parsed.get("level").unwrap().as_str(), Some("error"));
+        assert_eq!(parsed.get("msg").unwrap().as_str(), Some("task \"x\" failed"));
     }
 }

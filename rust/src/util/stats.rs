@@ -52,7 +52,18 @@ pub fn percentile_sorted(sorted: &[f64], pct: f64) -> f64 {
     sorted[lo] * (1.0 - frac) + sorted[hi] * frac
 }
 
-/// Streaming mean/min/max accumulator (Welford variance).
+/// Log-bucketed quantile sketch bounds: 10 decades from 1 µs up to 10 ks
+/// at 8 buckets per decade — fixed memory (80 counters) regardless of how
+/// many observations stream through, with worst-case relative quantile
+/// error of one bucket width (10^(1/8) ≈ 1.33x), tightened by clamping to
+/// the observed min/max.
+const QLOG_LO: f64 = 1e-6;
+const QLOG_PER_DECADE: usize = 8;
+const QLOG_DECADES: usize = 10;
+const QLOG_BUCKETS: usize = QLOG_PER_DECADE * QLOG_DECADES;
+
+/// Streaming mean/min/max accumulator (Welford variance) with a
+/// fixed-memory log-bucketed histogram for p50/p95/p99 quantiles.
 #[derive(Debug, Clone, Default)]
 pub struct Accumulator {
     n: u64,
@@ -60,11 +71,24 @@ pub struct Accumulator {
     m2: f64,
     min: f64,
     max: f64,
+    /// log-bucket counters, lazily sized to [`QLOG_BUCKETS`] on first push
+    qlog: Vec<u64>,
+    qlog_under: u64,
+    qlog_over: u64,
 }
 
 impl Accumulator {
     pub fn new() -> Self {
-        Accumulator { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+        Accumulator {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            qlog: Vec::new(),
+            qlog_under: 0,
+            qlog_over: 0,
+        }
     }
 
     pub fn push(&mut self, x: f64) {
@@ -74,6 +98,59 @@ impl Accumulator {
         self.m2 += d * (x - self.mean);
         self.min = self.min.min(x);
         self.max = self.max.max(x);
+        if self.qlog.is_empty() {
+            self.qlog = vec![0; QLOG_BUCKETS];
+        }
+        if !(x >= QLOG_LO) {
+            // below range, zero, negative or NaN: count once at the floor
+            self.qlog_under += 1;
+        } else {
+            let i = ((x / QLOG_LO).log10() * QLOG_PER_DECADE as f64) as usize;
+            if i >= QLOG_BUCKETS {
+                self.qlog_over += 1;
+            } else {
+                self.qlog[i] += 1;
+            }
+        }
+    }
+
+    /// Rank-`q` quantile estimate from the log-bucketed histogram
+    /// (`q` in [0, 1]; 0.0 when nothing was pushed). Within the located
+    /// bucket the estimate is its geometric midpoint, clamped to the
+    /// exactly-tracked min/max.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * self.n as f64).ceil().max(1.0) as u64;
+        let mut seen = self.qlog_under;
+        if seen >= rank {
+            return self.min;
+        }
+        for (i, &c) in self.qlog.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            seen += c;
+            if seen >= rank {
+                let lo = QLOG_LO * 10f64.powf(i as f64 / QLOG_PER_DECADE as f64);
+                let hi = lo * 10f64.powf(1.0 / QLOG_PER_DECADE as f64);
+                return (lo * hi).sqrt().clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
     }
 
     pub fn count(&self) -> u64 {
@@ -178,6 +255,50 @@ mod tests {
         assert_eq!(acc.min(), s.min);
         assert_eq!(acc.max(), s.max);
         assert_eq!(acc.count(), 100);
+    }
+
+    #[test]
+    fn quantiles_track_known_distributions() {
+        // uniform 1..=1000 ms: p50 ≈ 0.5 s, p95 ≈ 0.95 s, p99 ≈ 0.99 s,
+        // each within one log-bucket width (10^(1/8) ≈ 1.33x)
+        let mut acc = Accumulator::new();
+        for i in 1..=1000 {
+            acc.push(i as f64 * 1e-3);
+        }
+        for (q, expect) in [(0.50, 0.5), (0.95, 0.95), (0.99, 0.99)] {
+            let got = acc.quantile(q);
+            assert!(
+                got / expect > 0.7 && got / expect < 1.4,
+                "q{q}: got {got}, expected ~{expect}"
+            );
+        }
+        let q0 = acc.quantile(0.0);
+        assert!(q0 >= acc.min() && q0 <= acc.min() * 1.4, "q0 {q0} vs min {}", acc.min());
+        assert!(acc.quantile(1.0) <= acc.max());
+    }
+
+    #[test]
+    fn quantiles_handle_edge_inputs() {
+        let empty = Accumulator::new();
+        assert_eq!(empty.quantile(0.5), 0.0);
+        // constant sample: every quantile is that constant (clamped to
+        // min/max even though the bucket midpoint differs)
+        let mut acc = Accumulator::new();
+        for _ in 0..50 {
+            acc.push(2.5);
+        }
+        assert_eq!(acc.p50(), 2.5);
+        assert_eq!(acc.p99(), 2.5);
+        // out-of-range values fall into under/overflow but stay ranked
+        let mut acc = Accumulator::new();
+        acc.push(0.0); // under the 1 µs floor
+        acc.push(1e9); // over the 10 ks ceiling
+        assert_eq!(acc.quantile(0.1), 0.0);
+        assert_eq!(acc.quantile(0.9), 1e9);
+        // default-constructed accumulators lazily allocate the sketch
+        let mut acc = Accumulator::default();
+        acc.push(0.25);
+        assert!(acc.p95() > 0.0);
     }
 
     #[test]

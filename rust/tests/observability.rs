@@ -1,0 +1,217 @@
+//! End-to-end observability properties: the task ledger balances
+//! (`submitted == completed + failed + cancelled`) across routed, batched
+//! and gather-cancelled scenarios, and the drained task-lifecycle trace
+//! reconciles with that ledger event-for-event.
+//!
+//! The trace hub is process-global, so every traced test serializes on one
+//! lock and clears leftover events before enabling.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use pyhf_faas::coordinator::{
+    Endpoint, EndpointConfig, ExecutorConfig, FaasClient, Service, ServiceHandle,
+};
+use pyhf_faas::scheduler::{PolicyKind, RouteStrategyKind, Router};
+use pyhf_faas::trace::{self, chrome, kind};
+use pyhf_faas::util::json::Json;
+
+fn trace_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn quick_endpoint(svc: &ServiceHandle, name: &str, workers: usize) -> Endpoint {
+    Endpoint::start(
+        svc.clone(),
+        EndpointConfig::new(name)
+            .with_executor(ExecutorConfig {
+                max_blocks: 1,
+                nodes_per_block: 1,
+                workers_per_node: workers,
+                parallelism: 1.0,
+                poll: Duration::from_millis(1),
+            })
+            .with_policy(PolicyKind::Affinity),
+    )
+}
+
+fn gather_all(client: &FaasClient, tasks: &[pyhf_faas::coordinator::TaskId]) {
+    client
+        .gather(tasks, Duration::from_secs(10), Duration::from_millis(1), None, |_, _| {})
+        .expect("gather");
+}
+
+#[test]
+fn routed_scan_ledger_balances_and_trace_reconciles() {
+    let _g = trace_lock();
+    trace::clear();
+    trace::enable();
+
+    let svc = Service::new();
+    let ep0 = quick_endpoint(&svc, "obs-site0", 2);
+    let ep1 = quick_endpoint(&svc, "obs-site1", 2);
+    let mut router = Router::new(RouteStrategyKind::WarmFirst);
+    router.add_target(ep0.id, 0, ep0.probe());
+    router.add_target(ep1.id, 1, ep1.probe());
+    svc.install_router(router);
+
+    let client = FaasClient::new(svc.clone());
+    let f = client.register_function("echo", Arc::new(|p: &Json, _: &mut _| Ok(p.clone())));
+    let n = 12usize;
+    let tasks: Vec<_> = (0..n)
+        .map(|i| {
+            client
+                .run_routed(
+                    Json::obj(vec![("n", Json::num(i as f64)), ("class", Json::str("A"))]),
+                    f,
+                )
+                .unwrap()
+        })
+        .collect();
+    gather_all(&client, &tasks);
+    ep0.shutdown();
+    ep1.shutdown();
+
+    let t = trace::drain();
+    trace::disable();
+
+    // ledger: every submission reached exactly one terminal state
+    let m = svc.metrics.snapshot();
+    assert_eq!(m.submitted, m.completed + m.failed + m.cancelled);
+    assert_eq!(m.completed, n as u64);
+    assert_eq!(m.cancelled, 0);
+
+    // trace <-> ledger reconciliation
+    assert_eq!(t.of_kind(kind::TASK_SUBMIT).len() as u64, m.submitted);
+    assert_eq!(t.of_kind(kind::TASK_RESULT).len() as u64, m.completed + m.failed);
+    assert_eq!(t.of_kind(kind::TASK_CANCEL).len() as u64, m.cancelled);
+    assert_eq!(t.of_kind(kind::ROUTE_DECIDE).len() as u64, m.routed);
+    // every executed task carries its wait + execute spans
+    assert_eq!(t.of_kind(kind::TASK_WAIT).len(), n);
+    assert_eq!(t.of_kind(kind::TASK_EXECUTE).len(), n);
+    assert!(!t.of_kind(kind::WORKER_STARTUP).is_empty(), "no worker startup span");
+    assert!(!t.of_kind(kind::CLIENT_GATHER).is_empty(), "no client gather span");
+    // spans nest: each execute starts no earlier than its wait ends
+    for e in t.of_kind(kind::TASK_EXECUTE) {
+        let id = e.task.expect("execute span without a task");
+        let wait = t
+            .of_kind(kind::TASK_WAIT)
+            .into_iter()
+            .find(|w| w.task == Some(id))
+            .expect("execute without wait");
+        assert!(wait.ts_us + wait.dur_us <= e.ts_us + 1_000, "wait overlaps execute");
+    }
+    // the whole thing exports as a valid Chrome trace document
+    chrome::validate(&chrome::chrome_doc(&t)).expect("trace doc must validate");
+}
+
+#[test]
+fn batched_wave_ledger_balances_and_enqueues_are_traced() {
+    let _g = trace_lock();
+    trace::clear();
+    trace::enable();
+
+    let svc = Service::new();
+    let ep = quick_endpoint(&svc, "obs-batch", 2);
+    let client = FaasClient::new(svc.clone());
+    let f = client.register_function(
+        "echo",
+        pyhf_faas::scheduler::batched_handler(Arc::new(|p: &Json, _| Ok(p.clone()))),
+    );
+    let mk = |name: &str, class: &str| {
+        Json::obj(vec![("patch", Json::str(name)), ("class", Json::str(class))])
+    };
+    let payloads =
+        vec![mk("a0", "A"), mk("b0", "B"), mk("a0", "A"), mk("a1", "A"), mk("b1", "B")];
+    let sub = client.run_coalesced(&payloads, ep.id, f, 4).unwrap();
+    let n_groups = sub.tasks.len();
+    assert_eq!(n_groups, 2, "4 uniques -> one A-batch + one B-batch");
+    gather_all(&client, &sub.tasks);
+    ep.shutdown();
+
+    let t = trace::drain();
+    trace::disable();
+
+    let m = svc.metrics.snapshot();
+    assert_eq!(m.submitted, m.completed + m.failed + m.cancelled);
+    assert_eq!(m.completed, n_groups as u64);
+    assert_eq!(t.of_kind(kind::TASK_SUBMIT).len(), n_groups);
+    assert_eq!(t.of_kind(kind::TASK_ENQUEUE).len(), n_groups);
+    assert_eq!(t.of_kind(kind::TASK_RESULT).len(), n_groups);
+    assert_eq!(t.of_kind(kind::TASK_EXECUTE).len(), n_groups);
+    chrome::validate(&chrome::chrome_doc(&t)).expect("trace doc must validate");
+}
+
+#[test]
+fn cancelled_gather_ledger_balances_and_cancels_are_traced() {
+    let _g = trace_lock();
+    trace::clear();
+    trace::enable();
+
+    let svc = Service::new();
+    let ep = quick_endpoint(&svc, "obs-cancel", 1);
+    let client = FaasClient::new(svc.clone());
+    let f = svc.register_function(
+        "slow",
+        Arc::new(|p: &Json, _: &mut _| {
+            std::thread::sleep(Duration::from_millis(200));
+            Ok(p.clone())
+        }),
+    );
+    let tasks =
+        client.run_batch((0..6).map(|i| Json::num(i as f64)).collect(), ep.id, f).unwrap();
+    let err = client
+        .gather(&tasks, Duration::from_millis(100), Duration::from_millis(2), None, |_, _| {})
+        .unwrap_err();
+    assert!(err.contains("cancelled"), "{err}");
+
+    // let the abandoned in-flight task finish (its record is dropped on
+    // completion) so the trace holds its execute span before we drain
+    let t0 = std::time::Instant::now();
+    while tasks.iter().any(|id| svc.task_state(*id).is_some()) {
+        assert!(t0.elapsed() < Duration::from_secs(5), "task records leaked");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    ep.shutdown();
+
+    let t = trace::drain();
+    trace::disable();
+
+    let m = svc.metrics.snapshot();
+    assert_eq!(m.submitted, m.completed + m.failed + m.cancelled);
+    assert_eq!(m.submitted, 6);
+    assert!(m.cancelled >= 1, "timeout must cancel outstanding work");
+
+    // reconciliation: results only for tasks that completed un-abandoned,
+    // one cancel instant per cancelled task, and the abandoned running
+    // task still shows its execute span (work happened, result dropped)
+    assert_eq!(t.of_kind(kind::TASK_SUBMIT).len() as u64, m.submitted);
+    assert_eq!(t.of_kind(kind::TASK_RESULT).len() as u64, m.completed + m.failed);
+    assert_eq!(t.of_kind(kind::TASK_CANCEL).len() as u64, m.cancelled);
+    assert!(
+        t.of_kind(kind::TASK_EXECUTE).len() as u64 >= m.completed,
+        "execute spans must cover at least the completed tasks"
+    );
+    chrome::validate(&chrome::chrome_doc(&t)).expect("trace doc must validate");
+}
+
+#[test]
+fn disabled_tracing_emits_nothing_through_a_live_scan() {
+    let _g = trace_lock();
+    trace::clear();
+    assert!(!trace::enabled());
+
+    let svc = Service::new();
+    let ep = quick_endpoint(&svc, "obs-off", 2);
+    let client = FaasClient::new(svc.clone());
+    let f = client.register_function("echo", Arc::new(|p: &Json, _: &mut _| Ok(p.clone())));
+    let tasks =
+        client.run_batch((0..8).map(|i| Json::num(i as f64)).collect(), ep.id, f).unwrap();
+    gather_all(&client, &tasks);
+    ep.shutdown();
+
+    let t = trace::drain();
+    assert!(t.events.is_empty(), "disabled hub buffered {} events", t.events.len());
+    assert_eq!(svc.metrics.snapshot().completed, 8);
+}
