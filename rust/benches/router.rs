@@ -29,13 +29,20 @@
 //! Run: `cargo bench --bench router [-- --quick] [-- --out BENCH_route.json]`
 
 use std::path::PathBuf;
-use std::time::Instant;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use pyhf_faas::bench::routejson::{RouteBenchReport, StrategyBench};
+use pyhf_faas::coordinator::{
+    chaos, ChaosFault, ChaosPlan, ChaosRule, Endpoint, EndpointConfig, ExecutorConfig, FaasClient,
+    HedgePolicy, ReliabilityPolicy, RetryPolicy, Service,
+};
+use pyhf_faas::scheduler::{RouteStrategyKind, Router};
 use pyhf_faas::sim::{
     simulate_sites_faulty, table1_chaos_plan, table1_mixed_workload, two_site_table1, FaultPlan,
     RouteSim, SimTask, SiteSpec, PAPER_TABLE1,
 };
+use pyhf_faas::util::json::Json;
 use pyhf_faas::util::stats::Summary;
 
 /// Per-worker executable compile cost (seconds) — same term as `bench
@@ -52,6 +59,11 @@ struct Row {
     quarantines: f64,
     retries: f64,
     health_diverted: f64,
+    /// live-chaos rows only: hedged duplicates / typed deadline drops /
+    /// quarantine migrations (0 in the simulated replays)
+    hedges: f64,
+    deadline_exceeded: f64,
+    migrated: f64,
     wall_s: f64,
 }
 
@@ -104,6 +116,9 @@ fn run(
         quarantines: quarantines / n,
         retries: retries / n,
         health_diverted: health_diverted / n,
+        hedges: 0.0,
+        deadline_exceeded: 0.0,
+        migrated: 0.0,
         wall_s: t0.elapsed().as_secs_f64(),
     }
 }
@@ -135,8 +150,119 @@ fn push_report(report: &mut RouteBenchReport, r: &Row) {
         quarantines: r.quarantines,
         retries: r.retries,
         health_diverted: r.health_diverted,
+        hedges: r.hedges,
+        deadline_exceeded: r.deadline_exceeded,
+        migrated: r.migrated,
         wall_s: r.wall_s,
     });
+}
+
+/// One live-chaos row: the Table-1 task count on a REAL two-endpoint
+/// service stack — threads, interchanges, the ledger — with an installed
+/// [`ChaosPlan`] dropping result messages and crashing workers on site0.
+/// `reliable` toggles the client's retry/hedge machinery; both rows carry
+/// the same absolute task deadline, so the unreliable row terminates via
+/// typed deadline outcomes instead of hanging on the lost results.
+/// Returns the row plus the observed p99 logical-task completion latency.
+fn live_chaos_row(name: &str, reliable: bool, n_tasks: usize) -> (Row, f64) {
+    let t0 = Instant::now();
+    let svc = Service::new();
+    let exec = ExecutorConfig {
+        max_blocks: 2,
+        nodes_per_block: 1,
+        workers_per_node: 2,
+        parallelism: 1.0,
+        poll: Duration::from_millis(1),
+    };
+    let endpoints: Vec<Endpoint> = (0..2)
+        .map(|site| {
+            Endpoint::start(
+                svc.clone(),
+                EndpointConfig::new(format!("site{site}")).with_executor(exec.clone()),
+            )
+        })
+        .collect();
+    let mut router = Router::new(RouteStrategyKind::LeastLoaded).with_active_probing(true);
+    for (site, ep) in endpoints.iter().enumerate() {
+        router.add_target_with_signal(ep.id, site, ep.probe(), Some(ep.scale_signal()));
+    }
+    svc.install_router(router);
+
+    let deadline = Duration::from_secs(3);
+    let policy = if reliable {
+        ReliabilityPolicy::new()
+            .with_retry(RetryPolicy::with_retries(2))
+            .with_task_deadline(deadline)
+            .with_hedge(HedgePolicy {
+                after_p99: 3.0,
+                min_observations: 30,
+                min_age: Duration::from_millis(50),
+            })
+    } else {
+        ReliabilityPolicy::new().with_task_deadline(deadline)
+    };
+    let fxc = FaasClient::new(svc.clone()).with_reliability(policy);
+    let f = fxc.register_function(
+        "spin",
+        Arc::new(|p: &Json, _ctx: &mut _| {
+            std::thread::sleep(Duration::from_millis(3));
+            Ok(p.clone())
+        }),
+    );
+
+    // site0 crashes two workers mid-task, then starts losing result
+    // messages — the failure modes only task-level reliability can absorb
+    let ep0 = endpoints[0].id;
+    chaos::install(
+        ChaosPlan::new(0x5eed)
+            .rule(ChaosRule::new(ChaosFault::Crash, Some(ep0), 30, 2))
+            .rule(ChaosRule::new(ChaosFault::DropResult, Some(ep0), 40, 6)),
+    );
+
+    let payloads: Vec<Json> = (0..n_tasks)
+        .map(|i| {
+            Json::obj(vec![
+                ("patch", Json::str(format!("p{i}"))),
+                ("class", Json::str("chaos")),
+            ])
+        })
+        .collect();
+    let wave_t0 = Instant::now();
+    let tasks = fxc.submit_wave(payloads, |p| fxc.run_routed(p, f)).expect("chaos wave");
+    let mut done_at = vec![0.0f64; tasks.len()];
+    let results = fxc
+        .gather(&tasks, Duration::from_secs(120), Duration::from_millis(2), None, |i, _r| {
+            done_at[i] = wave_t0.elapsed().as_secs_f64();
+        })
+        .expect("chaos gather");
+    assert_eq!(results.len(), n_tasks);
+    let makespan = wave_t0.elapsed().as_secs_f64();
+    let plan = chaos::clear().expect("chaos plan was installed");
+    assert!(plan.total_hits() > 0, "{name}: the chaos plan never fired");
+
+    let m = svc.metrics.snapshot();
+    for ep in endpoints {
+        ep.shutdown();
+    }
+    let mut sorted = done_at.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p99 = sorted[((sorted.len() - 1) as f64 * 0.99) as usize];
+    let row = Row {
+        name: name.to_string(),
+        latency: Summary::of(&done_at),
+        makespan: Summary::of(&[makespan]),
+        compiles: 0.0,
+        warm_hits: m.route_warm_hits as f64,
+        spillovers: m.route_spillovers as f64,
+        quarantines: m.endpoints_quarantined as f64,
+        retries: m.retries as f64,
+        health_diverted: 0.0,
+        hedges: m.hedges as f64,
+        deadline_exceeded: m.deadline_exceeded as f64,
+        migrated: m.migrated as f64,
+        wall_s: t0.elapsed().as_secs_f64(),
+    };
+    (row, p99)
 }
 
 fn main() {
@@ -201,6 +327,19 @@ fn main() {
     print_row(&aware);
     push_report(&mut report, &aware);
 
+    // live chaos: the same two-site idea, but on the real executor stack
+    // with the chaos harness injecting worker crashes and lost results.
+    // The reliability-on client (retry + hedge + deadline) must finish
+    // with a lower p99 than reliability-off, which only has the deadline
+    // to bound the lost results
+    let n_live = if quick { 120 } else { tasks.len() };
+    let (live_off, p99_off) = live_chaos_row("live-chaos/reliability-off", false, n_live);
+    print_row(&live_off);
+    push_report(&mut report, &live_off);
+    let (live_on, p99_on) = live_chaos_row("live-chaos/reliability-on", true, n_live);
+    print_row(&live_on);
+    push_report(&mut report, &live_on);
+
     report.write(&out_path).expect("write BENCH_route.json");
     println!("\nwrote {}", out_path.display());
 
@@ -251,6 +390,32 @@ fn main() {
         aware.quarantines,
         aware.retries,
         aware.health_diverted
+    );
+
+    // live-chaos acceptance: task-level reliability must cut the tail,
+    // and the unreliable run must have terminated its lost tasks via the
+    // typed deadline outcome rather than hanging
+    assert!(
+        p99_on < p99_off,
+        "live chaos: reliability-on p99 {p99_on:.2} s must beat reliability-off {p99_off:.2} s"
+    );
+    assert!(
+        live_on.hedges + live_on.retries > 0.0,
+        "live chaos: the reliability-on run never hedged or retried"
+    );
+    assert!(
+        live_off.deadline_exceeded > 0.0,
+        "live chaos: reliability-off must terminate lost tasks via deadlines"
+    );
+    println!(
+        "live chaos PASSED: reliability-on p99 {:.2} s < reliability-off p99 {:.2} s \
+         ({:.0} retries, {:.0} hedges, {:.0} migrated; {:.0} deadline-exceeded off-row).",
+        p99_on,
+        p99_off,
+        live_on.retries,
+        live_on.hedges,
+        live_on.migrated,
+        live_off.deadline_exceeded
     );
 
     // tracing acceptance: turning the trace hub on must not perturb the

@@ -68,12 +68,17 @@ impl MetricsReport {
 
 /// Required numeric keys of every metrics object (service-wide and
 /// per-endpoint): the ledger counters and the latency surface.
-const REQUIRED_NUMERIC: [&str; 14] = [
+const REQUIRED_NUMERIC: [&str; 19] = [
     "submitted",
     "completed",
     "failed",
     "cancelled",
     "routed",
+    "retries",
+    "hedges",
+    "deadline_exceeded",
+    "migrated",
+    "health_probes",
     "mean_wait_s",
     "mean_service_s",
     "total_service_s",

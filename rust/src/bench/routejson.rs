@@ -38,6 +38,14 @@ pub struct StrategyBench {
     pub retries: f64,
     /// mean tasks steered off a quarantined-but-warm site per trial
     pub health_diverted: f64,
+    /// mean hedged duplicates submitted per trial (live-chaos rows; 0 in
+    /// the simulated replays, which have no hedging client)
+    pub hedges: f64,
+    /// mean tasks finalized with the typed deadline outcome per trial
+    pub deadline_exceeded: f64,
+    /// mean queued tasks recalled off a quarantined site and re-placed
+    /// per trial
+    pub migrated: f64,
     /// wall time spent benchmarking this strategy
     pub wall_s: f64,
 }
@@ -54,6 +62,9 @@ impl StrategyBench {
             ("quarantines", Json::num(self.quarantines)),
             ("retries", Json::num(self.retries)),
             ("health_diverted", Json::num(self.health_diverted)),
+            ("hedges", Json::num(self.hedges)),
+            ("deadline_exceeded", Json::num(self.deadline_exceeded)),
+            ("migrated", Json::num(self.migrated)),
             ("wall_s", Json::num(self.wall_s)),
         ])
     }
@@ -138,6 +149,9 @@ pub fn validate(doc: &Json) -> Result<(), String> {
             "quarantines",
             "retries",
             "health_diverted",
+            "hedges",
+            "deadline_exceeded",
+            "migrated",
             "wall_s",
         ] {
             let v = s
@@ -169,6 +183,9 @@ mod tests {
                 quarantines: 0.0,
                 retries: 0.0,
                 health_diverted: 0.0,
+                hedges: 0.0,
+                deadline_exceeded: 0.0,
+                migrated: 0.0,
                 wall_s: 0.2,
             });
         }

@@ -1,0 +1,297 @@
+//! Live fault injection for the real executor/service stack.
+//!
+//! The DES replay (`sim::replay`) can already script endpoint-level
+//! degradation in *simulated* time; this module injects faults into the
+//! *live* `HighThroughputExecutor` so the reliability layer (retry,
+//! deadlines, hedging, migration — `coordinator::reliability`) is
+//! exercised against real threads, real queues and the real ledger.
+//!
+//! Design: a process-global, normally-empty plan. Every fault point in
+//! the executor calls [`inject`] with its [`FaultPoint`] and endpoint;
+//! while no plan is installed that is one relaxed atomic load — the same
+//! always-on/zero-cost discipline as the trace hub. A [`ChaosPlan`] is a
+//! seeded list of [`ChaosRule`]s; rules match deterministically on a
+//! per-point event counter (first `skip` matching events pass, the next
+//! `max_hits` fire), so a given plan replays identically run over run —
+//! no wall-clock, no RNG state outside the seed.
+//!
+//! Faults model the shared-HPC realities from the paper's deployments:
+//!
+//! * [`ChaosFault::InitFail`] — worker environment setup fails (bad
+//!   conda env / missing module on a site);
+//! * [`ChaosFault::Crash`] — the worker dies mid-task (preemption,
+//!   OOM-kill): the task fails *and the worker thread exits*, so
+//!   capacity is really lost;
+//! * [`ChaosFault::Slow`] — a straggler: execution stalls for the given
+//!   extra time (noisy neighbor, cold cache);
+//! * [`ChaosFault::DropResult`] — the task runs but its result never
+//!   reaches the service (lost interchange message): the record is stuck
+//!   `Running` until a hedge rescues it or the deadline bounds it.
+//!
+//! Install with [`install`], tear down with [`clear`]; tests and the
+//! live-chaos bench rows in `benches/router.rs` own the global slot via
+//! their usual serialization locks. Every injection emits a
+//! `chaos.inject` trace instant so fault timing lands on the same
+//! timeline as the decisions it provokes.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::coordinator::task::EndpointId;
+use crate::trace;
+
+/// Where in the live stack a fault can fire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultPoint {
+    /// worker startup, before the init barrier
+    WorkerInit,
+    /// mid-execution, after a task is popped and marked running
+    Execute,
+    /// result delivery, after execution finished
+    Result,
+}
+
+impl FaultPoint {
+    fn label(self) -> &'static str {
+        match self {
+            FaultPoint::WorkerInit => "worker_init",
+            FaultPoint::Execute => "execute",
+            FaultPoint::Result => "result",
+        }
+    }
+}
+
+/// What happens when a rule fires. See the module docs for the failure
+/// mode each models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChaosFault {
+    InitFail,
+    Crash,
+    Slow(Duration),
+    DropResult,
+}
+
+impl ChaosFault {
+    /// The fault point this fault fires at.
+    fn point(self) -> FaultPoint {
+        match self {
+            ChaosFault::InitFail => FaultPoint::WorkerInit,
+            ChaosFault::Crash | ChaosFault::Slow(_) => FaultPoint::Execute,
+            ChaosFault::DropResult => FaultPoint::Result,
+        }
+    }
+
+    fn label(self) -> &'static str {
+        match self {
+            ChaosFault::InitFail => "init_fail",
+            ChaosFault::Crash => "crash",
+            ChaosFault::Slow(_) => "slow",
+            ChaosFault::DropResult => "drop_result",
+        }
+    }
+}
+
+/// One deterministic injection rule: at `fault.point()`, on `endpoint`
+/// (or any endpoint when `None`), let `skip` matching events pass, then
+/// fire on the next `max_hits` of them.
+#[derive(Debug)]
+pub struct ChaosRule {
+    pub fault: ChaosFault,
+    /// restrict to one endpoint (`None` = any)
+    pub endpoint: Option<EndpointId>,
+    /// matching events that pass before the rule starts firing
+    pub skip: u64,
+    /// events the rule fires on once armed (0 = never)
+    pub max_hits: u64,
+    /// matching events seen so far (internal, reset by [`install`])
+    seen: AtomicU64,
+    /// times fired (internal)
+    hits: AtomicU64,
+}
+
+impl ChaosRule {
+    pub fn new(fault: ChaosFault, endpoint: Option<EndpointId>, skip: u64, max_hits: u64) -> Self {
+        ChaosRule { fault, endpoint, skip, max_hits, seen: AtomicU64::new(0), hits: AtomicU64::new(0) }
+    }
+
+    /// Does this rule fire for an event at (`point`, `endpoint`)? Counts
+    /// the event either way, so rule arming is deterministic in event
+    /// order.
+    fn check(&self, point: FaultPoint, endpoint: EndpointId) -> bool {
+        if self.fault.point() != point {
+            return false;
+        }
+        if self.endpoint.is_some_and(|ep| ep != endpoint) {
+            return false;
+        }
+        let n = self.seen.fetch_add(1, Ordering::Relaxed);
+        if n < self.skip || n >= self.skip + self.max_hits {
+            return false;
+        }
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Times this rule has fired since install.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+}
+
+/// A seeded set of rules. The seed names the scenario in traces and
+/// keeps room for probabilistic rules later; matching itself is pure
+/// counter arithmetic.
+#[derive(Debug, Default)]
+pub struct ChaosPlan {
+    pub seed: u64,
+    pub rules: Vec<ChaosRule>,
+}
+
+impl ChaosPlan {
+    pub fn new(seed: u64) -> ChaosPlan {
+        ChaosPlan { seed, rules: Vec::new() }
+    }
+
+    pub fn rule(mut self, rule: ChaosRule) -> ChaosPlan {
+        self.rules.push(rule);
+        self
+    }
+
+    /// Total injections across all rules.
+    pub fn total_hits(&self) -> u64 {
+        self.rules.iter().map(|r| r.hits()).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// global slot
+// ---------------------------------------------------------------------------
+
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+
+fn slot() -> &'static Mutex<Option<ChaosPlan>> {
+    static SLOT: std::sync::OnceLock<Mutex<Option<ChaosPlan>>> = std::sync::OnceLock::new();
+    SLOT.get_or_init(|| Mutex::new(None))
+}
+
+/// Install a plan (replacing any active one) with fresh rule counters.
+pub fn install(plan: ChaosPlan) {
+    let mut s = slot().lock().unwrap();
+    for r in &plan.rules {
+        r.seen.store(0, Ordering::Relaxed);
+        r.hits.store(0, Ordering::Relaxed);
+    }
+    *s = Some(plan);
+    ACTIVE.store(true, Ordering::Relaxed);
+}
+
+/// Remove the active plan, returning it (with its hit counters) for
+/// assertions.
+pub fn clear() -> Option<ChaosPlan> {
+    let mut s = slot().lock().unwrap();
+    ACTIVE.store(false, Ordering::Relaxed);
+    s.take()
+}
+
+/// Is any plan installed? One relaxed load — the executor's fault points
+/// gate on this before touching the slot lock.
+#[inline]
+pub fn active() -> bool {
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+/// Consult the active plan at a fault point. Returns the fault to apply,
+/// if any rule fires; emits a `chaos.inject` trace instant when one
+/// does. Callers pass the task id when the point is task-scoped.
+pub fn inject(point: FaultPoint, endpoint: EndpointId, task: Option<u64>) -> Option<ChaosFault> {
+    if !active() {
+        return None;
+    }
+    let s = slot().lock().unwrap();
+    let plan = s.as_ref()?;
+    for rule in &plan.rules {
+        if rule.check(point, endpoint) {
+            trace::instant(
+                trace::kind::CHAOS_INJECT,
+                task,
+                &format!("chaos-ep{endpoint}"),
+                format!("{} at {} (seed {})", rule.fault.label(), point.label(), plan.seed),
+            );
+            return Some(rule.fault);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The slot is process-global — chaos tests must not overlap.
+    fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn inactive_harness_injects_nothing() {
+        let _g = test_lock();
+        clear();
+        assert!(!active());
+        assert_eq!(inject(FaultPoint::Execute, 0, Some(1)), None);
+    }
+
+    #[test]
+    fn rules_arm_after_skip_and_respect_max_hits() {
+        let _g = test_lock();
+        install(ChaosPlan::new(42).rule(ChaosRule::new(ChaosFault::Crash, Some(1), 2, 2)));
+        // wrong endpoint: never fires, never counts
+        assert_eq!(inject(FaultPoint::Execute, 0, None), None);
+        // endpoint 1: events 0,1 skipped; 2,3 fire; 4+ exhausted
+        assert_eq!(inject(FaultPoint::Execute, 1, None), None);
+        assert_eq!(inject(FaultPoint::Execute, 1, None), None);
+        assert_eq!(inject(FaultPoint::Execute, 1, None), Some(ChaosFault::Crash));
+        assert_eq!(inject(FaultPoint::Execute, 1, None), Some(ChaosFault::Crash));
+        assert_eq!(inject(FaultPoint::Execute, 1, None), None);
+        let plan = clear().unwrap();
+        assert_eq!(plan.total_hits(), 2);
+    }
+
+    #[test]
+    fn faults_only_fire_at_their_own_point() {
+        let _g = test_lock();
+        install(
+            ChaosPlan::new(7)
+                .rule(ChaosRule::new(ChaosFault::InitFail, None, 0, 1))
+                .rule(ChaosRule::new(ChaosFault::DropResult, None, 0, 1)),
+        );
+        // an Execute event matches neither rule
+        assert_eq!(inject(FaultPoint::Execute, 0, Some(9)), None);
+        assert_eq!(inject(FaultPoint::WorkerInit, 0, None), Some(ChaosFault::InitFail));
+        assert_eq!(inject(FaultPoint::Result, 0, Some(9)), Some(ChaosFault::DropResult));
+        // both exhausted now
+        assert_eq!(inject(FaultPoint::WorkerInit, 0, None), None);
+        clear();
+    }
+
+    #[test]
+    fn install_resets_counters_and_clear_returns_the_plan() {
+        let _g = test_lock();
+        let plan = ChaosPlan::new(1).rule(ChaosRule::new(ChaosFault::Slow(Duration::from_millis(5)), None, 0, 1));
+        install(plan);
+        assert_eq!(
+            inject(FaultPoint::Execute, 3, Some(4)),
+            Some(ChaosFault::Slow(Duration::from_millis(5)))
+        );
+        // reinstalling the same shape re-arms it
+        install(ChaosPlan::new(1).rule(ChaosRule::new(ChaosFault::Slow(Duration::from_millis(5)), None, 0, 1)));
+        assert_eq!(
+            inject(FaultPoint::Execute, 3, Some(4)),
+            Some(ChaosFault::Slow(Duration::from_millis(5)))
+        );
+        let back = clear().unwrap();
+        assert_eq!(back.total_hits(), 1);
+        assert!(!active());
+    }
+}

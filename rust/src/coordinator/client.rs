@@ -1,9 +1,23 @@
 //! FaaS client SDK: the Rust analog of funcX's `FuncXClient` (Listing 1 of
 //! the paper): `register_function`, `run`, `get_result`, plus batch helpers
 //! for the scan driver.
+//!
+//! With a [`ReliabilityPolicy`] installed ([`FaasClient::with_reliability`])
+//! the client also owns the task-granularity reliability loop: every
+//! submission is stamped with the policy deadline and recorded for
+//! resubmission, and [`FaasClient::gather`] runs a per-logical-task state
+//! machine — bounded budgeted retries with exponential backoff, hedged
+//! duplicates for stragglers (first result wins, the loser is cancelled),
+//! and client-side deadline enforcement with the typed
+//! [`DEADLINE_EXCEEDED`] outcome. See `docs/RELIABILITY.md`.
 
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::coordinator::reliability::{
+    is_retryable, ReliabilityPolicy, RetryBudget, DEADLINE_EXCEEDED,
+};
 use crate::coordinator::service::{Handler, ServiceHandle};
 use crate::coordinator::task::{EndpointId, FunctionId, TaskId, TaskState};
 use crate::scheduler::batcher::{plan_batches, BatchPlan};
@@ -27,15 +41,76 @@ impl BatchSubmission {
     }
 }
 
+/// Where a logical task was pointed — resubmissions (retries) go back to
+/// the same target kind.
+#[derive(Clone, Copy)]
+enum Target {
+    Endpoint(EndpointId),
+    Routed,
+}
+
+/// Everything needed to resubmit one logical task. Recorded per task id
+/// while a [`ReliabilityPolicy`] is installed; `gather` reclaims the
+/// entries for the wave it manages.
+struct TaskSpec {
+    function: FunctionId,
+    payload: Json,
+    target: Target,
+    /// attempts so far (1 = the original submission)
+    attempts: u32,
+    /// absolute deadline, stamped once at first submission; retries and
+    /// hedges inherit it unchanged — it bounds the *logical* task
+    deadline: Option<Instant>,
+    submitted_at: Instant,
+}
+
+struct ReliabilityState {
+    policy: ReliabilityPolicy,
+    budget: Arc<RetryBudget>,
+    specs: Mutex<HashMap<TaskId, TaskSpec>>,
+}
+
+/// One logical task inside a gather: the current primary attempt, an
+/// optional in-flight hedge, and the retry state machine.
+struct Slot {
+    primary: TaskId,
+    hedge: Option<TaskId>,
+    /// None = not under the reliability loop (no policy installed, or the
+    /// task was submitted outside this client): plain gather behavior
+    spec: Option<TaskSpec>,
+    /// when the current primary attempt went on the wire
+    attempt_started: Instant,
+    /// a scheduled retry waits out its backoff here
+    backoff_until: Option<Instant>,
+    /// deterministic jitter seed (the original task id)
+    seed: u64,
+}
+
 /// Client handle onto a service.
 #[derive(Clone)]
 pub struct FaasClient {
     service: ServiceHandle,
+    reliability: Option<Arc<ReliabilityState>>,
 }
 
 impl FaasClient {
     pub fn new(service: ServiceHandle) -> Self {
-        FaasClient { service }
+        FaasClient { service, reliability: None }
+    }
+
+    /// Install a task-reliability policy on this client: submissions are
+    /// stamped with the policy deadline and recorded for resubmission, and
+    /// [`FaasClient::gather`] retries, hedges and deadline-bounds the
+    /// tasks it manages. A no-op policy leaves the plain fast path.
+    pub fn with_reliability(mut self, policy: ReliabilityPolicy) -> Self {
+        if !policy.is_noop() {
+            self.reliability = Some(Arc::new(ReliabilityState {
+                policy,
+                budget: RetryBudget::new(),
+                specs: Mutex::new(HashMap::new()),
+            }));
+        }
+        self
     }
 
     /// Register a servable function; returns its id (Listing 1:
@@ -51,7 +126,46 @@ impl FaasClient {
         endpoint_id: EndpointId,
         function_id: FunctionId,
     ) -> Result<TaskId, String> {
-        self.service.submit(endpoint_id, function_id, payload)
+        self.submit_attempt(payload, Target::Endpoint(endpoint_id), function_id)
+    }
+
+    /// First submission of a logical task: stamp the policy deadline,
+    /// record the resubmission spec and grow the retry budget.
+    fn submit_attempt(
+        &self,
+        payload: Json,
+        target: Target,
+        function: FunctionId,
+    ) -> Result<TaskId, String> {
+        let Some(rel) = &self.reliability else {
+            return self.submit_to(target, function, payload, None);
+        };
+        let now = Instant::now();
+        let deadline = rel.policy.task_deadline.map(|d| now + d);
+        let id = self.submit_to(target, function, payload.clone(), deadline)?;
+        if rel.policy.retry.is_some() {
+            rel.budget.deposit();
+        }
+        rel.specs.lock().unwrap().insert(
+            id,
+            TaskSpec { function, payload, target, attempts: 1, deadline, submitted_at: now },
+        );
+        Ok(id)
+    }
+
+    fn submit_to(
+        &self,
+        target: Target,
+        function: FunctionId,
+        payload: Json,
+        deadline: Option<Instant>,
+    ) -> Result<TaskId, String> {
+        match target {
+            Target::Endpoint(ep) => {
+                self.service.submit_with_deadline(ep, function, payload, deadline)
+            }
+            Target::Routed => self.service.submit_routed_with_deadline(function, payload, deadline),
+        }
     }
 
     /// Non-blocking result poll; `None` while the task is still in flight
@@ -74,7 +188,7 @@ impl FaasClient {
     /// pick the endpoint (the multi-site analog of [`FaasClient::run`];
     /// see `Service::install_router`).
     pub fn run_routed(&self, payload: Json, function_id: FunctionId) -> Result<TaskId, String> {
-        self.service.submit_routed(function_id, payload)
+        self.submit_attempt(payload, Target::Routed, function_id)
     }
 
     /// Cancel (or drain) a task this client no longer wants; see
@@ -191,6 +305,14 @@ impl FaasClient {
     /// (`Service::cancel`): queued tasks are removed so they never occupy a
     /// worker, running ones are marked abandoned so their results are
     /// dropped on arrival instead of leaking in the service store.
+    ///
+    /// With a reliability policy installed, each position is a *logical*
+    /// task: failed attempts are retried (bounded, budgeted, backed off),
+    /// stragglers get one hedged duplicate on a different endpoint (first
+    /// result wins, the loser is cancelled), and tasks past their absolute
+    /// deadline finalize with the typed [`DEADLINE_EXCEEDED`] error even
+    /// if no worker ever reports. The returned vector still has exactly
+    /// one result per input task.
     pub fn gather<F: FnMut(usize, &Result<Json, String>)>(
         &self,
         tasks: &[TaskId],
@@ -202,6 +324,22 @@ impl FaasClient {
         let gather_t0 = Instant::now();
         let deadline = gather_t0 + timeout;
         let mut last_progress = Instant::now();
+        let rel = self.reliability.clone();
+        let mut slots: Vec<Slot> = tasks
+            .iter()
+            .map(|&t| {
+                let spec = rel.as_ref().and_then(|r| r.specs.lock().unwrap().remove(&t));
+                let attempt_started = spec.as_ref().map(|s| s.submitted_at).unwrap_or(gather_t0);
+                Slot {
+                    primary: t,
+                    hedge: None,
+                    spec,
+                    attempt_started,
+                    backoff_until: None,
+                    seed: t,
+                }
+            })
+            .collect();
         let mut results: Vec<Option<Result<Json, String>>> = vec![None; tasks.len()];
         // indices still awaiting a result: completed slots leave the scan
         // set, so each poll is O(outstanding), not O(total wave)
@@ -209,8 +347,11 @@ impl FaasClient {
         loop {
             // harvest BEFORE the deadline/stall checks: results that
             // arrived during the last sleep must be collected, not
-            // destroyed by the cancel sweep below
-            pending.retain(|&i| match self.get_result(tasks[i]) {
+            // destroyed by the cancel sweep below. One straggler
+            // threshold per sweep — the hedge trigger reads the live p99
+            // once, not once per slot
+            let hedge_after = self.hedge_threshold(rel.as_deref());
+            pending.retain(|&i| match self.poll_slot(&mut slots[i], rel.as_deref(), hedge_after) {
                 Some(r) => {
                     on_complete(i, &r);
                     results[i] = Some(r);
@@ -223,7 +364,7 @@ impl FaasClient {
                 break;
             }
             if Instant::now() > deadline {
-                let cancelled = self.cancel_outstanding(tasks, &pending);
+                let cancelled = self.cancel_outstanding(&slots, &pending);
                 self.trace_gather(gather_t0, tasks.len(), tasks.len() - pending.len(), "timeout");
                 return Err(format!(
                     "timeout with {} tasks outstanding ({cancelled} cancelled)",
@@ -233,7 +374,7 @@ impl FaasClient {
             if let Some(stall) = stall_timeout {
                 if Instant::now() - last_progress > stall {
                     let n = pending.len();
-                    let cancelled = self.cancel_outstanding(tasks, &pending);
+                    let cancelled = self.cancel_outstanding(&slots, &pending);
                     self.trace_gather(gather_t0, tasks.len(), tasks.len() - n, "stalled");
                     return Err(format!(
                         "no task completed for {:.0} s with {n} outstanding \
@@ -249,10 +390,190 @@ impl FaasClient {
         Ok(results.into_iter().map(|r| r.unwrap()).collect())
     }
 
-    /// Cancel every still-pending slot of an abandoned gather; returns how
-    /// many tasks were actually cancelled (vs merely drained).
-    fn cancel_outstanding(&self, tasks: &[TaskId], pending: &[usize]) -> usize {
-        pending.iter().filter(|&&i| self.service.cancel(tasks[i])).count()
+    /// Age past which an in-flight attempt counts as a straggler, from the
+    /// live p99 service time. None until the quantile sketch has enough
+    /// observations — a cold sketch would hedge everything.
+    fn hedge_threshold(&self, rel: Option<&ReliabilityState>) -> Option<Duration> {
+        let hedge = rel?.policy.hedge.as_ref()?;
+        let snap = self.service.metrics.snapshot();
+        if snap.completed < hedge.min_observations {
+            return None;
+        }
+        let from_p99 = Duration::from_secs_f64((snap.p99_service_s * hedge.after_p99).max(0.0));
+        Some(hedge.min_age.max(from_p99))
+    }
+
+    /// Advance one logical task: harvest hedge and primary results, then
+    /// run the retry / deadline / hedge state machine. `Some(_)` is the
+    /// slot's terminal outcome.
+    fn poll_slot(
+        &self,
+        slot: &mut Slot,
+        rel: Option<&ReliabilityState>,
+        hedge_after: Option<Duration>,
+    ) -> Option<Result<Json, String>> {
+        let now = Instant::now();
+        // the hedge first: its success finalizes the logical task
+        if let Some(h) = slot.hedge {
+            match self.get_result(h) {
+                Some(Ok(v)) => {
+                    // first usable result wins; the straggler is abandoned
+                    self.service.cancel(slot.primary);
+                    self.service.metrics.hedge_won();
+                    slot.hedge = None;
+                    return Some(Ok(v));
+                }
+                Some(Err(_)) => {
+                    // a failed hedge is dropped (drained) while the primary
+                    // keeps running — hedges never fail a logical task
+                    self.service.cancel(h);
+                    slot.hedge = None;
+                }
+                None => {}
+            }
+        }
+        if slot.backoff_until.is_none() {
+            if let Some(r) = self.get_result(slot.primary) {
+                if let Some(h) = slot.hedge.take() {
+                    // the primary beat its hedge: abandon the duplicate
+                    self.service.cancel(h);
+                }
+                return match r {
+                    Ok(v) => Some(Ok(v)),
+                    Err(e) => self.handle_failure(slot, rel, e, now),
+                };
+            }
+        }
+        // the absolute deadline bounds the logical task even when no
+        // worker will ever report (a lost result message), and cuts retry
+        // chains short
+        if let Some(d) = slot.spec.as_ref().and_then(|s| s.deadline) {
+            if now > d {
+                let attempts = slot.spec.as_ref().map(|s| s.attempts).unwrap_or(1);
+                self.service.cancel(slot.primary);
+                if let Some(h) = slot.hedge.take() {
+                    self.service.cancel(h);
+                }
+                self.service.metrics.task_deadline_exceeded();
+                crate::trace::instant(
+                    crate::trace::kind::TASK_DEADLINE,
+                    Some(slot.primary),
+                    "client",
+                    format!("abandoned after {attempts} attempt(s)"),
+                );
+                return Some(Err(format!(
+                    "{DEADLINE_EXCEEDED} (abandoned after {attempts} attempt(s))"
+                )));
+            }
+        }
+        // a scheduled retry goes on the wire once its backoff elapses
+        if let Some(until) = slot.backoff_until {
+            if now >= until {
+                slot.backoff_until = None;
+                let spec = slot.spec.as_ref().expect("retry scheduled without a spec");
+                let (target, function, deadline) = (spec.target, spec.function, spec.deadline);
+                match self.submit_to(target, function, spec.payload.clone(), deadline) {
+                    Ok(id) => {
+                        slot.primary = id;
+                        slot.attempt_started = now;
+                    }
+                    // the resubmission itself failed: the logical task fails
+                    Err(e) => return Some(Err(e)),
+                }
+            }
+            return None;
+        }
+        // straggler? hedge once, onto a different endpoint
+        self.maybe_hedge(slot, hedge_after, now);
+        None
+    }
+
+    /// A failed primary attempt: schedule a bounded, budgeted, backed-off
+    /// retry — or surface the error.
+    fn handle_failure(
+        &self,
+        slot: &mut Slot,
+        rel: Option<&ReliabilityState>,
+        err: String,
+        now: Instant,
+    ) -> Option<Result<Json, String>> {
+        let Some(rel) = rel else { return Some(Err(err)) };
+        let Some(retry) = rel.policy.retry.as_ref() else { return Some(Err(err)) };
+        let Some(spec) = slot.spec.as_mut() else { return Some(Err(err)) };
+        if !is_retryable(&err) || spec.attempts >= retry.max_attempts {
+            return Some(Err(err));
+        }
+        if !rel.budget.try_withdraw(retry.budget_ratio, retry.budget_min) {
+            // budget exhausted: a systemic failure must degrade to
+            // fail-fast, not amplify into a retry storm
+            return Some(Err(err));
+        }
+        let delay = retry.backoff(spec.attempts, slot.seed);
+        spec.attempts += 1;
+        // drain the failed attempt's record; the logical task lives on
+        self.service.cancel(slot.primary);
+        self.service.metrics.task_retried();
+        crate::trace::instant(
+            crate::trace::kind::TASK_RETRY,
+            Some(slot.primary),
+            "client",
+            format!("attempt {} in {:.0} ms: {err}", spec.attempts, delay.as_secs_f64() * 1e3),
+        );
+        slot.backoff_until = Some(now + delay);
+        None
+    }
+
+    /// Submit a speculative duplicate for a straggling attempt, excluding
+    /// the straggler's endpoint so the duplicate explores a different
+    /// site. At most one hedge per logical task is in flight at a time.
+    fn maybe_hedge(&self, slot: &mut Slot, hedge_after: Option<Duration>, now: Instant) {
+        let Some(threshold) = hedge_after else { return };
+        if slot.hedge.is_some() {
+            return;
+        }
+        let Some(spec) = slot.spec.as_ref() else { return };
+        // hedging needs the router: a duplicate pinned to the same
+        // endpoint would queue behind the very straggler it is rescuing
+        if !matches!(spec.target, Target::Routed) {
+            return;
+        }
+        if now.saturating_duration_since(slot.attempt_started) < threshold {
+            return;
+        }
+        let Some(ep) = self.service.task_endpoint(slot.primary) else { return };
+        if let Ok(h) =
+            self.service.submit_routed_excluding(spec.function, spec.payload.clone(), ep, spec.deadline)
+        {
+            self.service.metrics.task_hedged();
+            crate::trace::instant(
+                crate::trace::kind::TASK_HEDGE,
+                Some(h),
+                "client",
+                format!("duplicates straggler {} off endpoint {ep}", slot.primary),
+            );
+            slot.hedge = Some(h);
+        }
+    }
+
+    /// Cancel every still-pending slot (primary and hedge) of an abandoned
+    /// gather; returns how many tasks were actually cancelled (vs merely
+    /// drained).
+    fn cancel_outstanding(&self, slots: &[Slot], pending: &[usize]) -> usize {
+        pending
+            .iter()
+            .map(|&i| {
+                let mut n = 0;
+                if self.service.cancel(slots[i].primary) {
+                    n += 1;
+                }
+                if let Some(h) = slots[i].hedge {
+                    if self.service.cancel(h) {
+                        n += 1;
+                    }
+                }
+                n
+            })
+            .sum()
     }
 
     /// Span for a finished (or aborted) gather on the client track.

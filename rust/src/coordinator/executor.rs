@@ -30,6 +30,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::coordinator::chaos::{self, ChaosFault, FaultPoint};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::provider::Provider;
 use crate::coordinator::service::{ServiceHandle, TaskQueue, WorkerContext, WorkerInit};
@@ -167,6 +168,7 @@ impl HighThroughputExecutor {
                                                 );
                                                 handles.push(spawn_worker(
                                                     name,
+                                                    endpoint,
                                                     service.clone(),
                                                     queue.clone(),
                                                     worker_init.clone(),
@@ -287,8 +289,10 @@ fn reap_retired_blocks(blocks_list: &Mutex<Vec<BlockHandle>>) {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn spawn_worker(
     name: String,
+    endpoint: EndpointId,
     service: ServiceHandle,
     queue: Arc<TaskQueue>,
     worker_init: WorkerInit,
@@ -301,7 +305,11 @@ fn spawn_worker(
         .spawn(move || {
             let mut ctx = WorkerContext::new(name.clone());
             let t0 = Instant::now();
-            if let Err(e) = worker_init(&mut ctx) {
+            let init_outcome = match chaos::inject(FaultPoint::WorkerInit, endpoint, None) {
+                Some(ChaosFault::InitFail) => Err("injected init failure (chaos)".to_string()),
+                _ => worker_init(&mut ctx),
+            };
+            if let Err(e) = init_outcome {
                 crate::log_error!("worker", "{name}: init failed: {e}");
                 // lost capacity the live-worker count cannot reveal on a
                 // site that never came up — the router's health probe
@@ -338,8 +346,30 @@ fn spawn_worker(
                 }
                 match queue.pop_task(&profile, Duration::from_millis(50)) {
                     Some(meta) => {
+                        // deadline propagation: a task popped past its
+                        // deadline is dead work — fail it with the typed
+                        // deadline outcome instead of executing it
+                        if meta.expired(Instant::now()) {
+                            service.expire_task(meta.id);
+                            continue;
+                        }
                         let mut ran_ok = false;
                         if let Some((handler, payload)) = service.claim(meta.id, &name) {
+                            match chaos::inject(FaultPoint::Execute, endpoint, Some(meta.id)) {
+                                Some(ChaosFault::Crash) => {
+                                    // preemption / OOM-kill: the claimed
+                                    // task fails AND the worker thread
+                                    // exits, so the capacity loss is real
+                                    metrics.task_executed(false);
+                                    service.complete(
+                                        meta.id,
+                                        Err("worker crashed mid-task (chaos)".to_string()),
+                                    );
+                                    break;
+                                }
+                                Some(ChaosFault::Slow(extra)) => std::thread::sleep(extra),
+                                _ => {}
+                            }
                             // kernel-level spans attach to this task while
                             // the handler runs on this thread
                             crate::trace::set_current_task(Some(meta.id));
@@ -363,15 +393,23 @@ fn spawn_worker(
                                 Ok(v) => crate::scheduler::batcher::result_proves_warm(v),
                                 Err(_) => false,
                             };
-                            // endpoint-hub completion/failure counters:
-                            // the health probe's failure rate and the
-                            // stall detector's progress clock. Uses the
-                            // envelope-aware verdict, not task-level
-                            // Ok-ness: an all-failure `{"batch": [...]}`
-                            // is Ok on the wire but proves the endpoint
-                            // is failing its actual work
-                            metrics.task_executed(ran_ok);
-                            service.complete(meta.id, outcome);
+                            if chaos::inject(FaultPoint::Result, endpoint, Some(meta.id))
+                                .is_some()
+                            {
+                                // lost result message: the record stays
+                                // Running until a hedge rescues the
+                                // logical task or its deadline bounds it
+                            } else {
+                                // endpoint-hub completion/failure counters:
+                                // the health probe's failure rate and the
+                                // stall detector's progress clock. Uses the
+                                // envelope-aware verdict, not task-level
+                                // Ok-ness: an all-failure `{"batch": [...]}`
+                                // is Ok on the wire but proves the endpoint
+                                // is failing its actual work
+                                metrics.task_executed(ran_ok);
+                                service.complete(meta.id, outcome);
+                            }
                         }
                         // only a successful run proves this worker holds
                         // the warm state for the key (a failed handler may

@@ -38,6 +38,12 @@ struct Inner {
     endpoints_readmitted: u64,
     worker_init_failures: u64,
     cancelled: u64,
+    retries: u64,
+    hedges: u64,
+    hedge_wins: u64,
+    deadline_exceeded: u64,
+    migrated: u64,
+    health_probes: u64,
     wait: Accumulator,
     service: Accumulator,
     startup: Accumulator,
@@ -86,6 +92,22 @@ pub struct Snapshot {
     pub worker_init_failures: u64,
     /// tasks cancelled by the client before completion
     pub cancelled: u64,
+    /// failed attempts resubmitted by the client's `RetryPolicy` (each
+    /// retry is a fresh physical submission of the same logical task)
+    pub retries: u64,
+    /// speculative duplicates launched for straggling tasks (hedged
+    /// execution — each hedge is a fresh physical submission)
+    pub hedges: u64,
+    /// hedged tasks whose *speculative* copy delivered the first result
+    pub hedge_wins: u64,
+    /// tasks dropped (never executed, or abandoned by gather) because
+    /// their absolute deadline passed
+    pub deadline_exceeded: u64,
+    /// queued tasks recalled from a newly quarantined endpoint and
+    /// re-enqueued elsewhere (same task id — not a new submission)
+    pub migrated: u64,
+    /// synthetic no-op probes sent to readmitted endpoints
+    pub health_probes: u64,
     pub mean_wait_s: f64,
     pub mean_service_s: f64,
     pub total_service_s: f64,
@@ -214,6 +236,37 @@ impl Metrics {
         self.inner.lock().unwrap().cancelled += 1;
     }
 
+    /// The client's retry policy resubmitted a failed attempt.
+    pub fn task_retried(&self) {
+        self.inner.lock().unwrap().retries += 1;
+    }
+
+    /// The client hedged a straggling task with a speculative duplicate.
+    pub fn task_hedged(&self) {
+        self.inner.lock().unwrap().hedges += 1;
+    }
+
+    /// A hedged task's speculative copy won the race.
+    pub fn hedge_won(&self) {
+        self.inner.lock().unwrap().hedge_wins += 1;
+    }
+
+    /// A task was dropped because its absolute deadline passed.
+    pub fn task_deadline_exceeded(&self) {
+        self.inner.lock().unwrap().deadline_exceeded += 1;
+    }
+
+    /// A queued task was recalled from a quarantined endpoint and
+    /// re-enqueued elsewhere.
+    pub fn task_migrated(&self) {
+        self.inner.lock().unwrap().migrated += 1;
+    }
+
+    /// A synthetic no-op probe was sent to a readmitted endpoint.
+    pub fn health_probe_sent(&self) {
+        self.inner.lock().unwrap().health_probes += 1;
+    }
+
     /// (completed, failed, worker_init_failures) — the narrow read the
     /// router's health probes poll on every routing decision, so they don't
     /// build a full [`Snapshot`] under the router lock.
@@ -253,6 +306,12 @@ impl Metrics {
             endpoints_readmitted: g.endpoints_readmitted,
             worker_init_failures: g.worker_init_failures,
             cancelled: g.cancelled,
+            retries: g.retries,
+            hedges: g.hedges,
+            hedge_wins: g.hedge_wins,
+            deadline_exceeded: g.deadline_exceeded,
+            migrated: g.migrated,
+            health_probes: g.health_probes,
             mean_wait_s: if g.wait.count() > 0 { g.wait.mean() } else { 0.0 },
             mean_service_s: if g.service.count() > 0 { g.service.mean() } else { 0.0 },
             total_service_s: g.service.mean() * g.service.count() as f64,
@@ -314,6 +373,12 @@ impl Snapshot {
             ("endpoints_readmitted", Json::num(self.endpoints_readmitted as f64)),
             ("worker_init_failures", Json::num(self.worker_init_failures as f64)),
             ("cancelled", Json::num(self.cancelled as f64)),
+            ("retries", Json::num(self.retries as f64)),
+            ("hedges", Json::num(self.hedges as f64)),
+            ("hedge_wins", Json::num(self.hedge_wins as f64)),
+            ("deadline_exceeded", Json::num(self.deadline_exceeded as f64)),
+            ("migrated", Json::num(self.migrated as f64)),
+            ("health_probes", Json::num(self.health_probes as f64)),
             ("mean_wait_s", Json::num(self.mean_wait_s)),
             ("mean_service_s", Json::num(self.mean_service_s)),
             ("total_service_s", Json::num(self.total_service_s)),
@@ -418,6 +483,32 @@ mod tests {
         assert_eq!(j.get("route_retries").unwrap().as_f64(), Some(1.0));
         assert_eq!(j.get("endpoints_quarantined").unwrap().as_f64(), Some(2.0));
         assert_eq!(j.get("worker_init_failures").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn reliability_counters_accumulate() {
+        let m = Metrics::new();
+        m.task_retried();
+        m.task_retried();
+        m.task_hedged();
+        m.hedge_won();
+        m.task_deadline_exceeded();
+        m.task_migrated();
+        m.task_migrated();
+        m.task_migrated();
+        m.health_probe_sent();
+        let s = m.snapshot();
+        assert_eq!(s.retries, 2);
+        assert_eq!(s.hedges, 1);
+        assert_eq!(s.hedge_wins, 1);
+        assert_eq!(s.deadline_exceeded, 1);
+        assert_eq!(s.migrated, 3);
+        assert_eq!(s.health_probes, 1);
+        let j = s.to_json();
+        assert_eq!(j.get("retries").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("hedges").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("deadline_exceeded").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("migrated").unwrap().as_f64(), Some(3.0));
     }
 
     #[test]

@@ -17,6 +17,7 @@
 //! router's health scoring quarantines broken sites on) +
 //! [`FaasClient::run_routed`] / [`run_scan_routed`].
 
+pub mod chaos;
 pub mod client;
 pub mod driver;
 pub mod endpoint;
@@ -24,14 +25,17 @@ pub mod executor;
 pub mod fitops;
 pub mod metrics;
 pub mod provider;
+pub mod reliability;
 pub mod serialize;
 pub mod service;
 pub mod task;
 
+pub use chaos::{ChaosFault, ChaosPlan, ChaosRule, FaultPoint};
 pub use client::{BatchSubmission, FaasClient};
 pub use driver::{run_scan, run_scan_routed, ScanOptions};
 pub use endpoint::{Endpoint, EndpointConfig};
 pub use executor::ExecutorConfig;
 pub use provider::{LocalProvider, Provider, SimSlurmProvider};
+pub use reliability::{HedgePolicy, ReliabilityPolicy, RetryBudget, RetryPolicy};
 pub use service::{Service, ServiceHandle, WorkerContext};
 pub use task::{EndpointId, FunctionId, TaskId, TaskState};

@@ -1,0 +1,300 @@
+//! Task-level reliability policies: bounded retry with exponential
+//! backoff + jitter, a retry budget, absolute task deadlines, and hedged
+//! execution for stragglers.
+//!
+//! The paper's "fitting as a service" pitch only holds if a 125-point
+//! scan survives shared-HPC realities — preempted workers, wedged nodes,
+//! slow sites. PR 5 made the *router* fault-aware at endpoint
+//! granularity; this layer closes the task-granularity gap:
+//!
+//! * [`RetryPolicy`] — a failed attempt is resubmitted (bounded attempts,
+//!   exponential backoff with deterministic jitter), gated by a
+//!   [`RetryBudget`] so one failing shape class cannot storm the service
+//!   with resubmissions;
+//! * deadlines — [`crate::scheduler::TaskMeta`] carries an absolute
+//!   deadline; workers drop expired tasks at the pop boundary (dead work
+//!   is never executed) and `gather` abandons expired stragglers, both
+//!   with the typed [`DEADLINE_EXCEEDED`] outcome;
+//! * [`HedgePolicy`] — when a task's in-flight age exceeds a multiple of
+//!   the live p99 service time (from the metrics hub's log-bucketed
+//!   quantile sketch), a speculative duplicate is submitted to a
+//!   *different* healthy endpoint; first result wins, the loser is
+//!   cancelled through `Service::cancel`, and the ledger still reconciles
+//!   to exactly one terminal outcome per logical task.
+//!
+//! All three are carried by a [`ReliabilityPolicy`] installed on the
+//! client ([`crate::coordinator::FaasClient::with_reliability`]); every
+//! decision emits a trace event and a metrics counter through the
+//! observability surface (see `docs/RELIABILITY.md`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Typed error text for a task dropped past its deadline. Stable — the
+/// client and tests match on it via [`is_deadline_exceeded`].
+pub const DEADLINE_EXCEEDED: &str = "deadline exceeded";
+
+/// True when a task error is the typed deadline outcome.
+pub fn is_deadline_exceeded(err: &str) -> bool {
+    err.contains(DEADLINE_EXCEEDED)
+}
+
+/// True when a failed attempt is worth resubmitting: deadline drops are
+/// dead work by definition and cancellations are client decisions, so
+/// neither is retried.
+pub fn is_retryable(err: &str) -> bool {
+    !is_deadline_exceeded(err) && !err.contains("cancelled")
+}
+
+/// SplitMix64 — the deterministic bit mixer behind backoff jitter (no
+/// process-global RNG state, so retry schedules are reproducible per
+/// task id).
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Uniform sample in `[0, 1)` keyed by `seed`.
+fn unit(seed: u64) -> f64 {
+    (splitmix64(seed) >> 11) as f64 / (1u64 << 53) as f64
+}
+
+// ---------------------------------------------------------------------------
+// retry budget
+// ---------------------------------------------------------------------------
+
+/// Token-style retry budget shared by every task a client submits: a
+/// retry may be spent only while total retries stay under
+/// `min_reserve + ratio x first-attempt submissions`. A failing class
+/// exhausts the budget and degrades to fail-fast instead of storming the
+/// service with resubmissions (the gRPC/Finagle retry-budget design,
+/// counter-based so it needs no clock).
+#[derive(Debug, Default)]
+pub struct RetryBudget {
+    deposits: AtomicU64,
+    withdrawals: AtomicU64,
+}
+
+impl RetryBudget {
+    pub fn new() -> Arc<RetryBudget> {
+        Arc::new(RetryBudget::default())
+    }
+
+    /// Record one first-attempt submission (grows the budget).
+    pub fn deposit(&self) {
+        self.deposits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Try to spend one retry; false when the budget is exhausted.
+    pub fn try_withdraw(&self, ratio: f64, min_reserve: u64) -> bool {
+        let deposited = self.deposits.load(Ordering::Relaxed);
+        let allowance = min_reserve + (ratio * deposited as f64) as u64;
+        loop {
+            let withdrawn = self.withdrawals.load(Ordering::Relaxed);
+            if withdrawn >= allowance {
+                return false;
+            }
+            if self
+                .withdrawals
+                .compare_exchange(withdrawn, withdrawn + 1, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+            {
+                return true;
+            }
+        }
+    }
+
+    /// (first-attempt submissions, retries spent).
+    pub fn counts(&self) -> (u64, u64) {
+        (self.deposits.load(Ordering::Relaxed), self.withdrawals.load(Ordering::Relaxed))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// policies
+// ---------------------------------------------------------------------------
+
+/// Bounded-retry policy for failed attempts.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// total attempts per logical task, including the first (1 = never
+    /// retry)
+    pub max_attempts: u32,
+    /// backoff before attempt `n+1` is `backoff_base x 2^(n-1)`, capped
+    /// at `backoff_max`, jittered by `jitter`
+    pub backoff_base: Duration,
+    pub backoff_max: Duration,
+    /// fraction of the computed backoff randomized away (0 = none,
+    /// 0.5 = backoff lands in `[0.5x, 1.0x]`)
+    pub jitter: f64,
+    /// retry allowance as a fraction of first-attempt submissions
+    pub budget_ratio: f64,
+    /// retries always allowed regardless of ratio (so small waves can
+    /// retry at all)
+    pub budget_min: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 3,
+            backoff_base: Duration::from_millis(25),
+            backoff_max: Duration::from_secs(2),
+            jitter: 0.5,
+            budget_ratio: 0.2,
+            budget_min: 10,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Retries (not attempts): convenience for the CLI's `--retries N`.
+    pub fn with_retries(n: u32) -> RetryPolicy {
+        RetryPolicy { max_attempts: n.saturating_add(1), ..Default::default() }
+    }
+
+    /// Backoff before the given retry (`attempt` counts completed
+    /// attempts, so the first retry passes 1). Deterministic per
+    /// (task, attempt).
+    pub fn backoff(&self, attempt: u32, task_seed: u64) -> Duration {
+        let exp = attempt.saturating_sub(1).min(20);
+        let raw = self.backoff_base.as_secs_f64() * (1u64 << exp) as f64;
+        let capped = raw.min(self.backoff_max.as_secs_f64());
+        let j = self.jitter.clamp(0.0, 1.0);
+        let scale = 1.0 - j * unit(task_seed ^ ((attempt as u64) << 32));
+        Duration::from_secs_f64(capped * scale)
+    }
+}
+
+/// Hedged-execution policy for stragglers.
+#[derive(Debug, Clone)]
+pub struct HedgePolicy {
+    /// hedge once a task's in-flight age exceeds `after_p99 x` the live
+    /// p99 service time
+    pub after_p99: f64,
+    /// completed-task observations required before the p99 threshold is
+    /// trusted (a cold sketch would hedge everything)
+    pub min_observations: u64,
+    /// absolute floor on the hedge threshold, whatever the sketch says
+    pub min_age: Duration,
+}
+
+impl Default for HedgePolicy {
+    fn default() -> Self {
+        HedgePolicy {
+            after_p99: 2.0,
+            min_observations: 20,
+            min_age: Duration::from_millis(10),
+        }
+    }
+}
+
+/// The full reliability surface a client applies to the tasks it
+/// submits and gathers. `Default` is everything-off: exactly the
+/// pre-reliability behavior.
+#[derive(Debug, Clone, Default)]
+pub struct ReliabilityPolicy {
+    pub retry: Option<RetryPolicy>,
+    /// relative deadline stamped on every submission as an absolute
+    /// `TaskMeta.deadline`; propagated unchanged through retries, hedges
+    /// and migration
+    pub task_deadline: Option<Duration>,
+    pub hedge: Option<HedgePolicy>,
+}
+
+impl ReliabilityPolicy {
+    pub fn new() -> ReliabilityPolicy {
+        ReliabilityPolicy::default()
+    }
+
+    pub fn with_retry(mut self, retry: RetryPolicy) -> Self {
+        self.retry = Some(retry);
+        self
+    }
+
+    pub fn with_task_deadline(mut self, deadline: Duration) -> Self {
+        self.task_deadline = Some(deadline);
+        self
+    }
+
+    pub fn with_hedge(mut self, hedge: HedgePolicy) -> Self {
+        self.hedge = Some(hedge);
+        self
+    }
+
+    /// True when nothing is enabled (the client takes its fast path).
+    pub fn is_noop(&self) -> bool {
+        self.retry.is_none() && self.task_deadline.is_none() && self.hedge.is_none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deadline_errors_are_typed_and_never_retryable() {
+        assert!(is_deadline_exceeded(DEADLINE_EXCEEDED));
+        assert!(is_deadline_exceeded("task 7: deadline exceeded (queued 3.1 s)"));
+        assert!(!is_deadline_exceeded("worker crashed"));
+        assert!(!is_retryable(DEADLINE_EXCEEDED));
+        assert!(!is_retryable("cancelled by gather timeout"));
+        assert!(is_retryable("worker crashed (chaos)"));
+    }
+
+    #[test]
+    fn backoff_grows_exponentially_capped_and_jittered() {
+        let p = RetryPolicy {
+            backoff_base: Duration::from_millis(100),
+            backoff_max: Duration::from_millis(350),
+            jitter: 0.0,
+            ..Default::default()
+        };
+        assert_eq!(p.backoff(1, 7), Duration::from_millis(100));
+        assert_eq!(p.backoff(2, 7), Duration::from_millis(200));
+        // capped at backoff_max
+        assert_eq!(p.backoff(3, 7), Duration::from_millis(350));
+        assert_eq!(p.backoff(9, 7), Duration::from_millis(350));
+
+        // jitter shrinks the wait deterministically within [1-j, 1] x capped
+        let j = RetryPolicy { jitter: 0.5, ..p };
+        let b = j.backoff(1, 7);
+        assert!(b <= Duration::from_millis(100) && b >= Duration::from_millis(50), "{b:?}");
+        assert_eq!(j.backoff(1, 7), b, "jitter must be deterministic per (task, attempt)");
+        assert_ne!(j.backoff(1, 8), b, "different tasks must not thunder together");
+    }
+
+    #[test]
+    fn retry_budget_bounds_resubmissions() {
+        let b = RetryBudget::new();
+        // min reserve lets small waves retry at all
+        assert!(b.try_withdraw(0.1, 2));
+        assert!(b.try_withdraw(0.1, 2));
+        assert!(!b.try_withdraw(0.1, 2), "reserve exhausted");
+        // deposits grow the allowance: 20 submissions x 0.1 = 2 more
+        for _ in 0..20 {
+            b.deposit();
+        }
+        assert!(b.try_withdraw(0.1, 2));
+        assert!(b.try_withdraw(0.1, 2));
+        assert!(!b.try_withdraw(0.1, 2));
+        assert_eq!(b.counts(), (20, 4));
+    }
+
+    #[test]
+    fn policy_builder_roundtrip() {
+        let p = ReliabilityPolicy::new();
+        assert!(p.is_noop());
+        let p = p
+            .with_retry(RetryPolicy::with_retries(2))
+            .with_task_deadline(Duration::from_secs(30))
+            .with_hedge(HedgePolicy::default());
+        assert!(!p.is_noop());
+        assert_eq!(p.retry.as_ref().unwrap().max_attempts, 3);
+        assert_eq!(p.task_deadline, Some(Duration::from_secs(30)));
+        assert!(p.hedge.as_ref().unwrap().after_p99 > 1.0);
+    }
+}

@@ -13,10 +13,20 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::reliability::DEADLINE_EXCEEDED;
 use crate::coordinator::task::{EndpointId, FunctionId, TaskId, TaskOutcome, TaskRecord, TaskState};
 use crate::scheduler::policy::TaskMeta;
 use crate::scheduler::router::Router;
 use crate::util::json::Json;
+
+/// Reserved function id of the built-in no-op readmission probe, parked
+/// at the top of the id space so user registrations (0, 1, 2, …) are
+/// unaffected.
+pub const PROBE_FUNCTION: FunctionId = FunctionId::MAX;
+
+/// Deadline stamped on synthetic readmission probes: a probe that cannot
+/// finish within this is itself evidence the endpoint is still broken.
+const PROBE_DEADLINE: Duration = Duration::from_secs(10);
 
 /// The interchange between the service and one endpoint's workers. Since
 /// the scheduler subsystem landed this is the policy-driven
@@ -104,8 +114,19 @@ pub type ServiceHandle = Arc<Service>;
 
 impl Service {
     pub fn new() -> ServiceHandle {
+        let mut state = State::default();
+        // the built-in readmission probe: a no-op function the router's
+        // active probing submits to a quarantined endpoint so readmission
+        // never gambles a real user task on a possibly-still-broken site
+        state.functions.insert(
+            PROBE_FUNCTION,
+            FunctionEntry {
+                name: "__health_probe".to_string(),
+                handler: Arc::new(|_payload, _ctx| Ok(Json::num(1.0))),
+            },
+        );
         Arc::new(Service {
-            state: Mutex::new(State::default()),
+            state: Mutex::new(state),
             results: Condvar::new(),
             router: Mutex::new(None),
             metrics: Metrics::new(),
@@ -196,6 +217,58 @@ impl Service {
     /// — the loop is bounded because every retry shrinks the candidate
     /// set.
     pub fn submit_routed(&self, function: FunctionId, payload: Json) -> Result<TaskId, String> {
+        self.submit_routed_opts(function, payload, None, None)
+    }
+
+    /// [`Service::submit_routed`] with an absolute completion deadline
+    /// stamped on the task (see `TaskMeta::deadline`): workers drop the
+    /// task unexecuted if they pop it past the deadline.
+    pub fn submit_routed_with_deadline(
+        &self,
+        function: FunctionId,
+        payload: Json,
+        deadline: Option<Instant>,
+    ) -> Result<TaskId, String> {
+        self.submit_routed_opts(function, payload, None, deadline)
+    }
+
+    /// Routed submission that avoids `exclude` — the hedged-execution
+    /// path: a speculative duplicate of a straggler must land on a
+    /// *different* endpoint than the attempt it is rescuing (the router
+    /// falls back to the full set when no alternative exists).
+    pub fn submit_routed_excluding(
+        &self,
+        function: FunctionId,
+        payload: Json,
+        exclude: EndpointId,
+        deadline: Option<Instant>,
+    ) -> Result<TaskId, String> {
+        self.submit_routed_opts(function, payload, Some(exclude), deadline)
+    }
+
+    fn submit_routed_opts(
+        &self,
+        function: FunctionId,
+        payload: Json,
+        exclude: Option<EndpointId>,
+        deadline: Option<Instant>,
+    ) -> Result<TaskId, String> {
+        let result = self.submit_routed_inner(function, payload, exclude, deadline);
+        // reliability housekeeping rides the routed-submission cadence:
+        // recall queued work off freshly quarantined endpoints, and drive
+        // the synthetic readmission probes
+        self.migrate_quarantined_queues();
+        self.drive_probes();
+        result
+    }
+
+    fn submit_routed_inner(
+        &self,
+        function: FunctionId,
+        payload: Json,
+        exclude: Option<EndpointId>,
+        deadline: Option<Instant>,
+    ) -> Result<TaskId, String> {
         let key = crate::scheduler::affinity_key_of(function, &payload);
         let weight = crate::scheduler::batcher::payload_weight(&payload);
         let mut payload = payload;
@@ -206,8 +279,9 @@ impl Service {
                 let router = guard
                     .as_mut()
                     .ok_or("no router installed on this service (Service::install_router)")?;
-                let decision =
-                    router.decide(&key, weight).ok_or("router has no registered endpoints")?;
+                let decision = router
+                    .decide_excluding(&key, weight, exclude)
+                    .ok_or("router has no registered endpoints")?;
                 let events = router.take_health_events();
                 if !events.is_empty() {
                     self.metrics.health_events(events.quarantined, events.readmitted);
@@ -248,8 +322,14 @@ impl Service {
                     format!("key {key}"),
                 );
             }
-            match self.submit_with_meta(decision.endpoint, function, payload, key.clone(), weight)
-            {
+            match self.submit_with_meta(
+                decision.endpoint,
+                function,
+                payload,
+                key.clone(),
+                weight,
+                deadline,
+            ) {
                 Ok(id) => {
                     // commit warmth, scale signals and counters only now: a
                     // failed submit must not skew placement state or metrics
@@ -280,9 +360,24 @@ impl Service {
         function: FunctionId,
         payload: Json,
     ) -> Result<TaskId, String> {
+        self.submit_with_deadline(endpoint, function, payload, None)
+    }
+
+    /// [`Service::submit`] with an absolute completion deadline: the
+    /// worker that pops the task past `deadline` drops it with the typed
+    /// deadline outcome instead of executing dead work. Retries, hedges
+    /// and migration all propagate the *original* deadline unchanged — it
+    /// is a property of the logical task, not of one attempt.
+    pub fn submit_with_deadline(
+        &self,
+        endpoint: EndpointId,
+        function: FunctionId,
+        payload: Json,
+        deadline: Option<Instant>,
+    ) -> Result<TaskId, String> {
         let affinity_key = crate::scheduler::affinity_key_of(function, &payload);
         let weight = crate::scheduler::batcher::payload_weight(&payload);
-        self.submit_with_meta(endpoint, function, payload, affinity_key, weight)
+        self.submit_with_meta(endpoint, function, payload, affinity_key, weight, deadline)
             .map_err(Rejection::into_message)
     }
 
@@ -298,6 +393,7 @@ impl Service {
         payload: Json,
         affinity_key: String,
         weight: usize,
+        deadline: Option<Instant>,
     ) -> Result<TaskId, Rejection> {
         let mut g = self.state.lock().unwrap();
         if !g.functions.contains_key(&function) {
@@ -326,8 +422,15 @@ impl Service {
             None
         };
         drop(g);
-        let accepted = queue
-            .push_meta(TaskMeta { id, function, affinity_key, priority, weight, enqueued: Instant::now() });
+        let accepted = queue.push_meta(TaskMeta {
+            id,
+            function,
+            affinity_key,
+            priority,
+            weight,
+            enqueued: Instant::now(),
+            deadline,
+        });
         if !accepted {
             // the interchange closed under us (endpoint shutting down). The
             // id never escapes — this Err is the only way the caller learns
@@ -583,6 +686,190 @@ impl Service {
             TaskState::Success | TaskState::Failed => {
                 g.tasks.remove(&id);
                 false
+            }
+        }
+    }
+
+    /// Fail a queued task whose deadline has passed with the typed
+    /// deadline outcome: the worker pop boundary calls this instead of
+    /// executing dead work, and the migration path calls it for recalled
+    /// tasks that expired while queued. The task lands in the `failed`
+    /// ledger bucket (and the `deadline_exceeded` counter separately).
+    /// False when the task is no longer queued — already claimed,
+    /// finished or cancelled.
+    pub fn expire_task(&self, id: TaskId) -> bool {
+        let mut g = self.state.lock().unwrap();
+        let Some(t) = g.tasks.get_mut(&id) else { return false };
+        if t.state != TaskState::Pending && t.state != TaskState::WaitingForNodes {
+            return false;
+        }
+        let now = Instant::now();
+        let wait = now.saturating_duration_since(t.submitted_at).as_secs_f64();
+        t.state = TaskState::Failed;
+        t.finished_at = Some(now);
+        t.outcome =
+            Some(TaskOutcome::Err(format!("{DEADLINE_EXCEEDED} ({wait:.3}s queued)")));
+        drop(g);
+        // no claim ever happened, so the endpoint's running counter is
+        // untouched; service time is zero by definition
+        self.metrics.task_finished(false, wait, 0.0);
+        self.metrics.task_deadline_exceeded();
+        if crate::trace::enabled() {
+            crate::trace::instant(
+                crate::trace::kind::TASK_DEADLINE,
+                Some(id),
+                "deadline",
+                format!("dropped unexecuted after {wait:.3}s queued"),
+            );
+            // the failed outcome is ledger-counted, so it needs its
+            // task.result instant for trace<->ledger reconciliation
+            crate::trace::instant(crate::trace::kind::TASK_RESULT, Some(id), "deadline", "err".to_string());
+        }
+        self.results.notify_all();
+        true
+    }
+
+    /// Endpoint a task is placed on (None once the record is gone). The
+    /// hedging client uses this to exclude a straggler's endpoint from
+    /// the speculative duplicate's candidate set.
+    pub fn task_endpoint(&self, id: TaskId) -> Option<EndpointId> {
+        self.state.lock().unwrap().tasks.get(&id).map(|t| t.endpoint)
+    }
+
+    // -- reliability housekeeping (routed services) ------------------------
+
+    /// Task migration on quarantine: recall every task still queued on a
+    /// freshly quarantined endpoint and re-place it on a healthy site.
+    /// The task keeps its id, record and deadline — migration moves the
+    /// interchange entry, it does not resubmit (the ledger sees nothing).
+    fn migrate_quarantined_queues(&self) {
+        let quarantined = {
+            let mut guard = self.router.lock().unwrap();
+            match guard.as_mut() {
+                Some(r) => r.take_quarantined_endpoints(),
+                None => return,
+            }
+        };
+        for ep in quarantined {
+            let Some(queue) = self.state.lock().unwrap().endpoints.get(&ep).cloned() else {
+                continue;
+            };
+            for meta in queue.recall_queued() {
+                if meta.expired(Instant::now()) {
+                    // already dead work: fail it now rather than re-queue
+                    self.expire_task(meta.id);
+                    continue;
+                }
+                let target = {
+                    let mut guard = self.router.lock().unwrap();
+                    guard.as_mut().and_then(|r| {
+                        r.decide_excluding(&meta.affinity_key, meta.weight, Some(ep))
+                            .map(|d| d.endpoint)
+                    })
+                };
+                let new_home = match target {
+                    Some(t) if t != ep => t,
+                    // nowhere healthier to go: put it back — it runs when
+                    // the site recovers or expires at its deadline
+                    _ => {
+                        let _ = queue.push_meta(meta);
+                        continue;
+                    }
+                };
+                let target_queue = {
+                    let mut g = self.state.lock().unwrap();
+                    let q = g.endpoints.get(&new_home).cloned();
+                    if q.is_some() {
+                        if let Some(rec) = g.tasks.get_mut(&meta.id) {
+                            rec.endpoint = new_home;
+                        }
+                    }
+                    q
+                };
+                let moved = target_queue.map(|q| q.push_meta(meta.clone())).unwrap_or(false);
+                if moved {
+                    if let Some(r) = self.router.lock().unwrap().as_mut() {
+                        r.note_routed(new_home, &meta.affinity_key);
+                    }
+                    self.metrics.task_migrated();
+                    if crate::trace::enabled() {
+                        crate::trace::instant(
+                            crate::trace::kind::TASK_MIGRATE,
+                            Some(meta.id),
+                            &self.endpoint_label(new_home),
+                            format!("recalled from quarantined endpoint {ep}"),
+                        );
+                    }
+                } else {
+                    // the target vanished mid-move: send the task home
+                    if let Some(rec) = self.state.lock().unwrap().tasks.get_mut(&meta.id) {
+                        rec.endpoint = ep;
+                    }
+                    let _ = queue.push_meta(meta);
+                }
+            }
+        }
+    }
+
+    /// Active re-probing: resolve in-flight readmission probes against
+    /// their task outcomes, then submit probes for endpoints whose
+    /// quarantine sentence just expired (see
+    /// `Router::with_active_probing`).
+    fn drive_probes(&self) {
+        let pending = {
+            let guard = self.router.lock().unwrap();
+            match guard.as_ref() {
+                Some(r) => r.pending_probes(),
+                None => return,
+            }
+        };
+        for (ep, task) in pending {
+            let verdict = match self.try_result(task) {
+                Some(Ok(_)) => Some(true),
+                Some(Err(_)) => Some(false),
+                None => None,
+            };
+            if let Some(healthy) = verdict {
+                // terminal probe: drain its record (cancel on a terminal
+                // task only cleans up — nothing is counted cancelled)
+                self.cancel(task);
+                if let Some(r) = self.router.lock().unwrap().as_mut() {
+                    r.resolve_probe(ep, healthy);
+                }
+            }
+        }
+        let candidates = {
+            let mut guard = self.router.lock().unwrap();
+            match guard.as_mut() {
+                Some(r) => r.take_probe_candidates(),
+                None => return,
+            }
+        };
+        for ep in candidates {
+            let payload = Json::obj(vec![("__health_probe", Json::num(1.0))]);
+            let deadline = Some(Instant::now() + PROBE_DEADLINE);
+            match self.submit_with_meta(ep, PROBE_FUNCTION, payload, String::new(), 1, deadline) {
+                Ok(task) => {
+                    self.metrics.health_probe_sent();
+                    if crate::trace::enabled() {
+                        crate::trace::instant(
+                            crate::trace::kind::HEALTH_PROBE,
+                            Some(task),
+                            &self.endpoint_label(ep),
+                            "synthetic readmission probe".to_string(),
+                        );
+                    }
+                    if let Some(r) = self.router.lock().unwrap().as_mut() {
+                        r.note_probe_started(ep, task);
+                    }
+                }
+                Err(_) => {
+                    // cannot even enqueue the probe: the endpoint is gone
+                    // or closing — treat as a failed probe
+                    if let Some(r) = self.router.lock().unwrap().as_mut() {
+                        r.resolve_probe(ep, false);
+                    }
+                }
             }
         }
     }

@@ -12,8 +12,8 @@ use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 use pyhf_faas::coordinator::{
-    fitops, run_scan, Endpoint, EndpointConfig, ExecutorConfig, FaasClient, Service,
-    SimSlurmProvider,
+    fitops, run_scan, Endpoint, EndpointConfig, ExecutorConfig, FaasClient, HedgePolicy,
+    ReliabilityPolicy, RetryPolicy, Service, SimSlurmProvider,
 };
 use pyhf_faas::histfactory::{dense, Workspace};
 use pyhf_faas::infer::results::upper_limit_on_axis;
@@ -40,6 +40,13 @@ COMMANDS:
                    (fan the scan out across N endpoints via the router)
                    [--stall-after SECS] (router health: quarantine an endpoint
                    making no completion progress for SECS; default 30)
+                   [--retries N] (resubmit failed fits up to N times, with
+                   exponential backoff and a retry budget)
+                   [--task-deadline SECS] (absolute per-fit deadline: dead
+                   work is dropped at the worker and bounded at the client)
+                   [--hedge-after-p99 FACTOR] (duplicate a fit stuck longer
+                   than FACTOR x live p99 onto another endpoint; first
+                   result wins)
                    [--bench-out BENCH_fit.json] (machine-readable throughput)
                    [--trace-out trace.json] (task-lifecycle trace: Chrome
                    trace-event JSON, open at ui.perfetto.dev)
@@ -209,7 +216,9 @@ fn start_endpoints(
         })
         .collect();
     if endpoints.len() > 1 {
-        let mut router = Router::new(route);
+        // readmission is probe-gated: a quarantined site must pass a
+        // synthetic no-op probe before real work is routed back to it
+        let mut router = Router::new(route).with_active_probing(true);
         if let Some(stall) = stall_after {
             router = router
                 .with_health_config(HealthConfig { stall_after: stall, ..Default::default() });
@@ -260,6 +269,31 @@ fn cmd_scan(args: &Args) -> Result<(), String> {
         Some(_) => Some(Duration::from_secs(args.get_u64("stall-after", 30)?)),
         None => None,
     };
+    let mut reliability = ReliabilityPolicy::new();
+    if args.get("retries").is_some() {
+        let n = args.get_usize("retries", 2)? as u32;
+        reliability = reliability.with_retry(RetryPolicy::with_retries(n));
+    }
+    if args.get("task-deadline").is_some() {
+        let secs = args.get_f64("task-deadline", 60.0)?;
+        if secs <= 0.0 {
+            return Err("--task-deadline must be positive".to_string());
+        }
+        reliability = reliability.with_task_deadline(Duration::from_secs_f64(secs));
+    }
+    if args.get("hedge-after-p99").is_some() {
+        let factor = args.get_f64("hedge-after-p99", 2.0)?;
+        if factor < 1.0 {
+            return Err("--hedge-after-p99 must be >= 1.0".to_string());
+        }
+        if n_endpoints == 1 {
+            eprintln!(
+                "note: --hedge-after-p99 has no effect with a single endpoint \
+                 (hedges need the router to pick a different site)"
+            );
+        }
+        reliability = reliability.with_hedge(HedgePolicy { after_p99: factor, ..Default::default() });
+    }
 
     // tracing must be on before the endpoints spawn so worker startup and
     // the first route decisions land in the timeline
@@ -278,7 +312,7 @@ fn cmd_scan(args: &Args) -> Result<(), String> {
         stall_after,
         artifact_dir(args),
     )?;
-    let client = FaasClient::new(svc.clone());
+    let client = FaasClient::new(svc.clone()).with_reliability(reliability.clone());
 
     println!("prepare: waiting-for-nodes");
     let opts = pyhf_faas::coordinator::ScanOptions {
@@ -342,8 +376,14 @@ fn cmd_scan(args: &Args) -> Result<(), String> {
         let init_failures: u64 =
             endpoints.iter().map(|e| e.metrics_snapshot().worker_init_failures).sum();
         println!(
-            "  health: {} quarantined | {} readmitted | {} worker-init failures",
-            m.endpoints_quarantined, m.endpoints_readmitted, init_failures
+            "  health: {} quarantined | {} readmitted | {} worker-init failures | {} probes",
+            m.endpoints_quarantined, m.endpoints_readmitted, init_failures, m.health_probes
+        );
+    }
+    if !reliability.is_noop() || m.retries + m.hedges + m.deadline_exceeded + m.migrated > 0 {
+        println!(
+            "  reliability: {} retries | {} hedges ({} won) | {} deadline-exceeded | {} migrated",
+            m.retries, m.hedges, m.hedge_wins, m.deadline_exceeded, m.migrated
         );
     }
     if let Some(ul) = upper_limit_on_axis(&scan.points, 0.0) {

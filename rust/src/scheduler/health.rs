@@ -400,6 +400,26 @@ impl HealthMonitor {
     pub fn is_quarantined(&self, now: Instant) -> bool {
         matches!(self.state, State::Quarantined { until } if now < until)
     }
+
+    /// Distrust multiplier from this endpoint's recovery history, >= 1.0:
+    /// 1.0 while the pending quarantine sentence is the base backoff, +1
+    /// for every escalation still unforgiven. The router scales its
+    /// health load penalty (and thereby the effective spill margin every
+    /// load-aware strategy sees) by this, so a site that keeps relapsing
+    /// is avoided harder than one with the same instantaneous score but a
+    /// clean record.
+    pub fn penalty_weight(&self) -> f64 {
+        let base = self.cfg.backoff_base.as_secs_f64().max(1e-9);
+        let ratio = (self.backoff.as_secs_f64() / base).max(1.0);
+        1.0 + ratio.log2()
+    }
+
+    /// External verdict that the endpoint is still broken (a synthetic
+    /// readmission probe failed): re-enter quarantine at the escalated
+    /// sentence immediately instead of waiting for the next bad sample.
+    pub fn punish(&mut self, now: Instant, events: &mut HealthEvents) {
+        self.enter_quarantine(now, events);
+    }
 }
 
 #[cfg(test)]
@@ -605,6 +625,37 @@ mod tests {
         let s = m.assess(Instant::now(), alive, &mut ev);
         assert!(!s.quarantined);
         assert_eq!(s.init_failures, 0, "restored capacity forgives the lost workers");
+    }
+
+    #[test]
+    fn penalty_weight_tracks_escalation_history() {
+        let mut m = HealthMonitor::new(cfg_ms(20, 30));
+        let mut ev = HealthEvents::default();
+        assert_eq!(m.penalty_weight(), 1.0, "clean record pays the base penalty");
+        // first quarantine escalates the pending sentence to 2x: one unit
+        // of extra distrust
+        assert!(m.assess(Instant::now(), sample(0, 0, 8, 0), &mut ev).quarantined);
+        assert_eq!(m.penalty_weight(), 2.0);
+        // a second sentence (punish) doubles again: 4x backoff = +2 units
+        m.punish(Instant::now(), &mut ev);
+        assert_eq!(m.penalty_weight(), 3.0);
+    }
+
+    #[test]
+    fn punish_requarantines_at_the_escalated_sentence() {
+        let mut m = HealthMonitor::new(cfg_ms(20, 30));
+        let mut ev = HealthEvents::default();
+        assert!(m.assess(Instant::now(), sample(0, 0, 8, 0), &mut ev).quarantined);
+        std::thread::sleep(Duration::from_millis(40));
+        // sentence served: probation
+        assert!(!m.assess(Instant::now(), sample(0, 0, 8, 0), &mut ev).quarantined);
+        // a failed readmission probe sends it straight back, for the
+        // escalated 60 ms sentence
+        let t0 = Instant::now();
+        m.punish(t0, &mut ev);
+        assert_eq!(ev.quarantined, 2);
+        assert!(m.is_quarantined(t0 + Duration::from_millis(45)));
+        assert!(!m.is_quarantined(t0 + Duration::from_millis(70)));
     }
 
     #[test]

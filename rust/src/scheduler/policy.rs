@@ -43,6 +43,12 @@ pub struct TaskMeta {
     /// weighs queue depth by it so coalescing doesn't hide demand.
     pub weight: usize,
     pub enqueued: Instant,
+    /// absolute completion deadline: workers drop (never execute) a task
+    /// popped after this instant and the service records a typed
+    /// `deadline exceeded` failure instead of running dead work. The
+    /// deadline propagates unchanged through retries, hedges and
+    /// migration — it is a property of the *logical* task.
+    pub deadline: Option<Instant>,
 }
 
 impl TaskMeta {
@@ -55,7 +61,14 @@ impl TaskMeta {
             priority: 0.0,
             weight: 1,
             enqueued: Instant::now(),
+            deadline: None,
         }
+    }
+
+    /// True once the task's absolute deadline has passed (`false` when no
+    /// deadline is set).
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
     }
 }
 

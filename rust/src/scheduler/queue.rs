@@ -161,6 +161,23 @@ impl SchedQueue {
         out
     }
 
+    /// Recall every queued task *without* closing the queue — the
+    /// migration path when this endpoint is quarantined: queued metas are
+    /// pulled back so the router can place them on a healthy site, while
+    /// the queue stays open for the endpoint's eventual readmission.
+    /// Bypasses affinity accounting like [`SchedQueue::drain_remaining`]
+    /// (a recall is not a dispatch).
+    pub fn recall_queued(&self) -> Vec<TaskMeta> {
+        let mut g = self.inner.lock().unwrap();
+        let anon = WorkerProfile::anonymous();
+        let mut out = Vec::new();
+        while let Some(meta) = g.policy.pop_for(&anon, Instant::now()) {
+            g.queued_weight = g.queued_weight.saturating_sub(meta.weight.max(1));
+            out.push(meta);
+        }
+        out
+    }
+
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().policy.len()
     }
@@ -310,6 +327,20 @@ mod tests {
         let drained = q.drain_remaining();
         assert_eq!(drained.len(), 1);
         assert_eq!(q.queued_weight(), 0);
+    }
+
+    #[test]
+    fn recall_leaves_queue_open() {
+        let q = SchedQueue::new();
+        q.push_meta(TaskMeta { weight: 3, ..TaskMeta::bare(1) });
+        q.push_meta(TaskMeta::bare(2));
+        let recalled = q.recall_queued();
+        assert_eq!(recalled.len(), 2);
+        assert_eq!(q.queued_weight(), 0);
+        assert!(!q.is_closed());
+        // the queue keeps working after a recall (readmission path)
+        assert!(q.push_meta(TaskMeta::bare(3)));
+        assert_eq!(q.pop(Duration::from_millis(5)), Some(3));
     }
 
     #[test]

@@ -92,7 +92,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::coordinator::task::EndpointId;
+use crate::coordinator::task::{EndpointId, TaskId};
 use crate::scheduler::autoscale::RouterScaleSignal;
 use crate::scheduler::health::{
     HealthConfig, HealthEvents, HealthMonitor, HealthSample, HealthScore,
@@ -165,8 +165,13 @@ pub struct EndpointView {
     /// equivalents (0.0 for the local site)
     pub link_cost: f64,
     /// health score in [0, 1] (1.0 = fully healthy); degraded endpoints pay
-    /// [`HEALTH_LOAD_PENALTY`] proportionally inside [`EndpointView::load`]
+    /// `penalty` proportionally inside [`EndpointView::load`]
     pub health: f64,
+    /// load-equivalent of full ill health for *this* endpoint:
+    /// [`HEALTH_LOAD_PENALTY`] scaled by the health monitor's
+    /// recovery-history weight, so a site with a record of relapses is
+    /// spilled away from earlier than a first offender at the same score
+    pub penalty: f64,
 }
 
 impl EndpointView {
@@ -175,7 +180,7 @@ impl EndpointView {
     pub fn load(&self) -> f64 {
         self.queued_weight as f64 / self.active_workers.max(1) as f64
             + self.link_cost
-            + (1.0 - self.health.clamp(0.0, 1.0)) * HEALTH_LOAD_PENALTY
+            + (1.0 - self.health.clamp(0.0, 1.0)) * self.penalty
     }
 }
 
@@ -385,6 +390,22 @@ pub struct RouteDecision {
     pub quarantine_diverted: bool,
 }
 
+/// Lifecycle of one endpoint's synthetic readmission probe (active
+/// probing only): while not `Idle`, the endpoint stays out of the routing
+/// candidate set — readmission is gambled on a no-op probe task, never on
+/// a real user task.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ProbeState {
+    Idle,
+    /// quarantine expired; the service should submit a probe task
+    Requested,
+    /// handed to the service ([`Router::take_probe_candidates`]), probe
+    /// task id not yet reported back
+    Dispatched,
+    /// probe task in flight on the endpoint
+    InFlight(TaskId),
+}
+
 struct Target {
     endpoint: EndpointId,
     site: usize,
@@ -395,6 +416,10 @@ struct Target {
     monitor: HealthMonitor,
     /// the endpoint's autoscale inbox for spilled/diverted demand
     signal: Option<Arc<RouterScaleSignal>>,
+    /// quarantine status at the previous assessment (transition edges
+    /// feed task migration and probe dispatch)
+    was_quarantined: bool,
+    probe_state: ProbeState,
 }
 
 /// Service-level multi-endpoint router: owns the target registry, the
@@ -411,6 +436,12 @@ pub struct Router {
     /// quarantine/readmission transitions since the last
     /// [`Router::take_health_events`] drain
     pending_events: HealthEvents,
+    /// endpoints newly quarantined since the last
+    /// [`Router::take_quarantined_endpoints`] drain (task-migration feed)
+    pending_quarantined: Vec<EndpointId>,
+    /// gate readmission behind a synthetic probe task instead of the
+    /// first real task (off by default; the service enables it)
+    active_probing: bool,
 }
 
 impl Router {
@@ -426,7 +457,20 @@ impl Router {
             warm_keys_capacity: DEFAULT_WARM_KEYS_PER_ENDPOINT,
             health_cfg: HealthConfig::default(),
             pending_events: HealthEvents::default(),
+            pending_quarantined: Vec::new(),
+            active_probing: false,
         }
+    }
+
+    /// Gate quarantine readmission behind a synthetic no-op probe: when a
+    /// sentence expires the endpoint stays out of the candidate set until
+    /// the service's probe task succeeds on it ([`Router::take_probe_candidates`]
+    /// / [`Router::resolve_probe`]), so readmission never gambles a real
+    /// user task on a possibly-still-broken site. Off by default — bare
+    /// routers (tests, simulations) readmit on probation as before.
+    pub fn with_active_probing(mut self, on: bool) -> Router {
+        self.active_probing = on;
+        self
     }
 
     /// Install the health-scoring knobs (stall window, quarantine backoff,
@@ -481,6 +525,8 @@ impl Router {
             warm: LruSet::new(self.warm_keys_capacity),
             monitor,
             signal,
+            was_quarantined: false,
+            probe_state: ProbeState::Idle,
         });
     }
 
@@ -523,10 +569,29 @@ impl Router {
     /// *every* target is quarantined the router degrades gracefully and
     /// picks among them anyway — a sick endpoint beats a guaranteed error.
     pub fn decide(&mut self, key: &str, weight: usize) -> Option<RouteDecision> {
-        self.decide_at(Instant::now(), key, weight)
+        self.decide_at(Instant::now(), key, weight, None)
     }
 
-    fn decide_at(&mut self, now: Instant, key: &str, weight: usize) -> Option<RouteDecision> {
+    /// [`Router::decide`] with `exclude` kept out of the candidate set —
+    /// the re-placement path for hedges and migrated tasks, which must not
+    /// land back on the endpoint they are escaping. Falls back to the full
+    /// candidate set when the exclusion would leave no target.
+    pub fn decide_excluding(
+        &mut self,
+        key: &str,
+        weight: usize,
+        exclude: Option<EndpointId>,
+    ) -> Option<RouteDecision> {
+        self.decide_at(Instant::now(), key, weight, exclude)
+    }
+
+    fn decide_at(
+        &mut self,
+        now: Instant,
+        key: &str,
+        weight: usize,
+        exclude: Option<EndpointId>,
+    ) -> Option<RouteDecision> {
         if self.targets.is_empty() {
             return None;
         }
@@ -539,8 +604,14 @@ impl Router {
             active_workers: usize,
             warm_hit_rate: f64,
             score: HealthScore,
+            /// load-equivalent of full ill health, history-weighted
+            penalty: f64,
+            /// excluded while a readmission probe is outstanding
+            probe_held: bool,
         }
         let mut events = HealthEvents::default();
+        let mut newly_quarantined: Vec<EndpointId> = Vec::new();
+        let probing = self.active_probing;
         let sampled: Vec<Sampled> = self
             .targets
             .iter_mut()
@@ -560,10 +631,32 @@ impl Router {
                     },
                     &mut events,
                 );
-                Sampled { queued_weight, active_workers, warm_hit_rate, score }
+                if score.quarantined && !t.was_quarantined {
+                    // fresh quarantine: report the id so the service can
+                    // migrate the tasks already queued there
+                    newly_quarantined.push(t.endpoint);
+                } else if !score.quarantined
+                    && t.was_quarantined
+                    && probing
+                    && t.probe_state == ProbeState::Idle
+                {
+                    // sentence served: hold the endpoint out of the
+                    // candidate set until a synthetic probe clears it
+                    t.probe_state = ProbeState::Requested;
+                }
+                t.was_quarantined = score.quarantined;
+                Sampled {
+                    queued_weight,
+                    active_workers,
+                    warm_hit_rate,
+                    penalty: HEALTH_LOAD_PENALTY * t.monitor.penalty_weight(),
+                    probe_held: t.probe_state != ProbeState::Idle,
+                    score,
+                }
             })
             .collect();
         self.pending_events.absorb(events);
+        self.pending_quarantined.extend(newly_quarantined);
 
         let view = |index: usize| -> EndpointView {
             let t = &self.targets[index];
@@ -576,18 +669,27 @@ impl Router {
                 warm: !key.is_empty() && t.warm.contains(key),
                 link_cost: self.link_cost(t.site),
                 health: s.score.score,
+                penalty: s.penalty,
             }
         };
         // candidates[i] is the target index behind views[i]: the strategy
         // picks a views position, the router resolves the endpoint — a
         // strategy never handles target indices, so filtering cannot be
-        // misused to route to the wrong endpoint
-        let mut candidates: Vec<usize> = (0..self.targets.len())
-            .filter(|&i| !sampled[i].score.quarantined)
+        // misused to route to the wrong endpoint. The filters degrade
+        // gracefully in layers (drop the health/probe filter first, then
+        // the caller's exclusion): any endpoint beats a guaranteed error.
+        let routable: Vec<usize> = (0..self.targets.len())
+            .filter(|&i| !sampled[i].score.quarantined && !sampled[i].probe_held)
             .collect();
-        let degraded_mode = candidates.is_empty();
-        if degraded_mode {
-            candidates = (0..self.targets.len()).collect();
+        let degraded_mode = routable.is_empty();
+        let pool: Vec<usize> =
+            if degraded_mode { (0..self.targets.len()).collect() } else { routable };
+        let mut candidates: Vec<usize> = match exclude {
+            Some(ep) => pool.iter().copied().filter(|&i| self.targets[i].endpoint != ep).collect(),
+            None => pool.clone(),
+        };
+        if candidates.is_empty() {
+            candidates = pool;
         }
         let views: Vec<EndpointView> = candidates.iter().map(|&i| view(i)).collect();
         // does a quarantined site hold warmth for this key? (resolved
@@ -648,6 +750,62 @@ impl Router {
     /// last call (the service counts them in `coordinator::metrics`).
     pub fn take_health_events(&mut self) -> HealthEvents {
         std::mem::take(&mut self.pending_events)
+    }
+
+    /// Drain the endpoints that entered quarantine since the last call:
+    /// the service recalls their queued tasks and re-places them on
+    /// healthy sites (task migration).
+    pub fn take_quarantined_endpoints(&mut self) -> Vec<EndpointId> {
+        std::mem::take(&mut self.pending_quarantined)
+    }
+
+    /// Endpoints whose quarantine sentence expired and now await a
+    /// synthetic readmission probe (active probing only). Each id is
+    /// handed out once; the caller either attaches the submitted probe
+    /// task via [`Router::note_probe_started`] or reports a failure
+    /// verdict via [`Router::resolve_probe`].
+    pub fn take_probe_candidates(&mut self) -> Vec<EndpointId> {
+        let mut out = Vec::new();
+        for t in &mut self.targets {
+            if t.probe_state == ProbeState::Requested {
+                t.probe_state = ProbeState::Dispatched;
+                out.push(t.endpoint);
+            }
+        }
+        out
+    }
+
+    /// Attach an in-flight probe task to its endpoint.
+    pub fn note_probe_started(&mut self, endpoint: EndpointId, task: TaskId) {
+        if let Some(t) = self.targets.iter_mut().find(|t| t.endpoint == endpoint) {
+            t.probe_state = ProbeState::InFlight(task);
+        }
+    }
+
+    /// Probe tasks currently in flight, as (endpoint, probe task) pairs.
+    pub fn pending_probes(&self) -> Vec<(EndpointId, TaskId)> {
+        self.targets
+            .iter()
+            .filter_map(|t| match t.probe_state {
+                ProbeState::InFlight(task) => Some((t.endpoint, task)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Probe verdict: `healthy` releases the hold (the endpoint rejoins
+    /// the candidate set and its monitor finishes probation normally); a
+    /// failed probe re-quarantines it at the escalated sentence.
+    pub fn resolve_probe(&mut self, endpoint: EndpointId, healthy: bool) {
+        let mut events = HealthEvents::default();
+        if let Some(t) = self.targets.iter_mut().find(|t| t.endpoint == endpoint) {
+            t.probe_state = ProbeState::Idle;
+            if !healthy {
+                t.monitor.punish(Instant::now(), &mut events);
+                t.was_quarantined = true;
+            }
+        }
+        self.pending_events.absorb(events);
     }
 
     /// [`Router::decide`] + [`Router::note_submitted`] in one step, for
@@ -964,5 +1122,111 @@ mod tests {
         // A was evicted by C: routing A again is a cold pick, not a warm hit
         let d = r.route("fn0:A", 1).unwrap();
         assert!(!d.warm_hit);
+    }
+
+    #[test]
+    fn decide_excluding_avoids_the_endpoint_unless_it_is_the_only_one() {
+        let (mut r, _p0, _p1) = two_target_router(RouteStrategyKind::LeastLoaded);
+        // ties go to 10; excluding it forces 20 (the hedge/migration path)
+        assert_eq!(r.decide_excluding("fn0:A", 1, Some(10)).unwrap().endpoint, 20);
+        assert_eq!(r.decide_excluding("fn0:A", 1, None).unwrap().endpoint, 10);
+        // excluding the only endpoint falls back instead of failing
+        assert!(r.remove_target(20));
+        assert_eq!(r.decide_excluding("fn0:A", 1, Some(10)).unwrap().endpoint, 10);
+    }
+
+    #[test]
+    fn fresh_quarantines_are_drained_for_migration() {
+        let mut r = Router::new(RouteStrategyKind::LeastLoaded).with_health_config(quick_health());
+        let p0 = FakeProbe::new(0, 1);
+        let p1 = FakeProbe::new(0, 1);
+        r.add_target(10, 0, p0.clone());
+        r.add_target(20, 1, p1);
+        assert!(r.take_quarantined_endpoints().is_empty());
+        p0.failed.store(8, Ordering::SeqCst);
+        r.route("fn0:A", 1);
+        // the transition is reported exactly once, not on every decision
+        assert_eq!(r.take_quarantined_endpoints(), vec![10]);
+        r.route("fn0:A", 1);
+        assert!(r.take_quarantined_endpoints().is_empty());
+    }
+
+    #[test]
+    fn relapse_history_scales_the_health_penalty() {
+        // two endpoints, same degraded score — but 10 has served (and
+        // escalated through) a quarantine sentence before, so its view
+        // carries the larger penalty and load-aware routing prefers 20
+        let mut m0 = HealthMonitor::new(quick_health());
+        let m1 = HealthMonitor::new(quick_health());
+        let mut ev = HealthEvents::default();
+        m0.punish(Instant::now(), &mut ev);
+        assert!(m0.penalty_weight() > m1.penalty_weight());
+        let mk = |penalty: f64| EndpointView {
+            site: 0,
+            queued_weight: 0,
+            active_workers: 1,
+            warm_hit_rate: 1.0,
+            warm: false,
+            link_cost: 0.0,
+            health: 0.9,
+            penalty,
+        };
+        let bad_history = mk(HEALTH_LOAD_PENALTY * m0.penalty_weight());
+        let clean = mk(HEALTH_LOAD_PENALTY * m1.penalty_weight());
+        assert!(bad_history.load() > clean.load());
+    }
+
+    #[test]
+    fn active_probing_holds_readmission_behind_a_probe() {
+        let mut r = Router::new(RouteStrategyKind::LeastLoaded)
+            .with_health_config(quick_health())
+            .with_active_probing(true);
+        let p0 = FakeProbe::new(0, 1);
+        let p1 = FakeProbe::new(0, 1);
+        r.add_target(10, 0, p0.clone());
+        r.add_target(20, 1, p1);
+        p0.failed.store(8, Ordering::SeqCst);
+        r.route("fn0:A", 1);
+        assert_eq!(r.take_quarantined_endpoints(), vec![10]);
+        // sentence served and the failures stopped — but with active
+        // probing the endpoint must NOT rejoin on its own
+        p0.completed.store(20, Ordering::SeqCst);
+        std::thread::sleep(Duration::from_millis(60));
+        assert_eq!(r.route("fn0:A", 1).unwrap().endpoint, 20, "held behind probe");
+        // the router asks for exactly one probe
+        assert_eq!(r.take_probe_candidates(), vec![10]);
+        assert!(r.take_probe_candidates().is_empty(), "handed out once");
+        r.note_probe_started(10, 777);
+        assert_eq!(r.pending_probes(), vec![(10, 777)]);
+        assert_eq!(r.route("fn0:A", 1).unwrap().endpoint, 20, "still held in flight");
+        // probe succeeds: the hold lifts and the tie goes back to 10
+        r.resolve_probe(10, true);
+        assert!(r.pending_probes().is_empty());
+        assert_eq!(r.route("fn0:A", 1).unwrap().endpoint, 10);
+    }
+
+    #[test]
+    fn failed_probe_requarantines_at_the_escalated_sentence() {
+        let mut r = Router::new(RouteStrategyKind::LeastLoaded)
+            .with_health_config(quick_health())
+            .with_active_probing(true);
+        let p0 = FakeProbe::new(0, 1);
+        let p1 = FakeProbe::new(0, 1);
+        r.add_target(10, 0, p0.clone());
+        r.add_target(20, 1, p1);
+        p0.failed.store(8, Ordering::SeqCst);
+        r.route("fn0:A", 1);
+        assert_eq!(r.take_health_events().quarantined, 1);
+        std::thread::sleep(Duration::from_millis(60));
+        r.route("fn0:A", 1);
+        assert_eq!(r.take_probe_candidates(), vec![10]);
+        r.note_probe_started(10, 778);
+        // the probe comes back failed: straight back to quarantine
+        r.resolve_probe(10, false);
+        assert_eq!(r.take_health_events().quarantined, 1);
+        assert!(r.pending_probes().is_empty());
+        for _ in 0..3 {
+            assert_eq!(r.route("fn0:A", 1).unwrap().endpoint, 20);
+        }
     }
 }

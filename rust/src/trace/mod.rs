@@ -29,12 +29,18 @@ pub mod kind {
     pub const TASK_ENQUEUE: &str = "task.enqueue";
     pub const TASK_RESULT: &str = "task.result";
     pub const TASK_CANCEL: &str = "task.cancel";
+    pub const TASK_RETRY: &str = "task.retry";
+    pub const TASK_HEDGE: &str = "task.hedge";
+    pub const TASK_DEADLINE: &str = "task.deadline_exceeded";
+    pub const TASK_MIGRATE: &str = "task.migrate";
     pub const ROUTE_DECIDE: &str = "route.decide";
     pub const ROUTE_RETRY: &str = "route.retry";
     pub const ROUTE_SPILL: &str = "route.spill";
     pub const HEALTH_QUARANTINE: &str = "health.quarantine";
     pub const HEALTH_READMIT: &str = "health.readmit";
+    pub const HEALTH_PROBE: &str = "health.probe";
     pub const WORKER_INIT_FAIL: &str = "worker.init_fail";
+    pub const CHAOS_INJECT: &str = "chaos.inject";
     // spans
     pub const TASK_WAIT: &str = "task.wait";
     pub const TASK_EXECUTE: &str = "task.execute";

@@ -7,10 +7,12 @@
 //! lock and clears leftover events before enabling.
 
 use std::sync::{Arc, Mutex, MutexGuard};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
+use pyhf_faas::coordinator::chaos;
 use pyhf_faas::coordinator::{
-    Endpoint, EndpointConfig, ExecutorConfig, FaasClient, Service, ServiceHandle,
+    ChaosFault, ChaosPlan, ChaosRule, Endpoint, EndpointConfig, ExecutorConfig, FaasClient,
+    HedgePolicy, ReliabilityPolicy, RetryPolicy, Service, ServiceHandle,
 };
 use pyhf_faas::scheduler::{PolicyKind, RouteStrategyKind, Router};
 use pyhf_faas::trace::{self, chrome, kind};
@@ -193,6 +195,102 @@ fn cancelled_gather_ledger_balances_and_cancels_are_traced() {
         t.of_kind(kind::TASK_EXECUTE).len() as u64 >= m.completed,
         "execute spans must cover at least the completed tasks"
     );
+    chrome::validate(&chrome::chrome_doc(&t)).expect("trace doc must validate");
+}
+
+/// The reliability layer multiplies physical tasks (retries, hedges) and
+/// cancels losers, yet the ledger and the trace must still reconcile:
+/// every physical submission reaches exactly one terminal bucket, hedged
+/// duplicates resolve to one outcome per logical task, and a gather that
+/// times out cancels its outstanding work without ever retrying or
+/// hedging the tasks it just cancelled.
+#[test]
+fn reliable_gather_reconciles_hedges_and_cancels() {
+    let _g = trace_lock();
+    chaos::clear();
+    trace::clear();
+    trace::enable();
+
+    let svc = Service::new();
+    let ep0 = quick_endpoint(&svc, "obs-rel0", 2);
+    let ep1 = quick_endpoint(&svc, "obs-rel1", 2);
+    let mut router = Router::new(RouteStrategyKind::LeastLoaded);
+    router.add_target(ep0.id, 0, ep0.probe());
+    router.add_target(ep1.id, 1, ep1.probe());
+    svc.install_router(router);
+
+    let client = FaasClient::new(svc.clone()).with_reliability(
+        ReliabilityPolicy::new()
+            .with_retry(RetryPolicy::with_retries(2))
+            .with_hedge(HedgePolicy {
+                after_p99: 2.0,
+                min_observations: 20,
+                min_age: Duration::from_millis(250),
+            }),
+    );
+    let echo = client.register_function("echo", Arc::new(|p: &Json, _: &mut _| Ok(p.clone())));
+    let slow = client.register_function(
+        "slow",
+        Arc::new(|p: &Json, _: &mut _| {
+            std::thread::sleep(Duration::from_millis(300));
+            Ok(p.clone())
+        }),
+    );
+    let mk = |i: usize| Json::obj(vec![("n", Json::num(i as f64)), ("class", Json::str("A"))]);
+
+    // phase 1: a clean wave warms the p99 sketch past min_observations
+    let warmup: Vec<_> = (0..30).map(|i| client.run_routed(mk(i), echo).unwrap()).collect();
+    gather_all(&client, &warmup);
+
+    // phase 2: lose one result; the straggler is rescued by its hedge and
+    // the logical task still resolves to exactly one Ok
+    chaos::install(ChaosPlan::new(0x0b5).rule(ChaosRule::new(ChaosFault::DropResult, None, 0, 1)));
+    let stuck = client.run_routed(mk(100), echo).unwrap();
+    let rescued = client
+        .gather(&[stuck], Duration::from_secs(20), Duration::from_millis(2), None, |_, _| {})
+        .expect("gather");
+    let plan = chaos::clear().expect("plan still installed");
+    assert_eq!(plan.total_hits(), 1);
+    assert!(rescued[0].is_ok(), "hedge must rescue the lost result: {:?}", rescued[0]);
+
+    // phase 3: a gather that times out cancels its outstanding tasks —
+    // and those cancellations must not feed back into retry or hedging
+    let doomed: Vec<_> = (0..6).map(|i| client.run_routed(mk(200 + i), slow).unwrap()).collect();
+    let err = client
+        .gather(&doomed, Duration::from_millis(100), Duration::from_millis(2), None, |_, _| {})
+        .unwrap_err();
+    assert!(err.contains("cancelled"), "{err}");
+
+    // abandoned in-flight tasks drain when their handler returns; only
+    // the chaos-stuck primary (whose completion was dropped) may remain
+    let t0 = Instant::now();
+    while doomed.iter().any(|id| svc.task_state(*id).is_some()) {
+        assert!(t0.elapsed() < Duration::from_secs(5), "cancelled task records leaked");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    ep0.shutdown();
+    ep1.shutdown();
+
+    let t = trace::drain();
+    trace::disable();
+
+    let m = svc.metrics.snapshot();
+    assert_eq!(m.submitted, m.completed + m.failed + m.cancelled);
+    assert!(m.hedges >= 1, "the straggler was never hedged");
+    assert!(m.hedge_wins >= 1);
+    assert_eq!(m.retries, 0, "nothing failed, so nothing may be retried — least of all cancels");
+    // the hedge-phase primary plus the six timed-out tasks
+    assert!(m.cancelled >= 7, "cancelled {} < 7", m.cancelled);
+
+    // trace <-> ledger reconciliation with duplicates in play: every
+    // physical submission traces once, every ledger-counted terminal
+    // outcome traces once, every cancel traces once
+    assert_eq!(t.of_kind(kind::TASK_SUBMIT).len() as u64, m.submitted);
+    assert_eq!(t.of_kind(kind::TASK_RESULT).len() as u64, m.completed + m.failed);
+    assert_eq!(t.of_kind(kind::TASK_CANCEL).len() as u64, m.cancelled);
+    assert_eq!(t.of_kind(kind::TASK_HEDGE).len() as u64, m.hedges);
+    assert_eq!(t.of_kind(kind::TASK_RETRY).len() as u64, m.retries);
+    assert_eq!(t.of_kind(kind::ROUTE_DECIDE).len() as u64, m.routed);
     chrome::validate(&chrome::chrome_doc(&t)).expect("trace doc must validate");
 }
 
