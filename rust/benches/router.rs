@@ -33,9 +33,10 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use pyhf_faas::bench::routejson::{RouteBenchReport, StrategyBench};
+use pyhf_faas::coordinator::journal::{self, Journal};
 use pyhf_faas::coordinator::{
     chaos, ChaosFault, ChaosPlan, ChaosRule, Endpoint, EndpointConfig, ExecutorConfig, FaasClient,
-    HedgePolicy, ReliabilityPolicy, RetryPolicy, Service,
+    FaultPoint, FunctionId, HedgePolicy, ReliabilityPolicy, RetryPolicy, Service, ServiceHandle,
 };
 use pyhf_faas::scheduler::{RouteStrategyKind, Router};
 use pyhf_faas::sim::{
@@ -265,6 +266,213 @@ fn live_chaos_row(name: &str, reliable: bool, n_tasks: usize) -> (Row, f64) {
     (row, p99)
 }
 
+/// Spin up the two-site live stack the recover rows share: service,
+/// endpoints, least-loaded router (no active probing — the ledger
+/// assertions want only user tasks in flight), client, spin function.
+fn recover_stack() -> (ServiceHandle, Vec<Endpoint>, FaasClient, FunctionId) {
+    let svc = Service::new();
+    let exec = ExecutorConfig {
+        max_blocks: 2,
+        nodes_per_block: 1,
+        workers_per_node: 2,
+        parallelism: 1.0,
+        poll: Duration::from_millis(1),
+    };
+    let endpoints: Vec<Endpoint> = (0..2)
+        .map(|site| {
+            Endpoint::start(
+                svc.clone(),
+                EndpointConfig::new(format!("rec-site{site}")).with_executor(exec.clone()),
+            )
+        })
+        .collect();
+    let mut router = Router::new(RouteStrategyKind::LeastLoaded);
+    for (site, ep) in endpoints.iter().enumerate() {
+        router.add_target_with_signal(ep.id, site, ep.probe(), Some(ep.scale_signal()));
+    }
+    svc.install_router(router);
+    let fxc = FaasClient::new(svc.clone());
+    let f = fxc.register_function(
+        "spin",
+        Arc::new(|p: &Json, _ctx: &mut _| {
+            std::thread::sleep(Duration::from_millis(10));
+            Ok(p.clone())
+        }),
+    );
+    (svc, endpoints, fxc, f)
+}
+
+fn recover_payload(i: usize) -> Json {
+    Json::obj(vec![("patch", Json::str(format!("p{i}"))), ("class", Json::str("recover"))])
+}
+
+/// The durability rows: a cold 125-point run vs kill-mid-scan + resume.
+///
+/// Phase 1 runs the full workload cold and times it. Phase 2 reruns it
+/// with a write-ahead journal attached and a `KillCoordinator` chaos rule
+/// armed at the `Coordinator` fault point — consulted once per observed
+/// completion; when it fires the whole stack is torn down mid-flight,
+/// leaving the journal behind. Phase 3 stands up a fresh stack,
+/// [`Service::recover`]s the journal (terminal outcomes re-delivered, not
+/// re-executed) and refits only the lost in-flight tail.
+///
+/// Returns (cold row, resume row, restored count, refit count).
+fn recover_rows(n: usize) -> (Row, Row, usize, usize) {
+    let path = std::env::temp_dir()
+        .join(format!("pyhf-faas-bench-recover-{}.journal", std::process::id()));
+    // byte-copy taken at the kill instant: exactly what disk would hold on
+    // SIGKILL, unpolluted by the graceful teardown's queue-drain failures
+    let kill_path = std::env::temp_dir()
+        .join(format!("pyhf-faas-bench-recover-{}.killed.journal", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&kill_path);
+
+    // phase 1: cold baseline — every point fitted from scratch
+    let t0 = Instant::now();
+    let (svc, endpoints, fxc, f) = recover_stack();
+    let payloads: Vec<Json> = (0..n).map(recover_payload).collect();
+    let tasks = fxc.submit_wave(payloads, |p| fxc.run_routed(p, f)).expect("cold wave");
+    let wave_t0 = Instant::now();
+    let mut done_at = vec![0.0f64; tasks.len()];
+    let results = fxc
+        .gather(&tasks, Duration::from_secs(120), Duration::from_millis(2), None, |i, _r| {
+            done_at[i] = wave_t0.elapsed().as_secs_f64();
+        })
+        .expect("cold gather");
+    assert_eq!(results.len(), n);
+    let cold_wall = t0.elapsed().as_secs_f64();
+    for ep in endpoints {
+        ep.shutdown();
+    }
+    drop(svc);
+    let cold = Row {
+        name: "recover/cold".to_string(),
+        latency: Summary::of(&done_at),
+        makespan: Summary::of(&[cold_wall]),
+        compiles: 0.0,
+        warm_hits: 0.0,
+        spillovers: 0.0,
+        quarantines: 0.0,
+        retries: 0.0,
+        health_diverted: 0.0,
+        hedges: 0.0,
+        deadline_exceeded: 0.0,
+        migrated: 0.0,
+        wall_s: cold_wall,
+    };
+
+    // phase 2: journaled run, coordinator killed mid-scan by the chaos rule
+    let (svc, endpoints, fxc, f) = recover_stack();
+    let j = Journal::create(&path).expect("create journal");
+    j.append(journal::Record::Header(journal::scan_header(
+        "router-bench",
+        &journal::hash_hex(journal::content_hash(["router-bench-recover"])),
+        n,
+    )));
+    svc.set_journal(Arc::new(j));
+    let kill_after = (n as u64 * 3) / 5;
+    chaos::install(
+        ChaosPlan::new(0x0dead)
+            .rule(ChaosRule::new(ChaosFault::KillCoordinator, None, kill_after, 1)),
+    );
+    let payloads: Vec<Json> = (0..n).map(recover_payload).collect();
+    let _tasks = fxc.submit_wave(payloads, |p| fxc.run_routed(p, f)).expect("journaled wave");
+    // consult the Coordinator fault point once per completed task; the
+    // rule firing means "the coordinator dies here" — tear everything
+    // down mid-flight, abandoning the in-flight tail
+    let mut consulted = 0u64;
+    let killed = 'kill: loop {
+        let completed = svc.metrics.snapshot().completed;
+        while consulted < completed {
+            consulted += 1;
+            if matches!(
+                chaos::inject(FaultPoint::Coordinator, endpoints[0].id, None),
+                Some(ChaosFault::KillCoordinator)
+            ) {
+                break 'kill true;
+            }
+        }
+        if completed >= n as u64 {
+            break false;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    };
+    let plan = chaos::clear().expect("chaos plan was installed");
+    assert!(killed, "recover: the KillCoordinator rule never fired");
+    assert_eq!(plan.total_hits(), 1, "recover: KillCoordinator must fire exactly once");
+    // the kill instant: snapshot the journal bytes before the graceful
+    // teardown can append anything more
+    let jh = svc.journal_handle().expect("journal attached");
+    jh.sync();
+    std::fs::copy(&path, &kill_path).expect("snapshot journal at kill");
+    for ep in endpoints {
+        ep.shutdown();
+    }
+    drop(fxc);
+    drop(svc);
+
+    // phase 3: fresh stack, recover the journal, refit only the tail
+    let t0 = Instant::now();
+    let (svc, endpoints, fxc, f) = recover_stack();
+    let (loaded, state) = Journal::load(&kill_path).expect("load journal");
+    drop(loaded);
+    let restored = state.done_by_key();
+    let rec = svc.recover(&kill_path, f, None, false).expect("recover");
+    // every completion in the snapshot succeeded, so delivered == restored;
+    // a torn tail (a worker appending mid-snapshot) is legitimately dropped
+    assert_eq!(rec.delivered.len(), restored.len());
+    let remaining: Vec<Json> = (0..n)
+        .filter(|i| !restored.contains_key(&format!("p{i}")))
+        .map(recover_payload)
+        .collect();
+    let refit = remaining.len();
+    assert!(!restored.is_empty(), "recover: the killed run journaled no completions");
+    assert!(refit > 0, "recover: the kill left no in-flight tail to refit");
+    assert_eq!(restored.len() + refit, n);
+    let tasks = fxc.submit_wave(remaining, |p| fxc.run_routed(p, f)).expect("resume wave");
+    let wave_t0 = Instant::now();
+    let mut done_at = vec![0.0f64; tasks.len()];
+    let results = fxc
+        .gather(&tasks, Duration::from_secs(120), Duration::from_millis(2), None, |i, _r| {
+            done_at[i] = wave_t0.elapsed().as_secs_f64();
+        })
+        .expect("resume gather");
+    assert_eq!(results.len(), refit);
+    let resume_wall = t0.elapsed().as_secs_f64();
+    let m = svc.metrics.snapshot();
+    assert_eq!(
+        m.submitted,
+        m.completed + m.failed + m.cancelled,
+        "recover: ledger must reconcile across the restart"
+    );
+    assert_eq!(m.recovered_delivered, restored.len() as u64);
+    if let Some(j) = svc.journal_handle() {
+        j.sync();
+    }
+    for ep in endpoints {
+        ep.shutdown();
+    }
+    drop(svc);
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&kill_path);
+    let resume = Row {
+        name: "recover/resume-vs-cold".to_string(),
+        latency: Summary::of(&done_at),
+        makespan: Summary::of(&[resume_wall]),
+        compiles: 0.0,
+        warm_hits: 0.0,
+        spillovers: 0.0,
+        quarantines: 0.0,
+        retries: 0.0,
+        health_diverted: 0.0,
+        hedges: 0.0,
+        deadline_exceeded: 0.0,
+        migrated: 0.0,
+        wall_s: resume_wall,
+    };
+    (cold, resume, restored.len(), refit)
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let quick = args.iter().any(|a| a == "--quick");
@@ -339,6 +547,14 @@ fn main() {
     let (live_on, p99_on) = live_chaos_row("live-chaos/reliability-on", true, n_live);
     print_row(&live_on);
     push_report(&mut report, &live_on);
+
+    // durability: cold 125-point run vs journal + kill-mid-scan + resume
+    let n_recover = 125;
+    let (rec_cold, rec_resume, restored, refit) = recover_rows(n_recover);
+    print_row(&rec_cold);
+    print_row(&rec_resume);
+    push_report(&mut report, &rec_cold);
+    push_report(&mut report, &rec_resume);
 
     report.write(&out_path).expect("write BENCH_route.json");
     println!("\nwrote {}", out_path.display());
@@ -416,6 +632,26 @@ fn main() {
         live_on.hedges,
         live_on.migrated,
         live_off.deadline_exceeded
+    );
+
+    // recover acceptance: the resumed scan refits only the lost in-flight
+    // tail — the journaled completions are re-delivered, never re-executed
+    // — and finishes faster than the cold run
+    assert_eq!(restored + refit, n_recover);
+    assert!(
+        refit < n_recover,
+        "recover: resume refitted all {n_recover} points — nothing was restored"
+    );
+    assert!(
+        rec_resume.wall_s < rec_cold.wall_s,
+        "recover: resume wall {:.2} s must beat cold wall {:.2} s",
+        rec_resume.wall_s,
+        rec_cold.wall_s
+    );
+    println!(
+        "recover PASSED: resume wall {:.2} s < cold wall {:.2} s \
+         ({restored} points restored from the journal, {refit} refit).",
+        rec_resume.wall_s, rec_cold.wall_s
     );
 
     // tracing acceptance: turning the trace hub on must not perturb the

@@ -68,7 +68,7 @@ impl MetricsReport {
 
 /// Required numeric keys of every metrics object (service-wide and
 /// per-endpoint): the ledger counters and the latency surface.
-const REQUIRED_NUMERIC: [&str; 19] = [
+const REQUIRED_NUMERIC: [&str; 24] = [
     "submitted",
     "completed",
     "failed",
@@ -79,6 +79,11 @@ const REQUIRED_NUMERIC: [&str; 19] = [
     "deadline_exceeded",
     "migrated",
     "health_probes",
+    "poisoned",
+    "hedge_wasted_s",
+    "journal_appends",
+    "recovered_delivered",
+    "recovered_resubmitted",
     "mean_wait_s",
     "mean_service_s",
     "total_service_s",

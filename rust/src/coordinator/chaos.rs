@@ -50,6 +50,12 @@ pub enum FaultPoint {
     Execute,
     /// result delivery, after execution finished
     Result,
+    /// the coordinator itself: consulted by recovery harnesses (tests,
+    /// the `recover/` bench rows) once per completed task, with the
+    /// completion count as the event stream — a firing rule means "the
+    /// service process dies here" (tear down `Service`/executors, then
+    /// `Service::recover` from the journal and continue)
+    Coordinator,
 }
 
 impl FaultPoint {
@@ -58,6 +64,7 @@ impl FaultPoint {
             FaultPoint::WorkerInit => "worker_init",
             FaultPoint::Execute => "execute",
             FaultPoint::Result => "result",
+            FaultPoint::Coordinator => "coordinator",
         }
     }
 }
@@ -70,6 +77,10 @@ pub enum ChaosFault {
     Crash,
     Slow(Duration),
     DropResult,
+    /// kill the coordinator (login-node eviction, OOM): the harness tears
+    /// down the whole `Service` + executors mid-workload, then recovers
+    /// from the write-ahead journal
+    KillCoordinator,
 }
 
 impl ChaosFault {
@@ -79,6 +90,7 @@ impl ChaosFault {
             ChaosFault::InitFail => FaultPoint::WorkerInit,
             ChaosFault::Crash | ChaosFault::Slow(_) => FaultPoint::Execute,
             ChaosFault::DropResult => FaultPoint::Result,
+            ChaosFault::KillCoordinator => FaultPoint::Coordinator,
         }
     }
 
@@ -88,6 +100,7 @@ impl ChaosFault {
             ChaosFault::Crash => "crash",
             ChaosFault::Slow(_) => "slow",
             ChaosFault::DropResult => "drop_result",
+            ChaosFault::KillCoordinator => "kill_coordinator",
         }
     }
 }
@@ -273,6 +286,26 @@ mod tests {
         // both exhausted now
         assert_eq!(inject(FaultPoint::WorkerInit, 0, None), None);
         clear();
+    }
+
+    #[test]
+    fn coordinator_kill_fires_deterministically_once() {
+        let _g = test_lock();
+        // "die after the 5th completion, once": skip 5 completion events,
+        // fire on the 6th, never again — the recovery harness's rule shape
+        install(ChaosPlan::new(8).rule(ChaosRule::new(ChaosFault::KillCoordinator, None, 5, 1)));
+        let mut fired_at = None;
+        for completions in 0..20u64 {
+            if inject(FaultPoint::Coordinator, 0, None) == Some(ChaosFault::KillCoordinator) {
+                assert!(fired_at.is_none(), "must fire exactly once");
+                fired_at = Some(completions);
+            }
+        }
+        assert_eq!(fired_at, Some(5));
+        // a coordinator rule never leaks into executor fault points
+        assert_eq!(inject(FaultPoint::Execute, 0, Some(1)), None);
+        let plan = clear().unwrap();
+        assert_eq!(plan.total_hits(), 1);
     }
 
     #[test]

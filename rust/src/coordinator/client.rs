@@ -16,7 +16,8 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::reliability::{
-    is_retryable, ReliabilityPolicy, RetryBudget, DEADLINE_EXCEEDED,
+    is_crash_attributed, is_retryable, ReliabilityPolicy, RetryBudget, DEADLINE_EXCEEDED,
+    POISON_TASK,
 };
 use crate::coordinator::service::{Handler, ServiceHandle};
 use crate::coordinator::task::{EndpointId, FunctionId, TaskId, TaskState};
@@ -58,6 +59,10 @@ struct TaskSpec {
     target: Target,
     /// attempts so far (1 = the original submission)
     attempts: u32,
+    /// crash-attributed failures so far — the poison-task detector
+    /// (`ReliabilityPolicy::max_total_attempts`) counts these, not benign
+    /// retryable errors
+    crashes: u32,
     /// absolute deadline, stamped once at first submission; retries and
     /// hedges inherit it unchanged — it bounds the *logical* task
     deadline: Option<Instant>,
@@ -82,6 +87,9 @@ struct Slot {
     attempt_started: Instant,
     /// a scheduled retry waits out its backoff here
     backoff_until: Option<Instant>,
+    /// when the in-flight hedge (if any) went on the wire — the duplicate
+    /// cost accounting measures the loser's in-flight time from here
+    hedge_started: Option<Instant>,
     /// deterministic jitter seed (the original task id)
     seed: u64,
 }
@@ -96,6 +104,12 @@ pub struct FaasClient {
 impl FaasClient {
     pub fn new(service: ServiceHandle) -> Self {
         FaasClient { service, reliability: None }
+    }
+
+    /// The service this client talks to (the scan driver's durability
+    /// wiring attaches journals and drives recovery through it).
+    pub fn service(&self) -> &ServiceHandle {
+        &self.service
     }
 
     /// Install a task-reliability policy on this client: submissions are
@@ -148,7 +162,15 @@ impl FaasClient {
         }
         rel.specs.lock().unwrap().insert(
             id,
-            TaskSpec { function, payload, target, attempts: 1, deadline, submitted_at: now },
+            TaskSpec {
+                function,
+                payload,
+                target,
+                attempts: 1,
+                crashes: 0,
+                deadline,
+                submitted_at: now,
+            },
         );
         Ok(id)
     }
@@ -336,6 +358,7 @@ impl FaasClient {
                     spec,
                     attempt_started,
                     backoff_until: None,
+                    hedge_started: None,
                     seed: t,
                 }
             })
@@ -418,15 +441,26 @@ impl FaasClient {
             match self.get_result(h) {
                 Some(Ok(v)) => {
                     // first usable result wins; the straggler is abandoned
+                    // — its in-flight time is the duplicate cost paid
                     self.service.cancel(slot.primary);
                     self.service.metrics.hedge_won();
+                    self.service.metrics.hedge_wasted(
+                        now.saturating_duration_since(slot.attempt_started).as_secs_f64(),
+                    );
                     slot.hedge = None;
+                    slot.hedge_started = None;
                     return Some(Ok(v));
                 }
                 Some(Err(_)) => {
                     // a failed hedge is dropped (drained) while the primary
-                    // keeps running — hedges never fail a logical task
+                    // keeps running — hedges never fail a logical task, but
+                    // the duplicate's in-flight time was pure waste
                     self.service.cancel(h);
+                    if let Some(t0) = slot.hedge_started.take() {
+                        self.service
+                            .metrics
+                            .hedge_wasted(now.saturating_duration_since(t0).as_secs_f64());
+                    }
                     slot.hedge = None;
                 }
                 None => {}
@@ -435,8 +469,14 @@ impl FaasClient {
         if slot.backoff_until.is_none() {
             if let Some(r) = self.get_result(slot.primary) {
                 if let Some(h) = slot.hedge.take() {
-                    // the primary beat its hedge: abandon the duplicate
+                    // the primary beat its hedge: abandon the duplicate and
+                    // charge its in-flight time to the waste accumulator
                     self.service.cancel(h);
+                    if let Some(t0) = slot.hedge_started.take() {
+                        self.service
+                            .metrics
+                            .hedge_wasted(now.saturating_duration_since(t0).as_secs_f64());
+                    }
                 }
                 return match r {
                     Ok(v) => Some(Ok(v)),
@@ -498,6 +538,29 @@ impl FaasClient {
         now: Instant,
     ) -> Option<Result<Json, String>> {
         let Some(rel) = rel else { return Some(Err(err)) };
+        // poison-task detection preempts the retry loop: a task whose
+        // attempts keep *crashing workers* is terminated with the typed
+        // outcome after `max_total_attempts` crash-attributed failures,
+        // instead of marching through every endpoint in the facility
+        if is_crash_attributed(&err) {
+            if let Some(spec) = slot.spec.as_mut() {
+                spec.crashes += 1;
+                let max_total = rel.policy.max_total_attempts;
+                if max_total > 0 && spec.crashes >= max_total {
+                    self.service.metrics.task_poisoned();
+                    crate::trace::instant(
+                        crate::trace::kind::TASK_RETRY,
+                        Some(slot.primary),
+                        "client",
+                        format!("poison: terminated after {} crash(es)", spec.crashes),
+                    );
+                    return Some(Err(format!(
+                        "{POISON_TASK} (terminated after {} crash-attributed attempt(s): {err})",
+                        spec.crashes
+                    )));
+                }
+            }
+        }
         let Some(retry) = rel.policy.retry.as_ref() else { return Some(Err(err)) };
         let Some(spec) = slot.spec.as_mut() else { return Some(Err(err)) };
         if !is_retryable(&err) || spec.attempts >= retry.max_attempts {
@@ -552,6 +615,7 @@ impl FaasClient {
                 format!("duplicates straggler {} off endpoint {ep}", slot.primary),
             );
             slot.hedge = Some(h);
+            slot.hedge_started = Some(now);
         }
     }
 

@@ -2,13 +2,18 @@
 //! pallet's signal patches out over an endpoint, stream completions in
 //! Listing-2 style, and aggregate a `ScanResult`.
 
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::client::FaasClient;
 use crate::coordinator::fitops;
+use crate::coordinator::journal::{self, Journal};
 use crate::coordinator::task::{EndpointId, FunctionId};
 use crate::infer::results::{PointResult, ScanResult};
 use crate::pallet::generator::Pallet;
+use crate::util::json::{self, Json};
 
 /// Options for a scan run.
 #[derive(Debug, Clone)]
@@ -28,6 +33,15 @@ pub struct ScanOptions {
     /// fail fast if nothing completes within this window (e.g. every worker
     /// failed init because the artifacts are missing)
     pub stall_timeout: Duration,
+    /// write a fresh write-ahead journal here: every task transition is
+    /// logged before the client observes it, making the scan resumable
+    /// after a coordinator death (`resume`)
+    pub journal: Option<PathBuf>,
+    /// resume from the journal at this path: completed points are restored
+    /// without refitting, only the lost tail is resubmitted. Fails fast
+    /// with the typed [`journal::JOURNAL_MISMATCH`] error when the journal
+    /// was written for different workspace/patchset content.
+    pub resume: Option<PathBuf>,
 }
 
 impl Default for ScanOptions {
@@ -40,8 +54,26 @@ impl Default for ScanOptions {
             timeout: Duration::from_secs(3600),
             poll: Duration::from_millis(5),
             stall_timeout: Duration::from_secs(120),
+            journal: None,
+            resume: None,
         }
     }
+}
+
+/// Content fingerprint of a scan's inputs: the background workspace, every
+/// patch (name, grid values, RFC 6902 ops) and the shape-class override —
+/// the resume-safety check. Length-delimited chaining (see
+/// [`journal::content_hash`]) keeps part boundaries significant.
+pub fn pallet_content_hash(pallet: &Pallet, class: Option<&str>) -> u64 {
+    let mut parts: Vec<String> = Vec::with_capacity(2 + 3 * pallet.patchset.patches.len());
+    parts.push(json::to_string(&pallet.bkg_workspace));
+    parts.push(class.unwrap_or("").to_string());
+    for p in &pallet.patchset.patches {
+        parts.push(p.name.clone());
+        parts.push(format!("{:?}", p.values));
+        parts.push(json::to_string(&p.ops));
+    }
+    journal::content_hash(parts.iter().map(|s| s.as_str()))
 }
 
 /// Where a scan's tasks go: one named endpoint (the seed behavior) or the
@@ -90,13 +122,73 @@ fn scan_impl(
     let n = opts.limit.unwrap_or(pallet.patchset.len()).min(pallet.patchset.len());
     let t0 = Instant::now();
 
+    // durability: the content fingerprint binding a journal to this
+    // workspace/patchset/class (only computed when a journal is in play)
+    let content_hex = if opts.journal.is_some() || opts.resume.is_some() {
+        Some(journal::hash_hex(pallet_content_hash(pallet, opts.class.as_deref())))
+    } else {
+        None
+    };
+    // resume: restore completed points from the journal, refit only the
+    // lost tail. `recover` re-delivers the terminal outcomes into the
+    // (fresh) service ledger and attaches the compacted successor journal,
+    // so the resubmissions below are journaled too.
+    let mut restored: BTreeMap<String, Json> = BTreeMap::new();
+    if let Some(path) = &opts.resume {
+        let expected = content_hex.as_deref().expect("hash computed when resuming");
+        let (loaded, state) = Journal::load(path)?;
+        drop(loaded);
+        let schema = state.header.as_ref().and_then(|h| h.get("schema")).and_then(|s| s.as_str());
+        if schema != Some(journal::SCHEMA) {
+            return Err(format!(
+                "{}: {} is not a scan journal (header schema {:?}, expected {:?})",
+                journal::JOURNAL_MISMATCH,
+                path.display(),
+                schema.unwrap_or("missing"),
+                journal::SCHEMA,
+            ));
+        }
+        let found = state.content_hash_hex();
+        if found.as_deref() != Some(expected) {
+            return Err(format!(
+                "{}: journal {} was written for content hash {}, this \
+                 workspace/patchset/class hashes to {expected} — refusing to mix scans",
+                journal::JOURNAL_MISMATCH,
+                path.display(),
+                found.as_deref().unwrap_or("<missing>"),
+            ));
+        }
+        restored = state.done_by_key();
+        let ep = match target {
+            ScanTarget::Endpoint(ep) => Some(ep),
+            ScanTarget::Routed => None,
+        };
+        client.service().recover(path, function, ep, false)?;
+    } else if let Some(path) = &opts.journal {
+        let hex = content_hex.as_deref().expect("hash computed when journaling");
+        let j = Journal::create(path)?;
+        j.append(journal::Record::Header(journal::scan_header(&pallet.config.name, hex, n)));
+        client.service().set_journal(Arc::new(j));
+    }
+
     // fan-out: build payloads (patch application happens client-side, like
-    // pyhf pallets: the worker receives a complete workspace)
+    // pyhf pallets: the worker receives a complete workspace), skipping
+    // points the journal already completed
     let mut payloads = Vec::with_capacity(n);
     let mut names = Vec::with_capacity(n);
     for patch in pallet.patchset.patches.iter().take(n) {
+        if restored.contains_key(&patch.name) {
+            continue;
+        }
         payloads.push(fitops::patch_payload(&pallet.bkg_workspace, patch, opts.class.as_deref())?);
         names.push(patch.name.clone());
+    }
+    if opts.resume.is_some() {
+        println!(
+            "Resume: restored {} completed point(s) from journal, refit {}",
+            restored.len(),
+            names.len()
+        );
     }
 
     let results = if opts.batch <= 1 {
@@ -143,14 +235,29 @@ fn scan_impl(
         sub.unpack(&group_results)?
     };
 
-    let mut scan = ScanResult::new(pallet.config.name.clone());
+    // merge: freshly fitted results + journal-restored points, in pallet
+    // patch order (the restored values are the same handler-result JSON
+    // the journal recorded at first completion)
+    let mut fitted: BTreeMap<String, Json> = BTreeMap::new();
     for (i, r) in results.into_iter().enumerate() {
         let v = r.map_err(|e| format!("task '{}' failed: {e}", names[i]))?;
-        let point = PointResult::from_json(&v)
-            .ok_or_else(|| format!("task '{}' returned malformed result", names[i]))?;
+        fitted.insert(names[i].clone(), v);
+    }
+    let mut scan = ScanResult::new(pallet.config.name.clone());
+    for patch in pallet.patchset.patches.iter().take(n) {
+        let v = fitted
+            .get(&patch.name)
+            .or_else(|| restored.get(&patch.name))
+            .ok_or_else(|| format!("no result for patch '{}'", patch.name))?;
+        let point = PointResult::from_json(v)
+            .ok_or_else(|| format!("task '{}' returned malformed result", patch.name))?;
         scan.points.push(point);
     }
     scan.wall_seconds = t0.elapsed().as_secs_f64();
+    // a journaled scan leaves a consistent, fsynced artifact behind
+    if let Some(j) = client.service().journal_handle() {
+        j.sync();
+    }
     Ok(scan)
 }
 
@@ -249,6 +356,33 @@ mod tests {
         assert_eq!(m.batched_tasks, 4);
         ep.shutdown();
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Satellite fix: resuming against a journal written for different
+    /// scan content must fail fast with the typed mismatch error, before
+    /// any task goes on the wire.
+    #[test]
+    fn resume_with_wrong_content_fails_fast() {
+        let path = std::env::temp_dir().join(format!("scan-mismatch-{}", std::process::id()));
+        let pallet = crate::pallet::generate(&config_quickstart());
+        // journal written for this pallet under a different class override
+        let hex = journal::hash_hex(pallet_content_hash(&pallet, Some("other-class")));
+        let j = Journal::create(&path).unwrap();
+        j.append(journal::Record::Header(journal::scan_header("quickstart", &hex, 4)));
+        j.sync();
+        drop(j);
+
+        let svc = Service::new();
+        let client = FaasClient::new(svc.clone());
+        let f = client.register_function("echo", Arc::new(|p: &crate::util::json::Json, _: &mut crate::coordinator::service::WorkerContext| Ok(p.clone())));
+        let opts =
+            ScanOptions { resume: Some(path.clone()), limit: Some(2), ..Default::default() };
+        let err = run_scan(&client, 0, f, &pallet, &opts).unwrap_err();
+        assert!(journal::is_mismatch(&err), "want typed mismatch, got: {err}");
+        // fail-fast: nothing was submitted, nothing recovered
+        assert_eq!(svc.metrics.snapshot().submitted, 0);
+        assert!(!svc.journal_enabled());
+        let _ = std::fs::remove_file(&path);
     }
 
     const TEST_MANIFEST: &str = r#"{

@@ -1,0 +1,928 @@
+//! Write-ahead task journal: the durability layer under [`super::Service`].
+//!
+//! The paper's "fitting as a service" blueprint assumes a long-lived
+//! coordinator at an analysis facility; on shared infrastructure that
+//! process gets evicted, OOM-killed and preempted like any other job. The
+//! journal makes the *service* survive its own death the way PR 7 made
+//! tasks survive worker faults: every state transition of a journaled task
+//! (submitted → claimed → terminal) is appended to an on-disk log before
+//! the client can observe it, so a restarted coordinator can replay the
+//! log into a consistent state — terminal results are re-delivered
+//! idempotently (never re-executed), unfinished tasks are resubmitted.
+//!
+//! ## File format
+//!
+//! ```text
+//! [8-byte magic "PFJRNL1\n"]
+//! [frame]*     frame = u32 LE body length | u32 LE FNV-1a checksum | body
+//! ```
+//!
+//! Bodies are compact JSON objects tagged by `"kind"`:
+//!
+//! * `header`   — artifact header (`schema`, workspace/patchset
+//!   `content_hash`, analysis metadata); always the first record
+//! * `submit`   — task accepted by the service (`task`, `function`,
+//!   logical `key`, full `payload`)
+//! * `claim`    — a worker started executing an attempt
+//! * `done`     — terminal outcome (`ok` + result value or error text)
+//! * `cancel`   — the client abandoned the task
+//! * `snapshot` — compaction: a self-contained restatement of every
+//!   terminal outcome seen so far, replacing the per-task records that
+//!   produced them
+//!
+//! A torn tail (partial frame, checksum mismatch — the normal result of
+//! `kill -9` mid-write) is detected on load and truncated away: recovery
+//! replays the longest valid prefix. Appends are batched-fsynced (every
+//! [`SYNC_EVERY`] records and on [`Journal::sync`]), and the log
+//! self-compacts every [`COMPACT_INTERVAL`] records so a long scan's
+//! journal stays proportional to its live state, not its history.
+
+use std::collections::BTreeMap;
+use std::fs::{self, File, OpenOptions};
+use std::io::{Read as _, Write as _};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::coordinator::task::{FunctionId, TaskId};
+use crate::util::json::{self, Json};
+
+/// Artifact schema tag carried in the journal's header record (the
+/// `validate` subcommand dispatches on it).
+pub const SCHEMA: &str = "pyhf-faas/journal/v1";
+
+/// Magic prefix identifying a journal file (binary framing — the file is
+/// deliberately *not* a JSON document, so `validate` sniffs these bytes).
+pub const MAGIC: &[u8; 8] = b"PFJRNL1\n";
+
+/// Typed error prefix for a `--resume` against a journal written for a
+/// different workspace/patchset. Stable — match with [`is_mismatch`].
+pub const JOURNAL_MISMATCH: &str = "journal mismatch";
+
+/// True when an error is the typed resume-mismatch outcome.
+pub fn is_mismatch(err: &str) -> bool {
+    err.contains(JOURNAL_MISMATCH)
+}
+
+/// fsync cadence: appends between `sync_data` calls.
+pub const SYNC_EVERY: usize = 8;
+
+/// Self-compaction cadence: records appended between compacting rewrites.
+pub const COMPACT_INTERVAL: usize = 1024;
+
+/// Refuse frames claiming more than this (a corrupt length prefix must
+/// not allocate gigabytes).
+const MAX_FRAME: u32 = 64 * 1024 * 1024;
+
+// ---------------------------------------------------------------------------
+// hashing
+// ---------------------------------------------------------------------------
+
+const FNV64_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV64_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a 64 over `bytes`, continuing from `state` (chainable).
+pub fn fnv1a64(state: u64, bytes: &[u8]) -> u64 {
+    let mut h = state;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV64_PRIME);
+    }
+    h
+}
+
+/// Content hash over an ordered sequence of string parts (workspace JSON,
+/// patch names/values, …) — the resume-safety fingerprint stored in the
+/// journal header. Parts are length-delimited so `["ab","c"]` and
+/// `["a","bc"]` hash differently.
+pub fn content_hash<'a>(parts: impl IntoIterator<Item = &'a str>) -> u64 {
+    let mut h = FNV64_OFFSET;
+    for p in parts {
+        h = fnv1a64(h, &(p.len() as u64).to_le_bytes());
+        h = fnv1a64(h, p.as_bytes());
+    }
+    h
+}
+
+/// Hex form used in the header record (`Json::Num` is an f64 — a raw u64
+/// would lose precision past 2^53).
+pub fn hash_hex(h: u64) -> String {
+    format!("{h:016x}")
+}
+
+fn fnv1a32(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// records
+// ---------------------------------------------------------------------------
+
+/// One terminal outcome in the replay state: the unit of idempotent
+/// re-delivery. `key` is the logical identity (a scan point's patch name)
+/// the resume path merges on.
+#[derive(Debug, Clone)]
+pub struct DoneEntry {
+    pub task: TaskId,
+    pub key: Option<String>,
+    pub ok: bool,
+    /// result JSON when `ok`, error text (`Json::Str`) otherwise
+    pub value: Json,
+}
+
+/// A journaled-but-unfinished task: submitted (maybe claimed), no
+/// terminal record. Recovery resubmits these.
+#[derive(Debug, Clone)]
+pub struct OpenTask {
+    pub task: TaskId,
+    pub function: FunctionId,
+    pub key: Option<String>,
+    pub payload: Json,
+    pub claimed: bool,
+}
+
+/// The state a journal replays into: what recovery consumes.
+#[derive(Debug, Clone, Default)]
+pub struct ReplayState {
+    /// header record fields (None on a journal that lost its header)
+    pub header: Option<Json>,
+    /// terminal outcomes, append order (last entry wins per key)
+    pub done: Vec<DoneEntry>,
+    /// journaled-but-unfinished tasks by id
+    pub open: BTreeMap<TaskId, OpenTask>,
+    /// total records replayed
+    pub records: usize,
+    /// bytes dropped from a torn tail on load (0 = clean file)
+    pub dropped_bytes: usize,
+}
+
+impl ReplayState {
+    /// Latest successful outcome per logical key — the resume path's
+    /// completed-point map.
+    pub fn done_by_key(&self) -> BTreeMap<String, Json> {
+        let mut out = BTreeMap::new();
+        for d in &self.done {
+            if d.ok {
+                if let Some(k) = &d.key {
+                    out.insert(k.clone(), d.value.clone());
+                }
+            }
+        }
+        out
+    }
+
+    /// Header content hash (hex), when present.
+    pub fn content_hash_hex(&self) -> Option<String> {
+        self.header
+            .as_ref()
+            .and_then(|h| h.get("content_hash"))
+            .and_then(|v| v.as_str())
+            .map(|s| s.to_string())
+    }
+
+    fn apply(&mut self, rec: Record) {
+        self.records += 1;
+        match rec {
+            Record::Header(fields) => self.header = Some(fields),
+            Record::Submit { task, function, key, payload } => {
+                self.open.insert(task, OpenTask { task, function, key, payload, claimed: false });
+            }
+            Record::Claim { task, .. } => {
+                if let Some(t) = self.open.get_mut(&task) {
+                    t.claimed = true;
+                }
+            }
+            Record::Done { task, ok, value } => {
+                let key = self.open.remove(&task).and_then(|t| t.key);
+                self.done.push(DoneEntry { task, key, ok, value });
+            }
+            Record::Cancel { task } => {
+                self.open.remove(&task);
+            }
+            Record::Snapshot { done } => {
+                // a snapshot is a full restatement of terminal history
+                self.done = done;
+                self.open.clear();
+            }
+        }
+    }
+}
+
+/// One journal record (the JSON body of one frame).
+#[derive(Debug, Clone)]
+pub enum Record {
+    Header(Json),
+    Submit { task: TaskId, function: FunctionId, key: Option<String>, payload: Json },
+    Claim { task: TaskId, worker: String },
+    Done { task: TaskId, ok: bool, value: Json },
+    Cancel { task: TaskId },
+    Snapshot { done: Vec<DoneEntry> },
+}
+
+impl Record {
+    /// Short label for trace instants.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Record::Header(_) => "header",
+            Record::Submit { .. } => "submit",
+            Record::Claim { .. } => "claim",
+            Record::Done { .. } => "done",
+            Record::Cancel { .. } => "cancel",
+            Record::Snapshot { .. } => "snapshot",
+        }
+    }
+
+    /// Task id the record concerns, if any.
+    pub fn task(&self) -> Option<TaskId> {
+        match self {
+            Record::Submit { task, .. }
+            | Record::Claim { task, .. }
+            | Record::Done { task, .. }
+            | Record::Cancel { task } => Some(*task),
+            _ => None,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            Record::Header(fields) => {
+                let mut pairs = vec![("kind".to_string(), Json::str("header"))];
+                if let Some(obj) = fields.as_obj() {
+                    pairs.extend(obj.iter().cloned());
+                }
+                Json::Obj(pairs)
+            }
+            Record::Submit { task, function, key, payload } => {
+                let mut pairs = vec![
+                    ("kind", Json::str("submit")),
+                    ("task", Json::num(*task as f64)),
+                    ("function", Json::num(*function as f64)),
+                ];
+                if let Some(k) = key {
+                    pairs.push(("key", Json::str(k.clone())));
+                }
+                pairs.push(("payload", payload.clone()));
+                Json::obj(pairs)
+            }
+            Record::Claim { task, worker } => Json::obj(vec![
+                ("kind", Json::str("claim")),
+                ("task", Json::num(*task as f64)),
+                ("worker", Json::str(worker.clone())),
+            ]),
+            Record::Done { task, ok, value } => Json::obj(vec![
+                ("kind", Json::str("done")),
+                ("task", Json::num(*task as f64)),
+                ("ok", Json::Bool(*ok)),
+                ("value", value.clone()),
+            ]),
+            Record::Cancel { task } => Json::obj(vec![
+                ("kind", Json::str("cancel")),
+                ("task", Json::num(*task as f64)),
+            ]),
+            Record::Snapshot { done } => Json::obj(vec![
+                ("kind", Json::str("snapshot")),
+                (
+                    "done",
+                    Json::Arr(
+                        done.iter()
+                            .map(|d| {
+                                let mut pairs = vec![
+                                    ("task", Json::num(d.task as f64)),
+                                    ("ok", Json::Bool(d.ok)),
+                                ];
+                                if let Some(k) = &d.key {
+                                    pairs.push(("key", Json::str(k.clone())));
+                                }
+                                pairs.push(("value", d.value.clone()));
+                                Json::obj(pairs)
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Option<Record> {
+        let kind = v.get("kind")?.as_str()?;
+        let task = || v.get("task").and_then(|t| t.as_f64()).map(|t| t as TaskId);
+        match kind {
+            "header" => {
+                let fields: Vec<(String, Json)> = v
+                    .as_obj()?
+                    .iter()
+                    .filter(|(k, _)| k != "kind")
+                    .cloned()
+                    .collect();
+                Some(Record::Header(Json::Obj(fields)))
+            }
+            "submit" => Some(Record::Submit {
+                task: task()?,
+                function: v.get("function")?.as_f64()? as FunctionId,
+                key: v.get("key").and_then(|k| k.as_str()).map(|s| s.to_string()),
+                payload: v.get("payload")?.clone(),
+            }),
+            "claim" => Some(Record::Claim {
+                task: task()?,
+                worker: v.get("worker")?.as_str()?.to_string(),
+            }),
+            "done" => Some(Record::Done {
+                task: task()?,
+                ok: v.get("ok")?.as_bool()?,
+                value: v.get("value")?.clone(),
+            }),
+            "cancel" => Some(Record::Cancel { task: task()? }),
+            "snapshot" => {
+                let done = v
+                    .get("done")?
+                    .as_arr()?
+                    .iter()
+                    .filter_map(|d| {
+                        Some(DoneEntry {
+                            task: d.get("task")?.as_f64()? as TaskId,
+                            key: d.get("key").and_then(|k| k.as_str()).map(|s| s.to_string()),
+                            ok: d.get("ok")?.as_bool()?,
+                            value: d.get("value")?.clone(),
+                        })
+                    })
+                    .collect();
+                Some(Record::Snapshot { done })
+            }
+            _ => None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the journal
+// ---------------------------------------------------------------------------
+
+struct Inner {
+    file: File,
+    path: PathBuf,
+    /// replay mirror kept in lockstep with the file — the source for
+    /// compaction rewrites and [`Journal::state`]
+    state: ReplayState,
+    appends_since_sync: usize,
+    records_since_compact: usize,
+    appends: u64,
+    compactions: u64,
+    io_error: Option<String>,
+}
+
+/// Append-only, checksummed, self-compacting task journal. Thread-safe;
+/// the [`super::Service`] holds one behind an `Arc` and appends from its
+/// submit/claim/complete/cancel paths.
+pub struct Journal {
+    inner: Mutex<Inner>,
+}
+
+impl Journal {
+    /// Create (truncate) a journal at `path` and write the magic prefix.
+    pub fn create(path: impl Into<PathBuf>) -> Result<Journal, String> {
+        let path = path.into();
+        let mut file = OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(true)
+            .open(&path)
+            .map_err(|e| format!("journal create {}: {e}", path.display()))?;
+        file.write_all(MAGIC).map_err(|e| format!("journal write: {e}"))?;
+        Ok(Journal {
+            inner: Mutex::new(Inner {
+                file,
+                path,
+                state: ReplayState::default(),
+                appends_since_sync: 0,
+                records_since_compact: 0,
+                appends: 0,
+                compactions: 0,
+                io_error: None,
+            }),
+        })
+    }
+
+    /// Open an existing journal, replaying its records tolerantly: a torn
+    /// tail (partial frame or checksum mismatch) is truncated away and
+    /// reported in `ReplayState::dropped_bytes`. Returns the journal
+    /// (positioned for further appends) and the replayed state.
+    pub fn load(path: impl Into<PathBuf>) -> Result<(Journal, ReplayState), String> {
+        let path = path.into();
+        let bytes =
+            fs::read(&path).map_err(|e| format!("journal read {}: {e}", path.display()))?;
+        let (state, good_len) = replay_bytes(&bytes)?;
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(&path)
+            .map_err(|e| format!("journal open {}: {e}", path.display()))?;
+        if good_len < bytes.len() as u64 {
+            file.set_len(good_len).map_err(|e| format!("journal truncate: {e}"))?;
+        }
+        let mut file = file;
+        use std::io::Seek as _;
+        file.seek(std::io::SeekFrom::End(0)).map_err(|e| format!("journal seek: {e}"))?;
+        Ok((
+            Journal {
+                inner: Mutex::new(Inner {
+                    file,
+                    path,
+                    state: state.clone(),
+                    appends_since_sync: 0,
+                    records_since_compact: 0,
+                    appends: 0,
+                    compactions: 0,
+                    io_error: None,
+                }),
+            },
+            state,
+        ))
+    }
+
+    /// Append one record: frame it, write it, update the replay mirror,
+    /// batch the fsync, and self-compact on the interval. Emits a
+    /// `journal.append` trace instant. IO errors are latched (see
+    /// [`Journal::io_error`]) rather than propagated — a full disk must
+    /// not take the live scan down with it.
+    pub fn append(&self, rec: Record) {
+        let label = rec.label();
+        let task = rec.task();
+        let mut g = self.inner.lock().unwrap();
+        let body = json::to_string(&rec.to_json());
+        if let Err(e) = write_frame(&mut g.file, body.as_bytes()) {
+            g.io_error = Some(e);
+            return;
+        }
+        g.state.apply(rec);
+        g.appends += 1;
+        g.appends_since_sync += 1;
+        g.records_since_compact += 1;
+        if g.appends_since_sync >= SYNC_EVERY {
+            let _ = g.file.sync_data();
+            g.appends_since_sync = 0;
+        }
+        if g.records_since_compact >= COMPACT_INTERVAL {
+            if let Err(e) = compact_locked(&mut g) {
+                g.io_error = Some(e);
+            }
+        }
+        drop(g);
+        if crate::trace::enabled() {
+            crate::trace::instant(
+                crate::trace::kind::JOURNAL_APPEND,
+                task,
+                "journal",
+                label.to_string(),
+            );
+        }
+    }
+
+    /// Flush and fsync everything appended so far.
+    pub fn sync(&self) {
+        let mut g = self.inner.lock().unwrap();
+        let _ = g.file.sync_data();
+        g.appends_since_sync = 0;
+    }
+
+    /// Force a compacting rewrite now (normally automatic every
+    /// [`COMPACT_INTERVAL`] records).
+    pub fn compact(&self) -> Result<(), String> {
+        let mut g = self.inner.lock().unwrap();
+        compact_locked(&mut g)
+    }
+
+    /// Atomically move the journal file to `dest` (the recovery path
+    /// builds the compacted successor at a temp path, then promotes it
+    /// over the original in one rename). Appends keep flowing — the open
+    /// descriptor survives the rename.
+    pub fn promote(&self, dest: impl AsRef<Path>) -> Result<(), String> {
+        let mut g = self.inner.lock().unwrap();
+        let _ = g.file.sync_data();
+        fs::rename(&g.path, dest.as_ref())
+            .map_err(|e| format!("journal promote {}: {e}", dest.as_ref().display()))?;
+        g.path = dest.as_ref().to_path_buf();
+        Ok(())
+    }
+
+    /// Current replay state (mirror clone).
+    pub fn state(&self) -> ReplayState {
+        self.inner.lock().unwrap().state.clone()
+    }
+
+    /// Records appended through this handle (not counting loaded history).
+    pub fn append_count(&self) -> u64 {
+        self.inner.lock().unwrap().appends
+    }
+
+    /// Compacting rewrites performed by this handle.
+    pub fn compaction_count(&self) -> u64 {
+        self.inner.lock().unwrap().compactions
+    }
+
+    /// First latched IO error, if any append failed.
+    pub fn io_error(&self) -> Option<String> {
+        self.inner.lock().unwrap().io_error.clone()
+    }
+
+    pub fn path(&self) -> PathBuf {
+        self.inner.lock().unwrap().path.clone()
+    }
+}
+
+fn write_frame(file: &mut File, body: &[u8]) -> Result<(), String> {
+    let mut frame = Vec::with_capacity(8 + body.len());
+    frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&fnv1a32(body).to_le_bytes());
+    frame.extend_from_slice(body);
+    file.write_all(&frame).map_err(|e| format!("journal write: {e}"))
+}
+
+/// Rewrite the file from the mirror: magic, header, one snapshot of all
+/// terminal outcomes, and fresh submit/claim records for every open task.
+/// Crash-safe: built at a temp path, fsynced, renamed over the original.
+fn compact_locked(g: &mut Inner) -> Result<(), String> {
+    let tmp = g.path.with_extension("journal.compact-tmp");
+    let mut out = OpenOptions::new()
+        .create(true)
+        .write(true)
+        .truncate(true)
+        .open(&tmp)
+        .map_err(|e| format!("journal compact {}: {e}", tmp.display()))?;
+    out.write_all(MAGIC).map_err(|e| format!("journal compact write: {e}"))?;
+    let mut records = 0usize;
+    if let Some(h) = &g.state.header {
+        write_frame(&mut out, json::to_string(&Record::Header(h.clone()).to_json()).as_bytes())?;
+        records += 1;
+    }
+    write_frame(
+        &mut out,
+        json::to_string(&Record::Snapshot { done: g.state.done.clone() }.to_json()).as_bytes(),
+    )?;
+    records += 1;
+    for t in g.state.open.values() {
+        write_frame(
+            &mut out,
+            json::to_string(
+                &Record::Submit {
+                    task: t.task,
+                    function: t.function,
+                    key: t.key.clone(),
+                    payload: t.payload.clone(),
+                }
+                .to_json(),
+            )
+            .as_bytes(),
+        )?;
+        records += 1;
+        if t.claimed {
+            write_frame(
+                &mut out,
+                json::to_string(
+                    &Record::Claim { task: t.task, worker: String::new() }.to_json(),
+                )
+                .as_bytes(),
+            )?;
+            records += 1;
+        }
+    }
+    out.sync_data().map_err(|e| format!("journal compact sync: {e}"))?;
+    fs::rename(&tmp, &g.path).map_err(|e| format!("journal compact rename: {e}"))?;
+    use std::io::Seek as _;
+    out.seek(std::io::SeekFrom::End(0)).map_err(|e| format!("journal seek: {e}"))?;
+    g.file = out;
+    g.state.records = records;
+    g.records_since_compact = 0;
+    g.appends_since_sync = 0;
+    g.compactions += 1;
+    Ok(())
+}
+
+/// Replay raw journal bytes into state. Returns the state and the byte
+/// length of the valid prefix (anything past it is a torn tail).
+fn replay_bytes(bytes: &[u8]) -> Result<(ReplayState, u64), String> {
+    if bytes.len() < MAGIC.len() || &bytes[..MAGIC.len()] != MAGIC {
+        return Err(format!("not a journal file (missing {:?} magic)", "PFJRNL1"));
+    }
+    let mut state = ReplayState::default();
+    let mut pos = MAGIC.len();
+    loop {
+        if pos + 8 > bytes.len() {
+            break;
+        }
+        let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap());
+        let sum = u32::from_le_bytes(bytes[pos + 4..pos + 8].try_into().unwrap());
+        if len > MAX_FRAME || pos + 8 + len as usize > bytes.len() {
+            break;
+        }
+        let body = &bytes[pos + 8..pos + 8 + len as usize];
+        if fnv1a32(body) != sum {
+            break;
+        }
+        let Ok(text) = std::str::from_utf8(body) else { break };
+        let Ok(value) = json::parse(text) else { break };
+        let Some(rec) = Record::from_json(&value) else { break };
+        state.apply(rec);
+        pos += 8 + len as usize;
+    }
+    state.dropped_bytes = bytes.len() - pos;
+    Ok((state, pos as u64))
+}
+
+/// True when raw file bytes look like a journal (magic prefix).
+pub fn is_journal_bytes(bytes: &[u8]) -> bool {
+    bytes.len() >= MAGIC.len() && &bytes[..MAGIC.len()] == MAGIC
+}
+
+/// Validate a journal file for the `validate` subcommand: checks the
+/// magic, replays the frames, and requires a header record carrying the
+/// [`SCHEMA`] tag. Returns a summary object.
+pub fn validate_bytes(bytes: &[u8]) -> Result<Json, String> {
+    let (state, good_len) = replay_bytes(bytes)?;
+    let header = state.header.as_ref().ok_or("journal has no header record")?;
+    let schema = header
+        .get("schema")
+        .and_then(|s| s.as_str())
+        .ok_or("journal header missing 'schema'")?;
+    if schema != SCHEMA {
+        return Err(format!("journal header schema '{schema}' != '{SCHEMA}'"));
+    }
+    let done_ok = state.done.iter().filter(|d| d.ok).count();
+    Ok(Json::obj(vec![
+        ("schema", Json::str(schema)),
+        ("records", Json::num(state.records as f64)),
+        ("done", Json::num(state.done.len() as f64)),
+        ("done_ok", Json::num(done_ok as f64)),
+        ("open", Json::num(state.open.len() as f64)),
+        ("valid_bytes", Json::num(good_len as f64)),
+        ("dropped_bytes", Json::num(state.dropped_bytes as f64)),
+        (
+            "content_hash",
+            state
+                .content_hash_hex()
+                .map(Json::Str)
+                .unwrap_or(Json::Null),
+        ),
+    ]))
+}
+
+/// Build the standard scan header record fields.
+pub fn scan_header(analysis: &str, content_hash_hex: &str, points: usize) -> Json {
+    Json::obj(vec![
+        ("schema", Json::str(SCHEMA)),
+        ("analysis", Json::str(analysis)),
+        ("content_hash", Json::str(content_hash_hex)),
+        ("points", Json::num(points as f64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_path(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("pyhf-faas-journal-{name}-{}", std::process::id()));
+        p
+    }
+
+    fn submit(task: TaskId, key: &str) -> Record {
+        Record::Submit {
+            task,
+            function: 0,
+            key: Some(key.to_string()),
+            payload: Json::obj(vec![("patch", Json::str(key))]),
+        }
+    }
+
+    fn done(task: TaskId, v: f64) -> Record {
+        Record::Done { task, ok: true, value: Json::num(v) }
+    }
+
+    #[test]
+    fn record_json_roundtrip() {
+        let recs = vec![
+            Record::Header(scan_header("demo", "00ff", 3)),
+            submit(1, "p1"),
+            Record::Claim { task: 1, worker: "w0".into() },
+            done(1, 9.0),
+            Record::Cancel { task: 2 },
+            Record::Snapshot {
+                done: vec![DoneEntry {
+                    task: 1,
+                    key: Some("p1".into()),
+                    ok: false,
+                    value: Json::str("boom"),
+                }],
+            },
+        ];
+        for r in recs {
+            let j = r.to_json();
+            let back = Record::from_json(&j).expect("roundtrip");
+            assert_eq!(json::to_string(&back.to_json()), json::to_string(&j));
+        }
+    }
+
+    #[test]
+    fn append_load_replays_state() {
+        let path = tmp_path("replay");
+        let j = Journal::create(&path).unwrap();
+        j.append(Record::Header(scan_header("demo", "abcd", 2)));
+        j.append(submit(0, "p0"));
+        j.append(submit(1, "p1"));
+        j.append(Record::Claim { task: 0, worker: "w".into() });
+        j.append(done(0, 0.5));
+        j.sync();
+        assert!(j.io_error().is_none());
+        drop(j);
+
+        let (_j2, state) = Journal::load(&path).unwrap();
+        assert_eq!(state.dropped_bytes, 0);
+        assert_eq!(state.done.len(), 1);
+        assert_eq!(state.done[0].key.as_deref(), Some("p0"));
+        assert_eq!(state.open.len(), 1);
+        assert!(state.open.contains_key(&1));
+        assert_eq!(state.done_by_key().get("p0"), Some(&Json::num(0.5)));
+        assert_eq!(state.content_hash_hex().as_deref(), Some("abcd"));
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn torn_tail_is_dropped_at_every_boundary() {
+        // torture: truncate the journal at every byte length and require
+        // load to (a) never error, (b) never invent a record, (c) keep
+        // every fully-framed prefix record
+        let path = tmp_path("torture");
+        let j = Journal::create(&path).unwrap();
+        j.append(Record::Header(scan_header("demo", "cafe", 3)));
+        for i in 0..3u64 {
+            j.append(submit(i, &format!("p{i}")));
+            j.append(done(i, i as f64));
+        }
+        j.sync();
+        drop(j);
+        let full = fs::read(&path).unwrap();
+
+        // frame boundaries: recompute by walking the file
+        let mut boundaries = vec![MAGIC.len()];
+        let mut pos = MAGIC.len();
+        while pos + 8 <= full.len() {
+            let len = u32::from_le_bytes(full[pos..pos + 4].try_into().unwrap()) as usize;
+            pos += 8 + len;
+            boundaries.push(pos);
+        }
+        assert_eq!(*boundaries.last().unwrap(), full.len());
+
+        let cut = tmp_path("torture-cut");
+        for cut_len in 0..=full.len() {
+            fs::write(&cut, &full[..cut_len]).unwrap();
+            if cut_len < MAGIC.len() {
+                assert!(Journal::load(&cut).is_err(), "no magic at {cut_len}");
+                continue;
+            }
+            let (_j, state) = Journal::load(&cut).unwrap();
+            // records survive exactly up to the last full frame boundary
+            let expect_records =
+                boundaries.iter().filter(|&&b| b <= cut_len && b > MAGIC.len()).count();
+            assert_eq!(state.records, expect_records, "cut at {cut_len}");
+            assert_eq!(
+                state.dropped_bytes,
+                cut_len - boundaries.iter().filter(|&&b| b <= cut_len).max().unwrap(),
+                "cut at {cut_len}"
+            );
+            // replay invariants: a done record only exists for a journaled
+            // submit; nothing submitted is lost (it is open or done)
+            for d in &state.done {
+                assert!(d.key.is_some(), "done without its submit at {cut_len}");
+            }
+            let seen = state.done.len() + state.open.len();
+            assert!(seen <= 3, "invented tasks at {cut_len}");
+        }
+        let _ = fs::remove_file(&path);
+        let _ = fs::remove_file(&cut);
+    }
+
+    #[test]
+    fn corrupt_checksum_drops_tail() {
+        let path = tmp_path("corrupt");
+        let j = Journal::create(&path).unwrap();
+        j.append(Record::Header(scan_header("demo", "beef", 2)));
+        j.append(submit(0, "p0"));
+        j.append(done(0, 1.0));
+        j.sync();
+        drop(j);
+        let mut bytes = fs::read(&path).unwrap();
+        // flip one byte in the *middle* record's body: it and everything
+        // after must be dropped; the header must survive
+        let hdr_len =
+            u32::from_le_bytes(bytes[MAGIC.len()..MAGIC.len() + 4].try_into().unwrap()) as usize;
+        let second_body = MAGIC.len() + 8 + hdr_len + 8 + 2;
+        bytes[second_body] ^= 0xff;
+        fs::write(&path, &bytes).unwrap();
+        let (_j, state) = Journal::load(&path).unwrap();
+        assert!(state.header.is_some(), "header before the corruption survives");
+        assert!(state.done.is_empty() && state.open.is_empty());
+        assert!(state.dropped_bytes > 0);
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn compaction_preserves_state_and_shrinks_history() {
+        let path = tmp_path("compact");
+        let j = Journal::create(&path).unwrap();
+        j.append(Record::Header(scan_header("demo", "f00d", 4)));
+        for i in 0..4u64 {
+            j.append(submit(i, &format!("p{i}")));
+            j.append(Record::Claim { task: i, worker: "w".into() });
+        }
+        for i in 0..3u64 {
+            j.append(done(i, i as f64));
+        }
+        let before = fs::metadata(&path).unwrap().len();
+        j.compact().unwrap();
+        assert_eq!(j.compaction_count(), 1);
+        // post-compaction appends keep working
+        j.append(done(3, 3.0));
+        j.sync();
+        drop(j);
+        let after = fs::metadata(&path).unwrap().len();
+        assert!(after < before, "compaction must shrink history ({before} -> {after})");
+        let (_j, state) = Journal::load(&path).unwrap();
+        assert_eq!(state.done_by_key().len(), 4);
+        assert!(state.open.is_empty());
+        assert!(state.header.is_some());
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn auto_compaction_triggers_on_interval() {
+        let path = tmp_path("autocompact");
+        let j = Journal::create(&path).unwrap();
+        j.append(Record::Header(scan_header("demo", "0123", 1)));
+        for i in 0..(COMPACT_INTERVAL as u64 + 8) {
+            j.append(submit(i, "p"));
+            j.append(Record::Done { task: i, ok: true, value: Json::num(1.0) });
+        }
+        assert!(j.compaction_count() >= 1, "interval compaction must fire");
+        assert!(j.io_error().is_none());
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn validate_accepts_good_and_rejects_bad() {
+        let path = tmp_path("validate");
+        let j = Journal::create(&path).unwrap();
+        j.append(Record::Header(scan_header("demo", "aa55", 1)));
+        j.append(submit(0, "p0"));
+        j.append(done(0, 2.0));
+        j.sync();
+        drop(j);
+        let bytes = fs::read(&path).unwrap();
+        assert!(is_journal_bytes(&bytes));
+        let summary = validate_bytes(&bytes).unwrap();
+        assert_eq!(summary.get("schema").unwrap().as_str(), Some(SCHEMA));
+        assert_eq!(summary.get("done_ok").unwrap().as_f64(), Some(1.0));
+        assert_eq!(summary.get("content_hash").unwrap().as_str(), Some("aa55"));
+        // headerless journal fails validation
+        let j2 = Journal::create(&path).unwrap();
+        j2.append(submit(0, "p0"));
+        j2.sync();
+        drop(j2);
+        assert!(validate_bytes(&fs::read(&path).unwrap()).unwrap_err().contains("header"));
+        assert!(!is_journal_bytes(b"{\"schema\": \"x\"}"));
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn content_hash_is_order_and_boundary_sensitive() {
+        let a = content_hash(["ab", "c"]);
+        let b = content_hash(["a", "bc"]);
+        let c = content_hash(["c", "ab"]);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a, content_hash(["ab", "c"]));
+        assert_eq!(hash_hex(0xff), "00000000000000ff");
+        assert!(is_mismatch(&format!("{JOURNAL_MISMATCH}: hash differs")));
+        assert!(!is_mismatch("deadline exceeded"));
+    }
+
+    #[test]
+    fn promote_renames_and_appends_keep_flowing() {
+        let src = tmp_path("promote-src");
+        let dst = tmp_path("promote-dst");
+        let j = Journal::create(&src).unwrap();
+        j.append(Record::Header(scan_header("demo", "11ee", 1)));
+        j.promote(&dst).unwrap();
+        assert!(!src.exists());
+        j.append(submit(0, "p0"));
+        j.append(done(0, 7.0));
+        j.sync();
+        drop(j);
+        let (_j, state) = Journal::load(&dst).unwrap();
+        assert_eq!(state.done.len(), 1);
+        let _ = fs::remove_file(&dst);
+    }
+}

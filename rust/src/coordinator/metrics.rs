@@ -44,6 +44,11 @@ struct Inner {
     deadline_exceeded: u64,
     migrated: u64,
     health_probes: u64,
+    poisoned: u64,
+    hedge_wasted_s: f64,
+    journal_appends: u64,
+    recovered_delivered: u64,
+    recovered_resubmitted: u64,
     wait: Accumulator,
     service: Accumulator,
     startup: Accumulator,
@@ -108,6 +113,19 @@ pub struct Snapshot {
     pub migrated: u64,
     /// synthetic no-op probes sent to readmitted endpoints
     pub health_probes: u64,
+    /// logical tasks terminated with the typed `POISON_TASK` outcome
+    /// because their attempts repeatedly crashed workers
+    pub poisoned: u64,
+    /// worker-seconds burnt by the losing side of hedge races (the cost
+    /// ledger for tuning `HedgePolicy::after_p99`)
+    pub hedge_wasted_s: f64,
+    /// records appended to the write-ahead task journal
+    pub journal_appends: u64,
+    /// journaled terminal outcomes re-delivered (not re-executed) by
+    /// `Service::recover`
+    pub recovered_delivered: u64,
+    /// journaled-but-unfinished tasks resubmitted by `Service::recover`
+    pub recovered_resubmitted: u64,
     pub mean_wait_s: f64,
     pub mean_service_s: f64,
     pub total_service_s: f64,
@@ -267,6 +285,34 @@ impl Metrics {
         self.inner.lock().unwrap().health_probes += 1;
     }
 
+    /// A logical task was terminated with the typed `POISON_TASK` outcome
+    /// after repeatedly crashing workers.
+    pub fn task_poisoned(&self) {
+        self.inner.lock().unwrap().poisoned += 1;
+    }
+
+    /// The losing side of a hedge race burnt `seconds` of duplicate work.
+    pub fn hedge_wasted(&self, seconds: f64) {
+        if seconds.is_finite() && seconds > 0.0 {
+            self.inner.lock().unwrap().hedge_wasted_s += seconds;
+        }
+    }
+
+    /// One record was appended to the write-ahead task journal.
+    pub fn journal_append(&self) {
+        self.inner.lock().unwrap().journal_appends += 1;
+    }
+
+    /// `Service::recover` re-delivered one journaled terminal outcome.
+    pub fn task_recovered_delivered(&self) {
+        self.inner.lock().unwrap().recovered_delivered += 1;
+    }
+
+    /// `Service::recover` resubmitted one journaled-but-unfinished task.
+    pub fn task_recovered_resubmitted(&self) {
+        self.inner.lock().unwrap().recovered_resubmitted += 1;
+    }
+
     /// (completed, failed, worker_init_failures) — the narrow read the
     /// router's health probes poll on every routing decision, so they don't
     /// build a full [`Snapshot`] under the router lock.
@@ -312,6 +358,11 @@ impl Metrics {
             deadline_exceeded: g.deadline_exceeded,
             migrated: g.migrated,
             health_probes: g.health_probes,
+            poisoned: g.poisoned,
+            hedge_wasted_s: g.hedge_wasted_s,
+            journal_appends: g.journal_appends,
+            recovered_delivered: g.recovered_delivered,
+            recovered_resubmitted: g.recovered_resubmitted,
             mean_wait_s: if g.wait.count() > 0 { g.wait.mean() } else { 0.0 },
             mean_service_s: if g.service.count() > 0 { g.service.mean() } else { 0.0 },
             total_service_s: g.service.mean() * g.service.count() as f64,
@@ -379,6 +430,11 @@ impl Snapshot {
             ("deadline_exceeded", Json::num(self.deadline_exceeded as f64)),
             ("migrated", Json::num(self.migrated as f64)),
             ("health_probes", Json::num(self.health_probes as f64)),
+            ("poisoned", Json::num(self.poisoned as f64)),
+            ("hedge_wasted_s", Json::num(self.hedge_wasted_s)),
+            ("journal_appends", Json::num(self.journal_appends as f64)),
+            ("recovered_delivered", Json::num(self.recovered_delivered as f64)),
+            ("recovered_resubmitted", Json::num(self.recovered_resubmitted as f64)),
             ("mean_wait_s", Json::num(self.mean_wait_s)),
             ("mean_service_s", Json::num(self.mean_service_s)),
             ("total_service_s", Json::num(self.total_service_s)),
@@ -509,6 +565,34 @@ mod tests {
         assert_eq!(j.get("hedges").unwrap().as_f64(), Some(1.0));
         assert_eq!(j.get("deadline_exceeded").unwrap().as_f64(), Some(1.0));
         assert_eq!(j.get("migrated").unwrap().as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn durability_counters_accumulate() {
+        let m = Metrics::new();
+        m.task_poisoned();
+        m.hedge_wasted(1.5);
+        m.hedge_wasted(0.5);
+        m.hedge_wasted(f64::NAN); // ignored, never poisons the sum
+        m.hedge_wasted(-1.0); // ignored
+        m.journal_append();
+        m.journal_append();
+        m.journal_append();
+        m.task_recovered_delivered();
+        m.task_recovered_delivered();
+        m.task_recovered_resubmitted();
+        let s = m.snapshot();
+        assert_eq!(s.poisoned, 1);
+        assert!((s.hedge_wasted_s - 2.0).abs() < 1e-12);
+        assert_eq!(s.journal_appends, 3);
+        assert_eq!(s.recovered_delivered, 2);
+        assert_eq!(s.recovered_resubmitted, 1);
+        let j = s.to_json();
+        assert_eq!(j.get("poisoned").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("hedge_wasted_s").unwrap().as_f64(), Some(s.hedge_wasted_s));
+        assert_eq!(j.get("journal_appends").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("recovered_delivered").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("recovered_resubmitted").unwrap().as_f64(), Some(1.0));
     }
 
     #[test]

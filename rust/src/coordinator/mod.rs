@@ -23,6 +23,7 @@ pub mod driver;
 pub mod endpoint;
 pub mod executor;
 pub mod fitops;
+pub mod journal;
 pub mod metrics;
 pub mod provider;
 pub mod reliability;
@@ -35,7 +36,8 @@ pub use client::{BatchSubmission, FaasClient};
 pub use driver::{run_scan, run_scan_routed, ScanOptions};
 pub use endpoint::{Endpoint, EndpointConfig};
 pub use executor::ExecutorConfig;
+pub use journal::Journal;
 pub use provider::{LocalProvider, Provider, SimSlurmProvider};
 pub use reliability::{HedgePolicy, ReliabilityPolicy, RetryBudget, RetryPolicy};
-pub use service::{Service, ServiceHandle, WorkerContext};
+pub use service::{Recovery, Service, ServiceHandle, WorkerContext};
 pub use task::{EndpointId, FunctionId, TaskId, TaskState};

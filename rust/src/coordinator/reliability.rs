@@ -35,16 +35,35 @@ use std::time::Duration;
 /// client and tests match on it via [`is_deadline_exceeded`].
 pub const DEADLINE_EXCEEDED: &str = "deadline exceeded";
 
+/// Typed error text for a logical task terminated because its attempts
+/// repeatedly crashed workers (a poison task). Stable — match with
+/// [`is_poison_task`].
+pub const POISON_TASK: &str = "poison task";
+
 /// True when a task error is the typed deadline outcome.
 pub fn is_deadline_exceeded(err: &str) -> bool {
     err.contains(DEADLINE_EXCEEDED)
 }
 
+/// True when a task error is the typed poison-task outcome.
+pub fn is_poison_task(err: &str) -> bool {
+    err.contains(POISON_TASK)
+}
+
+/// True when a failed attempt took its worker down with it (the executor's
+/// crash path and init-death drain both use this phrasing). Crash-attributed
+/// failures count toward [`ReliabilityPolicy::max_total_attempts`]: a task
+/// that kills every worker it touches must be terminated as poison, not
+/// migrated endlessly around the fabric quarantining site after site.
+pub fn is_crash_attributed(err: &str) -> bool {
+    err.contains("worker crashed")
+}
+
 /// True when a failed attempt is worth resubmitting: deadline drops are
-/// dead work by definition and cancellations are client decisions, so
-/// neither is retried.
+/// dead work by definition, cancellations are client decisions, and a
+/// poison verdict is final — none of these are retried.
 pub fn is_retryable(err: &str) -> bool {
-    !is_deadline_exceeded(err) && !err.contains("cancelled")
+    !is_deadline_exceeded(err) && !is_poison_task(err) && !err.contains("cancelled")
 }
 
 /// SplitMix64 — the deterministic bit mixer behind backoff jitter (no
@@ -203,6 +222,11 @@ pub struct ReliabilityPolicy {
     /// and migration
     pub task_deadline: Option<Duration>,
     pub hedge: Option<HedgePolicy>,
+    /// poison-task bound: once this many crash-attributed attempts
+    /// ([`is_crash_attributed`]) have been spent on one logical task, it
+    /// is terminated with the typed [`POISON_TASK`] outcome instead of
+    /// being retried/migrated further (0 = disabled)
+    pub max_total_attempts: u32,
 }
 
 impl ReliabilityPolicy {
@@ -225,9 +249,18 @@ impl ReliabilityPolicy {
         self
     }
 
+    /// Enable poison-task termination after `n` crash-attributed attempts.
+    pub fn with_max_total_attempts(mut self, n: u32) -> Self {
+        self.max_total_attempts = n;
+        self
+    }
+
     /// True when nothing is enabled (the client takes its fast path).
     pub fn is_noop(&self) -> bool {
-        self.retry.is_none() && self.task_deadline.is_none() && self.hedge.is_none()
+        self.retry.is_none()
+            && self.task_deadline.is_none()
+            && self.hedge.is_none()
+            && self.max_total_attempts == 0
     }
 }
 
@@ -243,6 +276,17 @@ mod tests {
         assert!(!is_retryable(DEADLINE_EXCEEDED));
         assert!(!is_retryable("cancelled by gather timeout"));
         assert!(is_retryable("worker crashed (chaos)"));
+    }
+
+    #[test]
+    fn poison_errors_are_typed_crash_attributed_and_final() {
+        assert!(is_poison_task(POISON_TASK));
+        assert!(is_poison_task("poison task: 3 crash-attributed attempts"));
+        assert!(!is_poison_task("worker crashed mid-task (chaos)"));
+        assert!(!is_retryable(POISON_TASK), "a poison verdict is final");
+        assert!(is_crash_attributed("worker crashed mid-task (chaos)"));
+        assert!(!is_crash_attributed("kaput"));
+        assert!(!is_crash_attributed(DEADLINE_EXCEEDED));
     }
 
     #[test]
@@ -296,5 +340,7 @@ mod tests {
         assert_eq!(p.retry.as_ref().unwrap().max_attempts, 3);
         assert_eq!(p.task_deadline, Some(Duration::from_secs(30)));
         assert!(p.hedge.as_ref().unwrap().after_p99 > 1.0);
+        assert!(ReliabilityPolicy::new().with_max_total_attempts(4).max_total_attempts == 4);
+        assert!(!ReliabilityPolicy::new().with_max_total_attempts(4).is_noop());
     }
 }

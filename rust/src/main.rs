@@ -47,6 +47,15 @@ COMMANDS:
                    [--hedge-after-p99 FACTOR] (duplicate a fit stuck longer
                    than FACTOR x live p99 onto another endpoint; first
                    result wins)
+                   [--max-total-attempts N] (poison-task cutoff: terminate a
+                   fit whose attempts crashed N workers with the typed
+                   POISON_TASK outcome instead of retrying forever)
+                   [--journal PATH] (write-ahead task journal: every task
+                   transition is logged before the client observes it, so a
+                   killed scan resumes with --resume)
+                   [--resume PATH] (resume a killed scan from its journal:
+                   completed points are restored without refitting, only the
+                   lost in-flight tail is resubmitted)
                    [--bench-out BENCH_fit.json] (machine-readable throughput)
                    [--trace-out trace.json] (task-lifecycle trace: Chrome
                    trace-event JSON, open at ui.perfetto.dev)
@@ -59,7 +68,8 @@ COMMANDS:
                    from the two-site chaos replay) [--seed N]
   upper-limit      --pallet <dir> --patch <name> [--points 16]
   toys             --pallet <dir> --patch <name> [--n-toys 300] [--seed 42]
-  validate         <file.json> (schema-check a trace/metrics/bench artifact)
+  validate         <file> (schema-check a trace/metrics/bench JSON artifact
+                   or a binary scan journal)
   info             [--artifacts <dir>]
 
 GLOBAL OPTIONS:
@@ -294,6 +304,19 @@ fn cmd_scan(args: &Args) -> Result<(), String> {
         }
         reliability = reliability.with_hedge(HedgePolicy { after_p99: factor, ..Default::default() });
     }
+    if args.get("max-total-attempts").is_some() {
+        let n = args.get_usize("max-total-attempts", 3)? as u32;
+        reliability = reliability.with_max_total_attempts(n);
+    }
+    let journal_path = args.get("journal").map(PathBuf::from);
+    let resume_path = args.get("resume").map(PathBuf::from);
+    if journal_path.is_some() && resume_path.is_some() {
+        return Err(
+            "--journal and --resume are mutually exclusive (--resume keeps writing \
+             the journal it resumes from)"
+                .to_string(),
+        );
+    }
 
     // tracing must be on before the endpoints spawn so worker startup and
     // the first route decisions land in the timeline
@@ -319,6 +342,8 @@ fn cmd_scan(args: &Args) -> Result<(), String> {
         verbose: args.flag("verbose"),
         limit,
         batch,
+        journal: journal_path,
+        resume: resume_path,
         ..Default::default()
     };
     let scan = if endpoints.len() > 1 {
@@ -380,10 +405,19 @@ fn cmd_scan(args: &Args) -> Result<(), String> {
             m.endpoints_quarantined, m.endpoints_readmitted, init_failures, m.health_probes
         );
     }
-    if !reliability.is_noop() || m.retries + m.hedges + m.deadline_exceeded + m.migrated > 0 {
+    if !reliability.is_noop() || m.retries + m.hedges + m.deadline_exceeded + m.migrated + m.poisoned > 0
+    {
         println!(
-            "  reliability: {} retries | {} hedges ({} won) | {} deadline-exceeded | {} migrated",
-            m.retries, m.hedges, m.hedge_wins, m.deadline_exceeded, m.migrated
+            "  reliability: {} retries | {} hedges ({} won, {:.1} s wasted) | \
+             {} deadline-exceeded | {} migrated | {} poisoned",
+            m.retries, m.hedges, m.hedge_wins, m.hedge_wasted_s, m.deadline_exceeded, m.migrated,
+            m.poisoned
+        );
+    }
+    if svc.journal_enabled() {
+        println!(
+            "  durability: {} journal appends | recovered {} delivered + {} resubmitted",
+            m.journal_appends, m.recovered_delivered, m.recovered_resubmitted
         );
     }
     if let Some(ul) = upper_limit_on_axis(&scan.points, 0.0) {
@@ -612,7 +646,16 @@ fn cmd_validate(args: &Args) -> Result<(), String> {
         .map(String::as_str)
         .or_else(|| args.get("file"))
         .ok_or("usage: pyhf-faas validate <file.json>")?;
-    let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+    let bytes = std::fs::read(path).map_err(|e| format!("read {path}: {e}"))?;
+    // binary scan journals are sniffed by magic before any JSON parsing
+    if pyhf_faas::coordinator::journal::is_journal_bytes(&bytes) {
+        let summary = pyhf_faas::coordinator::journal::validate_bytes(&bytes)
+            .map_err(|e| format!("{path}: {e}"))?;
+        println!("{path}: valid ({})", pyhf_faas::coordinator::journal::SCHEMA);
+        println!("  {}", json::to_string(&summary));
+        return Ok(());
+    }
+    let text = String::from_utf8(bytes).map_err(|e| format!("read {path}: {e}"))?;
     let doc = json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
     let schema = doc
         .get("schema")

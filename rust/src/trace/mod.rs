@@ -41,6 +41,8 @@ pub mod kind {
     pub const HEALTH_PROBE: &str = "health.probe";
     pub const WORKER_INIT_FAIL: &str = "worker.init_fail";
     pub const CHAOS_INJECT: &str = "chaos.inject";
+    pub const JOURNAL_APPEND: &str = "journal.append";
+    pub const RECOVER_REPLAY: &str = "recover.replay";
     // spans
     pub const TASK_WAIT: &str = "task.wait";
     pub const TASK_EXECUTE: &str = "task.execute";

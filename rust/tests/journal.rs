@@ -1,0 +1,358 @@
+//! End-to-end durability properties against the live stack: a journaled
+//! scan killed mid-flight resumes on a fresh coordinator with terminal
+//! results re-delivered (never re-executed) and only the lost tail
+//! resubmitted; the coordinator-kill chaos fault drives the same restart;
+//! a crash-looping task is terminated with the typed poison outcome; and
+//! the driver-level `--journal` / `--resume` path restores every
+//! completed point. The chaos harness is process-global, so every test
+//! serializes on one lock (executors consult it on each execution).
+
+use std::collections::HashSet;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use pyhf_faas::coordinator::journal::{self, Journal};
+use pyhf_faas::coordinator::reliability::is_poison_task;
+use pyhf_faas::coordinator::{
+    chaos, run_scan, ChaosFault, ChaosPlan, ChaosRule, Endpoint, EndpointConfig, ExecutorConfig,
+    FaasClient, FaultPoint, ReliabilityPolicy, RetryPolicy, ScanOptions, Service, ServiceHandle,
+};
+use pyhf_faas::util::json::Json;
+
+fn chaos_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn quick_endpoint(svc: &ServiceHandle, name: &str, workers: usize) -> Endpoint {
+    Endpoint::start(
+        svc.clone(),
+        EndpointConfig::new(name).with_executor(ExecutorConfig {
+            max_blocks: 1,
+            nodes_per_block: 1,
+            workers_per_node: workers,
+            parallelism: 1.0,
+            poll: Duration::from_millis(1),
+        }),
+    )
+}
+
+fn patch(i: usize) -> Json {
+    Json::obj(vec![("patch", Json::str(format!("p{i}"))), ("class", Json::str("A"))])
+}
+
+fn tmp(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("pyhf-faas-{tag}-{}.journal", std::process::id()))
+}
+
+/// Wait until the service ledger shows at least `want` completions.
+fn wait_completed(svc: &ServiceHandle, want: u64) {
+    let t0 = Instant::now();
+    while svc.metrics.snapshot().completed < want {
+        assert!(t0.elapsed() < Duration::from_secs(20), "never reached {want} completions");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// Kill-and-resume: a journaled wave is torn down mid-flight (the journal
+/// snapshot taken at the kill instant is byte-for-byte what disk would
+/// hold on SIGKILL); a fresh service recovers it, re-delivering the
+/// journaled completions without re-executing them and resubmitting the
+/// rest, and the ledger invariant holds across the restart.
+#[test]
+fn kill_and_resume_redelivers_without_reexecution() {
+    let _g = chaos_lock();
+    chaos::clear();
+    let path = tmp("e2e-kill");
+    let kill = tmp("e2e-kill-snapshot");
+    let n = 12usize;
+
+    let svc = Service::new();
+    let ep = quick_endpoint(&svc, "jrn-kill", 2);
+    let client = FaasClient::new(svc.clone());
+    let f = client.register_function(
+        "echo-slow",
+        Arc::new(|p: &Json, _: &mut _| {
+            std::thread::sleep(Duration::from_millis(20));
+            Ok(p.clone())
+        }),
+    );
+    let j = Journal::create(&path).unwrap();
+    j.append(journal::Record::Header(journal::scan_header(
+        "e2e",
+        &journal::hash_hex(journal::content_hash(["e2e"])),
+        n,
+    )));
+    svc.set_journal(Arc::new(j));
+
+    let _tasks: Vec<_> = (0..n).map(|i| client.run(patch(i), ep.id, f).unwrap()).collect();
+    wait_completed(&svc, 4);
+    // the kill instant: snapshot the journal before the graceful teardown
+    // (which drains still-queued tasks as failures) can append anything
+    svc.journal_handle().unwrap().sync();
+    std::fs::copy(&path, &kill).unwrap();
+    ep.shutdown();
+    drop(client);
+    drop(svc);
+
+    // fresh coordinator: recover the snapshot, resubmitting the tail
+    let svc2 = Service::new();
+    let ep2 = quick_endpoint(&svc2, "jrn-resume", 2);
+    let executed: Arc<Mutex<HashSet<String>>> = Arc::new(Mutex::new(HashSet::new()));
+    let client2 = FaasClient::new(svc2.clone());
+    let f2 = client2.register_function("echo", {
+        let executed = executed.clone();
+        Arc::new(move |p: &Json, _: &mut _| {
+            let key = p.get("patch").and_then(|v| v.as_str()).unwrap_or("?").to_string();
+            executed.lock().unwrap().insert(key);
+            Ok(p.clone())
+        })
+    });
+    let (loaded, state) = Journal::load(&kill).unwrap();
+    drop(loaded);
+    let done_keys: Vec<String> = state.done_by_key().keys().cloned().collect();
+    assert!(done_keys.len() >= 4, "setup: too few journaled completions");
+
+    let rec = svc2.recover(&kill, f2, Some(ep2.id), true).unwrap();
+    assert_eq!(rec.delivered.len(), done_keys.len());
+    assert_eq!(rec.delivered.len() + rec.resubmitted.len(), n);
+    assert!(!rec.resubmitted.is_empty(), "the kill left no tail to resubmit");
+
+    // re-delivered results are available immediately, value intact
+    for (key, id) in &rec.delivered {
+        let v = svc2.try_result(*id).expect("delivered result must be terminal").unwrap();
+        assert_eq!(v.get("patch").and_then(|p| p.as_str()), key.as_deref());
+    }
+    for (_k, id) in &rec.resubmitted {
+        svc2.wait_result(*id, Duration::from_secs(10)).expect("resubmitted fit");
+    }
+    svc2.journal_handle().unwrap().sync();
+    ep2.shutdown();
+
+    // never double-executed: no journaled completion ran on the new stack;
+    // the resubmitted tail all did
+    let ex = executed.lock().unwrap();
+    for k in &done_keys {
+        assert!(!ex.contains(k), "journaled completion '{k}' was re-executed");
+    }
+    for (k, _) in &rec.resubmitted {
+        assert!(ex.contains(k.as_deref().unwrap()), "tail task {k:?} never ran");
+    }
+    drop(ex);
+
+    let m = svc2.metrics.snapshot();
+    assert_eq!(m.submitted, m.completed + m.failed + m.cancelled, "ledger across restart");
+    assert_eq!(m.recovered_delivered, rec.delivered.len() as u64);
+    assert_eq!(m.recovered_resubmitted, rec.resubmitted.len() as u64);
+    assert!(m.journal_appends > 0, "the successor journal never saw an append");
+
+    // the promoted successor journal is consistent: every point terminal
+    let (l2, s2) = Journal::load(&kill).unwrap();
+    drop(l2);
+    assert_eq!(s2.done_by_key().len(), n);
+    assert!(s2.open.is_empty(), "promoted journal still has open tasks: {:?}", s2.open);
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&kill);
+}
+
+/// The coordinator-kill chaos fault decides the kill point: the rule is
+/// consulted at the `Coordinator` fault point once per observed
+/// completion, fires exactly once, and the restart it forces reconciles.
+#[test]
+fn coordinator_kill_chaos_rule_drives_restart() {
+    let _g = chaos_lock();
+    chaos::clear();
+    let path = tmp("e2e-chaos-kill");
+    let kill = tmp("e2e-chaos-kill-snapshot");
+    let n = 16usize;
+
+    let svc = Service::new();
+    let ep = quick_endpoint(&svc, "jrn-chaos", 2);
+    let client = FaasClient::new(svc.clone());
+    let f = client.register_function(
+        "echo-slow",
+        Arc::new(|p: &Json, _: &mut _| {
+            std::thread::sleep(Duration::from_millis(25));
+            Ok(p.clone())
+        }),
+    );
+    let j = Journal::create(&path).unwrap();
+    j.append(journal::Record::Header(journal::scan_header(
+        "e2e-chaos",
+        &journal::hash_hex(journal::content_hash(["e2e-chaos"])),
+        n,
+    )));
+    svc.set_journal(Arc::new(j));
+    chaos::install(
+        ChaosPlan::new(0xc0de).rule(ChaosRule::new(ChaosFault::KillCoordinator, None, 5, 1)),
+    );
+
+    let _tasks: Vec<_> = (0..n).map(|i| client.run(patch(i), ep.id, f).unwrap()).collect();
+    // consult the Coordinator fault point once per completion; the rule
+    // firing means "the coordinator dies here"
+    let t0 = Instant::now();
+    let mut consulted = 0u64;
+    let killed = 'kill: loop {
+        assert!(t0.elapsed() < Duration::from_secs(20), "kill rule never fired");
+        let completed = svc.metrics.snapshot().completed;
+        while consulted < completed {
+            consulted += 1;
+            if matches!(
+                chaos::inject(FaultPoint::Coordinator, ep.id, None),
+                Some(ChaosFault::KillCoordinator)
+            ) {
+                break 'kill true;
+            }
+        }
+        if completed >= n as u64 {
+            break false;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    };
+    let plan = chaos::clear().expect("chaos plan was installed");
+    assert!(killed, "workload finished before the KillCoordinator rule fired");
+    assert_eq!(plan.total_hits(), 1, "KillCoordinator must fire exactly once");
+    svc.journal_handle().unwrap().sync();
+    std::fs::copy(&path, &kill).unwrap();
+    ep.shutdown();
+    drop(client);
+    drop(svc);
+
+    let svc2 = Service::new();
+    let ep2 = quick_endpoint(&svc2, "jrn-chaos-resume", 2);
+    let client2 = FaasClient::new(svc2.clone());
+    let f2 = client2.register_function("echo", Arc::new(|p: &Json, _: &mut _| Ok(p.clone())));
+    let rec = svc2.recover(&kill, f2, Some(ep2.id), true).unwrap();
+    assert!(rec.delivered.len() >= 5, "the rule fired after 5 journaled completions");
+    assert_eq!(rec.delivered.len() + rec.resubmitted.len(), n);
+    for (_k, id) in &rec.resubmitted {
+        svc2.wait_result(*id, Duration::from_secs(10)).expect("resubmitted fit");
+    }
+    ep2.shutdown();
+    let m = svc2.metrics.snapshot();
+    assert_eq!(m.submitted, m.completed + m.failed + m.cancelled, "ledger across restart");
+    assert_eq!(m.completed, n as u64);
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&kill);
+}
+
+/// Poison-task termination: a fit whose every attempt crashes its worker
+/// is terminated with the typed `POISON_TASK` outcome after
+/// `max_total_attempts` crash-attributed attempts, instead of retrying
+/// (and killing workers) forever.
+#[test]
+fn poison_task_terminates_crash_looping_fit() {
+    let _g = chaos_lock();
+    chaos::clear();
+
+    let svc = Service::new();
+    let ep = quick_endpoint(&svc, "jrn-poison", 4);
+    let client = FaasClient::new(svc.clone()).with_reliability(
+        ReliabilityPolicy::new()
+            .with_retry(RetryPolicy {
+                max_attempts: 5,
+                backoff_base: Duration::from_millis(2),
+                ..Default::default()
+            })
+            .with_max_total_attempts(2),
+    );
+    let f = client.register_function("echo", Arc::new(|p: &Json, _: &mut _| Ok(p.clone())));
+
+    // every execution of the task takes its worker down with it
+    chaos::install(ChaosPlan::new(0x0bad).rule(ChaosRule::new(ChaosFault::Crash, Some(ep.id), 0, 8)));
+    let t = client.run(patch(0), ep.id, f).unwrap();
+    let results = client
+        .gather(&[t], Duration::from_secs(20), Duration::from_millis(2), None, |_, _| {})
+        .expect("gather");
+    let plan = chaos::clear().expect("plan still installed");
+    ep.shutdown();
+
+    assert_eq!(plan.total_hits(), 2, "two crash-attributed attempts before the verdict");
+    let err = results[0].as_ref().expect_err("a poison task must fail");
+    assert!(is_poison_task(err), "untyped poison outcome: {err}");
+    let m = svc.metrics.snapshot();
+    assert_eq!(m.poisoned, 1);
+    assert_eq!(m.retries, 1, "exactly one resubmission before termination");
+    assert_eq!(m.completed, 0);
+    assert_eq!(m.submitted, m.completed + m.failed + m.cancelled);
+}
+
+/// Driver-level `--journal` then `--resume`: a completed journaled scan
+/// resumed on a fresh stack restores every point from the journal and
+/// refits nothing, reproducing the same physics.
+#[test]
+fn scan_journal_then_resume_restores_every_point() {
+    let _g = chaos_lock();
+    chaos::clear();
+    let jp = tmp("scan-resume");
+    let dir = std::env::temp_dir().join(format!("jrn-scan-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), TEST_MANIFEST).unwrap();
+    let pallet = pyhf_faas::pallet::generate(&pyhf_faas::pallet::library::config_quickstart());
+
+    let native_endpoint = |svc: &ServiceHandle, name: &str| {
+        Endpoint::start(
+            svc.clone(),
+            EndpointConfig::new(name)
+                .with_executor(ExecutorConfig {
+                    max_blocks: 1,
+                    nodes_per_block: 1,
+                    workers_per_node: 2,
+                    parallelism: 1.0,
+                    poll: Duration::from_millis(1),
+                })
+                .with_worker_init(pyhf_faas::coordinator::fitops::native_worker_init(dir.clone())),
+        )
+    };
+
+    let svc = Service::new();
+    let ep = native_endpoint(&svc, "jrn-scan");
+    let client = FaasClient::new(svc.clone());
+    let f = client
+        .register_function("fit_patch_native", pyhf_faas::coordinator::fitops::native_fit_handler());
+    let opts =
+        ScanOptions { limit: Some(4), journal: Some(jp.clone()), ..Default::default() };
+    let scan1 = run_scan(&client, ep.id, f, &pallet, &opts).unwrap();
+    assert_eq!(scan1.points.len(), 4);
+    assert!(svc.journal_enabled());
+    assert!(svc.metrics.snapshot().journal_appends > 0);
+    ep.shutdown();
+    drop(client);
+    drop(svc);
+
+    let svc2 = Service::new();
+    let ep2 = native_endpoint(&svc2, "jrn-scan-resume");
+    let client2 = FaasClient::new(svc2.clone());
+    let f2 = client2
+        .register_function("fit_patch_native", pyhf_faas::coordinator::fitops::native_fit_handler());
+    let opts =
+        ScanOptions { limit: Some(4), resume: Some(jp.clone()), ..Default::default() };
+    let scan2 = run_scan(&client2, ep2.id, f2, &pallet, &opts).unwrap();
+    ep2.shutdown();
+
+    assert_eq!(scan2.points.len(), 4);
+    let m = svc2.metrics.snapshot();
+    assert_eq!(m.recovered_delivered, 4, "every point restored from the journal");
+    assert_eq!(m.completed, 4);
+    assert_eq!(m.submitted, m.completed + m.failed + m.cancelled);
+    for (a, b) in scan1.points.iter().zip(&scan2.points) {
+        assert_eq!(a.patch, b.patch);
+        assert!((a.cls_obs - b.cls_obs).abs() < 1e-12, "restored physics drifted");
+    }
+    let _ = std::fs::remove_file(&jp);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+const TEST_MANIFEST: &str = r#"{
+    "format": "hlo-text", "dtype": "f64", "mu_test": 1.0, "use_pallas": true,
+    "input_order": [], "output_order": [],
+    "entries": {
+        "hypotest_quickstart": {
+            "file": "hypotest_quickstart.hlo.txt", "kind": "hypotest",
+            "shape_class": {"name": "quickstart", "n_bins": 16, "n_samples": 6,
+                            "n_alpha": 6, "n_free": 2, "bin_block": 16,
+                            "mu_max": 10.0, "max_newton": 32, "cg_iters": 24},
+            "inputs": []
+        }
+    }
+}"#;
