@@ -23,6 +23,7 @@ use crate::coordinator::service::{Handler, ServiceHandle};
 use crate::coordinator::task::{EndpointId, FunctionId, TaskId, TaskState};
 use crate::scheduler::batcher::{plan_batches, BatchPlan};
 use crate::util::json::Json;
+use crate::util::sync::MutexExt;
 
 /// A coalesced submission wave: one task per batch group plus the plan
 /// that maps group results back onto the original payload order.
@@ -160,7 +161,7 @@ impl FaasClient {
         if rel.policy.retry.is_some() {
             rel.budget.deposit();
         }
-        rel.specs.lock().unwrap().insert(
+        rel.specs.lock_unpoisoned().insert(
             id,
             TaskSpec {
                 function,
@@ -350,7 +351,7 @@ impl FaasClient {
         let mut slots: Vec<Slot> = tasks
             .iter()
             .map(|&t| {
-                let spec = rel.as_ref().and_then(|r| r.specs.lock().unwrap().remove(&t));
+                let spec = rel.as_ref().and_then(|r| r.specs.lock_unpoisoned().remove(&t));
                 let attempt_started = spec.as_ref().map(|s| s.submitted_at).unwrap_or(gather_t0);
                 Slot {
                     primary: t,
@@ -410,7 +411,16 @@ impl FaasClient {
             std::thread::sleep(poll);
         }
         self.trace_gather(gather_t0, tasks.len(), tasks.len(), "complete");
-        Ok(results.into_iter().map(|r| r.unwrap()).collect())
+        Ok(results
+            .into_iter()
+            .map(|r| {
+                // the loop above exits only once `pending` is empty, and a
+                // task leaves `pending` exactly when its slot is filled —
+                // degrade to a typed error rather than panic if that
+                // invariant is ever broken
+                r.unwrap_or_else(|| Err("gather invariant: missing result for completed task".to_string()))
+            })
+            .collect())
     }
 
     /// Age past which an in-flight attempt counts as a straggler, from the
@@ -510,7 +520,11 @@ impl FaasClient {
         if let Some(until) = slot.backoff_until {
             if now >= until {
                 slot.backoff_until = None;
-                let spec = slot.spec.as_ref().expect("retry scheduled without a spec");
+                let Some(spec) = slot.spec.as_ref() else {
+                    // a retry is only ever scheduled with its spec captured;
+                    // fail the logical task rather than panic the gather loop
+                    return Some(Err("retry scheduled without a spec (client invariant)".to_string()));
+                };
                 let (target, function, deadline) = (spec.target, spec.function, spec.deadline);
                 match self.submit_to(target, function, spec.payload.clone(), deadline) {
                     Ok(id) => {

@@ -135,7 +135,9 @@ fn scan_impl(
     // so the resubmissions below are journaled too.
     let mut restored: BTreeMap<String, Json> = BTreeMap::new();
     if let Some(path) = &opts.resume {
-        let expected = content_hex.as_deref().expect("hash computed when resuming");
+        let Some(expected) = content_hex.as_deref() else {
+            return Err("internal: content hash missing on the resume path".to_string());
+        };
         let (loaded, state) = Journal::load(path)?;
         drop(loaded);
         let schema = state.header.as_ref().and_then(|h| h.get("schema")).and_then(|s| s.as_str());
@@ -165,7 +167,9 @@ fn scan_impl(
         };
         client.service().recover(path, function, ep, false)?;
     } else if let Some(path) = &opts.journal {
-        let hex = content_hex.as_deref().expect("hash computed when journaling");
+        let Some(hex) = content_hex.as_deref() else {
+            return Err("internal: content hash missing on the journal path".to_string());
+        };
         let j = Journal::create(path)?;
         j.append(journal::Record::Header(journal::scan_header(&pallet.config.name, hex, n)));
         client.service().set_journal(Arc::new(j));

@@ -35,6 +35,7 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::provider::Provider;
 use crate::coordinator::service::{ServiceHandle, TaskQueue, WorkerContext, WorkerInit};
 use crate::coordinator::task::EndpointId;
+use crate::util::sync::MutexExt;
 use crate::scheduler::autoscale::{
     AutoscaleConfig, AutoscaleController, LoadSnapshot, RouterScaleSignal, ScaleDecision,
 };
@@ -178,7 +179,7 @@ impl HighThroughputExecutor {
                                                 ));
                                             }
                                         }
-                                        blocks_list.lock().unwrap().push(BlockHandle {
+                                        blocks_list.lock_unpoisoned().push(BlockHandle {
                                             index: grant.block_index,
                                             retire,
                                             workers: handles,
@@ -194,7 +195,7 @@ impl HighThroughputExecutor {
                                 }
                             }
                             ScaleDecision::Down => {
-                                let mut list = blocks_list.lock().unwrap();
+                                let mut list = blocks_list.lock_unpoisoned();
                                 if let Some(block) = list
                                     .iter_mut()
                                     .rev()
@@ -212,12 +213,21 @@ impl HighThroughputExecutor {
                         }
                     }
                 })
-                .expect("spawn scaler")
+        };
+        let scaler = match scaler {
+            Ok(h) => Some(h),
+            Err(e) => {
+                // a failed scaler spawn (fd/thread exhaustion at bring-up)
+                // leaves the endpoint serving with whatever blocks exist
+                // instead of aborting the process
+                crate::log_error!("executor", "ep{endpoint}: autoscaler spawn failed: {e} — endpoint runs unscaled");
+                None
+            }
         };
 
         HighThroughputExecutor {
             shutdown,
-            scaler: Some(scaler),
+            scaler,
             blocks_list,
             active_workers,
             live_blocks,
@@ -251,7 +261,7 @@ impl HighThroughputExecutor {
         if let Some(s) = self.scaler.take() {
             let _ = s.join();
         }
-        let blocks: Vec<BlockHandle> = self.blocks_list.lock().unwrap().drain(..).collect();
+        let blocks: Vec<BlockHandle> = self.blocks_list.lock_unpoisoned().drain(..).collect();
         for block in blocks {
             for h in block.workers {
                 let _ = h.join();
@@ -271,7 +281,7 @@ impl HighThroughputExecutor {
 fn reap_retired_blocks(blocks_list: &Mutex<Vec<BlockHandle>>) {
     let mut done = Vec::new();
     {
-        let mut list = blocks_list.lock().unwrap();
+        let mut list = blocks_list.lock_unpoisoned();
         let mut i = 0;
         while i < list.len() {
             let b = &list[i];
@@ -433,6 +443,9 @@ fn spawn_worker(
             }
             active_workers.fetch_sub(1, Ordering::SeqCst);
         })
+        // lint:allow(no_panic) thread spawn fails only on resource
+        // exhaustion at block bring-up, before any task is claimed; there
+        // is no caller to hand a typed error to inside the scaler loop
         .expect("spawn worker")
 }
 

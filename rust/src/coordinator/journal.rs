@@ -45,6 +45,7 @@ use std::sync::Mutex;
 
 use crate::coordinator::task::{FunctionId, TaskId};
 use crate::util::json::{self, Json};
+use crate::util::sync::MutexExt;
 
 /// Artifact schema tag carried in the journal's header record (the
 /// `validate` subcommand dispatches on it).
@@ -451,7 +452,7 @@ impl Journal {
     pub fn append(&self, rec: Record) {
         let label = rec.label();
         let task = rec.task();
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock_unpoisoned();
         let body = json::to_string(&rec.to_json());
         if let Err(e) = write_frame(&mut g.file, body.as_bytes()) {
             g.io_error = Some(e);
@@ -483,7 +484,7 @@ impl Journal {
 
     /// Flush and fsync everything appended so far.
     pub fn sync(&self) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock_unpoisoned();
         let _ = g.file.sync_data();
         g.appends_since_sync = 0;
     }
@@ -491,7 +492,7 @@ impl Journal {
     /// Force a compacting rewrite now (normally automatic every
     /// [`COMPACT_INTERVAL`] records).
     pub fn compact(&self) -> Result<(), String> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock_unpoisoned();
         compact_locked(&mut g)
     }
 
@@ -500,7 +501,7 @@ impl Journal {
     /// over the original in one rename). Appends keep flowing — the open
     /// descriptor survives the rename.
     pub fn promote(&self, dest: impl AsRef<Path>) -> Result<(), String> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock_unpoisoned();
         let _ = g.file.sync_data();
         fs::rename(&g.path, dest.as_ref())
             .map_err(|e| format!("journal promote {}: {e}", dest.as_ref().display()))?;
@@ -510,26 +511,26 @@ impl Journal {
 
     /// Current replay state (mirror clone).
     pub fn state(&self) -> ReplayState {
-        self.inner.lock().unwrap().state.clone()
+        self.inner.lock_unpoisoned().state.clone()
     }
 
     /// Records appended through this handle (not counting loaded history).
     pub fn append_count(&self) -> u64 {
-        self.inner.lock().unwrap().appends
+        self.inner.lock_unpoisoned().appends
     }
 
     /// Compacting rewrites performed by this handle.
     pub fn compaction_count(&self) -> u64 {
-        self.inner.lock().unwrap().compactions
+        self.inner.lock_unpoisoned().compactions
     }
 
     /// First latched IO error, if any append failed.
     pub fn io_error(&self) -> Option<String> {
-        self.inner.lock().unwrap().io_error.clone()
+        self.inner.lock_unpoisoned().io_error.clone()
     }
 
     pub fn path(&self) -> PathBuf {
-        self.inner.lock().unwrap().path.clone()
+        self.inner.lock_unpoisoned().path.clone()
     }
 }
 
@@ -613,8 +614,9 @@ fn replay_bytes(bytes: &[u8]) -> Result<(ReplayState, u64), String> {
         if pos + 8 > bytes.len() {
             break;
         }
-        let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap());
-        let sum = u32::from_le_bytes(bytes[pos + 4..pos + 8].try_into().unwrap());
+        let len = u32::from_le_bytes([bytes[pos], bytes[pos + 1], bytes[pos + 2], bytes[pos + 3]]);
+        let sum =
+            u32::from_le_bytes([bytes[pos + 4], bytes[pos + 5], bytes[pos + 6], bytes[pos + 7]]);
         if len > MAX_FRAME || pos + 8 + len as usize > bytes.len() {
             break;
         }

@@ -15,6 +15,7 @@ use std::sync::Mutex;
 
 use crate::util::json::Json;
 use crate::util::stats::Accumulator;
+use crate::util::sync::MutexExt;
 
 #[derive(Debug, Default)]
 struct Inner {
@@ -151,11 +152,11 @@ impl Metrics {
     }
 
     pub fn task_submitted(&self) {
-        self.inner.lock().unwrap().submitted += 1;
+        self.inner.lock_unpoisoned().submitted += 1;
     }
 
     pub fn task_finished(&self, ok: bool, wait_s: f64, service_s: f64) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock_unpoisoned();
         if ok {
             g.completed += 1;
         } else {
@@ -166,32 +167,32 @@ impl Metrics {
     }
 
     pub fn block_provisioned(&self) {
-        self.inner.lock().unwrap().blocks_provisioned += 1;
+        self.inner.lock_unpoisoned().blocks_provisioned += 1;
     }
 
     pub fn block_released(&self) {
-        self.inner.lock().unwrap().blocks_released += 1;
+        self.inner.lock_unpoisoned().blocks_released += 1;
     }
 
     pub fn worker_started(&self, startup_s: f64) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock_unpoisoned();
         g.workers_started += 1;
         g.startup.push(startup_s);
     }
 
     /// Interchange popped a task onto a worker already warm for its key.
     pub fn affinity_hit(&self) {
-        self.inner.lock().unwrap().affinity_hits += 1;
+        self.inner.lock_unpoisoned().affinity_hits += 1;
     }
 
     /// Interchange popped a task onto a cold worker.
     pub fn affinity_miss(&self) {
-        self.inner.lock().unwrap().affinity_misses += 1;
+        self.inner.lock_unpoisoned().affinity_misses += 1;
     }
 
     /// One coalesced submission carrying `members` fits.
     pub fn batch_submitted(&self, members: u64) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock_unpoisoned();
         g.batches += 1;
         g.batched_tasks += members;
         g.batch_size.push(members as f64);
@@ -199,17 +200,17 @@ impl Metrics {
 
     /// `n` payloads elided as duplicates during batch planning.
     pub fn dedup_hit(&self, n: u64) {
-        self.inner.lock().unwrap().dedup_hits += n;
+        self.inner.lock_unpoisoned().dedup_hits += n;
     }
 
     /// A worker's bounded warm set evicted its LRU entry.
     pub fn warm_evicted(&self) {
-        self.inner.lock().unwrap().warm_evictions += 1;
+        self.inner.lock_unpoisoned().warm_evictions += 1;
     }
 
     /// The cross-endpoint router placed one task.
     pub fn task_routed(&self, warm_hit: bool, spillover: bool) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock_unpoisoned();
         g.routed += 1;
         if warm_hit {
             g.route_warm_hits += 1;
@@ -222,12 +223,12 @@ impl Metrics {
     /// A routed submission lost its picked endpoint mid-flight and was
     /// retried on a surviving one.
     pub fn route_retry(&self) {
-        self.inner.lock().unwrap().route_retries += 1;
+        self.inner.lock_unpoisoned().route_retries += 1;
     }
 
     /// The router's health scoring quarantined / readmitted endpoints.
     pub fn health_events(&self, quarantined: u64, readmitted: u64) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock_unpoisoned();
         g.endpoints_quarantined += quarantined;
         g.endpoints_readmitted += readmitted;
     }
@@ -235,13 +236,13 @@ impl Metrics {
     /// A worker died in its init hook without serving a task (endpoint
     /// hub): the health probe's lost-capacity signal.
     pub fn worker_init_failed(&self) {
-        self.inner.lock().unwrap().worker_init_failures += 1;
+        self.inner.lock_unpoisoned().worker_init_failures += 1;
     }
 
     /// A worker on this endpoint finished executing a task (endpoint hub —
     /// the service hub tracks latency via [`Metrics::task_finished`]).
     pub fn task_executed(&self, ok: bool) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock_unpoisoned();
         if ok {
             g.completed += 1;
         } else {
@@ -251,73 +252,73 @@ impl Metrics {
 
     /// A client cancelled a task before it completed.
     pub fn task_cancelled(&self) {
-        self.inner.lock().unwrap().cancelled += 1;
+        self.inner.lock_unpoisoned().cancelled += 1;
     }
 
     /// The client's retry policy resubmitted a failed attempt.
     pub fn task_retried(&self) {
-        self.inner.lock().unwrap().retries += 1;
+        self.inner.lock_unpoisoned().retries += 1;
     }
 
     /// The client hedged a straggling task with a speculative duplicate.
     pub fn task_hedged(&self) {
-        self.inner.lock().unwrap().hedges += 1;
+        self.inner.lock_unpoisoned().hedges += 1;
     }
 
     /// A hedged task's speculative copy won the race.
     pub fn hedge_won(&self) {
-        self.inner.lock().unwrap().hedge_wins += 1;
+        self.inner.lock_unpoisoned().hedge_wins += 1;
     }
 
     /// A task was dropped because its absolute deadline passed.
     pub fn task_deadline_exceeded(&self) {
-        self.inner.lock().unwrap().deadline_exceeded += 1;
+        self.inner.lock_unpoisoned().deadline_exceeded += 1;
     }
 
     /// A queued task was recalled from a quarantined endpoint and
     /// re-enqueued elsewhere.
     pub fn task_migrated(&self) {
-        self.inner.lock().unwrap().migrated += 1;
+        self.inner.lock_unpoisoned().migrated += 1;
     }
 
     /// A synthetic no-op probe was sent to a readmitted endpoint.
     pub fn health_probe_sent(&self) {
-        self.inner.lock().unwrap().health_probes += 1;
+        self.inner.lock_unpoisoned().health_probes += 1;
     }
 
     /// A logical task was terminated with the typed `POISON_TASK` outcome
     /// after repeatedly crashing workers.
     pub fn task_poisoned(&self) {
-        self.inner.lock().unwrap().poisoned += 1;
+        self.inner.lock_unpoisoned().poisoned += 1;
     }
 
     /// The losing side of a hedge race burnt `seconds` of duplicate work.
     pub fn hedge_wasted(&self, seconds: f64) {
         if seconds.is_finite() && seconds > 0.0 {
-            self.inner.lock().unwrap().hedge_wasted_s += seconds;
+            self.inner.lock_unpoisoned().hedge_wasted_s += seconds;
         }
     }
 
     /// One record was appended to the write-ahead task journal.
     pub fn journal_append(&self) {
-        self.inner.lock().unwrap().journal_appends += 1;
+        self.inner.lock_unpoisoned().journal_appends += 1;
     }
 
     /// `Service::recover` re-delivered one journaled terminal outcome.
     pub fn task_recovered_delivered(&self) {
-        self.inner.lock().unwrap().recovered_delivered += 1;
+        self.inner.lock_unpoisoned().recovered_delivered += 1;
     }
 
     /// `Service::recover` resubmitted one journaled-but-unfinished task.
     pub fn task_recovered_resubmitted(&self) {
-        self.inner.lock().unwrap().recovered_resubmitted += 1;
+        self.inner.lock_unpoisoned().recovered_resubmitted += 1;
     }
 
     /// (completed, failed, worker_init_failures) — the narrow read the
     /// router's health probes poll on every routing decision, so they don't
     /// build a full [`Snapshot`] under the router lock.
     pub fn health_counts(&self) -> (u64, u64, u64) {
-        let g = self.inner.lock().unwrap();
+        let g = self.inner.lock_unpoisoned();
         (g.completed, g.failed, g.worker_init_failures)
     }
 
@@ -325,12 +326,12 @@ impl Metrics {
     /// router's probes poll on every routing decision, so they don't build
     /// a full [`Snapshot`] under the router lock.
     pub fn affinity_counts(&self) -> (u64, u64) {
-        let g = self.inner.lock().unwrap();
+        let g = self.inner.lock_unpoisoned();
         (g.affinity_hits, g.affinity_misses)
     }
 
     pub fn snapshot(&self) -> Snapshot {
-        let g = self.inner.lock().unwrap();
+        let g = self.inner.lock_unpoisoned();
         Snapshot {
             submitted: g.submitted,
             completed: g.completed,

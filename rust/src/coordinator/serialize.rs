@@ -39,8 +39,10 @@ pub fn decode(buf: &[u8]) -> Result<Json, String> {
     if &buf[..4] != MAGIC {
         return Err(format!("bad magic {:?}", &buf[..4]));
     }
-    let len = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
-    let digest = u64::from_le_bytes(buf[8..16].try_into().unwrap());
+    let len = u32::from_le_bytes([buf[4], buf[5], buf[6], buf[7]]) as usize;
+    let digest = u64::from_le_bytes([
+        buf[8], buf[9], buf[10], buf[11], buf[12], buf[13], buf[14], buf[15],
+    ]);
     let body = buf.get(16..16 + len).ok_or("truncated frame")?;
     if fnv1a(body) != digest {
         return Err("checksum mismatch".into());
@@ -55,7 +57,7 @@ pub fn frame_len(buf: &[u8]) -> Option<usize> {
     if buf.len() < 8 || &buf[..4] != MAGIC {
         return None;
     }
-    let len = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
+    let len = u32::from_le_bytes([buf[4], buf[5], buf[6], buf[7]]) as usize;
     Some(16 + len)
 }
 

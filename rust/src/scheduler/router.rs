@@ -265,6 +265,8 @@ impl RouteStrategy for LeastLoadedRoute {
     }
 
     fn pick(&mut self, _key: &str, _weight: usize, views: &[EndpointView]) -> RoutePick {
+        // lint:allow(no_panic) Router::decide never calls pick() with an
+        // empty view set (it returns None first)
         let index = argmin_load(views, |_| true).expect("views non-empty");
         RoutePick { index, warm_hit: views[index].warm, spillover: false }
     }
@@ -307,6 +309,8 @@ impl RouteStrategy for WarmFirstRoute {
     }
 
     fn pick(&mut self, key: &str, _weight: usize, views: &[EndpointView]) -> RoutePick {
+        // lint:allow(no_panic) Router::decide never calls pick() with an
+        // empty view set (it returns None first)
         let best = argmin_load(views, |_| true).expect("views non-empty");
         if key.is_empty() {
             // unroutable key: plain least-loaded

@@ -20,6 +20,8 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
+use crate::util::sync::MutexExt;
+
 /// Event kinds shared by the live wiring, the DES synthesizer, the
 /// overhead report and the schema validator. Instants mark lifecycle
 /// edges; spans cover intervals.
@@ -119,7 +121,7 @@ fn registry() -> &'static Mutex<Vec<Arc<Mutex<Buffer>>>> {
 thread_local! {
     static LOCAL: Arc<Mutex<Buffer>> = {
         let buf = Arc::new(Mutex::new(Buffer { events: Vec::new(), dropped: 0 }));
-        registry().lock().unwrap().push(buf.clone());
+        registry().lock_unpoisoned().push(buf.clone());
         buf
     };
     static CURRENT_TASK: Cell<u64> = const { Cell::new(u64::MAX) };
@@ -191,7 +193,7 @@ pub fn emit(event: Event) {
         return;
     }
     LOCAL.with(|buf| {
-        let mut b = buf.lock().unwrap();
+        let mut b = buf.lock_unpoisoned();
         if b.events.len() >= BUFFER_CAP {
             b.dropped += 1;
         } else {
@@ -252,8 +254,8 @@ pub fn span_between(
 pub fn drain() -> Trace {
     let mut events = Vec::new();
     let mut dropped = 0;
-    for buf in registry().lock().unwrap().iter() {
-        let mut b = buf.lock().unwrap();
+    for buf in registry().lock_unpoisoned().iter() {
+        let mut b = buf.lock_unpoisoned();
         events.append(&mut b.events);
         dropped += b.dropped;
         b.dropped = 0;

@@ -9,4 +9,5 @@ pub mod lru;
 pub mod proptest;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod threadpool;

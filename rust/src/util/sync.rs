@@ -1,0 +1,103 @@
+//! Poison-recovering lock helpers for the serving path.
+//!
+//! `std`'s `Mutex::lock()` returns `Err` only when another thread panicked
+//! while holding the guard. The serving fabric's state (task table, queue,
+//! metrics, trace buffers, journal) stays structurally valid across such a
+//! panic — every critical section either completes its update or leaves
+//! counters merely stale — so the right response for a service is to keep
+//! serving with the inner value, not to cascade the panic into every other
+//! worker/client thread that touches the lock. These extension traits make
+//! that recovery a one-word idiom (`.lock_unpoisoned()`), which the
+//! `no_panic` rule of `tools/pallas-lint` requires on the hot path in place
+//! of `.lock().unwrap()`.
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError, WaitTimeoutResult};
+use std::time::Duration;
+
+/// `Mutex` extension: acquire, recovering the guard from a poisoned lock.
+pub trait MutexExt<T: ?Sized> {
+    /// Like [`Mutex::lock`], but a panic in another critical section does
+    /// not propagate: the poisoned guard is unwrapped and returned.
+    fn lock_unpoisoned(&self) -> MutexGuard<'_, T>;
+}
+
+impl<T: ?Sized> MutexExt<T> for Mutex<T> {
+    fn lock_unpoisoned(&self) -> MutexGuard<'_, T> {
+        self.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+/// `Condvar` extension: waits that recover the guard from a poisoned lock.
+pub trait CondvarExt {
+    /// Like [`Condvar::wait`], recovering from poison.
+    fn wait_unpoisoned<'a, T>(&self, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T>;
+
+    /// Like [`Condvar::wait_timeout`], recovering from poison.
+    fn wait_timeout_unpoisoned<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> (MutexGuard<'a, T>, WaitTimeoutResult);
+}
+
+impl CondvarExt for Condvar {
+    fn wait_unpoisoned<'a, T>(&self, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+        self.wait(guard).unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn wait_timeout_unpoisoned<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+        self.wait_timeout(guard, dur).unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn lock_unpoisoned_recovers_after_holder_panics() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = m.clone();
+        let t = std::thread::spawn(move || {
+            let _g = m2.lock_unpoisoned();
+            panic!("poison the lock");
+        });
+        assert!(t.join().is_err());
+        assert!(m.lock().is_err(), "lock should be poisoned");
+        assert_eq!(*m.lock_unpoisoned(), 7);
+        *m.lock_unpoisoned() = 8;
+        assert_eq!(*m.lock_unpoisoned(), 8);
+    }
+
+    #[test]
+    fn condvar_waits_still_wake() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let pair2 = pair.clone();
+        let t = std::thread::spawn(move || {
+            let (m, cv) = &*pair2;
+            let mut g = m.lock_unpoisoned();
+            while !*g {
+                g = cv.wait_unpoisoned(g);
+            }
+            *g
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        let (m, cv) = &*pair;
+        *m.lock_unpoisoned() = true;
+        cv.notify_all();
+        assert!(t.join().unwrap());
+    }
+
+    #[test]
+    fn wait_timeout_unpoisoned_times_out() {
+        let pair = (Mutex::new(()), Condvar::new());
+        let g = pair.0.lock_unpoisoned();
+        let (_g, res) = pair.1.wait_timeout_unpoisoned(g, Duration::from_millis(5));
+        assert!(res.timed_out());
+    }
+}
