@@ -49,12 +49,21 @@ struct EngineBox {
 }
 // SAFETY: the engine lives in a single worker's context and is only touched
 // by that worker thread; WorkerContext requires Send for slot types because
-// the context itself moves into the worker thread at spawn time.
+// the context itself moves into the worker thread at spawn time. `Engine`
+// is not Send only because it holds raw PJRT client/device pointers — no
+// thread-local state is involved, so moving the box with its owning context
+// is sound. No `Sync` is claimed: nothing ever shares a `&EngineBox` across
+// threads.
 unsafe impl Send for EngineBox {}
 
 struct CompiledCache {
     lru: LruCache<String, Arc<Compiled>>,
 }
+// SAFETY: same single-owner-worker argument as `EngineBox`. `Compiled`
+// holds raw PJRT executable pointers (hence not auto-Send); every
+// `Arc<Compiled>` clone handed out by `compiled_for` stays on the owning
+// worker thread — the cache and all its borrows live inside one
+// `WorkerContext`, which moves (never shares) between threads.
 unsafe impl Send for CompiledCache {}
 
 /// Per-worker fit scratch workspaces, one per warm shape class: a worker
