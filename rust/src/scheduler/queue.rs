@@ -19,6 +19,7 @@ use std::time::{Duration, Instant};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::task::TaskId;
 use crate::scheduler::policy::{FifoPolicy, SchedPolicy, TaskMeta, WorkerProfile};
+use crate::util::sync::{CondvarExt, MutexExt};
 
 struct Inner {
     policy: Box<dyn SchedPolicy>,
@@ -53,11 +54,11 @@ impl SchedQueue {
     /// Attach a metrics hub; affinity hits/misses observed at pop time are
     /// counted there.
     pub fn attach_metrics(&self, metrics: Arc<Metrics>) {
-        self.inner.lock().unwrap().metrics = Some(metrics);
+        self.inner.lock_unpoisoned().metrics = Some(metrics);
     }
 
     pub fn policy_name(&self) -> &'static str {
-        self.inner.lock().unwrap().policy.name()
+        self.inner.lock_unpoisoned().policy.name()
     }
 
     /// Push by id only (legacy path; no routing metadata). Ignores the
@@ -73,21 +74,25 @@ impl SchedQueue {
     /// so every accepted push strictly precedes the drain's final empty
     /// pop.
     pub fn push_meta(&self, meta: TaskMeta) -> bool {
-        let mut g = self.inner.lock().unwrap();
+        let (id, priority, weight) = (meta.id, meta.priority, meta.weight);
+        let mut g = self.inner.lock_unpoisoned();
         if self.closed.load(Ordering::SeqCst) {
             return false;
-        }
-        if crate::trace::enabled() {
-            crate::trace::instant(
-                crate::trace::kind::TASK_ENQUEUE,
-                Some(meta.id),
-                "queue",
-                format!("priority {} weight {}", meta.priority, meta.weight),
-            );
         }
         g.queued_weight += meta.weight.max(1);
         g.policy.push(meta);
         drop(g);
+        // trace emission locks the calling thread's trace buffer — emit
+        // only after the interchange guard is released (lock_scope: the
+        // queue lock must not span a call into the trace hub)
+        if crate::trace::enabled() {
+            crate::trace::instant(
+                crate::trace::kind::TASK_ENQUEUE,
+                Some(id),
+                "queue",
+                format!("priority {priority} weight {weight}"),
+            );
+        }
         self.cvar.notify_one();
         true
     }
@@ -102,7 +107,7 @@ impl SchedQueue {
     /// closed-and-empty.
     pub fn pop_task(&self, worker: &WorkerProfile, timeout: Duration) -> Option<TaskMeta> {
         let deadline = Instant::now() + timeout;
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock_unpoisoned();
         loop {
             if let Some(meta) = g.policy.pop_for(worker, Instant::now()) {
                 g.queued_weight = g.queued_weight.saturating_sub(meta.weight.max(1));
@@ -126,7 +131,7 @@ impl SchedQueue {
             if now >= deadline {
                 return None;
             }
-            let (gg, _) = self.cvar.wait_timeout(g, deadline - now).unwrap();
+            let (gg, _) = self.cvar.wait_timeout_unpoisoned(g, deadline - now);
             g = gg;
         }
     }
@@ -137,7 +142,7 @@ impl SchedQueue {
     /// metas would otherwise keep the autoscaler provisioning for phantom
     /// demand. False when the task is no longer queued (already popped).
     pub fn discard(&self, id: TaskId) -> bool {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock_unpoisoned();
         match g.policy.remove(id) {
             Some(meta) => {
                 g.queued_weight = g.queued_weight.saturating_sub(meta.weight.max(1));
@@ -151,7 +156,7 @@ impl SchedQueue {
     /// affinity hit/miss accounting — for shutdown leftovers, which are
     /// not dispatches and must not skew the endpoint's counters.
     pub fn drain_remaining(&self) -> Vec<TaskMeta> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock_unpoisoned();
         let anon = WorkerProfile::anonymous();
         let mut out = Vec::new();
         while let Some(meta) = g.policy.pop_for(&anon, Instant::now()) {
@@ -168,7 +173,7 @@ impl SchedQueue {
     /// Bypasses affinity accounting like [`SchedQueue::drain_remaining`]
     /// (a recall is not a dispatch).
     pub fn recall_queued(&self) -> Vec<TaskMeta> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock_unpoisoned();
         let anon = WorkerProfile::anonymous();
         let mut out = Vec::new();
         while let Some(meta) = g.policy.pop_for(&anon, Instant::now()) {
@@ -179,13 +184,13 @@ impl SchedQueue {
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().policy.len()
+        self.inner.lock_unpoisoned().policy.len()
     }
 
     /// Total queued *fits* (tasks weighted by batch size) — the demand
     /// signal for batch-aware autoscaling.
     pub fn queued_weight(&self) -> usize {
-        self.inner.lock().unwrap().queued_weight
+        self.inner.lock_unpoisoned().queued_weight
     }
 
     pub fn is_empty(&self) -> bool {
@@ -194,7 +199,7 @@ impl SchedQueue {
 
     /// Age of the oldest queued task (autoscaler latency signal).
     pub fn oldest_wait(&self) -> Option<Duration> {
-        let oldest = self.inner.lock().unwrap().policy.oldest_enqueued()?;
+        let oldest = self.inner.lock_unpoisoned().policy.oldest_enqueued()?;
         Some(Instant::now().saturating_duration_since(oldest))
     }
 
@@ -204,7 +209,7 @@ impl SchedQueue {
         // closed check is inside the lock now; taking it here means such
         // pushes are enqueued (and visible to a subsequent drain) before
         // close() returns
-        drop(self.inner.lock().unwrap());
+        drop(self.inner.lock_unpoisoned());
         self.cvar.notify_all();
     }
 

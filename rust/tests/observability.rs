@@ -14,7 +14,7 @@ use pyhf_faas::coordinator::{
     ChaosFault, ChaosPlan, ChaosRule, Endpoint, EndpointConfig, ExecutorConfig, FaasClient,
     HedgePolicy, ReliabilityPolicy, RetryPolicy, Service, ServiceHandle,
 };
-use pyhf_faas::scheduler::{PolicyKind, RouteStrategyKind, Router};
+use pyhf_faas::scheduler::{PolicyKind, RouteStrategyKind, Router, SchedQueue, TaskMeta};
 use pyhf_faas::trace::{self, chrome, kind};
 use pyhf_faas::util::json::Json;
 
@@ -313,3 +313,28 @@ fn disabled_tracing_emits_nothing_through_a_live_scan() {
     assert!(t.events.is_empty(), "disabled hub buffered {} events", t.events.len());
     assert_eq!(svc.metrics.snapshot().completed, 8);
 }
+
+/// Regression for the queue-lock scope fix: `push_meta` now emits its
+/// `task.enqueue` instant *after* releasing the interchange guard. The
+/// restructure must not lose the event — one enqueue, one instant, with
+/// the task id and the routing metadata in the detail.
+#[test]
+fn enqueue_still_traced_after_guard_release() {
+    let _g = trace_lock();
+    trace::clear();
+    trace::enable();
+
+    let q = SchedQueue::new();
+    assert!(q.push_meta(TaskMeta { priority: 2.0, weight: 3, ..TaskMeta::bare(41) }));
+    assert_eq!(q.pop(Duration::from_millis(5)), Some(41));
+
+    trace::disable();
+    let t = trace::drain();
+    let enq = t.of_kind(kind::TASK_ENQUEUE);
+    assert_eq!(enq.len(), 1, "exactly one enqueue instant: {enq:?}");
+    assert_eq!(enq[0].task, Some(41));
+    assert_eq!(enq[0].track, "queue");
+    assert!(enq[0].detail.contains("priority 2"), "detail: {}", enq[0].detail);
+    assert!(enq[0].detail.contains("weight 3"), "detail: {}", enq[0].detail);
+}
+
