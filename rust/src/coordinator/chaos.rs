@@ -40,6 +40,7 @@ use std::time::Duration;
 
 use crate::coordinator::task::EndpointId;
 use crate::trace;
+use crate::util::sync::MutexExt;
 
 /// Where in the live stack a fault can fire.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -190,7 +191,7 @@ fn slot() -> &'static Mutex<Option<ChaosPlan>> {
 
 /// Install a plan (replacing any active one) with fresh rule counters.
 pub fn install(plan: ChaosPlan) {
-    let mut s = slot().lock().unwrap();
+    let mut s = slot().lock_unpoisoned();
     for r in &plan.rules {
         r.seen.store(0, Ordering::Relaxed);
         r.hits.store(0, Ordering::Relaxed);
@@ -202,7 +203,7 @@ pub fn install(plan: ChaosPlan) {
 /// Remove the active plan, returning it (with its hit counters) for
 /// assertions.
 pub fn clear() -> Option<ChaosPlan> {
-    let mut s = slot().lock().unwrap();
+    let mut s = slot().lock_unpoisoned();
     ACTIVE.store(false, Ordering::Relaxed);
     s.take()
 }
@@ -221,20 +222,26 @@ pub fn inject(point: FaultPoint, endpoint: EndpointId, task: Option<u64>) -> Opt
     if !active() {
         return None;
     }
-    let s = slot().lock().unwrap();
-    let plan = s.as_ref()?;
-    for rule in &plan.rules {
-        if rule.check(point, endpoint) {
-            trace::instant(
-                trace::kind::CHAOS_INJECT,
-                task,
-                &format!("chaos-ep{endpoint}"),
-                format!("{} at {} (seed {})", rule.fault.label(), point.label(), plan.seed),
-            );
-            return Some(rule.fault);
-        }
-    }
-    None
+    // resolve the firing rule under the slot lock, but emit the trace
+    // instant only after the guard drops — the injection site may already
+    // hold executor-side locks, and the chaos lock must not span a call
+    // into the trace hub (lock_scope)
+    let fired = {
+        let s = slot().lock_unpoisoned();
+        let plan = s.as_ref()?;
+        plan.rules
+            .iter()
+            .find(|rule| rule.check(point, endpoint))
+            .map(|rule| (rule.fault, plan.seed))
+    };
+    let (fault, seed) = fired?;
+    trace::instant(
+        trace::kind::CHAOS_INJECT,
+        task,
+        &format!("chaos-ep{endpoint}"),
+        format!("{} at {} (seed {seed})", fault.label(), point.label()),
+    );
+    Some(fault)
 }
 
 #[cfg(test)]

@@ -12,7 +12,7 @@ use std::time::{Duration, Instant};
 use pyhf_faas::coordinator::chaos;
 use pyhf_faas::coordinator::{
     ChaosFault, ChaosPlan, ChaosRule, Endpoint, EndpointConfig, ExecutorConfig, FaasClient,
-    HedgePolicy, ReliabilityPolicy, RetryPolicy, Service, ServiceHandle,
+    FaultPoint, HedgePolicy, ReliabilityPolicy, RetryPolicy, Service, ServiceHandle,
 };
 use pyhf_faas::scheduler::{PolicyKind, RouteStrategyKind, Router, SchedQueue, TaskMeta};
 use pyhf_faas::trace::{self, chrome, kind};
@@ -338,3 +338,28 @@ fn enqueue_still_traced_after_guard_release() {
     assert!(enq[0].detail.contains("weight 3"), "detail: {}", enq[0].detail);
 }
 
+/// Regression for the chaos-lock scope fix: `inject` resolves the firing
+/// rule under the slot lock but emits `chaos.inject` only after the
+/// guard drops. The restructure must not lose the instant — a firing
+/// rule still returns the fault AND traces it; a non-firing consult
+/// traces nothing.
+#[test]
+fn chaos_inject_still_traced_after_guard_release() {
+    let _g = trace_lock();
+    trace::clear();
+    trace::enable();
+
+    chaos::install(ChaosPlan::new(9).rule(ChaosRule::new(ChaosFault::Crash, None, 0, 1)));
+    assert_eq!(chaos::inject(FaultPoint::Execute, 0, Some(5)), Some(ChaosFault::Crash));
+    // the single-hit rule is spent: no fault, and no phantom trace event
+    assert_eq!(chaos::inject(FaultPoint::Execute, 0, Some(6)), None);
+    let plan = chaos::clear().expect("plan was installed");
+    assert_eq!(plan.total_hits(), 1);
+
+    trace::disable();
+    let t = trace::drain();
+    let inj = t.of_kind(kind::CHAOS_INJECT);
+    assert_eq!(inj.len(), 1, "exactly one inject instant: {inj:?}");
+    assert_eq!(inj[0].task, Some(5));
+    assert!(inj[0].detail.contains("crash at execute"), "detail: {}", inj[0].detail);
+}
