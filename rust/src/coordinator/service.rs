@@ -20,6 +20,7 @@ use crate::coordinator::task::{EndpointId, FunctionId, TaskId, TaskOutcome, Task
 use crate::scheduler::policy::TaskMeta;
 use crate::scheduler::router::Router;
 use crate::util::json::Json;
+use crate::util::sync::{CondvarExt, MutexExt};
 
 /// Reserved function id of the built-in no-op readmission probe, parked
 /// at the top of the id space so user registrations (0, 1, 2, …) are
@@ -161,17 +162,17 @@ impl Service {
     /// probes ([`PROBE_FUNCTION`]) are never journaled — they are not work
     /// a restarted coordinator should redo.
     pub fn set_journal(&self, journal: Arc<Journal>) {
-        *self.journal.lock().unwrap() = Some(journal);
+        *self.journal.lock_unpoisoned() = Some(journal);
     }
 
     pub fn journal_enabled(&self) -> bool {
-        self.journal.lock().unwrap().is_some()
+        self.journal.lock_unpoisoned().is_some()
     }
 
     /// The attached journal, if any (handle clone — callers append outside
     /// the state lock).
     pub fn journal_handle(&self) -> Option<Arc<Journal>> {
-        self.journal.lock().unwrap().clone()
+        self.journal.lock_unpoisoned().clone()
     }
 
     fn journal_record(&self, rec: journal::Record) {
@@ -184,7 +185,7 @@ impl Service {
     // -- registry ---------------------------------------------------------
 
     pub fn register_function(&self, name: &str, handler: Handler) -> FunctionId {
-        let mut g = self.state.lock().unwrap();
+        let mut g = self.state.lock_unpoisoned();
         let id = g.next_function;
         g.next_function += 1;
         g.functions.insert(id, FunctionEntry { name: name.to_string(), handler });
@@ -192,11 +193,11 @@ impl Service {
     }
 
     pub fn function_name(&self, id: FunctionId) -> Option<String> {
-        self.state.lock().unwrap().functions.get(&id).map(|f| f.name.clone())
+        self.state.lock_unpoisoned().functions.get(&id).map(|f| f.name.clone())
     }
 
     pub fn register_endpoint(&self, name: &str, queue: Arc<TaskQueue>) -> EndpointId {
-        let mut g = self.state.lock().unwrap();
+        let mut g = self.state.lock_unpoisoned();
         let id = g.next_endpoint;
         g.next_endpoint += 1;
         g.endpoints.insert(id, queue);
@@ -208,8 +209,7 @@ impl Service {
     /// Trace-track label for an endpoint (its registered name).
     fn endpoint_label(&self, id: EndpointId) -> String {
         self.state
-            .lock()
-            .unwrap()
+            .lock_unpoisoned()
             .endpoint_names
             .get(&id)
             .cloned()
@@ -217,7 +217,7 @@ impl Service {
     }
 
     pub fn deregister_endpoint(&self, id: EndpointId) {
-        let queue = self.state.lock().unwrap().endpoints.remove(&id);
+        let queue = self.state.lock_unpoisoned().endpoints.remove(&id);
         if let Some(q) = queue {
             q.close();
         }
@@ -225,7 +225,7 @@ impl Service {
         // its probe reports zero load forever, which would otherwise make
         // it the permanent least-loaded pick (and every routed submission
         // to it a hard failure)
-        if let Some(router) = self.router.lock().unwrap().as_mut() {
+        if let Some(router) = self.router.lock_unpoisoned().as_mut() {
             router.remove_target(id);
         }
     }
@@ -235,16 +235,16 @@ impl Service {
     /// Install (or replace) the multi-endpoint router used by
     /// [`Service::submit_routed`].
     pub fn install_router(&self, router: Router) {
-        *self.router.lock().unwrap() = Some(router);
+        *self.router.lock_unpoisoned() = Some(router);
     }
 
     pub fn has_router(&self) -> bool {
-        self.router.lock().unwrap().is_some()
+        self.router.lock_unpoisoned().is_some()
     }
 
     /// Name of the installed routing strategy, if any.
     pub fn route_strategy_name(&self) -> Option<&'static str> {
-        self.router.lock().unwrap().as_ref().map(|r| r.strategy_name())
+        self.router.lock_unpoisoned().as_ref().map(|r| r.strategy_name())
     }
 
     /// Submit a task letting the installed router pick the endpoint: the
@@ -323,7 +323,7 @@ impl Service {
         let mut retrying = false;
         loop {
             let (decision, strategy) = {
-                let mut guard = self.router.lock().unwrap();
+                let mut guard = self.router.lock_unpoisoned();
                 let router = guard
                     .as_mut()
                     .ok_or("no router installed on this service (Service::install_router)")?;
@@ -381,7 +381,7 @@ impl Service {
                 Ok(id) => {
                     // commit warmth, scale signals and counters only now: a
                     // failed submit must not skew placement state or metrics
-                    if let Some(router) = self.router.lock().unwrap().as_mut() {
+                    if let Some(router) = self.router.lock_unpoisoned().as_mut() {
                         router.note_submitted(&decision, &key, weight);
                     }
                     self.metrics.task_routed(decision.warm_hit, decision.spillover);
@@ -391,7 +391,7 @@ impl Service {
                 Err(Rejection::EndpointGone { reason: _, payload: p }) => {
                     payload = p;
                     retrying = true;
-                    if let Some(router) = self.router.lock().unwrap().as_mut() {
+                    if let Some(router) = self.router.lock_unpoisoned().as_mut() {
                         router.remove_target(decision.endpoint);
                     }
                 }
@@ -448,7 +448,7 @@ impl Service {
         // once the submission is actually accepted
         let journal = if function == PROBE_FUNCTION { None } else { self.journal_handle() };
         let journal_payload = journal.as_ref().map(|_| payload.clone());
-        let mut g = self.state.lock().unwrap();
+        let mut g = self.state.lock_unpoisoned();
         if !g.functions.contains_key(&function) {
             return Err(Rejection::Fatal(format!("unknown function id {function}")));
         }
@@ -492,8 +492,7 @@ impl Service {
             // shutdown-race submission. The payload rides back for retry.
             let payload = self
                 .state
-                .lock()
-                .unwrap()
+                .lock_unpoisoned()
                 .tasks
                 .remove(&id)
                 .map(|t| t.payload)
@@ -526,13 +525,13 @@ impl Service {
     }
 
     pub fn task_state(&self, id: TaskId) -> Option<TaskState> {
-        self.state.lock().unwrap().tasks.get(&id).map(|t| t.state)
+        self.state.lock_unpoisoned().tasks.get(&id).map(|t| t.state)
     }
 
     /// Non-blocking result fetch: None while the task is not terminal
     /// (funcX's `get_result` raises while pending; we return None).
     pub fn try_result(&self, id: TaskId) -> Option<Result<Json, String>> {
-        let g = self.state.lock().unwrap();
+        let g = self.state.lock_unpoisoned();
         let t = g.tasks.get(&id)?;
         match (&t.state, &t.outcome) {
             (TaskState::Success, Some(TaskOutcome::Ok(v))) => Some(Ok(v.clone())),
@@ -545,7 +544,7 @@ impl Service {
     /// Blocking result fetch with timeout.
     pub fn wait_result(&self, id: TaskId, timeout: Duration) -> Result<Json, String> {
         let deadline = Instant::now() + timeout;
-        let mut g = self.state.lock().unwrap();
+        let mut g = self.state.lock_unpoisoned();
         loop {
             match g.tasks.get(&id) {
                 None => return Err(format!("unknown task id {id}")),
@@ -562,17 +561,21 @@ impl Service {
             if now >= deadline {
                 return Err(format!("timeout waiting for task {id}"));
             }
-            let (gg, _) = self.results.wait_timeout(g, deadline - now).unwrap();
+            let (gg, _) = self.results.wait_timeout_unpoisoned(g, deadline - now);
             g = gg;
         }
     }
 
     /// Tasks not yet finished on an endpoint (queued + running).
     pub fn outstanding(&self, endpoint: EndpointId) -> usize {
-        let g = self.state.lock().unwrap();
-        let queued = g.endpoints.get(&endpoint).map(|q| q.len()).unwrap_or(0);
+        let g = self.state.lock_unpoisoned();
+        let queue = g.endpoints.get(&endpoint).cloned();
         let running = g.running.get(&endpoint).copied().unwrap_or(0);
-        queued + running
+        drop(g);
+        // the interchange has its own lock — measure depth only after the
+        // state guard is released (lock_scope: `state` must not span a
+        // call into the queue)
+        queue.map(|q| q.len()).unwrap_or(0) + running
     }
 
     // -- worker side ------------------------------------------------------
@@ -580,22 +583,28 @@ impl Service {
     /// Claim a queued task for execution: marks Running, returns the handler
     /// and payload.
     pub fn claim(&self, id: TaskId, worker: &str) -> Option<(Handler, Json)> {
-        let mut g = self.state.lock().unwrap();
+        let mut g = self.state.lock_unpoisoned();
         let now = Instant::now();
-        let (handler, payload, endpoint, submitted_at, function) = {
-            let function = {
-                let t = g.tasks.get_mut(&id)?;
-                if t.state != TaskState::Pending {
-                    return None;
-                }
-                t.state = TaskState::Running;
-                t.started_at = Some(now);
-                t.worker = Some(worker.to_string());
-                t.function
-            };
-            let handler = g.functions.get(&function)?.handler.clone();
-            let t = g.tasks.get(&id).unwrap();
-            (handler, t.payload.clone(), t.endpoint, t.submitted_at, function)
+        let (payload, endpoint, submitted_at, function) = {
+            let t = g.tasks.get_mut(&id)?;
+            if t.state != TaskState::Pending {
+                return None;
+            }
+            t.state = TaskState::Running;
+            t.started_at = Some(now);
+            t.worker = Some(worker.to_string());
+            (t.payload.clone(), t.endpoint, t.submitted_at, t.function)
+        };
+        let Some(handler) = g.functions.get(&function).map(|f| f.handler.clone()) else {
+            // functions never deregister today; if that ever changes, the
+            // claim degrades to "not claimable" instead of panicking with
+            // the state lock held — roll the record back to Pending
+            if let Some(t) = g.tasks.get_mut(&id) {
+                t.state = TaskState::Pending;
+                t.started_at = None;
+                t.worker = None;
+            }
+            return None;
         };
         *g.running.entry(endpoint).or_insert(0) += 1;
         drop(g);
@@ -620,7 +629,7 @@ impl Service {
     /// stored: nobody will ever drain its result.
     pub fn complete(&self, id: TaskId, outcome: Result<Json, String>) {
         let journal = self.journal_handle();
-        let mut g = self.state.lock().unwrap();
+        let mut g = self.state.lock_unpoisoned();
         let (ok, wait_s, service_s, abandoned, trace_times, journal_value) = {
             let Some(t) = g.tasks.get_mut(&id) else { return };
             t.finished_at = Some(Instant::now());
@@ -722,7 +731,7 @@ impl Service {
     /// * **terminal** — the unclaimed result is drained from the store
     ///   (returns false: nothing was cancelled, just cleaned up).
     pub fn cancel(&self, id: TaskId) -> bool {
-        let mut g = self.state.lock().unwrap();
+        let mut g = self.state.lock_unpoisoned();
         let state = match g.tasks.get(&id) {
             Some(t) => t.state,
             None => return false,
@@ -752,7 +761,7 @@ impl Service {
                 true
             }
             TaskState::Running => {
-                let t = g.tasks.get_mut(&id).expect("checked above");
+                let Some(t) = g.tasks.get_mut(&id) else { return false };
                 if t.abandoned {
                     return false;
                 }
@@ -786,7 +795,7 @@ impl Service {
     /// False when the task is no longer queued — already claimed,
     /// finished or cancelled.
     pub fn expire_task(&self, id: TaskId) -> bool {
-        let mut g = self.state.lock().unwrap();
+        let mut g = self.state.lock_unpoisoned();
         let Some(t) = g.tasks.get_mut(&id) else { return false };
         if t.state != TaskState::Pending && t.state != TaskState::WaitingForNodes {
             return false;
@@ -829,7 +838,7 @@ impl Service {
     /// hedging client uses this to exclude a straggler's endpoint from
     /// the speculative duplicate's candidate set.
     pub fn task_endpoint(&self, id: TaskId) -> Option<EndpointId> {
-        self.state.lock().unwrap().tasks.get(&id).map(|t| t.endpoint)
+        self.state.lock_unpoisoned().tasks.get(&id).map(|t| t.endpoint)
     }
 
     // -- crash recovery ----------------------------------------------------
@@ -925,7 +934,7 @@ impl Service {
     /// Materialize one journaled terminal outcome as a terminal task record
     /// under a fresh id: the idempotent re-delivery half of recovery.
     fn deliver_recovered(&self, function: FunctionId, d: &journal::DoneEntry) -> TaskId {
-        let mut g = self.state.lock().unwrap();
+        let mut g = self.state.lock_unpoisoned();
         let id = g.next_task;
         g.next_task += 1;
         let now = Instant::now();
@@ -972,14 +981,14 @@ impl Service {
     /// interchange entry, it does not resubmit (the ledger sees nothing).
     fn migrate_quarantined_queues(&self) {
         let quarantined = {
-            let mut guard = self.router.lock().unwrap();
+            let mut guard = self.router.lock_unpoisoned();
             match guard.as_mut() {
                 Some(r) => r.take_quarantined_endpoints(),
                 None => return,
             }
         };
         for ep in quarantined {
-            let Some(queue) = self.state.lock().unwrap().endpoints.get(&ep).cloned() else {
+            let Some(queue) = self.state.lock_unpoisoned().endpoints.get(&ep).cloned() else {
                 continue;
             };
             for meta in queue.recall_queued() {
@@ -989,7 +998,7 @@ impl Service {
                     continue;
                 }
                 let target = {
-                    let mut guard = self.router.lock().unwrap();
+                    let mut guard = self.router.lock_unpoisoned();
                     guard.as_mut().and_then(|r| {
                         r.decide_excluding(&meta.affinity_key, meta.weight, Some(ep))
                             .map(|d| d.endpoint)
@@ -1005,7 +1014,7 @@ impl Service {
                     }
                 };
                 let target_queue = {
-                    let mut g = self.state.lock().unwrap();
+                    let mut g = self.state.lock_unpoisoned();
                     let q = g.endpoints.get(&new_home).cloned();
                     if q.is_some() {
                         if let Some(rec) = g.tasks.get_mut(&meta.id) {
@@ -1016,7 +1025,7 @@ impl Service {
                 };
                 let moved = target_queue.map(|q| q.push_meta(meta.clone())).unwrap_or(false);
                 if moved {
-                    if let Some(r) = self.router.lock().unwrap().as_mut() {
+                    if let Some(r) = self.router.lock_unpoisoned().as_mut() {
                         r.note_routed(new_home, &meta.affinity_key);
                     }
                     self.metrics.task_migrated();
@@ -1030,7 +1039,7 @@ impl Service {
                     }
                 } else {
                     // the target vanished mid-move: send the task home
-                    if let Some(rec) = self.state.lock().unwrap().tasks.get_mut(&meta.id) {
+                    if let Some(rec) = self.state.lock_unpoisoned().tasks.get_mut(&meta.id) {
                         rec.endpoint = ep;
                     }
                     let _ = queue.push_meta(meta);
@@ -1045,7 +1054,7 @@ impl Service {
     /// `Router::with_active_probing`).
     fn drive_probes(&self) {
         let pending = {
-            let guard = self.router.lock().unwrap();
+            let guard = self.router.lock_unpoisoned();
             match guard.as_ref() {
                 Some(r) => r.pending_probes(),
                 None => return,
@@ -1061,13 +1070,13 @@ impl Service {
                 // terminal probe: drain its record (cancel on a terminal
                 // task only cleans up — nothing is counted cancelled)
                 self.cancel(task);
-                if let Some(r) = self.router.lock().unwrap().as_mut() {
+                if let Some(r) = self.router.lock_unpoisoned().as_mut() {
                     r.resolve_probe(ep, healthy);
                 }
             }
         }
         let candidates = {
-            let mut guard = self.router.lock().unwrap();
+            let mut guard = self.router.lock_unpoisoned();
             match guard.as_mut() {
                 Some(r) => r.take_probe_candidates(),
                 None => return,
@@ -1087,14 +1096,14 @@ impl Service {
                             "synthetic readmission probe".to_string(),
                         );
                     }
-                    if let Some(r) = self.router.lock().unwrap().as_mut() {
+                    if let Some(r) = self.router.lock_unpoisoned().as_mut() {
                         r.note_probe_started(ep, task);
                     }
                 }
                 Err(_) => {
                     // cannot even enqueue the probe: the endpoint is gone
                     // or closing — treat as a failed probe
-                    if let Some(r) = self.router.lock().unwrap().as_mut() {
+                    if let Some(r) = self.router.lock_unpoisoned().as_mut() {
                         r.resolve_probe(ep, false);
                     }
                 }
@@ -1104,12 +1113,12 @@ impl Service {
 
     /// Number of task records currently held (leak observability).
     pub fn task_count(&self) -> usize {
-        self.state.lock().unwrap().tasks.len()
+        self.state.lock_unpoisoned().tasks.len()
     }
 
     /// Per-task timing export (patch name lookups for Listing-2-style logs).
     pub fn task_timing(&self, id: TaskId) -> Option<(f64, f64)> {
-        let g = self.state.lock().unwrap();
+        let g = self.state.lock_unpoisoned();
         let t = g.tasks.get(&id)?;
         Some((t.wait_seconds()?, t.service_seconds()?))
     }
@@ -1144,6 +1153,37 @@ mod tests {
 
         assert_eq!(svc.task_state(id), Some(TaskState::Success));
         assert_eq!(svc.try_result(id).unwrap().unwrap(), Json::num(7.0));
+        assert_eq!(svc.outstanding(ep), 0);
+    }
+
+    /// Regression for the outstanding-count fix: the autoscaler's demand
+    /// signal is queued + running, measured without the state guard
+    /// spanning the interchange lock. A claimed-but-unfinished task must
+    /// still count — a depth-only reading would scale the pool down while
+    /// work is in flight.
+    #[test]
+    fn outstanding_counts_running_tasks_not_just_queue_depth() {
+        let svc = Service::new();
+        let q = TaskQueue::new();
+        let ep = svc.register_endpoint("out-ep", q.clone());
+        let f = svc.register_function("echo", echo_handler());
+        svc.submit(ep, f, Json::num(1.0)).unwrap();
+        svc.submit(ep, f, Json::num(2.0)).unwrap();
+        assert_eq!(svc.outstanding(ep), 2, "both queued");
+
+        let tid = q.pop(Duration::from_millis(10)).unwrap();
+        let (h, p) = svc.claim(tid, "w0").unwrap();
+        // one running + one queued: a queue-depth-only count reports 1 here
+        assert_eq!(svc.outstanding(ep), 2, "running task left the count");
+
+        let mut ctx = WorkerContext::new("w0");
+        svc.complete(tid, h(&p, &mut ctx));
+        assert_eq!(svc.outstanding(ep), 1, "only the queued task remains");
+
+        let tid = q.pop(Duration::from_millis(10)).unwrap();
+        let (h, p) = svc.claim(tid, "w0").unwrap();
+        assert_eq!(svc.outstanding(ep), 1, "still one in flight");
+        svc.complete(tid, h(&p, &mut ctx));
         assert_eq!(svc.outstanding(ep), 0);
     }
 
