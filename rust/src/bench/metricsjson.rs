@@ -67,15 +67,35 @@ impl MetricsReport {
 }
 
 /// Required numeric keys of every metrics object (service-wide and
-/// per-endpoint): the ledger counters and the latency surface.
-const REQUIRED_NUMERIC: [&str; 24] = [
+/// per-endpoint): the complete `Snapshot::to_json` surface — all ledger
+/// counters plus the derived latency/size fields. The `registry_sync`
+/// lint (`tools/pallas-lint`) checks every `Metrics` counter field is
+/// listed here and documented in docs/BENCHMARKS.md, so a counter added
+/// to the hub cannot silently skip the exported schema.
+const REQUIRED_NUMERIC: [&str; 45] = [
     "submitted",
     "completed",
     "failed",
-    "cancelled",
+    "blocks_provisioned",
+    "blocks_released",
+    "workers_started",
+    "affinity_hits",
+    "affinity_misses",
+    "batches",
+    "batched_tasks",
+    "dedup_hits",
+    "warm_evictions",
     "routed",
+    "route_warm_hits",
+    "route_spillovers",
+    "route_retries",
+    "endpoints_quarantined",
+    "endpoints_readmitted",
+    "worker_init_failures",
+    "cancelled",
     "retries",
     "hedges",
+    "hedge_wins",
     "deadline_exceeded",
     "migrated",
     "health_probes",
@@ -87,12 +107,17 @@ const REQUIRED_NUMERIC: [&str; 24] = [
     "mean_wait_s",
     "mean_service_s",
     "total_service_s",
+    "mean_worker_startup_s",
+    "mean_batch_size",
     "p50_wait_s",
     "p95_wait_s",
     "p99_wait_s",
     "p50_service_s",
     "p95_service_s",
     "p99_service_s",
+    "p50_worker_startup_s",
+    "p95_worker_startup_s",
+    "p99_worker_startup_s",
 ];
 
 fn validate_metrics_obj(ctx: &str, doc: &Json) -> Result<(), String> {

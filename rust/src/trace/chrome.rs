@@ -18,6 +18,39 @@ use crate::util::json::{self, Json};
 /// Schema tag checked by CI and by [`validate`].
 pub const SCHEMA: &str = "pyhf-faas/trace/v1";
 
+/// Every lifecycle kind the trace hub can emit — the exporter half of the
+/// `registry_sync` lint (`tools/pallas-lint`): a constant added to
+/// [`crate::trace::kind`] must be listed here before `validate` (and the
+/// CLI `validate` subcommand, which dispatches to it) accepts traces
+/// carrying it. Keeps the exporter, the validator and the hub's kind
+/// registry from drifting apart across PRs.
+pub const KNOWN_KINDS: [&str; 24] = [
+    "task.submit",
+    "task.enqueue",
+    "task.result",
+    "task.cancel",
+    "task.retry",
+    "task.hedge",
+    "task.deadline_exceeded",
+    "task.migrate",
+    "route.decide",
+    "route.retry",
+    "route.spill",
+    "health.quarantine",
+    "health.readmit",
+    "health.probe",
+    "worker.init_fail",
+    "chaos.inject",
+    "journal.append",
+    "recover.replay",
+    "task.wait",
+    "task.execute",
+    "worker.startup",
+    "kernel.sweep",
+    "kernel.solve",
+    "client.gather",
+];
+
 /// Event category shown in the viewer: the kind's prefix
 /// (`task` / `route` / `health` / `worker` / `kernel` / `client`).
 fn category(kind: &str) -> &str {
@@ -105,7 +138,8 @@ pub fn validate(doc: &Json) -> Result<(), String> {
     let events =
         doc.get("traceEvents").and_then(|v| v.as_arr()).ok_or("missing 'traceEvents'")?;
     for (i, e) in events.iter().enumerate() {
-        e.get("name")
+        let name = e
+            .get("name")
             .and_then(|v| v.as_str())
             .ok_or_else(|| format!("traceEvents[{i}]: missing 'name'"))?;
         let ph = e
@@ -120,6 +154,9 @@ pub fn validate(doc: &Json) -> Result<(), String> {
         match ph {
             "M" => {}
             "i" | "X" => {
+                if !KNOWN_KINDS.contains(&name) {
+                    return Err(format!("traceEvents[{i}]: unregistered kind '{name}'"));
+                }
                 let ts = e
                     .get("ts")
                     .and_then(|v| v.as_f64())

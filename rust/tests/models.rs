@@ -1,0 +1,324 @@
+#![cfg(feature = "loom")]
+//! Exhaustive interleaving models of the fabric's two racy protocols,
+//! gated behind `--features loom` (CI job `analysis`).
+//!
+//! No external model-checking dependency: the explorer below enumerates
+//! *every* interleaving of the per-thread operation sequences and replays
+//! each schedule against fresh state. The queue's critical sections are
+//! single-lock, so its public calls are the linearization points —
+//! enumerating call-level interleavings covers every distinguishable
+//! behavior, the same reduction loom applies to lock-protected state.
+//!
+//! * `interchange_*` drive the REAL [`SchedQueue`] through all schedules
+//!   of submit/claim/cancel/close/drain, checking the weight/len ledger
+//!   after every step and exactly-one-disposition at the end.
+//! * `hedge_*` model the client's hedge-vs-result race (mirroring
+//!   `FaasClient::poll_slot`: hedge harvested first, slot leaves the
+//!   pending set on its first terminal outcome) and assert exactly one
+//!   terminal outcome under every arrival order.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use pyhf_faas::scheduler::policy::TaskMeta;
+use pyhf_faas::scheduler::queue::SchedQueue;
+
+/// All interleavings of threads with `counts[t]` sequential ops each:
+/// every sequence over thread ids preserving per-thread program order.
+fn schedules(counts: &[usize]) -> Vec<Vec<usize>> {
+    fn go(remaining: &mut Vec<usize>, cur: &mut Vec<usize>, out: &mut Vec<Vec<usize>>) {
+        if remaining.iter().all(|&r| r == 0) {
+            out.push(cur.clone());
+            return;
+        }
+        for t in 0..remaining.len() {
+            if remaining[t] > 0 {
+                remaining[t] -= 1;
+                cur.push(t);
+                go(remaining, cur, out);
+                cur.pop();
+                remaining[t] += 1;
+            }
+        }
+    }
+    let mut out = Vec::new();
+    go(&mut counts.to_vec(), &mut Vec::new(), &mut out);
+    out
+}
+
+#[test]
+fn schedule_enumeration_is_multinomial() {
+    // 4! / (2! * 2!) = 6
+    assert_eq!(schedules(&[2, 2]).len(), 6);
+    // 7! / (2! * 2! * 1! * 2!) = 630
+    assert_eq!(schedules(&[2, 2, 1, 2]).len(), 630);
+}
+
+// ---------------------------------------------------------------------------
+// model: the SchedQueue interchange
+// ---------------------------------------------------------------------------
+
+/// Ledger mirroring what the queue *should* hold, updated from each op's
+/// observable return value.
+#[derive(Default)]
+struct Ledger {
+    weights: HashMap<u64, usize>,
+    accepted: Vec<u64>,
+    popped: Vec<u64>,
+    discarded: Vec<u64>,
+    drained: Vec<u64>,
+}
+
+impl Ledger {
+    fn queued(&self) -> Vec<u64> {
+        self.accepted
+            .iter()
+            .copied()
+            .filter(|id| {
+                !self.popped.contains(id)
+                    && !self.discarded.contains(id)
+                    && !self.drained.contains(id)
+            })
+            .collect()
+    }
+
+    fn check(&self, q: &SchedQueue, step: &str, sched: &[usize]) {
+        let queued = self.queued();
+        let weight: usize = queued.iter().map(|id| self.weights[id].max(1)).sum();
+        assert_eq!(q.len(), queued.len(), "len after {step} in {sched:?}");
+        assert_eq!(q.queued_weight(), weight, "weight after {step} in {sched:?}");
+    }
+}
+
+/// Thread programs: producer pushes two tasks, a worker claims twice, a
+/// client cancels task 1, shutdown closes then drains. 630 schedules.
+#[test]
+fn interchange_every_schedule_reconciles() {
+    for sched in schedules(&[2, 2, 1, 2]) {
+        let q = SchedQueue::new();
+        let mut led = Ledger::default();
+        led.weights.insert(1, 2);
+        led.weights.insert(2, 1);
+        let mut pc = [0usize; 4];
+        for &t in &sched {
+            let step = match (t, pc[t]) {
+                (0, 0) => {
+                    if q.push_meta(TaskMeta { weight: 2, ..TaskMeta::bare(1) }) {
+                        led.accepted.push(1);
+                    }
+                    "push(1)"
+                }
+                (0, 1) => {
+                    if q.push_meta(TaskMeta::bare(2)) {
+                        led.accepted.push(2);
+                    }
+                    "push(2)"
+                }
+                (1, _) => {
+                    if let Some(id) = q.pop(Duration::ZERO) {
+                        led.popped.push(id);
+                    }
+                    "pop"
+                }
+                (2, 0) => {
+                    if q.discard(1) {
+                        led.discarded.push(1);
+                    }
+                    "discard(1)"
+                }
+                (3, 0) => {
+                    q.close();
+                    "close"
+                }
+                (3, 1) => {
+                    for m in q.drain_remaining() {
+                        led.drained.push(m.id);
+                    }
+                    "drain"
+                }
+                other => panic!("no op for {other:?}"),
+            };
+            pc[t] += 1;
+            led.check(&q, step, &sched);
+        }
+        // terminal: whatever is still queued drains; afterwards every
+        // accepted task has exactly one disposition and the ledger
+        // reconciles — accepted == popped + discarded + drained
+        let leftover: Vec<u64> = q.drain_remaining().into_iter().map(|m| m.id).collect();
+        assert_eq!(q.queued_weight(), 0, "{sched:?}");
+        assert_eq!(q.len(), 0, "{sched:?}");
+        for id in &led.accepted {
+            let n = [&led.popped, &led.discarded, &led.drained, &leftover]
+                .iter()
+                .map(|v| v.iter().filter(|x| *x == id).count())
+                .sum::<usize>();
+            assert_eq!(n, 1, "task {id} dispositions in {sched:?}");
+        }
+        assert_eq!(
+            led.accepted.len(),
+            led.popped.len() + led.discarded.len() + led.drained.len() + leftover.len(),
+            "{sched:?}"
+        );
+    }
+}
+
+/// The push-vs-close race in isolation: an accepted push must be visible
+/// to the shutdown drain (or a pop); a rejected push must leave no trace.
+/// No schedule may strand an accepted task or resurrect a rejected one.
+#[test]
+fn interchange_close_race_never_strands_a_task() {
+    for sched in schedules(&[1, 2]) {
+        let q = SchedQueue::new();
+        let mut accepted = false;
+        let mut seen = 0usize;
+        let mut pc = [0usize; 2];
+        for &t in &sched {
+            match (t, pc[t]) {
+                (0, 0) => accepted = q.push_meta(TaskMeta::bare(7)),
+                (1, 0) => q.close(),
+                (1, 1) => seen += q.drain_remaining().len(),
+                other => panic!("no op for {other:?}"),
+            }
+            pc[t] += 1;
+        }
+        seen += q.drain_remaining().len();
+        assert_eq!(seen, usize::from(accepted), "{sched:?}");
+        assert!(q.pop(Duration::ZERO).is_none(), "{sched:?}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// model: the hedge-vs-result race (mirrors client.rs poll_slot)
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Outcome {
+    HedgeWon,
+    PrimaryWon,
+    Failed,
+}
+
+/// Result mailboxes: a harvest consumes the cell, like
+/// `FaasClient::get_result` taking a completed task out of the store.
+#[derive(Default)]
+struct World {
+    primary: Option<Result<(), ()>>,
+    hedge: Option<Result<(), ()>>,
+}
+
+struct SlotModel {
+    hedge_outstanding: bool,
+    primary_cancelled: bool,
+    hedge_cancelled: bool,
+    finalized: Option<Outcome>,
+}
+
+impl SlotModel {
+    fn new() -> SlotModel {
+        SlotModel {
+            hedge_outstanding: true,
+            primary_cancelled: false,
+            hedge_cancelled: false,
+            finalized: None,
+        }
+    }
+
+    /// One gather sweep over this slot — the transition rules of
+    /// `poll_slot`: hedge harvested first (a winning hedge cancels the
+    /// primary; a failed hedge is dropped and never fails the logical
+    /// task), then the primary (beating its hedge abandons the duplicate).
+    fn poll(&mut self, w: &mut World) {
+        if self.finalized.is_some() {
+            // a finalized slot has left the pending set; gather never
+            // polls it again — modelled as a hard error instead
+            panic!("poll after terminal outcome");
+        }
+        if self.hedge_outstanding {
+            match w.hedge.take() {
+                Some(Ok(())) => {
+                    self.primary_cancelled = true;
+                    self.hedge_outstanding = false;
+                    self.set_final(Outcome::HedgeWon);
+                    return;
+                }
+                Some(Err(())) => {
+                    self.hedge_outstanding = false;
+                    self.hedge_cancelled = true;
+                }
+                None => {}
+            }
+        }
+        if let Some(r) = w.primary.take() {
+            if self.hedge_outstanding {
+                self.hedge_outstanding = false;
+                self.hedge_cancelled = true;
+            }
+            self.set_final(match r {
+                Ok(()) => Outcome::PrimaryWon,
+                Err(()) => Outcome::Failed,
+            });
+        }
+    }
+
+    fn set_final(&mut self, o: Outcome) {
+        // THE invariant: exactly one terminal outcome per logical task
+        assert!(self.finalized.is_none(), "double finalization: {:?} then {o:?}", self.finalized);
+        self.finalized = Some(o);
+    }
+}
+
+/// Every arrival order × every poll placement × all four result combos:
+/// the slot finalizes exactly once, and the losing attempt is always
+/// cancelled (no orphaned duplicate).
+#[test]
+fn hedge_race_exactly_one_terminal_outcome() {
+    let combos: [(Result<(), ()>, Result<(), ()>); 4] =
+        [(Ok(()), Ok(())), (Ok(()), Err(())), (Err(()), Ok(())), (Err(()), Err(()))];
+    for (pres, hres) in combos {
+        for sched in schedules(&[1, 1, 3]) {
+            let mut w = World::default();
+            let mut s = SlotModel::new();
+            for &t in &sched {
+                match t {
+                    0 => w.primary = Some(pres),
+                    1 => w.hedge = Some(hres),
+                    2 => {
+                        if s.finalized.is_none() {
+                            s.poll(&mut w);
+                        }
+                    }
+                    other => panic!("no thread {other}"),
+                }
+            }
+            // results may arrive after the last in-schedule sweep; gather
+            // keeps sweeping until the slot finalizes
+            for _ in 0..2 {
+                if s.finalized.is_none() {
+                    s.poll(&mut w);
+                }
+            }
+            let f = s.finalized.unwrap_or_else(|| {
+                panic!("slot never finalized under {sched:?} with {pres:?}/{hres:?}")
+            });
+            match f {
+                Outcome::HedgeWon => {
+                    assert_eq!(hres, Ok(()), "{sched:?}");
+                    assert!(s.primary_cancelled, "straggler must be cancelled: {sched:?}");
+                }
+                Outcome::PrimaryWon => assert_eq!(pres, Ok(()), "{sched:?}"),
+                Outcome::Failed => assert_eq!(pres, Err(()), "{sched:?}"),
+            }
+            // a failed hedge never fails the logical task
+            if hres == Err(()) {
+                assert_ne!(f, Outcome::HedgeWon, "{sched:?}");
+            }
+            // no orphaned duplicate: every terminal path either crowned
+            // the hedge or cancelled it — it is never left outstanding
+            assert!(!s.hedge_outstanding, "orphaned hedge: {sched:?}");
+            assert!(
+                f == Outcome::HedgeWon || s.hedge_cancelled,
+                "losing hedge must be cancelled: {sched:?}"
+            );
+        }
+    }
+}

@@ -1,0 +1,158 @@
+//! Structural passes shared by every rule: brace-depth map, test-range
+//! detection (`#[cfg(test)]` modules and `#[test]` fns are exempt from
+//! the hot-path rules), and the `lint:allow(<rule>) reason` directive.
+
+use crate::lexer::Cleaned;
+
+/// One reported violation. `line` is 1-based (editor-clickable).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn new(file: &str, line0: usize, rule: &'static str, message: String) -> Finding {
+        Finding { file: file.to_string(), line: line0 + 1, rule, message }
+    }
+}
+
+/// `depth[i]` = brace depth entering line `i` (computed over cleaned code,
+/// so braces in strings/chars/comments never skew it).
+pub fn depth_map(code: &[String]) -> Vec<i32> {
+    let mut before = Vec::with_capacity(code.len());
+    let mut d = 0i32;
+    for line in code {
+        before.push(d);
+        for ch in line.chars() {
+            if ch == '{' {
+                d += 1;
+            } else if ch == '}' {
+                d -= 1;
+            }
+        }
+    }
+    before
+}
+
+/// Lines covered by `#[cfg(test)]` items and `#[test]` fns: the attribute
+/// line through the matching close brace of the following item.
+pub fn test_ranges(code: &[String]) -> Vec<bool> {
+    let n = code.len();
+    let mut covered = vec![false; n];
+    let mut i = 0usize;
+    while i < n {
+        let t = code[i].trim();
+        if t.starts_with("#[cfg(test)]") || t == "#[test]" {
+            let mut j = i;
+            let mut depth = 0i32;
+            let mut opened = false;
+            while j < n {
+                for ch in code[j].chars() {
+                    if ch == '{' {
+                        depth += 1;
+                        opened = true;
+                    } else if ch == '}' {
+                        depth -= 1;
+                    }
+                }
+                if opened && depth <= 0 {
+                    break;
+                }
+                j += 1;
+            }
+            let end = j.min(n - 1);
+            for flag in covered.iter_mut().take(end + 1).skip(i) {
+                *flag = true;
+            }
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+    covered
+}
+
+/// Does this comment text carry `lint:allow(<rule>)`?
+pub fn directive_allows(comment: &str, rule: &str) -> bool {
+    const NEEDLE: &str = "lint:allow(";
+    let mut rest = comment;
+    while let Some(p) = rest.find(NEEDLE) {
+        let after = &rest[p + NEEDLE.len()..];
+        match after.find(')') {
+            Some(end) => {
+                if after[..end].trim() == rule {
+                    return true;
+                }
+                rest = &after[end..];
+            }
+            None => return false,
+        }
+    }
+    false
+}
+
+/// A finding at `line` is suppressed when a `lint:allow(rule)` directive
+/// sits in the same line's trailing comment, or anywhere in the run of
+/// comment/blank lines immediately above it (so a multi-line
+/// justification can carry the directive on its first line).
+pub fn is_allowed(c: &Cleaned, line: usize, rule: &str) -> bool {
+    if directive_allows(&c.comment[line], rule) {
+        return true;
+    }
+    let mut k = line;
+    while k > 0 && c.code[k - 1].trim().is_empty() {
+        k -= 1;
+        if directive_allows(&c.comment[k], rule) {
+            return true;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::clean;
+
+    #[test]
+    fn directive_parsing() {
+        assert!(directive_allows(" lint:allow(no_panic) startup is fallible", "no_panic"));
+        assert!(!directive_allows(" lint:allow(no_panic) reason", "lock_order"));
+        assert!(directive_allows(" x lint:allow(a) lint:allow(lock_order) y", "lock_order"));
+        assert!(!directive_allows(" lint:allow(", "no_panic"));
+    }
+
+    #[test]
+    fn allow_on_same_line_and_preceding_block() {
+        let c = clean(concat!(
+            "let a = x.unwrap(); // lint:allow(no_panic) same line\n",
+            "// lint:allow(no_panic) block form:\n",
+            "// spanning two comment lines\n",
+            "let b = y.unwrap();\n",
+            "let c = z.unwrap();\n",
+        ));
+        assert!(is_allowed(&c, 0, "no_panic"));
+        assert!(is_allowed(&c, 3, "no_panic"));
+        assert!(!is_allowed(&c, 4, "no_panic"), "directive must not leak past its target");
+    }
+
+    #[test]
+    fn test_ranges_cover_cfg_test_mod() {
+        let c = clean(concat!(
+            "fn hot() {}\n",
+            "#[cfg(test)]\n",
+            "mod tests {\n",
+            "    #[test]\n",
+            "    fn t() {}\n",
+            "}\n",
+            "fn also_hot() {}\n",
+        ));
+        let t = test_ranges(&c.code);
+        assert!(!t[0]);
+        assert!(t[1] && t[2] && t[4] && t[5]);
+        assert!(!t[6]);
+    }
+}

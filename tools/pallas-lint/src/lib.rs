@@ -1,0 +1,81 @@
+//! pallas-lint — machine-checked invariants for the serving fabric.
+//!
+//! Rules (catalogue and rationale in docs/ANALYSIS.md):
+//! * `lock_order` / `lock_scope` — every lock acquisition resolves to a
+//!   named domain; nestings must be in the declared partial order; guards
+//!   must not span calls into other locking modules.
+//! * `no_panic` — no unwrap/expect/panic-family sites in coordinator/,
+//!   scheduler/, trace/ non-test code.
+//! * `probe_gate` — trace/chaos/logging fast-path gates are a single
+//!   relaxed atomic load, lock- and allocation-free.
+//! * `safety_comment` — every `unsafe` carries a `// SAFETY:` note.
+//! * `registry_sync` — metrics counters, trace kinds, and typed error
+//!   codes stay in lockstep with their exporters and docs.
+//!
+//! Suppression: `// lint:allow(<rule>) <reason>` on the offending line or
+//! in the comment block directly above it.
+
+pub mod engine;
+pub mod lexer;
+pub mod registry;
+pub mod rules;
+
+pub use engine::Finding;
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<PathBuf> =
+        fs::read_dir(dir)?.map(|e| e.map(|e| e.path())).collect::<io::Result<_>>()?;
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint the whole tree under `root` (the repo root): every file in
+/// `rust/src/**` through the per-file rules, then the registry_sync
+/// cross-file checks. Shared by the binary and the
+/// `real_tree_is_clean` integration test.
+pub fn lint_tree(root: &Path) -> io::Result<Vec<Finding>> {
+    let mut findings = Vec::new();
+    let mut files = Vec::new();
+    collect_rs(&root.join("rust/src"), &mut files)?;
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = fs::read_to_string(path)?;
+        findings.extend(rules::lint_source(&rel, &src));
+    }
+
+    let read = |rel: &str| fs::read_to_string(root.join(rel));
+    let metrics = read("rust/src/coordinator/metrics.rs")?;
+    let metricsjson = read("rust/src/bench/metricsjson.rs")?;
+    let benchmarks_doc = read("docs/BENCHMARKS.md")?;
+    let trace_mod = read("rust/src/trace/mod.rs")?;
+    let chrome = read("rust/src/trace/chrome.rs")?;
+    let reliability = read("rust/src/coordinator/reliability.rs")?;
+    let journal = read("rust/src/coordinator/journal.rs")?;
+    let reliability_doc = read("docs/RELIABILITY.md")?;
+    findings.extend(registry::check_registry(&registry::RegistryInputs {
+        metrics: &metrics,
+        metricsjson: &metricsjson,
+        benchmarks_doc: &benchmarks_doc,
+        trace_mod: &trace_mod,
+        chrome: &chrome,
+        reliability: &reliability,
+        journal: &journal,
+        reliability_doc: &reliability_doc,
+    }));
+    Ok(findings)
+}

@@ -1,0 +1,53 @@
+//! CLI: `pallas-lint [--root <repo-root>]`. Prints findings as
+//! `file:line: [rule] message`; exit 0 when clean, 1 on findings, 2 on
+//! I/O trouble (missing tree). CI runs this as a blocking job.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => match args.next() {
+                Some(p) => root = PathBuf::from(p),
+                None => {
+                    eprintln!("pallas-lint: --root needs a path");
+                    return ExitCode::from(2);
+                }
+            },
+            "--help" | "-h" => {
+                println!("usage: pallas-lint [--root <repo-root>]");
+                println!("checks rust/src/** against the invariants in docs/ANALYSIS.md");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("pallas-lint: unknown argument '{other}'");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    // running from the workspace root or from tools/pallas-lint both work
+    if !root.join("rust/src").is_dir() && root.join("../../rust/src").is_dir() {
+        root = root.join("../..");
+    }
+    match pallas_lint::lint_tree(&root) {
+        Ok(findings) => {
+            for f in &findings {
+                println!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.message);
+            }
+            if findings.is_empty() {
+                println!("pallas-lint: clean");
+                ExitCode::SUCCESS
+            } else {
+                println!("pallas-lint: {} finding(s)", findings.len());
+                ExitCode::FAILURE
+            }
+        }
+        Err(e) => {
+            eprintln!("pallas-lint: cannot read tree under {}: {e}", root.display());
+            ExitCode::from(2)
+        }
+    }
+}

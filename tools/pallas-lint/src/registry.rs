@@ -1,0 +1,253 @@
+//! rule: registry_sync — whole-tree facts, not per-line patterns.
+//!
+//! Three registries must stay in lockstep with their consumers:
+//! * every `Metrics` counter (a `u64`/`f64` field of `struct Inner`) is in
+//!   `bench/metricsjson.rs::REQUIRED_NUMERIC` and documented in
+//!   docs/BENCHMARKS.md;
+//! * every trace kind constant in `trace::kind` is in
+//!   `trace/chrome.rs::KNOWN_KINDS` (and vice versa — no ghost entries);
+//! * every typed error code string in `coordinator/reliability.rs` /
+//!   `coordinator/journal.rs` appears verbatim in docs/RELIABILITY.md.
+//!
+//! Identification runs on *cleaned* lines (comments can mention anything),
+//! but the literal values must come from the *raw* lines — the lexer blanks
+//! string contents.
+
+use crate::engine::Finding;
+use crate::lexer::clean;
+
+/// File contents the checker compares. Tests feed fixture contents; the
+/// binary reads the real tree (see [`crate::lint_tree`]).
+pub struct RegistryInputs<'a> {
+    pub metrics: &'a str,
+    pub metricsjson: &'a str,
+    pub benchmarks_doc: &'a str,
+    pub trace_mod: &'a str,
+    pub chrome: &'a str,
+    pub reliability: &'a str,
+    pub journal: &'a str,
+    pub reliability_doc: &'a str,
+}
+
+const F_METRICS: &str = "rust/src/coordinator/metrics.rs";
+const F_TRACE: &str = "rust/src/trace/mod.rs";
+const F_CHROME: &str = "rust/src/trace/chrome.rs";
+const F_RELIABILITY: &str = "rust/src/coordinator/reliability.rs";
+const F_JOURNAL: &str = "rust/src/coordinator/journal.rs";
+
+/// First `"…"` literal on a raw line.
+fn quoted(raw: &str) -> Option<&str> {
+    let a = raw.find('"')?;
+    let rest = &raw[a + 1..];
+    let b = rest.find('"')?;
+    Some(&rest[..b])
+}
+
+/// End line (inclusive) of the brace block opened on `start`.
+fn block_end(code: &[String], start: usize) -> usize {
+    let mut d = 0i32;
+    let mut opened = false;
+    for (j, line) in code.iter().enumerate().skip(start) {
+        for ch in line.chars() {
+            if ch == '{' {
+                d += 1;
+                opened = true;
+            } else if ch == '}' {
+                d -= 1;
+            }
+        }
+        if opened && d <= 0 {
+            return j;
+        }
+    }
+    code.len().saturating_sub(1)
+}
+
+/// `u64`/`f64` fields of `struct Inner { … }` — the counter registry.
+/// `Accumulator` fields are sketches, exported via their derived keys.
+fn inner_counters(metrics_src: &str) -> Option<Vec<String>> {
+    let c = clean(metrics_src);
+    let start = c.code.iter().position(|l| l.contains("struct Inner {"))?;
+    let end = block_end(&c.code, start);
+    let mut out = Vec::new();
+    for line in &c.code[start + 1..=end] {
+        let t = line.trim().trim_end_matches(',');
+        let Some((name, ty)) = t.split_once(':') else { continue };
+        let name = name.trim();
+        let ty = ty.trim();
+        if !name.is_empty()
+            && name.chars().all(|ch| ch.is_ascii_alphanumeric() || ch == '_')
+            && (ty == "u64" || ty == "f64")
+        {
+            out.push(name.to_string());
+        }
+    }
+    Some(out)
+}
+
+/// `pub const NAME: &str = "value";` pairs inside the given cleaned range,
+/// with values pulled from the raw lines.
+fn str_consts(src: &str, lo: usize, hi: usize) -> Vec<(String, String)> {
+    let c = clean(src);
+    let raw: Vec<&str> = src.lines().collect();
+    let mut out = Vec::new();
+    for j in lo..=hi.min(c.code.len().saturating_sub(1)) {
+        let line = &c.code[j];
+        if !(line.contains("pub const ") && line.contains("&str")) {
+            continue;
+        }
+        let Some(p) = line.find("pub const ") else { continue };
+        let rest = &line[p + "pub const ".len()..];
+        let Some(colon) = rest.find(':') else { continue };
+        let name = rest[..colon].trim().to_string();
+        let Some(val) = raw.get(j).and_then(|r| quoted(r)) else { continue };
+        out.push((name, val.to_string()));
+    }
+    out
+}
+
+/// Trace kind literals declared in `pub mod kind { … }`.
+fn trace_kinds(trace_src: &str) -> Option<Vec<String>> {
+    let c = clean(trace_src);
+    let start = c.code.iter().position(|l| l.contains("pub mod kind {"))?;
+    let end = block_end(&c.code, start);
+    Some(str_consts(trace_src, start + 1, end).into_iter().map(|(_, v)| v).collect())
+}
+
+/// The `KNOWN_KINDS` array literal. Anchors on the cleaned declaration
+/// line, then char-scans the raw text: skip to `=` first (the type
+/// annotation `[&str; N]` has a `[` of its own), then `[`, collect
+/// quoted strings until `]`.
+fn known_kinds(chrome_src: &str) -> Option<Vec<String>> {
+    let c = clean(chrome_src);
+    let raw: Vec<&str> = chrome_src.lines().collect();
+    let start = c
+        .code
+        .iter()
+        .position(|l| l.contains("KNOWN_KINDS") && l.contains('='))?;
+    let tail = raw.get(start..)?.join("\n");
+    let p = tail.find("KNOWN_KINDS")?;
+    let tail = &tail[p..];
+    let eq = tail.find('=')?;
+    let tail = &tail[eq..];
+    let open = tail.find('[')?;
+    let body = &tail[open..];
+    let close = body.find(']')?;
+    let body = &body[..close];
+    let mut out = Vec::new();
+    let mut rest = body;
+    while let Some(a) = rest.find('"') {
+        let after = &rest[a + 1..];
+        let Some(b) = after.find('"') else { break };
+        out.push(after[..b].to_string());
+        rest = &after[b + 1..];
+    }
+    Some(out)
+}
+
+fn finding(file: &str, message: String) -> Finding {
+    Finding::new(file, 0, "registry_sync", message)
+}
+
+pub fn check_registry(inp: &RegistryInputs) -> Vec<Finding> {
+    let mut out = Vec::new();
+
+    // -- metrics counters ↔ METRICS.json schema ↔ docs/BENCHMARKS.md -------
+    match inner_counters(inp.metrics) {
+        None => out.push(finding(F_METRICS, "cannot locate `struct Inner`".to_string())),
+        Some(counters) => {
+            for c in &counters {
+                if !inp.metricsjson.contains(&format!("\"{c}\"")) {
+                    out.push(finding(F_METRICS, format!(
+                        "counter '{c}' missing from bench/metricsjson.rs REQUIRED_NUMERIC"
+                    )));
+                }
+                if !inp.benchmarks_doc.contains(&format!("`{c}`")) {
+                    out.push(finding(F_METRICS, format!(
+                        "counter '{c}' undocumented in docs/BENCHMARKS.md"
+                    )));
+                }
+            }
+        }
+    }
+
+    // -- trace kinds ↔ chrome exporter KNOWN_KINDS --------------------------
+    let kinds = trace_kinds(inp.trace_mod).unwrap_or_default();
+    if kinds.is_empty() {
+        out.push(finding(F_TRACE, "cannot locate `pub mod kind`".to_string()));
+    }
+    let known = known_kinds(inp.chrome).unwrap_or_default();
+    if known.is_empty() {
+        out.push(finding(F_CHROME, "cannot locate KNOWN_KINDS".to_string()));
+    }
+    for k in &kinds {
+        if !known.contains(k) {
+            out.push(finding(F_TRACE, format!(
+                "trace kind '{k}' missing from trace/chrome.rs KNOWN_KINDS"
+            )));
+        }
+    }
+    for k in &known {
+        if !kinds.contains(k) {
+            out.push(finding(F_CHROME, format!(
+                "KNOWN_KINDS entry '{k}' has no constant in trace::kind"
+            )));
+        }
+    }
+
+    // -- typed error codes ↔ docs/RELIABILITY.md ----------------------------
+    for (file, src) in [(F_RELIABILITY, inp.reliability), (F_JOURNAL, inp.journal)] {
+        let last = src.lines().count().saturating_sub(1);
+        for (name, val) in str_consts(src, 0, last) {
+            if name == "SCHEMA" {
+                continue;
+            }
+            if !inp.reliability_doc.contains(&val) {
+                out.push(finding(file, format!(
+                    "error code {name} (\"{val}\") undocumented in docs/RELIABILITY.md"
+                )));
+            }
+        }
+    }
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_kinds_skips_type_annotation_bracket() {
+        let src = "pub const KNOWN_KINDS: [&str; 2] = [\n    \"a.b\", \"c.d\",\n];\n";
+        assert_eq!(known_kinds(src), Some(vec!["a.b".to_string(), "c.d".to_string()]));
+    }
+
+    #[test]
+    fn known_kinds_ignores_comment_mentions() {
+        let src = "// KNOWN_KINDS = [\"fake\"] in prose\npub const KNOWN_KINDS: [&str; 1] = [\"x.y\"];\n";
+        assert_eq!(known_kinds(src), Some(vec!["x.y".to_string()]));
+    }
+
+    #[test]
+    fn inner_counters_skip_accumulators_and_comments() {
+        let src = concat!(
+            "struct Inner {\n",
+            "    submitted: u64,\n",
+            "    // ghost: u64, (commented out)\n",
+            "    hedge_wasted_s: f64,\n",
+            "    wait: Accumulator,\n",
+            "}\n",
+        );
+        assert_eq!(inner_counters(src), Some(vec![
+            "submitted".to_string(),
+            "hedge_wasted_s".to_string(),
+        ]));
+    }
+
+    #[test]
+    fn str_consts_pull_values_from_raw_lines() {
+        let src = "pub mod kind {\n    pub const A: &str = \"x.y\"; // note\n}\n";
+        assert_eq!(trace_kinds(src), Some(vec!["x.y".to_string()]));
+    }
+}

@@ -1,0 +1,550 @@
+//! The per-file rules: `no_panic`, `lock_order` / `lock_scope`,
+//! `probe_gate`, `safety_comment`. Every rule reports [`Finding`]s that
+//! the `lint:allow(<rule>) reason` directive can suppress (see
+//! docs/ANALYSIS.md for the catalogue and the allowlist policy).
+
+use crate::engine::{depth_map, is_allowed, test_ranges, Finding};
+use crate::lexer::{clean, Cleaned};
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+// ---------------------------------------------------------------------------
+// rule: no_panic — no panic sites on coordinator/scheduler/trace hot paths
+// ---------------------------------------------------------------------------
+
+const NO_PANIC_SCOPES: &[&str] = &["coordinator/", "scheduler/", "trace/"];
+const PANIC_MACROS: &[&str] = &["panic!", "unreachable!", "todo!", "unimplemented!"];
+
+/// `mac` occurring as a macro invocation: preceded by a non-identifier
+/// char and followed by an opening delimiter.
+fn macro_invocation(line: &str, mac: &str) -> bool {
+    for (pos, _) in line.match_indices(mac) {
+        let boundary = pos == 0
+            || !line[..pos].chars().next_back().map(is_ident).unwrap_or(false);
+        let after = line[pos + mac.len()..].trim_start();
+        if boundary && matches!(after.chars().next(), Some('(' | '[' | '{')) {
+            return true;
+        }
+    }
+    false
+}
+
+fn rule_no_panic(rel: &str, c: &Cleaned, tests: &[bool], out: &mut Vec<Finding>) {
+    if !NO_PANIC_SCOPES.iter().any(|s| rel.contains(s)) {
+        return;
+    }
+    for (i, line) in c.code.iter().enumerate() {
+        if tests[i] {
+            continue;
+        }
+        let mut hits: Vec<&str> = Vec::new();
+        if line.contains(".unwrap()") {
+            hits.push("unwrap() on a hot path");
+        }
+        if line.contains(".expect(") {
+            hits.push("expect() on a hot path");
+        }
+        for mac in PANIC_MACROS {
+            if macro_invocation(line, mac) {
+                hits.push("panic-family macro on a hot path");
+            }
+        }
+        for msg in hits {
+            if !is_allowed(c, i, "no_panic") {
+                out.push(Finding::new(rel, i, "no_panic", format!(
+                    "{msg} — return a typed error, degrade gracefully, or justify \
+                     with `// lint:allow(no_panic) <reason>`"
+                )));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// rule: lock_order / lock_scope — the declared locking discipline
+// ---------------------------------------------------------------------------
+
+/// The domain table: every `Mutex`/`RwLock` acquisition in the scanned
+/// files must resolve to a named domain by its receiver expression.
+/// An acquisition that matches no entry is itself a finding — adding a
+/// lock to these modules forces a table (and docs/ANALYSIS.md) update.
+const DOMAINS: &[(&str, &[(&str, &str)])] = &[
+    ("coordinator/service.rs", &[
+        ("self.state", "state"),
+        ("self.router", "router"),
+        ("self.journal", "journal_slot"),
+    ]),
+    ("coordinator/metrics.rs", &[("self.inner", "metrics")]),
+    ("coordinator/journal.rs", &[("self.inner", "journal")]),
+    ("coordinator/client.rs", &[(".specs", "client_specs")]),
+    ("coordinator/chaos.rs", &[("slot()", "chaos")]),
+    ("coordinator/executor.rs", &[("blocks_list", "executor_blocks")]),
+    ("scheduler/queue.rs", &[("self.inner", "queue")]),
+    ("scheduler/router.rs", &[]),
+    ("trace/mod.rs", &[
+        ("registry()", "trace_registry"),
+        ("buf", "trace_buffer"),
+    ]),
+    ("util/logging.rs", &[
+        ("self.records", "logging_records"),
+        ("sink_slot()", "logging_sink"),
+    ]),
+    ("util/threadpool.rs", &[("rx", "threadpool")]),
+];
+
+/// The declared partial order: the only nestings allowed to exist.
+/// Everything else — including a domain nested under itself — is a
+/// `lock_order` violation.
+const ALLOWED_NESTINGS: &[(&str, &str)] = &[
+    // health events are counted under the router guard (one narrow
+    // metrics bump; metrics never calls back out)
+    ("router", "metrics"),
+    // the trace drain walks per-thread buffers under the registry guard
+    ("trace_registry", "trace_buffer"),
+];
+
+/// Calls that acquire a domain internally. A guard whose range contains
+/// one of these spans a call into another locking module (`lock_scope`).
+/// `home` exempts the module that *implements* the callee.
+const CALLEES: &[(&str, &str, Option<&str>)] = &[
+    ("crate::trace::instant", "trace_buffer", Some("trace/mod.rs")),
+    ("trace::instant(", "trace_buffer", Some("trace/mod.rs")),
+    ("crate::trace::span", "trace_buffer", Some("trace/mod.rs")),
+    ("trace::span(", "trace_buffer", Some("trace/mod.rs")),
+    ("trace::span_at(", "trace_buffer", Some("trace/mod.rs")),
+    ("trace::span_between(", "trace_buffer", Some("trace/mod.rs")),
+    ("trace::export", "trace_export", Some("trace/mod.rs")),
+    ("trace::drain(", "trace_export", Some("trace/mod.rs")),
+    ("self.metrics.", "metrics", Some("coordinator/metrics.rs")),
+    ("journal_record(", "journal", None),
+    ("journal_handle()", "journal_slot", Some("coordinator/service.rs")),
+    ("append(journal::Record", "journal", Some("coordinator/journal.rs")),
+    (".sync()", "journal_sync", Some("coordinator/journal.rs")),
+    ("push_meta(", "queue", Some("scheduler/queue.rs")),
+    ("pop_task(", "queue", Some("scheduler/queue.rs")),
+    (".discard(", "queue", Some("scheduler/queue.rs")),
+    ("recall_queued(", "queue", Some("scheduler/queue.rs")),
+    ("drain_remaining(", "queue", Some("scheduler/queue.rs")),
+    ("queued_weight()", "queue", Some("scheduler/queue.rs")),
+    ("oldest_wait()", "queue", Some("scheduler/queue.rs")),
+    ("q.len()", "queue", Some("scheduler/queue.rs")),
+    ("queue.len()", "queue", Some("scheduler/queue.rs")),
+    ("endpoint_label(", "state", Some("coordinator/service.rs")),
+    ("expire_task(", "state", Some("coordinator/service.rs")),
+    ("chaos::inject(", "chaos", Some("coordinator/chaos.rs")),
+    ("log_debug!", "logging_sink", Some("util/logging.rs")),
+    ("log_info!", "logging_sink", Some("util/logging.rs")),
+    ("log_warn!", "logging_sink", Some("util/logging.rs")),
+    ("log_error!", "logging_sink", Some("util/logging.rs")),
+];
+
+const ACQS: &[&str] = &[".lock_unpoisoned()", ".lock()", ".read()", ".write()"];
+
+/// The once-init lock inside static-slot helpers (`slot()`,
+/// `registry()`): held only during first-use initialization and released
+/// before the helper returns, so it never overlaps a domain guard.
+const INIT_RECEIVERS: &[&str] = &["LOCK"];
+
+struct Acq {
+    line: usize,
+    domain: &'static str,
+}
+
+fn domain_table(rel: &str) -> Option<&'static [(&'static str, &'static str)]> {
+    DOMAINS.iter().find(|(suf, _)| rel.ends_with(suf)).map(|(_, t)| *t)
+}
+
+fn find_acquisitions(
+    rel: &str,
+    c: &Cleaned,
+    tests: &[bool],
+    out: &mut Vec<Finding>,
+) -> Vec<Acq> {
+    let Some(table) = domain_table(rel) else { return Vec::new() };
+    let mut acqs = Vec::new();
+    for i in 0..c.code.len() {
+        if tests[i] {
+            continue;
+        }
+        for suf in ACQS {
+            for (pos, _) in c.code[i].match_indices(suf) {
+                // the receiver may continue from previous lines when the
+                // chain is rustfmt-broken (`self\n  .state\n  .lock…()`)
+                let mut prefix = c.code[i][..pos].to_string();
+                let mut k = i;
+                while (prefix.trim().is_empty() || prefix.trim().starts_with('.')) && k > 0 {
+                    k -= 1;
+                    prefix = format!("{}{}", c.code[k], prefix);
+                }
+                let recv: String = prefix.chars().filter(|ch| !ch.is_whitespace()).collect();
+                if INIT_RECEIVERS.iter().any(|x| recv.ends_with(x)) {
+                    continue;
+                }
+                match table.iter().find(|(pat, _)| recv.ends_with(pat)) {
+                    Some((_, dom)) => acqs.push(Acq { line: i, domain: dom }),
+                    None => {
+                        let tail: String = recv
+                            .chars()
+                            .rev()
+                            .take(40)
+                            .collect::<String>()
+                            .chars()
+                            .rev()
+                            .collect();
+                        out.push(Finding::new(rel, i, "lock_order", format!(
+                            "unregistered lock acquisition (receiver '…{tail}') — add it \
+                             to the pallas-lint domain table and docs/ANALYSIS.md"
+                        )));
+                    }
+                }
+            }
+        }
+    }
+    acqs
+}
+
+/// `let g = recv.lock…();` — a named guard binding; returns the ident.
+fn let_guard_ident(line: &str) -> Option<String> {
+    let t = line.trim();
+    let rest = t.strip_prefix("let ")?;
+    let rest = rest.strip_prefix("mut ").unwrap_or(rest);
+    let ident: String = rest.chars().take_while(|ch| is_ident(*ch)).collect();
+    if ident.is_empty() {
+        return None;
+    }
+    if !rest[ident.len()..].trim_start().starts_with('=') {
+        return None;
+    }
+    let closes_stmt = ACQS.iter().any(|s| {
+        let mut pat = String::from(*s);
+        pat.push(';');
+        t.ends_with(&pat)
+    });
+    if closes_stmt {
+        Some(ident)
+    } else {
+        None
+    }
+}
+
+/// The inclusive line range a guard acquired on `line` is considered
+/// held, by statement shape:
+/// * named guard (`let g = ….lock…();`) — until `drop(g)` or the end of
+///   the enclosing block;
+/// * `if let` / `while let` / `match` / `let … else` head — the
+///   construct's block (temporaries live for the whole construct);
+/// * expression temporary — until the statement ends.
+fn guard_range(code: &[String], depth: &[i32], line: usize) -> (usize, usize) {
+    let n = code.len();
+    if let Some(g) = let_guard_ident(&code[line]) {
+        let d0 = depth[line];
+        let needle = format!("drop({g})");
+        let mut j = line + 1;
+        while j < n {
+            if code[j].contains(&needle) {
+                return (line, j);
+            }
+            if depth[j] < d0 {
+                return (line, j - 1);
+            }
+            j += 1;
+        }
+        return (line, n - 1);
+    }
+    let t = code[line].trim();
+    if t.starts_with("if let")
+        || t.starts_with("while let")
+        || t.starts_with("match ")
+        || code[line].contains(" else {")
+    {
+        let d0 = depth[line];
+        let mut j = line + 1;
+        while j < n && depth[j] > d0 {
+            j += 1;
+        }
+        return (line, if j > line + 1 { j - 1 } else { line });
+    }
+    let mut j = line;
+    while j < n {
+        if j > line && depth[j] < depth[line] {
+            return (line, j - 1);
+        }
+        let t = code[j].trim_end();
+        if t.ends_with(';') || t.ends_with('{') || t.ends_with('}') {
+            return (line, j);
+        }
+        j += 1;
+    }
+    (line, line)
+}
+
+fn rule_lock(rel: &str, c: &Cleaned, tests: &[bool], depth: &[i32], out: &mut Vec<Finding>) {
+    let acqs = find_acquisitions(rel, c, tests, out);
+    for acq in &acqs {
+        let (start, end) = guard_range(&c.code, depth, acq.line);
+        for j in start..=end {
+            // nested acquisition inside the guard range
+            for other in acqs.iter().filter(|a| a.line == j) {
+                if j == acq.line && other.domain == acq.domain {
+                    continue;
+                }
+                if ALLOWED_NESTINGS.contains(&(acq.domain, other.domain)) {
+                    continue;
+                }
+                if is_allowed(c, j, "lock_order") {
+                    continue;
+                }
+                out.push(Finding::new(rel, j, "lock_order", format!(
+                    "acquires '{}' while holding '{}' (guard from line {}) — not in \
+                     the declared lock order",
+                    other.domain,
+                    acq.domain,
+                    acq.line + 1
+                )));
+            }
+            // call into another locking module while the guard is held;
+            // first matching pattern wins (overlapping patterns like
+            // `crate::trace::instant` / `trace::instant(` describe the
+            // same call and must yield one finding)
+            for (pat, callee_dom, home) in CALLEES {
+                if !c.code[j].contains(pat) {
+                    continue;
+                }
+                let home_exempt = home.map(|h| rel.ends_with(h)).unwrap_or(false);
+                if !home_exempt
+                    && *callee_dom != acq.domain
+                    && !ALLOWED_NESTINGS.contains(&(acq.domain, callee_dom))
+                    && !is_allowed(c, j, "lock_scope")
+                {
+                    out.push(Finding::new(rel, j, "lock_scope", format!(
+                        "'{}' guard (line {}) spans a call into '{}' ({}) — release \
+                         the guard first, or justify with `// lint:allow(lock_scope)`",
+                        acq.domain,
+                        acq.line + 1,
+                        callee_dom,
+                        pat.trim_end_matches('(')
+                    )));
+                }
+                break;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// rule: probe_gate — disabled-path gates are one relaxed atomic load
+// ---------------------------------------------------------------------------
+
+const PROBE_FNS: &[(&str, &str)] = &[
+    ("trace/mod.rs", "pub fn enabled"),
+    ("coordinator/chaos.rs", "pub fn active"),
+    ("util/logging.rs", "pub fn enabled"),
+];
+const PROBE_FORBIDDEN: &[&str] =
+    &[".lock", "format!", "to_string", "String::", "Vec::", "Box::", ".clone()"];
+
+fn rule_probe_gate(rel: &str, c: &Cleaned, tests: &[bool], out: &mut Vec<Finding>) {
+    for (suffix, sig) in PROBE_FNS {
+        if !rel.ends_with(suffix) {
+            continue;
+        }
+        let n = c.code.len();
+        for i in 0..n {
+            if tests[i] || !c.code[i].contains(sig) {
+                continue;
+            }
+            // collect the fn body: sig line through its matching close
+            let mut d = 0i32;
+            let mut opened = false;
+            let mut body: Vec<usize> = Vec::new();
+            let mut j = i;
+            while j < n {
+                let opens = c.code[j].matches('{').count() as i32;
+                let closes = c.code[j].matches('}').count() as i32;
+                d += opens - closes;
+                if opens > 0 {
+                    opened = true;
+                }
+                if j > i || opens > 0 {
+                    body.push(j);
+                }
+                if opened && d <= 0 {
+                    break;
+                }
+                j += 1;
+            }
+            let has_load = body.iter().any(|&j| c.code[j].contains("load(Ordering::Relaxed)"));
+            if !has_load && !is_allowed(c, i, "probe_gate") {
+                out.push(Finding::new(rel, i, "probe_gate", format!(
+                    "{sig}(): fast-path gate must be a single relaxed atomic load"
+                )));
+            }
+            for &j in &body {
+                for f in PROBE_FORBIDDEN {
+                    if c.code[j].contains(f) && !is_allowed(c, j, "probe_gate") {
+                        out.push(Finding::new(rel, j, "probe_gate", format!(
+                            "{sig}(): '{f}' in a fast-path gate (must be lock- and \
+                             allocation-free when disabled)"
+                        )));
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// rule: safety_comment — every `unsafe` carries a // SAFETY: justification
+// ---------------------------------------------------------------------------
+
+fn rule_safety(rel: &str, c: &Cleaned, tests: &[bool], out: &mut Vec<Finding>) {
+    for (i, line) in c.code.iter().enumerate() {
+        if tests[i] {
+            continue;
+        }
+        let has_unsafe = line.match_indices("unsafe").any(|(pos, _)| {
+            let before_ok =
+                pos == 0 || !line[..pos].chars().next_back().map(is_ident).unwrap_or(false);
+            let after_ok = !line[pos + "unsafe".len()..]
+                .chars()
+                .next()
+                .map(is_ident)
+                .unwrap_or(false);
+            before_ok && after_ok
+        });
+        if !has_unsafe {
+            continue;
+        }
+        let mut ok = c.comment[i].contains("SAFETY:");
+        let mut k = i;
+        while !ok && k > 0 && c.code[k - 1].trim().is_empty() && !c.comment[k - 1].trim().is_empty()
+        {
+            k -= 1;
+            ok = c.comment[k].contains("SAFETY:");
+        }
+        if !ok && !is_allowed(c, i, "safety_comment") {
+            out.push(Finding::new(
+                rel,
+                i,
+                "safety_comment",
+                "unsafe without a preceding // SAFETY: justification".to_string(),
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// entry point
+// ---------------------------------------------------------------------------
+
+/// Lint one file's source. `rel` is the repo-relative path (it selects
+/// the per-file rule scopes and domain tables).
+pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
+    let c = clean(src);
+    let tests = test_ranges(&c.code);
+    let depth = depth_map(&c.code);
+    let mut out = Vec::new();
+    rule_no_panic(rel, &c, &tests, &mut out);
+    rule_lock(rel, &c, &tests, &depth, &mut out);
+    rule_probe_gate(rel, &c, &tests, &mut out);
+    rule_safety(rel, &c, &tests, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unwrap_or_else_is_not_a_panic_site() {
+        let f = lint_source("coordinator/x.rs", "fn f(v: Option<u32>) -> u32 {\n    v.unwrap_or_else(|| 0)\n}\n");
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn expect_err_is_not_expect() {
+        let f = lint_source("coordinator/x.rs", "fn f() {\n    let _ = r().expect_err;\n}\n");
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn debug_assert_is_not_panic_macro() {
+        let f = lint_source(
+            "coordinator/x.rs",
+            "fn f() {\n    debug_assert!(true);\n    assert!(true);\n}\n",
+        );
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn util_files_are_out_of_no_panic_scope() {
+        let f = lint_source("util/x.rs", "fn f(v: Option<u32>) -> u32 {\n    v.unwrap()\n}\n");
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn multiline_lock_chain_resolves_receiver() {
+        let src = concat!(
+            "impl Service {\n",
+            "    fn f(&self) -> usize {\n",
+            "        let n = self\n",
+            "            .state\n",
+            "            .lock_unpoisoned()\n",
+            "            .len();\n",
+            "        n\n",
+            "    }\n",
+            "}\n",
+        );
+        let f = lint_source("coordinator/service.rs", src);
+        assert!(f.is_empty(), "chain receiver must resolve to 'state': {f:?}");
+    }
+
+    #[test]
+    fn unknown_receiver_is_flagged() {
+        let src = "impl S {\n    fn f(&self) {\n        let g = self.mystery.lock_unpoisoned();\n        drop(g);\n    }\n}\n";
+        let f = lint_source("coordinator/service.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "lock_order");
+        assert!(f[0].message.contains("unregistered"), "{}", f[0].message);
+    }
+
+    #[test]
+    fn double_acquire_same_domain_is_flagged() {
+        let src = concat!(
+            "impl Service {\n",
+            "    fn f(&self) {\n",
+            "        let a = self.state.lock_unpoisoned();\n",
+            "        let b = self.state.lock_unpoisoned();\n",
+            "        drop(b);\n",
+            "        drop(a);\n",
+            "    }\n",
+            "}\n",
+        );
+        let f = lint_source("coordinator/service.rs", src);
+        assert!(
+            f.iter().any(|x| x.rule == "lock_order" && x.line == 4),
+            "self-deadlock must be flagged: {f:?}"
+        );
+    }
+
+    #[test]
+    fn scoped_block_guard_does_not_leak_into_tail() {
+        // the brace-scoped guard drops at the block close; the trace call
+        // after it is clean
+        let src = concat!(
+            "impl Service {\n",
+            "    fn f(&self) {\n",
+            "        let d = {\n",
+            "            let g = self.router.lock_unpoisoned();\n",
+            "            g.decide()\n",
+            "        };\n",
+            "        crate::trace::instant(crate::trace::kind::ROUTE_DECIDE, None, \"t\", d);\n",
+            "    }\n",
+            "}\n",
+        );
+        let f = lint_source("coordinator/service.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+    }
+}

@@ -1,0 +1,85 @@
+//! Self-test over the seeded-violation fixture corpus: every rule fires
+//! exactly once at the seeded line, the allowlisted and clean shapes stay
+//! silent — then the real tree must lint clean, so `cargo test -p
+//! pallas-lint` alone enforces the invariants.
+
+use pallas_lint::registry::{check_registry, RegistryInputs};
+use pallas_lint::rules::lint_source;
+use pallas_lint::Finding;
+use std::path::Path;
+
+/// Assert exactly one finding of `rule` at 1-based `line`.
+fn assert_single(findings: &[Finding], rule: &str, line: usize) {
+    assert_eq!(
+        findings.len(),
+        1,
+        "expected exactly one finding, got: {findings:?}"
+    );
+    assert_eq!(findings[0].rule, rule, "{findings:?}");
+    assert_eq!(findings[0].line, line, "{findings:?}");
+}
+
+#[test]
+fn no_panic_fires_once_allowlist_and_tests_exempt() {
+    let f = lint_source("coordinator/service.rs", include_str!("fixtures/no_panic.rs"));
+    assert_single(&f, "no_panic", 6);
+}
+
+#[test]
+fn lock_scope_fires_once_on_guard_spanning_trace_call() {
+    let f = lint_source("coordinator/service.rs", include_str!("fixtures/lock_scope.rs"));
+    assert_single(&f, "lock_scope", 14);
+}
+
+#[test]
+fn lock_order_fires_once_on_inverted_nesting() {
+    let f = lint_source("coordinator/service.rs", include_str!("fixtures/lock_order.rs"));
+    assert_single(&f, "lock_order", 16);
+}
+
+#[test]
+fn probe_gate_fires_once_on_allocating_gate() {
+    let f = lint_source("trace/mod.rs", include_str!("fixtures/probe_gate.rs"));
+    assert_single(&f, "probe_gate", 5);
+}
+
+#[test]
+fn safety_comment_fires_once_on_undocumented_unsafe() {
+    let f = lint_source("runtime/fixture.rs", include_str!("fixtures/safety_comment.rs"));
+    assert_single(&f, "safety_comment", 7);
+}
+
+#[test]
+fn registry_sync_flags_all_four_seeded_drifts() {
+    let f = check_registry(&RegistryInputs {
+        metrics: include_str!("fixtures/registry/metrics.rs"),
+        metricsjson: include_str!("fixtures/registry/metricsjson.rs"),
+        benchmarks_doc: include_str!("fixtures/registry/BENCHMARKS.md"),
+        trace_mod: include_str!("fixtures/registry/trace_mod.rs"),
+        chrome: include_str!("fixtures/registry/chrome.rs"),
+        reliability: include_str!("fixtures/registry/reliability.rs"),
+        journal: "",
+        reliability_doc: include_str!("fixtures/registry/RELIABILITY.md"),
+    });
+    assert_eq!(f.len(), 4, "{f:?}");
+    let has = |needle: &str| f.iter().any(|x| x.message.contains(needle));
+    assert!(has("'bogus_counter' missing from bench/metricsjson.rs"), "{f:?}");
+    assert!(has("'bogus_counter' undocumented in docs/BENCHMARKS.md"), "{f:?}");
+    assert!(has("'ghost.kind' missing from trace/chrome.rs KNOWN_KINDS"), "{f:?}");
+    assert!(has("LOST_IN_SPACE (\"lost in space\") undocumented"), "{f:?}");
+}
+
+#[test]
+fn real_tree_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let findings = pallas_lint::lint_tree(&root).expect("repo tree readable");
+    assert!(
+        findings.is_empty(),
+        "the tree must lint clean; findings:\n{}",
+        findings
+            .iter()
+            .map(|f| format!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.message))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}

@@ -1,0 +1,28 @@
+//! pallas-lint fixture: `lock_order`. Linted under the
+//! `coordinator/service.rs` domain table; the seeded nesting acquires
+//! `router` while holding `state`, which the declared partial order
+//! forbids. The `router -> metrics` nesting is part of the declared
+//! order and must stay clean.
+
+impl Service {
+    fn ordered_ok(&self) {
+        let mut guard = self.router.lock_unpoisoned();
+        self.metrics.task_routed(true, false);
+        drop(guard);
+    }
+
+    fn inverted(&self) {
+        let mut g = self.state.lock_unpoisoned();
+        let r = self.router.lock_unpoisoned();
+        drop(r);
+        drop(g);
+    }
+
+    fn inverted_allowed(&self) {
+        let mut g = self.state.lock_unpoisoned();
+        // lint:allow(lock_order) fixture: documents the suppression path
+        let r = self.router.lock_unpoisoned();
+        drop(r);
+        drop(g);
+    }
+}

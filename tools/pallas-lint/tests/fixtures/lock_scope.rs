@@ -1,0 +1,24 @@
+//! pallas-lint fixture: `lock_scope`. Linted under the
+//! `coordinator/service.rs` domain table; the seeded guard spans a call
+//! into the trace hub, the other two shapes must stay clean.
+
+impl Service {
+    fn scope_ok(&self) {
+        let g = self.state.lock_unpoisoned();
+        drop(g);
+        crate::trace::instant(crate::trace::kind::TASK_SUBMIT, None, "t", String::new());
+    }
+
+    fn scope_bad(&self) {
+        let g = self.state.lock_unpoisoned();
+        crate::trace::instant(crate::trace::kind::TASK_SUBMIT, None, "t", String::new());
+        drop(g);
+    }
+
+    fn scope_allowed(&self) {
+        let g = self.state.lock_unpoisoned();
+        // lint:allow(lock_scope) fixture: documents the suppression path
+        crate::trace::instant(crate::trace::kind::TASK_SUBMIT, None, "t", String::new());
+        drop(g);
+    }
+}

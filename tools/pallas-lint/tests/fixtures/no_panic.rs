@@ -1,0 +1,28 @@
+//! pallas-lint fixture: `no_panic`. Linted as a hot-path file
+//! (`coordinator/…`); exactly one seeded violation must fire, the
+//! allowlisted site and the test module must not.
+
+pub fn hot(v: Option<u32>) -> u32 {
+    v.unwrap() // seeded violation: panic site on the hot path
+}
+
+pub fn justified(v: Option<u32>) -> u32 {
+    // lint:allow(no_panic) fixture: documents the suppression path
+    v.expect("fixture invariant")
+}
+
+pub fn graceful(v: Option<u32>) -> u32 {
+    // unwrap_or / unwrap_or_else must NOT match the unwrap() pattern
+    v.unwrap_or_else(|| 0)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_is_exempt() {
+        assert_eq!(super::hot(Some(1)), 1);
+        Option::<u32>::Some(2).unwrap();
+        Option::<u32>::Some(3).expect("tests may panic freely");
+        panic!("and even this is fine in a test");
+    }
+}

@@ -1,0 +1,7 @@
+//! pallas-lint fixture: `probe_gate`. Linted as `trace/mod.rs`; the gate
+//! allocates on the disabled fast path — exactly one seeded violation.
+
+pub fn enabled() -> bool {
+    let label = format!("gate");
+    ENABLED.load(Ordering::Relaxed) && !label.is_empty()
+}

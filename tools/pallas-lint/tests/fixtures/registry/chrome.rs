@@ -1,0 +1,5 @@
+// pallas-lint fixture: the exporter registry knows `task.submit` only.
+
+pub const KNOWN_KINDS: [&str; 1] = [
+    "task.submit",
+];

@@ -1,0 +1,8 @@
+// pallas-lint fixture: registry_sync — `bogus_counter` exists on the hub
+// but is neither exported by metricsjson.rs nor documented.
+
+struct Inner {
+    submitted: u64,
+    bogus_counter: u64,
+    wait: Accumulator,
+}

@@ -1,0 +1,4 @@
+// pallas-lint fixture: the exported schema knows `submitted` only —
+// `bogus_counter` is missing, which registry_sync must flag.
+
+const REQUIRED_NUMERIC: [&str; 1] = ["submitted"];

@@ -1,0 +1,6 @@
+// pallas-lint fixture: `LOST_IN_SPACE` is a typed error code whose
+// literal string never made it into the reliability docs.
+
+pub const SCHEMA: &str = "fixture/schema/v1";
+pub const DEADLINE_EXCEEDED: &str = "deadline exceeded";
+pub const LOST_IN_SPACE: &str = "lost in space";

@@ -1,0 +1,7 @@
+// pallas-lint fixture: `ghost.kind` is emitted by the hub but absent
+// from the exporter's KNOWN_KINDS registry.
+
+pub mod kind {
+    pub const TASK_SUBMIT: &str = "task.submit";
+    pub const GHOST: &str = "ghost.kind";
+}

@@ -1,0 +1,17 @@
+//! pallas-lint fixture: `safety_comment`. One seeded `unsafe` without a
+//! `// SAFETY:` justification; the documented and allowlisted impls must
+//! stay clean.
+
+struct Raw(*mut u8);
+
+unsafe impl Send for Raw {}
+
+struct Documented(*mut u8);
+
+// SAFETY: fixture — the pointer is owned by one thread and never shared.
+unsafe impl Send for Documented {}
+
+struct Suppressed(*mut u8);
+
+// lint:allow(safety_comment) fixture: documents the suppression path
+unsafe impl Send for Suppressed {}
