@@ -7,6 +7,13 @@
 //! machine-readable `BENCH_fit.json` (schema `pyhf-faas/bench_fit/v1`) so
 //! the perf trajectory is tracked across PRs.
 //!
+//! Each class also gets the microkernel **ladder** — NLL evaluations/sec
+//! at `seed -> fused (scalar tier) -> simd (detected tier) ->
+//! batched-simd (8-patch blocked sweep)` — recorded in the report's
+//! `*_nll_evals_per_s` fields with the tier name in `kernel_tier`.
+//! Outside `--quick`, a wide vector tier (avx2/neon) must beat the
+//! scalar-tier fused sweep.
+//!
 //! When compiled PJRT artifacts are present, the tensorized-vs-scalar
 //! comparison of the paper's §2.1 is reported too; without them the bench
 //! still runs fully (the seed required `make artifacts` and panicked
@@ -18,7 +25,8 @@ use std::path::PathBuf;
 
 use pyhf_faas::bench::fitjson::{ClassBench, FitBenchReport};
 use pyhf_faas::bench::harness::Bencher;
-use pyhf_faas::fitter::{hypotest_toys, BaselineFitter, Centers, NativeFitter};
+use pyhf_faas::fitter::simd::{self, Tier};
+use pyhf_faas::fitter::{hypotest_toys, nll_batch, BaselineFitter, Centers, NativeFitter, NllBatch};
 use pyhf_faas::histfactory::dense::{self, builtin_class, DenseModel, ShapeClass};
 use pyhf_faas::histfactory::spec::Workspace;
 use pyhf_faas::pallet::{generate, library};
@@ -79,15 +87,42 @@ fn main() {
         let fitter = NativeFitter::new(&model);
         let centers = Centers::nominal(&model);
         let theta = fitter.init_theta(1.0);
-        let r_nll = bench.run(
+        let baseline = BaselineFitter::new(&model);
+
+        // microkernel ladder: seed -> fused (scalar tier) -> simd (the
+        // tier runtime detection picked, or PYHF_FAAS_KERNEL_TIER forced)
+        // -> batched-simd (blocked multi-patch sweep, per-patch rate)
+        let best = simd::active();
+        let r_seed_nll = bench.run(
+            &format!("  nll/seed/{name}"),
+            || baseline.nll(&theta, &model.data, &centers),
+        );
+        simd::force(Tier::Scalar).expect("scalar tier is always supported");
+        let r_fused_nll = bench.run(
             &format!("  nll/fused/{name}"),
             || fitter.nll(&theta, &model.data, &centers),
         );
+        simd::force(best).expect("restoring the detected tier");
+        let r_simd_nll = bench.run(
+            &format!("  nll/simd-{}/{name}", best.name()),
+            || fitter.nll(&theta, &model.data, &centers),
+        );
+        let batch_k = 8;
+        let b_models: Vec<&DenseModel> = vec![&model; batch_k];
+        let b_thetas: Vec<&[f64]> = vec![&theta[..]; batch_k];
+        let b_datas: Vec<&[f64]> = vec![&model.data[..]; batch_k];
+        let b_centers: Vec<&Centers> = vec![&centers; batch_k];
+        let mut b_ws = NllBatch::for_class(&model.class, batch_k);
+        let mut b_out = vec![0.0; batch_k];
+        let r_batch = bench.run(&format!("  nll/batched-x{batch_k}/{name}"), || {
+            nll_batch(&b_models, &b_thetas, &b_datas, &b_centers, &mut b_ws, &mut b_out);
+            b_out[0]
+        });
+
         let r_fit = bench.run(
             &format!("  fit_free/fused/{name}"),
             || fitter.fit_free(&model.data, &centers),
         );
-        let baseline = BaselineFitter::new(&model);
         let r_base = bench.run(
             &format!("  fit_free/seed/{name}"),
             || baseline.fit_free(&model.data, &centers),
@@ -132,34 +167,68 @@ fn main() {
         }
 
         let wall_s = t_class.elapsed().as_secs_f64();
+        let seed_nll_evals_per_s = 1.0 / r_seed_nll.summary.mean.max(1e-12);
+        let fused_nll_evals_per_s = 1.0 / r_fused_nll.summary.mean.max(1e-12);
+        let simd_nll_evals_per_s = 1.0 / r_simd_nll.summary.mean.max(1e-12);
+        let batched_nll_evals_per_s = batch_k as f64 / r_batch.summary.mean.max(1e-12);
+        println!(
+            "  -> nll ladder: seed {seed_nll_evals_per_s:.0} | fused {fused_nll_evals_per_s:.0} \
+             | simd({}) {simd_nll_evals_per_s:.0} | batched {batched_nll_evals_per_s:.0} evals/s",
+            best.name()
+        );
         report.classes.push(ClassBench {
             class: name.to_string(),
-            nll_evals_per_s: 1.0 / r_nll.summary.mean.max(1e-12),
+            nll_evals_per_s: 1.0 / r_simd_nll.summary.mean.max(1e-12),
             fits_per_s,
             toys_per_s,
             baseline_fits_per_s,
             speedup,
             wall_s,
+            seed_nll_evals_per_s,
+            fused_nll_evals_per_s,
+            simd_nll_evals_per_s,
+            batched_nll_evals_per_s,
+            kernel_tier: best.name().to_string(),
         });
 
-        // hard assertion outside quick mode: the fused scratch-reuse path
-        // must beat the seed kernel on full-fit throughput
+        // hard assertions outside quick mode: the fused scratch-reuse path
+        // must beat the seed kernel on full-fit throughput, and a wide
+        // vector tier must beat the scalar-tier fused sweep on NLL
+        // throughput (skipped when detection landed on scalar/sse2 — the
+        // 2-lane rungs trade blows with scalar on tiny classes)
         if !quick {
             assert!(
                 fits_per_s > baseline_fits_per_s,
                 "fused kernel slower than seed for class {name}: {fits_per_s:.1} vs \
                  {baseline_fits_per_s:.1} fits/s"
             );
+            if matches!(best, Tier::Avx2 | Tier::Neon) {
+                assert!(
+                    simd_nll_evals_per_s > fused_nll_evals_per_s,
+                    "{} tier slower than scalar fused for class {name}: \
+                     {simd_nll_evals_per_s:.0} vs {fused_nll_evals_per_s:.0} nll evals/s",
+                    best.name()
+                );
+            }
         }
         println!();
     }
 
     report.write(&out_path).expect("write BENCH_fit.json");
-    println!("summary (fused vs seed full-fit throughput):");
+    println!("summary (fused vs seed full-fit throughput; nll ladder per class):");
     for c in &report.classes {
         println!(
-            "  {:<12} {:>9.1} fits/s vs {:>9.1} seed ({:.2}x) | {:>11.0} nll evals/s",
-            c.class, c.fits_per_s, c.baseline_fits_per_s, c.speedup, c.nll_evals_per_s
+            "  {:<12} {:>9.1} fits/s vs {:>9.1} seed ({:.2}x) | nll seed {:>9.0} -> fused \
+             {:>9.0} -> simd[{}] {:>9.0} -> batched {:>9.0} /s",
+            c.class,
+            c.fits_per_s,
+            c.baseline_fits_per_s,
+            c.speedup,
+            c.seed_nll_evals_per_s,
+            c.fused_nll_evals_per_s,
+            c.kernel_tier,
+            c.simd_nll_evals_per_s,
+            c.batched_nll_evals_per_s,
         );
     }
     println!("\nwrote {}", out_path.display());

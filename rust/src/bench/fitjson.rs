@@ -28,9 +28,38 @@ pub struct ClassBench {
     pub speedup: f64,
     /// wall time spent benchmarking this class
     pub wall_s: f64,
+    /// microkernel ladder, NLL evaluations per second at each rung:
+    /// seed (baseline fitter) -> fused (scalar tier) -> simd (best
+    /// detected tier) -> batched-simd (blocked multi-patch sweep,
+    /// per-patch rate)
+    pub seed_nll_evals_per_s: f64,
+    pub fused_nll_evals_per_s: f64,
+    pub simd_nll_evals_per_s: f64,
+    pub batched_nll_evals_per_s: f64,
+    /// the tier the `simd`/`batched` rungs ran on ("scalar" when the
+    /// producer did not measure the ladder)
+    pub kernel_tier: String,
 }
 
 impl ClassBench {
+    /// A ladder-less row (scan producer): ladder rungs 0.0, tier "scalar".
+    pub fn unmeasured(class: String) -> ClassBench {
+        ClassBench {
+            class,
+            nll_evals_per_s: 0.0,
+            fits_per_s: 0.0,
+            toys_per_s: 0.0,
+            baseline_fits_per_s: 0.0,
+            speedup: 0.0,
+            wall_s: 0.0,
+            seed_nll_evals_per_s: 0.0,
+            fused_nll_evals_per_s: 0.0,
+            simd_nll_evals_per_s: 0.0,
+            batched_nll_evals_per_s: 0.0,
+            kernel_tier: "scalar".to_string(),
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("class", Json::str(self.class.clone())),
@@ -40,6 +69,11 @@ impl ClassBench {
             ("baseline_fits_per_s", Json::num(self.baseline_fits_per_s)),
             ("speedup", Json::num(self.speedup)),
             ("wall_s", Json::num(self.wall_s)),
+            ("seed_nll_evals_per_s", Json::num(self.seed_nll_evals_per_s)),
+            ("fused_nll_evals_per_s", Json::num(self.fused_nll_evals_per_s)),
+            ("simd_nll_evals_per_s", Json::num(self.simd_nll_evals_per_s)),
+            ("batched_nll_evals_per_s", Json::num(self.batched_nll_evals_per_s)),
+            ("kernel_tier", Json::str(self.kernel_tier.clone())),
         ])
     }
 }
@@ -125,6 +159,10 @@ pub fn validate(doc: &Json) -> Result<(), String> {
             "baseline_fits_per_s",
             "speedup",
             "wall_s",
+            "seed_nll_evals_per_s",
+            "fused_nll_evals_per_s",
+            "simd_nll_evals_per_s",
+            "batched_nll_evals_per_s",
         ] {
             let v = c
                 .get(key)
@@ -134,6 +172,9 @@ pub fn validate(doc: &Json) -> Result<(), String> {
                 return Err(format!("classes[{i}].{key}: bad value {v}"));
             }
         }
+        c.get("kernel_tier")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| format!("classes[{i}]: missing string 'kernel_tier'"))?;
     }
     Ok(())
 }
@@ -152,6 +193,11 @@ mod tests {
             baseline_fits_per_s: 400.0,
             speedup: 2.5,
             wall_s: 1.2,
+            seed_nll_evals_per_s: 2e5,
+            fused_nll_evals_per_s: 8e5,
+            simd_nll_evals_per_s: 1e6,
+            batched_nll_evals_per_s: 1.3e6,
+            kernel_tier: "avx2".into(),
         });
         r
     }
@@ -182,6 +228,18 @@ mod tests {
         .unwrap();
         let err = validate(&doc).unwrap_err();
         assert!(err.contains("nll_evals_per_s"), "{err}");
+        // a full ladder row without its tier label is rejected too
+        let doc = json::parse(
+            r#"{"schema": "pyhf-faas/bench_fit/v1", "source": "x",
+                "commit": "c", "quick": true, "classes": [{"class": "q",
+                "nll_evals_per_s": 1, "fits_per_s": 1, "toys_per_s": 1,
+                "baseline_fits_per_s": 1, "speedup": 1, "wall_s": 1,
+                "seed_nll_evals_per_s": 1, "fused_nll_evals_per_s": 1,
+                "simd_nll_evals_per_s": 1, "batched_nll_evals_per_s": 1}]}"#,
+        )
+        .unwrap();
+        let err = validate(&doc).unwrap_err();
+        assert!(err.contains("kernel_tier"), "{err}");
     }
 
     #[test]

@@ -22,7 +22,8 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::coordinator::service::{Handler, WorkerContext, WorkerInit};
-use crate::fitter::FitScratch;
+use crate::fitter::native::Centers;
+use crate::fitter::{nll_batch, FitScratch, NllBatch};
 use crate::histfactory::dense::{self, DenseModel};
 use crate::histfactory::spec::Workspace;
 use crate::runtime::engine::{native_hypotest, Compiled, Engine};
@@ -34,6 +35,7 @@ const ENGINE_KEY: &str = "fitops.engine";
 const MANIFEST_KEY: &str = "fitops.manifest";
 const CACHE_KEY: &str = "fitops.compiled";
 const SCRATCH_KEY: &str = "fitops.scratch";
+const BATCH_KEY: &str = "fitops.nllbatch";
 
 /// Bound on per-worker warm state (compiled executables / fit scratch
 /// workspaces), LRU-evicted beyond this. Sized to match
@@ -195,13 +197,149 @@ pub fn native_fit_handler() -> Handler {
     })
 }
 
-/// Worker init for the native handler: manifest (for class selection) plus
-/// the bounded per-class scratch cache — no PJRT engine needed.
+/// The batch-aware native fit handler. Single-patch payloads take the
+/// exact [`native_fit_handler`] path. A batcher envelope
+/// (`{"batch": [...]}`) of same-class patches is served natively instead
+/// of through `scheduler::batcher::batched_handler`'s generic loop: the
+/// worker takes the class scratch from its LRU **once** per envelope,
+/// primes the sweep with one batched multi-patch NLL evaluation
+/// ([`fitter::nll_batch`](crate::fitter::nll_batch) — every patch's row
+/// tiles stream through cache as one blocked pass), then runs the
+/// per-patch hypotests back-to-back on that shared warm scratch. The
+/// result envelope — `{"results": [{"ok": ...} | {"error": ...}]}` — is
+/// byte-compatible with `batched_handler`'s, so `BatchPlan::unpack` and
+/// the interchange's `result_proves_warm` probe keep working unchanged.
+pub fn native_batch_fit_handler() -> Handler {
+    let single = native_fit_handler();
+    Arc::new(move |payload: &Json, ctx: &mut WorkerContext| {
+        let entries = match payload.get("batch").and_then(|b| b.as_arr()) {
+            None => return single(payload, ctx),
+            Some(entries) => entries,
+        };
+        // Parse every entry up front; a malformed entry becomes a
+        // per-entry error without failing its batch-mates.
+        let parsed: Vec<Result<(String, Vec<f64>, DenseModel), String>> =
+            entries.iter().map(|e| parse_payload(e, ctx)).collect();
+
+        // The batcher only builds same-class envelopes; a hand-built mixed
+        // envelope falls back to entry-at-a-time handling.
+        let mut class_name: Option<String> = None;
+        let mut same_class = true;
+        for (_, _, m) in parsed.iter().flatten() {
+            match &class_name {
+                None => class_name = Some(m.class.name.clone()),
+                Some(c) => same_class &= *c == m.class.name,
+            }
+        }
+        if !same_class {
+            let mut results = Vec::with_capacity(entries.len());
+            for e in entries {
+                results.push(match single(e, ctx) {
+                    Ok(v) => Json::obj(vec![("ok", v)]),
+                    Err(msg) => Json::obj(vec![("error", Json::str(msg))]),
+                });
+            }
+            return Ok(Json::obj(vec![("results", Json::Arr(results))]));
+        }
+
+        let mut scratch = match &class_name {
+            None => FitScratch::default(), // every entry failed to parse
+            Some(c) => {
+                let cache = ctx
+                    .get_mut::<ScratchCache>(SCRATCH_KEY)
+                    .ok_or("worker missing scratch cache")?;
+                cache.lru.take(c.as_str()).unwrap_or_default()
+            }
+        };
+
+        // Batched warm-up sweep: all patches' NLLs at their init points as
+        // one blocked pass, reusing the worker's persistent NllBatch
+        // workspace (allocation-free once sized for the class).
+        let models: Vec<&DenseModel> = parsed.iter().flatten().map(|(_, _, m)| m).collect();
+        if models.len() > 1 {
+            let thetas: Vec<Vec<f64>> = models
+                .iter()
+                .map(|m| {
+                    let (f_, a_, b_) = (m.class.n_free, m.class.n_alpha, m.class.n_bins);
+                    let mut th = vec![1.0; f_ + a_ + b_];
+                    th[f_..f_ + a_].fill(0.0);
+                    th
+                })
+                .collect();
+            let centers: Vec<Centers> = models.iter().map(|m| Centers::nominal(m)).collect();
+            let theta_refs: Vec<&[f64]> = thetas.iter().map(|t| t.as_slice()).collect();
+            let data_refs: Vec<&[f64]> = models.iter().map(|m| m.data.as_slice()).collect();
+            let center_refs: Vec<&Centers> = centers.iter().collect();
+            let mut warm_nll = vec![0.0; models.len()];
+            match ctx.get_mut::<NllBatch>(BATCH_KEY) {
+                Some(ws) => {
+                    nll_batch(&models, &theta_refs, &data_refs, &center_refs, ws, &mut warm_nll)
+                }
+                None => {
+                    let mut ws = NllBatch::default();
+                    nll_batch(&models, &theta_refs, &data_refs, &center_refs, &mut ws, &mut warm_nll)
+                }
+            }
+        }
+        drop(models);
+
+        let mut results = Vec::with_capacity(entries.len());
+        for pr in parsed {
+            match pr {
+                Err(msg) => results.push(Json::obj(vec![("error", Json::str(msg))])),
+                Ok((patch, values, model)) => {
+                    scratch.reset_phase_timers();
+                    let t0 = Instant::now();
+                    let out = native_hypotest(&model, &mut scratch, 1.0);
+                    let fit_seconds = t0.elapsed().as_secs_f64();
+                    if crate::trace::enabled() {
+                        let task = crate::trace::current_task();
+                        let fit_t0_us = crate::trace::us_since_epoch(t0);
+                        let sweep_us = scratch.sweep_ns / 1_000;
+                        let solve_us = scratch.solve_ns / 1_000;
+                        crate::trace::span_at(
+                            crate::trace::kind::KERNEL_SWEEP,
+                            fit_t0_us,
+                            sweep_us,
+                            task,
+                            &ctx.worker_name,
+                            format!("class {}", model.class.name),
+                        );
+                        crate::trace::span_at(
+                            crate::trace::kind::KERNEL_SOLVE,
+                            fit_t0_us + sweep_us,
+                            solve_us,
+                            task,
+                            &ctx.worker_name,
+                            format!("class {}", model.class.name),
+                        );
+                    }
+                    results.push(Json::obj(vec![(
+                        "ok",
+                        out.to_point(&patch, values, fit_seconds).to_json(),
+                    )]));
+                }
+            }
+        }
+        if let Some(c) = class_name {
+            let cache = ctx
+                .get_mut::<ScratchCache>(SCRATCH_KEY)
+                .ok_or("worker missing scratch cache")?;
+            cache.lru.put(c, scratch);
+        }
+        Ok(Json::obj(vec![("results", Json::Arr(results))]))
+    })
+}
+
+/// Worker init for the native handler: manifest (for class selection), the
+/// bounded per-class scratch cache, and the persistent batched-NLL
+/// workspace — no PJRT engine needed.
 pub fn native_worker_init(artifact_dir: PathBuf) -> WorkerInit {
     Arc::new(move |ctx: &mut WorkerContext| {
         let manifest = Manifest::load(&artifact_dir).map_err(|e| e.to_string())?;
         ctx.insert(MANIFEST_KEY, manifest);
         ctx.insert(SCRATCH_KEY, ScratchCache { lru: LruCache::new(WARM_CAPACITY) });
+        ctx.insert(BATCH_KEY, NllBatch::default());
         Ok(())
     })
 }

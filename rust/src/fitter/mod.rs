@@ -5,9 +5,11 @@
 pub mod baseline;
 pub mod native;
 pub mod scratch;
+pub mod simd;
 pub mod toys;
 
 pub use baseline::BaselineFitter;
 pub use native::{Centers, FitResult, Hypotest, NativeFitter};
 pub use scratch::FitScratch;
+pub use simd::{nll_batch, NllBatch, Tier};
 pub use toys::{hypotest_toys, ToyResult};

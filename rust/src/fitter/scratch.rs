@@ -18,22 +18,21 @@
 //!   n_active_bins` (and the active free/alpha slots) using the counts
 //!   recorded by `DenseModel`, skipping padding entirely — a padded and a
 //!   compact layout of the same workspace evaluate **bit-identically**;
-//! * flat row-major, FMA-friendly inner loops in the style of the gemm
-//!   scalar microkernels: per-sample alpha interpolation is an axpy over a
-//!   contiguous bin tile (`ShapeClass::bin_block`) with `mul_add`
-//!   accumulation, and equal-length slice windows let the compiler elide
-//!   bounds checks in the kernel body;
-//! * a reduced Newton solve: the gradient/Fisher system is assembled only
-//!   over the non-fixed parameters (gamma rows are diagonal in the bin
-//!   index, so the gamma block is filled in O(params x bins) instead of
-//!   O(params^2 x bins)), and the damped Cholesky factors in-place in the
-//!   scratch.
+//! * SIMD microkernel tiers: the inner loops live as tier-generic `Pack`
+//!   kernels in [`crate::fitter::simd`] (scalar, SSE2, AVX2+FMA, NEON),
+//!   selected once per process by runtime detection and differentially
+//!   tested against `fitter::baseline` in `tests/kernel_equiv.rs`;
+//! * a reduced Newton solve exploiting the **arrowhead** structure of the
+//!   Fisher system: the gamma block is diagonal in the bin index, so a
+//!   gammas-first block factorization costs O(G + G·D² + D³) instead of
+//!   the dense O((D+G)³) — see `simd::kernels::solve_body`.
 
-use crate::fitter::native::{Centers, EPS_RATE, FREE_LO, GAMMA_LO};
+use crate::fitter::native::{Centers, FREE_LO, GAMMA_LO};
+use crate::fitter::simd;
 use crate::histfactory::dense::{DenseModel, ShapeClass};
 
 /// Sentinel for "parameter not in the active (non-fixed) set".
-const INACTIVE: usize = usize::MAX;
+pub(crate) const INACTIVE: usize = usize::MAX;
 
 /// Reusable fit workspace sized for one shape class. `Default` builds an
 /// empty scratch; [`FitScratch::ensure`] (re)sizes it for a class, which
@@ -55,21 +54,23 @@ pub struct FitScratch {
     pub(crate) jac: Vec<f64>,       // (F+A) x B row-major (dense-param rows)
     pub(crate) jac_gamma: Vec<f64>, // B (gamma rows are diagonal in b)
     // per-sample-row working tiles
-    rate: Vec<f64>,   // B: nominal + additive interpolation
-    gam_row: Vec<f64>, // B: per-bin gamma factor
-    cg_row: Vec<f64>,  // B: mult * gam, zeroed where the rate clipped
-    nur: Vec<f64>,     // B: this row's contribution to nu
+    pub(crate) rate: Vec<f64>,    // B: nominal + additive interpolation
+    pub(crate) gam_row: Vec<f64>, // B: per-bin gamma factor
+    pub(crate) cg_row: Vec<f64>,  // B: mult * gam, zeroed where the rate clipped
+    pub(crate) nur: Vec<f64>,     // B: this row's contribution to nu
     // assembled Newton system over the active parameter set
-    pub(crate) grad: Vec<f64>, // P (full layout; fixed entries stay 0)
-    act: Vec<usize>,           // active param indices: dense first, then gamma
-    pos: Vec<usize>,           // param index -> reduced index (or INACTIVE)
-    n_act_dense: usize,
-    fisher_r: Vec<f64>, // n_act^2 (capacity P^2)
-    chol: Vec<f64>,     // n_act^2 in-place Cholesky workspace
-    sol: Vec<f64>,      // n_act
-    scaled: Vec<f64>,   // B: w-scaled Jacobian row
-    resid: Vec<f64>,    // B
-    w: Vec<f64>,        // B
+    pub(crate) grad: Vec<f64>,      // P (full layout; fixed entries stay 0)
+    pub(crate) act: Vec<usize>,     // active param indices: dense first, then gamma
+    pub(crate) pos: Vec<usize>,     // param index -> reduced index (or INACTIVE)
+    pub(crate) n_act_dense: usize,
+    pub(crate) fisher_r: Vec<f64>, // n_act^2 (capacity P^2)
+    pub(crate) chol: Vec<f64>,     // dense Schur factor workspace (capacity P^2)
+    pub(crate) sol: Vec<f64>,      // n_act
+    pub(crate) gdiag: Vec<f64>,    // B: sqrt of the damped gamma diagonal
+    pub(crate) border: Vec<f64>,   // (F+A) x B: scaled dense-gamma border
+    pub(crate) scaled: Vec<f64>,   // B: w-scaled Jacobian row
+    pub(crate) resid: Vec<f64>,    // B
+    pub(crate) w: Vec<f64>,        // B
     pub(crate) step: Vec<f64>,      // P
     pub(crate) theta_try: Vec<f64>, // P
     // parameter box (depends only on the class)
@@ -131,6 +132,8 @@ impl FitScratch {
         self.fisher_r = vec![0.0; p_ * p_];
         self.chol = vec![0.0; p_ * p_];
         self.sol = vec![0.0; p_];
+        self.gdiag = vec![0.0; b_];
+        self.border = vec![0.0; (f_ + a_) * b_];
         self.scaled = vec![0.0; b_];
         self.resid = vec![0.0; b_];
         self.w = vec![0.0; b_];
@@ -185,198 +188,30 @@ impl FitScratch {
     }
 }
 
-/// Fill the effective (masked) parameters from `theta`.
-fn effective_into(m: &DenseModel, s: &mut FitScratch, theta: &[f64]) {
-    let (f_, a_, b_) = (m.class.n_free, m.class.n_alpha, m.class.n_bins);
-    for f in 0..f_ {
-        s.phi[f] = if m.free_mask[f] > 0.0 { theta[f] } else { 1.0 };
-    }
-    for a in 0..a_ {
-        s.alpha[a] = theta[f_ + a] * m.alpha_mask[a];
-    }
-    for b in 0..b_ {
-        s.gamma[b] = if m.ctype[b] > 0.0 { theta[f_ + a_ + b] } else { 1.0 };
-    }
-}
-
 /// Fused expected-rates (+ optional Jacobian) evaluation over the active
-/// region only. Fills `s.nu` (and `s.jac`/`s.jac_gamma` when `with_jac`).
+/// region only, on the active SIMD tier. Fills `s.nu` (and
+/// `s.jac`/`s.jac_gamma` when `with_jac`).
 ///
 /// Exactly the math of `python/compile/kernels/ref.py`, restructured so
 /// the alpha interpolation and every Jacobian row accumulate as contiguous
-/// axpy sweeps over `bin_block`-sized tiles.
+/// axpy sweeps over `bin_block`-sized tiles — see
+/// `simd::kernels::eval_expected_body` for the tier-generic body.
 pub(crate) fn eval_expected(m: &DenseModel, s: &mut FitScratch, theta: &[f64], with_jac: bool) {
     let t0 = if crate::trace::enabled() {
         Some(std::time::Instant::now())
     } else {
         None
     };
-    eval_expected_inner(m, s, theta, with_jac);
+    simd::eval_expected(m, s, theta, with_jac);
     if let Some(t0) = t0 {
         s.sweep_ns += t0.elapsed().as_nanos() as u64;
-    }
-}
-
-fn eval_expected_inner(m: &DenseModel, s: &mut FitScratch, theta: &[f64], with_jac: bool) {
-    effective_into(m, s, theta);
-    let c = &m.class;
-    let (b_, a_, f_) = (c.n_bins, c.n_alpha, c.n_free);
-    let ba = m.n_active_bins;
-    let rows = m.n_active_rows;
-    let aa = m.n_active_alpha;
-    let fa = m.n_active_free;
-    let block = c.bin_block.max(1);
-
-    s.nu.fill(0.0);
-    if with_jac {
-        // only the active dense rows are accumulated below; zero exactly
-        // those (plus the gamma diagonal)
-        for f in 0..fa {
-            s.jac[f * b_..f * b_ + ba].fill(0.0);
-        }
-        for a in 0..aa {
-            let r = (f_ + a) * b_;
-            s.jac[r..r + ba].fill(0.0);
-        }
-        s.jac_gamma[..ba].fill(0.0);
-    }
-
-    for srow in 0..rows {
-        // row-constant multiplicative norm factor (normsys/lumi + free
-        // norms), over active slots only
-        let lnup_row = &m.norm_lnup[srow * a_..srow * a_ + aa];
-        let lndn_row = &m.norm_lndn[srow * a_..srow * a_ + aa];
-        let mut lnmult = 0.0;
-        for a in 0..aa {
-            let al = s.alpha[a];
-            lnmult += if al >= 0.0 { al * lnup_row[a] } else { -al * lndn_row[a] };
-        }
-        let fmap_row = &m.free_map[srow * f_..srow * f_ + fa];
-        for f in 0..fa {
-            let e = fmap_row[f];
-            if e != 0.0 {
-                lnmult += e * s.phi[f].max(FREE_LO).ln();
-            }
-        }
-        let mult = lnmult.exp();
-
-        let mut b0 = 0usize;
-        while b0 < ba {
-            let nb = block.min(ba - b0);
-
-            // rate <- nominal + sum_a alpha * histo_side (axpy per alpha)
-            s.rate[b0..b0 + nb]
-                .copy_from_slice(&m.nominal[srow * b_ + b0..srow * b_ + b0 + nb]);
-            for a in 0..aa {
-                let al = s.alpha[a];
-                if al == 0.0 {
-                    continue;
-                }
-                let off = (srow * a_ + a) * b_ + b0;
-                let side = if al >= 0.0 {
-                    &m.histo_up[off..off + nb]
-                } else {
-                    &m.histo_dn[off..off + nb]
-                };
-                let rate = &mut s.rate[b0..b0 + nb];
-                for i in 0..nb {
-                    rate[i] = al.mul_add(side[i], rate[i]);
-                }
-            }
-
-            // clip, gamma factor, this row's rate contribution
-            {
-                let gmask = &m.gamma_mask[srow * b_ + b0..srow * b_ + b0 + nb];
-                for i in 0..nb {
-                    let b = b0 + i;
-                    let raw = s.rate[b];
-                    let base = raw.max(EPS_RATE);
-                    let gam = gmask[i].mul_add(s.gamma[b] - 1.0, 1.0);
-                    s.gam_row[b] = gam;
-                    s.cg_row[b] = if raw > EPS_RATE { mult * gam } else { 0.0 };
-                    let nu_sb = base * mult * gam;
-                    s.nur[b] = nu_sb;
-                    s.nu[b] += nu_sb;
-                }
-            }
-
-            if with_jac {
-                // free-norm rows: d nu / d phi_f = nu_sb * e / phi_f
-                for f in 0..fa {
-                    let e = fmap_row[f];
-                    if e == 0.0 || m.free_mask[f] == 0.0 {
-                        continue;
-                    }
-                    let cphi = e / s.phi[f].max(FREE_LO);
-                    let row = &mut s.jac[f * b_ + b0..f * b_ + b0 + nb];
-                    let nur = &s.nur[b0..b0 + nb];
-                    for i in 0..nb {
-                        row[i] = cphi.mul_add(nur[i], row[i]);
-                    }
-                }
-                // alpha rows: additive (histosys, clipped with the rate)
-                // plus multiplicative (normsys) pieces
-                for a in 0..aa {
-                    if m.alpha_mask[a] == 0.0 {
-                        continue;
-                    }
-                    let al = s.alpha[a];
-                    let off = (srow * a_ + a) * b_ + b0;
-                    let (side, dlnf) = if al >= 0.0 {
-                        (&m.histo_up[off..off + nb], lnup_row[a])
-                    } else {
-                        (&m.histo_dn[off..off + nb], -lndn_row[a])
-                    };
-                    let joff = (f_ + a) * b_ + b0;
-                    let row = &mut s.jac[joff..joff + nb];
-                    let nur = &s.nur[b0..b0 + nb];
-                    let cg = &s.cg_row[b0..b0 + nb];
-                    for i in 0..nb {
-                        row[i] += side[i] * cg[i] + nur[i] * dlnf;
-                    }
-                }
-                // gamma rows are diagonal in b
-                let gmask = &m.gamma_mask[srow * b_ + b0..srow * b_ + b0 + nb];
-                for i in 0..nb {
-                    let b = b0 + i;
-                    if m.ctype[b] > 0.0 && gmask[i] > 0.0 {
-                        s.jac_gamma[b] += s.nur[b] * gmask[i] / s.gam_row[b];
-                    }
-                }
-            }
-            b0 += nb;
-        }
     }
 }
 
 /// Poisson + constraint NLL from the rates already in `s.nu` (and the
 /// effective parameters from the same evaluation).
 pub(crate) fn nll_from_rates(m: &DenseModel, s: &FitScratch, data: &[f64], centers: &Centers) -> f64 {
-    let ba = m.n_active_bins;
-    let aa = m.n_active_alpha;
-    let mut out = 0.0;
-    for b in 0..ba {
-        if m.bin_mask[b] == 0.0 {
-            continue;
-        }
-        let v = s.nu[b].max(EPS_RATE);
-        out += v - data[b] * v.ln();
-    }
-    for a in 0..aa {
-        out += 0.5 * m.alpha_mask[a] * (s.alpha[a] - centers.alpha[a]).powi(2);
-    }
-    for b in 0..ba {
-        match m.ctype[b] as i64 {
-            1 => out += 0.5 * m.cscale[b] * (s.gamma[b] - centers.gamma[b]).powi(2),
-            2 => {
-                let taug = (m.cscale[b] * s.gamma[b]).max(1e-300);
-                let aux = m.cscale[b] * centers.gamma[b];
-                out += taug - aux * taug.ln();
-            }
-            _ => {}
-        }
-    }
-    out
+    simd::kernels::nll_terms(m, &s.nu, &s.alpha, &s.gamma, data, centers)
 }
 
 /// Full NLL at `theta` (rates-only evaluation: no Jacobian work).
@@ -420,8 +255,9 @@ pub(crate) fn build_active(m: &DenseModel, s: &mut FitScratch, fixed: &[bool]) {
     }
 }
 
-/// Gradient + expected-information (Fisher) system over the active set.
-/// Requires `eval_expected(..., true)` for the same `theta` to have run.
+/// Gradient + expected-information (Fisher) system over the active set,
+/// on the active SIMD tier. Requires `eval_expected(..., true)` for the
+/// same `theta` to have run.
 ///
 /// The full-layout gradient lands in `s.grad` (fixed entries zero); the
 /// reduced Fisher matrix lands in `s.fisher_r`. Gamma Jacobian rows are
@@ -433,95 +269,12 @@ pub(crate) fn grad_fisher_reduced(
     data: &[f64],
     centers: &Centers,
 ) {
-    let (f_, a_, b_) = (m.class.n_free, m.class.n_alpha, m.class.n_bins);
-    let ba = m.n_active_bins;
-    let n = s.act.len();
-    let nd = s.n_act_dense;
-
-    for b in 0..ba {
-        if m.bin_mask[b] == 0.0 {
-            s.resid[b] = 0.0;
-            s.w[b] = 0.0;
-        } else {
-            let v = s.nu[b].max(EPS_RATE);
-            s.resid[b] = 1.0 - data[b] / v;
-            s.w[b] = 1.0 / v;
-        }
-    }
-
-    s.grad.fill(0.0);
-    s.fisher_r[..n * n].fill(0.0);
-
-    // dense rows: gradient, dense-dense block, dense-gamma border
-    for i in 0..nd {
-        let p = s.act[i];
-        let joff = p * b_; // p < F + A, so this indexes a dense jac row
-        let mut g = 0.0;
-        for b in 0..ba {
-            let jpb = s.jac[joff + b];
-            g = jpb.mul_add(s.resid[b], g);
-            s.scaled[b] = jpb * s.w[b];
-        }
-        s.grad[p] = g;
-        for j in i..nd {
-            let qoff = s.act[j] * b_;
-            let mut h = 0.0;
-            for b in 0..ba {
-                h = s.scaled[b].mul_add(s.jac[qoff + b], h);
-            }
-            s.fisher_r[i * n + j] = h;
-            s.fisher_r[j * n + i] = h;
-        }
-        for j in nd..n {
-            let bg = s.act[j] - f_ - a_;
-            let h = s.scaled[bg] * s.jac_gamma[bg];
-            s.fisher_r[i * n + j] = h;
-            s.fisher_r[j * n + i] = h;
-        }
-    }
-    // gamma rows: gradient + diagonal block
-    for j in nd..n {
-        let p = s.act[j];
-        let bg = p - f_ - a_;
-        s.grad[p] = s.jac_gamma[bg] * s.resid[bg];
-        s.fisher_r[j * n + j] = s.jac_gamma[bg] * s.jac_gamma[bg] * s.w[bg];
-    }
-
-    // constraint terms; only non-fixed parameters enter the system (the
-    // seed pinned fixed rows to zero-grad/identity after the fact)
-    for a in 0..m.n_active_alpha {
-        let p = f_ + a;
-        let k = s.pos[p];
-        if k == INACTIVE {
-            continue;
-        }
-        s.grad[p] += m.alpha_mask[a] * (s.alpha[a] - centers.alpha[a]);
-        s.fisher_r[k * n + k] += m.alpha_mask[a];
-    }
-    for b in 0..m.n_active_bins {
-        let p = f_ + a_ + b;
-        let k = s.pos[p];
-        if k == INACTIVE {
-            continue;
-        }
-        match m.ctype[b] as i64 {
-            1 => {
-                s.grad[p] += m.cscale[b] * (s.gamma[b] - centers.gamma[b]);
-                s.fisher_r[k * n + k] += m.cscale[b];
-            }
-            2 => {
-                let aux = m.cscale[b] * centers.gamma[b];
-                let gs = s.gamma[b].max(GAMMA_LO);
-                s.grad[p] += m.cscale[b] - aux / gs;
-                s.fisher_r[k * n + k] += aux / (gs * gs);
-            }
-            _ => {}
-        }
-    }
+    simd::grad_fisher(m, s, data, centers);
 }
 
-/// Solve `(F + lam * diag(F)) step = grad` over the active set with an
-/// in-place Cholesky in the scratch; the step is scattered into `s.step`
+/// Solve `(F + lam * diag(F)) step = grad` over the active set with the
+/// in-place arrowhead Cholesky (gammas-first block order; see
+/// `simd::kernels::solve_body`); the step is scattered into `s.step`
 /// (zero for fixed parameters). Returns false when the damped system is
 /// not positive definite (caller escalates the damping).
 pub(crate) fn solve_step(s: &mut FitScratch, n_params: usize, lam: f64) -> bool {
@@ -530,58 +283,11 @@ pub(crate) fn solve_step(s: &mut FitScratch, n_params: usize, lam: f64) -> bool 
     } else {
         None
     };
-    let ok = solve_step_inner(s, n_params, lam);
+    let ok = simd::solve(s, n_params, lam);
     if let Some(t0) = t0 {
         s.solve_ns += t0.elapsed().as_nanos() as u64;
     }
     ok
-}
-
-fn solve_step_inner(s: &mut FitScratch, n_params: usize, lam: f64) -> bool {
-    let n = s.act.len();
-    s.chol[..n * n].copy_from_slice(&s.fisher_r[..n * n]);
-    for k in 0..n {
-        let d = s.fisher_r[k * n + k].max(1e-8);
-        s.chol[k * n + k] += lam * d;
-    }
-    // in-place lower Cholesky factorization
-    for i in 0..n {
-        for j in 0..=i {
-            let mut sum = s.chol[i * n + j];
-            for k in 0..j {
-                sum -= s.chol[i * n + k] * s.chol[j * n + k];
-            }
-            if i == j {
-                if sum <= 0.0 {
-                    return false;
-                }
-                s.chol[i * n + i] = sum.sqrt();
-            } else {
-                s.chol[i * n + j] = sum / s.chol[j * n + j];
-            }
-        }
-    }
-    // forward: L y = g (y overwrites sol)
-    for i in 0..n {
-        let mut sum = s.grad[s.act[i]];
-        for k in 0..i {
-            sum -= s.chol[i * n + k] * s.sol[k];
-        }
-        s.sol[i] = sum / s.chol[i * n + i];
-    }
-    // backward: L^T x = y (x overwrites sol in place)
-    for i in (0..n).rev() {
-        let mut sum = s.sol[i];
-        for k in i + 1..n {
-            sum -= s.chol[k * n + i] * s.sol[k];
-        }
-        s.sol[i] = sum / s.chol[i * n + i];
-    }
-    s.step[..n_params].fill(0.0);
-    for i in 0..n {
-        s.step[s.act[i]] = s.sol[i];
-    }
-    true
 }
 
 #[cfg(test)]
@@ -613,6 +319,8 @@ mod tests {
         assert_eq!(s.jac.len(), (2 + 2) * 8);
         assert_eq!(s.grad.len(), c.n_params());
         assert_eq!(s.lo.len(), c.n_params());
+        assert_eq!(s.gdiag.len(), 8);
+        assert_eq!(s.border.len(), (2 + 2) * 8);
         let ptr = s.nu.as_ptr();
         s.ensure(&c);
         // same class: no reallocation
@@ -626,8 +334,10 @@ mod tests {
 
     #[test]
     fn solve_step_matches_dense_cholesky() {
-        // solve a small SPD system through the reduced path and compare
-        // against the legacy dense solver
+        // solve an arrowhead SPD system (dense 2x2 block, dense-gamma
+        // border, diagonal gamma block — the structure grad_fisher_reduced
+        // actually produces) through the blocked path and compare against
+        // the legacy dense solver
         let c = class(4, 1, 1, 1);
         let mut s = FitScratch::for_class(&c);
         // active set = all params (pretend nothing is fixed)
@@ -635,17 +345,29 @@ mod tests {
         s.act = (0..p_).collect();
         s.pos = (0..p_).collect();
         s.n_act_dense = 2;
-        // SPD matrix a a^T + 2 I
         let n = p_;
+        let nd = 2;
         let mut spd = vec![0.0; n * n];
-        for i in 0..n {
-            for j in 0..n {
+        // dense block: a a^T + 2 I
+        for i in 0..nd {
+            for j in 0..nd {
                 let mut v = if i == j { 2.0 } else { 0.0 };
                 for k in 0..n {
                     v += ((i * k) as f64).cos() * ((j * k) as f64).cos();
                 }
                 spd[i * n + j] = v;
             }
+        }
+        // border: small dense-gamma couplings; gamma block: diagonal only
+        for i in 0..nd {
+            for g in 0..n - nd {
+                let v = 0.3 * ((i + 2 * g) as f64).sin();
+                spd[i * n + nd + g] = v;
+                spd[(nd + g) * n + i] = v;
+            }
+        }
+        for g in 0..n - nd {
+            spd[(nd + g) * n + nd + g] = 5.0 + g as f64;
         }
         s.fisher_r[..n * n].copy_from_slice(&spd);
         for (i, g) in s.grad.iter_mut().enumerate() {
@@ -659,6 +381,12 @@ mod tests {
                 r += spd[i * n + j] * s.step[j];
             }
             assert!((r - (i as f64 + 1.0)).abs() < 1e-9, "row {i}: {r}");
+        }
+        // cross-check against the legacy allocating dense solver
+        let g: Vec<f64> = (0..n).map(|i| i as f64 + 1.0).collect();
+        let x = crate::fitter::native::cholesky_solve(&spd, &g, n).unwrap();
+        for i in 0..n {
+            assert!((x[i] - s.step[i]).abs() < 1e-9, "param {i}: {} vs {}", x[i], s.step[i]);
         }
     }
 
@@ -674,5 +402,26 @@ mod tests {
         s.grad[0] = 1.0;
         s.grad[1] = 1.0;
         assert!(!solve_step(&mut s, 3, 0.0));
+    }
+
+    #[test]
+    fn solve_step_rejects_nonpositive_gamma_diagonal() {
+        // the gamma head of the arrowhead must reject a non-PD diagonal
+        // just like the dense factorization did
+        let c = class(2, 1, 1, 1);
+        let mut s = FitScratch::for_class(&c);
+        let p_ = c.n_params(); // 1 free + 1 alpha + 2 gammas
+        s.act = (0..p_).collect();
+        s.pos = (0..p_).collect();
+        s.n_act_dense = 2;
+        let n = p_;
+        for i in 0..n {
+            s.fisher_r[i * n + i] = 1.0;
+        }
+        s.fisher_r[3 * n + 3] = -0.5; // gamma diagonal goes indefinite
+        for (i, g) in s.grad.iter_mut().enumerate() {
+            *g = i as f64 + 1.0;
+        }
+        assert!(!solve_step(&mut s, p_, 0.0));
     }
 }

@@ -1,0 +1,130 @@
+//! AVX2+FMA tier: 4 f64 lanes with hardware fused multiply-add. The wide
+//! tier the detector picks on modern x86-64; element-wise sweeps remain
+//! bitwise-identical to scalar because VFMADD has `f64::mul_add` semantics.
+
+use std::arch::x86_64::*;
+
+use super::batch::{nll_batch_body, NllBatch};
+use super::kernels;
+use super::Pack;
+use crate::fitter::native::Centers;
+use crate::fitter::scratch::FitScratch;
+use crate::histfactory::dense::DenseModel;
+
+pub(crate) struct Avx2;
+
+// SAFETY: every op is a single AVX/AVX2/FMA intrinsic; the dispatch layer
+// only selects this tier after runtime detection (or a supported()-checked
+// force) confirmed avx2+fma, and load/store rely on the caller-guaranteed
+// pointer validity from the Pack contract.
+unsafe impl Pack for Avx2 {
+    const LANES: usize = 4;
+    type V = __m256d;
+
+    #[inline(always)]
+    // SAFETY: single AVX register intrinsic, no memory access
+    unsafe fn splat(x: f64) -> __m256d {
+        _mm256_set1_pd(x)
+    }
+
+    #[inline(always)]
+    // SAFETY: caller guarantees `p` is valid for 4 consecutive f64 reads
+    unsafe fn load(p: *const f64) -> __m256d {
+        _mm256_loadu_pd(p)
+    }
+
+    #[inline(always)]
+    // SAFETY: caller guarantees `p` is valid for 4 consecutive f64 writes
+    unsafe fn store(p: *mut f64, v: __m256d) {
+        _mm256_storeu_pd(p, v)
+    }
+
+    #[inline(always)]
+    // SAFETY: single AVX register intrinsic, no memory access
+    unsafe fn add(a: __m256d, b: __m256d) -> __m256d {
+        _mm256_add_pd(a, b)
+    }
+
+    #[inline(always)]
+    // SAFETY: single AVX register intrinsic, no memory access
+    unsafe fn sub(a: __m256d, b: __m256d) -> __m256d {
+        _mm256_sub_pd(a, b)
+    }
+
+    #[inline(always)]
+    // SAFETY: single AVX register intrinsic, no memory access
+    unsafe fn mul(a: __m256d, b: __m256d) -> __m256d {
+        _mm256_mul_pd(a, b)
+    }
+
+    #[inline(always)]
+    // SAFETY: single FMA register intrinsic; VFMADD is fused with
+    // f64::mul_add semantics, keeping element-wise sweeps bitwise-scalar
+    unsafe fn mul_add(a: __m256d, b: __m256d, c: __m256d) -> __m256d {
+        _mm256_fmadd_pd(a, b, c)
+    }
+
+    #[inline(always)]
+    // SAFETY: single AVX register intrinsic; VMAXPD returns b when a is
+    // NaN, matching f64::max for the non-NaN b the kernels pass
+    unsafe fn max(a: __m256d, b: __m256d) -> __m256d {
+        _mm256_max_pd(a, b)
+    }
+
+    #[inline(always)]
+    // SAFETY: single AVX register intrinsic; ordered quiet GT predicate —
+    // NaN compares false, like the scalar `>` in the remainder loops
+    unsafe fn gt(a: __m256d, b: __m256d) -> __m256d {
+        _mm256_cmp_pd::<_CMP_GT_OQ>(a, b)
+    }
+
+    #[inline(always)]
+    // SAFETY: single AVX register intrinsic, no memory access
+    unsafe fn and(a: __m256d, b: __m256d) -> __m256d {
+        _mm256_and_pd(a, b)
+    }
+
+    #[inline(always)]
+    // SAFETY: register-only AVX lane extraction; the (l0+l1)+(h0+h1) order
+    // is fixed, keeping reductions bitwise-reproducible within the tier
+    unsafe fn reduce_sum(v: __m256d) -> f64 {
+        let lo = _mm256_castpd256_pd128(v);
+        let hi = _mm256_extractf128_pd::<1>(v);
+        let l0 = _mm_cvtsd_f64(lo);
+        let l1 = _mm_cvtsd_f64(_mm_unpackhi_pd(lo, lo));
+        let h0 = _mm_cvtsd_f64(hi);
+        let h1 = _mm_cvtsd_f64(_mm_unpackhi_pd(hi, hi));
+        (l0 + l1) + (h0 + h1)
+    }
+}
+
+#[target_feature(enable = "avx2,fma")]
+// SAFETY: caller has verified avx2+fma on this CPU before dispatching
+pub(crate) unsafe fn eval_expected(m: &DenseModel, s: &mut FitScratch, theta: &[f64], with_jac: bool) {
+    kernels::eval_expected_body::<Avx2>(m, s, theta, with_jac)
+}
+
+#[target_feature(enable = "avx2,fma")]
+// SAFETY: caller has verified avx2+fma on this CPU before dispatching
+pub(crate) unsafe fn grad_fisher(m: &DenseModel, s: &mut FitScratch, data: &[f64], centers: &Centers) {
+    kernels::grad_fisher_body::<Avx2>(m, s, data, centers)
+}
+
+#[target_feature(enable = "avx2,fma")]
+// SAFETY: caller has verified avx2+fma on this CPU before dispatching
+pub(crate) unsafe fn solve(s: &mut FitScratch, n_params: usize, lam: f64) -> bool {
+    kernels::solve_body::<Avx2>(s, n_params, lam)
+}
+
+#[target_feature(enable = "avx2,fma")]
+// SAFETY: caller has verified avx2+fma on this CPU before dispatching
+pub(crate) unsafe fn nll_batch(
+    models: &[&DenseModel],
+    thetas: &[&[f64]],
+    datas: &[&[f64]],
+    centers: &[&Centers],
+    ws: &mut NllBatch,
+    out: &mut [f64],
+) {
+    nll_batch_body::<Avx2>(models, thetas, datas, centers, ws, out)
+}

@@ -1,0 +1,211 @@
+//! Batched multi-patch NLL: evaluate `k` same-class patches as one
+//! blocked sweep. The scheduler's batcher already groups same-class
+//! patches into one envelope, so a warm worker can stream every patch's
+//! row tiles through cache back-to-back instead of restarting the sweep
+//! per patch.
+//!
+//! The batch interleaves **whole sample rows** across patches (`for row {
+//! for patch { … } }`) using each patch's own active counts and the exact
+//! per-row helpers of the sequential path (`row_lnmult`, `row_rates`,
+//! `nll_terms`), so no per-patch arithmetic changes: the batched NLL of
+//! patch `p` is bitwise-equal to `scratch::nll` on patch `p` alone —
+//! asserted by `tests/kernel_equiv.rs`.
+
+use super::kernels;
+use super::{Pack, Tier};
+use crate::fitter::native::Centers;
+use crate::histfactory::dense::{DenseModel, ShapeClass};
+use crate::fitter::scratch::FitScratch;
+
+/// Reusable workspace for a batched NLL sweep over up to `k` same-class
+/// models: per-patch effective parameters and rate accumulators, plus one
+/// set of shared row tiles. Sized once via [`NllBatch::ensure`]; reuse is
+/// allocation-free (audited in `tests/alloc_audit.rs`).
+#[derive(Debug, Default)]
+pub struct NllBatch {
+    k: usize,
+    n_bins: usize,
+    n_alpha: usize,
+    n_free: usize,
+    // per-patch effective parameters + accumulated rates (k x dim)
+    phi: Vec<f64>,
+    alpha: Vec<f64>,
+    gamma: Vec<f64>,
+    nu: Vec<f64>,
+    // shared row tiles, reused for every (row, patch) pair
+    rate: Vec<f64>,
+    gam_row: Vec<f64>,
+    cg_row: Vec<f64>,
+    nur: Vec<f64>,
+}
+
+impl NllBatch {
+    /// Workspace pre-sized for `k` patches of `class`.
+    pub fn for_class(class: &ShapeClass, k: usize) -> NllBatch {
+        let mut b = NllBatch::default();
+        b.ensure(class, k);
+        b
+    }
+
+    /// (Re)size for `k` patches of `class`. No-op — and allocation-free —
+    /// when the workspace already holds at least `k` patches of the same
+    /// dimensions.
+    pub fn ensure(&mut self, class: &ShapeClass, k: usize) {
+        if self.k >= k
+            && self.n_bins == class.n_bins
+            && self.n_alpha == class.n_alpha
+            && self.n_free == class.n_free
+        {
+            return;
+        }
+        let (b_, a_, f_) = (class.n_bins, class.n_alpha, class.n_free);
+        let k = k.max(self.k).max(1);
+        self.k = k;
+        self.n_bins = b_;
+        self.n_alpha = a_;
+        self.n_free = f_;
+        self.phi = vec![0.0; k * f_];
+        self.alpha = vec![0.0; k * a_];
+        self.gamma = vec![0.0; k * b_];
+        self.nu = vec![0.0; k * b_];
+        self.rate = vec![0.0; b_];
+        self.gam_row = vec![0.0; b_];
+        self.cg_row = vec![0.0; b_];
+        self.nur = vec![0.0; b_];
+    }
+}
+
+/// Batched NLL over `k` same-class patches: `out[p]` receives the NLL of
+/// `models[p]` at `thetas[p]` against `datas[p]`/`centers[p]`. Dispatches
+/// on the active tier; panics if the models' class dimensions disagree
+/// (the batcher only builds same-class envelopes).
+pub fn nll_batch(
+    models: &[&DenseModel],
+    thetas: &[&[f64]],
+    datas: &[&[f64]],
+    centers: &[&Centers],
+    ws: &mut NllBatch,
+    out: &mut [f64],
+) {
+    let k = models.len();
+    assert!(
+        thetas.len() == k && datas.len() == k && centers.len() == k && out.len() >= k,
+        "nll_batch: mismatched batch arity"
+    );
+    if k == 0 {
+        return;
+    }
+    let c = &models[0].class;
+    for m in models {
+        assert!(
+            m.class.n_bins == c.n_bins
+                && m.class.n_alpha == c.n_alpha
+                && m.class.n_free == c.n_free,
+            "nll_batch: models span different shape classes"
+        );
+    }
+    ws.ensure(c, k);
+    match super::active() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 is only ever stored after detection (or a
+        // supported()-checked force) confirmed avx2+fma on this CPU
+        Tier::Avx2 => unsafe { super::avx2::nll_batch(models, thetas, datas, centers, ws, out) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: SSE2 is part of the x86-64 baseline feature set
+        Tier::Sse2 => unsafe { super::sse2::nll_batch(models, thetas, datas, centers, ws, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: Neon is only ever stored after detection confirmed it
+        Tier::Neon => unsafe { super::neon::nll_batch(models, thetas, datas, centers, ws, out) },
+        // SAFETY: the scalar body performs only in-bounds slice accesses;
+        // unsafe is inherited from the shared Pack kernel signature
+        _ => unsafe { super::scalar::nll_batch(models, thetas, datas, centers, ws, out) },
+    }
+}
+
+/// Convenience sequential reference: evaluate each patch alone through the
+/// regular fused path into `out`. Used by benches and the differential
+/// harness as the comparison point for the batched sweep.
+pub fn nll_sequential(
+    models: &[&DenseModel],
+    thetas: &[&[f64]],
+    datas: &[&[f64]],
+    centers: &[&Centers],
+    s: &mut FitScratch,
+    out: &mut [f64],
+) {
+    for (p, m) in models.iter().enumerate() {
+        s.ensure(&m.class);
+        out[p] = crate::fitter::scratch::nll(m, s, thetas[p], datas[p], centers[p]);
+    }
+}
+
+/// Tier-generic batched body: row-level interleaving across patches with
+/// per-patch parameters and the shared row tiles.
+#[inline(always)]
+// SAFETY: all slice windows are in-bounds (ensure sized the workspace for
+// k patches of this class); caller guarantees P's ISA is available
+pub(crate) unsafe fn nll_batch_body<P: Pack>(
+    models: &[&DenseModel],
+    thetas: &[&[f64]],
+    datas: &[&[f64]],
+    centers: &[&Centers],
+    ws: &mut NllBatch,
+    out: &mut [f64],
+) {
+    let k = models.len();
+    let c = &models[0].class;
+    let (b_, a_, f_) = (c.n_bins, c.n_alpha, c.n_free);
+    for p in 0..k {
+        kernels::effective_into(
+            models[p],
+            &mut ws.phi[p * f_..(p + 1) * f_],
+            &mut ws.alpha[p * a_..(p + 1) * a_],
+            &mut ws.gamma[p * b_..(p + 1) * b_],
+            thetas[p],
+        );
+        ws.nu[p * b_..(p + 1) * b_].fill(0.0);
+    }
+    let max_rows = models.iter().map(|m| m.n_active_rows).max().unwrap_or(0);
+    for srow in 0..max_rows {
+        for (p, &m) in models.iter().enumerate() {
+            if srow >= m.n_active_rows {
+                continue;
+            }
+            let aa = m.n_active_alpha;
+            let fa = m.n_active_free;
+            let lnup_row = &m.norm_lnup[srow * a_..srow * a_ + aa];
+            let lndn_row = &m.norm_lndn[srow * a_..srow * a_ + aa];
+            let fmap_row = &m.free_map[srow * f_..srow * f_ + fa];
+            let mult = kernels::row_lnmult(
+                &ws.alpha[p * a_..p * a_ + aa],
+                &ws.phi[p * f_..(p + 1) * f_],
+                lnup_row,
+                lndn_row,
+                fmap_row,
+            )
+            .exp();
+            kernels::row_rates::<P>(
+                m,
+                srow,
+                mult,
+                &ws.alpha[p * a_..(p + 1) * a_],
+                &ws.gamma[p * b_..(p + 1) * b_],
+                &mut ws.rate,
+                &mut ws.gam_row,
+                &mut ws.cg_row,
+                &mut ws.nur,
+                &mut ws.nu[p * b_..(p + 1) * b_],
+            );
+        }
+    }
+    for p in 0..k {
+        out[p] = kernels::nll_terms(
+            models[p],
+            &ws.nu[p * b_..(p + 1) * b_],
+            &ws.alpha[p * a_..(p + 1) * a_],
+            &ws.gamma[p * b_..(p + 1) * b_],
+            datas[p],
+            centers[p],
+        );
+    }
+}

@@ -1,0 +1,635 @@
+//! Tier-generic kernel bodies: the fused rates+Jacobian sweep, the
+//! gradient/Fisher assembly and the arrowhead Newton solve, written once
+//! against the [`Pack`] vocabulary and monomorphized per tier behind the
+//! `#[target_feature]` wrappers in the sibling tier modules.
+//!
+//! Everything here is `#[inline(always)]` so each monomorphization
+//! collapses into its wrapper — LLVM only inlines feature-gated intrinsics
+//! into functions that carry the same target feature.
+//!
+//! The op sequences are the scalar fused kernel's, verbatim: element-wise
+//! tiles (axpy, clip, Jacobian rows) vectorize lane-by-lane with identical
+//! per-element arithmetic, so they are bitwise tier-independent; the
+//! deliberate exceptions that stay scalar in every tier are documented at
+//! their sites (gamma-diagonal accumulation, residual/weight division,
+//! Poisson/constraint terms).
+
+use super::Pack;
+use crate::fitter::native::{Centers, EPS_RATE, FREE_LO, GAMMA_LO};
+use crate::fitter::scratch::{FitScratch, INACTIVE};
+use crate::histfactory::dense::DenseModel;
+
+/// Fill the effective (masked) parameter slices from `theta`.
+#[inline(always)]
+pub(crate) fn effective_into(
+    m: &DenseModel,
+    phi: &mut [f64],
+    alpha: &mut [f64],
+    gamma: &mut [f64],
+    theta: &[f64],
+) {
+    let (f_, a_, b_) = (m.class.n_free, m.class.n_alpha, m.class.n_bins);
+    for f in 0..f_ {
+        phi[f] = if m.free_mask[f] > 0.0 { theta[f] } else { 1.0 };
+    }
+    for a in 0..a_ {
+        alpha[a] = theta[f_ + a] * m.alpha_mask[a];
+    }
+    for b in 0..b_ {
+        gamma[b] = if m.ctype[b] > 0.0 { theta[f_ + a_ + b] } else { 1.0 };
+    }
+}
+
+/// Row-constant log of the multiplicative norm factor (normsys/lumi over
+/// the active alpha slots + free norms). Scalar in every tier.
+#[inline(always)]
+pub(crate) fn row_lnmult(
+    alpha: &[f64],
+    phi: &[f64],
+    lnup_row: &[f64],
+    lndn_row: &[f64],
+    fmap_row: &[f64],
+) -> f64 {
+    let mut lnmult = 0.0;
+    for (a, &al) in alpha.iter().enumerate() {
+        lnmult += if al >= 0.0 { al * lnup_row[a] } else { -al * lndn_row[a] };
+    }
+    for (f, &e) in fmap_row.iter().enumerate() {
+        if e != 0.0 {
+            lnmult += e * phi[f].max(FREE_LO).ln();
+        }
+    }
+    lnmult
+}
+
+/// `out[i] = al.mul_add(side[i], out[i])` over equal-length slices.
+#[inline(always)]
+// SAFETY: in-bounds pointers only — the vector loop stops LANES short of
+// `out.len()` and the remainder runs scalar; caller guarantees P's ISA
+pub(crate) unsafe fn axpy<P: Pack>(al: f64, side: &[f64], out: &mut [f64]) {
+    let n = out.len();
+    debug_assert_eq!(side.len(), n);
+    let va = P::splat(al);
+    let mut i = 0;
+    while i + P::LANES <= n {
+        let v = P::mul_add(va, P::load(side.as_ptr().add(i)), P::load(out.as_ptr().add(i)));
+        P::store(out.as_mut_ptr().add(i), v);
+        i += P::LANES;
+    }
+    while i < n {
+        out[i] = al.mul_add(side[i], out[i]);
+        i += 1;
+    }
+}
+
+/// The clip/gamma tile: from the raw interpolated `rate`, produce the
+/// per-bin gamma factor, the clipped `mult * gam` Jacobian coefficient and
+/// this row's rate contribution, accumulating into `nu`. The vector lanes
+/// and the scalar remainder perform the identical op sequence, so the
+/// outputs are bitwise tier-independent.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+// SAFETY: in-bounds pointers only — the vector loop stops LANES short of
+// the tile length and the remainder runs scalar; caller guarantees P's ISA
+pub(crate) unsafe fn clip_tile<P: Pack>(
+    mult: f64,
+    gmask: &[f64],
+    gamma: &[f64],
+    rate: &[f64],
+    gam_row: &mut [f64],
+    cg_row: &mut [f64],
+    nur: &mut [f64],
+    nu: &mut [f64],
+) {
+    let n = rate.len();
+    let veps = P::splat(EPS_RATE);
+    let vone = P::splat(1.0);
+    let vmult = P::splat(mult);
+    let mut i = 0;
+    while i + P::LANES <= n {
+        let raw = P::load(rate.as_ptr().add(i));
+        let base = P::max(raw, veps);
+        let gam = P::mul_add(
+            P::load(gmask.as_ptr().add(i)),
+            P::sub(P::load(gamma.as_ptr().add(i)), vone),
+            vone,
+        );
+        P::store(gam_row.as_mut_ptr().add(i), gam);
+        // masked select: where raw > eps keep mult*gam, else +0.0 —
+        // bitwise the same as the scalar branch below
+        let cg = P::and(P::gt(raw, veps), P::mul(vmult, gam));
+        P::store(cg_row.as_mut_ptr().add(i), cg);
+        let nu_sb = P::mul(P::mul(base, vmult), gam);
+        P::store(nur.as_mut_ptr().add(i), nu_sb);
+        P::store(nu.as_mut_ptr().add(i), P::add(P::load(nu.as_ptr().add(i)), nu_sb));
+        i += P::LANES;
+    }
+    while i < n {
+        let raw = rate[i];
+        let base = raw.max(EPS_RATE);
+        let gam = gmask[i].mul_add(gamma[i] - 1.0, 1.0);
+        gam_row[i] = gam;
+        cg_row[i] = if raw > EPS_RATE { mult * gam } else { 0.0 };
+        let nu_sb = base * mult * gam;
+        nur[i] = nu_sb;
+        nu[i] += nu_sb;
+        i += 1;
+    }
+}
+
+/// Alpha Jacobian tile: `row[i] += side[i] * cg[i] + nur[i] * dlnf`.
+#[inline(always)]
+// SAFETY: in-bounds pointers only — the vector loop stops LANES short of
+// the tile length and the remainder runs scalar; caller guarantees P's ISA
+pub(crate) unsafe fn alpha_row_tile<P: Pack>(
+    side: &[f64],
+    cg: &[f64],
+    nur: &[f64],
+    dlnf: f64,
+    row: &mut [f64],
+) {
+    let n = row.len();
+    let vd = P::splat(dlnf);
+    let mut i = 0;
+    while i + P::LANES <= n {
+        let t = P::add(
+            P::mul(P::load(side.as_ptr().add(i)), P::load(cg.as_ptr().add(i))),
+            P::mul(P::load(nur.as_ptr().add(i)), vd),
+        );
+        P::store(row.as_mut_ptr().add(i), P::add(P::load(row.as_ptr().add(i)), t));
+        i += P::LANES;
+    }
+    while i < n {
+        row[i] += side[i] * cg[i] + nur[i] * dlnf;
+        i += 1;
+    }
+}
+
+/// Dot product with one vector accumulator + scalar remainder. The lane
+/// fold order is fixed per tier, so results are reproducible within a
+/// tier (and exactly sequential for LANES = 1).
+#[inline(always)]
+// SAFETY: in-bounds pointers only — the vector loop stops LANES short of
+// the slice length and the remainder runs scalar; caller guarantees P's ISA
+pub(crate) unsafe fn dot<P: Pack>(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len();
+    debug_assert_eq!(b.len(), n);
+    let mut acc = P::splat(0.0);
+    let mut i = 0;
+    while i + P::LANES <= n {
+        acc = P::mul_add(P::load(a.as_ptr().add(i)), P::load(b.as_ptr().add(i)), acc);
+        i += P::LANES;
+    }
+    let mut s = P::reduce_sum(acc);
+    while i < n {
+        s = a[i].mul_add(b[i], s);
+        i += 1;
+    }
+    s
+}
+
+/// Fused gradient row: returns `sum_b jac[b] * resid[b]` while writing
+/// `scaled[b] = jac[b] * w[b]` for the Fisher row that follows.
+#[inline(always)]
+// SAFETY: in-bounds pointers only — the vector loop stops LANES short of
+// the slice length and the remainder runs scalar; caller guarantees P's ISA
+pub(crate) unsafe fn grad_scale_row<P: Pack>(
+    jac: &[f64],
+    resid: &[f64],
+    w: &[f64],
+    scaled: &mut [f64],
+) -> f64 {
+    let n = jac.len();
+    let mut acc = P::splat(0.0);
+    let mut i = 0;
+    while i + P::LANES <= n {
+        let j = P::load(jac.as_ptr().add(i));
+        acc = P::mul_add(j, P::load(resid.as_ptr().add(i)), acc);
+        P::store(scaled.as_mut_ptr().add(i), P::mul(j, P::load(w.as_ptr().add(i))));
+        i += P::LANES;
+    }
+    let mut g = P::reduce_sum(acc);
+    while i < n {
+        g = jac[i].mul_add(resid[i], g);
+        scaled[i] = jac[i] * w[i];
+        i += 1;
+    }
+    g
+}
+
+/// One sample row's rates pass: nominal copy, per-alpha interpolation
+/// axpy, then the clip/gamma tile — shared verbatim between the
+/// rates-only evaluation and the batched multi-patch sweep, which is what
+/// makes batched and sequential NLLs bitwise-equal.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+// SAFETY: all tile windows are in-bounds sub-slices of the active region;
+// caller guarantees P's ISA is available on this CPU
+pub(crate) unsafe fn row_rates<P: Pack>(
+    m: &DenseModel,
+    srow: usize,
+    mult: f64,
+    alpha: &[f64],
+    gamma: &[f64],
+    rate: &mut [f64],
+    gam_row: &mut [f64],
+    cg_row: &mut [f64],
+    nur: &mut [f64],
+    nu: &mut [f64],
+) {
+    let c = &m.class;
+    let (b_, a_) = (c.n_bins, c.n_alpha);
+    let ba = m.n_active_bins;
+    let aa = m.n_active_alpha;
+    let block = c.bin_block.max(1);
+    let mut b0 = 0usize;
+    while b0 < ba {
+        let nb = block.min(ba - b0);
+        rate[b0..b0 + nb].copy_from_slice(&m.nominal[srow * b_ + b0..srow * b_ + b0 + nb]);
+        for a in 0..aa {
+            let al = alpha[a];
+            if al == 0.0 {
+                continue;
+            }
+            let off = (srow * a_ + a) * b_ + b0;
+            let side = if al >= 0.0 {
+                &m.histo_up[off..off + nb]
+            } else {
+                &m.histo_dn[off..off + nb]
+            };
+            axpy::<P>(al, side, &mut rate[b0..b0 + nb]);
+        }
+        clip_tile::<P>(
+            mult,
+            &m.gamma_mask[srow * b_ + b0..srow * b_ + b0 + nb],
+            &gamma[b0..b0 + nb],
+            &rate[b0..b0 + nb],
+            &mut gam_row[b0..b0 + nb],
+            &mut cg_row[b0..b0 + nb],
+            &mut nur[b0..b0 + nb],
+            &mut nu[b0..b0 + nb],
+        );
+        b0 += nb;
+    }
+}
+
+/// Poisson + constraint NLL from already-computed rates and effective
+/// parameters. Scalar in every tier (series of data-dependent branches),
+/// so for identical `nu` the NLL is bitwise tier-independent.
+#[inline(always)]
+pub(crate) fn nll_terms(
+    m: &DenseModel,
+    nu: &[f64],
+    alpha: &[f64],
+    gamma: &[f64],
+    data: &[f64],
+    centers: &Centers,
+) -> f64 {
+    let ba = m.n_active_bins;
+    let aa = m.n_active_alpha;
+    let mut out = 0.0;
+    for b in 0..ba {
+        if m.bin_mask[b] == 0.0 {
+            continue;
+        }
+        let v = nu[b].max(EPS_RATE);
+        out += v - data[b] * v.ln();
+    }
+    for a in 0..aa {
+        out += 0.5 * m.alpha_mask[a] * (alpha[a] - centers.alpha[a]).powi(2);
+    }
+    for b in 0..ba {
+        match m.ctype[b] as i64 {
+            1 => out += 0.5 * m.cscale[b] * (gamma[b] - centers.gamma[b]).powi(2),
+            2 => {
+                let taug = (m.cscale[b] * gamma[b]).max(1e-300);
+                let aux = m.cscale[b] * centers.gamma[b];
+                out += taug - aux * taug.ln();
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Fused expected-rates (+ optional Jacobian) sweep over the active
+/// region; the tier-generic body behind `scratch::eval_expected`.
+#[inline(always)]
+// SAFETY: all tile windows are in-bounds sub-slices of the active region;
+// caller guarantees P's ISA is available on this CPU
+pub(crate) unsafe fn eval_expected_body<P: Pack>(
+    m: &DenseModel,
+    s: &mut FitScratch,
+    theta: &[f64],
+    with_jac: bool,
+) {
+    effective_into(m, &mut s.phi, &mut s.alpha, &mut s.gamma, theta);
+    let c = &m.class;
+    let (b_, a_, f_) = (c.n_bins, c.n_alpha, c.n_free);
+    let ba = m.n_active_bins;
+    let rows = m.n_active_rows;
+    let aa = m.n_active_alpha;
+    let fa = m.n_active_free;
+    let block = c.bin_block.max(1);
+
+    s.nu.fill(0.0);
+    if with_jac {
+        // only the active dense rows are accumulated below; zero exactly
+        // those (plus the gamma diagonal)
+        for f in 0..fa {
+            s.jac[f * b_..f * b_ + ba].fill(0.0);
+        }
+        for a in 0..aa {
+            let r = (f_ + a) * b_;
+            s.jac[r..r + ba].fill(0.0);
+        }
+        s.jac_gamma[..ba].fill(0.0);
+    }
+
+    for srow in 0..rows {
+        let lnup_row = &m.norm_lnup[srow * a_..srow * a_ + aa];
+        let lndn_row = &m.norm_lndn[srow * a_..srow * a_ + aa];
+        let fmap_row = &m.free_map[srow * f_..srow * f_ + fa];
+        let mult = row_lnmult(&s.alpha[..aa], &s.phi, lnup_row, lndn_row, fmap_row).exp();
+
+        if !with_jac {
+            row_rates::<P>(
+                m,
+                srow,
+                mult,
+                &s.alpha,
+                &s.gamma,
+                &mut s.rate,
+                &mut s.gam_row,
+                &mut s.cg_row,
+                &mut s.nur,
+                &mut s.nu,
+            );
+            continue;
+        }
+
+        let mut b0 = 0usize;
+        while b0 < ba {
+            let nb = block.min(ba - b0);
+
+            // rates tile — the identical op sequence to row_rates
+            s.rate[b0..b0 + nb]
+                .copy_from_slice(&m.nominal[srow * b_ + b0..srow * b_ + b0 + nb]);
+            for a in 0..aa {
+                let al = s.alpha[a];
+                if al == 0.0 {
+                    continue;
+                }
+                let off = (srow * a_ + a) * b_ + b0;
+                let side = if al >= 0.0 {
+                    &m.histo_up[off..off + nb]
+                } else {
+                    &m.histo_dn[off..off + nb]
+                };
+                axpy::<P>(al, side, &mut s.rate[b0..b0 + nb]);
+            }
+            clip_tile::<P>(
+                mult,
+                &m.gamma_mask[srow * b_ + b0..srow * b_ + b0 + nb],
+                &s.gamma[b0..b0 + nb],
+                &s.rate[b0..b0 + nb],
+                &mut s.gam_row[b0..b0 + nb],
+                &mut s.cg_row[b0..b0 + nb],
+                &mut s.nur[b0..b0 + nb],
+                &mut s.nu[b0..b0 + nb],
+            );
+
+            // free-norm rows: d nu / d phi_f = nu_sb * e / phi_f
+            for f in 0..fa {
+                let e = fmap_row[f];
+                if e == 0.0 || m.free_mask[f] == 0.0 {
+                    continue;
+                }
+                let cphi = e / s.phi[f].max(FREE_LO);
+                axpy::<P>(cphi, &s.nur[b0..b0 + nb], &mut s.jac[f * b_ + b0..f * b_ + b0 + nb]);
+            }
+            // alpha rows: additive (histosys, clipped with the rate) plus
+            // multiplicative (normsys) pieces
+            for a in 0..aa {
+                if m.alpha_mask[a] == 0.0 {
+                    continue;
+                }
+                let al = s.alpha[a];
+                let off = (srow * a_ + a) * b_ + b0;
+                let (side, dlnf) = if al >= 0.0 {
+                    (&m.histo_up[off..off + nb], lnup_row[a])
+                } else {
+                    (&m.histo_dn[off..off + nb], -lndn_row[a])
+                };
+                let joff = (f_ + a) * b_ + b0;
+                alpha_row_tile::<P>(
+                    side,
+                    &s.cg_row[b0..b0 + nb],
+                    &s.nur[b0..b0 + nb],
+                    dlnf,
+                    &mut s.jac[joff..joff + nb],
+                );
+            }
+            // gamma rows are diagonal in b — scalar in EVERY tier: the
+            // accumulation is conditional (skip vs `+= 0.0` differs on a
+            // signed-zero accumulator), so vector lanes cannot reproduce
+            // the skip bitwise
+            let gmask = &m.gamma_mask[srow * b_ + b0..srow * b_ + b0 + nb];
+            for i in 0..nb {
+                let b = b0 + i;
+                if m.ctype[b] > 0.0 && gmask[i] > 0.0 {
+                    s.jac_gamma[b] += s.nur[b] * gmask[i] / s.gam_row[b];
+                }
+            }
+            b0 += nb;
+        }
+    }
+}
+
+/// Gradient + reduced Fisher assembly over the active set; the
+/// tier-generic body behind `scratch::grad_fisher_reduced`. The dense dot
+/// products vectorize (per-tier reduction order); the residual/weight
+/// divisions, gamma rows and constraint terms stay scalar in every tier.
+#[inline(always)]
+// SAFETY: all slice windows are in-bounds sub-slices of the active
+// region; caller guarantees P's ISA is available on this CPU
+pub(crate) unsafe fn grad_fisher_body<P: Pack>(
+    m: &DenseModel,
+    s: &mut FitScratch,
+    data: &[f64],
+    centers: &Centers,
+) {
+    let (f_, a_, b_) = (m.class.n_free, m.class.n_alpha, m.class.n_bins);
+    let ba = m.n_active_bins;
+    let n = s.act.len();
+    let nd = s.n_act_dense;
+
+    for b in 0..ba {
+        if m.bin_mask[b] == 0.0 {
+            s.resid[b] = 0.0;
+            s.w[b] = 0.0;
+        } else {
+            let v = s.nu[b].max(EPS_RATE);
+            s.resid[b] = 1.0 - data[b] / v;
+            s.w[b] = 1.0 / v;
+        }
+    }
+
+    s.grad.fill(0.0);
+    s.fisher_r[..n * n].fill(0.0);
+
+    // dense rows: gradient, dense-dense block, dense-gamma border
+    for i in 0..nd {
+        let p = s.act[i];
+        let joff = p * b_; // p < F + A, so this indexes a dense jac row
+        let g = grad_scale_row::<P>(
+            &s.jac[joff..joff + ba],
+            &s.resid[..ba],
+            &s.w[..ba],
+            &mut s.scaled[..ba],
+        );
+        s.grad[p] = g;
+        for j in i..nd {
+            let qoff = s.act[j] * b_;
+            let h = dot::<P>(&s.scaled[..ba], &s.jac[qoff..qoff + ba]);
+            s.fisher_r[i * n + j] = h;
+            s.fisher_r[j * n + i] = h;
+        }
+        for j in nd..n {
+            let bg = s.act[j] - f_ - a_;
+            let h = s.scaled[bg] * s.jac_gamma[bg];
+            s.fisher_r[i * n + j] = h;
+            s.fisher_r[j * n + i] = h;
+        }
+    }
+    // gamma rows: gradient + diagonal block
+    for j in nd..n {
+        let p = s.act[j];
+        let bg = p - f_ - a_;
+        s.grad[p] = s.jac_gamma[bg] * s.resid[bg];
+        s.fisher_r[j * n + j] = s.jac_gamma[bg] * s.jac_gamma[bg] * s.w[bg];
+    }
+
+    // constraint terms; only non-fixed parameters enter the system (the
+    // seed pinned fixed rows to zero-grad/identity after the fact)
+    for a in 0..m.n_active_alpha {
+        let p = f_ + a;
+        let k = s.pos[p];
+        if k == INACTIVE {
+            continue;
+        }
+        s.grad[p] += m.alpha_mask[a] * (s.alpha[a] - centers.alpha[a]);
+        s.fisher_r[k * n + k] += m.alpha_mask[a];
+    }
+    for b in 0..m.n_active_bins {
+        let p = f_ + a_ + b;
+        let k = s.pos[p];
+        if k == INACTIVE {
+            continue;
+        }
+        match m.ctype[b] as i64 {
+            1 => {
+                s.grad[p] += m.cscale[b] * (s.gamma[b] - centers.gamma[b]);
+                s.fisher_r[k * n + k] += m.cscale[b];
+            }
+            2 => {
+                let aux = m.cscale[b] * centers.gamma[b];
+                let gs = s.gamma[b].max(GAMMA_LO);
+                s.grad[p] += m.cscale[b] - aux / gs;
+                s.fisher_r[k * n + k] += aux / (gs * gs);
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Damped Newton solve exploiting the arrowhead structure of the reduced
+/// Fisher system: the gamma block is diagonal (gamma Jacobian rows are
+/// diagonal in the bin index), so ordering the gammas first reduces the
+/// factorization to O(G + G·D² + D³) for D dense parameters and G gammas
+/// instead of the dense O((D+G)³) — the win for staterror-heavy classes
+/// where G ≫ D. Block algebra: with F = [[A, B], [Bᵀ, D]] (dense block A,
+/// border B, diagonal D) the permuted lower factor is [[D'^½, 0],
+/// [B D'^-½, L_S]] where L_S L_Sᵀ = A' − B D'⁻¹ Bᵀ (damped Schur
+/// complement). Returns false when the damped system is not positive
+/// definite (caller escalates the damping).
+#[inline(always)]
+// SAFETY: all accesses are in-bounds (act/chol/border/sol are sized for
+// the active set by ensure); caller guarantees P's ISA is available
+pub(crate) unsafe fn solve_body<P: Pack>(s: &mut FitScratch, n_params: usize, lam: f64) -> bool {
+    let n = s.act.len();
+    let nd = s.n_act_dense;
+    let ng = n - nd;
+
+    // gamma head of the arrowhead: damped diagonal, rejected if not PD
+    for g in 0..ng {
+        let d = s.fisher_r[(nd + g) * n + nd + g];
+        let damped = d + lam * d.max(1e-8);
+        if damped <= 0.0 {
+            return false;
+        }
+        s.gdiag[g] = damped.sqrt();
+    }
+    // scaled border B D'^-½ (dense x gamma block, row-major stride ng)
+    for i in 0..nd {
+        for g in 0..ng {
+            s.border[i * ng + g] = s.fisher_r[i * n + nd + g] / s.gdiag[g];
+        }
+    }
+    // dense Schur complement S = A' − (B D'^-½)(B D'^-½)ᵀ, factored in
+    // place as a lower Cholesky with stride nd
+    for i in 0..nd {
+        for j in 0..=i {
+            let mut sum = s.fisher_r[i * n + j];
+            if i == j {
+                sum += lam * s.fisher_r[i * n + i].max(1e-8);
+            }
+            sum -= dot::<P>(&s.border[i * ng..i * ng + ng], &s.border[j * ng..j * ng + ng]);
+            for k in 0..j {
+                sum -= s.chol[i * nd + k] * s.chol[j * nd + k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return false;
+                }
+                s.chol[i * nd + i] = sum.sqrt();
+            } else {
+                s.chol[i * nd + j] = sum / s.chol[j * nd + j];
+            }
+        }
+    }
+    // forward substitution: the gamma rows first (diagonal block), then
+    // the dense rows against border + L_S
+    for g in 0..ng {
+        s.sol[nd + g] = s.grad[s.act[nd + g]] / s.gdiag[g];
+    }
+    for i in 0..nd {
+        let mut sum = s.grad[s.act[i]];
+        sum -= dot::<P>(&s.border[i * ng..i * ng + ng], &s.sol[nd..nd + ng]);
+        for k in 0..i {
+            sum -= s.chol[i * nd + k] * s.sol[k];
+        }
+        s.sol[i] = sum / s.chol[i * nd + i];
+    }
+    // backward substitution: dense rows through L_Sᵀ, then the gamma
+    // back-substitution against the border
+    for i in (0..nd).rev() {
+        let mut sum = s.sol[i];
+        for k in i + 1..nd {
+            sum -= s.chol[k * nd + i] * s.sol[k];
+        }
+        s.sol[i] = sum / s.chol[i * nd + i];
+    }
+    for g in 0..ng {
+        let mut sum = s.sol[nd + g];
+        for i in 0..nd {
+            sum -= s.border[i * ng + g] * s.sol[i];
+        }
+        s.sol[nd + g] = sum / s.gdiag[g];
+    }
+    s.step[..n_params].fill(0.0);
+    for i in 0..n {
+        s.step[s.act[i]] = s.sol[i];
+    }
+    true
+}

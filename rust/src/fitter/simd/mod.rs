@@ -1,0 +1,358 @@
+//! Runtime-dispatched SIMD microkernel tiers for the fused fit kernel.
+//!
+//! The fused rates+Jacobian+gradient+Fisher sweep and the Newton solve in
+//! [`crate::fitter::scratch`] are generic over a [`Pack`] lane-width trait
+//! in the style of the `gemm` pack microkernels: each tier (scalar, SSE2,
+//! AVX2+FMA, NEON) implements the same tiny vocabulary of f64 vector ops,
+//! and the generic kernel bodies in [`kernels`] are monomorphized once per
+//! tier behind a `#[target_feature]` wrapper so the intrinsics inline.
+//!
+//! The tier is selected **once per process** by runtime CPU detection on
+//! the first kernel call, and can be overridden for testing with the
+//! `PYHF_FAAS_KERNEL_TIER` env var (`scalar|sse2|avx2|neon`) or the
+//! `scan --kernel-tier` CLI flag. Forcing a tier the CPU cannot run is a
+//! loud error (`force` returns `Err`; the env var panics at first use) so
+//! a CI matrix can never silently fall back and skip a tier.
+//!
+//! # Equivalence contract
+//!
+//! Every tier must agree with the scalar reference (and with
+//! [`crate::fitter::baseline`]) on every model shape — this is enforced by
+//! the differential harness in `rust/tests/kernel_equiv.rs`:
+//!
+//! * element-wise sweeps (expected rates, interpolation factors, Jacobian
+//!   rows) carry **no cross-lane interaction**, and every tier uses fused
+//!   `mul_add` semantics (SSE2 emulates FMA per lane), so `nu`/`jac` are
+//!   **bitwise identical** across tiers;
+//! * reductions (gradient/Fisher dot products, the solve's border dots)
+//!   use one vector accumulator plus a scalar tail, so their summation
+//!   order differs per lane width — these agree within a stated ULP-scale
+//!   budget, and are bitwise-reproducible *within* a tier (the order
+//!   depends only on the active counts and the lane count, which is what
+//!   keeps the padded-vs-compact property bitwise per tier);
+//! * the batched multi-patch sweep ([`batch::nll_batch`]) interleaves
+//!   whole rows across patches without changing any per-patch arithmetic,
+//!   so batched and sequential NLLs match **exactly**.
+
+pub mod batch;
+pub(crate) mod kernels;
+mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+#[cfg(target_arch = "x86_64")]
+mod sse2;
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use crate::fitter::native::Centers;
+use crate::fitter::scratch::FitScratch;
+use crate::histfactory::dense::DenseModel;
+
+pub use batch::{nll_batch, NllBatch};
+
+/// One SIMD microkernel tier. Discriminants are the wire format of the
+/// process-global selection atomic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    /// Portable reference: lane width 1, plain f64 ops.
+    Scalar = 0,
+    /// x86-64 baseline 128-bit tier (FMA emulated per lane for exactness).
+    Sse2 = 1,
+    /// 256-bit tier with hardware FMA.
+    Avx2 = 2,
+    /// aarch64 128-bit tier with hardware FMA.
+    Neon = 3,
+}
+
+impl Tier {
+    /// CLI/env name of the tier.
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Scalar => "scalar",
+            Tier::Sse2 => "sse2",
+            Tier::Avx2 => "avx2",
+            Tier::Neon => "neon",
+        }
+    }
+
+    /// f64 lanes per vector register in this tier.
+    pub fn lanes(self) -> usize {
+        match self {
+            Tier::Scalar => 1,
+            Tier::Sse2 | Tier::Neon => 2,
+            Tier::Avx2 => 4,
+        }
+    }
+
+    fn from_u8(v: u8) -> Tier {
+        match v {
+            1 => Tier::Sse2,
+            2 => Tier::Avx2,
+            3 => Tier::Neon,
+            _ => Tier::Scalar,
+        }
+    }
+
+    fn parse(name: &str) -> Option<Tier> {
+        match name.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(Tier::Scalar),
+            "sse2" => Some(Tier::Sse2),
+            "avx2" => Some(Tier::Avx2),
+            "neon" => Some(Tier::Neon),
+            _ => None,
+        }
+    }
+}
+
+/// Sentinel: no tier selected yet for this process.
+const TIER_UNINIT: u8 = u8::MAX;
+
+static TIER: AtomicU8 = AtomicU8::new(TIER_UNINIT);
+
+/// The active kernel tier. This is the kernel dispatch gate: after the
+/// first call it costs exactly one relaxed atomic load (checked by
+/// pallas-lint's `probe_gate` rule), so per-evaluation dispatch adds no
+/// locks or allocations to the fit hot path.
+#[inline]
+pub fn active() -> Tier {
+    let t = TIER.load(Ordering::Relaxed);
+    if t == TIER_UNINIT {
+        return init_slow();
+    }
+    Tier::from_u8(t)
+}
+
+/// First-call path: honor `PYHF_FAAS_KERNEL_TIER` or fall back to CPU
+/// detection. An unknown or unsupported env value panics: a forced-tier CI
+/// run must never silently degrade to a different tier.
+#[cold]
+fn init_slow() -> Tier {
+    let t = match std::env::var("PYHF_FAAS_KERNEL_TIER") {
+        Ok(name) => match Tier::parse(&name) {
+            Some(t) if supported(t) => t,
+            Some(t) => panic!(
+                "PYHF_FAAS_KERNEL_TIER={name}: tier '{}' is not supported on this CPU",
+                t.name()
+            ),
+            None => panic!("PYHF_FAAS_KERNEL_TIER={name}: expected scalar|sse2|avx2|neon"),
+        },
+        Err(_) => detect(),
+    };
+    TIER.store(t as u8, Ordering::Relaxed);
+    t
+}
+
+/// Widest tier the running CPU supports.
+pub fn detect() -> Tier {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return Tier::Avx2;
+        }
+        if is_x86_feature_detected!("sse2") {
+            return Tier::Sse2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Tier::Neon;
+        }
+    }
+    Tier::Scalar
+}
+
+/// Whether the running CPU can execute `tier`.
+pub fn supported(tier: Tier) -> bool {
+    match tier {
+        Tier::Scalar => true,
+        #[cfg(target_arch = "x86_64")]
+        Tier::Sse2 => is_x86_feature_detected!("sse2"),
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 => is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma"),
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => std::arch::is_aarch64_feature_detected!("neon"),
+        _ => false,
+    }
+}
+
+/// Every tier the running CPU can execute (always includes `Scalar`).
+/// This is what the differential harness and the CI tier matrix iterate.
+pub fn supported_tiers() -> Vec<Tier> {
+    [Tier::Scalar, Tier::Sse2, Tier::Avx2, Tier::Neon]
+        .into_iter()
+        .filter(|&t| supported(t))
+        .collect()
+}
+
+/// Force the kernel tier (tests, benches and the `--kernel-tier` flag).
+/// Refuses — leaving the selection untouched — when the CPU cannot run
+/// the requested tier, so dispatch can never reach an ISA the CPU lacks.
+pub fn force(tier: Tier) -> Result<(), String> {
+    if !supported(tier) {
+        return Err(format!(
+            "kernel tier '{}' is not supported on this CPU",
+            tier.name()
+        ));
+    }
+    TIER.store(tier as u8, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Parse a tier name (`scalar|sse2|avx2|neon`) and force it.
+pub fn force_named(name: &str) -> Result<(), String> {
+    match Tier::parse(name) {
+        Some(t) => force(t),
+        None => Err(format!(
+            "unknown kernel tier '{name}' (expected scalar|sse2|avx2|neon)"
+        )),
+    }
+}
+
+/// Lane-width abstraction over the per-tier f64 vector ops, after the
+/// `gemm` pack microkernels: the generic kernel bodies in [`kernels`] are
+/// written once against this vocabulary and monomorphized per tier.
+///
+/// # Safety
+///
+/// SAFETY: implementations are thin wrappers over target intrinsics.
+/// Callers must (a) only invoke an implementation when its ISA has been
+/// verified available on the running CPU (the dispatch in this module
+/// guarantees that), and (b) pass pointers valid for `LANES` consecutive
+/// f64 reads/writes to `load`/`store`.
+pub(crate) unsafe trait Pack {
+    /// f64 lanes per vector.
+    const LANES: usize;
+    /// The vector register type.
+    type V: Copy;
+
+    // SAFETY: pure register op (no memory access)
+    unsafe fn splat(x: f64) -> Self::V;
+    // SAFETY: caller guarantees `p` is valid for LANES consecutive reads
+    unsafe fn load(p: *const f64) -> Self::V;
+    // SAFETY: caller guarantees `p` is valid for LANES consecutive writes
+    unsafe fn store(p: *mut f64, v: Self::V);
+    // SAFETY: pure register op (no memory access)
+    unsafe fn add(a: Self::V, b: Self::V) -> Self::V;
+    // SAFETY: pure register op (no memory access)
+    unsafe fn sub(a: Self::V, b: Self::V) -> Self::V;
+    // SAFETY: pure register op (no memory access)
+    unsafe fn mul(a: Self::V, b: Self::V) -> Self::V;
+    // SAFETY: pure register op; fused a*b+c with f64::mul_add semantics
+    unsafe fn mul_add(a: Self::V, b: Self::V, c: Self::V) -> Self::V;
+    // SAFETY: pure register op; must match f64::max when b is non-NaN
+    unsafe fn max(a: Self::V, b: Self::V) -> Self::V;
+    // SAFETY: pure register op; all-ones lane mask where a > b, else zero
+    unsafe fn gt(a: Self::V, b: Self::V) -> Self::V;
+    // SAFETY: pure register op; lanewise bitwise AND
+    unsafe fn and(a: Self::V, b: Self::V) -> Self::V;
+    // SAFETY: pure register op; fixed per-tier left-to-right lane sum
+    unsafe fn reduce_sum(v: Self::V) -> f64;
+}
+
+/// Fused expected-rates (+ optional Jacobian) sweep on the active tier.
+pub(crate) fn eval_expected(m: &DenseModel, s: &mut FitScratch, theta: &[f64], with_jac: bool) {
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 is only ever stored after detection (or a
+        // supported()-checked force) confirmed avx2+fma on this CPU
+        Tier::Avx2 => unsafe { avx2::eval_expected(m, s, theta, with_jac) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: SSE2 is part of the x86-64 baseline feature set
+        Tier::Sse2 => unsafe { sse2::eval_expected(m, s, theta, with_jac) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: Neon is only ever stored after detection confirmed it
+        Tier::Neon => unsafe { neon::eval_expected(m, s, theta, with_jac) },
+        // SAFETY: the scalar body performs only in-bounds slice accesses;
+        // unsafe is inherited from the shared Pack kernel signature
+        _ => unsafe { scalar::eval_expected(m, s, theta, with_jac) },
+    }
+}
+
+/// Gradient + reduced Fisher assembly on the active tier.
+pub(crate) fn grad_fisher(m: &DenseModel, s: &mut FitScratch, data: &[f64], centers: &Centers) {
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 is only ever stored after detection (or a
+        // supported()-checked force) confirmed avx2+fma on this CPU
+        Tier::Avx2 => unsafe { avx2::grad_fisher(m, s, data, centers) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: SSE2 is part of the x86-64 baseline feature set
+        Tier::Sse2 => unsafe { sse2::grad_fisher(m, s, data, centers) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: Neon is only ever stored after detection confirmed it
+        Tier::Neon => unsafe { neon::grad_fisher(m, s, data, centers) },
+        // SAFETY: the scalar body performs only in-bounds slice accesses;
+        // unsafe is inherited from the shared Pack kernel signature
+        _ => unsafe { scalar::grad_fisher(m, s, data, centers) },
+    }
+}
+
+/// Damped arrowhead Newton solve on the active tier. Returns false when
+/// the damped system is not positive definite.
+pub(crate) fn solve(s: &mut FitScratch, n_params: usize, lam: f64) -> bool {
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 is only ever stored after detection (or a
+        // supported()-checked force) confirmed avx2+fma on this CPU
+        Tier::Avx2 => unsafe { avx2::solve(s, n_params, lam) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: SSE2 is part of the x86-64 baseline feature set
+        Tier::Sse2 => unsafe { sse2::solve(s, n_params, lam) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: Neon is only ever stored after detection confirmed it
+        Tier::Neon => unsafe { neon::solve(s, n_params, lam) },
+        // SAFETY: the scalar body performs only in-bounds slice accesses;
+        // unsafe is inherited from the shared Pack kernel signature
+        _ => unsafe { scalar::solve(s, n_params, lam) },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_names_roundtrip() {
+        for t in [Tier::Scalar, Tier::Sse2, Tier::Avx2, Tier::Neon] {
+            assert_eq!(Tier::parse(t.name()), Some(t));
+            assert_eq!(Tier::from_u8(t as u8), t);
+        }
+        assert_eq!(Tier::parse("AVX2 "), Some(Tier::Avx2));
+        assert_eq!(Tier::parse("avx512"), None);
+    }
+
+    #[test]
+    fn detection_is_supported_and_forcible() {
+        let best = detect();
+        assert!(supported(best));
+        let tiers = supported_tiers();
+        assert!(tiers.contains(&Tier::Scalar));
+        assert!(tiers.contains(&best));
+        for t in tiers {
+            assert!(force(t).is_ok(), "supported tier {t:?} must force");
+        }
+        // restore the detected tier for any test that runs after us
+        force(best).unwrap();
+        assert_eq!(active(), best);
+    }
+
+    #[test]
+    fn forcing_an_unknown_name_is_an_error() {
+        assert!(force_named("avx1024").is_err());
+        #[cfg(target_arch = "x86_64")]
+        assert!(force(Tier::Neon).is_err());
+    }
+
+    #[test]
+    fn lane_counts_match_the_isa() {
+        assert_eq!(Tier::Scalar.lanes(), 1);
+        assert_eq!(Tier::Sse2.lanes(), 2);
+        assert_eq!(Tier::Avx2.lanes(), 4);
+        assert_eq!(Tier::Neon.lanes(), 2);
+    }
+}

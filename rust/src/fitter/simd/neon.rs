@@ -1,0 +1,128 @@
+//! NEON tier: 2 f64 lanes on aarch64 with hardware fused multiply-add.
+//! `max` uses FMAXNM (maxNum semantics) so NaN handling matches f64::max,
+//! and FMLA is fused like f64::mul_add, keeping element-wise sweeps
+//! bitwise-identical to the scalar tier.
+
+use std::arch::aarch64::*;
+
+use super::batch::{nll_batch_body, NllBatch};
+use super::kernels;
+use super::Pack;
+use crate::fitter::native::Centers;
+use crate::fitter::scratch::FitScratch;
+use crate::histfactory::dense::DenseModel;
+
+pub(crate) struct Neon;
+
+// SAFETY: every op is a single NEON intrinsic; the dispatch layer only
+// selects this tier after runtime detection confirmed NEON, and
+// load/store rely on the caller-guaranteed pointer validity from the Pack
+// contract.
+unsafe impl Pack for Neon {
+    const LANES: usize = 2;
+    type V = float64x2_t;
+
+    #[inline(always)]
+    // SAFETY: single NEON register intrinsic, no memory access
+    unsafe fn splat(x: f64) -> float64x2_t {
+        vdupq_n_f64(x)
+    }
+
+    #[inline(always)]
+    // SAFETY: caller guarantees `p` is valid for 2 consecutive f64 reads
+    unsafe fn load(p: *const f64) -> float64x2_t {
+        vld1q_f64(p)
+    }
+
+    #[inline(always)]
+    // SAFETY: caller guarantees `p` is valid for 2 consecutive f64 writes
+    unsafe fn store(p: *mut f64, v: float64x2_t) {
+        vst1q_f64(p, v)
+    }
+
+    #[inline(always)]
+    // SAFETY: single NEON register intrinsic, no memory access
+    unsafe fn add(a: float64x2_t, b: float64x2_t) -> float64x2_t {
+        vaddq_f64(a, b)
+    }
+
+    #[inline(always)]
+    // SAFETY: single NEON register intrinsic, no memory access
+    unsafe fn sub(a: float64x2_t, b: float64x2_t) -> float64x2_t {
+        vsubq_f64(a, b)
+    }
+
+    #[inline(always)]
+    // SAFETY: single NEON register intrinsic, no memory access
+    unsafe fn mul(a: float64x2_t, b: float64x2_t) -> float64x2_t {
+        vmulq_f64(a, b)
+    }
+
+    #[inline(always)]
+    // SAFETY: single NEON register intrinsic; FMLA computes c + a*b fused
+    // (note the vfmaq argument order), matching f64::mul_add(a, b, c)
+    unsafe fn mul_add(a: float64x2_t, b: float64x2_t, c: float64x2_t) -> float64x2_t {
+        vfmaq_f64(c, a, b)
+    }
+
+    #[inline(always)]
+    // SAFETY: single NEON register intrinsic; FMAXNM has maxNum (quiet
+    // NaN) semantics, matching f64::max
+    unsafe fn max(a: float64x2_t, b: float64x2_t) -> float64x2_t {
+        vmaxnmq_f64(a, b)
+    }
+
+    #[inline(always)]
+    // SAFETY: register-only NEON compare + reinterpret; NaN compares
+    // false, like the scalar `>` in the remainder loops
+    unsafe fn gt(a: float64x2_t, b: float64x2_t) -> float64x2_t {
+        vreinterpretq_f64_u64(vcgtq_f64(a, b))
+    }
+
+    #[inline(always)]
+    // SAFETY: register-only NEON reinterpret + lanewise AND
+    unsafe fn and(a: float64x2_t, b: float64x2_t) -> float64x2_t {
+        vreinterpretq_f64_u64(vandq_u64(
+            vreinterpretq_u64_f64(a),
+            vreinterpretq_u64_f64(b),
+        ))
+    }
+
+    #[inline(always)]
+    // SAFETY: register-only NEON lane extraction; lane order lo + hi is
+    // fixed, keeping reductions bitwise-reproducible within the tier
+    unsafe fn reduce_sum(v: float64x2_t) -> f64 {
+        vgetq_lane_f64::<0>(v) + vgetq_lane_f64::<1>(v)
+    }
+}
+
+#[target_feature(enable = "neon")]
+// SAFETY: caller has verified NEON on this CPU before dispatching
+pub(crate) unsafe fn eval_expected(m: &DenseModel, s: &mut FitScratch, theta: &[f64], with_jac: bool) {
+    kernels::eval_expected_body::<Neon>(m, s, theta, with_jac)
+}
+
+#[target_feature(enable = "neon")]
+// SAFETY: caller has verified NEON on this CPU before dispatching
+pub(crate) unsafe fn grad_fisher(m: &DenseModel, s: &mut FitScratch, data: &[f64], centers: &Centers) {
+    kernels::grad_fisher_body::<Neon>(m, s, data, centers)
+}
+
+#[target_feature(enable = "neon")]
+// SAFETY: caller has verified NEON on this CPU before dispatching
+pub(crate) unsafe fn solve(s: &mut FitScratch, n_params: usize, lam: f64) -> bool {
+    kernels::solve_body::<Neon>(s, n_params, lam)
+}
+
+#[target_feature(enable = "neon")]
+// SAFETY: caller has verified NEON on this CPU before dispatching
+pub(crate) unsafe fn nll_batch(
+    models: &[&DenseModel],
+    thetas: &[&[f64]],
+    datas: &[&[f64]],
+    centers: &[&Centers],
+    ws: &mut NllBatch,
+    out: &mut [f64],
+) {
+    nll_batch_body::<Neon>(models, thetas, datas, centers, ws, out)
+}

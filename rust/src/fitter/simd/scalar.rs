@@ -1,0 +1,121 @@
+//! Scalar reference tier: lane width 1, plain f64 arithmetic. Every other
+//! tier is differentially tested against this instantiation, and the
+//! element-wise sweeps must match it **bitwise** (`tests/kernel_equiv.rs`).
+
+use super::batch::{nll_batch_body, NllBatch};
+use super::kernels;
+use super::Pack;
+use crate::fitter::native::Centers;
+use crate::fitter::scratch::FitScratch;
+use crate::histfactory::dense::DenseModel;
+
+pub(crate) struct Scalar;
+
+// SAFETY: every op below is plain safe f64 arithmetic except load/store,
+// which require the caller-guaranteed pointer validity from the Pack
+// contract; `unsafe` is inherited from the shared trait signature.
+unsafe impl Pack for Scalar {
+    const LANES: usize = 1;
+    type V = f64;
+
+    #[inline(always)]
+    // SAFETY: no unsafe ops; unsafe only to match the trait signature
+    unsafe fn splat(x: f64) -> f64 {
+        x
+    }
+
+    #[inline(always)]
+    // SAFETY: caller guarantees `p` is valid for one f64 read
+    unsafe fn load(p: *const f64) -> f64 {
+        *p
+    }
+
+    #[inline(always)]
+    // SAFETY: caller guarantees `p` is valid for one f64 write
+    unsafe fn store(p: *mut f64, v: f64) {
+        *p = v;
+    }
+
+    #[inline(always)]
+    // SAFETY: no unsafe ops; unsafe only to match the trait signature
+    unsafe fn add(a: f64, b: f64) -> f64 {
+        a + b
+    }
+
+    #[inline(always)]
+    // SAFETY: no unsafe ops; unsafe only to match the trait signature
+    unsafe fn sub(a: f64, b: f64) -> f64 {
+        a - b
+    }
+
+    #[inline(always)]
+    // SAFETY: no unsafe ops; unsafe only to match the trait signature
+    unsafe fn mul(a: f64, b: f64) -> f64 {
+        a * b
+    }
+
+    #[inline(always)]
+    // SAFETY: no unsafe ops; unsafe only to match the trait signature
+    unsafe fn mul_add(a: f64, b: f64, c: f64) -> f64 {
+        a.mul_add(b, c)
+    }
+
+    #[inline(always)]
+    // SAFETY: no unsafe ops; unsafe only to match the trait signature
+    unsafe fn max(a: f64, b: f64) -> f64 {
+        a.max(b)
+    }
+
+    #[inline(always)]
+    // SAFETY: no unsafe ops; unsafe only to match the trait signature
+    unsafe fn gt(a: f64, b: f64) -> f64 {
+        if a > b {
+            f64::from_bits(u64::MAX)
+        } else {
+            0.0
+        }
+    }
+
+    #[inline(always)]
+    // SAFETY: no unsafe ops; unsafe only to match the trait signature
+    unsafe fn and(a: f64, b: f64) -> f64 {
+        f64::from_bits(a.to_bits() & b.to_bits())
+    }
+
+    #[inline(always)]
+    // SAFETY: no unsafe ops; unsafe only to match the trait signature
+    unsafe fn reduce_sum(v: f64) -> f64 {
+        v
+    }
+}
+
+// SAFETY: the scalar instantiation needs no ISA; unsafe is inherited from
+// the shared per-tier kernel entry-point signature
+pub(crate) unsafe fn eval_expected(m: &DenseModel, s: &mut FitScratch, theta: &[f64], with_jac: bool) {
+    kernels::eval_expected_body::<Scalar>(m, s, theta, with_jac)
+}
+
+// SAFETY: the scalar instantiation needs no ISA; unsafe is inherited from
+// the shared per-tier kernel entry-point signature
+pub(crate) unsafe fn grad_fisher(m: &DenseModel, s: &mut FitScratch, data: &[f64], centers: &Centers) {
+    kernels::grad_fisher_body::<Scalar>(m, s, data, centers)
+}
+
+// SAFETY: the scalar instantiation needs no ISA; unsafe is inherited from
+// the shared per-tier kernel entry-point signature
+pub(crate) unsafe fn solve(s: &mut FitScratch, n_params: usize, lam: f64) -> bool {
+    kernels::solve_body::<Scalar>(s, n_params, lam)
+}
+
+// SAFETY: the scalar instantiation needs no ISA; unsafe is inherited from
+// the shared per-tier kernel entry-point signature
+pub(crate) unsafe fn nll_batch(
+    models: &[&DenseModel],
+    thetas: &[&[f64]],
+    datas: &[&[f64]],
+    centers: &[&Centers],
+    ws: &mut NllBatch,
+    out: &mut [f64],
+) {
+    nll_batch_body::<Scalar>(models, thetas, datas, centers, ws, out)
+}

@@ -1,0 +1,130 @@
+//! SSE2 tier: 2 f64 lanes. SSE2 has no FMA instruction, so `mul_add` is
+//! emulated per lane with `f64::mul_add` — exactness over speed: the tier
+//! exists so the differential matrix always has a 2-lane x86 member, and
+//! its element-wise sweeps stay bitwise-identical to the scalar tier.
+
+use std::arch::x86_64::*;
+
+use super::batch::{nll_batch_body, NllBatch};
+use super::kernels;
+use super::Pack;
+use crate::fitter::native::Centers;
+use crate::fitter::scratch::FitScratch;
+use crate::histfactory::dense::DenseModel;
+
+pub(crate) struct Sse2;
+
+// SAFETY: every op is a single SSE2 intrinsic (baseline on x86-64) except
+// mul_add, which extracts lanes and uses scalar f64::mul_add; load/store
+// rely on the caller-guaranteed pointer validity from the Pack contract.
+unsafe impl Pack for Sse2 {
+    const LANES: usize = 2;
+    type V = __m128d;
+
+    #[inline(always)]
+    // SAFETY: single SSE2 register intrinsic, no memory access
+    unsafe fn splat(x: f64) -> __m128d {
+        _mm_set1_pd(x)
+    }
+
+    #[inline(always)]
+    // SAFETY: caller guarantees `p` is valid for 2 consecutive f64 reads
+    unsafe fn load(p: *const f64) -> __m128d {
+        _mm_loadu_pd(p)
+    }
+
+    #[inline(always)]
+    // SAFETY: caller guarantees `p` is valid for 2 consecutive f64 writes
+    unsafe fn store(p: *mut f64, v: __m128d) {
+        _mm_storeu_pd(p, v)
+    }
+
+    #[inline(always)]
+    // SAFETY: single SSE2 register intrinsic, no memory access
+    unsafe fn add(a: __m128d, b: __m128d) -> __m128d {
+        _mm_add_pd(a, b)
+    }
+
+    #[inline(always)]
+    // SAFETY: single SSE2 register intrinsic, no memory access
+    unsafe fn sub(a: __m128d, b: __m128d) -> __m128d {
+        _mm_sub_pd(a, b)
+    }
+
+    #[inline(always)]
+    // SAFETY: single SSE2 register intrinsic, no memory access
+    unsafe fn mul(a: __m128d, b: __m128d) -> __m128d {
+        _mm_mul_pd(a, b)
+    }
+
+    #[inline(always)]
+    // SAFETY: register-only SSE2 lane shuffles plus scalar f64::mul_add;
+    // fused per lane, so results are bitwise those of the scalar tier
+    unsafe fn mul_add(a: __m128d, b: __m128d, c: __m128d) -> __m128d {
+        let lo = f64::mul_add(_mm_cvtsd_f64(a), _mm_cvtsd_f64(b), _mm_cvtsd_f64(c));
+        let hi = f64::mul_add(
+            _mm_cvtsd_f64(_mm_unpackhi_pd(a, a)),
+            _mm_cvtsd_f64(_mm_unpackhi_pd(b, b)),
+            _mm_cvtsd_f64(_mm_unpackhi_pd(c, c)),
+        );
+        _mm_set_pd(hi, lo)
+    }
+
+    #[inline(always)]
+    // SAFETY: single SSE2 register intrinsic; MAXPD returns b when a is
+    // NaN, matching f64::max for the non-NaN b the kernels pass
+    unsafe fn max(a: __m128d, b: __m128d) -> __m128d {
+        _mm_max_pd(a, b)
+    }
+
+    #[inline(always)]
+    // SAFETY: single SSE2 register intrinsic; NaN compares false, like the
+    // scalar `>` the kernels' remainder loops use
+    unsafe fn gt(a: __m128d, b: __m128d) -> __m128d {
+        _mm_cmpgt_pd(a, b)
+    }
+
+    #[inline(always)]
+    // SAFETY: single SSE2 register intrinsic, no memory access
+    unsafe fn and(a: __m128d, b: __m128d) -> __m128d {
+        _mm_and_pd(a, b)
+    }
+
+    #[inline(always)]
+    // SAFETY: register-only SSE2 lane extraction; lane order lo + hi is
+    // fixed, keeping reductions bitwise-reproducible within the tier
+    unsafe fn reduce_sum(v: __m128d) -> f64 {
+        _mm_cvtsd_f64(v) + _mm_cvtsd_f64(_mm_unpackhi_pd(v, v))
+    }
+}
+
+#[target_feature(enable = "sse2")]
+// SAFETY: caller has verified SSE2 (x86-64 baseline) before dispatching
+pub(crate) unsafe fn eval_expected(m: &DenseModel, s: &mut FitScratch, theta: &[f64], with_jac: bool) {
+    kernels::eval_expected_body::<Sse2>(m, s, theta, with_jac)
+}
+
+#[target_feature(enable = "sse2")]
+// SAFETY: caller has verified SSE2 (x86-64 baseline) before dispatching
+pub(crate) unsafe fn grad_fisher(m: &DenseModel, s: &mut FitScratch, data: &[f64], centers: &Centers) {
+    kernels::grad_fisher_body::<Sse2>(m, s, data, centers)
+}
+
+#[target_feature(enable = "sse2")]
+// SAFETY: caller has verified SSE2 (x86-64 baseline) before dispatching
+pub(crate) unsafe fn solve(s: &mut FitScratch, n_params: usize, lam: f64) -> bool {
+    kernels::solve_body::<Sse2>(s, n_params, lam)
+}
+
+#[target_feature(enable = "sse2")]
+// SAFETY: caller has verified SSE2 (x86-64 baseline) before dispatching
+pub(crate) unsafe fn nll_batch(
+    models: &[&DenseModel],
+    thetas: &[&[f64]],
+    datas: &[&[f64]],
+    centers: &[&Centers],
+    ws: &mut NllBatch,
+    out: &mut [f64],
+) {
+    nll_batch_body::<Sse2>(models, thetas, datas, centers, ws, out)
+}

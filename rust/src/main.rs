@@ -56,6 +56,10 @@ COMMANDS:
                    [--resume PATH] (resume a killed scan from its journal:
                    completed points are restored without refitting, only the
                    lost in-flight tail is resubmitted)
+                   [--kernel-tier scalar|sse2|avx2|neon] (force the SIMD
+                   microkernel tier for native fits; default picks the
+                   widest ISA the CPU supports. Errors on an unsupported
+                   tier instead of silently degrading.)
                    [--bench-out BENCH_fit.json] (machine-readable throughput)
                    [--trace-out trace.json] (task-lifecycle trace: Chrome
                    trace-event JSON, open at ui.perfetto.dev)
@@ -172,13 +176,20 @@ fn backend_setup(
             })?;
             Ok((
                 fitops::pjrt_worker_init(artifacts),
-                fitops::fit_patch_handler(),
+                // batch-aware via the generic wrapper: envelopes unpack to
+                // entry-at-a-time compiled-executable fits
+                batched_handler(fitops::fit_patch_handler()),
                 "fit_patch_pjrt",
             ))
         }
+        // natively batch-aware: serves same-class `{"batch": [...]}`
+        // envelopes itself (one scratch take per envelope + one batched
+        // multi-patch NLL sweep), so it must NOT be wrapped in the generic
+        // `batched_handler` — that would unpack envelopes entry-at-a-time
+        // before the native batch path ever sees them
         "native" => Ok((
             fitops::native_worker_init(artifacts),
-            fitops::native_fit_handler(),
+            fitops::native_batch_fit_handler(),
             "fit_patch_native",
         )),
         other => Err(format!("unknown backend '{other}' (pjrt|native)")),
@@ -241,7 +252,7 @@ fn start_endpoints(
         svc.install_router(router);
     }
     // handlers are batch-aware: single payloads pass through untouched
-    let f = client.register_function(fname, batched_handler(handler));
+    let f = client.register_function(fname, handler);
     Ok((endpoints, f))
 }
 
@@ -316,6 +327,12 @@ fn cmd_scan(args: &Args) -> Result<(), String> {
              the journal it resumes from)"
                 .to_string(),
         );
+    }
+
+    // pin the kernel tier before any worker evaluates an NLL — the tier is
+    // selected once per process, so forcing it later would be ignored
+    if let Some(tier) = args.get("kernel-tier") {
+        pyhf_faas::fitter::simd::force_named(tier)?;
     }
 
     // tracing must be on before the endpoints spawn so worker startup and
@@ -433,13 +450,10 @@ fn cmd_scan(args: &Args) -> Result<(), String> {
         let mut report = pyhf_faas::bench::FitBenchReport::new("scan", false);
         let n = scan.points.len() as f64;
         report.classes.push(pyhf_faas::bench::ClassBench {
-            class: pallet.config.name.clone(),
-            nll_evals_per_s: 0.0,
             fits_per_s: if m.total_service_s > 0.0 { n / m.total_service_s } else { 0.0 },
-            toys_per_s: 0.0,
-            baseline_fits_per_s: 0.0,
-            speedup: 0.0,
             wall_s: scan.wall_seconds,
+            kernel_tier: pyhf_faas::fitter::simd::active().name().to_string(),
+            ..pyhf_faas::bench::ClassBench::unmeasured(pallet.config.name.clone())
         });
         report.write(std::path::Path::new(bench_out)).map_err(|e| e.to_string())?;
         println!("  wrote {bench_out}");

@@ -17,7 +17,7 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-use pyhf_faas::fitter::{Centers, FitScratch, NativeFitter};
+use pyhf_faas::fitter::{nll_batch, simd, Centers, FitScratch, NativeFitter, NllBatch};
 use pyhf_faas::histfactory::dense::{self, builtin_class};
 use pyhf_faas::histfactory::spec::Workspace;
 use pyhf_faas::pallet::{generate, library};
@@ -85,6 +85,67 @@ fn nll_evaluation_is_allocation_free_after_warmup() {
         }
     });
     assert_eq!(allocs, 0, "NLL evaluations allocated {allocs} times over 256 calls");
+}
+
+#[test]
+fn nll_evaluation_is_allocation_free_on_every_tier() {
+    let _guard = AUDIT.lock().unwrap();
+    let initial = simd::active();
+    let model = quickstart_model();
+    let fitter = NativeFitter::new(&model);
+    let centers = Centers::nominal(&model);
+    let theta = fitter.init_theta(1.2);
+    for t in simd::supported_tiers() {
+        simd::force(t).unwrap();
+        // warmup: sizes the scratch once (re-sizing is a no-op after)
+        std::hint::black_box(fitter.nll(&theta, &model.data, &centers));
+        let allocs = min_allocs(5, || {
+            for _ in 0..256 {
+                std::hint::black_box(fitter.nll(&theta, &model.data, &centers));
+            }
+        });
+        assert_eq!(
+            allocs,
+            0,
+            "tier {}: NLL evaluations allocated {allocs} times over 256 calls",
+            t.name()
+        );
+    }
+    simd::force(initial).unwrap();
+}
+
+#[test]
+fn batched_nll_is_allocation_free_after_warmup_on_every_tier() {
+    let _guard = AUDIT.lock().unwrap();
+    let initial = simd::active();
+    let model = quickstart_model();
+    let fitter = NativeFitter::new(&model);
+    let centers = Centers::nominal(&model);
+    let k = 8;
+    let theta = fitter.init_theta(1.2);
+    let models: Vec<&dense::DenseModel> = vec![&model; k];
+    let thetas: Vec<&[f64]> = vec![&theta[..]; k];
+    let datas: Vec<&[f64]> = vec![&model.data[..]; k];
+    let center_refs: Vec<&Centers> = vec![&centers; k];
+    let mut ws = NllBatch::for_class(&model.class, k);
+    let mut out = vec![0.0; k];
+    for t in simd::supported_tiers() {
+        simd::force(t).unwrap();
+        std::hint::black_box(nll_batch(&models, &thetas, &datas, &center_refs, &mut ws, &mut out));
+        let allocs = min_allocs(5, || {
+            for _ in 0..64 {
+                nll_batch(&models, &thetas, &datas, &center_refs, &mut ws, &mut out);
+                std::hint::black_box(out[0]);
+            }
+        });
+        assert_eq!(
+            allocs,
+            0,
+            "tier {}: batched NLL sweeps allocated {allocs} times over 64 calls",
+            t.name()
+        );
+    }
+    simd::force(initial).unwrap();
 }
 
 #[test]

@@ -370,16 +370,27 @@ fn padded_and_compact_evaluations_are_bit_identical() {
     let te = build_theta(&me, &fe);
     let tp = build_theta(&mp, &fp);
 
-    let ne = fe.nll(&te, &me.data, &ce);
-    let np = fp.nll(&tp, &mp.data, &cp);
-    assert_eq!(ne.to_bits(), np.to_bits(), "padded NLL {np} != compact NLL {ne}");
+    // the property must hold on every SIMD tier the CPU can run: the
+    // kernels sweep (and reduce over) only the active region, and the
+    // reduction order within a tier depends only on the active counts and
+    // the lane width — never on the padding
+    let initial = pyhf_faas::fitter::simd::active();
+    for tier in pyhf_faas::fitter::simd::supported_tiers() {
+        pyhf_faas::fitter::simd::force(tier).unwrap();
+        let tn = tier.name();
 
-    // full fits walk the identical Newton trajectory bit for bit
-    let re = fe.fit_free(&me.data, &ce);
-    let rp = fp.fit_free(&mp.data, &cp);
-    assert_eq!(re.nll.to_bits(), rp.nll.to_bits());
-    assert_eq!(re.theta[0].to_bits(), rp.theta[0].to_bits());
-    assert_eq!(re.accepted_steps, rp.accepted_steps);
+        let ne = fe.nll(&te, &me.data, &ce);
+        let np = fp.nll(&tp, &mp.data, &cp);
+        assert_eq!(ne.to_bits(), np.to_bits(), "tier {tn}: padded NLL {np} != compact NLL {ne}");
+
+        // full fits walk the identical Newton trajectory bit for bit
+        let re = fe.fit_free(&me.data, &ce);
+        let rp = fp.fit_free(&mp.data, &cp);
+        assert_eq!(re.nll.to_bits(), rp.nll.to_bits(), "tier {tn}: fit NLLs diverge");
+        assert_eq!(re.theta[0].to_bits(), rp.theta[0].to_bits(), "tier {tn}: fit POIs diverge");
+        assert_eq!(re.accepted_steps, rp.accepted_steps, "tier {tn}: fit trajectories diverge");
+    }
+    pyhf_faas::fitter::simd::force(initial).unwrap();
 }
 
 // ---------------------------------------------------------------------------

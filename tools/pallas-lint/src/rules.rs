@@ -341,6 +341,7 @@ const PROBE_FNS: &[(&str, &str)] = &[
     ("trace/mod.rs", "pub fn enabled"),
     ("coordinator/chaos.rs", "pub fn active"),
     ("util/logging.rs", "pub fn enabled"),
+    ("fitter/simd/mod.rs", "pub fn active"),
 ];
 const PROBE_FORBIDDEN: &[&str] =
     &[".lock", "format!", "to_string", "String::", "Vec::", "Box::", ".clone()"];

@@ -44,6 +44,12 @@ fn probe_gate_fires_once_on_allocating_gate() {
 }
 
 #[test]
+fn probe_gate_fires_once_on_locking_simd_tier_gate() {
+    let f = lint_source("fitter/simd/mod.rs", include_str!("fixtures/probe_gate_simd.rs"));
+    assert_single(&f, "probe_gate", 7);
+}
+
+#[test]
 fn safety_comment_fires_once_on_undocumented_unsafe() {
     let f = lint_source("runtime/fixture.rs", include_str!("fixtures/safety_comment.rs"));
     assert_single(&f, "safety_comment", 7);

@@ -1,0 +1,9 @@
+//! pallas-lint fixture: `probe_gate` on the SIMD tier dispatch gate.
+//! Linted as `fitter/simd/mod.rs`; the gate performs its relaxed load but
+//! then takes a lock on the fast path — exactly one seeded violation.
+
+pub fn active() -> Tier {
+    let t = TIER.load(Ordering::Relaxed);
+    let _double_check = *TIER_SLOW.lock().unwrap();
+    Tier::from_u8(t)
+}
